@@ -1,0 +1,116 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md E11): the full three-layer system on
+//! a real serving workload.
+//!
+//! 1. Loads the JAX/Pallas AOT artifact (`make artifacts`) — weights,
+//!    probes and HLO produced at build time by Python.
+//! 2. Builds the *identical* model for the native Rust kernel path from
+//!    the artifact's weight dumps.
+//! 3. Cross-checks native vs PJRT/XLA outputs (layer-stack equivalence).
+//! 4. Starts the HTTP server with dynamic batching and drives it with
+//!    concurrent clients, reporting latency/throughput for both backends.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_server
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use stgemm::coordinator::server::{Server, ServerConfig};
+use stgemm::coordinator::{Backend, BatchPolicy, Engine, LoadGenerator, Router};
+use stgemm::model::{TernaryLinear, TernaryMlp};
+use stgemm::runtime::{Manifest, XlaExecutor};
+use stgemm::tensor::Matrix;
+
+fn build_native(manifest: &Manifest, base: &str) -> TernaryMlp {
+    let v0 = manifest.variants_of(base)[0];
+    let mut layers = Vec::new();
+    for (i, l) in v0.layers.iter().enumerate() {
+        let w = v0.load_weights(&manifest.dir, i).expect("weights");
+        let b = v0.load_bias(&manifest.dir, i).expect("bias");
+        layers.push(
+            TernaryLinear::new("interleaved_blocked_tcsc", &w, b, 1.0, l.prelu_alpha)
+                .expect("layer"),
+        );
+    }
+    TernaryMlp::from_layers(base.to_string(), layers).expect("mlp")
+}
+
+fn main() {
+    let base = "ffn_e2e";
+    println!("=== stgemm end-to-end driver: {base} (256→1024→256 ternary FFN) ===\n");
+
+    // --- 1. Artifacts (fail with instructions if missing) -----------------
+    let manifest = Manifest::load("artifacts").unwrap_or_else(|e| {
+        eprintln!("error: {e}\nrun `make artifacts` first");
+        std::process::exit(1);
+    });
+
+    // --- 2+3. Native model from artifact weights + cross-check ------------
+    let native = build_native(&manifest, base);
+    let xla = XlaExecutor::spawn(&manifest, base).expect("spawn XLA service");
+    println!(
+        "[1] artifact loaded: buckets {:?}, d_in={}, d_out={}",
+        xla.buckets(),
+        xla.d_in,
+        xla.d_out
+    );
+    let engine_check = Engine::new(base, native).with_xla(xla);
+    let x = Matrix::random(8, engine_check.d_in(), 2026);
+    let (_n, _x2, diff) = engine_check.cross_check(&x).expect("cross-check");
+    println!("[2] native vs PJRT/XLA cross-check: maxΔ = {diff:.2e} (tolerance 1e-3)");
+    assert!(diff < 1e-3, "backends disagree!");
+
+    // Probe verification against the Python-computed outputs.
+    for v in manifest.variants_of(base) {
+        let px = Matrix::from_slice(v.batch, v.d_in, &v.load_probe_x(&manifest.dir).unwrap());
+        let py = Matrix::from_slice(v.batch, v.d_out, &v.load_probe_y(&manifest.dir).unwrap());
+        let y = engine_check.infer_matrix(&px).unwrap();
+        assert!(
+            y.allclose(&py, 1e-3),
+            "{}: probe mismatch {}",
+            v.name,
+            y.max_abs_diff(&py)
+        );
+        println!("[3] probe {}: OK", v.name);
+    }
+
+    // --- 4. Serve over HTTP with both backends, measure -------------------
+    let (clients, reqs) = (8usize, 100usize);
+    for backend in [Backend::Native, Backend::Xla] {
+        let native = build_native(&manifest, base);
+        let xla = XlaExecutor::spawn(&manifest, base).expect("xla");
+        let engine = Engine::new(base, native).with_xla(xla).with_backend(backend);
+        let d_in = engine.d_in();
+        let mut router = Router::new();
+        router.register(
+            engine,
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_micros(500),
+            },
+        );
+        let router = Arc::new(router);
+        let server = Server::start(Arc::clone(&router), ServerConfig::default())
+            .expect("start server");
+        println!("\n[4] serving on http://{} backend={backend:?}", server.local_addr);
+        let gen = LoadGenerator {
+            clients,
+            requests_per_client: reqs,
+            d_in,
+            model: base.to_string(),
+            seed: 99,
+        };
+        let report = gen.run_http(server.local_addr);
+        println!("    {}", report.summary());
+        let engine = router.engine(base).unwrap();
+        println!(
+            "    server-side: mean batch {:.2}, compute mean {:.0} µs",
+            engine.metrics.mean_batch_size(),
+            engine.metrics.compute_latency.mean_us()
+        );
+        assert_eq!(report.errors, 0, "no request may fail");
+    }
+
+    println!("\n=== end-to-end driver PASSED: all layers compose ===");
+}

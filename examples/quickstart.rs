@@ -1,0 +1,54 @@
+//! Quickstart: build a ternary matrix, run every kernel in the registry,
+//! verify against the dense oracle, and print a small performance table.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use stgemm::bench::report::Table;
+use stgemm::kernels::{dense_oracle, kernel_names, prepare_kernel, KernelParams};
+use stgemm::perf::flops::CostModel;
+use stgemm::perf::timer::CycleTimer;
+use stgemm::tensor::Matrix;
+use stgemm::ternary::TernaryMatrix;
+
+fn main() {
+    // The paper's problem: Y = X·W + b with ternary W.
+    let (m, k, n, sparsity) = (8, 2048, 512, 0.25f32);
+    println!("Sparse Ternary GEMM quickstart: M={m} K={k} N={n} s={sparsity}");
+
+    let w = TernaryMatrix::random(k, n, sparsity, 42);
+    let x = Matrix::random(m, k, 1);
+    let bias: Vec<f32> = (0..n).map(|i| (i % 5) as f32 * 0.1).collect();
+    let oracle = dense_oracle(&x, &w, &bias);
+    println!(
+        "W: {}×{} ternary, nnz={} ({:.1}%)\n",
+        k,
+        n,
+        w.nnz(),
+        100.0 * w.density()
+    );
+
+    let flops = CostModel::new(m, k, n, sparsity).flops();
+    let timer = CycleTimer::new(1, 3);
+    let mut table = Table::new(
+        "kernel comparison (all must match the oracle)",
+        &["kernel", "correct", "flops/cycle", "GFLOP/s"],
+    );
+    for &name in kernel_names() {
+        let kern = prepare_kernel(name, &w, KernelParams::default()).unwrap();
+        let mut y = Matrix::zeros(m, n);
+        kern.run(&x, &bias, &mut y);
+        let correct = y.allclose(&oracle, 1e-3);
+        let meas = timer.run(|| kern.run(&x, &bias, &mut y));
+        table.row(vec![
+            name.to_string(),
+            if correct { "✓".into() } else { "✗ FAIL".into() },
+            format!("{:.3}", meas.flops_per_cycle(flops)),
+            format!("{:.2}", meas.gflops_per_second(flops)),
+        ]);
+        assert!(correct, "kernel {name} diverged from the oracle");
+    }
+    println!("{}", table.render());
+    println!("All kernels verified against the dense oracle.");
+}

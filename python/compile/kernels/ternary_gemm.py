@@ -1,0 +1,217 @@
+"""Layer-1 Pallas kernels: sparse ternary GEMM rethought for TPU.
+
+HARDWARE ADAPTATION (see DESIGN.md §Hardware-Adaptation). The paper's CPU
+kernels chase cache locality of gathered X reads; a TPU has no caches to
+manage — it has an explicit HBM↔VMEM schedule. The paper's two core ideas
+map as follows:
+
+* **Sign separation (TCSC)** → split ternary W into two *binary* masks
+  P = (W > 0), N = (W < 0) and compute ``Y = X·P − X·N + b``. No ±1
+  multiplies survive (the masks are 0/1 and the MXU contraction of a
+  binary operand is add-only dataflow), which is the paper's
+  "additions and subtractions only" insight expressed as MXU work.
+
+* **Blocking (BlockedTCSC, B = 4096)** → the K dimension is tiled by the
+  ``BlockSpec`` grid: each grid step stages an (bm × bk) X tile and a
+  (bk × bn) W tile in VMEM and accumulates into the output tile, exactly
+  the "constrain the working set to a block" trick, with VMEM playing the
+  role of M1's L1.
+
+* **Symmetric padded format** → the gather kernel below takes per-column
+  index tensors padded to a *static* shape with a dummy index K that
+  points at a zeroed pad column of X — shape-static gathers are the TPU
+  equivalent of the paper's dummy-slot trick for NEON symmetry.
+
+All kernels run with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); correctness is asserted against ``ref.py`` by pytest, and
+TPU-perf structure (VMEM footprint per step) is estimated in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: MXU-friendly (128 lanes) while keeping the VMEM
+# working set (bm·bk + 2·bk·bn + bm·bn f32) ≪ 16 MB.
+DEFAULT_BM = 8
+DEFAULT_BK = 512
+DEFAULT_BN = 128
+
+
+def _signsplit_kernel(x_ref, wp_ref, wn_ref, b_ref, o_ref, *, nsteps_k):
+    """One (m, n, k) grid step of the sign-split ternary GEMM.
+
+    Accumulates ``x_tile @ pos_tile − x_tile @ neg_tile`` into the output
+    tile; the bias is added on the first K step so the total add count
+    matches the paper's cost model (1 + s·K adds per output).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.broadcast_to(b_ref[...], o_ref.shape)
+
+    x = x_ref[...]
+    # Binary masks arrive as int8; promote to f32 inside VMEM.
+    pos = wp_ref[...].astype(jnp.float32)
+    neg = wn_ref[...].astype(jnp.float32)
+    acc = jnp.dot(x, pos, preferred_element_type=jnp.float32) - jnp.dot(
+        x, neg, preferred_element_type=jnp.float32
+    )
+    o_ref[...] += acc
+    del nsteps_k  # shape bookkeeping only
+
+
+def ternary_gemm(x, w, bias, *, bm=DEFAULT_BM, bk=DEFAULT_BK, bn=DEFAULT_BN):
+    """Pallas sign-split ternary GEMM: ``Y = X·W + b``.
+
+    Args:
+      x: (M, K) float32 activations.
+      w: (K, N) int8 ternary weights in {-1, 0, +1}.
+      bias: (N,) float32.
+      bm/bk/bn: VMEM tile sizes; shapes must not be smaller than the tile
+        (callers pad or shrink — the AOT driver picks tiles per shape).
+
+    Returns:
+      (M, N) float32.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"X cols {k} != W rows {k2}"
+    assert bias.shape == (n,)
+    bm = min(bm, m)
+    bk = min(bk, k)
+    bn = min(bn, n)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (
+        f"shape ({m},{k},{n}) not divisible by tiles ({bm},{bk},{bn})"
+    )
+    # Sign-split outside the kernel: the masks are weights, computed once
+    # at trace time and constant-folded into the AOT artifact.
+    w_pos = (w > 0).astype(jnp.int8)
+    w_neg = (w < 0).astype(jnp.int8)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_signsplit_kernel, nsteps_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w_pos, w_neg, bias)
+
+
+def _gather_kernel(x_ref, pos_ref, neg_ref, b_ref, o_ref):
+    """One N-block of the padded-gather kernel.
+
+    ``x_ref`` holds the full padded activation row-block (M, K+1);
+    ``pos_ref``/``neg_ref`` hold (bn, P) static-shape index tiles. Dummy
+    indices point at the zero pad column, contributing nothing — the
+    symmetric-format trick.
+    """
+    x = x_ref[...]  # (m, k+1)
+    pos = pos_ref[...]  # (bn, p)
+    neg = neg_ref[...]
+    # (m, bn, p) gathers, reduced over p. jnp.take is shape-static.
+    acc = jnp.take(x, pos, axis=1).sum(axis=-1) - jnp.take(x, neg, axis=1).sum(
+        axis=-1
+    )
+    o_ref[...] = acc + b_ref[...][None, :]
+
+
+def ternary_gemm_gather(x_padded, pos_idx, neg_idx, bias, *, bn=DEFAULT_BN):
+    """Pallas padded-gather ternary GEMM (symmetric-TCSC analog).
+
+    Args:
+      x_padded: (M, K+1) activations, last column all zeros.
+      pos_idx: (N, P) int32 indices of +1 entries per column, padded with K.
+      neg_idx: (N, P) int32 indices of -1 entries per column, padded with K.
+      bias: (N,) float32.
+
+    Returns:
+      (M, N) float32.
+    """
+    m, kp1 = x_padded.shape
+    n, p = pos_idx.shape
+    assert neg_idx.shape == (n, p)
+    assert bias.shape == (n,)
+    bn = min(bn, n)
+    assert n % bn == 0, f"N={n} not divisible by bn={bn}"
+    del kp1
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(x_padded.shape, lambda j: (0, 0)),
+            pl.BlockSpec((bn, p), lambda j: (j, 0)),
+            pl.BlockSpec((bn, p), lambda j: (j, 0)),
+            pl.BlockSpec((bn,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x_padded, pos_idx, neg_idx, bias)
+
+
+def _prelu_kernel(y_ref, o_ref, *, alpha):
+    y = y_ref[...]
+    o_ref[...] = jnp.where(y > 0, y, alpha * y)
+
+
+def prelu(y, alpha):
+    """Pallas PReLU (fused into the FFN at the L2 level)."""
+    return pl.pallas_call(
+        functools.partial(_prelu_kernel, alpha=alpha),
+        out_shape=jax.ShapeDtypeStruct(y.shape, y.dtype),
+        interpret=True,
+    )(y)
+
+
+def pack_padded_indices(w, pad_multiple=1):
+    """Build the padded index tensors the gather kernel consumes.
+
+    Returns (pos_idx, neg_idx, pad_len): (N, P) int32 arrays whose padding
+    entries equal K (the dummy slot). P is the max per-column per-sign
+    count, rounded up to ``pad_multiple``.
+
+    This is the Python twin of the Rust ``SymmetricTcsc`` constructor.
+    """
+    import numpy as np
+
+    w = np.asarray(w)
+    k, n = w.shape
+    pos_lists = [np.nonzero(w[:, j] > 0)[0] for j in range(n)]
+    neg_lists = [np.nonzero(w[:, j] < 0)[0] for j in range(n)]
+    p = max([1] + [len(v) for v in pos_lists + neg_lists])
+    if p % pad_multiple:
+        p += pad_multiple - p % pad_multiple
+    pos = np.full((n, p), k, dtype=np.int32)
+    neg = np.full((n, p), k, dtype=np.int32)
+    for j in range(n):
+        pos[j, : len(pos_lists[j])] = pos_lists[j]
+        neg[j, : len(neg_lists[j])] = neg_lists[j]
+    return jnp.asarray(pos), jnp.asarray(neg), p
+
+
+def pad_activations(x):
+    """Append the zero dummy column: (M, K) → (M, K+1)."""
+    m = x.shape[0]
+    return jnp.concatenate([x, jnp.zeros((m, 1), x.dtype)], axis=1)
+
+
+def vmem_bytes_per_step(bm, bk, bn):
+    """Estimated VMEM working set of one sign-split grid step (bytes).
+
+    x tile (bm·bk f32) + two mask tiles (bk·bn i8 each, promoted to f32
+    inside the step → count f32) + out tile (bm·bn f32) + bias (bn f32).
+    Used by DESIGN.md's TPU-perf estimate and the aot driver's tile picker.
+    """
+    f32 = 4
+    return f32 * (bm * bk + 2 * bk * bn + bm * bn + bn)

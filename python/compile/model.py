@@ -1,0 +1,186 @@
+"""Layer-2 JAX model: ternary-quantized FFN built on the Pallas kernels.
+
+The serving workload the paper motivates (quantized-LLM inference) is a
+stack of ternary linear layers with PReLU between them — the BitNet-style
+FFN block ``Y = (PReLU(X·W1 + b1))·W2 + b2`` with W ternary and a
+per-tensor dequantization scale folded into the bias path.
+
+Weights are generated deterministically from a seed with *exact* sparsity
+(the same scheme as the Rust ``TernaryMatrix::random``) so the Rust native
+path and the AOT artifact can be cross-checked on identical models; the
+AOT driver also exports the raw weight bytes for the Rust side to load.
+"""
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import ternary_gemm as tk
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One ternary linear layer."""
+
+    k: int
+    n: int
+    sparsity: float
+    seed: int
+    scale: float = 1.0
+    prelu_alpha: float | None = 0.25  # None = no activation after layer
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """A ternary FFN: layer dims d0 → d1 → … → dL."""
+
+    name: str
+    batch: int
+    layers: Tuple[LayerSpec, ...]
+
+    @property
+    def d_in(self):
+        return self.layers[0].k
+
+    @property
+    def d_out(self):
+        return self.layers[-1].n
+
+
+def ffn_spec(name, batch, dims, sparsity, seed, alpha=0.25):
+    """Convenience builder: dims = [d_in, h1, ..., d_out]."""
+    layers = []
+    nlayers = len(dims) - 1
+    for li in range(nlayers):
+        layers.append(
+            LayerSpec(
+                k=dims[li],
+                n=dims[li + 1],
+                sparsity=sparsity,
+                seed=seed + li,
+                # PReLU between layers, none after the output layer.
+                prelu_alpha=alpha if li + 1 < nlayers else None,
+            )
+        )
+    return ModelSpec(name=name, batch=batch, layers=tuple(layers))
+
+
+def generate_ternary(k, n, sparsity, seed):
+    """Exact-sparsity balanced ternary weights, deterministic by seed.
+
+    Mirrors the distribution of Rust's ``TernaryMatrix::random`` (uniform
+    placement, signs split as evenly as possible). The exact permutation
+    differs (different PRNG); cross-backend equivalence tests therefore
+    exchange the *actual* weight bytes through the artifact manifest
+    rather than regenerating them.
+    """
+    rng = np.random.default_rng(seed)
+    total = k * n
+    nnz = int(round(sparsity * total))
+    w = np.zeros(total, dtype=np.int8)
+    idx = rng.choice(total, size=nnz, replace=False)
+    signs = np.ones(nnz, dtype=np.int8)
+    signs[: nnz // 2] = -1
+    rng.shuffle(signs)
+    w[idx] = signs
+    return w.reshape(k, n)
+
+
+def generate_bias(n, seed):
+    rng = np.random.default_rng(seed + 7777)
+    return rng.uniform(-0.5, 0.5, size=n).astype(np.float32)
+
+
+@dataclasses.dataclass
+class ModelWeights:
+    """Materialized weights for a ModelSpec."""
+
+    spec: ModelSpec
+    ws: List[np.ndarray]  # int8 (K, N)
+    bs: List[np.ndarray]  # float32 (N,)
+
+    @classmethod
+    def generate(cls, spec: ModelSpec) -> "ModelWeights":
+        ws, bs = [], []
+        for layer in spec.layers:
+            ws.append(generate_ternary(layer.k, layer.n, layer.sparsity, layer.seed))
+            bs.append(generate_bias(layer.n, layer.seed))
+        return cls(spec=spec, ws=ws, bs=bs)
+
+
+def pick_tiles(m, k, n):
+    """Choose Pallas tile sizes dividing the problem shape while keeping
+    the per-step VMEM estimate under budget."""
+
+    def largest_divisor_le(x, cap):
+        d = min(x, cap)
+        while x % d:
+            d -= 1
+        return d
+
+    bm = largest_divisor_le(m, tk.DEFAULT_BM)
+    bk = largest_divisor_le(k, tk.DEFAULT_BK)
+    bn = largest_divisor_le(n, tk.DEFAULT_BN)
+    # VMEM guard: shrink bk first (the paper shrinks the K working set).
+    while tk.vmem_bytes_per_step(bm, bk, bn) > 8 * 2**20 and bk > 1:
+        bk = largest_divisor_le(k, bk // 2)
+    return bm, bk, bn
+
+
+def forward(weights: ModelWeights, x):
+    """Full FFN forward through the Pallas sign-split kernel."""
+    h = x
+    for layer, w, b in zip(weights.spec.layers, weights.ws, weights.bs):
+        bm, bk, bn = pick_tiles(h.shape[0], layer.k, layer.n)
+        h = tk.ternary_gemm(
+            h, jnp.asarray(w), jnp.asarray(b), bm=bm, bk=bk, bn=bn
+        )
+        if layer.scale != 1.0:
+            h = h * layer.scale
+        if layer.prelu_alpha is not None:
+            h = tk.prelu(h, layer.prelu_alpha)
+    return h
+
+
+def forward_ref(weights: ModelWeights, x):
+    """Pure-jnp oracle forward (no Pallas) for pytest comparison."""
+    from compile.kernels import ref
+
+    h = x
+    for layer, w, b in zip(weights.spec.layers, weights.ws, weights.bs):
+        h = ref.ternary_gemm_ref(h, jnp.asarray(w), jnp.asarray(b))
+        if layer.scale != 1.0:
+            h = h * layer.scale
+        if layer.prelu_alpha is not None:
+            h = ref.prelu_ref(h, layer.prelu_alpha)
+    return h
+
+
+def lower_to_hlo_text(weights: ModelWeights) -> str:
+    """AOT-lower the model (weights constant-folded) to HLO text.
+
+    HLO *text* is the interchange format: jax ≥ 0.5 emits HloModuleProto
+    with 64-bit instruction ids that xla_extension 0.5.1 (the version the
+    Rust ``xla`` crate links) rejects; the text parser reassigns ids.
+    """
+    from jax._src.lib import xla_client as xc
+
+    spec = weights.spec
+
+    def fn(x):
+        return (forward(weights, x),)
+
+    x_spec = jax.ShapeDtypeStruct((spec.batch, spec.d_in), jnp.float32)
+    lowered = jax.jit(fn).lower(x_spec)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default printer
+    # elides big literals as `constant({...})`, which xla_extension
+    # 0.5.1's text parser silently zero-fills — the model weights are
+    # constant-folded into this module and must survive the round-trip.
+    return comp.as_hlo_text(print_large_constants=True)

@@ -1,0 +1,66 @@
+"""AOT pipeline tests: HLO text lowering, artifact emission, manifest."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def tiny_weights():
+    spec = M.ffn_spec("aot_test", batch=2, dims=[16, 32, 8], sparsity=0.25, seed=5)
+    return M.ModelWeights.generate(spec)
+
+
+class TestLowering:
+    def test_hlo_text_structure(self, tiny_weights):
+        hlo = M.lower_to_hlo_text(tiny_weights)
+        assert "ENTRY" in hlo
+        assert "HloModule" in hlo
+        # Input parameter shape appears.
+        assert "f32[2,16]" in hlo
+
+    def test_hlo_is_deterministic(self, tiny_weights):
+        assert M.lower_to_hlo_text(tiny_weights) == M.lower_to_hlo_text(tiny_weights)
+
+
+class TestEmission:
+    def test_emit_variant_files(self, tiny_weights, tmp_path):
+        entry = aot.emit_variant(tiny_weights, str(tmp_path))
+        assert entry["batch"] == 2
+        assert entry["d_in"] == 16 and entry["d_out"] == 8
+        for layer in entry["layers"]:
+            w = np.fromfile(tmp_path / layer["weights_file"], dtype=np.int8)
+            assert w.size == layer["k"] * layer["n"]
+            assert layer["nnz"] == int(np.count_nonzero(w))
+            b = np.fromfile(tmp_path / layer["bias_file"], dtype="<f4")
+            assert b.size == layer["n"]
+        assert (tmp_path / entry["hlo_file"]).exists()
+
+    def test_probe_consistency(self, tiny_weights, tmp_path):
+        import jax.numpy as jnp
+
+        entry = aot.emit_variant(tiny_weights, str(tmp_path))
+        x = np.fromfile(tmp_path / entry["probe_x_file"], dtype="<f4").reshape(
+            entry["batch"], entry["d_in"]
+        )
+        y = np.fromfile(tmp_path / entry["probe_y_file"], dtype="<f4").reshape(
+            entry["batch"], entry["d_out"]
+        )
+        want = np.asarray(M.forward_ref(tiny_weights, jnp.asarray(x)))
+        np.testing.assert_allclose(y, want, rtol=1e-5, atol=1e-5)
+
+    def test_main_writes_manifest(self, tmp_path):
+        rc = aot.main(["--out", str(tmp_path), "--only", "ffn_tiny_b1"])
+        assert rc == 0
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        assert manifest["version"] == 1
+        names = [m["name"] for m in manifest["models"]]
+        assert names == ["ffn_tiny_b1"]
+
+    def test_main_rejects_unknown_variant(self, tmp_path):
+        assert aot.main(["--out", str(tmp_path), "--only", "nope"]) == 2

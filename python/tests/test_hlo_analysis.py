@@ -1,0 +1,89 @@
+"""L2 §Perf invariants: the lowered artifacts have the expected HLO
+structure (one entry, one sign-split dot pair per layer, no custom-calls,
+weights constant-folded exactly once)."""
+
+import numpy as np
+import pytest
+
+from compile import hlo_analysis as H
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def tiny_hlo():
+    spec = M.ffn_spec("hlo_t", batch=2, dims=[16, 32, 8], sparsity=0.25, seed=3)
+    weights = M.ModelWeights.generate(spec)
+    return M.lower_to_hlo_text(weights), spec
+
+
+class TestAnalyze:
+    def test_single_entry(self, tiny_hlo):
+        text, _ = tiny_hlo
+        stats = H.analyze(text)
+        assert stats.entry_count == 1
+
+    def test_sign_split_dot_pair_per_layer(self, tiny_hlo):
+        text, spec = tiny_hlo
+        stats = H.analyze(text)
+        assert stats.dot_count == 2 * len(spec.layers)
+
+    def test_no_custom_calls(self, tiny_hlo):
+        text, _ = tiny_hlo
+        assert H.analyze(text).custom_call_count == 0
+
+    def test_constants_cover_weights_without_duplication(self, tiny_hlo):
+        text, spec = tiny_hlo
+        stats = H.analyze(text)
+        # Two s8 masks per layer + f32 bias per layer, at minimum.
+        min_bytes = sum(2 * l.k * l.n + 4 * l.n for l in spec.layers)
+        assert stats.constant_bytes >= min_bytes
+        # No gross duplication (allow 3x for layout/padding constants).
+        assert stats.constant_bytes < 4 * min_bytes, stats.summary()
+
+    def test_check_artifact_clean(self, tiny_hlo):
+        text, spec = tiny_hlo
+        assert H.check_artifact(text, len(spec.layers)) == []
+
+    def test_check_artifact_flags_problems(self):
+        fake = "ENTRY main {\n  a = f32[2,2]{1,0} dot(x, y)\n}\n"
+        problems = H.check_artifact(fake, num_layers=2)
+        assert any("dots" in p for p in problems)
+
+    def test_shape_bytes(self):
+        assert H._shape_bytes("f32[64,128]{1,0}") == 64 * 128 * 4
+        assert H._shape_bytes("s8[10]") == 10
+        assert H._shape_bytes("pred[]") == 1
+
+
+class TestRealArtifacts:
+    def test_all_artifacts_pass_invariants(self):
+        import json, os
+
+        art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+        manifest_path = os.path.join(art, "manifest.json")
+        if not os.path.exists(manifest_path):
+            pytest.skip("artifacts not built")
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+        assert manifest["models"], "manifest has no models"
+        for model in manifest["models"]:
+            with open(os.path.join(art, model["hlo_file"])) as f:
+                text = f.read()
+            problems = H.check_artifact(text, len(model["layers"]))
+            assert problems == [], f"{model['name']}: {problems}"
+
+    def test_weights_not_elided(self):
+        """The print_large_constants regression guard: a weights-sized
+        constant must appear with real digits, not `{...}`."""
+        import json, os
+
+        art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+        manifest_path = os.path.join(art, "manifest.json")
+        if not os.path.exists(manifest_path):
+            pytest.skip("artifacts not built")
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+        model = manifest["models"][0]
+        with open(os.path.join(art, model["hlo_file"])) as f:
+            text = f.read()
+        assert "constant({...})" not in text, "large constants were elided!"

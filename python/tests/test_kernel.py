@@ -1,0 +1,164 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, sparsities and dtypes; every property asserts
+allclose against ``ref.py``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import ternary_gemm as tk
+from compile import model as M
+
+
+def make_case(m, k, n, sparsity, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1, 1, size=(m, k)).astype(np.float32)
+    w = M.generate_ternary(k, n, sparsity, seed)
+    b = rng.uniform(-0.5, 0.5, size=n).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(w), jnp.asarray(b)
+
+
+# ---------------------------------------------------------------- signsplit
+
+class TestSignSplitKernel:
+    @pytest.mark.parametrize("sparsity", [0.5, 0.25, 0.125, 0.0625])
+    def test_matches_ref_paper_sparsities(self, sparsity):
+        x, w, b = make_case(8, 128, 64, sparsity, 42)
+        got = tk.ternary_gemm(x, w, b, bm=4, bk=32, bn=16)
+        want = ref.ternary_gemm_ref(x, w, b)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_signsplit_ref_equals_plain_ref(self):
+        x, w, b = make_case(4, 64, 32, 0.5, 7)
+        np.testing.assert_allclose(
+            ref.ternary_gemm_signsplit_ref(x, w, b),
+            ref.ternary_gemm_ref(x, w, b),
+            rtol=1e-5,
+            atol=1e-6,
+        )
+
+    def test_single_tile(self):
+        x, w, b = make_case(2, 16, 8, 0.5, 3)
+        got = tk.ternary_gemm(x, w, b, bm=2, bk=16, bn=8)
+        np.testing.assert_allclose(got, ref.ternary_gemm_ref(x, w, b), rtol=1e-5, atol=1e-5)
+
+    def test_multi_k_step_accumulation(self):
+        # K split over 8 grid steps exercises the accumulate path.
+        x, w, b = make_case(4, 256, 16, 0.25, 11)
+        got = tk.ternary_gemm(x, w, b, bm=4, bk=32, bn=16)
+        np.testing.assert_allclose(got, ref.ternary_gemm_ref(x, w, b), rtol=1e-5, atol=1e-5)
+
+    def test_all_zero_weights_give_bias(self):
+        x, _, b = make_case(3, 32, 8, 0.5, 5)
+        w = jnp.zeros((32, 8), jnp.int8)
+        got = tk.ternary_gemm(x, w, b, bm=3, bk=32, bn=8)
+        np.testing.assert_allclose(got, jnp.broadcast_to(b, (3, 8)), rtol=1e-6, atol=1e-6)
+
+    def test_rejects_bad_tiling(self):
+        x, w, b = make_case(5, 33, 7, 0.5, 1)
+        with pytest.raises(AssertionError):
+            tk.ternary_gemm(x, w, b, bm=2, bk=32, bn=4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.sampled_from([1, 2, 4, 8]),
+        k=st.sampled_from([16, 32, 64, 128]),
+        n=st.sampled_from([8, 16, 32]),
+        sparsity=st.sampled_from([0.5, 0.25, 0.125, 0.0625, 0.0, 1.0]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, m, k, n, sparsity, seed):
+        x, w, b = make_case(m, k, n, sparsity, seed)
+        bm, bk, bn = M.pick_tiles(m, k, n)
+        got = tk.ternary_gemm(x, w, b, bm=bm, bk=bk, bn=bn)
+        want = ref.ternary_gemm_ref(x, w, b)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(dtype=st.sampled_from([np.float32, np.float16]))
+    def test_dtype_sweep(self, dtype):
+        x, w, b = make_case(4, 64, 16, 0.5, 9)
+        x = x.astype(dtype)
+        got = tk.ternary_gemm(x.astype(jnp.float32), w, b, bm=4, bk=32, bn=16)
+        want = ref.ternary_gemm_ref(x.astype(jnp.float32), w, b)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------------------ gather
+
+class TestGatherKernel:
+    @pytest.mark.parametrize("sparsity", [0.5, 0.25, 0.0625])
+    def test_matches_ref(self, sparsity):
+        x, w, b = make_case(4, 64, 32, sparsity, 21)
+        pos, neg, _ = tk.pack_padded_indices(w)
+        xp = tk.pad_activations(x)
+        got = tk.ternary_gemm_gather(xp, pos, neg, b, bn=16)
+        want = ref.ternary_gemm_ref(x, w, b)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_gather_ref_agrees_with_dense_ref(self):
+        x, w, b = make_case(3, 32, 16, 0.5, 31)
+        pos, neg, _ = tk.pack_padded_indices(w)
+        xp = tk.pad_activations(x)
+        np.testing.assert_allclose(
+            ref.padded_gather_ref(xp, pos, neg, b),
+            ref.ternary_gemm_ref(x, w, b),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_dummy_column_is_zero(self):
+        x = jnp.ones((2, 8), jnp.float32)
+        xp = tk.pad_activations(x)
+        assert xp.shape == (2, 9)
+        assert np.all(np.asarray(xp[:, -1]) == 0.0)
+
+    def test_pad_multiple(self):
+        _, w, _ = make_case(1, 32, 8, 0.5, 4)
+        pos, neg, p = tk.pack_padded_indices(w, pad_multiple=4)
+        assert p % 4 == 0
+        assert pos.shape == (8, p) and neg.shape == (8, p)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        m=st.sampled_from([1, 3, 8]),
+        k=st.sampled_from([8, 32, 64]),
+        n=st.sampled_from([4, 8, 16]),
+        sparsity=st.sampled_from([0.5, 0.25, 0.0]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, m, k, n, sparsity, seed):
+        x, w, b = make_case(m, k, n, sparsity, seed)
+        pos, neg, _ = tk.pack_padded_indices(w)
+        xp = tk.pad_activations(x)
+        got = tk.ternary_gemm_gather(xp, pos, neg, b, bn=n)
+        want = ref.ternary_gemm_ref(x, w, b)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------- prelu
+
+class TestPrelu:
+    def test_matches_ref(self):
+        y = jnp.asarray(np.random.default_rng(2).normal(size=(4, 8)).astype(np.float32))
+        np.testing.assert_allclose(
+            tk.prelu(y, 0.25), ref.prelu_ref(y, 0.25), rtol=1e-6
+        )
+
+    def test_alpha_zero_is_relu(self):
+        y = jnp.asarray([[-1.0, 2.0]])
+        np.testing.assert_allclose(tk.prelu(y, 0.0), [[0.0, 2.0]])
+
+
+# -------------------------------------------------------------- vmem model
+
+class TestVmemModel:
+    def test_default_tiles_fit_budget(self):
+        assert tk.vmem_bytes_per_step(tk.DEFAULT_BM, tk.DEFAULT_BK, tk.DEFAULT_BN) < 8 * 2**20
+
+    def test_monotone_in_bk(self):
+        assert tk.vmem_bytes_per_step(8, 512, 128) > tk.vmem_bytes_per_step(8, 256, 128)

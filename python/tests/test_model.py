@@ -1,0 +1,107 @@
+"""Layer-2 correctness: FFN model forward (Pallas path) vs jnp oracle,
+weight generation invariants, tile picking."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+
+class TestWeightGeneration:
+    @pytest.mark.parametrize("sparsity", [0.5, 0.25, 0.125, 0.0625])
+    def test_exact_nnz(self, sparsity):
+        w = M.generate_ternary(64, 32, sparsity, 5)
+        assert np.count_nonzero(w) == round(sparsity * 64 * 32)
+        assert set(np.unique(w)).issubset({-1, 0, 1})
+
+    def test_deterministic(self):
+        a = M.generate_ternary(32, 32, 0.25, 9)
+        b = M.generate_ternary(32, 32, 0.25, 9)
+        c = M.generate_ternary(32, 32, 0.25, 10)
+        assert np.array_equal(a, b)
+        assert not np.array_equal(a, c)
+
+    def test_balanced_signs(self):
+        w = M.generate_ternary(100, 100, 0.5, 3)
+        pos = int((w == 1).sum())
+        neg = int((w == -1).sum())
+        assert abs(pos - neg) <= 1
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        k=st.integers(4, 128),
+        n=st.integers(4, 64),
+        sparsity=st.sampled_from([0.0, 0.0625, 0.25, 0.5, 1.0]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_nnz_invariant(self, k, n, sparsity, seed):
+        w = M.generate_ternary(k, n, sparsity, seed)
+        assert np.count_nonzero(w) == round(sparsity * k * n)
+
+
+class TestTilePicker:
+    def test_divides_shapes(self):
+        for m, k, n in [(1, 64, 128), (8, 256, 1024), (3, 33, 7), (5, 100, 30)]:
+            bm, bk, bn = M.pick_tiles(m, k, n)
+            assert m % bm == 0 and k % bk == 0 and n % bn == 0
+
+    def test_respects_vmem_budget(self):
+        from compile.kernels import ternary_gemm as tk
+
+        bm, bk, bn = M.pick_tiles(8, 16384, 4096)
+        assert tk.vmem_bytes_per_step(bm, bk, bn) <= 8 * 2**20
+
+
+class TestModelForward:
+    def _spec(self, batch=4, dims=(32, 64, 16), sparsity=0.25, seed=77):
+        return M.ffn_spec("t", batch, list(dims), sparsity, seed)
+
+    def test_pallas_matches_ref(self):
+        spec = self._spec()
+        weights = M.ModelWeights.generate(spec)
+        x = jnp.asarray(
+            np.random.default_rng(1).uniform(-1, 1, (spec.batch, spec.d_in)).astype(np.float32)
+        )
+        got = M.forward(weights, x)
+        want = M.forward_ref(weights, x)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_output_shape(self):
+        spec = self._spec(batch=2, dims=(16, 32, 8))
+        weights = M.ModelWeights.generate(spec)
+        x = jnp.zeros((2, 16), jnp.float32)
+        y = M.forward(weights, x)
+        assert y.shape == (2, 8)
+
+    def test_prelu_only_between_layers(self):
+        spec = self._spec(dims=(16, 32, 8))
+        assert spec.layers[0].prelu_alpha is not None
+        assert spec.layers[-1].prelu_alpha is None
+
+    def test_deeper_stack(self):
+        spec = self._spec(batch=2, dims=(16, 32, 32, 8))
+        weights = M.ModelWeights.generate(spec)
+        x = jnp.asarray(
+            np.random.default_rng(3).uniform(-1, 1, (2, 16)).astype(np.float32)
+        )
+        np.testing.assert_allclose(
+            M.forward(weights, x), M.forward_ref(weights, x), rtol=1e-4, atol=1e-4
+        )
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        batch=st.sampled_from([1, 2, 8]),
+        sparsity=st.sampled_from([0.5, 0.25, 0.0625]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_model_sweep(self, batch, sparsity, seed):
+        spec = self._spec(batch=batch, sparsity=sparsity, seed=seed)
+        weights = M.ModelWeights.generate(spec)
+        x = jnp.asarray(
+            np.random.default_rng(seed).uniform(-1, 1, (batch, spec.d_in)).astype(np.float32)
+        )
+        np.testing.assert_allclose(
+            M.forward(weights, x), M.forward_ref(weights, x), rtol=1e-4, atol=1e-4
+        )

@@ -1,0 +1,22 @@
+//! Ablations the paper describes and *rejects* — reproduced to confirm the
+//! negative results: value compression (wins only at 50% density) and the
+//! inverted index (decode branch makes it slower than base), plus the
+//! headline speedup numbers.
+
+use stgemm::bench::figures::{ablation_compressed, ablation_inverted, headline};
+use stgemm::bench::harness::BenchScale;
+use stgemm::bench::report::write_csv;
+
+fn main() {
+    let scale = BenchScale::from_env();
+    for (table, file) in [
+        (headline(scale), "headline.csv"),
+        (ablation_compressed(scale), "ablation_compressed.csv"),
+        (ablation_inverted(scale), "ablation_inverted.csv"),
+    ] {
+        println!("{}", table.render());
+        if let Ok(p) = write_csv(&table, file) {
+            println!("  [csv] {}\n", p.display());
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! E11: end-to-end serving benchmark — the coordinator serving the ternary
+//! FFN under concurrent load, native backend vs (when artifacts exist) the
+//! PJRT/XLA backend, reporting throughput, latency percentiles and batcher
+//! effectiveness.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use stgemm::bench::harness::BenchScale;
+use stgemm::bench::report::{write_csv, Table};
+use stgemm::coordinator::{Backend, BatchPolicy, Engine, LoadGenerator, Router};
+use stgemm::model::{ModelConfig, TernaryLinear, TernaryMlp};
+use stgemm::runtime::{Manifest, XlaExecutor};
+
+fn bench_backend(name: &str, engine: Engine, clients: usize, reqs: usize) -> Vec<String> {
+    let d_in = engine.d_in();
+    let mut router = Router::new();
+    router.register(
+        engine,
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_micros(500),
+        },
+    );
+    let router = Arc::new(router);
+    let gen = LoadGenerator {
+        clients,
+        requests_per_client: reqs,
+        d_in,
+        model: name.to_string(),
+        seed: 7,
+    };
+    let report = gen.run_inprocess(&router);
+    vec![
+        name.to_string(),
+        format!("{}", report.total_requests),
+        format!("{:.0}", report.throughput_rps),
+        format!("{}", report.latency_us_p50),
+        format!("{}", report.latency_us_p95),
+        format!("{}", report.latency_us_p99),
+        format!("{:.2}", report.mean_batch_size),
+        format!("{}", report.errors),
+    ]
+}
+
+fn main() {
+    let scale = BenchScale::from_env();
+    let (clients, reqs) = match scale {
+        BenchScale::Full => (16, 200),
+        BenchScale::Ci => (4, 25),
+    };
+    let mut table = Table::new(
+        format!("E2E serving: ternary FFN 256→1024→256, {clients} clients × {reqs} reqs"),
+        &[
+            "backend",
+            "requests",
+            "req/s",
+            "p50 µs",
+            "p95 µs",
+            "p99 µs",
+            "mean batch",
+            "errors",
+        ],
+    );
+
+    // Native backend on the synthetic config.
+    let cfg = ModelConfig::from_json(
+        r#"{"name":"native","dims":[256,1024,256],"sparsity":0.25,"seed":4321,
+            "kernel":"interleaved_blocked_tcsc"}"#,
+    )
+    .unwrap();
+    let engine = Engine::new("native", TernaryMlp::from_config(&cfg).unwrap());
+    table.row(bench_backend("native", engine, clients, reqs));
+
+    // Also native with the baseline kernel — shows what the paper's
+    // optimizations buy at the serving level.
+    let cfg_base = ModelConfig::from_json(
+        r#"{"name":"native_base","dims":[256,1024,256],"sparsity":0.25,"seed":4321,
+            "kernel":"base_tcsc"}"#,
+    )
+    .unwrap();
+    let engine = Engine::new("native_base", TernaryMlp::from_config(&cfg_base).unwrap());
+    table.row(bench_backend("native_base", engine, clients, reqs));
+
+    // XLA backend from the real artifact (identical weights via manifest).
+    match Manifest::load("artifacts") {
+        Ok(manifest) if !manifest.variants_of("ffn_e2e").is_empty() => {
+            let v0 = manifest.variants_of("ffn_e2e")[0];
+            let mut layers = Vec::new();
+            for (i, l) in v0.layers.iter().enumerate() {
+                let w = v0.load_weights(&manifest.dir, i).expect("weights");
+                let b = v0.load_bias(&manifest.dir, i).expect("bias");
+                layers.push(
+                    TernaryLinear::new(
+                        "interleaved_blocked_tcsc",
+                        &w,
+                        b,
+                        1.0,
+                        l.prelu_alpha,
+                    )
+                    .unwrap(),
+                );
+            }
+            let mlp = TernaryMlp::from_layers("xla".into(), layers).unwrap();
+            let xla = XlaExecutor::spawn(&manifest, "ffn_e2e").expect("xla");
+            let engine = Engine::new("xla", mlp)
+                .with_xla(xla)
+                .with_backend(Backend::Xla);
+            table.row(bench_backend("xla", engine, clients, reqs));
+        }
+        _ => eprintln!("[e2e] artifacts not found — skipping XLA backend row"),
+    }
+
+    println!("{}", table.render());
+    if let Ok(p) = write_csv(&table, "e2e_serving.csv") {
+        println!("  [csv] {}", p.display());
+    }
+}

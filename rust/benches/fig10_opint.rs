@@ -1,0 +1,13 @@
+//! Paper Fig 10: operational-intensity heatmap (analytic, same traffic
+//! estimate as the paper: exact format size + X + Y + b).
+
+use stgemm::bench::figures::fig10_opint;
+use stgemm::bench::report::write_csv;
+
+fn main() {
+    let table = fig10_opint();
+    println!("{}", table.render());
+    if let Ok(p) = write_csv(&table, "fig10_opint.csv") {
+        println!("  [csv] {}", p.display());
+    }
+}

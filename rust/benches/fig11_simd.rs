@@ -1,0 +1,14 @@
+//! Paper Fig 11: vectorized kernels (vertical, horizontal, vectorized
+//! best-scalar) vs base and best scalar, PReLU fused, s=25%, M=N=1024.
+
+use stgemm::bench::figures::fig11_simd;
+use stgemm::bench::harness::BenchScale;
+use stgemm::bench::report::write_csv;
+
+fn main() {
+    let table = fig11_simd(BenchScale::from_env());
+    println!("{}", table.render());
+    if let Ok(p) = write_csv(&table, "fig11_simd.csv") {
+        println!("  [csv] {}", p.display());
+    }
+}

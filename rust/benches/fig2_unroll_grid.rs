@@ -1,0 +1,17 @@
+//! Paper Figures 2–4: unroll-factor grid-search heatmaps.
+//! `STGEMM_BENCH_SCALE=full cargo bench --bench fig2_unroll_grid` for the
+//! paper shapes (s=25%, M=32, N=1024, K up to 16384).
+
+use stgemm::bench::figures::fig2_unroll_grid;
+use stgemm::bench::harness::BenchScale;
+use stgemm::bench::report::write_csv;
+
+fn main() {
+    let scale = BenchScale::from_env();
+    for (i, table) in fig2_unroll_grid(scale).into_iter().enumerate() {
+        println!("{}", table.render());
+        if let Ok(p) = write_csv(&table, &format!("fig2_grid_{i}.csv")) {
+            println!("  [csv] {}\n", p.display());
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Paper Fig 6: scalar kernel variants over K at 50% sparsity
+//! (flops/cycle; paper M=64, N=4096).
+
+use stgemm::bench::figures::fig6_variants;
+use stgemm::bench::harness::BenchScale;
+use stgemm::bench::report::write_csv;
+
+fn main() {
+    let table = fig6_variants(BenchScale::from_env());
+    println!("{}", table.render());
+    if let Ok(p) = write_csv(&table, "fig6_variants.csv") {
+        println!("  [csv] {}", p.display());
+    }
+}

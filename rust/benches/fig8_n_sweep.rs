@@ -1,0 +1,14 @@
+//! Paper Fig 8: N-invariance — performance constant across N at fixed
+//! K=8192, M=8 (the property that makes dynamic batching free).
+
+use stgemm::bench::figures::fig8_n_sweep;
+use stgemm::bench::harness::BenchScale;
+use stgemm::bench::report::write_csv;
+
+fn main() {
+    let table = fig8_n_sweep(BenchScale::from_env());
+    println!("{}", table.render());
+    if let Ok(p) = write_csv(&table, "fig8_n_sweep.csv") {
+        println!("  [csv] {}", p.display());
+    }
+}

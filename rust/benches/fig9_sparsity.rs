@@ -1,0 +1,15 @@
+//! Paper Fig 9: the best scalar kernel across sparsity levels × K
+//! (M=64, N=4096, B=min(K,4096)) plus the baseline — the headline
+//! stability-across-K result.
+
+use stgemm::bench::figures::fig9_sparsity;
+use stgemm::bench::harness::BenchScale;
+use stgemm::bench::report::write_csv;
+
+fn main() {
+    let table = fig9_sparsity(BenchScale::from_env());
+    println!("{}", table.render());
+    if let Ok(p) = write_csv(&table, "fig9_sparsity.csv") {
+        println!("  [csv] {}", p.display());
+    }
+}

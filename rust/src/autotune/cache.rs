@@ -1,0 +1,128 @@
+//! Parametric cache model.
+//!
+//! The paper's reasoning: the working set of the K4/M4 unrolled kernel is
+//! `MU` rows of X (each K f32) plus `MU` rows of Y; 4 rows of 4096 floats
+//! fit M1's 128 KB L1d, so B = 4096 is the largest block with no capacity
+//! misses. The model below reproduces that arithmetic for any cache size
+//! (host-detected when possible, M1 defaults otherwise).
+
+/// Cache geometry used to predict unroll/block parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheModel {
+    /// L1 data cache bytes per core.
+    pub l1d_bytes: usize,
+    /// Shared last-level cache bytes.
+    pub llc_bytes: usize,
+}
+
+/// Apple M1 P-core geometry (the paper's target).
+pub const APPLE_M1: CacheModel = CacheModel {
+    l1d_bytes: 128 * 1024,
+    llc_bytes: 12 * 1024 * 1024,
+};
+
+impl CacheModel {
+    /// Detect the host's cache sizes from sysfs; fall back to M1 values.
+    pub fn detect() -> CacheModel {
+        fn read_kb(path: &str) -> Option<usize> {
+            let s = std::fs::read_to_string(path).ok()?;
+            let s = s.trim();
+            let kb: usize = s.strip_suffix('K')?.parse().ok()?;
+            Some(kb * 1024)
+        }
+        let base = "/sys/devices/system/cpu/cpu0/cache";
+        let mut l1d = None;
+        let mut llc = None;
+        for i in 0..6 {
+            let dir = format!("{base}/index{i}");
+            let level = std::fs::read_to_string(format!("{dir}/level"))
+                .ok()
+                .and_then(|s| s.trim().parse::<u32>().ok());
+            let ctype = std::fs::read_to_string(format!("{dir}/type"))
+                .map(|s| s.trim().to_string())
+                .unwrap_or_default();
+            let size = read_kb(&format!("{dir}/size"));
+            match (level, ctype.as_str(), size) {
+                (Some(1), "Data", Some(b)) => l1d = Some(b),
+                (Some(_), "Unified", Some(b)) => llc = Some(llc.unwrap_or(0).max(b)),
+                _ => {}
+            }
+        }
+        CacheModel {
+            l1d_bytes: l1d.unwrap_or(APPLE_M1.l1d_bytes),
+            llc_bytes: llc.unwrap_or(APPLE_M1.llc_bytes),
+        }
+    }
+
+    /// Largest K for which `rows` rows of X + Y fit L1 (paper: 4 rows of
+    /// 4096 f32 on M1 → 4096).
+    pub fn max_k_for_rows(&self, rows: usize) -> usize {
+        // rows·K f32 of X plus rows·(N-slice) of Y; the Y slice is small
+        // compared to X in the paper's shapes, so model X only with a 25%
+        // headroom factor (the paper's "without significant misses").
+        let budget = self.l1d_bytes * 3 / 4;
+        budget / (rows * std::mem::size_of::<f32>())
+    }
+
+    /// Paper rule generalized: recommended block size for the blocked
+    /// kernels given MU rows, clamped to a power of two.
+    pub fn recommended_block(&self, rows: usize) -> usize {
+        let max_k = self.max_k_for_rows(rows.max(1));
+        // Round down to a power of two (the paper picked 4096).
+        let mut b = 1usize;
+        while b * 2 <= max_k {
+            b *= 2;
+        }
+        b.max(256)
+    }
+
+    /// Predicted optimal M-unroll for a given K: the largest MU ∈
+    /// {1,2,4,8} whose working set still fits L1 (Figs 2–4's shape).
+    pub fn predicted_mu(&self, k: usize) -> usize {
+        for &mu in &[8usize, 4, 2] {
+            if self.max_k_for_rows(mu) >= k {
+                return mu;
+            }
+        }
+        1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn m1_block_rule_reproduces_4096() {
+        // The paper's arithmetic: 4 rows in 128 KB L1 → B = 4096.
+        assert_eq!(APPLE_M1.recommended_block(4), 4096);
+    }
+
+    #[test]
+    fn predicted_mu_shrinks_with_k() {
+        let m1 = APPLE_M1;
+        // Figs 2–4: small K → high MU optimal; huge K → MU 1.
+        assert!(m1.predicted_mu(1024) >= 4);
+        assert!(m1.predicted_mu(16384) <= 2);
+        let mut prev = usize::MAX;
+        for k in [1024, 2048, 4096, 8192, 16384, 32768] {
+            let mu = m1.predicted_mu(k);
+            assert!(mu <= prev, "MU must be non-increasing in K");
+            prev = mu;
+        }
+    }
+
+    #[test]
+    fn detect_returns_something_plausible() {
+        let c = CacheModel::detect();
+        assert!(c.l1d_bytes >= 8 * 1024 && c.l1d_bytes <= 16 * 1024 * 1024);
+        assert!(c.llc_bytes >= c.l1d_bytes);
+    }
+
+    #[test]
+    fn max_k_monotone_in_rows() {
+        let c = APPLE_M1;
+        assert!(c.max_k_for_rows(1) > c.max_k_for_rows(4));
+        assert!(c.max_k_for_rows(4) > c.max_k_for_rows(8));
+    }
+}

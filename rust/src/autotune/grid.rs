@@ -1,0 +1,141 @@
+//! The unroll-factor grid search (paper Figs 2–4): sweep inner (K) and
+//! outer (M) unroll factors of [`UnrolledMKernel`] across K sizes, measure
+//! flops/cycle, and report speedups over the baseline.
+
+use crate::formats::Tcsc;
+use crate::kernels::{BaseTcscKernel, Kernel, UnrolledMKernel};
+use crate::perf::flops::CostModel;
+use crate::perf::timer::CycleTimer;
+use crate::tensor::Matrix;
+use crate::ternary::TernaryMatrix;
+
+/// Inner (nonzero-direction) unroll factors swept by the paper.
+pub const UNROLL_K_FACTORS: [usize; 6] = [1, 2, 4, 8, 12, 16];
+/// Outer (row-direction) unroll factors swept by the paper.
+pub const UNROLL_M_FACTORS: [usize; 4] = [1, 2, 4, 8];
+
+/// One grid-search measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct GridPoint {
+    pub ku: usize,
+    pub mu: usize,
+    pub k: usize,
+    pub flops_per_cycle: f64,
+    pub speedup_vs_base: f64,
+}
+
+/// Run the monomorphized (KU, MU) kernel by value — the const-generic
+/// dispatch table the grid search (and benches) use.
+pub fn run_unrolled_mk(
+    ku: usize,
+    mu: usize,
+    x: &Matrix,
+    w: &Tcsc,
+    bias: &[f32],
+    y: &mut Matrix,
+) {
+    macro_rules! dispatch {
+        ($( ($k:literal, $m:literal) ),+ $(,)?) => {
+            match (ku, mu) {
+                $( ($k, $m) => UnrolledMKernel::<$k, $m>.run(x, w, bias, y), )+
+                _ => panic!("unsupported unroll pair ({ku},{mu})"),
+            }
+        };
+    }
+    dispatch!(
+        (1, 1), (1, 2), (1, 4), (1, 8),
+        (2, 1), (2, 2), (2, 4), (2, 8),
+        (4, 1), (4, 2), (4, 4), (4, 8),
+        (8, 1), (8, 2), (8, 4), (8, 8),
+        (12, 1), (12, 2), (12, 4), (12, 8),
+        (16, 1), (16, 2), (16, 4), (16, 8),
+    );
+}
+
+/// Sweep the full (KU, MU) grid for one problem shape. The paper fixes
+/// s=25%, M=32, N=1024 and varies K; `reps` controls measurement cost.
+pub fn unroll_grid_search(
+    m: usize,
+    k: usize,
+    n: usize,
+    sparsity: f32,
+    seed: u64,
+    timer: &CycleTimer,
+) -> Vec<GridPoint> {
+    let w = TernaryMatrix::random(k, n, sparsity, seed);
+    let fmt = Tcsc::from_ternary(&w);
+    let x = Matrix::random(m, k, seed + 1);
+    let bias: Vec<f32> = (0..n).map(|i| (i % 7) as f32 * 0.1).collect();
+    let flops = CostModel::new(m, k, n, sparsity).flops();
+    let mut y = Matrix::zeros(m, n);
+
+    // Baseline reference.
+    let base = timer.run(|| BaseTcscKernel.run(&x, &fmt, &bias, &mut y));
+    let base_fpc = base.flops_per_cycle(flops);
+
+    let mut out = Vec::new();
+    for &ku in &UNROLL_K_FACTORS {
+        for &mu in &UNROLL_M_FACTORS {
+            let meas = timer.run(|| run_unrolled_mk(ku, mu, &x, &fmt, &bias, &mut y));
+            let fpc = meas.flops_per_cycle(flops);
+            out.push(GridPoint {
+                ku,
+                mu,
+                k,
+                flops_per_cycle: fpc,
+                speedup_vs_base: fpc / base_fpc,
+            });
+        }
+    }
+    out
+}
+
+/// The best point of a grid (highest flops/cycle).
+pub fn best_point(points: &[GridPoint]) -> GridPoint {
+    *points
+        .iter()
+        .max_by(|a, b| a.flops_per_cycle.partial_cmp(&b.flops_per_cycle).unwrap())
+        .expect("non-empty grid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense_oracle;
+
+    #[test]
+    fn dispatch_covers_all_paper_factors() {
+        let w = TernaryMatrix::random(64, 16, 0.25, 5);
+        let fmt = Tcsc::from_ternary(&w);
+        let x = Matrix::random(8, 64, 6);
+        let bias = vec![0.1f32; 16];
+        let oracle = dense_oracle(&x, &w, &bias);
+        for &ku in &UNROLL_K_FACTORS {
+            for &mu in &UNROLL_M_FACTORS {
+                let mut y = Matrix::zeros(8, 16);
+                run_unrolled_mk(ku, mu, &x, &fmt, &bias, &mut y);
+                assert!(y.allclose(&oracle, 1e-4), "({ku},{mu})");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unsupported unroll pair")]
+    fn dispatch_rejects_unknown() {
+        let w = TernaryMatrix::random(8, 4, 0.5, 1);
+        let fmt = Tcsc::from_ternary(&w);
+        let x = Matrix::random(1, 8, 2);
+        let mut y = Matrix::zeros(1, 4);
+        run_unrolled_mk(3, 5, &x, &fmt, &[0.0; 4], &mut y);
+    }
+
+    #[test]
+    fn grid_search_produces_full_grid() {
+        let timer = CycleTimer::new(0, 1);
+        let points = unroll_grid_search(4, 64, 32, 0.25, 9, &timer);
+        assert_eq!(points.len(), UNROLL_K_FACTORS.len() * UNROLL_M_FACTORS.len());
+        assert!(points.iter().all(|p| p.flops_per_cycle > 0.0));
+        let best = best_point(&points);
+        assert!(best.speedup_vs_base > 0.0);
+    }
+}

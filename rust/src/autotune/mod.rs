@@ -1,0 +1,11 @@
+//! Autotuning: the paper's unroll-factor grid search (Figs 2–4) and block
+//! size selection, parameterized by a cache model so the "optimal unroll
+//! shrinks as K grows" shape reproduces on any host.
+
+pub mod grid;
+pub mod cache;
+pub mod table;
+
+pub use cache::CacheModel;
+pub use grid::{run_unrolled_mk, unroll_grid_search, GridPoint, UNROLL_K_FACTORS, UNROLL_M_FACTORS};
+pub use table::{ShapeClass, TuneEntry, TuningTable};

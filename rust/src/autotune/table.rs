@@ -1,0 +1,260 @@
+//! Tuning-table persistence: measured best kernel/parameters per problem
+//! class, saved as JSON and consulted by the model builder so serving
+//! picks the empirically best kernel for each layer shape — the runtime
+//! counterpart of the paper's offline grid searches.
+
+use crate::bench::harness::measure_kernel;
+use crate::kernels::KernelParams;
+use crate::perf::timer::CycleTimer;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Problem class key: K and sparsity are the parameters that matter
+/// (paper §4: M and N are performance-neutral). K is bucketed to powers
+/// of two; sparsity to the paper's four levels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ShapeClass {
+    pub k_bucket: u32,
+    /// Sparsity in basis points (e.g. 2500 = 25%), bucketed.
+    pub sparsity_bp: u32,
+}
+
+impl ShapeClass {
+    pub fn of(k: usize, sparsity: f32) -> ShapeClass {
+        ShapeClass {
+            k_bucket: (k.max(1) as u32).next_power_of_two(),
+            sparsity_bp: bucket_sparsity(sparsity),
+        }
+    }
+
+    fn key(&self) -> String {
+        format!("k{}_s{}", self.k_bucket, self.sparsity_bp)
+    }
+
+    fn parse(key: &str) -> Option<ShapeClass> {
+        let rest = key.strip_prefix('k')?;
+        let (k, s) = rest.split_once("_s")?;
+        Some(ShapeClass {
+            k_bucket: k.parse().ok()?,
+            sparsity_bp: s.parse().ok()?,
+        })
+    }
+}
+
+fn bucket_sparsity(s: f32) -> u32 {
+    // Snap to the nearest paper level.
+    let levels = [625u32, 1250, 2500, 5000];
+    let bp = (s * 10_000.0) as i64;
+    *levels
+        .iter()
+        .min_by_key(|&&l| (l as i64 - bp).abs())
+        .unwrap()
+}
+
+/// One tuning entry: the winning kernel and its measured performance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneEntry {
+    pub kernel: String,
+    pub flops_per_cycle: f64,
+}
+
+/// A persisted tuning table.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TuningTable {
+    entries: BTreeMap<ShapeClass, TuneEntry>,
+}
+
+impl TuningTable {
+    pub fn new() -> TuningTable {
+        TuningTable::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn insert(&mut self, class: ShapeClass, entry: TuneEntry) {
+        self.entries.insert(class, entry);
+    }
+
+    /// Best-known kernel for a shape, if tuned.
+    pub fn lookup(&self, k: usize, sparsity: f32) -> Option<&TuneEntry> {
+        self.entries.get(&ShapeClass::of(k, sparsity))
+    }
+
+    /// Kernel to use for a shape: tuned winner or the paper default.
+    pub fn kernel_for(&self, k: usize, sparsity: f32) -> &str {
+        self.lookup(k, sparsity)
+            .map(|e| e.kernel.as_str())
+            .unwrap_or("interleaved_blocked_tcsc")
+    }
+
+    /// Measure the candidate set for one shape class and record the winner.
+    pub fn tune(
+        &mut self,
+        k: usize,
+        sparsity: f32,
+        candidates: &[&str],
+        timer: &CycleTimer,
+    ) -> TuneEntry {
+        // Representative M/N: performance-neutral per the paper (Fig 8),
+        // so small values keep tuning fast.
+        let (m, n) = (16, 256);
+        let mut best: Option<TuneEntry> = None;
+        for &kernel in candidates {
+            let meas = measure_kernel(
+                kernel,
+                m,
+                k,
+                n,
+                sparsity,
+                0xA0_70_4E,
+                KernelParams::default(),
+                timer,
+            );
+            let fpc = meas.flops_per_cycle();
+            if best.as_ref().map(|b| fpc > b.flops_per_cycle).unwrap_or(true) {
+                best = Some(TuneEntry {
+                    kernel: kernel.to_string(),
+                    flops_per_cycle: fpc,
+                });
+            }
+        }
+        let entry = best.expect("non-empty candidate set");
+        self.insert(ShapeClass::of(k, sparsity), entry.clone());
+        entry
+    }
+
+    // ---- persistence ------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.entries
+                .iter()
+                .map(|(class, e)| {
+                    (
+                        class.key(),
+                        Json::obj(vec![
+                            ("kernel", Json::str(e.kernel.clone())),
+                            ("flops_per_cycle", Json::num(e.flops_per_cycle)),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(v: &Json) -> Result<TuningTable, String> {
+        let obj = v.as_obj().ok_or("tuning table must be an object")?;
+        let mut t = TuningTable::new();
+        for (key, entry) in obj {
+            let class = ShapeClass::parse(key).ok_or_else(|| format!("bad key '{key}'"))?;
+            let kernel = entry
+                .get("kernel")
+                .and_then(|k| k.as_str())
+                .ok_or("entry missing kernel")?
+                .to_string();
+            if !crate::kernels::kernel_names().contains(&kernel.as_str()) {
+                return Err(format!("unknown kernel '{kernel}' in tuning table"));
+            }
+            let fpc = entry
+                .get("flops_per_cycle")
+                .and_then(|f| f.as_f64())
+                .unwrap_or(0.0);
+            t.insert(
+                class,
+                TuneEntry {
+                    kernel,
+                    flops_per_cycle: fpc,
+                },
+            );
+        }
+        Ok(t)
+    }
+
+    pub fn save(&self, path: &str) -> Result<(), String> {
+        std::fs::write(path, self.to_json().encode_pretty())
+            .map_err(|e| format!("write {path}: {e}"))
+    }
+
+    pub fn load(path: &str) -> Result<TuningTable, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        Self::from_json(&Json::parse(&text).map_err(|e| e.to_string())?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_class_bucketing() {
+        assert_eq!(ShapeClass::of(1000, 0.24).k_bucket, 1024);
+        assert_eq!(ShapeClass::of(1024, 0.25).k_bucket, 1024);
+        assert_eq!(ShapeClass::of(1025, 0.25).k_bucket, 2048);
+        assert_eq!(ShapeClass::of(8192, 0.26).sparsity_bp, 2500);
+        assert_eq!(ShapeClass::of(8192, 0.06).sparsity_bp, 625);
+    }
+
+    #[test]
+    fn key_roundtrip() {
+        let c = ShapeClass::of(4096, 0.5);
+        assert_eq!(ShapeClass::parse(&c.key()), Some(c));
+        assert_eq!(ShapeClass::parse("garbage"), None);
+    }
+
+    #[test]
+    fn tune_records_a_winner_and_default_fallback() {
+        let mut t = TuningTable::new();
+        assert_eq!(t.kernel_for(2048, 0.25), "interleaved_blocked_tcsc");
+        let timer = CycleTimer::new(0, 1);
+        let entry = t.tune(512, 0.25, &["base_tcsc", "unrolled_tcsc_12"], &timer);
+        assert!(["base_tcsc", "unrolled_tcsc_12"].contains(&entry.kernel.as_str()));
+        assert_eq!(t.kernel_for(512, 0.25), entry.kernel);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut t = TuningTable::new();
+        t.insert(
+            ShapeClass::of(4096, 0.5),
+            TuneEntry {
+                kernel: "interleaved_blocked_tcsc".into(),
+                flops_per_cycle: 2.5,
+            },
+        );
+        t.insert(
+            ShapeClass::of(1024, 0.0625),
+            TuneEntry {
+                kernel: "unrolled_tcsc_12".into(),
+                flops_per_cycle: 1.5,
+            },
+        );
+        let decoded = TuningTable::from_json(&t.to_json()).unwrap();
+        assert_eq!(decoded, t);
+    }
+
+    #[test]
+    fn rejects_unknown_kernel_on_load() {
+        let json = Json::parse(r#"{"k1024_s2500": {"kernel": "bogus"}}"#).unwrap();
+        assert!(TuningTable::from_json(&json).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut t = TuningTable::new();
+        let timer = CycleTimer::new(0, 1);
+        t.tune(256, 0.5, &["base_tcsc"], &timer);
+        let path = std::env::temp_dir().join("stgemm_tuning_test.json");
+        let path = path.to_str().unwrap();
+        t.save(path).unwrap();
+        assert_eq!(TuningTable::load(path).unwrap(), t);
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,0 +1,137 @@
+//! Measurement protocol: warmup + median-of-reps cycle timing of prepared
+//! kernels, scaled by `STGEMM_BENCH_SCALE` (`full` = paper shapes, `ci` =
+//! same shapes with fewer reps so `cargo bench` stays minutes-fast).
+
+use crate::kernels::{prepare_kernel, KernelParams};
+use crate::perf::flops::CostModel;
+use crate::perf::timer::{CycleTimer, Measurement};
+use crate::tensor::Matrix;
+use crate::ternary::TernaryMatrix;
+
+/// Benchmark scale selected via `STGEMM_BENCH_SCALE`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BenchScale {
+    /// Paper shapes, full reps.
+    Full,
+    /// Paper shapes, minimal reps (CI smoke).
+    Ci,
+}
+
+impl BenchScale {
+    pub fn from_env() -> BenchScale {
+        match std::env::var("STGEMM_BENCH_SCALE").as_deref() {
+            Ok("full") => BenchScale::Full,
+            _ => BenchScale::Ci,
+        }
+    }
+
+    pub fn timer(self) -> CycleTimer {
+        match self {
+            BenchScale::Full => CycleTimer::new(2, 5),
+            BenchScale::Ci => CycleTimer::new(1, 2),
+        }
+    }
+
+    /// Shrink a dimension list in CI mode (keeps curve shape, caps cost).
+    pub fn cap_ks(self, ks: &[usize], cap: usize) -> Vec<usize> {
+        match self {
+            BenchScale::Full => ks.to_vec(),
+            BenchScale::Ci => ks.iter().copied().filter(|&k| k <= cap).collect(),
+        }
+    }
+}
+
+/// One kernel measurement: name, shape, and performance.
+#[derive(Debug, Clone)]
+pub struct KernelMeasurement {
+    pub kernel: String,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub sparsity: f32,
+    pub measurement: Measurement,
+    pub flops: f64,
+}
+
+impl KernelMeasurement {
+    pub fn flops_per_cycle(&self) -> f64 {
+        self.measurement.flops_per_cycle(self.flops)
+    }
+
+    pub fn gflops(&self) -> f64 {
+        self.measurement.gflops_per_second(self.flops)
+    }
+}
+
+/// Measure one registry kernel on a synthetic workload.
+///
+/// Format construction happens *outside* the timed region (the paper
+/// benchmarks the GEMM, not format conversion).
+pub fn measure_kernel(
+    name: &str,
+    m: usize,
+    k: usize,
+    n: usize,
+    sparsity: f32,
+    seed: u64,
+    params: KernelParams,
+    timer: &CycleTimer,
+) -> KernelMeasurement {
+    let w = TernaryMatrix::random(k, n, sparsity, seed);
+    let prepared = prepare_kernel(name, &w, params).expect("registry kernel");
+    let x = Matrix::random(m, k, seed + 1);
+    let bias: Vec<f32> = (0..n).map(|i| (i % 13) as f32 * 0.05).collect();
+    let mut y = Matrix::zeros(m, n);
+    let measurement = timer.run(|| prepared.run(&x, &bias, &mut y));
+    std::hint::black_box(y.as_slice());
+    let mut cost = CostModel::new(m, k, n, sparsity);
+    if params.prelu_alpha.is_some() {
+        cost = cost.with_prelu();
+    }
+    KernelMeasurement {
+        kernel: name.to_string(),
+        m,
+        k,
+        n,
+        sparsity,
+        measurement,
+        flops: cost.flops(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_produces_positive_performance() {
+        let timer = CycleTimer::new(0, 1);
+        let m = measure_kernel(
+            "base_tcsc",
+            4,
+            128,
+            32,
+            0.25,
+            7,
+            KernelParams::default(),
+            &timer,
+        );
+        assert!(m.flops_per_cycle() > 0.0);
+        assert!(m.gflops() > 0.0);
+        assert_eq!(m.flops, 4.0 * 32.0 * (1.0 + 0.25 * 128.0));
+    }
+
+    #[test]
+    fn scale_from_env_defaults_ci() {
+        // Note: don't set the env var here (tests run in parallel).
+        let s = BenchScale::from_env();
+        assert!(matches!(s, BenchScale::Ci | BenchScale::Full));
+    }
+
+    #[test]
+    fn cap_ks_filters_in_ci() {
+        let ks = [1024usize, 4096, 16384];
+        assert_eq!(BenchScale::Ci.cap_ks(&ks, 4096), vec![1024, 4096]);
+        assert_eq!(BenchScale::Full.cap_ks(&ks, 4096), ks.to_vec());
+    }
+}

@@ -1,0 +1,10 @@
+//! Benchmark harness (no criterion offline): measurement protocol, table /
+//! CSV reporting, and the per-figure experiment drivers that regenerate the
+//! paper's plots.
+
+pub mod harness;
+pub mod report;
+pub mod figures;
+
+pub use harness::{measure_kernel, BenchScale, KernelMeasurement};
+pub use report::{write_csv, Table};

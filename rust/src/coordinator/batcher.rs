@@ -1,0 +1,221 @@
+//! Dynamic batcher: accumulates single-row requests into GEMM batches.
+//!
+//! Policy: a batch closes when it reaches `max_batch` rows OR the oldest
+//! queued request has waited `max_wait`. Growing M is performance-neutral
+//! for the paper's kernels (Fig 8: performance is constant across M/N), so
+//! batching converts latency headroom directly into throughput.
+
+use crate::coordinator::request::InferenceRequest;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batch assembly policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Maximum rows per batch (should match the largest compiled bucket).
+    pub max_batch: usize,
+    /// Maximum time the oldest request may wait before the batch closes.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+struct QueueState {
+    queue: VecDeque<InferenceRequest>,
+    closed: bool,
+}
+
+/// Thread-safe dynamic batching queue (Mutex + Condvar; producers are
+/// server connections, the consumer is the model's batch loop).
+pub struct DynamicBatcher {
+    policy: BatchPolicy,
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+impl DynamicBatcher {
+    pub fn new(policy: BatchPolicy) -> DynamicBatcher {
+        assert!(policy.max_batch >= 1);
+        DynamicBatcher {
+            policy,
+            state: Mutex::new(QueueState {
+                queue: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Enqueue a request. Returns `Err(req)` if the batcher is shut down.
+    pub fn submit(&self, req: InferenceRequest) -> Result<(), InferenceRequest> {
+        let mut st = self.state.lock().expect("batcher mutex");
+        if st.closed {
+            return Err(req);
+        }
+        st.queue.push_back(req);
+        drop(st);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Current queue depth.
+    pub fn depth(&self) -> usize {
+        self.state.lock().expect("batcher mutex").queue.len()
+    }
+
+    /// Block until a batch is ready (full, or the oldest request timed
+    /// out, or shutdown). Returns `None` only after `close()` with an
+    /// empty queue — the consumer's exit signal.
+    pub fn next_batch(&self) -> Option<Vec<InferenceRequest>> {
+        let mut st = self.state.lock().expect("batcher mutex");
+        loop {
+            if !st.queue.is_empty() {
+                let oldest = st.queue.front().unwrap().enqueued;
+                let deadline = oldest + self.policy.max_wait;
+                let now = Instant::now();
+                if st.queue.len() >= self.policy.max_batch || now >= deadline || st.closed {
+                    let take = st.queue.len().min(self.policy.max_batch);
+                    return Some(st.queue.drain(..take).collect());
+                }
+                // Wait until the deadline or a new arrival.
+                let (guard, _timeout) = self
+                    .cv
+                    .wait_timeout(st, deadline - now)
+                    .expect("batcher condvar");
+                st = guard;
+            } else {
+                if st.closed {
+                    return None;
+                }
+                st = self.cv.wait(st).expect("batcher condvar");
+            }
+        }
+    }
+
+    /// Shut the batcher down. Queued requests are still drained by
+    /// subsequent `next_batch` calls; new submissions are rejected.
+    pub fn close(&self) {
+        self.state.lock().expect("batcher mutex").closed = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::InferenceRequest;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn req(id: u64) -> InferenceRequest {
+        InferenceRequest::new(id, "m", vec![0.0]).0
+    }
+
+    #[test]
+    fn full_batch_closes_immediately() {
+        let b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_secs(10),
+        });
+        for i in 0..4 {
+            b.submit(req(i)).unwrap();
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn timeout_closes_partial_batch() {
+        let b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_millis(5),
+        });
+        b.submit(req(1)).unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn fifo_order_preserved_across_batches() {
+        let b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_secs(1),
+        });
+        for i in 0..5 {
+            b.submit(req(i)).unwrap();
+        }
+        b.close();
+        let mut ids = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            ids.extend(batch.iter().map(|r| r.id));
+        }
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn close_rejects_new_and_unblocks_consumer() {
+        let b = Arc::new(DynamicBatcher::new(BatchPolicy::default()));
+        let b2 = Arc::clone(&b);
+        let h = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(10));
+        b.close();
+        assert!(h.join().unwrap().is_none());
+        assert!(b.submit(req(1)).is_err());
+    }
+
+    #[test]
+    fn concurrent_producers_lose_nothing() {
+        let b = Arc::new(DynamicBatcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+        }));
+        let producers: Vec<_> = (0..4)
+            .map(|t| {
+                let b = Arc::clone(&b);
+                std::thread::spawn(move || {
+                    for i in 0..50 {
+                        b.submit(req(t * 1000 + i)).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumer = {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || {
+                let mut seen = Vec::new();
+                while let Some(batch) = b.next_batch() {
+                    assert!(batch.len() <= 8);
+                    seen.extend(batch.iter().map(|r| r.id));
+                }
+                seen
+            })
+        };
+        for p in producers {
+            p.join().unwrap();
+        }
+        // Drain then close.
+        while b.depth() > 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        b.close();
+        let mut seen = consumer.join().unwrap();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 200, "no request lost or duplicated");
+    }
+}

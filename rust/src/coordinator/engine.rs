@@ -1,0 +1,272 @@
+//! Inference engine: executes batches on the native ternary kernels or the
+//! PJRT-compiled JAX/Pallas artifact, and can cross-check the two.
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{InferenceRequest, InferenceResponse};
+use crate::model::TernaryMlp;
+use crate::runtime::XlaExecutor;
+use crate::tensor::Matrix;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Which execution path serves requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Rust sparse ternary kernels (the paper's system).
+    Native,
+    /// PJRT executable compiled from the JAX/Pallas AOT artifact.
+    Xla,
+}
+
+impl std::str::FromStr for Backend {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Backend, String> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "xla" => Ok(Backend::Xla),
+            other => Err(format!("unknown backend '{other}' (native|xla)")),
+        }
+    }
+}
+
+/// One served model: native MLP (always present) + optional XLA executor.
+pub struct Engine {
+    pub name: String,
+    mlp: TernaryMlp,
+    xla: Option<XlaExecutor>,
+    pub backend: Backend,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Engine {
+    pub fn new(name: impl Into<String>, mlp: TernaryMlp) -> Engine {
+        Engine {
+            name: name.into(),
+            mlp,
+            xla: None,
+            backend: Backend::Native,
+            metrics: Arc::new(Metrics::new()),
+        }
+    }
+
+    /// Attach an XLA executor (enables `Backend::Xla` and cross-checks).
+    pub fn with_xla(mut self, xla: XlaExecutor) -> Engine {
+        assert_eq!(xla.d_in, self.mlp.d_in(), "XLA d_in mismatch");
+        assert_eq!(xla.d_out, self.mlp.d_out(), "XLA d_out mismatch");
+        self.xla = Some(xla);
+        self
+    }
+
+    pub fn with_backend(mut self, backend: Backend) -> Engine {
+        if backend == Backend::Xla {
+            assert!(self.xla.is_some(), "XLA backend requires an executor");
+        }
+        self.backend = backend;
+        self
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.mlp.d_in()
+    }
+
+    pub fn d_out(&self) -> usize {
+        self.mlp.d_out()
+    }
+
+    pub fn has_xla(&self) -> bool {
+        self.xla.is_some()
+    }
+
+    /// Run a raw batch matrix on the configured backend.
+    pub fn infer_matrix(&self, x: &Matrix) -> Result<Matrix, String> {
+        match self.backend {
+            Backend::Native => Ok(self.mlp.forward(x)),
+            Backend::Xla => self
+                .xla
+                .as_ref()
+                .expect("backend checked at construction")
+                .run(x)
+                .map_err(|e| format!("{e:#}")),
+        }
+    }
+
+    /// Run a batch on *both* backends and return (native, xla, max |Δ|).
+    pub fn cross_check(&self, x: &Matrix) -> Result<(Matrix, Matrix, f32), String> {
+        let xla = self
+            .xla
+            .as_ref()
+            .ok_or("cross-check requires an XLA executor")?;
+        let native = self.mlp.forward(x);
+        let xla_out = xla.run(x).map_err(|e| format!("{e:#}"))?;
+        let diff = native.max_abs_diff(&xla_out);
+        Ok((native, xla_out, diff))
+    }
+
+    /// Execute one assembled batch of requests: validates inputs, packs the
+    /// batch matrix, runs the backend, and delivers per-request responses.
+    pub fn run_batch(&self, batch: Vec<InferenceRequest>) {
+        if batch.is_empty() {
+            return;
+        }
+        let d_in = self.d_in();
+        // Partition valid/invalid without losing anybody.
+        let mut valid = Vec::with_capacity(batch.len());
+        for req in batch {
+            if req.input.len() == d_in {
+                valid.push(req);
+            } else {
+                self.metrics
+                    .errors
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let resp = InferenceResponse {
+                    id: req.id,
+                    output: Err(format!(
+                        "input length {} != d_in {d_in}",
+                        req.input.len()
+                    )),
+                    queue_us: req.enqueued.elapsed().as_micros() as u64,
+                    compute_us: 0,
+                    batch_size: 0,
+                };
+                let _ = req.resp_tx.send(resp);
+            }
+        }
+        if valid.is_empty() {
+            return;
+        }
+        let m = valid.len();
+        self.metrics.record_batch(m);
+        let mut x = Matrix::zeros(m, d_in);
+        for (r, req) in valid.iter().enumerate() {
+            x.row_mut(r).copy_from_slice(&req.input);
+        }
+        let t0 = Instant::now();
+        let result = self.infer_matrix(&x);
+        let compute_us = t0.elapsed().as_micros() as u64;
+        self.metrics.compute_latency.record(compute_us);
+        match result {
+            Ok(y) => {
+                for (r, req) in valid.into_iter().enumerate() {
+                    let queue_us = req.enqueued.elapsed().as_micros() as u64;
+                    self.metrics.queue_latency.record(queue_us);
+                    self.metrics.e2e_latency.record(queue_us); // queue incl. compute
+                    self.metrics
+                        .responses
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    let _ = req.resp_tx.send(InferenceResponse {
+                        id: req.id,
+                        output: Ok(y.row(r).to_vec()),
+                        queue_us,
+                        compute_us,
+                        batch_size: m,
+                    });
+                }
+            }
+            Err(e) => {
+                for req in valid {
+                    self.metrics
+                        .errors
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    let _ = req.resp_tx.send(InferenceResponse {
+                        id: req.id,
+                        output: Err(e.clone()),
+                        queue_us: req.enqueued.elapsed().as_micros() as u64,
+                        compute_us,
+                        batch_size: m,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Cost-model flops for a batch of `m` rows (reporting).
+    pub fn flops(&self, m: usize) -> f64 {
+        self.mlp.flops(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn engine() -> Engine {
+        let cfg = ModelConfig::from_json(
+            r#"{"name":"t","dims":[16,32,8],"sparsity":0.25,"seed":3}"#,
+        )
+        .unwrap();
+        Engine::new("t", TernaryMlp::from_config(&cfg).unwrap())
+    }
+
+    #[test]
+    fn run_batch_delivers_all_responses() {
+        let e = engine();
+        let mut rxs = Vec::new();
+        let mut batch = Vec::new();
+        for i in 0..5 {
+            let (req, rx) = InferenceRequest::new(i, "t", vec![0.1; 16]);
+            batch.push(req);
+            rxs.push(rx);
+        }
+        e.run_batch(batch);
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.id, i as u64);
+            let out = resp.output.unwrap();
+            assert_eq!(out.len(), 8);
+            assert_eq!(resp.batch_size, 5);
+        }
+        assert_eq!(
+            e.metrics
+                .responses
+                .load(std::sync::atomic::Ordering::Relaxed),
+            5
+        );
+    }
+
+    #[test]
+    fn batch_output_matches_single_row_runs() {
+        let e = engine();
+        let x1 = vec![0.5f32; 16];
+        let x2: Vec<f32> = (0..16).map(|i| i as f32 * 0.1).collect();
+        let (ra, rxa) = InferenceRequest::new(1, "t", x1.clone());
+        let (rb, rxb) = InferenceRequest::new(2, "t", x2.clone());
+        e.run_batch(vec![ra, rb]);
+        let ya = rxa.recv().unwrap().output.unwrap();
+        let yb = rxb.recv().unwrap().output.unwrap();
+
+        // Single-row ground truth.
+        let m1 = Matrix::from_slice(1, 16, &x1);
+        let m2 = Matrix::from_slice(1, 16, &x2);
+        let s1 = e.infer_matrix(&m1).unwrap();
+        let s2 = e.infer_matrix(&m2).unwrap();
+        for (a, b) in ya.iter().zip(s1.as_slice()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        for (a, b) in yb.iter().zip(s2.as_slice()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn invalid_input_gets_error_response() {
+        let e = engine();
+        let (good, rx_good) = InferenceRequest::new(1, "t", vec![0.0; 16]);
+        let (bad, rx_bad) = InferenceRequest::new(2, "t", vec![0.0; 3]);
+        e.run_batch(vec![good, bad]);
+        assert!(rx_good.recv().unwrap().output.is_ok());
+        assert!(rx_bad.recv().unwrap().output.is_err());
+        assert_eq!(
+            e.metrics.errors.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+    }
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!("native".parse::<Backend>().unwrap(), Backend::Native);
+        assert_eq!("xla".parse::<Backend>().unwrap(), Backend::Xla);
+        assert!("gpu".parse::<Backend>().is_err());
+    }
+}

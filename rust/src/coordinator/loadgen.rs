@@ -1,0 +1,220 @@
+//! Load generator: closed-loop concurrent clients driving the router
+//! (in-process) or the HTTP server, reporting throughput and latency
+//! percentiles. Powers the e2e serving benchmark (EXPERIMENTS.md E11).
+
+use crate::coordinator::router::Router;
+use crate::coordinator::server::http_request;
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Load generation settings.
+#[derive(Debug, Clone)]
+pub struct LoadGenerator {
+    /// Concurrent closed-loop clients.
+    pub clients: usize,
+    /// Requests per client.
+    pub requests_per_client: usize,
+    /// Input width (must match the model's d_in).
+    pub d_in: usize,
+    /// Model name to target.
+    pub model: String,
+    /// RNG seed for inputs.
+    pub seed: u64,
+}
+
+/// Aggregated load test results.
+#[derive(Debug, Clone)]
+pub struct LoadGenReport {
+    pub total_requests: usize,
+    pub errors: usize,
+    pub wall_seconds: f64,
+    pub throughput_rps: f64,
+    pub latency_us_p50: u64,
+    pub latency_us_p95: u64,
+    pub latency_us_p99: u64,
+    pub latency_us_mean: f64,
+    pub mean_batch_size: f64,
+}
+
+impl LoadGenReport {
+    fn from_latencies(
+        mut lat_us: Vec<u64>,
+        errors: usize,
+        wall: Duration,
+        mean_batch: f64,
+    ) -> LoadGenReport {
+        lat_us.sort_unstable();
+        let n = lat_us.len().max(1);
+        let pct = |q: f64| lat_us[((q / 100.0 * n as f64).ceil() as usize).clamp(1, n) - 1];
+        LoadGenReport {
+            total_requests: lat_us.len(),
+            errors,
+            wall_seconds: wall.as_secs_f64(),
+            throughput_rps: lat_us.len() as f64 / wall.as_secs_f64().max(1e-9),
+            latency_us_p50: if lat_us.is_empty() { 0 } else { pct(50.0) },
+            latency_us_p95: if lat_us.is_empty() { 0 } else { pct(95.0) },
+            latency_us_p99: if lat_us.is_empty() { 0 } else { pct(99.0) },
+            latency_us_mean: lat_us.iter().sum::<u64>() as f64 / n as f64,
+            mean_batch_size: mean_batch,
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} reqs in {:.2}s → {:.0} req/s | latency µs p50={} p95={} p99={} mean={:.0} | mean batch {:.2} | errors {}",
+            self.total_requests,
+            self.wall_seconds,
+            self.throughput_rps,
+            self.latency_us_p50,
+            self.latency_us_p95,
+            self.latency_us_p99,
+            self.latency_us_mean,
+            self.mean_batch_size,
+            self.errors
+        )
+    }
+}
+
+impl LoadGenerator {
+    /// Drive the router directly (in-process, no HTTP overhead).
+    pub fn run_inprocess(&self, router: &Arc<Router>) -> LoadGenReport {
+        let errors = Arc::new(AtomicU64::new(0));
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..self.clients)
+            .map(|c| {
+                let router = Arc::clone(router);
+                let errors = Arc::clone(&errors);
+                let model = self.model.clone();
+                let (d_in, n_req, seed) = (self.d_in, self.requests_per_client, self.seed);
+                std::thread::spawn(move || {
+                    let mut rng = Rng::new(seed + c as u64);
+                    let mut lats = Vec::with_capacity(n_req);
+                    for _ in 0..n_req {
+                        let input: Vec<f32> =
+                            (0..d_in).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+                        let t = Instant::now();
+                        match router.infer_blocking(&model, input, Duration::from_secs(30)) {
+                            Ok(resp) if resp.output.is_ok() => {
+                                lats.push(t.elapsed().as_micros() as u64);
+                            }
+                            _ => {
+                                errors.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    lats
+                })
+            })
+            .collect();
+        let mut all = Vec::new();
+        for h in handles {
+            all.extend(h.join().expect("client thread"));
+        }
+        let wall = t0.elapsed();
+        let mean_batch = router
+            .engine(&self.model)
+            .map(|e| e.metrics.mean_batch_size())
+            .unwrap_or(0.0);
+        LoadGenReport::from_latencies(
+            all,
+            errors.load(Ordering::Relaxed) as usize,
+            wall,
+            mean_batch,
+        )
+    }
+
+    /// Drive the HTTP server (full network path).
+    pub fn run_http(&self, addr: std::net::SocketAddr) -> LoadGenReport {
+        let errors = Arc::new(AtomicU64::new(0));
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..self.clients)
+            .map(|c| {
+                let errors = Arc::clone(&errors);
+                let model = self.model.clone();
+                let (d_in, n_req, seed) = (self.d_in, self.requests_per_client, self.seed);
+                std::thread::spawn(move || {
+                    let mut rng = Rng::new(seed + 31 * c as u64);
+                    let mut lats = Vec::with_capacity(n_req);
+                    for _ in 0..n_req {
+                        let input: Vec<String> = (0..d_in)
+                            .map(|_| format!("{:.6}", rng.f32_range(-1.0, 1.0)))
+                            .collect();
+                        let body = format!(
+                            r#"{{"model":"{model}","input":[{}]}}"#,
+                            input.join(",")
+                        );
+                        let t = Instant::now();
+                        match http_request(&addr, "POST", "/infer", &body) {
+                            Ok((200, _)) => lats.push(t.elapsed().as_micros() as u64),
+                            _ => {
+                                errors.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    lats
+                })
+            })
+            .collect();
+        let mut all = Vec::new();
+        for h in handles {
+            all.extend(h.join().expect("client thread"));
+        }
+        let wall = t0.elapsed();
+        LoadGenReport::from_latencies(all, errors.load(Ordering::Relaxed) as usize, wall, 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::coordinator::engine::Engine;
+    use crate::model::{ModelConfig, TernaryMlp};
+
+    fn router() -> Arc<Router> {
+        let cfg = ModelConfig::from_json(
+            r#"{"name":"m1","dims":[16,32,8],"sparsity":0.25,"seed":5}"#,
+        )
+        .unwrap();
+        let mut r = Router::new();
+        r.register(
+            Engine::new("m1", TernaryMlp::from_config(&cfg).unwrap()),
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_micros(500),
+            },
+        );
+        Arc::new(r)
+    }
+
+    #[test]
+    fn inprocess_load_completes_all_requests() {
+        let r = router();
+        let gen = LoadGenerator {
+            clients: 4,
+            requests_per_client: 25,
+            d_in: 16,
+            model: "m1".into(),
+            seed: 1,
+        };
+        let report = gen.run_inprocess(&r);
+        assert_eq!(report.total_requests, 100);
+        assert_eq!(report.errors, 0);
+        assert!(report.throughput_rps > 0.0);
+        assert!(report.latency_us_p50 <= report.latency_us_p99);
+        assert!(!report.summary().is_empty());
+    }
+
+    #[test]
+    fn report_percentiles_from_known_data() {
+        let lats: Vec<u64> = (1..=100).collect();
+        let rep = LoadGenReport::from_latencies(lats, 0, Duration::from_secs(1), 2.0);
+        assert_eq!(rep.latency_us_p50, 50);
+        assert_eq!(rep.latency_us_p95, 95);
+        assert_eq!(rep.latency_us_p99, 99);
+        assert!((rep.throughput_rps - 100.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,185 @@
+//! Serving metrics: counters plus a lock-free log-bucketed latency
+//! histogram with percentile estimation.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of log2 latency buckets (1 µs .. ~17 min).
+const BUCKETS: usize = 30;
+
+/// Lock-free log2 histogram of microsecond values.
+#[derive(Debug, Default)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl LatencyHistogram {
+    pub fn record(&self, us: u64) {
+        let b = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Percentile estimate (upper bound of the bucket containing rank q).
+    pub fn percentile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return 1u64 << (i + 1); // bucket upper bound
+            }
+        }
+        self.max_us()
+    }
+}
+
+/// Coordinator-wide metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub errors: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_rows: AtomicU64,
+    pub e2e_latency: LatencyHistogram,
+    pub queue_latency: LatencyHistogram,
+    pub compute_latency: LatencyHistogram,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_rows.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    /// Mean rows per executed batch.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_rows.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    /// JSON snapshot for the /metrics endpoint.
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            (
+                "requests",
+                Json::num(self.requests.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "responses",
+                Json::num(self.responses.load(Ordering::Relaxed) as f64),
+            ),
+            ("errors", Json::num(self.errors.load(Ordering::Relaxed) as f64)),
+            (
+                "batches",
+                Json::num(self.batches.load(Ordering::Relaxed) as f64),
+            ),
+            ("mean_batch_size", Json::num(self.mean_batch_size())),
+            (
+                "latency_us",
+                Json::obj(vec![
+                    ("mean", Json::num(self.e2e_latency.mean_us())),
+                    ("p50", Json::num(self.e2e_latency.percentile_us(50.0) as f64)),
+                    ("p95", Json::num(self.e2e_latency.percentile_us(95.0) as f64)),
+                    ("p99", Json::num(self.e2e_latency.percentile_us(99.0) as f64)),
+                    ("max", Json::num(self.e2e_latency.max_us() as f64)),
+                ]),
+            ),
+            (
+                "queue_us_mean",
+                Json::num(self.queue_latency.mean_us()),
+            ),
+            (
+                "compute_us_mean",
+                Json::num(self.compute_latency.mean_us()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let h = LatencyHistogram::default();
+        for us in [1u64, 10, 100, 1000, 10_000, 100_000] {
+            for _ in 0..10 {
+                h.record(us);
+            }
+        }
+        assert_eq!(h.count(), 60);
+        let p50 = h.percentile_us(50.0);
+        let p95 = h.percentile_us(95.0);
+        let p99 = h.percentile_us(99.0);
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!(h.max_us() == 100_000);
+        assert!(h.mean_us() > 0.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.percentile_us(99.0), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn percentile_bounds_contain_value() {
+        let h = LatencyHistogram::default();
+        for _ in 0..100 {
+            h.record(500); // bucket [256, 512)
+        }
+        let p = h.percentile_us(50.0);
+        assert!(p >= 500 && p <= 1024, "p50 {p}");
+    }
+
+    #[test]
+    fn metrics_snapshot_is_valid_json() {
+        let m = Metrics::new();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.record_batch(8);
+        m.record_batch(4);
+        m.e2e_latency.record(1234);
+        let snap = m.snapshot().encode();
+        let parsed = Json::parse(&snap).unwrap();
+        assert_eq!(parsed.get("requests").unwrap().as_f64(), Some(3.0));
+        assert_eq!(parsed.get("mean_batch_size").unwrap().as_f64(), Some(6.0));
+    }
+}

@@ -1,0 +1,27 @@
+//! Layer-3 coordinator: the serving stack.
+//!
+//! The paper contributes a kernel, so L3 is the inference runtime that
+//! *hosts* that kernel the way the paper's motivation (quantized-LLM
+//! serving) implies: requests arrive, a dynamic batcher grows the GEMM's
+//! M dimension (performance-neutral for these kernels — paper Fig 8 — so
+//! batching is pure throughput win), a router picks the backend (native
+//! Rust kernels or the PJRT-compiled JAX/Pallas artifact), and an engine
+//! executes the ternary FFN. Python never appears on this path.
+
+pub mod request;
+pub mod metrics;
+pub mod batcher;
+pub mod engine;
+pub mod router;
+pub mod server;
+pub mod loadgen;
+pub mod trace;
+
+pub use batcher::{BatchPolicy, DynamicBatcher};
+pub use engine::{Backend, Engine};
+pub use loadgen::{LoadGenReport, LoadGenerator};
+pub use metrics::Metrics;
+pub use request::{InferenceRequest, InferenceResponse};
+pub use router::Router;
+pub use server::Server;
+pub use trace::{replay, OpenLoopReport, RequestTrace};

@@ -1,0 +1,73 @@
+//! Request/response types flowing through the coordinator.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// An inference request: one input row for a named model.
+#[derive(Debug)]
+pub struct InferenceRequest {
+    pub id: u64,
+    pub model: String,
+    pub input: Vec<f32>,
+    pub enqueued: Instant,
+    /// Channel the response is delivered on.
+    pub resp_tx: mpsc::Sender<InferenceResponse>,
+}
+
+/// The outcome of a request.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub id: u64,
+    pub output: Result<Vec<f32>, String>,
+    /// Time spent queued before batch assembly.
+    pub queue_us: u64,
+    /// Batch compute time (shared by all requests in the batch).
+    pub compute_us: u64,
+    /// Size of the batch this request rode in.
+    pub batch_size: usize,
+}
+
+impl InferenceRequest {
+    /// Create a request plus the receiver for its response.
+    pub fn new(
+        id: u64,
+        model: impl Into<String>,
+        input: Vec<f32>,
+    ) -> (InferenceRequest, mpsc::Receiver<InferenceResponse>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            InferenceRequest {
+                id,
+                model: model.into(),
+                input,
+                enqueued: Instant::now(),
+                resp_tx: tx,
+            },
+            rx,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_response_channel() {
+        let (req, rx) = InferenceRequest::new(7, "m", vec![1.0, 2.0]);
+        assert_eq!(req.id, 7);
+        req.resp_tx
+            .send(InferenceResponse {
+                id: 7,
+                output: Ok(vec![3.0]),
+                queue_us: 10,
+                compute_us: 20,
+                batch_size: 4,
+            })
+            .unwrap();
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.output.unwrap(), vec![3.0]);
+        assert_eq!(resp.batch_size, 4);
+    }
+}

@@ -1,0 +1,198 @@
+//! Router: maps model names to engines and owns each model's batcher +
+//! batch-loop thread. This is the coordinator's composition root.
+
+use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher};
+use crate::coordinator::engine::Engine;
+use crate::coordinator::request::{InferenceRequest, InferenceResponse};
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+struct ModelEntry {
+    engine: Arc<Engine>,
+    batcher: Arc<DynamicBatcher>,
+    loop_handle: Option<JoinHandle<()>>,
+}
+
+/// Multi-model router with per-model dynamic batching loops.
+pub struct Router {
+    models: BTreeMap<String, ModelEntry>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router {
+            models: BTreeMap::new(),
+            next_id: std::sync::atomic::AtomicU64::new(1),
+        }
+    }
+
+    /// Register an engine and start its batch loop.
+    pub fn register(&mut self, engine: Engine, policy: BatchPolicy) {
+        let name = engine.name.clone();
+        let engine = Arc::new(engine);
+        let batcher = Arc::new(DynamicBatcher::new(policy));
+        let loop_engine = Arc::clone(&engine);
+        let loop_batcher = Arc::clone(&batcher);
+        let handle = std::thread::Builder::new()
+            .name(format!("stgemm-batch-{name}"))
+            .spawn(move || {
+                while let Some(batch) = loop_batcher.next_batch() {
+                    loop_engine.run_batch(batch);
+                }
+            })
+            .expect("spawn batch loop");
+        self.models.insert(
+            name,
+            ModelEntry {
+                engine,
+                batcher,
+                loop_handle: Some(handle),
+            },
+        );
+    }
+
+    pub fn model_names(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn engine(&self, model: &str) -> Option<&Arc<Engine>> {
+        self.models.get(model).map(|e| &e.engine)
+    }
+
+    /// Submit an input row; returns the response receiver.
+    pub fn submit(
+        &self,
+        model: &str,
+        input: Vec<f32>,
+    ) -> Result<mpsc::Receiver<InferenceResponse>, String> {
+        let entry = self
+            .models
+            .get(model)
+            .ok_or_else(|| format!("unknown model '{model}'"))?;
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        entry
+            .engine
+            .metrics
+            .requests
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (req, rx) = InferenceRequest::new(id, model, input);
+        entry
+            .batcher
+            .submit(req)
+            .map_err(|_| "model is shutting down".to_string())?;
+        Ok(rx)
+    }
+
+    /// Submit and block for the response (with timeout).
+    pub fn infer_blocking(
+        &self,
+        model: &str,
+        input: Vec<f32>,
+        timeout: Duration,
+    ) -> Result<InferenceResponse, String> {
+        let rx = self.submit(model, input)?;
+        rx.recv_timeout(timeout)
+            .map_err(|e| format!("inference timed out/disconnected: {e}"))
+    }
+
+    /// Stop all batch loops, draining queues first.
+    pub fn shutdown(&mut self) {
+        for entry in self.models.values() {
+            entry.batcher.close();
+        }
+        for entry in self.models.values_mut() {
+            if let Some(h) = entry.loop_handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelConfig, TernaryMlp};
+
+    fn router() -> Router {
+        let cfg = ModelConfig::from_json(
+            r#"{"name":"m1","dims":[8,16,4],"sparsity":0.5,"seed":1}"#,
+        )
+        .unwrap();
+        let engine = Engine::new("m1", TernaryMlp::from_config(&cfg).unwrap());
+        let mut r = Router::new();
+        r.register(
+            engine,
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+            },
+        );
+        r
+    }
+
+    #[test]
+    fn end_to_end_single_request() {
+        let r = router();
+        let resp = r
+            .infer_blocking("m1", vec![0.5; 8], Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(resp.output.unwrap().len(), 4);
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let r = router();
+        assert!(r.submit("nope", vec![0.0; 8]).is_err());
+    }
+
+    #[test]
+    fn many_concurrent_requests_all_answered() {
+        let r = Arc::new(router());
+        let handles: Vec<_> = (0..16)
+            .map(|_| {
+                let r = Arc::clone(&r);
+                std::thread::spawn(move || {
+                    r.infer_blocking("m1", vec![0.25; 8], Duration::from_secs(5))
+                        .unwrap()
+                })
+            })
+            .collect();
+        let mut batched = 0usize;
+        for h in handles {
+            let resp = h.join().unwrap();
+            assert!(resp.output.is_ok());
+            if resp.batch_size > 1 {
+                batched += 1;
+            }
+        }
+        // With 16 parallel requests and max_batch 4, at least some batches
+        // should have formed (not a hard guarantee, but overwhelmingly
+        // likely; tolerate zero to avoid flakes on slow machines).
+        let _ = batched;
+    }
+
+    #[test]
+    fn shutdown_rejects_new_requests() {
+        let mut r = router();
+        r.shutdown();
+        assert!(r.submit("m1", vec![0.0; 8]).is_err());
+    }
+}

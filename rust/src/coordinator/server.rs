@@ -1,0 +1,371 @@
+//! HTTP/1.1 inference server (hand-rolled on std::net — no tokio offline).
+//!
+//! Endpoints:
+//! - `POST /infer`   body `{"model": "...", "input": [f32...]}` →
+//!   `{"id": n, "output": [...], "queue_us": n, "compute_us": n,
+//!     "batch_size": n}`
+//! - `GET  /metrics` per-model metrics snapshot
+//! - `GET  /healthz` liveness
+//!
+//! Connections are handled by a worker pool; each request blocks its
+//! worker while the dynamic batcher assembles and the engine executes —
+//! the thread-per-request model every pre-async HTTP stack used, sized by
+//! the pool.
+
+use crate::coordinator::router::Router;
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub addr: String,
+    pub workers: usize,
+    pub request_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 8,
+            request_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// The running server handle.
+pub struct Server {
+    pub local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start serving on background threads. The router must
+    /// outlive the server (Arc).
+    pub fn start(router: Arc<Router>, cfg: ServerConfig) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept_handle = std::thread::Builder::new()
+            .name("stgemm-accept".into())
+            .spawn(move || {
+                let pool = ThreadPool::new(cfg.workers);
+                loop {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let router = Arc::clone(&router);
+                            let timeout = cfg.request_timeout;
+                            pool.execute(move || {
+                                let _ = handle_connection(stream, &router, timeout);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Server {
+            local_addr,
+            stop,
+            accept_handle: Some(accept_handle),
+        })
+    }
+
+    /// Stop accepting connections and join the accept loop.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Parse one HTTP request and dispatch it.
+fn handle_connection(
+    stream: TcpStream,
+    router: &Router,
+    timeout: Duration,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    stream.set_nodelay(true)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut request_line = String::new();
+    reader.read_line(&mut request_line)?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+
+    // Headers → content length.
+    let mut content_length = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some(v) = line
+            .to_ascii_lowercase()
+            .strip_prefix("content-length:")
+            .map(|v| v.trim().to_string())
+        {
+            content_length = v.parse().unwrap_or(0);
+        }
+    }
+    const MAX_BODY: usize = 16 << 20;
+    let mut stream = stream;
+    if content_length > MAX_BODY {
+        return respond(&mut stream, 413, &err_json("body too large"));
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    let body = String::from_utf8_lossy(&body).into_owned();
+
+    match (method.as_str(), path.as_str()) {
+        ("POST", "/infer") => handle_infer(&mut stream, router, &body, timeout),
+        ("GET", "/metrics") => {
+            let mut metrics = Vec::new();
+            for name in router.model_names() {
+                let engine = router.engine(name).unwrap();
+                metrics.push(Json::obj(vec![
+                    ("model", Json::str(name)),
+                    ("metrics", engine.metrics.snapshot()),
+                ]));
+            }
+            respond(&mut stream, 200, &Json::arr(metrics).encode())
+        }
+        ("GET", "/healthz") => respond(&mut stream, 200, r#"{"status":"ok"}"#),
+        _ => respond(&mut stream, 404, &err_json("not found")),
+    }
+}
+
+fn handle_infer(
+    stream: &mut TcpStream,
+    router: &Router,
+    body: &str,
+    timeout: Duration,
+) -> std::io::Result<()> {
+    let parsed = match Json::parse(body) {
+        Ok(v) => v,
+        Err(e) => return respond(stream, 400, &err_json(&format!("bad json: {e}"))),
+    };
+    let model = match parsed.get("model").and_then(|m| m.as_str()) {
+        Some(m) => m.to_string(),
+        None => return respond(stream, 400, &err_json("missing 'model'")),
+    };
+    let input: Vec<f32> = match parsed.get("input").and_then(|i| i.as_arr()) {
+        Some(arr) => {
+            let mut v = Vec::with_capacity(arr.len());
+            for item in arr {
+                match item.as_f64() {
+                    Some(f) => v.push(f as f32),
+                    None => {
+                        return respond(stream, 400, &err_json("input must be numbers"))
+                    }
+                }
+            }
+            v
+        }
+        None => return respond(stream, 400, &err_json("missing 'input' array")),
+    };
+    match router.infer_blocking(&model, input, timeout) {
+        Ok(resp) => match resp.output {
+            Ok(out) => {
+                let json = Json::obj(vec![
+                    ("id", Json::num(resp.id as f64)),
+                    (
+                        "output",
+                        Json::arr(out.iter().map(|&v| Json::num(v as f64))),
+                    ),
+                    ("queue_us", Json::num(resp.queue_us as f64)),
+                    ("compute_us", Json::num(resp.compute_us as f64)),
+                    ("batch_size", Json::num(resp.batch_size as f64)),
+                ]);
+                respond(stream, 200, &json.encode())
+            }
+            Err(e) => respond(stream, 422, &err_json(&e)),
+        },
+        Err(e) => respond(stream, 503, &err_json(&e)),
+    }
+}
+
+fn err_json(msg: &str) -> String {
+    Json::obj(vec![("error", Json::str(msg))]).encode()
+}
+
+fn respond(stream: &mut TcpStream, status: u16, body: &str) -> std::io::Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
+        503 => "Service Unavailable",
+        _ => "Error",
+    };
+    let resp = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(resp.as_bytes())
+}
+
+/// Minimal blocking HTTP client for tests/examples/loadgen (no reqwest
+/// offline). Returns (status, body).
+pub fn http_request(
+    addr: &std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> std::io::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: stgemm\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let mut content_length = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        if line.trim_end().is_empty() {
+            break;
+        }
+        if let Some(v) = line
+            .to_ascii_lowercase()
+            .strip_prefix("content-length:")
+            .map(|v| v.trim().to_string())
+        {
+            content_length = v.parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok((status, String::from_utf8_lossy(&body).into_owned()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::coordinator::engine::Engine;
+    use crate::model::{ModelConfig, TernaryMlp};
+
+    fn start_server() -> (Server, Arc<Router>) {
+        let cfg = ModelConfig::from_json(
+            r#"{"name":"m1","dims":[8,16,4],"sparsity":0.5,"seed":1}"#,
+        )
+        .unwrap();
+        let engine = Engine::new("m1", TernaryMlp::from_config(&cfg).unwrap());
+        let mut router = Router::new();
+        router.register(
+            engine,
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+            },
+        );
+        let router = Arc::new(router);
+        let server = Server::start(Arc::clone(&router), ServerConfig::default()).unwrap();
+        (server, router)
+    }
+
+    #[test]
+    fn infer_roundtrip_over_http() {
+        let (server, _router) = start_server();
+        let body = format!(
+            r#"{{"model":"m1","input":[{}]}}"#,
+            vec!["0.5"; 8].join(",")
+        );
+        let (status, resp) = http_request(&server.local_addr, "POST", "/infer", &body).unwrap();
+        assert_eq!(status, 200, "{resp}");
+        let v = Json::parse(&resp).unwrap();
+        assert_eq!(v.get("output").unwrap().as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn health_and_metrics() {
+        let (server, _router) = start_server();
+        let (status, _) = http_request(&server.local_addr, "GET", "/healthz", "").unwrap();
+        assert_eq!(status, 200);
+        let (status, body) = http_request(&server.local_addr, "GET", "/metrics", "").unwrap();
+        assert_eq!(status, 200);
+        assert!(Json::parse(&body).is_ok());
+    }
+
+    #[test]
+    fn error_paths() {
+        let (server, _router) = start_server();
+        let a = server.local_addr;
+        assert_eq!(http_request(&a, "POST", "/infer", "not json").unwrap().0, 400);
+        assert_eq!(
+            http_request(&a, "POST", "/infer", r#"{"input":[1]}"#).unwrap().0,
+            400
+        );
+        assert_eq!(
+            http_request(&a, "POST", "/infer", r#"{"model":"zzz","input":[1]}"#)
+                .unwrap()
+                .0,
+            503
+        );
+        // wrong input width → engine-level 422
+        assert_eq!(
+            http_request(&a, "POST", "/infer", r#"{"model":"m1","input":[1,2]}"#)
+                .unwrap()
+                .0,
+            422
+        );
+        assert_eq!(http_request(&a, "GET", "/nope", "").unwrap().0, 404);
+    }
+
+    #[test]
+    fn concurrent_http_clients() {
+        let (server, _router) = start_server();
+        let addr = server.local_addr;
+        let handles: Vec<_> = (0..12)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let body = format!(
+                        r#"{{"model":"m1","input":[{}]}}"#,
+                        vec!["0.1"; 8].join(",")
+                    );
+                    http_request(&addr, "POST", "/infer", &body).unwrap().0
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 200);
+        }
+    }
+}

@@ -1,0 +1,237 @@
+//! Open-loop (trace-driven) load generation.
+//!
+//! Closed-loop clients (in [`crate::coordinator::loadgen`]) understate tail
+//! latency under overload; serving evaluations therefore also drive
+//! systems open-loop from an arrival trace. This module generates Poisson
+//! traces, records/replays them, and reports tail latency at a fixed
+//! offered rate.
+
+use crate::coordinator::router::Router;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// An arrival trace: request send offsets from t0, in microseconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestTrace {
+    pub offsets_us: Vec<u64>,
+}
+
+impl RequestTrace {
+    /// Poisson arrivals at `rate_rps` for `duration`; exponential
+    /// inter-arrival times from the seeded generator.
+    pub fn poisson(rate_rps: f64, duration: Duration, seed: u64) -> RequestTrace {
+        assert!(rate_rps > 0.0);
+        let mut rng = Rng::new(seed);
+        let mut offsets = Vec::new();
+        let mut t = 0.0f64;
+        let horizon = duration.as_secs_f64();
+        loop {
+            // Exponential(-ln U / λ); clamp U away from 0.
+            let u = f64::from(rng.f32()).max(1e-9);
+            t += -u.ln() / rate_rps;
+            if t >= horizon {
+                break;
+            }
+            offsets.push((t * 1e6) as u64);
+        }
+        RequestTrace {
+            offsets_us: offsets,
+        }
+    }
+
+    /// Constant-rate arrivals (deterministic spacing).
+    pub fn uniform(rate_rps: f64, duration: Duration) -> RequestTrace {
+        let period_us = 1e6 / rate_rps;
+        let count = (duration.as_secs_f64() * rate_rps) as usize;
+        RequestTrace {
+            offsets_us: (0..count).map(|i| (i as f64 * period_us) as u64).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.offsets_us.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.offsets_us.is_empty()
+    }
+
+    /// Achieved offered rate of the trace.
+    pub fn offered_rps(&self) -> f64 {
+        match (self.offsets_us.first(), self.offsets_us.last()) {
+            (Some(_), Some(&last)) if last > 0 => {
+                self.offsets_us.len() as f64 / (last as f64 / 1e6)
+            }
+            _ => 0.0,
+        }
+    }
+
+    // ---- persistence (JSON) ------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::arr(self.offsets_us.iter().map(|&o| Json::num(o as f64)))
+    }
+
+    pub fn from_json(v: &Json) -> Result<RequestTrace, String> {
+        let arr = v.as_arr().ok_or("trace must be an array")?;
+        let mut offsets = Vec::with_capacity(arr.len());
+        let mut prev = 0u64;
+        for item in arr {
+            let o = item
+                .as_f64()
+                .filter(|&f| f >= 0.0)
+                .ok_or("trace offsets must be non-negative numbers")? as u64;
+            if o < prev {
+                return Err("trace offsets must be non-decreasing".into());
+            }
+            prev = o;
+            offsets.push(o);
+        }
+        Ok(RequestTrace {
+            offsets_us: offsets,
+        })
+    }
+}
+
+/// Result of an open-loop replay.
+#[derive(Debug, Clone)]
+pub struct OpenLoopReport {
+    pub offered: usize,
+    pub completed: usize,
+    pub errors: usize,
+    pub offered_rps: f64,
+    pub latency_us_p50: u64,
+    pub latency_us_p99: u64,
+    pub latency_us_max: u64,
+}
+
+impl OpenLoopReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "open-loop: offered {} ({:.0} req/s) completed {} errors {} | latency µs p50={} p99={} max={}",
+            self.offered,
+            self.offered_rps,
+            self.completed,
+            self.errors,
+            self.latency_us_p50,
+            self.latency_us_p99,
+            self.latency_us_max
+        )
+    }
+}
+
+/// Replay a trace against the router: submit each request at its offset
+/// (non-blocking), then collect all responses.
+pub fn replay(
+    router: &Arc<Router>,
+    trace: &RequestTrace,
+    model: &str,
+    d_in: usize,
+    seed: u64,
+) -> OpenLoopReport {
+    let t0 = Instant::now();
+    let mut rng = Rng::new(seed);
+    let mut pending = Vec::with_capacity(trace.len());
+    for &off_us in &trace.offsets_us {
+        let target = Duration::from_micros(off_us);
+        let now = t0.elapsed();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let input: Vec<f32> = (0..d_in).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let sent = Instant::now();
+        match router.submit(model, input) {
+            Ok(rx) => pending.push((sent, rx)),
+            Err(_) => pending.push((sent, {
+                // Synthesize a closed channel to count as error below.
+                let (_tx, rx) = std::sync::mpsc::channel();
+                rx
+            })),
+        }
+    }
+    let mut lats = Vec::with_capacity(pending.len());
+    let mut errors = 0usize;
+    for (sent, rx) in pending {
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(resp) if resp.output.is_ok() => {
+                lats.push(sent.elapsed().as_micros() as u64)
+            }
+            _ => errors += 1,
+        }
+    }
+    lats.sort_unstable();
+    let pct = |q: f64| {
+        if lats.is_empty() {
+            0
+        } else {
+            lats[((q / 100.0 * lats.len() as f64).ceil() as usize).clamp(1, lats.len()) - 1]
+        }
+    };
+    OpenLoopReport {
+        offered: trace.len(),
+        completed: lats.len(),
+        errors,
+        offered_rps: trace.offered_rps(),
+        latency_us_p50: pct(50.0),
+        latency_us_p99: pct(99.0),
+        latency_us_max: lats.last().copied().unwrap_or(0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BatchPolicy, Engine};
+    use crate::model::{ModelConfig, TernaryMlp};
+
+    #[test]
+    fn poisson_trace_statistics() {
+        let trace = RequestTrace::poisson(1000.0, Duration::from_secs(2), 7);
+        // ~2000 expected; allow generous slack.
+        assert!(trace.len() > 1200 && trace.len() < 2800, "len {}", trace.len());
+        assert!(trace.offsets_us.windows(2).all(|w| w[0] <= w[1]));
+        let rate = trace.offered_rps();
+        assert!((rate - 1000.0).abs() < 250.0, "rate {rate}");
+    }
+
+    #[test]
+    fn uniform_trace_spacing() {
+        let trace = RequestTrace::uniform(100.0, Duration::from_secs(1));
+        assert_eq!(trace.len(), 100);
+        assert_eq!(trace.offsets_us[1] - trace.offsets_us[0], 10_000);
+    }
+
+    #[test]
+    fn trace_json_roundtrip() {
+        let trace = RequestTrace::poisson(500.0, Duration::from_millis(200), 3);
+        let decoded = RequestTrace::from_json(&trace.to_json()).unwrap();
+        assert_eq!(decoded, trace);
+        assert!(RequestTrace::from_json(&Json::parse("[5, 1]").unwrap()).is_err());
+    }
+
+    #[test]
+    fn replay_completes_all() {
+        let cfg = ModelConfig::from_json(
+            r#"{"name":"ol","dims":[8,16,4],"sparsity":0.5,"seed":2}"#,
+        )
+        .unwrap();
+        let mut router = Router::new();
+        router.register(
+            Engine::new("ol", TernaryMlp::from_config(&cfg).unwrap()),
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_micros(300),
+            },
+        );
+        let router = Arc::new(router);
+        let trace = RequestTrace::uniform(2000.0, Duration::from_millis(50)); // 100 reqs
+        let report = replay(&router, &trace, "ol", 8, 5);
+        assert_eq!(report.offered, 100);
+        assert_eq!(report.completed, 100);
+        assert_eq!(report.errors, 0);
+        assert!(report.latency_us_p50 <= report.latency_us_p99);
+        assert!(!report.summary().is_empty());
+    }
+}

@@ -1,0 +1,233 @@
+//! BlockedTCSC (paper §3 "Blocking", Fig 5).
+//!
+//! The K rows are split into blocks of size `B`; the format stores, for
+//! every block in turn, the TCSC arrays of every column restricted to that
+//! block's row range. Iterating block-major constrains all `X[row_index]`
+//! accesses within a processing phase to a window of `B` elements,
+//! shrinking the working set of X from K to B (paper-optimal B = 4096).
+
+use crate::formats::{num_blocks, SparseFormat};
+use crate::ternary::TernaryMatrix;
+
+/// Blocked sign-split CSC. Row indices are stored *absolute* (within
+/// `[b·B, (b+1)·B)` for block `b`) so kernels index X directly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockedTcsc {
+    k: usize,
+    n: usize,
+    /// Rows per block.
+    pub block_size: usize,
+    /// Per (block, column) start pointers for +1s; length nblocks·N + 1,
+    /// block-major (`ptr[b·N + j]`).
+    pub col_start_pos: Vec<u32>,
+    /// Per (block, column) start pointers for -1s; same layout.
+    pub col_start_neg: Vec<u32>,
+    /// +1 row indices, block-major then column-wise, ascending per segment.
+    pub row_index_pos: Vec<u32>,
+    /// -1 row indices, same layout.
+    pub row_index_neg: Vec<u32>,
+}
+
+impl BlockedTcsc {
+    /// Build with the given block size (the paper uses `min(K, 4096)`).
+    pub fn from_ternary(w: &TernaryMatrix, block_size: usize) -> BlockedTcsc {
+        let (k, n) = (w.k(), w.n());
+        let nblocks = num_blocks(k.max(1), block_size);
+        let mut col_start_pos = Vec::with_capacity(nblocks * n + 1);
+        let mut col_start_neg = Vec::with_capacity(nblocks * n + 1);
+        let mut row_index_pos = Vec::new();
+        let mut row_index_neg = Vec::new();
+        col_start_pos.push(0);
+        col_start_neg.push(0);
+        for b in 0..nblocks {
+            let lo = b * block_size;
+            let hi = ((b + 1) * block_size).min(k);
+            for j in 0..n {
+                for i in lo..hi {
+                    match w.get(i, j) {
+                        1 => row_index_pos.push(i as u32),
+                        -1 => row_index_neg.push(i as u32),
+                        _ => {}
+                    }
+                }
+                col_start_pos.push(row_index_pos.len() as u32);
+                col_start_neg.push(row_index_neg.len() as u32);
+            }
+        }
+        let f = BlockedTcsc {
+            k,
+            n,
+            block_size,
+            col_start_pos,
+            col_start_neg,
+            row_index_pos,
+            row_index_neg,
+        };
+        debug_assert_eq!(f.validate(), Ok(()));
+        f
+    }
+
+    /// Number of row blocks.
+    pub fn nblocks(&self) -> usize {
+        num_blocks(self.k.max(1), self.block_size)
+    }
+
+    /// Positive row indices for (block `b`, column `j`).
+    #[inline]
+    pub fn block_col_pos(&self, b: usize, j: usize) -> &[u32] {
+        let p = b * self.n + j;
+        &self.row_index_pos[self.col_start_pos[p] as usize..self.col_start_pos[p + 1] as usize]
+    }
+
+    /// Negative row indices for (block `b`, column `j`).
+    #[inline]
+    pub fn block_col_neg(&self, b: usize, j: usize) -> &[u32] {
+        let p = b * self.n + j;
+        &self.row_index_neg[self.col_start_neg[p] as usize..self.col_start_neg[p + 1] as usize]
+    }
+}
+
+impl SparseFormat for BlockedTcsc {
+    const NAME: &'static str = "BlockedTCSC";
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn nnz(&self) -> usize {
+        self.row_index_pos.len() + self.row_index_neg.len()
+    }
+
+    fn bytes(&self) -> usize {
+        std::mem::size_of::<u32>()
+            * (self.col_start_pos.len()
+                + self.col_start_neg.len()
+                + self.row_index_pos.len()
+                + self.row_index_neg.len())
+    }
+
+    fn to_dense(&self) -> TernaryMatrix {
+        let mut w = TernaryMatrix::zeros(self.k, self.n);
+        for b in 0..self.nblocks() {
+            for j in 0..self.n {
+                for &i in self.block_col_pos(b, j) {
+                    w.set(i as usize, j, 1);
+                }
+                for &i in self.block_col_neg(b, j) {
+                    w.set(i as usize, j, -1);
+                }
+            }
+        }
+        w
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        let nblocks = self.nblocks();
+        let expect_ptrs = nblocks * self.n + 1;
+        if self.col_start_pos.len() != expect_ptrs || self.col_start_neg.len() != expect_ptrs {
+            return Err("pointer array length mismatch".into());
+        }
+        for b in 0..nblocks {
+            let lo = (b * self.block_size) as u32;
+            let hi = (((b + 1) * self.block_size).min(self.k)) as u32;
+            for j in 0..self.n {
+                for (label, seg) in [
+                    ("pos", self.block_col_pos(b, j)),
+                    ("neg", self.block_col_neg(b, j)),
+                ] {
+                    for w in seg.windows(2) {
+                        if w[0] >= w[1] {
+                            return Err(format!(
+                                "{label}: block {b} col {j} not strictly ascending"
+                            ));
+                        }
+                    }
+                    for &i in seg {
+                        if i < lo || i >= hi {
+                            return Err(format!(
+                                "{label}: block {b} col {j} index {i} outside [{lo},{hi})"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_various_block_sizes() {
+        let w = TernaryMatrix::random(100, 24, 0.25, 31);
+        for bs in [1, 2, 16, 50, 100, 128, 4096] {
+            let f = BlockedTcsc::from_ternary(&w, bs);
+            assert_eq!(f.to_dense(), w, "block size {bs}");
+            f.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn indices_constrained_to_block_window() {
+        let w = TernaryMatrix::random(64, 8, 0.5, 7);
+        let f = BlockedTcsc::from_ternary(&w, 16);
+        assert_eq!(f.nblocks(), 4);
+        for b in 0..4 {
+            for j in 0..8 {
+                for &i in f.block_col_pos(b, j) {
+                    assert!((i as usize) / 16 == b);
+                }
+                for &i in f.block_col_neg(b, j) {
+                    assert!((i as usize) / 16 == b);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_block_equals_tcsc_content() {
+        use crate::formats::Tcsc;
+        let w = TernaryMatrix::random(32, 16, 0.5, 9);
+        let t = Tcsc::from_ternary(&w);
+        let b = BlockedTcsc::from_ternary(&w, 32); // one block
+        assert_eq!(b.row_index_pos, t.row_index_pos);
+        assert_eq!(b.row_index_neg, t.row_index_neg);
+    }
+
+    #[test]
+    fn nnz_preserved() {
+        let w = TernaryMatrix::random(77, 13, 0.125, 3);
+        let f = BlockedTcsc::from_ternary(&w, 10);
+        assert_eq!(f.nnz(), w.nnz());
+    }
+
+    #[test]
+    fn block_size_larger_than_k() {
+        let w = TernaryMatrix::random(8, 8, 0.5, 4);
+        let f = BlockedTcsc::from_ternary(&w, 4096);
+        assert_eq!(f.nblocks(), 1);
+        assert_eq!(f.to_dense(), w);
+    }
+
+    #[test]
+    fn fig5_style_example() {
+        // B=2 over a 4-row matrix: block 0 holds rows 0-1, block 1 rows 2-3.
+        let mut w = TernaryMatrix::zeros(4, 2);
+        w.set(0, 0, 1);
+        w.set(3, 0, -1);
+        w.set(1, 1, 1);
+        w.set(2, 1, 1);
+        let f = BlockedTcsc::from_ternary(&w, 2);
+        assert_eq!(f.block_col_pos(0, 0), &[0]);
+        assert_eq!(f.block_col_pos(0, 1), &[1]);
+        assert_eq!(f.block_col_pos(1, 1), &[2]);
+        assert_eq!(f.block_col_neg(1, 0), &[3]);
+    }
+}

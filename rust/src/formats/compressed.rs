@@ -1,0 +1,196 @@
+//! Value compression (paper §3 "Value Compression") — five ternary entries
+//! packed into one byte as a 5-digit base-3 number (3^5 = 243 ≤ 2^8,
+//! 5.08 % wasted code space). Decoding goes through a 243-entry lookup
+//! table that fits in L1 and costs zero flops.
+//!
+//! The paper prototyped this and dropped it (wins at s = 50 %, loses below
+//! 25 % because packed zeros waste work); we keep it for the ablation bench
+//! that reproduces exactly that crossover.
+
+use crate::formats::SparseFormat;
+use crate::ternary::TernaryMatrix;
+
+/// Number of ternary digits per byte code.
+pub const DIGITS: usize = 5;
+/// Number of valid codes (3^5).
+pub const CODES: usize = 243;
+
+/// The 243-entry decode LUT: code → five `{-1,0,+1}` digits
+/// (least-significant digit first = lowest row index first).
+pub fn decode_lut() -> &'static [[i8; DIGITS]; CODES] {
+    static LUT: std::sync::OnceLock<[[i8; DIGITS]; CODES]> = std::sync::OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut lut = [[0i8; DIGITS]; CODES];
+        for (code, entry) in lut.iter_mut().enumerate() {
+            let mut rest = code;
+            for d in entry.iter_mut() {
+                *d = (rest % 3) as i8 - 1; // digit 0 → -1, 1 → 0, 2 → +1
+                rest /= 3;
+            }
+        }
+        lut
+    })
+}
+
+/// Encode five ternary values (low row first) into a byte code.
+pub fn encode5(vals: &[i8; DIGITS]) -> u8 {
+    let mut code = 0usize;
+    for &v in vals.iter().rev() {
+        debug_assert!((-1..=1).contains(&v));
+        code = code * 3 + (v + 1) as usize;
+    }
+    code as u8
+}
+
+/// Column-major packed ternary matrix: each column stores `ceil(K/5)`
+/// byte codes covering rows `[5t, 5t+5)` (tail padded with zeros).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressedTernary {
+    k: usize,
+    n: usize,
+    /// Codes per column.
+    pub codes_per_col: usize,
+    /// Column-major code array, length `n · codes_per_col`.
+    pub codes: Vec<u8>,
+    nnz: usize,
+}
+
+impl CompressedTernary {
+    pub fn from_ternary(w: &TernaryMatrix) -> CompressedTernary {
+        let (k, n) = (w.k(), w.n());
+        let codes_per_col = k.div_ceil(DIGITS);
+        let mut codes = Vec::with_capacity(n * codes_per_col);
+        for j in 0..n {
+            for t in 0..codes_per_col {
+                let mut vals = [0i8; DIGITS];
+                for (d, val) in vals.iter_mut().enumerate() {
+                    let i = t * DIGITS + d;
+                    if i < k {
+                        *val = w.get(i, j);
+                    }
+                }
+                codes.push(encode5(&vals));
+            }
+        }
+        let f = CompressedTernary {
+            k,
+            n,
+            codes_per_col,
+            codes,
+            nnz: w.nnz(),
+        };
+        debug_assert_eq!(f.validate(), Ok(()));
+        f
+    }
+
+    /// Codes of column `j`.
+    #[inline]
+    pub fn col_codes(&self, j: usize) -> &[u8] {
+        &self.codes[j * self.codes_per_col..(j + 1) * self.codes_per_col]
+    }
+}
+
+impl SparseFormat for CompressedTernary {
+    const NAME: &'static str = "CompressedTernary";
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    fn bytes(&self) -> usize {
+        self.codes.len()
+    }
+
+    fn to_dense(&self) -> TernaryMatrix {
+        let lut = decode_lut();
+        let mut w = TernaryMatrix::zeros(self.k, self.n);
+        for j in 0..self.n {
+            for (t, &code) in self.col_codes(j).iter().enumerate() {
+                let digits = &lut[code as usize];
+                for (d, &v) in digits.iter().enumerate() {
+                    let i = t * DIGITS + d;
+                    if i < self.k && v != 0 {
+                        w.set(i, j, v);
+                    }
+                }
+            }
+        }
+        w
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if self.codes.len() != self.n * self.codes_per_col {
+            return Err("code array length mismatch".into());
+        }
+        let lut = decode_lut();
+        // Tail codes must not place values beyond K.
+        if self.k % DIGITS != 0 && self.codes_per_col > 0 {
+            let valid = self.k % DIGITS;
+            for j in 0..self.n {
+                let tail = self.col_codes(j)[self.codes_per_col - 1];
+                let digits = &lut[tail as usize];
+                if digits[valid..].iter().any(|&v| v != 0) {
+                    return Err(format!("column {j}: tail code writes beyond K"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lut_inverts_encode() {
+        let lut = decode_lut();
+        for code in 0..CODES {
+            assert_eq!(encode5(&lut[code]) as usize, code);
+        }
+    }
+
+    #[test]
+    fn encode_examples() {
+        assert_eq!(encode5(&[0, 0, 0, 0, 0]), 121); // all-zero = middle code
+        assert_eq!(encode5(&[-1, -1, -1, -1, -1]), 0);
+        assert_eq!(encode5(&[1, 1, 1, 1, 1]), 242);
+        assert_eq!(encode5(&[1, 0, 0, 0, 0]), 122); // +1 in lowest digit
+    }
+
+    #[test]
+    fn roundtrip_random() {
+        for &s in &crate::PAPER_SPARSITIES {
+            let w = TernaryMatrix::random(53, 17, s, 61); // K not divisible by 5
+            let f = CompressedTernary::from_ternary(&w);
+            assert_eq!(f.to_dense(), w, "s {s}");
+            f.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn bytes_are_one_per_five_rows() {
+        let w = TernaryMatrix::random(100, 10, 0.5, 3);
+        let f = CompressedTernary::from_ternary(&w);
+        assert_eq!(f.bytes(), 10 * 20);
+        // vs TCSC at 4 bytes/index: compression is large.
+        use crate::formats::Tcsc;
+        assert!(f.bytes() < Tcsc::from_ternary(&w).bytes());
+    }
+
+    #[test]
+    fn k_multiple_of_five() {
+        let w = TernaryMatrix::random(25, 4, 0.25, 9);
+        let f = CompressedTernary::from_ternary(&w);
+        assert_eq!(f.codes_per_col, 5);
+        assert_eq!(f.to_dense(), w);
+    }
+}

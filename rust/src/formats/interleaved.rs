@@ -1,0 +1,234 @@
+//! InterleavedTCSC (paper §3 "Interleaving", Fig 7).
+//!
+//! Positive and negative row indices of each column are merged into one
+//! stream of alternating sign groups of size `G` (paper-optimal G = 4):
+//! `[G positives][G negatives][G positives]…`. Indices that cannot be
+//! matched into full ± group pairs are stored separately as a positive
+//! remainder then a negative remainder. One stream means one inner loop —
+//! no pos→neg pass restart trashing the X working set.
+
+use crate::formats::SparseFormat;
+use crate::ternary::TernaryMatrix;
+
+/// Interleaved sign-grouped CSC.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InterleavedTcsc {
+    k: usize,
+    n: usize,
+    /// Indices per sign per group (G).
+    pub group: usize,
+    /// All row indices, column-wise: per column `[interleaved | rest-pos |
+    /// rest-neg]`.
+    pub all_indices: Vec<u32>,
+    /// Segment pointers, 3 per column + 1: for column `j`,
+    /// interleaved = `[ptr[3j], ptr[3j+1])`, rest-pos = `[ptr[3j+1],
+    /// ptr[3j+2])`, rest-neg = `[ptr[3j+2], ptr[3j+3])`.
+    pub col_segment_ptr: Vec<u32>,
+}
+
+impl InterleavedTcsc {
+    /// Build with sign-group size `group` (paper uses 4).
+    pub fn from_ternary(w: &TernaryMatrix, group: usize) -> InterleavedTcsc {
+        assert!(group >= 1, "group size must be >= 1");
+        let (k, n) = (w.k(), w.n());
+        let mut all_indices = Vec::new();
+        let mut col_segment_ptr = Vec::with_capacity(3 * n + 1);
+        col_segment_ptr.push(0);
+        for j in 0..n {
+            let pos = w.col_positives(j);
+            let neg = w.col_negatives(j);
+            let full_groups = (pos.len() / group).min(neg.len() / group);
+            // Interleaved region: alternating [G pos][G neg] runs.
+            for g in 0..full_groups {
+                all_indices.extend_from_slice(&pos[g * group..(g + 1) * group]);
+                all_indices.extend_from_slice(&neg[g * group..(g + 1) * group]);
+            }
+            col_segment_ptr.push(all_indices.len() as u32);
+            // Remaining positives.
+            all_indices.extend_from_slice(&pos[full_groups * group..]);
+            col_segment_ptr.push(all_indices.len() as u32);
+            // Remaining negatives.
+            all_indices.extend_from_slice(&neg[full_groups * group..]);
+            col_segment_ptr.push(all_indices.len() as u32);
+        }
+        let f = InterleavedTcsc {
+            k,
+            n,
+            group,
+            all_indices,
+            col_segment_ptr,
+        };
+        debug_assert_eq!(f.validate(), Ok(()));
+        f
+    }
+
+    /// Interleaved segment of column `j` (length multiple of `2·group`).
+    #[inline]
+    pub fn col_interleaved(&self, j: usize) -> &[u32] {
+        &self.all_indices
+            [self.col_segment_ptr[3 * j] as usize..self.col_segment_ptr[3 * j + 1] as usize]
+    }
+
+    /// Remaining positive indices of column `j`.
+    #[inline]
+    pub fn col_rest_pos(&self, j: usize) -> &[u32] {
+        &self.all_indices
+            [self.col_segment_ptr[3 * j + 1] as usize..self.col_segment_ptr[3 * j + 2] as usize]
+    }
+
+    /// Remaining negative indices of column `j`.
+    #[inline]
+    pub fn col_rest_neg(&self, j: usize) -> &[u32] {
+        &self.all_indices
+            [self.col_segment_ptr[3 * j + 2] as usize..self.col_segment_ptr[3 * j + 3] as usize]
+    }
+}
+
+impl SparseFormat for InterleavedTcsc {
+    const NAME: &'static str = "InterleavedTCSC";
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn nnz(&self) -> usize {
+        self.all_indices.len()
+    }
+
+    fn bytes(&self) -> usize {
+        std::mem::size_of::<u32>() * (self.all_indices.len() + self.col_segment_ptr.len())
+    }
+
+    fn to_dense(&self) -> TernaryMatrix {
+        let mut w = TernaryMatrix::zeros(self.k, self.n);
+        let g = self.group;
+        for j in 0..self.n {
+            let inter = self.col_interleaved(j);
+            for (chunk_idx, chunk) in inter.chunks(g).enumerate() {
+                let sign = if chunk_idx % 2 == 0 { 1 } else { -1 };
+                for &i in chunk {
+                    w.set(i as usize, j, sign);
+                }
+            }
+            for &i in self.col_rest_pos(j) {
+                w.set(i as usize, j, 1);
+            }
+            for &i in self.col_rest_neg(j) {
+                w.set(i as usize, j, -1);
+            }
+        }
+        w
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if self.col_segment_ptr.len() != 3 * self.n + 1 {
+            return Err("segment pointer length mismatch".into());
+        }
+        if self.col_segment_ptr[0] != 0
+            || *self.col_segment_ptr.last().unwrap() as usize != self.all_indices.len()
+        {
+            return Err("segment pointer endpoints wrong".into());
+        }
+        for w in self.col_segment_ptr.windows(2) {
+            if w[0] > w[1] {
+                return Err("segment pointers not monotone".into());
+            }
+        }
+        for j in 0..self.n {
+            let inter = self.col_interleaved(j);
+            if inter.len() % (2 * self.group) != 0 {
+                return Err(format!(
+                    "column {j}: interleaved length {} not a multiple of 2G",
+                    inter.len()
+                ));
+            }
+            for &i in self
+                .col_interleaved(j)
+                .iter()
+                .chain(self.col_rest_pos(j))
+                .chain(self.col_rest_neg(j))
+            {
+                if i as usize >= self.k {
+                    return Err(format!("column {j}: index {i} out of range"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_group_sizes() {
+        let w = TernaryMatrix::random(96, 32, 0.5, 41);
+        for g in [1, 2, 4, 8] {
+            let f = InterleavedTcsc::from_ternary(&w, g);
+            assert_eq!(f.to_dense(), w, "group {g}");
+            f.validate().unwrap();
+            assert_eq!(f.nnz(), w.nnz());
+        }
+    }
+
+    #[test]
+    fn interleaved_region_alternates_signs() {
+        let w = TernaryMatrix::random(128, 4, 0.5, 5);
+        let f = InterleavedTcsc::from_ternary(&w, 2);
+        for j in 0..4 {
+            let inter = f.col_interleaved(j);
+            for (ci, chunk) in inter.chunks(2).enumerate() {
+                let want = if ci % 2 == 0 { 1 } else { -1 };
+                for &i in chunk {
+                    assert_eq!(w.get(i as usize, j), want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn remainders_hold_unmatched() {
+        // Column with 3 pos, 1 neg, group 2 → 0 full group pairs:
+        // everything in remainders.
+        let mut w = TernaryMatrix::zeros(8, 1);
+        w.set(0, 0, 1);
+        w.set(2, 0, 1);
+        w.set(4, 0, 1);
+        w.set(6, 0, -1);
+        let f = InterleavedTcsc::from_ternary(&w, 2);
+        assert!(f.col_interleaved(0).is_empty());
+        assert_eq!(f.col_rest_pos(0), &[0, 2, 4]);
+        assert_eq!(f.col_rest_neg(0), &[6]);
+        assert_eq!(f.to_dense(), w);
+    }
+
+    #[test]
+    fn fig7_style_grouping() {
+        // Group 2: col with pos {0,1,4} and neg {2,3,5} → interleave
+        // [0,1][2,3]; remainders pos [4], neg [5].
+        let mut w = TernaryMatrix::zeros(8, 1);
+        for i in [0, 1, 4] {
+            w.set(i, 0, 1);
+        }
+        for i in [2, 3, 5] {
+            w.set(i, 0, -1);
+        }
+        let f = InterleavedTcsc::from_ternary(&w, 2);
+        assert_eq!(f.col_interleaved(0), &[0, 1, 2, 3]);
+        assert_eq!(f.col_rest_pos(0), &[4]);
+        assert_eq!(f.col_rest_neg(0), &[5]);
+    }
+
+    #[test]
+    fn sparse_column_edge_cases() {
+        let w = TernaryMatrix::zeros(16, 3); // all-zero columns
+        let f = InterleavedTcsc::from_ternary(&w, 4);
+        assert_eq!(f.nnz(), 0);
+        assert_eq!(f.to_dense(), w);
+    }
+}

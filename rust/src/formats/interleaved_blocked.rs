@@ -1,0 +1,240 @@
+//! InterleavedBlockedTCSC (paper §3 "Interleaving + Blocking") — the
+//! paper's best scalar format: the K rows are blocked (B = 4096) for X
+//! locality *and* each blocked column stores one interleaved index stream
+//! with three segments (interleaved ± groups, remaining positives,
+//! remaining negatives).
+
+use crate::formats::{num_blocks, SparseFormat};
+use crate::ternary::TernaryMatrix;
+
+/// Blocked + interleaved sign-grouped CSC. Segment pointers are laid out
+/// block-major: for block `b`, column `j`, the three segments start at
+/// `col_segment_ptr[3·(b·N + j) + {0,1,2}]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InterleavedBlockedTcsc {
+    k: usize,
+    n: usize,
+    pub block_size: usize,
+    /// Indices per sign per interleave group (G).
+    pub group: usize,
+    /// Single index stream: per (block, column) `[interleaved | rest-pos |
+    /// rest-neg]`, block-major.
+    pub all_indices: Vec<u32>,
+    /// Segment pointers, 3 per (block, column) + 1.
+    pub col_segment_ptr: Vec<u32>,
+}
+
+impl InterleavedBlockedTcsc {
+    /// Build with block size `B` (paper: `min(K, 4096)`) and group `G`
+    /// (paper: 4 — with unroll factor F, F/2 per sign).
+    pub fn from_ternary(w: &TernaryMatrix, block_size: usize, group: usize) -> Self {
+        assert!(group >= 1 && block_size >= 1);
+        let (k, n) = (w.k(), w.n());
+        let nblocks = num_blocks(k.max(1), block_size);
+        let mut all_indices = Vec::new();
+        let mut col_segment_ptr = Vec::with_capacity(3 * nblocks * n + 1);
+        col_segment_ptr.push(0);
+        // Scratch per-column-per-block sign lists.
+        let mut pos: Vec<u32> = Vec::new();
+        let mut neg: Vec<u32> = Vec::new();
+        for b in 0..nblocks {
+            let lo = b * block_size;
+            let hi = ((b + 1) * block_size).min(k);
+            for j in 0..n {
+                pos.clear();
+                neg.clear();
+                for i in lo..hi {
+                    match w.get(i, j) {
+                        1 => pos.push(i as u32),
+                        -1 => neg.push(i as u32),
+                        _ => {}
+                    }
+                }
+                let full = (pos.len() / group).min(neg.len() / group);
+                for g in 0..full {
+                    all_indices.extend_from_slice(&pos[g * group..(g + 1) * group]);
+                    all_indices.extend_from_slice(&neg[g * group..(g + 1) * group]);
+                }
+                col_segment_ptr.push(all_indices.len() as u32);
+                all_indices.extend_from_slice(&pos[full * group..]);
+                col_segment_ptr.push(all_indices.len() as u32);
+                all_indices.extend_from_slice(&neg[full * group..]);
+                col_segment_ptr.push(all_indices.len() as u32);
+            }
+        }
+        let f = InterleavedBlockedTcsc {
+            k,
+            n,
+            block_size,
+            group,
+            all_indices,
+            col_segment_ptr,
+        };
+        debug_assert_eq!(f.validate(), Ok(()));
+        f
+    }
+
+    pub fn nblocks(&self) -> usize {
+        num_blocks(self.k.max(1), self.block_size)
+    }
+
+    #[inline]
+    fn base(&self, b: usize, j: usize) -> usize {
+        3 * (b * self.n + j)
+    }
+
+    /// Interleaved segment for (block, column).
+    #[inline]
+    pub fn seg_interleaved(&self, b: usize, j: usize) -> &[u32] {
+        let p = self.base(b, j);
+        &self.all_indices[self.col_segment_ptr[p] as usize..self.col_segment_ptr[p + 1] as usize]
+    }
+
+    /// Remaining-positive segment for (block, column).
+    #[inline]
+    pub fn seg_rest_pos(&self, b: usize, j: usize) -> &[u32] {
+        let p = self.base(b, j);
+        &self.all_indices
+            [self.col_segment_ptr[p + 1] as usize..self.col_segment_ptr[p + 2] as usize]
+    }
+
+    /// Remaining-negative segment for (block, column).
+    #[inline]
+    pub fn seg_rest_neg(&self, b: usize, j: usize) -> &[u32] {
+        let p = self.base(b, j);
+        &self.all_indices
+            [self.col_segment_ptr[p + 2] as usize..self.col_segment_ptr[p + 3] as usize]
+    }
+}
+
+impl SparseFormat for InterleavedBlockedTcsc {
+    const NAME: &'static str = "InterleavedBlockedTCSC";
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn nnz(&self) -> usize {
+        self.all_indices.len()
+    }
+
+    fn bytes(&self) -> usize {
+        std::mem::size_of::<u32>() * (self.all_indices.len() + self.col_segment_ptr.len())
+    }
+
+    fn to_dense(&self) -> TernaryMatrix {
+        let mut w = TernaryMatrix::zeros(self.k, self.n);
+        for b in 0..self.nblocks() {
+            for j in 0..self.n {
+                for (ci, chunk) in self.seg_interleaved(b, j).chunks(self.group).enumerate() {
+                    let sign = if ci % 2 == 0 { 1 } else { -1 };
+                    for &i in chunk {
+                        w.set(i as usize, j, sign);
+                    }
+                }
+                for &i in self.seg_rest_pos(b, j) {
+                    w.set(i as usize, j, 1);
+                }
+                for &i in self.seg_rest_neg(b, j) {
+                    w.set(i as usize, j, -1);
+                }
+            }
+        }
+        w
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        let nblocks = self.nblocks();
+        if self.col_segment_ptr.len() != 3 * nblocks * self.n + 1 {
+            return Err("segment pointer length mismatch".into());
+        }
+        for w in self.col_segment_ptr.windows(2) {
+            if w[0] > w[1] {
+                return Err("segment pointers not monotone".into());
+            }
+        }
+        if *self.col_segment_ptr.last().unwrap() as usize != self.all_indices.len() {
+            return Err("segment pointer end mismatch".into());
+        }
+        for b in 0..nblocks {
+            let lo = (b * self.block_size) as u32;
+            let hi = (((b + 1) * self.block_size).min(self.k)) as u32;
+            for j in 0..self.n {
+                if self.seg_interleaved(b, j).len() % (2 * self.group) != 0 {
+                    return Err(format!("block {b} col {j}: bad interleaved length"));
+                }
+                for &i in self
+                    .seg_interleaved(b, j)
+                    .iter()
+                    .chain(self.seg_rest_pos(b, j))
+                    .chain(self.seg_rest_neg(b, j))
+                {
+                    if i < lo || i >= hi {
+                        return Err(format!(
+                            "block {b} col {j}: index {i} outside [{lo},{hi})"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_grid() {
+        let w = TernaryMatrix::random(100, 16, 0.25, 55);
+        for bs in [7, 25, 100, 4096] {
+            for g in [1, 2, 4] {
+                let f = InterleavedBlockedTcsc::from_ternary(&w, bs, g);
+                assert_eq!(f.to_dense(), w, "bs {bs} g {g}");
+                f.validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn single_block_matches_interleaved() {
+        use crate::formats::InterleavedTcsc;
+        let w = TernaryMatrix::random(64, 8, 0.5, 77);
+        let a = InterleavedBlockedTcsc::from_ternary(&w, 64, 4);
+        let b = InterleavedTcsc::from_ternary(&w, 4);
+        assert_eq!(a.all_indices, b.all_indices);
+    }
+
+    #[test]
+    fn nnz_preserved_across_blocking() {
+        let w = TernaryMatrix::random(129, 9, 0.5, 8);
+        let f = InterleavedBlockedTcsc::from_ternary(&w, 32, 2);
+        assert_eq!(f.nnz(), w.nnz());
+    }
+
+    #[test]
+    fn segments_within_block_range() {
+        let w = TernaryMatrix::random(64, 4, 0.5, 2);
+        let f = InterleavedBlockedTcsc::from_ternary(&w, 16, 2);
+        for b in 0..f.nblocks() {
+            for j in 0..4 {
+                for &i in f.seg_interleaved(b, j) {
+                    assert_eq!((i as usize) / 16, b);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_zero_matrix() {
+        let w = TernaryMatrix::zeros(32, 4);
+        let f = InterleavedBlockedTcsc::from_ternary(&w, 8, 4);
+        assert_eq!(f.nnz(), 0);
+        assert_eq!(f.to_dense(), w);
+    }
+}

@@ -1,0 +1,56 @@
+//! Sparse ternary storage formats — every layout the paper introduces,
+//! including the two it evaluates and drops (value compression, inverted
+//! index), because the ablation benches reproduce those negative results.
+//!
+//! All formats are built from a dense [`TernaryMatrix`] ground truth,
+//! validate their internal invariants on construction (debug assertions +
+//! explicit `validate()`), and can reconstruct the dense matrix via
+//! [`SparseFormat::to_dense`] — the round-trip property every format test
+//! exercises.
+
+pub mod tcsc;
+pub mod blocked;
+pub mod interleaved;
+pub mod interleaved_blocked;
+pub mod symmetric;
+pub mod compressed;
+pub mod inverted;
+
+pub use tcsc::Tcsc;
+pub use blocked::BlockedTcsc;
+pub use interleaved::InterleavedTcsc;
+pub use interleaved_blocked::InterleavedBlockedTcsc;
+pub use symmetric::SymmetricTcsc;
+pub use compressed::CompressedTernary;
+pub use inverted::InvertedIndex;
+
+use crate::ternary::TernaryMatrix;
+
+/// Common interface over all sparse ternary formats.
+pub trait SparseFormat: Sized {
+    /// Human-readable format name (used in benchmark tables).
+    const NAME: &'static str;
+
+    /// Logical shape: W is K×N.
+    fn k(&self) -> usize;
+    fn n(&self) -> usize;
+
+    /// Number of stored nonzeros (excluding any padding the format adds).
+    fn nnz(&self) -> usize;
+
+    /// Exact in-memory byte size of the format's arrays — the quantity the
+    /// paper's Fig 10 operational-intensity estimate uses.
+    fn bytes(&self) -> usize;
+
+    /// Reconstruct the dense ternary matrix (tests: roundtrip identity).
+    fn to_dense(&self) -> TernaryMatrix;
+
+    /// Check internal invariants; returns an error description on violation.
+    fn validate(&self) -> Result<(), String>;
+}
+
+/// Shared helper: standard block count for blocked formats.
+pub(crate) fn num_blocks(k: usize, block_size: usize) -> usize {
+    assert!(block_size > 0, "block size must be positive");
+    k.div_ceil(block_size)
+}

@@ -1,0 +1,265 @@
+//! Symmetric padded format for SIMD kernels (paper §3 "SIMD
+//! Vectorization").
+//!
+//! The vector kernels process four output columns per iteration, so the
+//! format mandates *symmetry* across each group of four W columns:
+//!
+//! - every column in a 4-column group stores the same number of index
+//!   **quads** `[pos, pos, neg, neg]`;
+//! - the quad count per group is padded up to a multiple of 2 (the vertical
+//!   kernel consumes two sign groups — four values — per column per
+//!   iteration);
+//! - deficit lanes point at a **dummy index** `K`, which reads 0.0 from a
+//!   [`crate::tensor::PaddedMatrix`] row (stride K+1 with a zero pad slot),
+//!   contributing nothing to the sums.
+//!
+//! Memory layout of `indices`: group-major, then step-major, then
+//! column-major — at group `g`, step `t`, the 16 contiguous u32s are
+//! `[col0: p,p,n,n][col1: p,p,n,n][col2 …][col3 …]`, which both the
+//! vertical and horizontal kernels stream sequentially.
+
+use crate::formats::SparseFormat;
+use crate::ternary::TernaryMatrix;
+
+/// Symmetric padded sign-quad format for 4-wide SIMD.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SymmetricTcsc {
+    k: usize,
+    /// True (unpadded) number of columns.
+    n: usize,
+    /// Quad-steps per 4-column group; length `ngroups`. Always even.
+    pub steps_per_group: Vec<u32>,
+    /// Start offset (in u32s) of each group's index block; length
+    /// `ngroups + 1`. Group `g` occupies `indices[group_ptr[g] ..
+    /// group_ptr[g+1]]` = `steps_per_group[g] · 16` u32s.
+    pub group_ptr: Vec<u32>,
+    /// Index stream (see module docs for layout). Dummy entries equal `K`.
+    pub indices: Vec<u32>,
+    /// Count of real (non-dummy) stored indices == nnz of W.
+    real_indices: usize,
+}
+
+impl SymmetricTcsc {
+    /// The dummy row index (reads 0.0 via `PaddedMatrix`).
+    #[inline]
+    pub fn dummy_index(&self) -> u32 {
+        self.k as u32
+    }
+
+    /// Number of 4-column groups (`ceil(N/4)`).
+    pub fn ngroups(&self) -> usize {
+        self.n.div_ceil(4)
+    }
+
+    /// Index block of group `g`.
+    #[inline]
+    pub fn group_indices(&self, g: usize) -> &[u32] {
+        &self.indices[self.group_ptr[g] as usize..self.group_ptr[g + 1] as usize]
+    }
+
+    /// Build from a dense ternary matrix.
+    pub fn from_ternary(w: &TernaryMatrix) -> SymmetricTcsc {
+        let (k, n) = (w.k(), w.n());
+        let dummy = k as u32;
+        let ngroups = n.div_ceil(4);
+        let mut steps_per_group = Vec::with_capacity(ngroups);
+        let mut group_ptr = Vec::with_capacity(ngroups + 1);
+        let mut indices = Vec::new();
+        let mut real_indices = 0usize;
+        group_ptr.push(0);
+        for g in 0..ngroups {
+            // Collect per-column pos/neg lists (empty for padded columns).
+            let mut pos: [Vec<u32>; 4] = Default::default();
+            let mut neg: [Vec<u32>; 4] = Default::default();
+            for c in 0..4 {
+                let j = 4 * g + c;
+                if j < n {
+                    pos[c] = w.col_positives(j);
+                    neg[c] = w.col_negatives(j);
+                    real_indices += pos[c].len() + neg[c].len();
+                }
+            }
+            // Steps needed per column: each step consumes 2 pos + 2 neg.
+            let need = (0..4)
+                .map(|c| pos[c].len().div_ceil(2).max(neg[c].len().div_ceil(2)))
+                .max()
+                .unwrap();
+            // Pad to an even step count (vertical kernel unrolls by 2).
+            let steps = if need % 2 == 0 { need } else { need + 1 };
+            steps_per_group.push(steps as u32);
+            for t in 0..steps {
+                for c in 0..4 {
+                    for s in 0..2 {
+                        indices.push(*pos[c].get(2 * t + s).unwrap_or(&dummy));
+                    }
+                    for s in 0..2 {
+                        indices.push(*neg[c].get(2 * t + s).unwrap_or(&dummy));
+                    }
+                }
+            }
+            group_ptr.push(indices.len() as u32);
+        }
+        let f = SymmetricTcsc {
+            k,
+            n,
+            steps_per_group,
+            group_ptr,
+            indices,
+            real_indices,
+        };
+        debug_assert_eq!(f.validate(), Ok(()));
+        f
+    }
+}
+
+impl SparseFormat for SymmetricTcsc {
+    const NAME: &'static str = "SymmetricTCSC";
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn nnz(&self) -> usize {
+        self.real_indices
+    }
+
+    fn bytes(&self) -> usize {
+        std::mem::size_of::<u32>()
+            * (self.indices.len() + self.group_ptr.len() + self.steps_per_group.len())
+    }
+
+    fn to_dense(&self) -> TernaryMatrix {
+        let mut w = TernaryMatrix::zeros(self.k, self.n);
+        let dummy = self.dummy_index();
+        for g in 0..self.ngroups() {
+            let block = self.group_indices(g);
+            for (t, quad16) in block.chunks(16).enumerate() {
+                let _ = t;
+                for c in 0..4 {
+                    let j = 4 * g + c;
+                    if j >= self.n {
+                        continue;
+                    }
+                    let quad = &quad16[4 * c..4 * c + 4];
+                    for &i in &quad[..2] {
+                        if i != dummy {
+                            w.set(i as usize, j, 1);
+                        }
+                    }
+                    for &i in &quad[2..] {
+                        if i != dummy {
+                            w.set(i as usize, j, -1);
+                        }
+                    }
+                }
+            }
+        }
+        w
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if self.group_ptr.len() != self.ngroups() + 1 {
+            return Err("group_ptr length mismatch".into());
+        }
+        if self.steps_per_group.len() != self.ngroups() {
+            return Err("steps_per_group length mismatch".into());
+        }
+        for g in 0..self.ngroups() {
+            let steps = self.steps_per_group[g];
+            if steps % 2 != 0 {
+                return Err(format!("group {g}: odd step count {steps}"));
+            }
+            let span = self.group_ptr[g + 1] - self.group_ptr[g];
+            if span != steps * 16 {
+                return Err(format!("group {g}: span {span} != steps·16"));
+            }
+            for &i in self.group_indices(g) {
+                if i > self.k as u32 {
+                    return Err(format!("group {g}: index {i} beyond dummy"));
+                }
+            }
+            // Padded (beyond-N) columns must be all-dummy.
+            for (ci, chunk) in self.group_indices(g).chunks(4).enumerate() {
+                let c = ci % 4;
+                let j = 4 * g + c;
+                if j >= self.n && chunk.iter().any(|&i| i != self.dummy_index()) {
+                    return Err(format!("group {g}: padded column {j} has real indices"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_various_shapes() {
+        for &(k, n) in &[(32usize, 8usize), (64, 12), (17, 5), (128, 4), (8, 1)] {
+            for &s in &[0.5f32, 0.25, 0.0625] {
+                let w = TernaryMatrix::random(k, n, s, (k * n) as u64);
+                let f = SymmetricTcsc::from_ternary(&w);
+                assert_eq!(f.to_dense(), w, "k{k} n{n} s{s}");
+                f.validate().unwrap();
+                assert_eq!(f.nnz(), w.nnz());
+            }
+        }
+    }
+
+    #[test]
+    fn symmetry_within_groups() {
+        let w = TernaryMatrix::random(64, 16, 0.5, 3);
+        let f = SymmetricTcsc::from_ternary(&w);
+        // All columns in a group consume exactly steps·(2 pos + 2 neg)
+        // slots; block size is steps·16.
+        for g in 0..f.ngroups() {
+            assert_eq!(
+                f.group_indices(g).len(),
+                f.steps_per_group[g] as usize * 16
+            );
+            assert_eq!(f.steps_per_group[g] % 2, 0);
+        }
+    }
+
+    #[test]
+    fn deficit_lanes_are_dummy() {
+        // One column with only positives: neg slots must be dummy.
+        let mut w = TernaryMatrix::zeros(16, 1);
+        w.set(0, 0, 1);
+        w.set(5, 0, 1);
+        let f = SymmetricTcsc::from_ternary(&w);
+        let dummy = f.dummy_index();
+        let block = f.group_indices(0);
+        // col 0, step 0: [0, 5, dummy, dummy]
+        assert_eq!(&block[0..4], &[0, 5, dummy, dummy]);
+        // padded cols 1..3 all dummy
+        assert!(block[4..16].iter().all(|&i| i == dummy));
+        assert_eq!(f.to_dense(), w);
+    }
+
+    #[test]
+    fn dummy_reads_zero_through_padded_matrix() {
+        use crate::tensor::{Matrix, PaddedMatrix};
+        let w = TernaryMatrix::random(8, 4, 0.5, 1);
+        let f = SymmetricTcsc::from_ternary(&w);
+        let x = Matrix::random(2, 8, 2);
+        let p = PaddedMatrix::from_matrix(&x);
+        assert_eq!(p.row(0)[f.dummy_index() as usize], 0.0);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let w = TernaryMatrix::zeros(8, 8);
+        let f = SymmetricTcsc::from_ternary(&w);
+        assert_eq!(f.nnz(), 0);
+        assert_eq!(f.to_dense(), w);
+        // Zero steps everywhere — nothing stored.
+        assert!(f.indices.is_empty());
+    }
+}

@@ -1,0 +1,225 @@
+//! Ternary Compressed Sparse Column (TCSC) — the paper's baseline format.
+//!
+//! Four integer arrays (paper §2, Fig 1): column start pointers and
+//! column-wise row indices, kept separately for +1 and -1 entries. The sign
+//! is implicit in which array an index lives in, so no value array exists.
+
+use crate::formats::SparseFormat;
+use crate::ternary::TernaryMatrix;
+
+/// Baseline TCSC: sign-split CSC with implicit values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tcsc {
+    k: usize,
+    n: usize,
+    /// Column start pointers for +1 entries; length N+1.
+    pub col_start_pos: Vec<u32>,
+    /// Column start pointers for -1 entries; length N+1.
+    pub col_start_neg: Vec<u32>,
+    /// Row indices of all +1 entries, column-wise, ascending within column.
+    pub row_index_pos: Vec<u32>,
+    /// Row indices of all -1 entries, column-wise, ascending within column.
+    pub row_index_neg: Vec<u32>,
+}
+
+impl Tcsc {
+    /// Build from a dense ternary matrix.
+    pub fn from_ternary(w: &TernaryMatrix) -> Tcsc {
+        let (k, n) = (w.k(), w.n());
+        let mut col_start_pos = Vec::with_capacity(n + 1);
+        let mut col_start_neg = Vec::with_capacity(n + 1);
+        let mut row_index_pos = Vec::new();
+        let mut row_index_neg = Vec::new();
+        col_start_pos.push(0);
+        col_start_neg.push(0);
+        for j in 0..n {
+            row_index_pos.extend(w.col_positives(j));
+            row_index_neg.extend(w.col_negatives(j));
+            col_start_pos.push(row_index_pos.len() as u32);
+            col_start_neg.push(row_index_neg.len() as u32);
+        }
+        let f = Tcsc {
+            k,
+            n,
+            col_start_pos,
+            col_start_neg,
+            row_index_pos,
+            row_index_neg,
+        };
+        debug_assert_eq!(f.validate(), Ok(()));
+        f
+    }
+
+    /// Positive row indices of column `j`.
+    #[inline]
+    pub fn col_pos(&self, j: usize) -> &[u32] {
+        &self.row_index_pos
+            [self.col_start_pos[j] as usize..self.col_start_pos[j + 1] as usize]
+    }
+
+    /// Negative row indices of column `j`.
+    #[inline]
+    pub fn col_neg(&self, j: usize) -> &[u32] {
+        &self.row_index_neg
+            [self.col_start_neg[j] as usize..self.col_start_neg[j + 1] as usize]
+    }
+}
+
+impl SparseFormat for Tcsc {
+    const NAME: &'static str = "TCSC";
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn nnz(&self) -> usize {
+        self.row_index_pos.len() + self.row_index_neg.len()
+    }
+
+    fn bytes(&self) -> usize {
+        std::mem::size_of::<u32>()
+            * (self.col_start_pos.len()
+                + self.col_start_neg.len()
+                + self.row_index_pos.len()
+                + self.row_index_neg.len())
+    }
+
+    fn to_dense(&self) -> TernaryMatrix {
+        let mut w = TernaryMatrix::zeros(self.k, self.n);
+        for j in 0..self.n {
+            for &i in self.col_pos(j) {
+                w.set(i as usize, j, 1);
+            }
+            for &i in self.col_neg(j) {
+                w.set(i as usize, j, -1);
+            }
+        }
+        w
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        validate_csc(
+            "pos",
+            self.k,
+            self.n,
+            &self.col_start_pos,
+            &self.row_index_pos,
+        )?;
+        validate_csc(
+            "neg",
+            self.k,
+            self.n,
+            &self.col_start_neg,
+            &self.row_index_neg,
+        )?;
+        Ok(())
+    }
+}
+
+/// Shared CSC-side validation: pointer monotonicity, bounds, per-column
+/// sorted and distinct row indices.
+pub(crate) fn validate_csc(
+    label: &str,
+    k: usize,
+    n: usize,
+    col_start: &[u32],
+    row_index: &[u32],
+) -> Result<(), String> {
+    if col_start.len() != n + 1 {
+        return Err(format!("{label}: col_start length {} != N+1", col_start.len()));
+    }
+    if col_start[0] != 0 {
+        return Err(format!("{label}: col_start[0] != 0"));
+    }
+    if *col_start.last().unwrap() as usize != row_index.len() {
+        return Err(format!("{label}: col_start end != index count"));
+    }
+    for j in 0..n {
+        if col_start[j] > col_start[j + 1] {
+            return Err(format!("{label}: col_start not monotone at column {j}"));
+        }
+        let seg = &row_index[col_start[j] as usize..col_start[j + 1] as usize];
+        for w in seg.windows(2) {
+            if w[0] >= w[1] {
+                return Err(format!("{label}: column {j} indices not strictly ascending"));
+            }
+        }
+        if let Some(&last) = seg.last() {
+            if last as usize >= k {
+                return Err(format!("{label}: column {j} index {last} out of range"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The worked example from the paper's Fig 1: a 4×4 ternary matrix.
+    fn paper_fig1_matrix() -> TernaryMatrix {
+        // Reconstructed from the Fig 1 arrays:
+        //   pos ptrs [0,0,1,2,4], pos rows [1,0,1,3]
+        //   neg ptrs [0,1,3,4,4], neg rows [3,0,3,2]
+        // → col0: -1@3; col1: +1@1, -1@0, -1@3; col2: +1@0, -1@2; col3: +1@1, +1@3
+        let mut w = TernaryMatrix::zeros(4, 4);
+        w.set(3, 0, -1);
+        w.set(1, 1, 1);
+        w.set(0, 1, -1);
+        w.set(3, 1, -1);
+        w.set(0, 2, 1);
+        w.set(2, 2, -1);
+        w.set(1, 3, 1);
+        w.set(3, 3, 1);
+        w
+    }
+
+    #[test]
+    fn matches_paper_fig1() {
+        let f = Tcsc::from_ternary(&paper_fig1_matrix());
+        assert_eq!(f.col_start_pos, vec![0, 0, 1, 2, 4]);
+        assert_eq!(f.row_index_pos, vec![1, 0, 1, 3]);
+        assert_eq!(f.col_start_neg, vec![0, 1, 3, 4, 4]);
+        assert_eq!(f.row_index_neg, vec![3, 0, 3, 2]);
+    }
+
+    #[test]
+    fn roundtrip_random() {
+        for &s in &crate::PAPER_SPARSITIES {
+            let w = TernaryMatrix::random(64, 48, s, 21);
+            let f = Tcsc::from_ternary(&w);
+            assert_eq!(f.to_dense(), w, "sparsity {s}");
+            assert_eq!(f.nnz(), w.nnz());
+            f.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn bytes_counts_all_arrays() {
+        let w = TernaryMatrix::random(16, 8, 0.5, 1);
+        let f = Tcsc::from_ternary(&w);
+        let expect = 4 * (2 * 9 + f.nnz());
+        assert_eq!(f.bytes(), expect);
+    }
+
+    #[test]
+    fn empty_matrix_roundtrip() {
+        let w = TernaryMatrix::zeros(8, 8);
+        let f = Tcsc::from_ternary(&w);
+        assert_eq!(f.nnz(), 0);
+        assert_eq!(f.to_dense(), w);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let w = TernaryMatrix::random(16, 8, 0.5, 2);
+        let mut f = Tcsc::from_ternary(&w);
+        f.row_index_pos[0] = 99; // out of range
+        assert!(f.validate().is_err());
+    }
+}

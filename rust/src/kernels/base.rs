@@ -1,0 +1,84 @@
+//! BaseTCSC — the paper's baseline kernel (§2).
+//!
+//! For every output element `Y[m][n]`: one pass over the column's positive
+//! row indices (adds), one pass over the negatives (subtracts), plus the
+//! bias. Two separate inner loops per column is precisely the locality
+//! problem the later kernels fix.
+
+use crate::formats::Tcsc;
+use crate::kernels::Kernel;
+use crate::tensor::Matrix;
+
+/// The unoptimized TCSC baseline.
+pub struct BaseTcscKernel;
+
+impl Kernel for BaseTcscKernel {
+    type Format = Tcsc;
+
+    fn name(&self) -> &'static str {
+        "base_tcsc"
+    }
+
+    fn run(&self, x: &Matrix, w: &Tcsc, bias: &[f32], y: &mut Matrix) {
+        use crate::formats::SparseFormat;
+        crate::kernels::debug_check_shapes(x, w.k(), w.n(), bias, y);
+        let m = x.rows();
+        let n = w.n();
+        for r in 0..m {
+            let xr = x.row(r);
+            let yr = y.row_mut(r);
+            for c in 0..n {
+                // NOTE: deliberately checked indexing — this kernel is the
+                // paper's unoptimized baseline and stays exactly naive.
+                let mut acc = 0.0f32;
+                for &i in w.col_pos(c) {
+                    acc += xr[i as usize];
+                }
+                for &i in w.col_neg(c) {
+                    acc -= xr[i as usize];
+                }
+                yr[c] = acc + bias[c];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense_oracle;
+    use crate::ternary::TernaryMatrix;
+
+    #[test]
+    fn matches_oracle_across_sparsities() {
+        for &s in &crate::PAPER_SPARSITIES {
+            let w = TernaryMatrix::random(96, 40, s, 7);
+            let f = Tcsc::from_ternary(&w);
+            let x = Matrix::random(6, 96, 8);
+            let bias: Vec<f32> = (0..40).map(|i| (i as f32).sin()).collect();
+            let oracle = dense_oracle(&x, &w, &bias);
+            let mut y = Matrix::zeros(6, 40);
+            BaseTcscKernel.run(&x, &f, &bias, &mut y);
+            assert!(y.allclose(&oracle, 1e-4), "sparsity {s}");
+        }
+    }
+
+    #[test]
+    fn single_element() {
+        let w = TernaryMatrix::from_entries(1, 1, &[-1]);
+        let f = Tcsc::from_ternary(&w);
+        let x = Matrix::from_slice(1, 1, &[3.0]);
+        let mut y = Matrix::zeros(1, 1);
+        BaseTcscKernel.run(&x, &f, &[1.0], &mut y);
+        assert_eq!(y[(0, 0)], -2.0);
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let w = TernaryMatrix::random(16, 8, 0.5, 1);
+        let f = Tcsc::from_ternary(&w);
+        let x = Matrix::zeros(0, 16);
+        let mut y = Matrix::zeros(0, 8);
+        BaseTcscKernel.run(&x, &f, &[0.0; 8], &mut y); // must not panic
+    }
+}

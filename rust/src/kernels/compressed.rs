@@ -1,0 +1,179 @@
+//! Value-compression kernel (paper §3 "Value Compression") — walks the
+//! base-3 packed byte codes, decoding each through the 243-entry LUT and
+//! applying the five ternary digits to five *consecutive* X elements
+//! (sequential access — the format's selling point), wasting work on packed
+//! zeros (its downfall below 50% density; the ablation bench shows it).
+
+use crate::formats::compressed::{decode_lut, CompressedTernary, DIGITS};
+use crate::kernels::Kernel;
+use crate::tensor::Matrix;
+
+/// LUT-decoded packed-ternary kernel.
+pub struct CompressedKernel;
+
+impl Kernel for CompressedKernel {
+    type Format = CompressedTernary;
+
+    fn name(&self) -> &'static str {
+        "compressed_ternary"
+    }
+
+    fn run(&self, x: &Matrix, w: &CompressedTernary, bias: &[f32], y: &mut Matrix) {
+        use crate::formats::SparseFormat;
+        crate::kernels::debug_check_shapes(x, w.k(), w.n(), bias, y);
+        let lut = decode_lut();
+        let m = x.rows();
+        let n = w.n();
+        let k = w.k();
+        for r in 0..m {
+            let xr = x.row(r);
+            let yr = y.row_mut(r);
+            for c in 0..n {
+                let mut acc = 0.0f32;
+                let codes = w.col_codes(c);
+                // All full 5-tuples (no bounds checks needed inside).
+                let full = k / DIGITS;
+                for (t, &code) in codes[..full].iter().enumerate() {
+                    let digits = &lut[code as usize];
+                    let base = t * DIGITS;
+                    // Branchless-ish: multiply by the ternary digit. The
+                    // paper counts these as flops too (adds *and* muls).
+                    acc += digits[0] as f32 * xr[base]
+                        + digits[1] as f32 * xr[base + 1]
+                        + digits[2] as f32 * xr[base + 2]
+                        + digits[3] as f32 * xr[base + 3]
+                        + digits[4] as f32 * xr[base + 4];
+                }
+                // Tail code (K not a multiple of 5).
+                if full < codes.len() {
+                    let digits = &lut[codes[full] as usize];
+                    let base = full * DIGITS;
+                    for (d, &v) in digits.iter().enumerate() {
+                        if base + d < k && v != 0 {
+                            acc += v as f32 * xr[base + d];
+                        }
+                    }
+                }
+                yr[c] = acc + bias[c];
+            }
+        }
+    }
+}
+
+/// Branch-decoding variant: per digit, `match` on the sign and add/sub
+/// (no multiplies — closer to the paper's "zero-flop decode" claim, but
+/// with a data-dependent branch per digit). Benchmarked against the
+/// multiply variant in the ablation; whichever wins becomes the registry
+/// `compressed_ternary` entry for a host.
+pub struct CompressedKernelBranch;
+
+impl Kernel for CompressedKernelBranch {
+    type Format = CompressedTernary;
+
+    fn name(&self) -> &'static str {
+        "compressed_ternary_branch"
+    }
+
+    fn run(&self, x: &Matrix, w: &CompressedTernary, bias: &[f32], y: &mut Matrix) {
+        use crate::formats::SparseFormat;
+        crate::kernels::debug_check_shapes(x, w.k(), w.n(), bias, y);
+        let lut = decode_lut();
+        let m = x.rows();
+        let n = w.n();
+        let k = w.k();
+        for r in 0..m {
+            let xr = x.row(r);
+            let yr = y.row_mut(r);
+            for c in 0..n {
+                let mut acc = 0.0f32;
+                let codes = w.col_codes(c);
+                let full = k / DIGITS;
+                for (t, &code) in codes[..full].iter().enumerate() {
+                    let digits = &lut[code as usize];
+                    let base = t * DIGITS;
+                    for (d, &v) in digits.iter().enumerate() {
+                        match v {
+                            1 => acc += xr[base + d],
+                            -1 => acc -= xr[base + d],
+                            _ => {}
+                        }
+                    }
+                }
+                if full < codes.len() {
+                    let digits = &lut[codes[full] as usize];
+                    let base = full * DIGITS;
+                    for (d, &v) in digits.iter().enumerate() {
+                        if base + d < k {
+                            match v {
+                                1 => acc += xr[base + d],
+                                -1 => acc -= xr[base + d],
+                                _ => {}
+                            }
+                        }
+                    }
+                }
+                yr[c] = acc + bias[c];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense_oracle;
+    use crate::ternary::TernaryMatrix;
+
+    fn check(k: usize, s: f32) {
+        let w = TernaryMatrix::random(k, 16, s, 81);
+        let f = CompressedTernary::from_ternary(&w);
+        let x = Matrix::random(4, k, 82);
+        let bias: Vec<f32> = (0..16).map(|i| i as f32 * 0.1).collect();
+        let oracle = dense_oracle(&x, &w, &bias);
+        let mut y = Matrix::zeros(4, 16);
+        CompressedKernel.run(&x, &f, &bias, &mut y);
+        assert!(y.allclose(&oracle, 1e-4), "k={k} s={s}");
+    }
+
+    #[test]
+    fn matches_oracle() {
+        for &s in &crate::PAPER_SPARSITIES {
+            check(125, s); // divisible by 5
+        }
+    }
+
+    #[test]
+    fn tail_handling() {
+        check(123, 0.5); // 123 = 24·5 + 3
+        check(7, 0.5);
+        check(4, 0.25); // smaller than one code
+    }
+
+    #[test]
+    fn branch_variant_matches_oracle() {
+        for &s in &crate::PAPER_SPARSITIES {
+            let w = TernaryMatrix::random(123, 16, s, 85);
+            let f = CompressedTernary::from_ternary(&w);
+            let x = Matrix::random(4, 123, 86);
+            let bias: Vec<f32> = (0..16).map(|i| i as f32 * 0.1).collect();
+            let oracle = dense_oracle(&x, &w, &bias);
+            let mut y = Matrix::zeros(4, 16);
+            CompressedKernelBranch.run(&x, &f, &bias, &mut y);
+            assert!(y.allclose(&oracle, 1e-4), "s={s}");
+        }
+    }
+
+    #[test]
+    fn variants_agree_bitwise_order() {
+        // Both variants accumulate in the same order → identical floats.
+        let w = TernaryMatrix::random(60, 8, 0.5, 5);
+        let f = CompressedTernary::from_ternary(&w);
+        let x = Matrix::random(2, 60, 6);
+        let bias = vec![0.5f32; 8];
+        let mut ya = Matrix::zeros(2, 8);
+        let mut yb = Matrix::zeros(2, 8);
+        CompressedKernel.run(&x, &f, &bias, &mut ya);
+        CompressedKernelBranch.run(&x, &f, &bias, &mut yb);
+        assert!(ya.allclose(&yb, 1e-5));
+    }
+}

@@ -1,0 +1,112 @@
+//! Dense reference implementations.
+//!
+//! [`dense_oracle`] is the correctness ground truth every sparse kernel is
+//! tested against; [`DenseGemm`] is a plain f32 GEMM used in benchmark
+//! reports to show what *ignoring* ternary structure costs.
+
+use crate::tensor::Matrix;
+use crate::ternary::TernaryMatrix;
+
+/// Ground-truth `Y = X·W + b` straight off the dense ternary matrix.
+/// f64 accumulation so kernel tests compare against a better-rounded
+/// reference.
+pub fn dense_oracle(x: &Matrix, w: &TernaryMatrix, bias: &[f32]) -> Matrix {
+    assert_eq!(x.cols(), w.k());
+    assert_eq!(bias.len(), w.n());
+    let (m, k, n) = (x.rows(), w.k(), w.n());
+    let mut y = Matrix::zeros(m, n);
+    for r in 0..m {
+        let xr = x.row(r);
+        for c in 0..n {
+            let mut acc = 0.0f64;
+            for i in 0..k {
+                match w.get(i, c) {
+                    1 => acc += xr[i] as f64,
+                    -1 => acc -= xr[i] as f64,
+                    _ => {}
+                }
+            }
+            y[(r, c)] = (acc + bias[c] as f64) as f32;
+        }
+    }
+    y
+}
+
+/// Dense f32 GEMM (i-k-j loop order, row-major friendly): `Y = X·W + b`
+/// where `W` is materialized densely from the ternary matrix. Benchmarked
+/// as the "no sparsity exploited" baseline.
+pub struct DenseGemm {
+    /// Densified weights, row-major K×N.
+    w: Vec<f32>,
+    k: usize,
+    n: usize,
+}
+
+impl DenseGemm {
+    pub fn new(w: &TernaryMatrix) -> DenseGemm {
+        let (k, n) = (w.k(), w.n());
+        let mut dense = vec![0.0f32; k * n];
+        for i in 0..k {
+            for j in 0..n {
+                dense[i * n + j] = w.get(i, j) as f32;
+            }
+        }
+        DenseGemm { w: dense, k, n }
+    }
+
+    pub fn run(&self, x: &Matrix, bias: &[f32], y: &mut Matrix) {
+        crate::kernels::debug_check_shapes(x, self.k, self.n, bias, y);
+        let (m, k, n) = (x.rows(), self.k, self.n);
+        for r in 0..m {
+            let yr = y.row_mut(r);
+            yr.copy_from_slice(bias);
+        }
+        for r in 0..m {
+            let xr = x.row(r);
+            let yr = y.row_mut(r);
+            for i in 0..k {
+                let xv = xr[i];
+                let wrow = &self.w[i * n..(i + 1) * n];
+                for j in 0..n {
+                    yr[j] += xv * wrow[j];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_hand_example() {
+        // X = [[1, 2]], W = [[+1, -1], [0, +1]], b = [10, 20]
+        // Y = [1·1 + 2·0 + 10, 1·(-1) + 2·1 + 20] = [11, 21]
+        let x = Matrix::from_slice(1, 2, &[1.0, 2.0]);
+        let w = TernaryMatrix::from_entries(2, 2, &[1, -1, 0, 1]);
+        let y = dense_oracle(&x, &w, &[10.0, 20.0]);
+        assert_eq!(y.as_slice(), &[11.0, 21.0]);
+    }
+
+    #[test]
+    fn dense_gemm_matches_oracle() {
+        let w = TernaryMatrix::random(48, 24, 0.5, 1);
+        let x = Matrix::random(5, 48, 2);
+        let bias: Vec<f32> = (0..24).map(|i| i as f32 * 0.1).collect();
+        let oracle = dense_oracle(&x, &w, &bias);
+        let g = DenseGemm::new(&w);
+        let mut y = Matrix::zeros(5, 24);
+        g.run(&x, &bias, &mut y);
+        assert!(y.allclose(&oracle, 1e-4));
+    }
+
+    #[test]
+    fn zero_weights_give_bias() {
+        let w = TernaryMatrix::zeros(8, 4);
+        let x = Matrix::random(3, 8, 3);
+        let bias = vec![1.5f32; 4];
+        let y = dense_oracle(&x, &w, &bias);
+        assert!(y.as_slice().iter().all(|&v| v == 1.5));
+    }
+}

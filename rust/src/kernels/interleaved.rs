@@ -1,0 +1,117 @@
+//! InterleavedTCSC kernel (paper §3 "Interleaving") — one inner loop per
+//! column walking the interleaved ± stream (adds and subtracts mingled in
+//! sign groups of G), followed by the positive and negative remainder
+//! cleanups. With `MU` rows unrolled like the best scalar variants.
+
+use crate::formats::InterleavedTcsc;
+use crate::kernels::unrolled_m::gather_rows;
+use crate::kernels::Kernel;
+use crate::tensor::Matrix;
+
+/// Interleaved-stream kernel, `MU`-row unrolled. The interleaved segment is
+/// consumed in `[G pos][G neg]` chunks in a single loop.
+pub struct InterleavedKernel<const MU: usize>;
+
+/// Walk an interleaved segment: alternating groups of `g` adds then `g`
+/// subtracts for MU rows simultaneously.
+#[inline(always)]
+fn walk_interleaved<const MU: usize>(
+    xrows: &[&[f32]; MU],
+    inter: &[u32],
+    g: usize,
+    acc: &mut [f32; MU],
+) {
+    use crate::kernels::unrolled::gat;
+    let step = 2 * g;
+    debug_assert_eq!(inter.len() % step, 0);
+    let mut p = 0;
+    while p < inter.len() {
+        for &i in &inter[p..p + g] {
+            for (m, row) in xrows.iter().enumerate() {
+                acc[m] += gat(row, i);
+            }
+        }
+        for &i in &inter[p + g..p + step] {
+            for (m, row) in xrows.iter().enumerate() {
+                acc[m] -= gat(row, i);
+            }
+        }
+        p += step;
+    }
+}
+
+impl<const MU: usize> Kernel for InterleavedKernel<MU> {
+    type Format = InterleavedTcsc;
+
+    fn name(&self) -> &'static str {
+        "interleaved_tcsc"
+    }
+
+    fn run(&self, x: &Matrix, w: &InterleavedTcsc, bias: &[f32], y: &mut Matrix) {
+        use crate::formats::SparseFormat;
+        crate::kernels::debug_check_shapes(x, w.k(), w.n(), bias, y);
+        let m = x.rows();
+        let n = w.n();
+        let g = w.group;
+        let mut r = 0;
+        while r + MU <= m {
+            let xrows: [&[f32]; MU] = std::array::from_fn(|i| x.row(r + i));
+            for c in 0..n {
+                let mut acc = [0.0f32; MU];
+                walk_interleaved::<MU>(&xrows, w.col_interleaved(c), g, &mut acc);
+                gather_rows::<4, MU>(&xrows, w.col_rest_pos(c), &mut acc, false);
+                gather_rows::<4, MU>(&xrows, w.col_rest_neg(c), &mut acc, true);
+                for (i, a) in acc.iter().enumerate() {
+                    y[(r + i, c)] = a + bias[c];
+                }
+            }
+            r += MU;
+        }
+        while r < m {
+            let xrows: [&[f32]; 1] = [x.row(r)];
+            for c in 0..n {
+                let mut acc = [0.0f32; 1];
+                walk_interleaved::<1>(&xrows, w.col_interleaved(c), g, &mut acc);
+                gather_rows::<4, 1>(&xrows, w.col_rest_pos(c), &mut acc, false);
+                gather_rows::<4, 1>(&xrows, w.col_rest_neg(c), &mut acc, true);
+                y[(r, c)] = acc[0] + bias[c];
+            }
+            r += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense_oracle;
+    use crate::ternary::TernaryMatrix;
+
+    fn check<const MU: usize>(m: usize, g: usize, s: f32) {
+        let w = TernaryMatrix::random(120, 24, s, 53);
+        let f = InterleavedTcsc::from_ternary(&w, g);
+        let x = Matrix::random(m, 120, 54);
+        let bias: Vec<f32> = (0..24).map(|i| (i as f32).cos()).collect();
+        let oracle = dense_oracle(&x, &w, &bias);
+        let mut y = Matrix::zeros(m, 24);
+        InterleavedKernel::<MU>.run(&x, &f, &bias, &mut y);
+        assert!(y.allclose(&oracle, 1e-4), "MU={MU} m={m} g={g} s={s}");
+    }
+
+    #[test]
+    fn paper_group_4() {
+        check::<4>(8, 4, 0.5);
+    }
+
+    #[test]
+    fn group_sizes_and_rows() {
+        check::<1>(3, 1, 0.5);
+        check::<2>(5, 2, 0.25);
+        check::<4>(7, 8, 0.125);
+    }
+
+    #[test]
+    fn low_sparsity_mostly_remainders() {
+        check::<4>(4, 4, 0.0625);
+    }
+}

@@ -1,0 +1,171 @@
+//! InterleavedBlockedTCSC kernel — the paper's **best scalar
+//! implementation**: K-blocked (B = 4096) for X locality, interleaved in
+//! groups of 2 per sign (4-wide inner step: 2 adds + 2 subtracts), unrolled
+//! over `MU = 4` rows of X/Y. Processes each blocked column in three
+//! phases: interleaved pairs, remaining positives, remaining negatives.
+
+use crate::formats::InterleavedBlockedTcsc;
+use crate::kernels::unrolled_m::gather_rows;
+use crate::kernels::Kernel;
+use crate::tensor::Matrix;
+
+/// Best-scalar kernel. Paper configuration: `MU = 4`, group = 2, B = 4096.
+pub struct InterleavedBlockedKernel<const MU: usize>;
+
+/// One interleaved stream pass specialized for group = 2 (the paper's
+/// choice: with unroll factor F=4, F/2 = 2 indices per sign): each step
+/// does 2 adds and 2 subtracts per row.
+#[inline(always)]
+fn walk_interleaved_g2<const MU: usize>(
+    xrows: &[&[f32]; MU],
+    inter: &[u32],
+    acc: &mut [f32; MU],
+) {
+    use crate::kernels::unrolled::gat;
+    debug_assert_eq!(inter.len() % 4, 0);
+    // §Perf notes (EXPERIMENTS.md §Perf, headline point K=16384/s=50%):
+    //   iter 2: dual-accumulator 2-step unroll measured -3% (memory-bound,
+    //           not add-latency-bound) — reverted.
+    //   iter 3: software prefetch (_mm_prefetch, distance 2 steps) measured
+    //           -9% (the B=4096 block already sits in cache; prefetches
+    //           burned load slots) — reverted.
+    let mut p = 0;
+    while p < inter.len() {
+        let (p0, p1) = (inter[p], inter[p + 1]);
+        let (n0, n1) = (inter[p + 2], inter[p + 3]);
+        for (m, row) in xrows.iter().enumerate() {
+            // 4 independent gathered operands per row per step.
+            acc[m] += gat(row, p0) + gat(row, p1) - gat(row, n0) - gat(row, n1);
+        }
+        p += 4;
+    }
+}
+
+/// Generic-group interleaved walk (used when the format was built with a
+/// group other than 2).
+#[inline(always)]
+fn walk_interleaved_gn<const MU: usize>(
+    xrows: &[&[f32]; MU],
+    inter: &[u32],
+    g: usize,
+    acc: &mut [f32; MU],
+) {
+    use crate::kernels::unrolled::gat;
+    let step = 2 * g;
+    let mut p = 0;
+    while p < inter.len() {
+        for &i in &inter[p..p + g] {
+            for (m, row) in xrows.iter().enumerate() {
+                acc[m] += gat(row, i);
+            }
+        }
+        for &i in &inter[p + g..p + step] {
+            for (m, row) in xrows.iter().enumerate() {
+                acc[m] -= gat(row, i);
+            }
+        }
+        p += step;
+    }
+}
+
+impl<const MU: usize> InterleavedBlockedKernel<MU> {
+    #[inline(always)]
+    fn tile<const TM: usize>(
+        x: &Matrix,
+        w: &InterleavedBlockedTcsc,
+        y: &mut Matrix,
+        b: usize,
+        r: usize,
+        n: usize,
+    ) {
+        let xrows: [&[f32]; TM] = std::array::from_fn(|i| x.row(r + i));
+        for c in 0..n {
+            let mut acc = [0.0f32; TM];
+            let inter = w.seg_interleaved(b, c);
+            if w.group == 2 {
+                walk_interleaved_g2::<TM>(&xrows, inter, &mut acc);
+            } else {
+                walk_interleaved_gn::<TM>(&xrows, inter, w.group, &mut acc);
+            }
+            gather_rows::<4, TM>(&xrows, w.seg_rest_pos(b, c), &mut acc, false);
+            gather_rows::<4, TM>(&xrows, w.seg_rest_neg(b, c), &mut acc, true);
+            for (i, a) in acc.iter().enumerate() {
+                y[(r + i, c)] += a;
+            }
+        }
+    }
+}
+
+impl<const MU: usize> Kernel for InterleavedBlockedKernel<MU> {
+    type Format = InterleavedBlockedTcsc;
+
+    fn name(&self) -> &'static str {
+        "interleaved_blocked_tcsc"
+    }
+
+    fn run(&self, x: &Matrix, w: &InterleavedBlockedTcsc, bias: &[f32], y: &mut Matrix) {
+        use crate::formats::SparseFormat;
+        crate::kernels::debug_check_shapes(x, w.k(), w.n(), bias, y);
+        let m = x.rows();
+        let n = w.n();
+        for r in 0..m {
+            y.row_mut(r).copy_from_slice(bias);
+        }
+        for b in 0..w.nblocks() {
+            let mut r = 0;
+            while r + MU <= m {
+                Self::tile::<MU>(x, w, y, b, r, n);
+                r += MU;
+            }
+            while r < m {
+                Self::tile::<1>(x, w, y, b, r, n);
+                r += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense_oracle;
+    use crate::ternary::TernaryMatrix;
+
+    fn check<const MU: usize>(m: usize, k: usize, bs: usize, g: usize, s: f32) {
+        let w = TernaryMatrix::random(k, 20, s, 71);
+        let f = InterleavedBlockedTcsc::from_ternary(&w, bs, g);
+        let x = Matrix::random(m, k, 72);
+        let bias: Vec<f32> = (0..20).map(|i| 0.05 * i as f32).collect();
+        let oracle = dense_oracle(&x, &w, &bias);
+        let mut y = Matrix::zeros(m, 20);
+        InterleavedBlockedKernel::<MU>.run(&x, &f, &bias, &mut y);
+        assert!(
+            y.allclose(&oracle, 1e-4),
+            "MU={MU} m={m} k={k} bs={bs} g={g} s={s}"
+        );
+    }
+
+    #[test]
+    fn paper_best_scalar_config() {
+        check::<4>(8, 256, 64, 2, 0.5);
+    }
+
+    #[test]
+    fn across_sparsities() {
+        for &s in &crate::PAPER_SPARSITIES {
+            check::<4>(4, 128, 32, 2, s);
+        }
+    }
+
+    #[test]
+    fn odd_shapes_and_groups() {
+        check::<4>(7, 100, 17, 2, 0.25);
+        check::<2>(5, 90, 30, 4, 0.5);
+        check::<1>(1, 50, 8, 1, 0.5);
+    }
+
+    #[test]
+    fn single_block() {
+        check::<4>(4, 64, 4096, 2, 0.5);
+    }
+}

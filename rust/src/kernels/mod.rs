@@ -1,0 +1,70 @@
+//! The sparse ternary GEMM kernel family.
+//!
+//! Every kernel computes `Y = X·W + b` (optionally followed by fused
+//! PReLU) where `W` is ternary and stored in one of the [`crate::formats`]
+//! layouts. Because `W`'s entries are ±1, the inner loops are pure
+//! add/subtract streams over gathered `X` elements — the paper's entire
+//! optimization space is *which order* those gathers happen in.
+//!
+//! Kernels come in two flavors:
+//! - **typed**: `run(x, &format, bias, &mut y)` — used by benches and tests;
+//! - **prepared** ([`PreparedGemm`]): format captured at build time,
+//!   `run(x, bias, &mut y)` — used by the serving engine and the registry.
+
+pub mod dense;
+pub mod base;
+pub mod unrolled;
+pub mod unrolled_m;
+pub mod blocked;
+pub mod interleaved;
+pub mod interleaved_blocked;
+pub mod compressed;
+pub mod inverted;
+pub mod prelu;
+pub mod simd;
+pub mod registry;
+pub mod parallel;
+
+pub use base::BaseTcscKernel;
+pub use blocked::UnrolledBlockedKernel;
+pub use dense::{dense_oracle, DenseGemm};
+pub use interleaved::InterleavedKernel;
+pub use interleaved_blocked::InterleavedBlockedKernel;
+pub use compressed::CompressedKernel;
+pub use inverted::InvertedKernel;
+pub use parallel::ParallelGemm;
+pub use prelu::{prelu_inplace, PRELU_DEFAULT_ALPHA};
+pub use registry::{kernel_names, prepare_kernel, KernelParams, PreparedGemm};
+pub use unrolled::UnrolledTcscKernel;
+pub use unrolled_m::UnrolledMKernel;
+
+use crate::tensor::Matrix;
+
+/// Typed kernel interface over a specific sparse format.
+pub trait Kernel {
+    type Format;
+
+    /// Kernel name as it appears in benchmark tables.
+    fn name(&self) -> &'static str;
+
+    /// Compute `Y = X·W + b`. `Y` must be M×N and is fully overwritten.
+    fn run(&self, x: &Matrix, w: &Self::Format, bias: &[f32], y: &mut Matrix);
+}
+
+/// Validate shapes shared by all kernels. Always on (one check per GEMM
+/// call): the inner gather loops use unchecked indexing whose safety
+/// contract is "X rows are exactly K long and format indices are < K"
+/// (the latter is enforced by format constructors/validate()).
+#[inline]
+pub(crate) fn debug_check_shapes(
+    x: &Matrix,
+    k: usize,
+    n: usize,
+    bias: &[f32],
+    y: &Matrix,
+) {
+    assert_eq!(x.cols(), k, "X cols must equal K");
+    assert_eq!(bias.len(), n, "bias length must equal N");
+    assert_eq!(y.rows(), x.rows(), "Y rows must equal X rows");
+    assert_eq!(y.cols(), n, "Y cols must equal N");
+}

@@ -1,0 +1,146 @@
+//! Multi-core execution of any prepared kernel by row partitioning.
+//!
+//! The paper evaluates single-core performance (its contribution is the
+//! per-core kernel); a serving system also needs to scale across cores.
+//! Because `Y = X·W + b` is embarrassingly parallel over rows of X, we
+//! split the batch into contiguous row chunks and run the *same* prepared
+//! kernel on each chunk in parallel — no synchronization inside the GEMM,
+//! and per-chunk results are written into disjoint slices of Y.
+
+use crate::kernels::PreparedGemm;
+use crate::tensor::Matrix;
+use std::sync::Arc;
+
+/// A prepared kernel wrapped for multi-core row-partitioned execution.
+pub struct ParallelGemm {
+    inner: Arc<dyn PreparedGemm>,
+    /// Worker threads used per run (1 = sequential passthrough).
+    pub threads: usize,
+    /// Minimum rows per chunk; batches smaller than `2·min_rows` run
+    /// sequentially (thread spawn isn't worth it).
+    pub min_rows: usize,
+}
+
+impl ParallelGemm {
+    pub fn new(inner: Arc<dyn PreparedGemm>, threads: usize) -> ParallelGemm {
+        ParallelGemm {
+            inner,
+            threads: threads.max(1),
+            min_rows: 2,
+        }
+    }
+
+    /// Compute `Y = X·W + b` using up to `self.threads` cores.
+    pub fn run(&self, x: &Matrix, bias: &[f32], y: &mut Matrix) {
+        let m = x.rows();
+        assert_eq!(y.rows(), m);
+        assert_eq!(x.cols(), self.inner.k());
+        assert_eq!(y.cols(), self.inner.n());
+        let chunks = self
+            .threads
+            .min(m / self.min_rows.max(1))
+            .max(1);
+        if chunks <= 1 {
+            self.inner.run(x, bias, y);
+            return;
+        }
+        let n = self.inner.n();
+        let rows_per = m.div_ceil(chunks);
+        // Split X rows and collect per-chunk outputs, then stitch. The
+        // copy is one sequential pass over Y — negligible next to the GEMM.
+        let chunk_inputs: Vec<Matrix> = (0..chunks)
+            .filter_map(|c| {
+                let lo = c * rows_per;
+                if lo >= m {
+                    return None; // ceil-division can over-provision chunks
+                }
+                let hi = ((c + 1) * rows_per).min(m);
+                let mut xc = Matrix::zeros(hi - lo, x.cols());
+                for (i, r) in (lo..hi).enumerate() {
+                    xc.row_mut(i).copy_from_slice(x.row(r));
+                }
+                Some(xc)
+            })
+            .collect();
+        let results: Vec<Matrix> = std::thread::scope(|scope| {
+            let handles: Vec<_> = chunk_inputs
+                .iter()
+                .map(|xc| {
+                    let inner = Arc::clone(&self.inner);
+                    scope.spawn(move || {
+                        let mut yc = Matrix::zeros(xc.rows(), n);
+                        inner.run(xc, bias, &mut yc);
+                        yc
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("chunk")).collect()
+        });
+        let mut r = 0;
+        for yc in results {
+            for i in 0..yc.rows() {
+                y.row_mut(r).copy_from_slice(yc.row(i));
+                r += 1;
+            }
+        }
+        debug_assert_eq!(r, m);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{dense_oracle, prepare_kernel, KernelParams};
+    use crate::ternary::TernaryMatrix;
+
+    fn setup(m: usize) -> (TernaryMatrix, Matrix, Vec<f32>) {
+        let w = TernaryMatrix::random(96, 32, 0.25, 3);
+        let x = Matrix::random(m, 96, 4);
+        let bias: Vec<f32> = (0..32).map(|i| 0.1 * i as f32).collect();
+        (w, x, bias)
+    }
+
+    #[test]
+    fn matches_sequential_for_all_thread_counts() {
+        let (w, x, bias) = setup(13);
+        let oracle = dense_oracle(&x, &w, &bias);
+        let inner: Arc<dyn crate::kernels::PreparedGemm> =
+            prepare_kernel("interleaved_blocked_tcsc", &w, KernelParams::default())
+                .unwrap()
+                .into();
+        for threads in [1, 2, 4, 8] {
+            let par = ParallelGemm::new(Arc::clone(&inner), threads);
+            let mut y = Matrix::zeros(13, 32);
+            par.run(&x, &bias, &mut y);
+            assert!(y.allclose(&oracle, 1e-3), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn tiny_batches_run_sequentially() {
+        let (w, x, bias) = setup(1);
+        let oracle = dense_oracle(&x, &w, &bias);
+        let inner: Arc<dyn crate::kernels::PreparedGemm> =
+            prepare_kernel("base_tcsc", &w, KernelParams::default())
+                .unwrap()
+                .into();
+        let par = ParallelGemm::new(inner, 8);
+        let mut y = Matrix::zeros(1, 32);
+        par.run(&x, &bias, &mut y);
+        assert!(y.allclose(&oracle, 1e-3));
+    }
+
+    #[test]
+    fn uneven_row_split() {
+        let (w, x, bias) = setup(7); // 7 rows over 3 threads → 3+3+1
+        let oracle = dense_oracle(&x, &w, &bias);
+        let inner: Arc<dyn crate::kernels::PreparedGemm> =
+            prepare_kernel("unrolled_tcsc_12", &w, KernelParams::default())
+                .unwrap()
+                .into();
+        let par = ParallelGemm::new(inner, 3);
+        let mut y = Matrix::zeros(7, 32);
+        par.run(&x, &bias, &mut y);
+        assert!(y.allclose(&oracle, 1e-3));
+    }
+}

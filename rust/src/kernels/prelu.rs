@@ -1,0 +1,60 @@
+//! PReLU activation: `y = y if y > 0 else α·y`.
+//!
+//! The paper excludes PReLU from the scalar variants (to keep optimization
+//! targets clean) and fuses it into all vectorized implementations (Fig 11
+//! plots include it). Both forms live here: a standalone pass for scalar
+//! pipelines and a fused epilogue helper the SIMD kernels call.
+
+use crate::tensor::Matrix;
+
+/// Default PReLU slope used across examples and benches.
+pub const PRELU_DEFAULT_ALPHA: f32 = 0.25;
+
+/// In-place PReLU over a full matrix.
+pub fn prelu_inplace(y: &mut Matrix, alpha: f32) {
+    for v in y.as_mut_slice() {
+        if *v < 0.0 {
+            *v *= alpha;
+        }
+    }
+}
+
+/// Scalar PReLU for a single value (fused epilogues).
+#[inline(always)]
+pub fn prelu_scalar(v: f32, alpha: f32) -> f32 {
+    if v > 0.0 {
+        v
+    } else {
+        alpha * v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_positive_scales_negative() {
+        let mut y = Matrix::from_slice(1, 4, &[-2.0, -0.5, 0.0, 3.0]);
+        prelu_inplace(&mut y, 0.25);
+        assert_eq!(y.as_slice(), &[-0.5, -0.125, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn scalar_matches_inplace() {
+        let vals = [-1.5f32, -0.1, 0.0, 0.1, 2.0];
+        let mut m = Matrix::from_slice(1, 5, &vals);
+        prelu_inplace(&mut m, 0.3);
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(m.as_slice()[i], prelu_scalar(v, 0.3));
+        }
+    }
+
+    #[test]
+    fn alpha_one_is_identity() {
+        let vals = [-3.0f32, 4.0];
+        let mut m = Matrix::from_slice(1, 2, &vals);
+        prelu_inplace(&mut m, 1.0);
+        assert_eq!(m.as_slice(), &vals);
+    }
+}

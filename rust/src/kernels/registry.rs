@@ -1,0 +1,381 @@
+//! Kernel registry: build a *prepared* GEMM (format constructed, kernel
+//! bound) from a kernel name + dense ternary weights. This is the dispatch
+//! surface the serving engine, CLI and benches share.
+
+use crate::formats::{
+    BlockedTcsc, CompressedTernary, InterleavedBlockedTcsc, InterleavedTcsc, InvertedIndex,
+    SparseFormat, SymmetricTcsc, Tcsc,
+};
+use crate::kernels::simd::{HorizontalSimdKernel, SimdBlockedMnKernel, VerticalSimdKernel};
+use crate::kernels::{
+    BaseTcscKernel, CompressedKernel, DenseGemm, InterleavedBlockedKernel, InterleavedKernel,
+    InvertedKernel, Kernel, UnrolledBlockedKernel, UnrolledMKernel, UnrolledTcscKernel,
+};
+use crate::tensor::{Matrix, PaddedMatrix};
+use crate::ternary::TernaryMatrix;
+
+/// Parameters a kernel build may consume (paper defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct KernelParams {
+    /// Block size for blocked formats; the paper's rule is `min(K, 4096)`.
+    pub block_size: usize,
+    /// Interleave group size (indices per sign).
+    pub group: usize,
+    /// PReLU slope for kernels that fuse activation; `None` = no activation.
+    pub prelu_alpha: Option<f32>,
+}
+
+impl Default for KernelParams {
+    fn default() -> Self {
+        KernelParams {
+            block_size: crate::PAPER_BLOCK_SIZE,
+            group: crate::PAPER_GROUP_SIZE,
+            prelu_alpha: None,
+        }
+    }
+}
+
+impl KernelParams {
+    /// Paper rule: block size `min(K, 4096)`.
+    pub fn effective_block(&self, k: usize) -> usize {
+        self.block_size.min(k.max(1))
+    }
+}
+
+/// A kernel bound to its prepared format: the serving-time object.
+pub trait PreparedGemm: Send + Sync {
+    /// Registry name.
+    fn name(&self) -> &str;
+
+    /// Compute `Y = X·W + b` (+ fused activation where supported).
+    fn run(&self, x: &Matrix, bias: &[f32], y: &mut Matrix);
+
+    /// Logical K.
+    fn k(&self) -> usize;
+
+    /// Logical N.
+    fn n(&self) -> usize;
+
+    /// Stored nonzeros.
+    fn nnz(&self) -> usize;
+
+    /// Exact format byte size (operational-intensity accounting).
+    fn format_bytes(&self) -> usize;
+
+    /// Whether PReLU is fused into `run`.
+    fn fused_prelu(&self) -> bool {
+        false
+    }
+}
+
+macro_rules! typed_prepared {
+    ($struct_name:ident, $fmt:ty, $kernel:expr, $name:expr) => {
+        struct $struct_name {
+            fmt: $fmt,
+        }
+        impl PreparedGemm for $struct_name {
+            fn name(&self) -> &str {
+                $name
+            }
+            fn run(&self, x: &Matrix, bias: &[f32], y: &mut Matrix) {
+                $kernel.run(x, &self.fmt, bias, y);
+            }
+            fn k(&self) -> usize {
+                self.fmt.k()
+            }
+            fn n(&self) -> usize {
+                self.fmt.n()
+            }
+            fn nnz(&self) -> usize {
+                self.fmt.nnz()
+            }
+            fn format_bytes(&self) -> usize {
+                self.fmt.bytes()
+            }
+        }
+    };
+}
+
+typed_prepared!(PBase, Tcsc, BaseTcscKernel, "base_tcsc");
+typed_prepared!(PUnrolled5, Tcsc, UnrolledTcscKernel::<5>, "unrolled_tcsc_5");
+typed_prepared!(PUnrolled12, Tcsc, UnrolledTcscKernel::<12>, "unrolled_tcsc_12");
+typed_prepared!(PUnrolledK4M4, Tcsc, UnrolledMKernel::<4, 4>, "unrolled_tcsc_k4_m4");
+typed_prepared!(
+    PBlocked,
+    BlockedTcsc,
+    UnrolledBlockedKernel::<4, 4>,
+    "unrolled_blocked_tcsc_k4_m4"
+);
+typed_prepared!(PInterleaved, InterleavedTcsc, InterleavedKernel::<4>, "interleaved_tcsc");
+typed_prepared!(
+    PInterleavedBlocked,
+    InterleavedBlockedTcsc,
+    InterleavedBlockedKernel::<4>,
+    "interleaved_blocked_tcsc"
+);
+typed_prepared!(PCompressed, CompressedTernary, CompressedKernel, "compressed_ternary");
+typed_prepared!(
+    PCompressedBranch,
+    CompressedTernary,
+    crate::kernels::compressed::CompressedKernelBranch,
+    "compressed_ternary_branch"
+);
+typed_prepared!(PInverted, InvertedIndex, InvertedKernel, "inverted_index");
+
+struct PDense {
+    gemm: DenseGemm,
+    k: usize,
+    n: usize,
+    nnz: usize,
+}
+
+impl PreparedGemm for PDense {
+    fn name(&self) -> &str {
+        "dense_gemm"
+    }
+    fn run(&self, x: &Matrix, bias: &[f32], y: &mut Matrix) {
+        self.gemm.run(x, bias, y);
+    }
+    fn k(&self) -> usize {
+        self.k
+    }
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn nnz(&self) -> usize {
+        self.nnz
+    }
+    fn format_bytes(&self) -> usize {
+        self.k * self.n * std::mem::size_of::<f32>()
+    }
+}
+
+struct PSimd<K> {
+    fmt: SymmetricTcsc,
+    kernel: K,
+    name: &'static str,
+    prelu: bool,
+}
+
+impl PreparedGemm for PSimd<VerticalSimdKernel> {
+    fn name(&self) -> &str {
+        self.name
+    }
+    fn run(&self, x: &Matrix, bias: &[f32], y: &mut Matrix) {
+        let padded = PaddedMatrix::from_matrix(x);
+        self.kernel.run_padded(&padded, &self.fmt, bias, y);
+    }
+    fn k(&self) -> usize {
+        self.fmt.k()
+    }
+    fn n(&self) -> usize {
+        self.fmt.n()
+    }
+    fn nnz(&self) -> usize {
+        self.fmt.nnz()
+    }
+    fn format_bytes(&self) -> usize {
+        self.fmt.bytes()
+    }
+    fn fused_prelu(&self) -> bool {
+        self.prelu
+    }
+}
+
+impl PreparedGemm for PSimd<HorizontalSimdKernel> {
+    fn name(&self) -> &str {
+        self.name
+    }
+    fn run(&self, x: &Matrix, bias: &[f32], y: &mut Matrix) {
+        let padded = PaddedMatrix::from_matrix(x);
+        self.kernel.run_padded(&padded, &self.fmt, bias, y);
+    }
+    fn k(&self) -> usize {
+        self.fmt.k()
+    }
+    fn n(&self) -> usize {
+        self.fmt.n()
+    }
+    fn nnz(&self) -> usize {
+        self.fmt.nnz()
+    }
+    fn format_bytes(&self) -> usize {
+        self.fmt.bytes()
+    }
+    fn fused_prelu(&self) -> bool {
+        self.prelu
+    }
+}
+
+struct PSimdBlocked {
+    fmt: InterleavedBlockedTcsc,
+    kernel: SimdBlockedMnKernel,
+    prelu: bool,
+}
+
+impl PreparedGemm for PSimdBlocked {
+    fn name(&self) -> &str {
+        "simd_blocked_interleaved"
+    }
+    fn run(&self, x: &Matrix, bias: &[f32], y: &mut Matrix) {
+        self.kernel.run(x, &self.fmt, bias, y);
+    }
+    fn k(&self) -> usize {
+        self.fmt.k()
+    }
+    fn n(&self) -> usize {
+        self.fmt.n()
+    }
+    fn nnz(&self) -> usize {
+        self.fmt.nnz()
+    }
+    fn format_bytes(&self) -> usize {
+        self.fmt.bytes()
+    }
+    fn fused_prelu(&self) -> bool {
+        self.prelu
+    }
+}
+
+/// All registry kernel names, in canonical benchmark order.
+pub fn kernel_names() -> &'static [&'static str] {
+    &[
+        "base_tcsc",
+        "unrolled_tcsc_5",
+        "unrolled_tcsc_12",
+        "unrolled_tcsc_k4_m4",
+        "unrolled_blocked_tcsc_k4_m4",
+        "interleaved_tcsc",
+        "interleaved_blocked_tcsc",
+        "compressed_ternary",
+        "compressed_ternary_branch",
+        "inverted_index",
+        "simd_vertical",
+        "simd_horizontal",
+        "simd_blocked_interleaved",
+        "dense_gemm",
+    ]
+}
+
+/// Build a prepared kernel by registry name.
+///
+/// # Errors
+/// Returns `Err` for unknown names.
+pub fn prepare_kernel(
+    name: &str,
+    w: &TernaryMatrix,
+    params: KernelParams,
+) -> Result<Box<dyn PreparedGemm>, String> {
+    let bs = params.effective_block(w.k());
+    Ok(match name {
+        "base_tcsc" => Box::new(PBase {
+            fmt: Tcsc::from_ternary(w),
+        }),
+        "unrolled_tcsc_5" => Box::new(PUnrolled5 {
+            fmt: Tcsc::from_ternary(w),
+        }),
+        "unrolled_tcsc_12" => Box::new(PUnrolled12 {
+            fmt: Tcsc::from_ternary(w),
+        }),
+        "unrolled_tcsc_k4_m4" => Box::new(PUnrolledK4M4 {
+            fmt: Tcsc::from_ternary(w),
+        }),
+        "unrolled_blocked_tcsc_k4_m4" => Box::new(PBlocked {
+            fmt: BlockedTcsc::from_ternary(w, bs),
+        }),
+        "interleaved_tcsc" => Box::new(PInterleaved {
+            fmt: InterleavedTcsc::from_ternary(w, params.group),
+        }),
+        "interleaved_blocked_tcsc" => Box::new(PInterleavedBlocked {
+            fmt: InterleavedBlockedTcsc::from_ternary(w, bs, 2),
+        }),
+        "compressed_ternary" => Box::new(PCompressed {
+            fmt: CompressedTernary::from_ternary(w),
+        }),
+        "compressed_ternary_branch" => Box::new(PCompressedBranch {
+            fmt: CompressedTernary::from_ternary(w),
+        }),
+        "inverted_index" => Box::new(PInverted {
+            fmt: InvertedIndex::from_ternary(w),
+        }),
+        "simd_vertical" => Box::new(PSimd {
+            fmt: SymmetricTcsc::from_ternary(w),
+            kernel: VerticalSimdKernel::new(params.prelu_alpha),
+            name: "simd_vertical",
+            prelu: params.prelu_alpha.is_some(),
+        }),
+        "simd_horizontal" => Box::new(PSimd {
+            fmt: SymmetricTcsc::from_ternary(w),
+            kernel: HorizontalSimdKernel::new(params.prelu_alpha),
+            name: "simd_horizontal",
+            prelu: params.prelu_alpha.is_some(),
+        }),
+        "simd_blocked_interleaved" => Box::new(PSimdBlocked {
+            fmt: InterleavedBlockedTcsc::from_ternary(w, bs, 2),
+            kernel: SimdBlockedMnKernel::new(params.prelu_alpha),
+            prelu: params.prelu_alpha.is_some(),
+        }),
+        "dense_gemm" => Box::new(PDense {
+            gemm: DenseGemm::new(w),
+            k: w.k(),
+            n: w.n(),
+            nnz: w.nnz(),
+        }),
+        other => return Err(format!("unknown kernel '{other}'")),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{dense_oracle, prelu_inplace};
+
+    #[test]
+    fn every_registry_kernel_matches_oracle() {
+        let w = TernaryMatrix::random(96, 24, 0.25, 131);
+        let x = Matrix::random(8, 96, 132);
+        let bias: Vec<f32> = (0..24).map(|i| 0.1 * i as f32).collect();
+        let oracle = dense_oracle(&x, &w, &bias);
+        for &name in kernel_names() {
+            let kern = prepare_kernel(name, &w, KernelParams::default()).unwrap();
+            assert_eq!(kern.k(), 96);
+            assert_eq!(kern.n(), 24);
+            let mut y = Matrix::zeros(8, 24);
+            kern.run(&x, &bias, &mut y);
+            assert!(y.allclose(&oracle, 1e-3), "kernel {name}");
+        }
+    }
+
+    #[test]
+    fn prelu_param_fuses() {
+        let w = TernaryMatrix::random(64, 16, 0.5, 7);
+        let x = Matrix::random(4, 64, 8);
+        let bias = vec![0.0f32; 16];
+        let mut oracle = dense_oracle(&x, &w, &bias);
+        prelu_inplace(&mut oracle, 0.25);
+        let params = KernelParams {
+            prelu_alpha: Some(0.25),
+            ..Default::default()
+        };
+        for name in ["simd_vertical", "simd_horizontal", "simd_blocked_interleaved"] {
+            let kern = prepare_kernel(name, &w, params).unwrap();
+            assert!(kern.fused_prelu());
+            let mut y = Matrix::zeros(4, 16);
+            kern.run(&x, &bias, &mut y);
+            assert!(y.allclose(&oracle, 1e-4), "kernel {name}");
+        }
+    }
+
+    #[test]
+    fn unknown_kernel_is_error() {
+        let w = TernaryMatrix::random(8, 8, 0.5, 1);
+        assert!(prepare_kernel("nope", &w, KernelParams::default()).is_err());
+    }
+
+    #[test]
+    fn effective_block_follows_paper_rule() {
+        let p = KernelParams::default();
+        assert_eq!(p.effective_block(1024), 1024);
+        assert_eq!(p.effective_block(16384), 4096);
+    }
+}

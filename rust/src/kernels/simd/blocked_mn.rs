@@ -1,0 +1,168 @@
+//! Vectorization of the best scalar kernel (paper §3, last vectorization
+//! approach): blocked (B = 4096) + interleaved (group 2) format, vectorized
+//! over **M** — one `F32x4` accumulator per W column whose four lanes map
+//! to four rows of X. Each innermost iteration consumes one interleaved
+//! step (2 positive + 2 negative indices) and performs four column-gathers
+//! of X (stride-K "vertical" gathers, four scalar loads each — NEON has no
+//! gather, and neither do we). Remainder segments and ragged rows fall back
+//! to the scalar cleanup, whose ILP is why the paper found this variant
+//! performs *similarly but not better* than the best scalar kernel.
+
+use crate::formats::{InterleavedBlockedTcsc, SparseFormat};
+use crate::kernels::prelu::prelu_scalar;
+use crate::kernels::simd::f32x4::F32x4;
+use crate::kernels::unrolled_m::gather_rows;
+use crate::tensor::Matrix;
+
+/// SIMD-over-M vectorization of [`crate::kernels::InterleavedBlockedKernel`].
+pub struct SimdBlockedMnKernel {
+    /// Fused PReLU slope; `None` disables activation.
+    pub prelu_alpha: Option<f32>,
+}
+
+impl SimdBlockedMnKernel {
+    pub fn new(prelu_alpha: Option<f32>) -> Self {
+        SimdBlockedMnKernel { prelu_alpha }
+    }
+
+    /// Gather X[r..r+4][i] (a column of the 4-row tile). Unchecked: the
+    /// format validates `i < K` at construction and `run` asserts row
+    /// lengths; see `F32x4::gather_unchecked` for the shared contract.
+    #[inline(always)]
+    fn col_gather(xrows: &[&[f32]; 4], i: u32) -> F32x4 {
+        let i = i as usize;
+        debug_assert!(xrows.iter().all(|r| i < r.len()));
+        // SAFETY: see above.
+        unsafe {
+            F32x4([
+                *xrows[0].get_unchecked(i),
+                *xrows[1].get_unchecked(i),
+                *xrows[2].get_unchecked(i),
+                *xrows[3].get_unchecked(i),
+            ])
+        }
+    }
+
+    pub fn run(
+        &self,
+        x: &Matrix,
+        w: &InterleavedBlockedTcsc,
+        bias: &[f32],
+        y: &mut Matrix,
+    ) {
+        assert_eq!(x.cols(), w.k());
+        assert_eq!(bias.len(), w.n());
+        assert_eq!(y.rows(), x.rows());
+        assert_eq!(y.cols(), w.n());
+        assert_eq!(
+            w.group, 2,
+            "SIMD blocked kernel requires interleave group 2 (paper config)"
+        );
+        let m = x.rows();
+        let n = w.n();
+        for r in 0..m {
+            y.row_mut(r).copy_from_slice(bias);
+        }
+        for b in 0..w.nblocks() {
+            let mut r = 0;
+            // 4-row SIMD tiles.
+            while r + 4 <= m {
+                let xrows: [&[f32]; 4] = std::array::from_fn(|i| x.row(r + i));
+                for c in 0..n {
+                    let inter = w.seg_interleaved(b, c);
+                    let mut acc = F32x4::ZERO;
+                    // Two accumulators would add ILP; measured neutral here
+                    // because the 16 scalar gather loads dominate the port
+                    // pressure (the paper's observation exactly).
+                    for step in inter.chunks_exact(4) {
+                        let p0 = Self::col_gather(&xrows, step[0]);
+                        let p1 = Self::col_gather(&xrows, step[1]);
+                        let n0 = Self::col_gather(&xrows, step[2]);
+                        let n1 = Self::col_gather(&xrows, step[3]);
+                        acc = acc.add(p0).add(p1).sub(n0).sub(n1);
+                    }
+                    // Scalar cleanup for the unmatched remainders.
+                    let mut rest = [0.0f32; 4];
+                    gather_rows::<4, 4>(&xrows, w.seg_rest_pos(b, c), &mut rest, false);
+                    gather_rows::<4, 4>(&xrows, w.seg_rest_neg(b, c), &mut rest, true);
+                    for i in 0..4 {
+                        y[(r + i, c)] += acc.0[i] + rest[i];
+                    }
+                }
+                r += 4;
+            }
+            // Ragged rows: scalar path.
+            while r < m {
+                let xrows: [&[f32]; 1] = [x.row(r)];
+                for c in 0..n {
+                    let mut acc = [0.0f32; 1];
+                    let inter = w.seg_interleaved(b, c);
+                    for step in inter.chunks_exact(4) {
+                        acc[0] += xrows[0][step[0] as usize] + xrows[0][step[1] as usize]
+                            - xrows[0][step[2] as usize]
+                            - xrows[0][step[3] as usize];
+                    }
+                    gather_rows::<4, 1>(&xrows, w.seg_rest_pos(b, c), &mut acc, false);
+                    gather_rows::<4, 1>(&xrows, w.seg_rest_neg(b, c), &mut acc, true);
+                    y[(r, c)] += acc[0];
+                }
+                r += 1;
+            }
+        }
+        if let Some(alpha) = self.prelu_alpha {
+            for v in y.as_mut_slice() {
+                *v = prelu_scalar(*v, alpha);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{dense_oracle, prelu_inplace};
+    use crate::ternary::TernaryMatrix;
+
+    fn check(m: usize, k: usize, bs: usize, s: f32, prelu: Option<f32>) {
+        let w = TernaryMatrix::random(k, 16, s, 121);
+        let f = InterleavedBlockedTcsc::from_ternary(&w, bs, 2);
+        let x = Matrix::random(m, k, 122);
+        let bias: Vec<f32> = (0..16).map(|i| 0.02 * i as f32 - 0.1).collect();
+        let mut oracle = dense_oracle(&x, &w, &bias);
+        if let Some(a) = prelu {
+            prelu_inplace(&mut oracle, a);
+        }
+        let mut y = Matrix::zeros(m, 16);
+        SimdBlockedMnKernel::new(prelu).run(&x, &f, &bias, &mut y);
+        assert!(y.allclose(&oracle, 1e-4), "m={m} k={k} bs={bs} s={s}");
+    }
+
+    #[test]
+    fn paper_config() {
+        check(8, 256, 64, 0.5, None);
+    }
+
+    #[test]
+    fn across_sparsities_with_prelu() {
+        for &s in &crate::PAPER_SPARSITIES {
+            check(4, 128, 32, s, Some(0.25));
+        }
+    }
+
+    #[test]
+    fn ragged_rows() {
+        check(7, 96, 24, 0.5, None);
+        check(3, 64, 16, 0.25, Some(0.1));
+        check(1, 32, 8, 0.5, None);
+    }
+
+    #[test]
+    #[should_panic(expected = "group 2")]
+    fn rejects_wrong_group() {
+        let w = TernaryMatrix::random(32, 8, 0.5, 1);
+        let f = InterleavedBlockedTcsc::from_ternary(&w, 16, 4);
+        let x = Matrix::random(4, 32, 2);
+        let mut y = Matrix::zeros(4, 8);
+        SimdBlockedMnKernel::new(None).run(&x, &f, &[0.0; 8], &mut y);
+    }
+}

@@ -1,0 +1,160 @@
+//! Portable 4-lane f32 vector — the NEON `float32x4_t` stand-in.
+//!
+//! Implemented as `[f32; 4]` with `#[inline(always)]` lane-parallel ops;
+//! LLVM reliably lowers these to a single SSE/NEON register op at
+//! `opt-level=3`. Deliberately **no gather constructor from memory +
+//! indices as a single op** — `gather` below is four scalar loads, exactly
+//! the cost model of NEON (and the reason the paper's vectorized kernels
+//! don't beat the best scalar one).
+
+/// 4-lane f32 vector.
+#[derive(Debug, Clone, Copy, PartialEq)]
+#[repr(C, align(16))]
+pub struct F32x4(pub [f32; 4]);
+
+impl F32x4 {
+    pub const ZERO: F32x4 = F32x4([0.0; 4]);
+
+    #[inline(always)]
+    pub fn splat(v: f32) -> F32x4 {
+        F32x4([v; 4])
+    }
+
+    /// Aligned-friendly sequential load.
+    #[inline(always)]
+    pub fn load(src: &[f32]) -> F32x4 {
+        F32x4([src[0], src[1], src[2], src[3]])
+    }
+
+    /// Sequential store.
+    #[inline(always)]
+    pub fn store(self, dst: &mut [f32]) {
+        dst[..4].copy_from_slice(&self.0);
+    }
+
+    /// "Gather": four scalar loads (NEON has no gather; this is the honest
+    /// cost).
+    #[inline(always)]
+    pub fn gather(src: &[f32], idx: [usize; 4]) -> F32x4 {
+        F32x4([src[idx[0]], src[idx[1]], src[idx[2]], src[idx[3]]])
+    }
+
+    /// Unchecked gather for the kernel hot loops. SAFETY contract: every
+    /// index has been validated `< src.len()` by the format constructor
+    /// (`SymmetricTcsc`/`InterleavedBlockedTcsc::validate`, plus the
+    /// padded-matrix dummy slot) and the kernel asserts row lengths on
+    /// entry. Debug builds still bounds-check via `debug_assert`.
+    #[inline(always)]
+    pub fn gather_unchecked(src: &[f32], idx: [u32; 4]) -> F32x4 {
+        debug_assert!(idx.iter().all(|&i| (i as usize) < src.len()));
+        // SAFETY: see above.
+        unsafe {
+            F32x4([
+                *src.get_unchecked(idx[0] as usize),
+                *src.get_unchecked(idx[1] as usize),
+                *src.get_unchecked(idx[2] as usize),
+                *src.get_unchecked(idx[3] as usize),
+            ])
+        }
+    }
+
+    /// Lane-wise add.
+    #[inline(always)]
+    pub fn add(self, o: F32x4) -> F32x4 {
+        F32x4([
+            self.0[0] + o.0[0],
+            self.0[1] + o.0[1],
+            self.0[2] + o.0[2],
+            self.0[3] + o.0[3],
+        ])
+    }
+
+    /// Lane-wise subtract.
+    #[inline(always)]
+    pub fn sub(self, o: F32x4) -> F32x4 {
+        F32x4([
+            self.0[0] - o.0[0],
+            self.0[1] - o.0[1],
+            self.0[2] - o.0[2],
+            self.0[3] - o.0[3],
+        ])
+    }
+
+    /// Lane-wise multiply (PReLU fusion needs it).
+    #[inline(always)]
+    pub fn mul(self, o: F32x4) -> F32x4 {
+        F32x4([
+            self.0[0] * o.0[0],
+            self.0[1] * o.0[1],
+            self.0[2] * o.0[2],
+            self.0[3] * o.0[3],
+        ])
+    }
+
+    /// Horizontal sum of all four lanes (NEON `vaddvq_f32`).
+    #[inline(always)]
+    pub fn hsum(self) -> f32 {
+        (self.0[0] + self.0[1]) + (self.0[2] + self.0[3])
+    }
+
+    /// Sum of the low two lanes minus sum of the high two lanes — the
+    /// horizontal kernel's `[P0,P1,N0,N1]` reduction.
+    #[inline(always)]
+    pub fn hsum_pos_neg(self) -> f32 {
+        (self.0[0] + self.0[1]) - (self.0[2] + self.0[3])
+    }
+
+    /// Lane-wise PReLU (`v > 0 ? v : α·v`) — vectorized select.
+    #[inline(always)]
+    pub fn prelu(self, alpha: f32) -> F32x4 {
+        F32x4([
+            if self.0[0] > 0.0 { self.0[0] } else { alpha * self.0[0] },
+            if self.0[1] > 0.0 { self.0[1] } else { alpha * self.0[1] },
+            if self.0[2] > 0.0 { self.0[2] } else { alpha * self.0[2] },
+            if self.0[3] > 0.0 { self.0[3] } else { alpha * self.0[3] },
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let a = F32x4([1.0, 2.0, 3.0, 4.0]);
+        let b = F32x4::splat(10.0);
+        assert_eq!(a.add(b).0, [11.0, 12.0, 13.0, 14.0]);
+        assert_eq!(b.sub(a).0, [9.0, 8.0, 7.0, 6.0]);
+        assert_eq!(a.mul(a).0, [1.0, 4.0, 9.0, 16.0]);
+    }
+
+    #[test]
+    fn gather_and_reductions() {
+        let src = [0.0f32, 10.0, 20.0, 30.0, 40.0];
+        let v = F32x4::gather(&src, [4, 0, 2, 1]);
+        assert_eq!(v.0, [40.0, 0.0, 20.0, 10.0]);
+        assert_eq!(v.hsum(), 70.0);
+        assert_eq!(v.hsum_pos_neg(), 40.0 + 0.0 - 20.0 - 10.0);
+    }
+
+    #[test]
+    fn load_store_roundtrip() {
+        let src = [5.0f32, 6.0, 7.0, 8.0];
+        let mut dst = [0.0f32; 4];
+        F32x4::load(&src).store(&mut dst);
+        assert_eq!(dst, src);
+    }
+
+    #[test]
+    fn prelu_lanes() {
+        let v = F32x4([-4.0, -1.0, 0.5, 2.0]).prelu(0.25);
+        assert_eq!(v.0, [-1.0, -0.25, 0.5, 2.0]);
+    }
+
+    #[test]
+    fn alignment() {
+        assert_eq!(std::mem::align_of::<F32x4>(), 16);
+        assert_eq!(std::mem::size_of::<F32x4>(), 16);
+    }
+}

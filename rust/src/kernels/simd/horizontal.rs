@@ -1,0 +1,125 @@
+//! Horizontal SIMD kernel (paper §3) — one vector register per output
+//! column holding partial sums `[P0, P1, N0, N1]`: lanes 0–1 accumulate
+//! the column's positive gathers, lanes 2–3 the negatives (the symmetric
+//! format stores quads `[p,p,n,n]`, so each step is one 4-index gather and
+//! one vector add per column). The final value is a horizontal reduction
+//! `(P0+P1) − (N0+N1) + bias`, PReLU fused.
+
+use crate::formats::{SparseFormat, SymmetricTcsc};
+use crate::kernels::prelu::prelu_scalar;
+use crate::kernels::simd::f32x4::F32x4;
+use crate::tensor::{Matrix, PaddedMatrix};
+
+/// Horizontal (register = one column's `[P,P,N,N]`) SIMD kernel.
+pub struct HorizontalSimdKernel {
+    /// Fused PReLU slope; `None` disables activation.
+    pub prelu_alpha: Option<f32>,
+}
+
+impl HorizontalSimdKernel {
+    pub fn new(prelu_alpha: Option<f32>) -> Self {
+        HorizontalSimdKernel { prelu_alpha }
+    }
+
+    /// Run over a padded activation matrix (the dummy index reads 0.0).
+    pub fn run_padded(
+        &self,
+        x: &PaddedMatrix,
+        w: &SymmetricTcsc,
+        bias: &[f32],
+        y: &mut Matrix,
+    ) {
+        assert_eq!(x.k(), w.k(), "X cols must equal K");
+        assert_eq!(bias.len(), w.n());
+        assert_eq!(y.rows(), x.rows());
+        assert_eq!(y.cols(), w.n());
+        let m = x.rows();
+        let n = w.n();
+        for r in 0..m {
+            let xr = x.row(r);
+            for g in 0..w.ngroups() {
+                let block = w.group_indices(g);
+                // One [P,P,N,N] accumulator per column of the group.
+                let mut acc = [F32x4::ZERO; 4];
+                for step in block.chunks_exact(16) {
+                    for (c, a) in acc.iter_mut().enumerate() {
+                        let quad = &step[4 * c..4 * c + 4];
+                        let v = F32x4::gather_unchecked(
+                            xr,
+                            [quad[0], quad[1], quad[2], quad[3]],
+                        );
+                        *a = a.add(v);
+                    }
+                }
+                let cols = (n - 4 * g).min(4);
+                let yr = y.row_mut(r);
+                for c in 0..cols {
+                    let mut v = acc[c].hsum_pos_neg() + bias[4 * g + c];
+                    if let Some(alpha) = self.prelu_alpha {
+                        v = prelu_scalar(v, alpha);
+                    }
+                    yr[4 * g + c] = v;
+                }
+            }
+        }
+    }
+
+    /// Convenience wrapper that pads X internally (copies X once).
+    pub fn run(&self, x: &Matrix, w: &SymmetricTcsc, bias: &[f32], y: &mut Matrix) {
+        let padded = PaddedMatrix::from_matrix(x);
+        self.run_padded(&padded, w, bias, y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{dense_oracle, prelu_inplace};
+    use crate::ternary::TernaryMatrix;
+
+    fn check(k: usize, n: usize, s: f32, prelu: Option<f32>) {
+        let w = TernaryMatrix::random(k, n, s, 111);
+        let f = SymmetricTcsc::from_ternary(&w);
+        let x = Matrix::random(4, k, 112);
+        let bias: Vec<f32> = (0..n).map(|i| (i as f32) * 0.07 - 0.5).collect();
+        let mut oracle = dense_oracle(&x, &w, &bias);
+        if let Some(a) = prelu {
+            prelu_inplace(&mut oracle, a);
+        }
+        let mut y = Matrix::zeros(4, n);
+        HorizontalSimdKernel::new(prelu).run(&x, &f, &bias, &mut y);
+        assert!(y.allclose(&oracle, 1e-4), "k={k} n={n} s={s}");
+    }
+
+    #[test]
+    fn matches_oracle_across_sparsities() {
+        for &s in &crate::PAPER_SPARSITIES {
+            check(96, 12, s, None);
+        }
+    }
+
+    #[test]
+    fn with_fused_prelu() {
+        check(96, 12, 0.25, Some(0.25));
+    }
+
+    #[test]
+    fn ragged_n() {
+        check(48, 9, 0.5, None);
+        check(48, 2, 0.5, Some(0.33));
+    }
+
+    #[test]
+    fn agrees_with_vertical() {
+        use crate::kernels::simd::vertical::VerticalSimdKernel;
+        let w = TernaryMatrix::random(80, 20, 0.5, 9);
+        let f = SymmetricTcsc::from_ternary(&w);
+        let x = Matrix::random(3, 80, 10);
+        let bias = vec![0.25f32; 20];
+        let mut yh = Matrix::zeros(3, 20);
+        let mut yv = Matrix::zeros(3, 20);
+        HorizontalSimdKernel::new(Some(0.25)).run(&x, &f, &bias, &mut yh);
+        VerticalSimdKernel::new(Some(0.25)).run(&x, &f, &bias, &mut yv);
+        assert!(yh.allclose(&yv, 1e-5));
+    }
+}

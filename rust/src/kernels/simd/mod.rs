@@ -1,0 +1,18 @@
+//! SIMD kernels (paper §3 "SIMD Vectorization").
+//!
+//! The paper targets NEON's 4-lane f32 registers; NEON has **no gather**
+//! instruction (SVE does, Apple Silicon doesn't implement it), which is the
+//! paper's central vectorization finding. We mirror the constraint exactly
+//! with [`f32x4`]: a portable 4-lane vector whose "gather" is four scalar
+//! loads — the same μop cost NEON pays — so the scalar-beats-vector result
+//! transfers.
+
+pub mod f32x4;
+pub mod vertical;
+pub mod horizontal;
+pub mod blocked_mn;
+
+pub use blocked_mn::SimdBlockedMnKernel;
+pub use f32x4::F32x4;
+pub use horizontal::HorizontalSimdKernel;
+pub use vertical::VerticalSimdKernel;

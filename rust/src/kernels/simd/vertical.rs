@@ -1,0 +1,136 @@
+//! Vertical SIMD kernel (paper §3) — each vector lane holds one of four
+//! output columns of `Y[m][4g..4g+4]`. Per innermost iteration it consumes
+//! one symmetric-format step per column (2 positive + 2 negative gathered
+//! X values), accumulating into one positive and one negative sum register;
+//! the final value is `pos − neg + bias`, with PReLU fused (the paper's
+//! Fig 11 vectorized functions all include it).
+
+use crate::formats::{SparseFormat, SymmetricTcsc};
+use crate::kernels::simd::f32x4::F32x4;
+use crate::tensor::{Matrix, PaddedMatrix};
+
+/// Vertical (lane = output column) SIMD kernel over the symmetric format.
+pub struct VerticalSimdKernel {
+    /// Fused PReLU slope; `None` disables activation.
+    pub prelu_alpha: Option<f32>,
+}
+
+impl VerticalSimdKernel {
+    pub fn new(prelu_alpha: Option<f32>) -> Self {
+        VerticalSimdKernel { prelu_alpha }
+    }
+
+    /// Run over a padded activation matrix (the dummy index reads 0.0).
+    pub fn run_padded(
+        &self,
+        x: &PaddedMatrix,
+        w: &SymmetricTcsc,
+        bias: &[f32],
+        y: &mut Matrix,
+    ) {
+        assert_eq!(x.k(), w.k(), "X cols must equal K");
+        assert_eq!(bias.len(), w.n());
+        assert_eq!(y.rows(), x.rows());
+        assert_eq!(y.cols(), w.n());
+        let m = x.rows();
+        let n = w.n();
+        let ngroups = w.ngroups();
+        for r in 0..m {
+            let xr = x.row(r); // length K+1, slot K == 0.0
+            for g in 0..ngroups {
+                let block = w.group_indices(g);
+                let mut posv = F32x4::ZERO;
+                let mut negv = F32x4::ZERO;
+                // 16 indices per step: [c0:p,p,n,n][c1:p,p,n,n][c2…][c3…].
+                for step in block.chunks_exact(16) {
+                    let p0 =
+                        F32x4::gather_unchecked(xr, [step[0], step[4], step[8], step[12]]);
+                    let p1 =
+                        F32x4::gather_unchecked(xr, [step[1], step[5], step[9], step[13]]);
+                    let n0 =
+                        F32x4::gather_unchecked(xr, [step[2], step[6], step[10], step[14]]);
+                    let n1 =
+                        F32x4::gather_unchecked(xr, [step[3], step[7], step[11], step[15]]);
+                    posv = posv.add(p0).add(p1);
+                    negv = negv.add(n0).add(n1);
+                }
+                // pos − neg + bias, fused PReLU, masked tail store.
+                let cols = (n - 4 * g).min(4);
+                let mut bias_v = [0.0f32; 4];
+                bias_v[..cols].copy_from_slice(&bias[4 * g..4 * g + cols]);
+                let mut out = posv.sub(negv).add(F32x4(bias_v));
+                if let Some(alpha) = self.prelu_alpha {
+                    out = out.prelu(alpha);
+                }
+                let yr = y.row_mut(r);
+                yr[4 * g..4 * g + cols].copy_from_slice(&out.0[..cols]);
+            }
+        }
+    }
+
+    /// Convenience wrapper that pads X internally (copies X once).
+    pub fn run(&self, x: &Matrix, w: &SymmetricTcsc, bias: &[f32], y: &mut Matrix) {
+        let padded = PaddedMatrix::from_matrix(x);
+        self.run_padded(&padded, w, bias, y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{dense_oracle, prelu_inplace};
+    use crate::ternary::TernaryMatrix;
+
+    fn check(k: usize, n: usize, s: f32, prelu: Option<f32>) {
+        let w = TernaryMatrix::random(k, n, s, 101);
+        let f = SymmetricTcsc::from_ternary(&w);
+        let x = Matrix::random(3, k, 102);
+        let bias: Vec<f32> = (0..n).map(|i| (i as f32 - n as f32 / 2.0) * 0.1).collect();
+        let mut oracle = dense_oracle(&x, &w, &bias);
+        if let Some(a) = prelu {
+            prelu_inplace(&mut oracle, a);
+        }
+        let mut y = Matrix::zeros(3, n);
+        VerticalSimdKernel::new(prelu).run(&x, &f, &bias, &mut y);
+        assert!(y.allclose(&oracle, 1e-4), "k={k} n={n} s={s}");
+    }
+
+    #[test]
+    fn matches_oracle_across_sparsities() {
+        for &s in &crate::PAPER_SPARSITIES {
+            check(64, 16, s, None);
+        }
+    }
+
+    #[test]
+    fn with_fused_prelu() {
+        check(64, 16, 0.5, Some(0.25));
+    }
+
+    #[test]
+    fn n_not_multiple_of_four() {
+        check(32, 7, 0.5, None);
+        check(32, 1, 0.5, Some(0.1));
+        check(32, 5, 0.25, None);
+    }
+
+    #[test]
+    fn unbalanced_signs_use_dummy() {
+        // All-positive matrix: every negative slot is the dummy.
+        let mut w = TernaryMatrix::zeros(16, 4);
+        for i in 0..16 {
+            for j in 0..4 {
+                if (i + j) % 3 == 0 {
+                    w.set(i, j, 1);
+                }
+            }
+        }
+        let f = SymmetricTcsc::from_ternary(&w);
+        let x = Matrix::random(2, 16, 5);
+        let bias = vec![0.0f32; 4];
+        let oracle = dense_oracle(&x, &w, &bias);
+        let mut y = Matrix::zeros(2, 4);
+        VerticalSimdKernel::new(None).run(&x, &f, &bias, &mut y);
+        assert!(y.allclose(&oracle, 1e-4));
+    }
+}

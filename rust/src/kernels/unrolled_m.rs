@@ -1,0 +1,140 @@
+//! UnrolledTCSC_K{KU}_M{MU} (paper §3) — inner (nonzero/K-direction) unroll
+//! by `KU` *and* outer (row/M-direction) unroll by `MU`: each pass over a
+//! column's indices feeds `MU` rows of X at once, amortizing the index
+//! stream across rows at the cost of a working set of `MU` rows of X and Y
+//! (the cache-capacity tradeoff of the paper's Figs 2–4).
+
+use crate::formats::Tcsc;
+use crate::kernels::Kernel;
+use crate::tensor::Matrix;
+
+/// Row-and-nonzero unrolled TCSC kernel. Paper optimum: `KU=4, MU=4`.
+pub struct UnrolledMKernel<const KU: usize, const MU: usize>;
+
+/// Accumulate `sign · X[rows][idx]` into `acc[MU]` for a block of MU rows
+/// starting at row pointer `xrows` (each a row slice of X).
+#[inline(always)]
+pub(crate) fn gather_rows<const KU: usize, const MU: usize>(
+    xrows: &[&[f32]; MU],
+    idx: &[u32],
+    acc: &mut [f32; MU],
+    negate: bool,
+) {
+    use super::unrolled::gat;
+    let chunks = idx.len() / KU;
+    let mut p = 0;
+    if negate {
+        for _ in 0..chunks {
+            for u in 0..KU {
+                let i = idx[p + u];
+                for (m, row) in xrows.iter().enumerate() {
+                    acc[m] -= gat(row, i);
+                }
+            }
+            p += KU;
+        }
+        for &i in &idx[p..] {
+            for (m, row) in xrows.iter().enumerate() {
+                acc[m] -= gat(row, i);
+            }
+        }
+    } else {
+        for _ in 0..chunks {
+            for u in 0..KU {
+                let i = idx[p + u];
+                for (m, row) in xrows.iter().enumerate() {
+                    acc[m] += gat(row, i);
+                }
+            }
+            p += KU;
+        }
+        for &i in &idx[p..] {
+            for (m, row) in xrows.iter().enumerate() {
+                acc[m] += gat(row, i);
+            }
+        }
+    }
+}
+
+impl<const KU: usize, const MU: usize> Kernel for UnrolledMKernel<KU, MU> {
+    type Format = Tcsc;
+
+    fn name(&self) -> &'static str {
+        "unrolled_km_tcsc"
+    }
+
+    fn run(&self, x: &Matrix, w: &Tcsc, bias: &[f32], y: &mut Matrix) {
+        use crate::formats::SparseFormat;
+        crate::kernels::debug_check_shapes(x, w.k(), w.n(), bias, y);
+        let m = x.rows();
+        let n = w.n();
+        let mut r = 0;
+        // Full MU-row tiles.
+        while r + MU <= m {
+            let xrows: [&[f32]; MU] = std::array::from_fn(|i| x.row(r + i));
+            for c in 0..n {
+                let mut acc = [0.0f32; MU];
+                gather_rows::<KU, MU>(&xrows, w.col_pos(c), &mut acc, false);
+                gather_rows::<KU, MU>(&xrows, w.col_neg(c), &mut acc, true);
+                for (i, a) in acc.iter().enumerate() {
+                    y[(r + i, c)] = a + bias[c];
+                }
+            }
+            r += MU;
+        }
+        // Row remainder with the single-row path.
+        while r < m {
+            let xr = x.row(r);
+            for c in 0..n {
+                let pos = super::unrolled::unrolled_gather_sum::<KU>(xr, w.col_pos(c));
+                let neg = super::unrolled::unrolled_gather_sum::<KU>(xr, w.col_neg(c));
+                y[(r, c)] = pos - neg + bias[c];
+            }
+            r += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense_oracle;
+    use crate::ternary::TernaryMatrix;
+
+    fn check<const KU: usize, const MU: usize>(m: usize) {
+        let w = TernaryMatrix::random(90, 20, 0.25, 33);
+        let f = Tcsc::from_ternary(&w);
+        let x = Matrix::random(m, 90, 34);
+        let bias: Vec<f32> = (0..20).map(|i| -(i as f32) * 0.2).collect();
+        let oracle = dense_oracle(&x, &w, &bias);
+        let mut y = Matrix::zeros(m, 20);
+        UnrolledMKernel::<KU, MU>.run(&x, &f, &bias, &mut y);
+        assert!(y.allclose(&oracle, 1e-4), "KU={KU} MU={MU} m={m}");
+    }
+
+    #[test]
+    fn paper_optimum_k4_m4() {
+        check::<4, 4>(8);
+    }
+
+    #[test]
+    fn row_remainders() {
+        // m not divisible by MU exercises the scalar remainder path.
+        check::<4, 4>(7);
+        check::<2, 3>(4);
+        check::<8, 2>(5);
+    }
+
+    #[test]
+    fn grid_of_factors() {
+        check::<1, 1>(3);
+        check::<2, 2>(6);
+        check::<12, 4>(9);
+        check::<16, 8>(16);
+    }
+
+    #[test]
+    fn m_smaller_than_mu() {
+        check::<4, 8>(3); // all rows go through the remainder path
+    }
+}

@@ -1,0 +1,78 @@
+//! # stgemm — Sparse Ternary GEMM for Quantized ML
+//!
+//! A three-layer (Rust + JAX + Pallas) reproduction of *"Accelerating Sparse
+//! Ternary GEMM for Quantized ML on Apple Silicon"* (ETH Zurich, 2025).
+//!
+//! The paper optimizes `Y = X·W + b` where `W ∈ {-1,0,+1}^{K×N}` is a
+//! ternary weight matrix stored in sign-split sparse formats (TCSC and its
+//! blocked / interleaved / symmetric descendants) and `X ∈ R^{M×K}` is a
+//! dense activation matrix. Multiplication by ±1 degenerates to addition and
+//! subtraction, so the whole kernel is an exercise in memory locality and
+//! instruction-level parallelism.
+//!
+//! ## Crate layout
+//!
+//! - [`tensor`] — dense, cache-aligned row-major `Matrix<f32>`.
+//! - [`ternary`] — dense ternary matrices, exact-sparsity generators and the
+//!   absmean quantizer that turns float weights ternary.
+//! - [`formats`] — every sparse layout from the paper: [`formats::Tcsc`],
+//!   [`formats::BlockedTcsc`], [`formats::InterleavedTcsc`],
+//!   [`formats::InterleavedBlockedTcsc`], [`formats::SymmetricTcsc`] (SIMD),
+//!   [`formats::CompressedTernary`] (base-3 packing) and
+//!   [`formats::InvertedIndex`].
+//! - [`kernels`] — the GEMM kernel family over those formats, scalar and
+//!   SIMD, plus the dense oracle and PReLU fusion.
+//! - [`autotune`] — the unroll-factor / block-size grid search behind the
+//!   paper's Figures 2–4.
+//! - [`perf`] — cycle timers, the paper's flop cost model
+//!   `C = M·N·(1+sK)`, operational intensity and roofline estimates.
+//! - [`model`] — ternary MLP / FFN built from quantized linear layers; the
+//!   config system and weight serialization.
+//! - [`runtime`] — PJRT client wrapper that loads the JAX/Pallas AOT
+//!   artifacts (HLO text) produced by `python/compile/aot.py`.
+//! - [`coordinator`] — the L3 serving stack: dynamic batcher, backend
+//!   router, inference engine, HTTP server, metrics and load generator.
+//! - [`bench`] — the measurement harness and per-figure experiment drivers.
+//! - [`util`] — substrates built in-repo because the environment is offline:
+//!   PRNG, JSON, CLI parsing, thread pool, and a mini property-testing
+//!   framework.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use stgemm::tensor::Matrix;
+//! use stgemm::ternary::TernaryMatrix;
+//! use stgemm::formats::Tcsc;
+//! use stgemm::kernels::{self, Kernel};
+//!
+//! let (m, k, n) = (4, 64, 32);
+//! let w = TernaryMatrix::random(k, n, 0.25, 42);       // 25% nonzero
+//! let x = Matrix::random(m, k, 1);
+//! let bias = vec![0.5f32; n];
+//! let fmt = Tcsc::from_ternary(&w);
+//! let mut y = Matrix::zeros(m, n);
+//! kernels::BaseTcscKernel.run(&x, &fmt, &bias, &mut y);
+//! let oracle = kernels::dense_oracle(&x, &w, &bias);
+//! assert!(y.allclose(&oracle, 1e-4));
+//! ```
+
+pub mod util;
+pub mod tensor;
+pub mod ternary;
+pub mod formats;
+pub mod kernels;
+pub mod autotune;
+pub mod perf;
+pub mod model;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;
+
+/// Sparsity levels evaluated by the paper (fraction of nonzero entries).
+pub const PAPER_SPARSITIES: [f32; 4] = [0.5, 0.25, 0.125, 0.0625];
+
+/// The paper's optimal block size (elements of K per block), Apple M1 L1-tuned.
+pub const PAPER_BLOCK_SIZE: usize = 4096;
+
+/// The paper's optimal interleave group size (indices per sign per group).
+pub const PAPER_GROUP_SIZE: usize = 4;

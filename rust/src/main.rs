@@ -1,0 +1,374 @@
+//! `stgemm` — the Sparse Ternary GEMM serving stack CLI.
+//!
+//! Subcommands:
+//! - `serve`     start the HTTP inference server
+//! - `bench`     regenerate a paper figure (`--figure fig2|fig6|fig8|fig9|
+//!               fig10|fig11|headline|ablation_compressed|ablation_inverted|all`)
+//! - `autotune`  run the unroll grid search for a shape
+//! - `quantize`  generate + absmean-quantize a float model, save as .stw
+//! - `selftest`  cross-check native kernels against the PJRT artifact
+//! - `loadgen`   drive a running server with concurrent clients
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use stgemm::autotune::{unroll_grid_search, CacheModel};
+use stgemm::bench::figures;
+use stgemm::bench::harness::BenchScale;
+use stgemm::bench::report::{write_csv, Table};
+use stgemm::coordinator::server::{Server, ServerConfig};
+use stgemm::coordinator::{Backend, BatchPolicy, Engine, LoadGenerator, Router};
+use stgemm::model::{ModelConfig, TernaryMlp};
+use stgemm::perf::timer::CycleTimer;
+use stgemm::runtime::artifacts::default_artifacts_dir;
+use stgemm::runtime::{Manifest, XlaExecutor};
+use stgemm::tensor::Matrix;
+use stgemm::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    let code = match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("bench") => cmd_bench(&args),
+        Some("autotune") => cmd_autotune(&args),
+        Some("quantize") => cmd_quantize(&args),
+        Some("selftest") => cmd_selftest(&args),
+        Some("loadgen") => cmd_loadgen(&args),
+        _ => {
+            print_usage();
+            if args.has("help") || args.subcommand.is_none() {
+                0
+            } else {
+                2
+            }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    eprintln!(
+        "stgemm — Sparse Ternary GEMM serving stack
+
+USAGE: stgemm <subcommand> [options]
+
+  serve      --model <cfg.json> --addr 127.0.0.1:9000 --backend native|xla
+             [--artifacts <dir>] [--max-batch 8] [--max-wait-us 2000]
+  bench      --figure fig2|fig6|fig8|fig9|fig10|fig11|headline|
+                      ablation_compressed|ablation_inverted|all [--csv]
+  autotune   [--m 32] [--k 4096] [--n 1024] [--sparsity 0.25]
+  quantize   --dims 256,1024,256 --seed 42 --out model.stw
+  selftest   [--artifacts <dir>] [--model ffn_tiny]
+  loadgen    --addr <host:port> --model <name> --d-in <n>
+             [--clients 8] [--requests 100]"
+    );
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let cfg = match args.get("model") {
+        Some(path) => match ModelConfig::from_file(path) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        },
+        None => {
+            eprintln!("[serve] no --model given; serving the default demo config");
+            ModelConfig::default()
+        }
+    };
+    let backend: Backend = match args.get_or("backend", "native").parse() {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let mlp = match TernaryMlp::from_config(&cfg) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error building model: {e}");
+            return 1;
+        }
+    };
+    let mut engine = Engine::new(cfg.name.clone(), mlp);
+    if backend == Backend::Xla || args.get("artifacts").is_some() {
+        let dir = args
+            .get("artifacts")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(default_artifacts_dir);
+        match attach_xla(&dir, &cfg.name) {
+            Ok(xla) => engine = engine.with_xla(xla),
+            Err(e) => {
+                eprintln!("error loading XLA artifacts: {e}");
+                if backend == Backend::Xla {
+                    return 1;
+                }
+            }
+        }
+    }
+    let engine = engine.with_backend(backend);
+    let mut router = Router::new();
+    router.register(
+        engine,
+        BatchPolicy {
+            max_batch: args.usize("max-batch", 8),
+            max_wait: Duration::from_micros(args.u64("max-wait-us", 2000)),
+        },
+    );
+    let router = Arc::new(router);
+    let server = Server::start(
+        Arc::clone(&router),
+        ServerConfig {
+            addr: args.get_or("addr", "127.0.0.1:9000").to_string(),
+            workers: args.usize("workers", 8),
+            ..Default::default()
+        },
+    );
+    match server {
+        Ok(s) => {
+            println!(
+                "[serve] model '{}' ({} → {}) on http://{} backend={backend:?}",
+                cfg.name,
+                cfg.d_in(),
+                cfg.d_out(),
+                s.local_addr
+            );
+            // Serve until killed.
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("error starting server: {e}");
+            1
+        }
+    }
+}
+
+fn attach_xla(dir: &std::path::Path, base: &str) -> Result<XlaExecutor, String> {
+    let manifest = Manifest::load(dir)?;
+    XlaExecutor::spawn(&manifest, base).map_err(|e| format!("{e:#}"))
+}
+
+fn emit(tables: Vec<Table>, csv: bool) {
+    for t in tables {
+        println!("{}", t.render());
+        if csv {
+            let slug: String = t
+                .title
+                .chars()
+                .take(40)
+                .map(|c| if c.is_alphanumeric() { c } else { '_' })
+                .collect();
+            match write_csv(&t, &format!("{slug}.csv")) {
+                Ok(p) => println!("  [csv] {}", p.display()),
+                Err(e) => eprintln!("  [csv] write failed: {e}"),
+            }
+        }
+    }
+}
+
+fn cmd_bench(args: &Args) -> i32 {
+    let scale = BenchScale::from_env();
+    let csv = args.has("csv");
+    let figure = args.get_or("figure", "all");
+    let run = |name: &str| -> Vec<Table> {
+        match name {
+            "fig2" => figures::fig2_unroll_grid(scale),
+            "fig6" => vec![figures::fig6_variants(scale)],
+            "fig8" => vec![figures::fig8_n_sweep(scale)],
+            "fig9" => vec![figures::fig9_sparsity(scale)],
+            "fig10" => vec![figures::fig10_opint()],
+            "fig11" => vec![figures::fig11_simd(scale)],
+            "headline" => vec![figures::headline(scale)],
+            "ablation_compressed" => vec![figures::ablation_compressed(scale)],
+            "ablation_inverted" => vec![figures::ablation_inverted(scale)],
+            other => {
+                eprintln!("unknown figure '{other}'");
+                Vec::new()
+            }
+        }
+    };
+    if figure == "all" {
+        for f in [
+            "fig2",
+            "fig6",
+            "fig8",
+            "fig9",
+            "fig10",
+            "fig11",
+            "headline",
+            "ablation_compressed",
+            "ablation_inverted",
+        ] {
+            emit(run(f), csv);
+        }
+    } else {
+        let tables = run(figure);
+        if tables.is_empty() {
+            return 2;
+        }
+        emit(tables, csv);
+    }
+    0
+}
+
+fn cmd_autotune(args: &Args) -> i32 {
+    let m = args.usize("m", 32);
+    let k = args.usize("k", 4096);
+    let n = args.usize("n", 1024);
+    let s = args.f32("sparsity", 0.25);
+    let timer = CycleTimer::new(1, 3);
+    println!("[autotune] grid search M={m} K={k} N={n} s={s}");
+    let points = unroll_grid_search(m, k, n, s, 7, &timer);
+    let best = stgemm::autotune::grid::best_point(&points);
+    let cache = CacheModel::detect();
+    println!(
+        "best: KU={} MU={} at {:.3} flops/cycle ({:.2}x vs base)",
+        best.ku, best.mu, best.flops_per_cycle, best.speedup_vs_base
+    );
+    println!(
+        "cache model: L1d={} KiB, LLC={} MiB → predicted MU={}, block={}",
+        cache.l1d_bytes / 1024,
+        cache.llc_bytes / (1024 * 1024),
+        cache.predicted_mu(k),
+        cache.recommended_block(4)
+    );
+    0
+}
+
+fn cmd_quantize(args: &Args) -> i32 {
+    use stgemm::model::serialize::{save, LayerData};
+    use stgemm::ternary::quantize_absmean;
+    let dims = args.usize_list("dims", &[256, 1024, 256]);
+    let seed = args.u64("seed", 42);
+    let out = args.get_or("out", "model.stw");
+    let alpha = args.f32("prelu-alpha", 0.25);
+    let mut layers = Vec::new();
+    for i in 0..dims.len() - 1 {
+        let (k, n) = (dims[i], dims[i + 1]);
+        // Synthesize float weights, then absmean-quantize them — the
+        // pipeline a real checkpoint would go through.
+        let wf = Matrix::random(k, n, seed + i as u64);
+        let q = quantize_absmean(&wf);
+        println!(
+            "layer {i}: {k}×{n} quantized, scale={:.4}, nnz={} ({:.1}%), mse={:.5}",
+            q.scale,
+            q.weights.nnz(),
+            100.0 * q.weights.density(),
+            q.mse(&wf)
+        );
+        layers.push(LayerData {
+            weights: q.weights,
+            bias: vec![0.0; n],
+            scale: q.scale,
+            prelu_alpha: (i + 1 < dims.len() - 1).then_some(alpha),
+        });
+    }
+    match save(out, &layers) {
+        Ok(()) => {
+            println!("[quantize] wrote {out}");
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_selftest(args: &Args) -> i32 {
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    let base = args.get_or("model", "ffn_tiny");
+    println!("[selftest] artifacts: {} model: {base}", dir.display());
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e} (run `make artifacts` first)");
+            return 1;
+        }
+    };
+    let variants = manifest.variants_of(base);
+    if variants.is_empty() {
+        eprintln!("no variants named {base}_b* in manifest");
+        return 1;
+    }
+    // Build the native model from the artifact's own weight dumps.
+    let v0 = variants[0];
+    let mut layers = Vec::new();
+    for (i, l) in v0.layers.iter().enumerate() {
+        let w = v0.load_weights(&manifest.dir, i).expect("weights");
+        let b = v0.load_bias(&manifest.dir, i).expect("bias");
+        layers.push(
+            stgemm::model::TernaryLinear::new(
+                "interleaved_blocked_tcsc",
+                &w,
+                b,
+                1.0,
+                l.prelu_alpha,
+            )
+            .expect("layer"),
+        );
+    }
+    let mlp = TernaryMlp::from_layers(base.to_string(), layers).expect("mlp");
+    let xla = XlaExecutor::spawn(&manifest, base).expect("xla");
+    let engine = Engine::new(base, mlp).with_xla(xla);
+
+    let mut failures = 0;
+    for v in &variants {
+        let probe = v.load_probe_x(&manifest.dir).expect("probe x");
+        let want = v.load_probe_y(&manifest.dir).expect("probe y");
+        let x = Matrix::from_slice(v.batch, v.d_in, &probe);
+        let (native, xla_out, diff) = engine.cross_check(&x).expect("cross-check");
+        let want_m = Matrix::from_slice(v.batch, v.d_out, &want);
+        let native_ok = native.allclose(&want_m, 1e-3);
+        let xla_ok = xla_out.allclose(&want_m, 1e-3);
+        println!(
+            "  {}: native-vs-probe {} | xla-vs-probe {} | native-vs-xla maxΔ {:.2e}",
+            v.name,
+            if native_ok { "OK" } else { "FAIL" },
+            if xla_ok { "OK" } else { "FAIL" },
+            diff
+        );
+        if !native_ok || !xla_ok || diff > 1e-3 {
+            failures += 1;
+        }
+    }
+    if failures == 0 {
+        println!("[selftest] all {} variants PASS", variants.len());
+        0
+    } else {
+        eprintln!("[selftest] {failures} variant(s) FAILED");
+        1
+    }
+}
+
+fn cmd_loadgen(args: &Args) -> i32 {
+    let addr_str = args.get_or("addr", "127.0.0.1:9000");
+    let addr: std::net::SocketAddr = match addr_str.parse() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("bad --addr: {e}");
+            return 2;
+        }
+    };
+    let gen = LoadGenerator {
+        clients: args.usize("clients", 8),
+        requests_per_client: args.usize("requests", 100),
+        d_in: args.usize("d-in", 256),
+        model: args.get_or("model", "ffn_demo").to_string(),
+        seed: args.u64("seed", 1),
+    };
+    println!(
+        "[loadgen] {} clients × {} requests → {addr}",
+        gen.clients, gen.requests_per_client
+    );
+    let report = gen.run_http(addr);
+    println!("{}", report.summary());
+    i32::from(report.errors > 0)
+}

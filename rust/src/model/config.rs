@@ -1,0 +1,200 @@
+//! Model configuration: a JSON document describing a ternary FFN and how
+//! to serve it. Example (see `examples/` and `stgemm serve --model`):
+//!
+//! ```json
+//! {
+//!   "name": "ffn_demo",
+//!   "dims": [256, 1024, 256],
+//!   "sparsity": 0.25,
+//!   "seed": 42,
+//!   "prelu_alpha": 0.25,
+//!   "kernel": "interleaved_blocked_tcsc",
+//!   "batch_buckets": [1, 8]
+//! }
+//! ```
+
+use crate::util::json::Json;
+
+/// Parsed model configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    /// Layer dimensions `d0 → d1 → … → dL`.
+    pub dims: Vec<usize>,
+    /// Nonzero fraction of every layer's ternary weights.
+    pub sparsity: f32,
+    /// Weight generation seed (layer i uses `seed + i`).
+    pub seed: u64,
+    /// PReLU slope between layers (never after the last layer).
+    pub prelu_alpha: f32,
+    /// Registry kernel name for the native path.
+    pub kernel: String,
+    /// Batch sizes the server pads to (ascending).
+    pub batch_buckets: Vec<usize>,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig {
+            name: "ffn_demo".to_string(),
+            dims: vec![256, 1024, 256],
+            sparsity: 0.25,
+            seed: 42,
+            prelu_alpha: 0.25,
+            kernel: "interleaved_blocked_tcsc".to_string(),
+            batch_buckets: vec![1, 8],
+        }
+    }
+}
+
+impl ModelConfig {
+    /// Parse from a JSON string.
+    pub fn from_json(text: &str) -> Result<ModelConfig, String> {
+        let v = Json::parse(text).map_err(|e| e.to_string())?;
+        let d = ModelConfig::default();
+        let dims = match v.get("dims") {
+            Some(Json::Arr(items)) => items
+                .iter()
+                .map(|i| i.as_usize().ok_or_else(|| "dims must be integers".to_string()))
+                .collect::<Result<Vec<_>, _>>()?,
+            None => d.dims,
+            _ => return Err("dims must be an array".into()),
+        };
+        if dims.len() < 2 {
+            return Err("dims needs at least [d_in, d_out]".into());
+        }
+        let batch_buckets = match v.get("batch_buckets") {
+            Some(Json::Arr(items)) => {
+                let mut b = items
+                    .iter()
+                    .map(|i| {
+                        i.as_usize()
+                            .filter(|&x| x > 0)
+                            .ok_or_else(|| "batch_buckets must be positive integers".to_string())
+                    })
+                    .collect::<Result<Vec<_>, _>>()?;
+                b.sort_unstable();
+                b.dedup();
+                if b.is_empty() {
+                    return Err("batch_buckets must be non-empty".into());
+                }
+                b
+            }
+            None => d.batch_buckets,
+            _ => return Err("batch_buckets must be an array".into()),
+        };
+        let sparsity = v
+            .get("sparsity")
+            .map(|s| s.as_f64().ok_or("sparsity must be a number"))
+            .transpose()?
+            .map(|s| s as f32)
+            .unwrap_or(d.sparsity);
+        if !(0.0..=1.0).contains(&sparsity) {
+            return Err("sparsity must be in [0,1]".into());
+        }
+        let kernel = v
+            .get("kernel")
+            .map(|s| s.as_str().ok_or("kernel must be a string"))
+            .transpose()?
+            .map(|s| s.to_string())
+            .unwrap_or(d.kernel);
+        if !crate::kernels::kernel_names().contains(&kernel.as_str()) {
+            return Err(format!("unknown kernel '{kernel}'"));
+        }
+        Ok(ModelConfig {
+            name: v
+                .get("name")
+                .and_then(|s| s.as_str())
+                .unwrap_or(&d.name)
+                .to_string(),
+            dims,
+            sparsity,
+            seed: v
+                .get("seed")
+                .map(|s| s.as_f64().ok_or("seed must be a number"))
+                .transpose()?
+                .map(|s| s as u64)
+                .unwrap_or(d.seed),
+            prelu_alpha: v
+                .get("prelu_alpha")
+                .map(|s| s.as_f64().ok_or("prelu_alpha must be a number"))
+                .transpose()?
+                .map(|s| s as f32)
+                .unwrap_or(d.prelu_alpha),
+            kernel,
+            batch_buckets,
+        })
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &str) -> Result<ModelConfig, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        Self::from_json(&text)
+    }
+
+    /// Serialize back to JSON (pretty).
+    pub fn to_json(&self) -> String {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            (
+                "dims",
+                Json::arr(self.dims.iter().map(|&d| Json::num(d as f64))),
+            ),
+            ("sparsity", Json::num(self.sparsity as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("prelu_alpha", Json::num(self.prelu_alpha as f64)),
+            ("kernel", Json::str(self.kernel.clone())),
+            (
+                "batch_buckets",
+                Json::arr(self.batch_buckets.iter().map(|&b| Json::num(b as f64))),
+            ),
+        ])
+        .encode_pretty()
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.dims[0]
+    }
+
+    pub fn d_out(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let c = ModelConfig::default();
+        let parsed = ModelConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(parsed, c);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let c = ModelConfig::from_json(r#"{"dims": [8, 16, 4]}"#).unwrap();
+        assert_eq!(c.dims, vec![8, 16, 4]);
+        assert_eq!(c.kernel, "interleaved_blocked_tcsc");
+        assert_eq!(c.d_in(), 8);
+        assert_eq!(c.d_out(), 4);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(ModelConfig::from_json("{").is_err());
+        assert!(ModelConfig::from_json(r#"{"dims": [8]}"#).is_err());
+        assert!(ModelConfig::from_json(r#"{"sparsity": 1.5}"#).is_err());
+        assert!(ModelConfig::from_json(r#"{"kernel": "nope"}"#).is_err());
+        assert!(ModelConfig::from_json(r#"{"batch_buckets": []}"#).is_err());
+        assert!(ModelConfig::from_json(r#"{"batch_buckets": [0]}"#).is_err());
+    }
+
+    #[test]
+    fn buckets_sorted_and_deduped() {
+        let c = ModelConfig::from_json(r#"{"batch_buckets": [8, 1, 8, 4]}"#).unwrap();
+        assert_eq!(c.batch_buckets, vec![1, 4, 8]);
+    }
+}

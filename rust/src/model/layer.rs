@@ -1,0 +1,149 @@
+//! A single ternary linear layer: prepared kernel + bias + optional
+//! dequantization scale + optional PReLU.
+
+use crate::kernels::{prelu_inplace, prepare_kernel, KernelParams, PreparedGemm};
+use crate::tensor::Matrix;
+use crate::ternary::TernaryMatrix;
+
+/// One `Y = act(scale · (X·W + b))` layer with ternary W.
+pub struct TernaryLinear {
+    gemm: Box<dyn PreparedGemm>,
+    bias: Vec<f32>,
+    /// Per-tensor dequantization scale (absmean quantizer's gamma); folded
+    /// in after the GEMM, before activation. 1.0 = no scaling.
+    pub scale: f32,
+    /// PReLU slope; `None` = linear output.
+    pub prelu_alpha: Option<f32>,
+}
+
+impl TernaryLinear {
+    /// Build from dense ternary weights with the named registry kernel.
+    ///
+    /// When `prelu_alpha` is set and the kernel supports fusion (the SIMD
+    /// family), activation is fused into the GEMM; otherwise a separate
+    /// PReLU pass runs after.
+    pub fn new(
+        kernel: &str,
+        w: &TernaryMatrix,
+        bias: Vec<f32>,
+        scale: f32,
+        prelu_alpha: Option<f32>,
+    ) -> Result<TernaryLinear, String> {
+        assert_eq!(bias.len(), w.n(), "bias length must equal N");
+        // Fusion is only valid when no scale is applied after the GEMM
+        // (PReLU and positive scaling commute, but keep it simple & exact).
+        let fuse = scale == 1.0;
+        let params = KernelParams {
+            prelu_alpha: if fuse { prelu_alpha } else { None },
+            ..Default::default()
+        };
+        let gemm = prepare_kernel(kernel, w, params)?;
+        Ok(TernaryLinear {
+            gemm,
+            bias,
+            scale,
+            prelu_alpha,
+        })
+    }
+
+    pub fn k(&self) -> usize {
+        self.gemm.k()
+    }
+
+    pub fn n(&self) -> usize {
+        self.gemm.n()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.gemm.nnz()
+    }
+
+    pub fn kernel_name(&self) -> &str {
+        self.gemm.name()
+    }
+
+    pub fn format_bytes(&self) -> usize {
+        self.gemm.format_bytes()
+    }
+
+    /// Forward: `y` must be (x.rows × N).
+    pub fn forward(&self, x: &Matrix, y: &mut Matrix) {
+        self.gemm.run(x, &self.bias, y);
+        if self.scale != 1.0 {
+            for v in y.as_mut_slice() {
+                *v *= self.scale;
+            }
+        }
+        if let Some(alpha) = self.prelu_alpha {
+            if !self.gemm.fused_prelu() {
+                prelu_inplace(y, alpha);
+            }
+        }
+    }
+
+    /// Paper cost model flops for a batch of `m` rows.
+    pub fn flops(&self, m: usize) -> f64 {
+        let mut f = m as f64 * self.nnz() as f64 + (m * self.n()) as f64;
+        if self.prelu_alpha.is_some() {
+            f += (m * self.n()) as f64;
+        }
+        f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense_oracle;
+
+    #[test]
+    fn forward_matches_oracle_with_scale_and_prelu() {
+        let w = TernaryMatrix::random(64, 32, 0.25, 3);
+        let bias: Vec<f32> = (0..32).map(|i| i as f32 * 0.1).collect();
+        let x = Matrix::random(4, 64, 4);
+        let layer =
+            TernaryLinear::new("interleaved_blocked_tcsc", &w, bias.clone(), 0.5, Some(0.25))
+                .unwrap();
+        let mut y = Matrix::zeros(4, 32);
+        layer.forward(&x, &mut y);
+
+        let mut want = dense_oracle(&x, &w, &bias);
+        for v in want.as_mut_slice() {
+            *v *= 0.5;
+            if *v < 0.0 {
+                *v *= 0.25;
+            }
+        }
+        assert!(y.allclose(&want, 1e-4));
+    }
+
+    #[test]
+    fn fused_and_unfused_prelu_agree() {
+        let w = TernaryMatrix::random(48, 16, 0.5, 9);
+        let bias = vec![0.1f32; 16];
+        let x = Matrix::random(4, 48, 10);
+        let fused =
+            TernaryLinear::new("simd_vertical", &w, bias.clone(), 1.0, Some(0.25)).unwrap();
+        let unfused =
+            TernaryLinear::new("base_tcsc", &w, bias.clone(), 1.0, Some(0.25)).unwrap();
+        let mut yf = Matrix::zeros(4, 16);
+        let mut yu = Matrix::zeros(4, 16);
+        fused.forward(&x, &mut yf);
+        unfused.forward(&x, &mut yu);
+        assert!(yf.allclose(&yu, 1e-4));
+    }
+
+    #[test]
+    fn flops_model() {
+        let w = TernaryMatrix::random(32, 8, 0.5, 1);
+        let layer = TernaryLinear::new("base_tcsc", &w, vec![0.0; 8], 1.0, None).unwrap();
+        let nnz = layer.nnz() as f64;
+        assert_eq!(layer.flops(2), 2.0 * nnz + 16.0);
+    }
+
+    #[test]
+    fn unknown_kernel_errors() {
+        let w = TernaryMatrix::random(8, 4, 0.5, 1);
+        assert!(TernaryLinear::new("bogus", &w, vec![0.0; 4], 1.0, None).is_err());
+    }
+}

@@ -1,0 +1,163 @@
+//! The ternary MLP / FFN stack: the model object the serving engine runs.
+
+use crate::model::config::ModelConfig;
+use crate::model::layer::TernaryLinear;
+use crate::tensor::Matrix;
+use crate::ternary::TernaryMatrix;
+use crate::util::rng::Rng;
+
+/// A stack of ternary linear layers with PReLU between them.
+pub struct TernaryMlp {
+    pub name: String,
+    layers: Vec<TernaryLinear>,
+}
+
+impl TernaryMlp {
+    /// Build from a config: weights generated deterministically from the
+    /// seed (layer i uses `seed + i`), bias from `seed + i + 7777`.
+    pub fn from_config(cfg: &ModelConfig) -> Result<TernaryMlp, String> {
+        let nlayers = cfg.dims.len() - 1;
+        let mut layers = Vec::with_capacity(nlayers);
+        for i in 0..nlayers {
+            let (k, n) = (cfg.dims[i], cfg.dims[i + 1]);
+            let w = TernaryMatrix::random(k, n, cfg.sparsity, cfg.seed + i as u64);
+            let mut rng = Rng::new(cfg.seed + i as u64 + 7777);
+            let bias: Vec<f32> = (0..n).map(|_| rng.f32_range(-0.5, 0.5)).collect();
+            let alpha = if i + 1 < nlayers {
+                Some(cfg.prelu_alpha)
+            } else {
+                None
+            };
+            layers.push(TernaryLinear::new(&cfg.kernel, &w, bias, 1.0, alpha)?);
+        }
+        Ok(TernaryMlp {
+            name: cfg.name.clone(),
+            layers,
+        })
+    }
+
+    /// Build from explicit layers (the artifact loader uses this).
+    pub fn from_layers(name: String, layers: Vec<TernaryLinear>) -> Result<TernaryMlp, String> {
+        if layers.is_empty() {
+            return Err("model needs at least one layer".into());
+        }
+        for pair in layers.windows(2) {
+            if pair[0].n() != pair[1].k() {
+                return Err(format!(
+                    "layer dim mismatch: {} out vs {} in",
+                    pair[0].n(),
+                    pair[1].k()
+                ));
+            }
+        }
+        Ok(TernaryMlp { name, layers })
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.layers[0].k()
+    }
+
+    pub fn d_out(&self) -> usize {
+        self.layers.last().unwrap().n()
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn layers(&self) -> &[TernaryLinear] {
+        &self.layers
+    }
+
+    /// Full forward pass for a batch (rows of `x`).
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols(), self.d_in(), "input width mismatch");
+        let m = x.rows();
+        let mut cur = x.clone();
+        for layer in &self.layers {
+            let mut next = Matrix::zeros(m, layer.n());
+            layer.forward(&cur, &mut next);
+            cur = next;
+        }
+        cur
+    }
+
+    /// Cost-model flops for a batch of `m` rows.
+    pub fn flops(&self, m: usize) -> f64 {
+        self.layers.iter().map(|l| l.flops(m)).sum()
+    }
+
+    /// Total format bytes across layers (memory accounting).
+    pub fn format_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.format_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{dense_oracle, prelu_inplace};
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::from_json(
+            r#"{"name":"t","dims":[32,64,16],"sparsity":0.25,"seed":11,
+                "prelu_alpha":0.25,"kernel":"interleaved_blocked_tcsc"}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn forward_matches_manual_composition() {
+        let c = cfg();
+        let mlp = TernaryMlp::from_config(&c).unwrap();
+        let x = Matrix::random(4, 32, 1);
+
+        // Rebuild the same weights/biases manually and compose oracles.
+        let w1 = TernaryMatrix::random(32, 64, 0.25, 11);
+        let w2 = TernaryMatrix::random(64, 16, 0.25, 12);
+        let mut rng1 = Rng::new(11 + 7777);
+        let b1: Vec<f32> = (0..64).map(|_| rng1.f32_range(-0.5, 0.5)).collect();
+        let mut rng2 = Rng::new(12 + 7777);
+        let b2: Vec<f32> = (0..16).map(|_| rng2.f32_range(-0.5, 0.5)).collect();
+        let mut h = dense_oracle(&x, &w1, &b1);
+        prelu_inplace(&mut h, 0.25);
+        let want = dense_oracle(&h, &w2, &b2);
+
+        let got = mlp.forward(&x);
+        assert!(got.allclose(&want, 1e-3));
+    }
+
+    #[test]
+    fn shapes_and_metadata() {
+        let mlp = TernaryMlp::from_config(&cfg()).unwrap();
+        assert_eq!(mlp.d_in(), 32);
+        assert_eq!(mlp.d_out(), 16);
+        assert_eq!(mlp.num_layers(), 2);
+        assert!(mlp.flops(1) > 0.0);
+        assert!(mlp.format_bytes() > 0);
+        let y = mlp.forward(&Matrix::zeros(3, 32));
+        assert_eq!((y.rows(), y.cols()), (3, 16));
+    }
+
+    #[test]
+    fn kernel_choice_does_not_change_result() {
+        let mut c = cfg();
+        let x = Matrix::random(5, 32, 2);
+        let reference = TernaryMlp::from_config(&c).unwrap().forward(&x);
+        for kernel in ["base_tcsc", "simd_vertical", "unrolled_tcsc_12", "dense_gemm"] {
+            c.kernel = kernel.to_string();
+            let got = TernaryMlp::from_config(&c).unwrap().forward(&x);
+            assert!(got.allclose(&reference, 1e-3), "kernel {kernel}");
+        }
+    }
+
+    #[test]
+    fn from_layers_validates_dims() {
+        let w1 = TernaryMatrix::random(8, 16, 0.5, 1);
+        let w2 = TernaryMatrix::random(4, 2, 0.5, 2); // mismatched
+        let l1 = TernaryLinear::new("base_tcsc", &w1, vec![0.0; 16], 1.0, None).unwrap();
+        let l2 = TernaryLinear::new("base_tcsc", &w2, vec![0.0; 2], 1.0, None).unwrap();
+        assert!(TernaryMlp::from_layers("bad".into(), vec![l1, l2]).is_err());
+        assert!(TernaryMlp::from_layers("empty".into(), vec![]).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Model layer: ternary linear layers, the FFN/MLP stack, the JSON config
+//! system and binary weight serialization. This is what the serving engine
+//! executes on its native (non-PJRT) path.
+
+pub mod config;
+pub mod layer;
+pub mod mlp;
+pub mod serialize;
+
+pub use config::ModelConfig;
+pub use layer::TernaryLinear;
+pub use mlp::TernaryMlp;

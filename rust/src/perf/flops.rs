@@ -1,0 +1,101 @@
+//! The paper's floating-point cost model.
+//!
+//! Multiplications by ±1 are executed as additions/subtractions, so the cost
+//! metric is the count of f32 adds:
+//!
+//! ```text
+//! C(M, K, N, s) = M · N · (1 + s·K)
+//! ```
+//!
+//! — `s·K` adds per output element for the nonzeros plus one add for the
+//! bias. PReLU-fused kernels add `M·N` extra flops (one multiply per
+//! element on the negative branch; the paper counts adds and muls equally).
+
+/// Paper cost model inputs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Fraction of nonzero entries in W (the paper calls this "sparsity").
+    pub sparsity: f32,
+    /// Whether PReLU is fused (adds one flop per output element).
+    pub prelu: bool,
+}
+
+impl CostModel {
+    pub fn new(m: usize, k: usize, n: usize, sparsity: f32) -> Self {
+        CostModel {
+            m,
+            k,
+            n,
+            sparsity,
+            prelu: false,
+        }
+    }
+
+    pub fn with_prelu(mut self) -> Self {
+        self.prelu = true;
+        self
+    }
+
+    /// Total flops by the paper's model.
+    pub fn flops(&self) -> f64 {
+        let base = self.m as f64 * self.n as f64 * (1.0 + self.sparsity as f64 * self.k as f64);
+        if self.prelu {
+            base + (self.m * self.n) as f64
+        } else {
+            base
+        }
+    }
+
+    /// Flops computed from an *actual* nonzero count rather than the nominal
+    /// sparsity (exact generators make these equal; quantized real weights
+    /// may not be).
+    pub fn flops_exact(&self, nnz: usize) -> f64 {
+        // Each nonzero contributes M adds; bias contributes M·N adds.
+        let base = self.m as f64 * nnz as f64 + (self.m * self.n) as f64;
+        if self.prelu {
+            base + (self.m * self.n) as f64
+        } else {
+            base
+        }
+    }
+}
+
+/// Convenience: `C(M,K,N,s)` directly.
+pub fn cost_flops(m: usize, k: usize, n: usize, sparsity: f32) -> f64 {
+    CostModel::new(m, k, n, sparsity).flops()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_paper_formula() {
+        // M=64, K=8192, N=4096, s=0.5 → 64·4096·(1+4096)
+        let c = cost_flops(64, 8192, 4096, 0.5);
+        assert_eq!(c, 64.0 * 4096.0 * (1.0 + 0.5 * 8192.0));
+    }
+
+    #[test]
+    fn exact_equals_model_for_exact_nnz() {
+        let (m, k, n, s) = (8, 1024, 256, 0.25);
+        let model = CostModel::new(m, k, n, s);
+        let nnz = (s as f64 * (k * n) as f64).round() as usize;
+        assert_eq!(model.flops(), model.flops_exact(nnz));
+    }
+
+    #[test]
+    fn prelu_adds_mn() {
+        let a = CostModel::new(4, 128, 32, 0.5);
+        let b = a.with_prelu();
+        assert_eq!(b.flops() - a.flops(), (4 * 32) as f64);
+    }
+
+    #[test]
+    fn zero_sparsity_is_bias_only() {
+        assert_eq!(cost_flops(3, 999, 5, 0.0), 15.0);
+    }
+}

@@ -1,0 +1,61 @@
+//! Memory-bandwidth probe: a STREAM-style triad over a buffer much larger
+//! than the LLC, yielding the bytes/cycle ceiling for the roofline model.
+//! The paper infers memory-boundedness from the operational-intensity ↔
+//! performance correspondence (Fig 10); with a measured bandwidth we can
+//! draw the actual roofline and place each kernel on it.
+
+use crate::perf::timer::CycleTimer;
+use std::sync::OnceLock;
+
+/// Measured sustained bandwidth, bytes/cycle (triad: a[i] = b[i] + s·c[i],
+/// counting 3 × 4 bytes moved per element — write-allocate ignored, the
+/// same accounting the paper's byte model uses).
+pub fn host_bytes_per_cycle() -> f64 {
+    static BW: OnceLock<f64> = OnceLock::new();
+    *BW.get_or_init(|| {
+        // 64 MiB working set — far beyond any L2/L3 slice we care about.
+        const ELEMS: usize = 16 << 20;
+        let mut a = vec![0.0f32; ELEMS];
+        let b = vec![1.0f32; ELEMS];
+        let c = vec![2.0f32; ELEMS];
+        let timer = CycleTimer::new(1, 3);
+        let s = std::hint::black_box(0.5f32);
+        let m = timer.run(|| {
+            for i in 0..ELEMS {
+                a[i] = b[i] + s * c[i];
+            }
+            std::hint::black_box(&a);
+        });
+        let bytes = (ELEMS * 3 * std::mem::size_of::<f32>()) as f64;
+        bytes / m.cycles
+    })
+}
+
+/// Roofline for this host: measured scalar compute peak + measured
+/// bandwidth.
+pub fn host_roofline() -> crate::perf::roofline::Roofline {
+    crate::perf::roofline::Roofline {
+        peak_flops_per_cycle: crate::perf::roofline::host_peak_scalar_flops_per_cycle(),
+        bytes_per_cycle: host_bytes_per_cycle(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_plausible() {
+        let bw = host_bytes_per_cycle();
+        // Debug builds land well below release, but any machine moves
+        // between 0.05 and 128 bytes/cycle on a 64 MiB triad.
+        assert!(bw > 0.05 && bw < 128.0, "implausible bandwidth {bw}");
+    }
+
+    #[test]
+    fn roofline_has_positive_ridge() {
+        let r = host_roofline();
+        assert!(r.ridge() > 0.0);
+        assert!(r.attainable(0.01) <= r.attainable(100.0));
+    }
+}

@@ -1,0 +1,18 @@
+//! Performance measurement substrate: cycle counters, the paper's flop cost
+//! model, operational-intensity estimates and a roofline model.
+//!
+//! The paper reports *flops/cycle* against Apple M1's scalar peak of 4
+//! flops/cycle (16 vectorized). We reproduce the metric on x86-64 via a
+//! calibrated `rdtsc` (see [`timer`]) and report both the paper's M1 peak
+//! model and a measured host peak (see [`roofline`]).
+
+pub mod timer;
+pub mod flops;
+pub mod opint;
+pub mod roofline;
+pub mod membw;
+
+pub use timer::{cycles_per_second, read_cycles, CycleTimer, Measurement};
+pub use flops::{cost_flops, CostModel};
+pub use opint::{format_bytes_model, operational_intensity, OpIntInputs};
+pub use roofline::{host_peak_scalar_flops_per_cycle, Roofline};

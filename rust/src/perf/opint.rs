@@ -1,0 +1,80 @@
+//! Operational-intensity model (paper Fig 10).
+//!
+//! The paper estimates input data volume from the *exact size of the sparse
+//! format* plus X, Y and the bias vector b, and divides flops by those
+//! bytes. We reproduce that estimate analytically so Fig 10's heatmap can be
+//! regenerated for any format.
+
+use crate::perf::flops::CostModel;
+
+/// Byte-volume inputs for the operational-intensity estimate.
+#[derive(Debug, Clone, Copy)]
+pub struct OpIntInputs {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub sparsity: f32,
+    /// Exact byte size of the sparse format (use `SparseFormat::bytes()`).
+    pub format_bytes: usize,
+}
+
+/// Bytes touched once per GEMM under the paper's compulsory-traffic model:
+/// the whole sparse format + X + Y + b, each counted once.
+pub fn total_bytes(inp: &OpIntInputs) -> f64 {
+    let f32s = std::mem::size_of::<f32>();
+    let x = inp.m * inp.k * f32s;
+    let y = inp.m * inp.n * f32s;
+    let b = inp.n * f32s;
+    (inp.format_bytes + x + y + b) as f64
+}
+
+/// Analytic TCSC format size: 2·(N+1) column pointers + nnz row indices,
+/// all u32 (what the paper's Fig 10 uses).
+pub fn format_bytes_model(k: usize, n: usize, sparsity: f32) -> usize {
+    let u32s = std::mem::size_of::<u32>();
+    let nnz = (sparsity as f64 * (k * n) as f64).round() as usize;
+    2 * (n + 1) * u32s + nnz * u32s
+}
+
+/// Operational intensity (flops/byte) for the paper's cost + traffic models.
+pub fn operational_intensity(inp: &OpIntInputs) -> f64 {
+    let flops = CostModel::new(inp.m, inp.k, inp.n, inp.sparsity).flops();
+    flops / total_bytes(inp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intensity_increases_with_m() {
+        // More rows of X amortize the format traffic.
+        let mk = |m| OpIntInputs {
+            m,
+            k: 4096,
+            n: 1024,
+            sparsity: 0.25,
+            format_bytes: format_bytes_model(4096, 1024, 0.25),
+        };
+        assert!(operational_intensity(&mk(64)) > operational_intensity(&mk(1)));
+    }
+
+    #[test]
+    fn intensity_increases_with_density() {
+        // Paper Fig 10: denser (higher s) → higher op intensity → faster.
+        let mk = |s| OpIntInputs {
+            m: 64,
+            k: 8192,
+            n: 4096,
+            sparsity: s,
+            format_bytes: format_bytes_model(8192, 4096, s),
+        };
+        assert!(operational_intensity(&mk(0.5)) > operational_intensity(&mk(0.0625)));
+    }
+
+    #[test]
+    fn format_bytes_counts_pointers_and_indices() {
+        // K=4, N=4, s=0.5 → nnz=8: 2·5 ptrs ·4B + 8 idx ·4B = 72
+        assert_eq!(format_bytes_model(4, 4, 0.5), 72);
+    }
+}

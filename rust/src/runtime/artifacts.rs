@@ -1,0 +1,266 @@
+//! Artifact manifest parsing and raw weight loading.
+//!
+//! `python/compile/aot.py` emits `manifest.json` describing every lowered
+//! model variant: its HLO file, per-layer raw weight/bias dumps, and a
+//! probe input/output pair for smoke checks. The weight dumps let the Rust
+//! side construct the *identical* model for its native kernels, enabling
+//! cross-backend equivalence tests.
+
+use crate::ternary::TernaryMatrix;
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One layer of an artifact model.
+#[derive(Debug, Clone)]
+pub struct ArtifactLayer {
+    pub k: usize,
+    pub n: usize,
+    pub sparsity: f32,
+    pub prelu_alpha: Option<f32>,
+    pub weights_file: String,
+    pub bias_file: String,
+    pub nnz: usize,
+}
+
+/// One lowered model variant.
+#[derive(Debug, Clone)]
+pub struct ArtifactModel {
+    pub name: String,
+    pub batch: usize,
+    pub d_in: usize,
+    pub d_out: usize,
+    pub hlo_file: String,
+    pub layers: Vec<ArtifactLayer>,
+    pub probe_x_file: String,
+    pub probe_y_file: String,
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ArtifactModel>,
+}
+
+fn req_usize(v: &Json, key: &str) -> Result<usize, String> {
+    v.get(key)
+        .and_then(|x| x.as_usize())
+        .ok_or_else(|| format!("manifest: missing/invalid '{key}'"))
+}
+
+fn req_str(v: &Json, key: &str) -> Result<String, String> {
+    v.get(key)
+        .and_then(|x| x.as_str())
+        .map(|s| s.to_string())
+        .ok_or_else(|| format!("manifest: missing/invalid '{key}'"))
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, String> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| e.to_string())?;
+        let models_json = v
+            .get("models")
+            .and_then(|m| m.as_arr())
+            .ok_or("manifest: missing 'models' array")?;
+        let mut models = Vec::new();
+        for mj in models_json {
+            let layers_json = mj
+                .get("layers")
+                .and_then(|l| l.as_arr())
+                .ok_or("manifest: model missing 'layers'")?;
+            let mut layers = Vec::new();
+            for lj in layers_json {
+                layers.push(ArtifactLayer {
+                    k: req_usize(lj, "k")?,
+                    n: req_usize(lj, "n")?,
+                    sparsity: lj
+                        .get("sparsity")
+                        .and_then(|s| s.as_f64())
+                        .unwrap_or(0.0) as f32,
+                    prelu_alpha: lj.get("prelu_alpha").and_then(|a| a.as_f64()).map(|a| a as f32),
+                    weights_file: req_str(lj, "weights_file")?,
+                    bias_file: req_str(lj, "bias_file")?,
+                    nnz: req_usize(lj, "nnz")?,
+                });
+            }
+            models.push(ArtifactModel {
+                name: req_str(mj, "name")?,
+                batch: req_usize(mj, "batch")?,
+                d_in: req_usize(mj, "d_in")?,
+                d_out: req_usize(mj, "d_out")?,
+                hlo_file: req_str(mj, "hlo_file")?,
+                layers,
+                probe_x_file: req_str(mj, "probe_x_file")?,
+                probe_y_file: req_str(mj, "probe_y_file")?,
+            });
+        }
+        Ok(Manifest { dir, models })
+    }
+
+    /// Find a model by name.
+    pub fn model(&self, name: &str) -> Option<&ArtifactModel> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    /// Model variants grouped by base name (stripping the `_b<batch>`
+    /// suffix), e.g. `ffn_e2e` → [batch 1, batch 8].
+    pub fn variants_of(&self, base: &str) -> Vec<&ArtifactModel> {
+        let prefix = format!("{base}_b");
+        let mut v: Vec<&ArtifactModel> = self
+            .models
+            .iter()
+            .filter(|m| m.name.starts_with(&prefix))
+            .collect();
+        v.sort_by_key(|m| m.batch);
+        v
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+impl ArtifactModel {
+    /// Load a layer's ternary weights from its raw i8 dump.
+    pub fn load_weights(&self, dir: &Path, layer: usize) -> Result<TernaryMatrix, String> {
+        let l = &self.layers[layer];
+        let path = dir.join(&l.weights_file);
+        let bytes = std::fs::read(&path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        if bytes.len() != l.k * l.n {
+            return Err(format!(
+                "{}: expected {} bytes, got {}",
+                l.weights_file,
+                l.k * l.n,
+                bytes.len()
+            ));
+        }
+        let entries: Vec<i8> = bytes.iter().map(|&b| b as i8).collect();
+        if entries.iter().any(|&v| !(-1..=1).contains(&v)) {
+            return Err(format!("{}: non-ternary entry", l.weights_file));
+        }
+        Ok(TernaryMatrix::from_entries(l.k, l.n, &entries))
+    }
+
+    /// Load a layer's bias from its raw little-endian f32 dump.
+    pub fn load_bias(&self, dir: &Path, layer: usize) -> Result<Vec<f32>, String> {
+        let l = &self.layers[layer];
+        read_f32_file(&dir.join(&l.bias_file), l.n)
+    }
+
+    /// Load the probe input (batch × d_in).
+    pub fn load_probe_x(&self, dir: &Path) -> Result<Vec<f32>, String> {
+        read_f32_file(&dir.join(&self.probe_x_file), self.batch * self.d_in)
+    }
+
+    /// Load the probe output (batch × d_out).
+    pub fn load_probe_y(&self, dir: &Path) -> Result<Vec<f32>, String> {
+        read_f32_file(&dir.join(&self.probe_y_file), self.batch * self.d_out)
+    }
+}
+
+/// Read a raw little-endian f32 file with an expected element count.
+pub fn read_f32_file(path: &Path, expect: usize) -> Result<Vec<f32>, String> {
+    let bytes = std::fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    if bytes.len() != expect * 4 {
+        return Err(format!(
+            "{}: expected {} f32s, got {} bytes",
+            path.display(),
+            expect,
+            bytes.len()
+        ));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Locate the artifacts directory: `$STGEMM_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("STGEMM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a synthetic manifest on disk for parser tests (real-artifact
+    /// integration lives in rust/tests/runtime_hlo.rs).
+    fn synth_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let w: Vec<u8> = vec![1, 0, 255, 0, 1, 255]; // 3×2 ternary (255 = -1)
+        std::fs::write(dir.join("m.w0.i8"), &w).unwrap();
+        let bias: Vec<u8> = [0.5f32, -0.5]
+            .iter()
+            .flat_map(|f| f.to_le_bytes())
+            .collect();
+        std::fs::write(dir.join("m.b0.f32"), &bias).unwrap();
+        let probe: Vec<u8> = [1.0f32, 2.0, 3.0].iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(dir.join("m.px.f32"), &probe).unwrap();
+        let py: Vec<u8> = [0.0f32, 0.0].iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(dir.join("m.py.f32"), &py).unwrap();
+        std::fs::write(dir.join("m.hlo.txt"), "HloModule fake").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"models":[{"name":"m_b1","batch":1,"d_in":3,"d_out":2,
+                "hlo_file":"m.hlo.txt",
+                "layers":[{"k":3,"n":2,"sparsity":0.5,"seed":1,"prelu_alpha":null,
+                           "weights_file":"m.w0.i8","bias_file":"m.b0.f32","nnz":4}],
+                "probe_x_file":"m.px.f32","probe_y_file":"m.py.f32"}]}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn parse_and_load() {
+        let dir = std::env::temp_dir().join("stgemm_manifest_test");
+        synth_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.models.len(), 1);
+        let model = m.model("m_b1").unwrap();
+        assert_eq!(model.d_in, 3);
+        assert_eq!(model.layers[0].nnz, 4);
+        assert_eq!(model.layers[0].prelu_alpha, None);
+        let w = model.load_weights(&m.dir, 0).unwrap();
+        assert_eq!(w.k(), 3);
+        assert_eq!(w.get(0, 0), 1);
+        assert_eq!(w.get(0, 1), 0);
+        assert_eq!(w.get(1, 0), -1);
+        let b = model.load_bias(&m.dir, 0).unwrap();
+        assert_eq!(b, vec![0.5, -0.5]);
+        assert_eq!(model.load_probe_x(&m.dir).unwrap(), vec![1.0, 2.0, 3.0]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn variants_sorted_by_batch() {
+        let dir = std::env::temp_dir().join("stgemm_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"models":[
+              {"name":"x_b8","batch":8,"d_in":1,"d_out":1,"hlo_file":"h","layers":[],
+               "probe_x_file":"p","probe_y_file":"q"},
+              {"name":"x_b1","batch":1,"d_in":1,"d_out":1,"hlo_file":"h","layers":[],
+               "probe_x_file":"p","probe_y_file":"q"}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.variants_of("x");
+        assert_eq!(v.iter().map(|m| m.batch).collect::<Vec<_>>(), vec![1, 8]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_manifest_is_error() {
+        assert!(Manifest::load("/nonexistent/dir").is_err());
+    }
+}

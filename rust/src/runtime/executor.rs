@@ -1,0 +1,218 @@
+//! Thread-safe XLA execution service.
+//!
+//! The `xla` crate's PJRT handles are `!Send` (they hold `Rc`s over the C
+//! API), so they cannot be shared across the coordinator's threads
+//! directly. The production pattern: one dedicated **service thread** owns
+//! the PJRT client and every compiled executable; the rest of the system
+//! talks to it through a channel. [`XlaExecutor`] is that channel handle —
+//! `Send + Sync`, cheap to share, and it serializes executions (PJRT CPU
+//! executions are single-stream anyway; the dynamic batcher provides the
+//! parallelism that matters by growing M).
+
+use crate::runtime::artifacts::Manifest;
+use crate::runtime::pjrt::{CompiledModel, PjrtRuntime};
+use crate::tensor::Matrix;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+enum Request {
+    Run {
+        x: Matrix,
+        reply: mpsc::Sender<Result<Matrix, String>>,
+    },
+    Shutdown,
+}
+
+/// Channel handle to the XLA service thread (one model family,
+/// batch-bucketed executables).
+pub struct XlaExecutor {
+    pub base_name: String,
+    pub d_in: usize,
+    pub d_out: usize,
+    buckets: Vec<usize>,
+    tx: Mutex<mpsc::Sender<Request>>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl XlaExecutor {
+    /// Spawn the service thread: it creates the PJRT CPU client, compiles
+    /// every `<base>_b<batch>` variant in the manifest, then serves run
+    /// requests until dropped.
+    pub fn spawn(manifest: &Manifest, base: &str) -> Result<XlaExecutor> {
+        let variants = manifest.variants_of(base);
+        anyhow::ensure!(!variants.is_empty(), "no artifact variants named {base}_b*");
+        let (d_in, d_out) = (variants[0].d_in, variants[0].d_out);
+        for v in &variants {
+            anyhow::ensure!(
+                v.d_in == d_in && v.d_out == d_out,
+                "variant {} shape mismatch",
+                v.name
+            );
+        }
+        let plan: Vec<(usize, std::path::PathBuf)> = variants
+            .iter()
+            .map(|v| (v.batch, manifest.path(&v.hlo_file)))
+            .collect();
+        let buckets: Vec<usize> = plan.iter().map(|(b, _)| *b).collect();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (init_tx, init_rx) = mpsc::channel::<Result<(), String>>();
+        let base_name = base.to_string();
+        let thread_base = base_name.clone();
+        let thread = std::thread::Builder::new()
+            .name(format!("stgemm-xla-{base}"))
+            .spawn(move || {
+                // Everything !Send lives only on this thread.
+                let setup = || -> Result<BTreeMap<usize, CompiledModel>> {
+                    let rt = PjrtRuntime::cpu()?;
+                    let mut models = BTreeMap::new();
+                    for (batch, path) in &plan {
+                        let compiled = rt
+                            .compile_hlo_file(path, *batch, d_in, d_out)
+                            .with_context(|| format!("compile bucket b{batch}"))?;
+                        models.insert(*batch, compiled);
+                    }
+                    Ok(models)
+                };
+                let models = match setup() {
+                    Ok(m) => {
+                        let _ = init_tx.send(Ok(()));
+                        m
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Run { x, reply } => {
+                            let result = run_bucketed(&models, &x, d_in, d_out);
+                            let _ = reply.send(result.map_err(|e| format!("{e:#}")));
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+                drop(thread_base);
+            })
+            .context("spawn xla service thread")?;
+        init_rx
+            .recv()
+            .context("xla service thread died during init")?
+            .map_err(|e| anyhow::anyhow!(e))?;
+        Ok(XlaExecutor {
+            base_name,
+            d_in,
+            d_out,
+            buckets,
+            tx: Mutex::new(tx),
+            thread: Some(thread),
+        })
+    }
+
+    /// Available batch buckets, ascending.
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    /// Smallest bucket ≥ `m` (or the largest available).
+    pub fn bucket_for(&self, m: usize) -> usize {
+        self.buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= m)
+            .unwrap_or_else(|| *self.buckets.last().unwrap())
+    }
+
+    /// Run a batch: pads to the chosen bucket on the service thread's
+    /// input, slices real rows back out.
+    pub fn run(&self, x: &Matrix) -> Result<Matrix> {
+        anyhow::ensure!(x.rows() > 0, "empty batch");
+        anyhow::ensure!(x.cols() == self.d_in, "input width mismatch");
+        anyhow::ensure!(
+            x.rows() <= *self.buckets.last().unwrap(),
+            "batch {} exceeds largest compiled bucket {}",
+            x.rows(),
+            self.buckets.last().unwrap()
+        );
+        let (reply_tx, reply_rx) = mpsc::channel();
+        {
+            let tx = self.tx.lock().expect("xla sender mutex");
+            tx.send(Request::Run {
+                x: x.clone(),
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow::anyhow!("xla service thread has exited"))?;
+        }
+        reply_rx
+            .recv()
+            .context("xla service reply channel closed")?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+}
+
+impl Drop for XlaExecutor {
+    fn drop(&mut self) {
+        if let Ok(tx) = self.tx.lock() {
+            let _ = tx.send(Request::Shutdown);
+        }
+        if let Some(h) = self.thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Pad → execute → slice on the service thread.
+fn run_bucketed(
+    models: &BTreeMap<usize, CompiledModel>,
+    x: &Matrix,
+    d_in: usize,
+    d_out: usize,
+) -> Result<Matrix> {
+    let m = x.rows();
+    let bucket = models
+        .keys()
+        .copied()
+        .find(|&b| b >= m)
+        .unwrap_or_else(|| *models.keys().last().unwrap());
+    anyhow::ensure!(m <= bucket, "batch {m} exceeds bucket {bucket}");
+    let padded = if m == bucket {
+        x.clone()
+    } else {
+        let mut p = Matrix::zeros(bucket, d_in);
+        for r in 0..m {
+            p.row_mut(r).copy_from_slice(x.row(r));
+        }
+        p
+    };
+    let y_full = models.get(&bucket).unwrap().run(&padded)?;
+    if m == bucket {
+        return Ok(y_full);
+    }
+    let mut y = Matrix::zeros(m, d_out);
+    for r in 0..m {
+        y.row_mut(r).copy_from_slice(y_full.row(r));
+    }
+    Ok(y)
+}
+
+// Integration tests with real artifacts: rust/tests/runtime_hlo.rs.
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn bucket_selection_logic() {
+        let buckets = [1usize, 8];
+        let pick = |m: usize| {
+            buckets
+                .iter()
+                .copied()
+                .find(|&b| b >= m)
+                .unwrap_or(*buckets.last().unwrap())
+        };
+        assert_eq!(pick(1), 1);
+        assert_eq!(pick(2), 8);
+        assert_eq!(pick(8), 8);
+        assert_eq!(pick(9), 8); // clamped; run() rejects with an error
+    }
+}

@@ -1,0 +1,12 @@
+//! Runtime: loading and executing the JAX/Pallas AOT artifacts through the
+//! PJRT C API (`xla` crate). Build-time Python produced `artifacts/*.hlo.txt`
+//! plus raw weight dumps and a manifest; this module turns them into
+//! executables and native models the coordinator can serve.
+
+pub mod artifacts;
+pub mod pjrt;
+pub mod executor;
+
+pub use artifacts::{ArtifactLayer, ArtifactModel, Manifest};
+pub use executor::XlaExecutor;
+pub use pjrt::PjrtRuntime;

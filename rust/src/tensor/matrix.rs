@@ -1,0 +1,330 @@
+//! Row-major `f32` matrix with 64-byte-aligned storage.
+//!
+//! Alignment matters for the SIMD kernels (aligned 4-lane loads) and for
+//! honest cache-line accounting in the locality experiments.
+
+use crate::util::rng::Rng;
+
+const ALIGN: usize = 64;
+
+/// Row-major dense matrix of `f32`, 64-byte aligned.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: AlignedVec,
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: AlignedVec::zeroed(rows * cols),
+        }
+    }
+
+    /// Matrix filled from a closure of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m[(r, c)] = f(r, c);
+            }
+        }
+        m
+    }
+
+    /// Matrix from a row-major slice.
+    pub fn from_slice(rows: usize, cols: usize, data: &[f32]) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        let mut m = Matrix::zeros(rows, cols);
+        m.as_mut_slice().copy_from_slice(data);
+        m
+    }
+
+    /// Uniform random entries in [-1, 1), seeded.
+    pub fn random(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(rows, cols, |_, _| rng.f32_range(-1.0, 1.0))
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        self.data.as_slice()
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        self.data.as_mut_slice()
+    }
+
+    /// A single row as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        debug_assert!(r < self.rows);
+        &self.as_slice()[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        debug_assert!(r < self.rows);
+        let c = self.cols;
+        &mut self.as_mut_slice()[r * c..(r + 1) * c]
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.as_mut_slice().fill(v);
+    }
+
+    /// Max absolute difference against another matrix of the same shape.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.as_slice()
+            .iter()
+            .zip(other.as_slice())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative closeness check: |a-b| <= tol * max(1, |a|, |b|) everywhere.
+    pub fn allclose(&self, other: &Matrix, tol: f32) -> bool {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.as_slice().iter().zip(other.as_slice()).all(|(a, b)| {
+            let scale = 1.0_f32.max(a.abs()).max(b.abs());
+            (a - b).abs() <= tol * scale
+        })
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.as_slice()[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        let cols = self.cols;
+        &mut self.as_mut_slice()[r * cols + c]
+    }
+}
+
+/// An activation matrix padded with one trailing zero element per row
+/// region, for the symmetric SIMD format whose deficit lanes point at a
+/// dummy index (reads must yield exactly 0.0). Layout: each row is
+/// `k + 1` long; element `k` of every row is 0.0 and never written.
+#[derive(Debug, Clone)]
+pub struct PaddedMatrix {
+    rows: usize,
+    k: usize,
+    data: AlignedVec,
+}
+
+impl PaddedMatrix {
+    /// Copy `x` (M×K) into padded storage with stride K+1 and a zero pad slot.
+    pub fn from_matrix(x: &Matrix) -> PaddedMatrix {
+        let rows = x.rows();
+        let k = x.cols();
+        let mut data = AlignedVec::zeroed(rows * (k + 1));
+        for r in 0..rows {
+            data.as_mut_slice()[r * (k + 1)..r * (k + 1) + k].copy_from_slice(x.row(r));
+        }
+        PaddedMatrix { rows, k, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Logical K (row length without the pad slot).
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// The index that always reads 0.0 — used as the dummy target for
+    /// deficit lanes in the symmetric format.
+    #[inline]
+    pub fn dummy_index(&self) -> u32 {
+        self.k as u32
+    }
+
+    /// Row slice of length K+1 (including the zero pad slot at index K).
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        debug_assert!(r < self.rows);
+        &self.data.as_slice()[r * (self.k + 1)..(r + 1) * (self.k + 1)]
+    }
+}
+
+/// 64-byte-aligned `Vec<f32>` replacement.
+#[derive(Debug)]
+struct AlignedVec {
+    ptr: *mut f32,
+    len: usize,
+    cap_bytes: usize,
+}
+
+// SAFETY: AlignedVec owns its allocation exclusively; f32 is Send + Sync.
+unsafe impl Send for AlignedVec {}
+unsafe impl Sync for AlignedVec {}
+
+impl AlignedVec {
+    fn zeroed(len: usize) -> AlignedVec {
+        if len == 0 {
+            return AlignedVec {
+                ptr: std::ptr::NonNull::<f32>::dangling().as_ptr(),
+                len: 0,
+                cap_bytes: 0,
+            };
+        }
+        let bytes = len * std::mem::size_of::<f32>();
+        let layout = std::alloc::Layout::from_size_align(bytes, ALIGN).expect("layout");
+        // SAFETY: layout has non-zero size; alloc_zeroed returns valid or null.
+        let ptr = unsafe { std::alloc::alloc_zeroed(layout) } as *mut f32;
+        assert!(!ptr.is_null(), "allocation failed ({bytes} bytes)");
+        AlignedVec {
+            ptr,
+            len,
+            cap_bytes: bytes,
+        }
+    }
+
+    #[inline]
+    fn as_slice(&self) -> &[f32] {
+        // SAFETY: ptr valid for len f32s (or dangling with len 0).
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    #[inline]
+    fn as_mut_slice(&mut self) -> &mut [f32] {
+        // SAFETY: exclusive access via &mut self.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
+    }
+}
+
+impl Clone for AlignedVec {
+    fn clone(&self) -> Self {
+        let mut v = AlignedVec::zeroed(self.len);
+        v.as_mut_slice().copy_from_slice(self.as_slice());
+        v
+    }
+}
+
+impl PartialEq for AlignedVec {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Drop for AlignedVec {
+    fn drop(&mut self) {
+        if self.cap_bytes > 0 {
+            let layout =
+                std::alloc::Layout::from_size_align(self.cap_bytes, ALIGN).expect("layout");
+            // SAFETY: allocated with the same layout in zeroed().
+            unsafe { std::alloc::dealloc(self.ptr as *mut u8, layout) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_index() {
+        let mut m = Matrix::zeros(3, 4);
+        assert_eq!(m[(2, 3)], 0.0);
+        m[(1, 2)] = 5.0;
+        assert_eq!(m[(1, 2)], 5.0);
+        assert_eq!(m.row(1), &[0.0, 0.0, 5.0, 0.0]);
+    }
+
+    #[test]
+    fn alignment_is_64() {
+        for n in [1usize, 7, 64, 1000] {
+            let m = Matrix::zeros(n, n);
+            assert_eq!(m.as_slice().as_ptr() as usize % 64, 0);
+        }
+    }
+
+    #[test]
+    fn from_fn_layout_row_major() {
+        let m = Matrix::from_fn(2, 3, |r, c| (r * 10 + c) as f32);
+        assert_eq!(m.as_slice(), &[0.0, 1.0, 2.0, 10.0, 11.0, 12.0]);
+    }
+
+    #[test]
+    fn from_slice_roundtrip() {
+        let data = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let m = Matrix::from_slice(2, 3, &data);
+        assert_eq!(m.as_slice(), &data);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn from_slice_rejects_bad_shape() {
+        Matrix::from_slice(2, 2, &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn random_is_seeded() {
+        let a = Matrix::random(4, 4, 99);
+        let b = Matrix::random(4, 4, 99);
+        let c = Matrix::random(4, 4, 100);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.as_slice().iter().all(|v| (-1.0..1.0).contains(v)));
+    }
+
+    #[test]
+    fn allclose_and_diff() {
+        let a = Matrix::from_slice(1, 3, &[1.0, 2.0, 3.0]);
+        let mut b = a.clone();
+        assert!(a.allclose(&b, 1e-6));
+        b[(0, 2)] = 3.001;
+        assert!(!a.allclose(&b, 1e-6));
+        assert!(a.allclose(&b, 1e-2));
+        assert!((a.max_abs_diff(&b) - 0.001).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_sized_matrix_ok() {
+        let m = Matrix::zeros(0, 5);
+        assert_eq!(m.as_slice().len(), 0);
+        let m2 = m.clone();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn padded_matrix_dummy_reads_zero() {
+        let x = Matrix::random(3, 8, 7);
+        let p = PaddedMatrix::from_matrix(&x);
+        assert_eq!(p.dummy_index(), 8);
+        for r in 0..3 {
+            let row = p.row(r);
+            assert_eq!(row.len(), 9);
+            assert_eq!(row[8], 0.0);
+            assert_eq!(&row[..8], x.row(r));
+        }
+    }
+}

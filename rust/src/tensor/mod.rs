@@ -1,0 +1,5 @@
+//! Dense tensors: cache-aligned row-major matrices of `f32`.
+
+pub mod matrix;
+
+pub use matrix::{Matrix, PaddedMatrix};

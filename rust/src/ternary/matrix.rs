@@ -1,0 +1,182 @@
+//! Dense ternary matrix (`i8` entries in {-1, 0, +1}) — the ground truth
+//! from which every sparse format is constructed and validated.
+
+use crate::util::rng::Rng;
+
+/// Dense K×N ternary matrix, column-accessible. Stored row-major like the
+/// mathematical `W` in `Y = X·W + b` (K rows, N columns).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TernaryMatrix {
+    k: usize,
+    n: usize,
+    data: Vec<i8>,
+}
+
+impl TernaryMatrix {
+    /// All-zero K×N ternary matrix.
+    pub fn zeros(k: usize, n: usize) -> TernaryMatrix {
+        TernaryMatrix {
+            k,
+            n,
+            data: vec![0; k * n],
+        }
+    }
+
+    /// Build from raw entries (row-major, length K·N, values in {-1,0,1}).
+    pub fn from_entries(k: usize, n: usize, entries: &[i8]) -> TernaryMatrix {
+        assert_eq!(entries.len(), k * n, "shape/data mismatch");
+        assert!(
+            entries.iter().all(|&v| (-1..=1).contains(&v)),
+            "entries must be ternary"
+        );
+        TernaryMatrix {
+            k,
+            n,
+            data: entries.to_vec(),
+        }
+    }
+
+    /// Random ternary matrix with *exactly* `round(sparsity·K·N)` nonzeros
+    /// (paper workload: uniform placement, signs split as evenly as
+    /// possible). `sparsity` is the paper's usage: fraction of nonzeros.
+    pub fn random(k: usize, n: usize, sparsity: f32, seed: u64) -> TernaryMatrix {
+        assert!((0.0..=1.0).contains(&sparsity), "sparsity in [0,1]");
+        let total = k * n;
+        let nnz = (sparsity as f64 * total as f64).round() as usize;
+        let mut rng = Rng::new(seed);
+        let positions = rng.sample_indices(total, nnz);
+        let mut data = vec![0i8; total];
+        // Balanced signs: first half +1, second half -1, assignment order
+        // randomized by the already-random position sampling, then shuffled
+        // again so ties don't correlate with position order.
+        let mut signs: Vec<i8> = (0..nnz).map(|i| if i < nnz / 2 { -1 } else { 1 }).collect();
+        rng.shuffle(&mut signs);
+        for (pos, sign) in positions.into_iter().zip(signs) {
+            data[pos] = sign;
+        }
+        TernaryMatrix { k, n, data }
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Entry at (row `i` ∈ [0,K), column `j` ∈ [0,N)).
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> i8 {
+        debug_assert!(i < self.k && j < self.n);
+        self.data[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: i8) {
+        debug_assert!((-1..=1).contains(&v));
+        self.data[i * self.n + j] = v;
+    }
+
+    /// Number of nonzero entries.
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0).count()
+    }
+
+    /// Actual nonzero fraction.
+    pub fn density(&self) -> f64 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.nnz() as f64 / self.data.len() as f64
+        }
+    }
+
+    /// Row indices of +1 entries in column `j`, ascending.
+    pub fn col_positives(&self, j: usize) -> Vec<u32> {
+        (0..self.k)
+            .filter(|&i| self.get(i, j) == 1)
+            .map(|i| i as u32)
+            .collect()
+    }
+
+    /// Row indices of -1 entries in column `j`, ascending.
+    pub fn col_negatives(&self, j: usize) -> Vec<u32> {
+        (0..self.k)
+            .filter(|&i| self.get(i, j) == -1)
+            .map(|i| i as u32)
+            .collect()
+    }
+
+    /// Raw row-major entries.
+    pub fn entries(&self) -> &[i8] {
+        &self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_nnz_count() {
+        for &s in &[0.5f32, 0.25, 0.125, 0.0625] {
+            let w = TernaryMatrix::random(128, 64, s, 11);
+            let expect = (s as f64 * (128 * 64) as f64).round() as usize;
+            assert_eq!(w.nnz(), expect, "sparsity {s}");
+        }
+    }
+
+    #[test]
+    fn signs_balanced() {
+        let w = TernaryMatrix::random(100, 100, 0.5, 5);
+        let pos = w.entries().iter().filter(|&&v| v == 1).count();
+        let neg = w.entries().iter().filter(|&&v| v == -1).count();
+        assert!(pos.abs_diff(neg) <= 1, "pos {pos} neg {neg}");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = TernaryMatrix::random(32, 32, 0.25, 3);
+        let b = TernaryMatrix::random(32, 32, 0.25, 3);
+        assert_eq!(a, b);
+        let c = TernaryMatrix::random(32, 32, 0.25, 4);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn col_accessors_sorted_and_correct() {
+        let w = TernaryMatrix::from_entries(
+            4,
+            2,
+            // column 0: +1 at rows 0,3; -1 at row 2. column 1: -1 at rows 0,1
+            &[1, -1, 0, -1, -1, 0, 1, 0],
+        );
+        assert_eq!(w.col_positives(0), vec![0, 3]);
+        assert_eq!(w.col_negatives(0), vec![2]);
+        assert_eq!(w.col_positives(1), Vec::<u32>::new());
+        assert_eq!(w.col_negatives(1), vec![0, 1]);
+    }
+
+    #[test]
+    fn zero_and_full_sparsity() {
+        let z = TernaryMatrix::random(16, 16, 0.0, 1);
+        assert_eq!(z.nnz(), 0);
+        let f = TernaryMatrix::random(16, 16, 1.0, 1);
+        assert_eq!(f.nnz(), 256);
+    }
+
+    #[test]
+    #[should_panic(expected = "entries must be ternary")]
+    fn from_entries_rejects_nonternary() {
+        TernaryMatrix::from_entries(1, 2, &[0, 2]);
+    }
+
+    #[test]
+    fn density_matches() {
+        let w = TernaryMatrix::random(64, 64, 0.125, 9);
+        assert!((w.density() - 0.125).abs() < 1e-9);
+    }
+}

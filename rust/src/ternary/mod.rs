@@ -1,0 +1,11 @@
+//! Ternary matrices: dense `{-1, 0, +1}` representation, exact-sparsity
+//! synthetic generation, absmean quantization of float weights, and
+//! distribution statistics.
+
+pub mod matrix;
+pub mod quantize;
+pub mod stats;
+
+pub use matrix::TernaryMatrix;
+pub use quantize::{quantize_absmean, QuantizedLinear};
+pub use stats::TernaryStats;

@@ -1,0 +1,126 @@
+//! Absmean ternary quantization (BitNet-b1.58 style).
+//!
+//! The paper motivates sparse ternary GEMM with LLM weight quantization to
+//! `{-1, 0, +1}`. This module provides the quantizer that produces those
+//! weights from float matrices: scale by the mean absolute value, then
+//! round-and-clip to the ternary set. The per-tensor scale is folded into
+//! the layer so inference needs one multiply per output element (fused with
+//! the bias add).
+
+use crate::tensor::Matrix;
+use crate::ternary::TernaryMatrix;
+
+/// Result of quantizing a float weight matrix: ternary weights plus the
+/// scale `gamma` such that `W_float ≈ gamma · W_ternary`.
+#[derive(Debug, Clone)]
+pub struct QuantizedLinear {
+    pub weights: TernaryMatrix,
+    pub scale: f32,
+}
+
+/// Absmean quantization: `gamma = mean(|W|)`,
+/// `W_t = clip(round(W / gamma), -1, 1)`.
+pub fn quantize_absmean(w: &Matrix) -> QuantizedLinear {
+    let data = w.as_slice();
+    let gamma = if data.is_empty() {
+        1.0
+    } else {
+        let s: f64 = data.iter().map(|v| v.abs() as f64).sum();
+        ((s / data.len() as f64) as f32).max(f32::MIN_POSITIVE)
+    };
+    let mut t = TernaryMatrix::zeros(w.rows(), w.cols());
+    for i in 0..w.rows() {
+        for j in 0..w.cols() {
+            let q = (w[(i, j)] / gamma).round().clamp(-1.0, 1.0);
+            t.set(i, j, q as i8);
+        }
+    }
+    QuantizedLinear {
+        weights: t,
+        scale: gamma,
+    }
+}
+
+impl QuantizedLinear {
+    /// Dequantize back to floats (for error measurement).
+    pub fn dequantize(&self) -> Matrix {
+        Matrix::from_fn(self.weights.k(), self.weights.n(), |i, j| {
+            self.weights.get(i, j) as f32 * self.scale
+        })
+    }
+
+    /// Mean squared quantization error against the original weights.
+    pub fn mse(&self, original: &Matrix) -> f64 {
+        let dq = self.dequantize();
+        let n = (original.rows() * original.cols()).max(1);
+        original
+            .as_slice()
+            .iter()
+            .zip(dq.as_slice())
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantizes_to_ternary() {
+        let w = Matrix::random(32, 32, 17);
+        let q = quantize_absmean(&w);
+        assert!(q
+            .weights
+            .entries()
+            .iter()
+            .all(|&v| (-1..=1).contains(&v)));
+        assert!(q.scale > 0.0);
+    }
+
+    #[test]
+    fn exact_ternary_is_fixed_point() {
+        // A matrix that is already gamma·ternary quantizes losslessly.
+        let t = TernaryMatrix::random(16, 16, 0.5, 3);
+        let gamma = 0.37f32;
+        let w = Matrix::from_fn(16, 16, |i, j| t.get(i, j) as f32 * gamma);
+        let q = quantize_absmean(&w);
+        // absmean of gamma·ternary with 50% nonzeros is gamma/2; W/scale
+        // = ±2 clips to ±1 — signs survive, magnitudes are ternary.
+        for i in 0..16 {
+            for j in 0..16 {
+                assert_eq!(q.weights.get(i, j).signum(), t.get(i, j).signum());
+            }
+        }
+    }
+
+    #[test]
+    fn sparsity_from_small_weights() {
+        // Entries well below gamma round to zero → sparsity appears.
+        let mut w = Matrix::zeros(8, 8);
+        for i in 0..8 {
+            w[(i, i)] = 4.0; // large diagonal
+        }
+        w[(0, 1)] = 0.01; // tiny off-diagonal
+        let q = quantize_absmean(&w);
+        assert_eq!(q.weights.get(0, 1), 0);
+        assert_eq!(q.weights.get(3, 3), 1);
+    }
+
+    #[test]
+    fn mse_reasonable() {
+        let w = Matrix::random(64, 64, 23);
+        let q = quantize_absmean(&w);
+        // Uniform[-1,1): absmean 0.5; ternary approx error is bounded.
+        assert!(q.mse(&w) < 0.25, "mse {}", q.mse(&w));
+    }
+
+    #[test]
+    fn negative_weights_quantize_negative() {
+        let w = Matrix::from_slice(1, 4, &[-2.0, -0.9, 0.9, 2.0]);
+        let q = quantize_absmean(&w);
+        assert_eq!(q.weights.get(0, 0), -1);
+        assert_eq!(q.weights.get(0, 3), 1);
+    }
+}

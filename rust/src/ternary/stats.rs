@@ -1,0 +1,124 @@
+//! Distribution statistics for ternary matrices — used by the autotuner
+//! (symmetric-format padding overhead depends on per-column sign balance)
+//! and by benchmark reports.
+
+use crate::ternary::TernaryMatrix;
+
+/// Summary statistics of a ternary matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TernaryStats {
+    pub k: usize,
+    pub n: usize,
+    pub nnz: usize,
+    pub positives: usize,
+    pub negatives: usize,
+    /// Min/mean/max nonzeros per column.
+    pub col_nnz_min: usize,
+    pub col_nnz_mean: f64,
+    pub col_nnz_max: usize,
+    /// Mean |#pos - #neg| per column (symmetric-format padding driver).
+    pub mean_sign_imbalance: f64,
+}
+
+impl TernaryStats {
+    pub fn compute(w: &TernaryMatrix) -> TernaryStats {
+        let (k, n) = (w.k(), w.n());
+        let mut positives = 0usize;
+        let mut negatives = 0usize;
+        let mut col_min = usize::MAX;
+        let mut col_max = 0usize;
+        let mut col_sum = 0usize;
+        let mut imbalance_sum = 0usize;
+        for j in 0..n {
+            let mut p = 0usize;
+            let mut q = 0usize;
+            for i in 0..k {
+                match w.get(i, j) {
+                    1 => p += 1,
+                    -1 => q += 1,
+                    _ => {}
+                }
+            }
+            positives += p;
+            negatives += q;
+            let c = p + q;
+            col_min = col_min.min(c);
+            col_max = col_max.max(c);
+            col_sum += c;
+            imbalance_sum += p.abs_diff(q);
+        }
+        if n == 0 {
+            col_min = 0;
+        }
+        TernaryStats {
+            k,
+            n,
+            nnz: positives + negatives,
+            positives,
+            negatives,
+            col_nnz_min: col_min,
+            col_nnz_mean: if n == 0 { 0.0 } else { col_sum as f64 / n as f64 },
+            col_nnz_max: col_max,
+            mean_sign_imbalance: if n == 0 {
+                0.0
+            } else {
+                imbalance_sum as f64 / n as f64
+            },
+        }
+    }
+
+    /// Nonzero fraction.
+    pub fn density(&self) -> f64 {
+        if self.k * self.n == 0 {
+            0.0
+        } else {
+            self.nnz as f64 / (self.k * self.n) as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_match_matrix() {
+        let w = TernaryMatrix::random(64, 32, 0.25, 7);
+        let s = TernaryStats::compute(&w);
+        assert_eq!(s.nnz, w.nnz());
+        assert_eq!(s.positives + s.negatives, s.nnz);
+        assert!((s.density() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn column_extremes() {
+        let mut w = TernaryMatrix::zeros(4, 3);
+        // col 0: 2 pos; col 1: empty; col 2: 1 pos 1 neg
+        w.set(0, 0, 1);
+        w.set(1, 0, 1);
+        w.set(0, 2, 1);
+        w.set(3, 2, -1);
+        let s = TernaryStats::compute(&w);
+        assert_eq!(s.col_nnz_min, 0);
+        assert_eq!(s.col_nnz_max, 2);
+        assert!((s.col_nnz_mean - 4.0 / 3.0).abs() < 1e-12);
+        // imbalances: |2-0|=2, 0, |1-1|=0 → mean 2/3
+        assert!((s.mean_sign_imbalance - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let s = TernaryStats::compute(&TernaryMatrix::zeros(0, 0));
+        assert_eq!(s.nnz, 0);
+        assert_eq!(s.density(), 0.0);
+    }
+
+    #[test]
+    fn balanced_generator_low_imbalance() {
+        let w = TernaryMatrix::random(1024, 64, 0.5, 13);
+        let s = TernaryStats::compute(&w);
+        // Random balanced assignment: per-column imbalance ~ sqrt(nnz/col) ≈ 23
+        // for 512/col; must be well below the nonzero count.
+        assert!(s.mean_sign_imbalance < s.col_nnz_mean / 4.0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Command-line argument parsing (no clap available offline).
+//!
+//! Supports `subcommand --flag value --switch positional` style invocations
+//! with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: one optional subcommand, `--key value` options,
+/// `--switch` booleans, and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable); skips argv[0].
+    pub fn parse_from<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().skip(1).peekable();
+        // First non-flag token is the subcommand.
+        if let Some(tok) = it.peek() {
+            if !tok.starts_with('-') {
+                args.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // `--key=value` or `--key value` or bare switch.
+                if let Some((k, v)) = name.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.opts.insert(name.to_string(), v);
+                } else {
+                    args.switches.push(name.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    pub fn parse() -> Args {
+        Self::parse_from(std::env::args())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    eprintln!("error: --{key} expects an integer, got '{v}'");
+                    std::process::exit(2);
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn f32(&self, key: &str, default: f32) -> f32 {
+        self.get(key)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    eprintln!("error: --{key} expects a float, got '{v}'");
+                    std::process::exit(2);
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    eprintln!("error: --{key} expects an integer, got '{v}'");
+                    std::process::exit(2);
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated usize list, e.g. `--ks 1024,2048,4096`.
+    pub fn usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim().parse().unwrap_or_else(|_| {
+                        eprintln!("error: --{key} expects comma-separated integers");
+                        std::process::exit(2);
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(line: &str) -> Args {
+        let argv = std::iter::once("prog".to_string())
+            .chain(line.split_whitespace().map(|s| s.to_string()));
+        Args::parse_from(argv)
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("serve --port 8080 --model cfg.json");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.usize("port", 0), 8080);
+        assert_eq!(a.get("model"), Some("cfg.json"));
+    }
+
+    #[test]
+    fn switches_and_equals() {
+        let a = parse("bench --figure=fig6 --verbose");
+        assert_eq!(a.get("figure"), Some("fig6"));
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse("quantize in.bin out.bin --sparsity 0.25");
+        assert_eq!(a.positional, vec!["in.bin", "out.bin"]);
+        assert!((a.f32("sparsity", 0.0) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("serve");
+        assert_eq!(a.usize("port", 9000), 9000);
+        assert_eq!(a.get_or("host", "127.0.0.1"), "127.0.0.1");
+    }
+
+    #[test]
+    fn usize_list_parsing() {
+        let a = parse("bench --ks 1,2,4");
+        assert_eq!(a.usize_list("ks", &[9]), vec![1, 2, 4]);
+        assert_eq!(a.usize_list("ms", &[9]), vec![9]);
+    }
+
+    #[test]
+    fn no_subcommand_when_flag_first() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.has("help"));
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = parse("bench --alpha -0.5");
+        assert_eq!(a.get("alpha"), Some("-0.5"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Substrates built in-repo (the environment is offline, so no external
+//! crates beyond `xla`/`anyhow` are available): PRNG, JSON, CLI parsing,
+//! a thread pool, and a miniature property-testing framework.
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod threadpool;
+pub mod quickcheck;
+
+pub use rng::Rng;
+pub use json::Json;

@@ -1,0 +1,143 @@
+//! Miniature property-based testing framework (no proptest available
+//! offline). Seeded generators + case iteration + first-failure reporting
+//! with the generator seed so failures replay deterministically.
+//!
+//! ```
+//! use stgemm::util::quickcheck::{props, Gen};
+//! props("addition commutes", 100, |g| {
+//!     let a = g.usize(0, 1000) as i64;
+//!     let b = g.usize(0, 1000) as i64;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// A seeded generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen {
+            rng: Rng::new(seed),
+            case_seed: seed,
+        }
+    }
+
+    /// Uniform integer in `[lo, hi]` (inclusive).
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.f32_range(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    /// A fresh seed derived from this generator (for seeding matrices etc.).
+    pub fn seed(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Vector of f32s.
+    pub fn f32_vec(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32(lo, hi)).collect()
+    }
+}
+
+/// Run `cases` property cases. Panics (with the failing case seed) on the
+/// first failure — `STGEMM_PROP_SEED=<n>` replays a single failing case.
+pub fn props<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut prop: F) {
+    // Replay mode: run exactly one case with the given seed.
+    if let Ok(seed_str) = std::env::var("STGEMM_PROP_SEED") {
+        if let Ok(seed) = seed_str.parse::<u64>() {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+            return;
+        }
+    }
+    let base = base_seed(name);
+    for i in 0..cases {
+        let case_seed = base.wrapping_add(i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut g);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed on case {i} (replay with \
+                 STGEMM_PROP_SEED={case_seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Stable seed derived from the property name (FNV-1a) so each property gets
+/// an independent but reproducible case stream.
+fn base_seed(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        props("trivial", 50, |g| {
+            let _ = g.usize(0, 10);
+            count += 1;
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "STGEMM_PROP_SEED=")]
+    fn failing_property_reports_seed() {
+        props("always fails", 5, |_g| {
+            assert_eq!(1, 2, "intentional");
+        });
+    }
+
+    #[test]
+    fn generator_ranges() {
+        props("gen ranges", 200, |g| {
+            let v = g.usize(3, 9);
+            assert!((3..=9).contains(&v));
+            let f = g.f32(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        });
+    }
+
+    #[test]
+    fn choose_picks_member() {
+        props("choose member", 100, |g| {
+            let xs = [1, 5, 7];
+            assert!(xs.contains(g.choose(&xs)));
+        });
+    }
+}

@@ -1,0 +1,168 @@
+//! Cross-module integration tests: config → model → router → HTTP server →
+//! load generator, model serialization round-trips through forward passes,
+//! and the autotune/figure plumbing at smoke scale.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use stgemm::bench::harness::BenchScale;
+use stgemm::coordinator::server::{http_request, Server, ServerConfig};
+use stgemm::coordinator::{BatchPolicy, Engine, LoadGenerator, Router};
+use stgemm::model::serialize::{from_bytes, to_bytes, LayerData};
+use stgemm::model::{ModelConfig, TernaryLinear, TernaryMlp};
+use stgemm::tensor::Matrix;
+use stgemm::util::json::Json;
+
+fn demo_router(dims: &str, seed: u64) -> (Arc<Router>, usize, usize) {
+    let cfg = ModelConfig::from_json(&format!(
+        r#"{{"name":"demo","dims":{dims},"sparsity":0.25,"seed":{seed}}}"#
+    ))
+    .unwrap();
+    let (d_in, d_out) = (cfg.d_in(), cfg.d_out());
+    let engine = Engine::new("demo", TernaryMlp::from_config(&cfg).unwrap());
+    let mut router = Router::new();
+    router.register(
+        engine,
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_micros(500),
+        },
+    );
+    (Arc::new(router), d_in, d_out)
+}
+
+#[test]
+fn full_stack_http_inference() {
+    let (router, d_in, d_out) = demo_router("[32, 64, 16]", 5);
+    let server = Server::start(Arc::clone(&router), ServerConfig::default()).unwrap();
+    let input: Vec<String> = (0..d_in).map(|i| format!("{}", i as f32 * 0.01)).collect();
+    let body = format!(r#"{{"model":"demo","input":[{}]}}"#, input.join(","));
+    let (status, resp) = http_request(&server.local_addr, "POST", "/infer", &body).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let v = Json::parse(&resp).unwrap();
+    assert_eq!(v.get("output").unwrap().as_arr().unwrap().len(), d_out);
+
+    // HTTP result equals direct engine result.
+    let x = Matrix::from_slice(
+        1,
+        d_in,
+        &(0..d_in).map(|i| i as f32 * 0.01).collect::<Vec<_>>(),
+    );
+    let direct = router.engine("demo").unwrap().infer_matrix(&x).unwrap();
+    for (j, item) in v.get("output").unwrap().as_arr().unwrap().iter().enumerate() {
+        let got = item.as_f64().unwrap() as f32;
+        assert!((got - direct[(0, j)]).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn loadgen_through_http_server() {
+    let (router, d_in, _) = demo_router("[16, 32, 8]", 9);
+    let server = Server::start(Arc::clone(&router), ServerConfig::default()).unwrap();
+    let gen = LoadGenerator {
+        clients: 4,
+        requests_per_client: 10,
+        d_in,
+        model: "demo".into(),
+        seed: 3,
+    };
+    let report = gen.run_http(server.local_addr);
+    assert_eq!(report.total_requests, 40);
+    assert_eq!(report.errors, 0);
+    assert!(report.throughput_rps > 0.0);
+}
+
+#[test]
+fn stw_serialization_preserves_forward_semantics() {
+    // Build layers, serialize, rebuild a model from the decoded layers,
+    // and check identical forward outputs.
+    let cfg = ModelConfig::from_json(
+        r#"{"name":"s","dims":[24,48,12],"sparsity":0.5,"seed":21}"#,
+    )
+    .unwrap();
+    let original = TernaryMlp::from_config(&cfg).unwrap();
+
+    // Reconstruct the same weights the config generates, then serialize.
+    use stgemm::ternary::TernaryMatrix;
+    use stgemm::util::rng::Rng;
+    let mut layer_data = Vec::new();
+    for i in 0..2 {
+        let (k, n) = (cfg.dims[i], cfg.dims[i + 1]);
+        let w = TernaryMatrix::random(k, n, cfg.sparsity, cfg.seed + i as u64);
+        let mut rng = Rng::new(cfg.seed + i as u64 + 7777);
+        let bias: Vec<f32> = (0..n).map(|_| rng.f32_range(-0.5, 0.5)).collect();
+        layer_data.push(LayerData {
+            weights: w,
+            bias,
+            scale: 1.0,
+            prelu_alpha: (i == 0).then_some(cfg.prelu_alpha),
+        });
+    }
+    let decoded = from_bytes(&to_bytes(&layer_data)).unwrap();
+    let rebuilt_layers: Vec<TernaryLinear> = decoded
+        .into_iter()
+        .map(|l| {
+            TernaryLinear::new(
+                "interleaved_blocked_tcsc",
+                &l.weights,
+                l.bias,
+                l.scale,
+                l.prelu_alpha,
+            )
+            .unwrap()
+        })
+        .collect();
+    let rebuilt = TernaryMlp::from_layers("s".into(), rebuilt_layers).unwrap();
+
+    let x = Matrix::random(5, 24, 99);
+    let a = original.forward(&x);
+    let b = rebuilt.forward(&x);
+    assert!(a.allclose(&b, 1e-5), "maxΔ {}", a.max_abs_diff(&b));
+}
+
+#[test]
+fn figure_drivers_smoke_at_tiny_scale() {
+    // The cheap analytic figure plus the headline driver in CI scale keeps
+    // the figure plumbing honest inside `cargo test`.
+    let t10 = stgemm::bench::figures::fig10_opint();
+    assert!(!t10.rows.is_empty());
+    let abl = stgemm::bench::figures::ablation_inverted(BenchScale::Ci);
+    assert_eq!(abl.rows.len(), 4);
+    for row in &abl.rows {
+        let ratio: f64 = row[3].parse().unwrap();
+        assert!(ratio > 0.0);
+    }
+}
+
+#[test]
+fn autotune_end_to_end() {
+    use stgemm::autotune::grid::{best_point, unroll_grid_search};
+    use stgemm::perf::timer::CycleTimer;
+    let timer = CycleTimer::new(0, 1);
+    let points = unroll_grid_search(8, 256, 64, 0.25, 3, &timer);
+    let best = best_point(&points);
+    assert!(best.flops_per_cycle > 0.0);
+    // Unrolled kernels shouldn't be drastically slower than base.
+    assert!(best.speedup_vs_base > 0.3, "speedup {}", best.speedup_vs_base);
+}
+
+#[test]
+fn metrics_endpoint_reflects_traffic() {
+    let (router, d_in, _) = demo_router("[8, 16, 4]", 2);
+    let server = Server::start(Arc::clone(&router), ServerConfig::default()).unwrap();
+    let body = format!(
+        r#"{{"model":"demo","input":[{}]}}"#,
+        vec!["0.2"; d_in].join(",")
+    );
+    for _ in 0..3 {
+        let (s, _) = http_request(&server.local_addr, "POST", "/infer", &body).unwrap();
+        assert_eq!(s, 200);
+    }
+    let (s, metrics) = http_request(&server.local_addr, "GET", "/metrics", "").unwrap();
+    assert_eq!(s, 200);
+    let v = Json::parse(&metrics).unwrap();
+    let arr = v.as_arr().unwrap();
+    assert_eq!(arr.len(), 1);
+    let m = arr[0].get("metrics").unwrap();
+    assert_eq!(m.get("responses").unwrap().as_f64(), Some(3.0));
+}

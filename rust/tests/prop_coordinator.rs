@@ -1,0 +1,166 @@
+//! Property tests over the coordinator: the batcher never loses,
+//! duplicates or reorders requests; batched execution equals row-by-row
+//! execution; the router answers everything under concurrency.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use stgemm::coordinator::{BatchPolicy, DynamicBatcher, Engine, InferenceRequest, Router};
+use stgemm::model::{ModelConfig, TernaryMlp};
+use stgemm::tensor::Matrix;
+use stgemm::util::quickcheck::{props, Gen};
+
+fn engine(g: &mut Gen) -> Engine {
+    let d_in = g.usize(2, 24);
+    let d_h = g.usize(2, 32);
+    let d_out = g.usize(1, 16);
+    let cfg = ModelConfig::from_json(&format!(
+        r#"{{"name":"p","dims":[{d_in},{d_h},{d_out}],"sparsity":0.25,"seed":{}}}"#,
+        g.usize(0, 10_000)
+    ))
+    .unwrap();
+    Engine::new("p", TernaryMlp::from_config(&cfg).unwrap())
+}
+
+#[test]
+fn prop_batcher_no_loss_no_dup_fifo() {
+    props("batcher conservation", 25, |g| {
+        let max_batch = g.usize(1, 16);
+        let n_req = g.usize(1, 64);
+        let b = DynamicBatcher::new(BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_micros(g.usize(1, 2000) as u64),
+        });
+        for i in 0..n_req {
+            let (req, _rx) = InferenceRequest::new(i as u64, "m", vec![0.0]);
+            b.submit(req).unwrap();
+        }
+        b.close();
+        let mut ids = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            assert!(batch.len() <= max_batch, "batch size bound");
+            assert!(!batch.is_empty());
+            ids.extend(batch.iter().map(|r| r.id));
+        }
+        // FIFO and conservation.
+        assert_eq!(ids, (0..n_req as u64).collect::<Vec<_>>());
+    });
+}
+
+#[test]
+fn prop_batched_equals_rowwise() {
+    props("batch == row-by-row", 15, |g| {
+        let e = engine(g);
+        let m = g.usize(1, 10);
+        let x = Matrix::random(m, e.d_in(), g.seed());
+        let batched = e.infer_matrix(&x).unwrap();
+        for r in 0..m {
+            let row = Matrix::from_slice(1, e.d_in(), x.row(r));
+            let single = e.infer_matrix(&row).unwrap();
+            for (a, b) in batched.row(r).iter().zip(single.as_slice()) {
+                assert!(
+                    (a - b).abs() <= 1e-4 * (1.0 + a.abs().max(b.abs())),
+                    "row {r}: {a} vs {b}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_router_answers_everything() {
+    props("router completeness", 8, |g| {
+        let e = engine(g);
+        let d_in = e.d_in();
+        let d_out = e.d_out();
+        let mut router = Router::new();
+        router.register(
+            e,
+            BatchPolicy {
+                max_batch: g.usize(1, 8),
+                max_wait: Duration::from_micros(200),
+            },
+        );
+        let router = Arc::new(router);
+        let clients = g.usize(1, 6);
+        let per_client = g.usize(1, 10);
+        let handles: Vec<_> = (0..clients)
+            .map(|_| {
+                let router = Arc::clone(&router);
+                std::thread::spawn(move || {
+                    let mut got = 0;
+                    for _ in 0..per_client {
+                        let resp = router
+                            .infer_blocking("p", vec![0.3; d_in], Duration::from_secs(10))
+                            .expect("infer");
+                        assert_eq!(resp.output.expect("ok").len(), d_out);
+                        got += 1;
+                    }
+                    got
+                })
+            })
+            .collect();
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, clients * per_client);
+    });
+}
+
+#[test]
+fn prop_metrics_counts_consistent() {
+    props("metrics consistency", 10, |g| {
+        let e = engine(g);
+        let d_in = e.d_in();
+        let n_batches = g.usize(1, 6);
+        let mut expected_rows = 0;
+        for _ in 0..n_batches {
+            let rows = g.usize(1, 5);
+            expected_rows += rows;
+            let mut reqs = Vec::new();
+            let mut rxs = Vec::new();
+            for i in 0..rows {
+                let (req, rx) = InferenceRequest::new(i as u64, "p", vec![0.1; d_in]);
+                reqs.push(req);
+                rxs.push(rx);
+            }
+            e.run_batch(reqs);
+            for rx in rxs {
+                rx.recv().unwrap().output.unwrap();
+            }
+        }
+        use std::sync::atomic::Ordering;
+        assert_eq!(e.metrics.responses.load(Ordering::Relaxed) as usize, expected_rows);
+        assert_eq!(e.metrics.batches.load(Ordering::Relaxed) as usize, n_batches);
+        assert_eq!(
+            e.metrics.batched_rows.load(Ordering::Relaxed) as usize,
+            expected_rows
+        );
+        assert_eq!(e.metrics.errors.load(Ordering::Relaxed), 0);
+    });
+}
+
+#[test]
+fn prop_bad_inputs_never_poison_batch() {
+    props("failure isolation", 10, |g| {
+        let e = engine(g);
+        let d_in = e.d_in();
+        let n = g.usize(2, 10);
+        let bad_at = g.usize(0, n - 1);
+        let mut reqs = Vec::new();
+        let mut rxs = Vec::new();
+        for i in 0..n {
+            let len = if i == bad_at { d_in + 1 } else { d_in };
+            let (req, rx) = InferenceRequest::new(i as u64, "p", vec![0.0; len]);
+            reqs.push(req);
+            rxs.push(rx);
+        }
+        e.run_batch(reqs);
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            if i == bad_at {
+                assert!(resp.output.is_err(), "bad request must error");
+            } else {
+                assert!(resp.output.is_ok(), "good request must survive");
+            }
+        }
+    });
+}

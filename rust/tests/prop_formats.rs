@@ -1,0 +1,136 @@
+//! Property tests over sparse formats: every format round-trips to the
+//! exact dense ternary matrix it was built from, preserves nnz, validates,
+//! and reports a positive byte size, across randomized shapes, sparsities
+//! and parameters.
+
+use stgemm::formats::*;
+use stgemm::ternary::TernaryMatrix;
+use stgemm::util::quickcheck::{props, Gen};
+
+fn random_w(g: &mut Gen) -> TernaryMatrix {
+    let k = g.usize(1, 200);
+    let n = g.usize(1, 64);
+    let s = *g.choose(&[0.0f32, 0.0625, 0.125, 0.25, 0.5, 0.9, 1.0]);
+    TernaryMatrix::random(k, n, s, g.seed())
+}
+
+#[test]
+fn prop_tcsc_roundtrip() {
+    props("tcsc roundtrip", 60, |g| {
+        let w = random_w(g);
+        let f = Tcsc::from_ternary(&w);
+        f.validate().unwrap();
+        assert_eq!(f.to_dense(), w);
+        assert_eq!(f.nnz(), w.nnz());
+        assert!(f.bytes() > 0);
+    });
+}
+
+#[test]
+fn prop_blocked_roundtrip_any_block_size() {
+    props("blocked roundtrip", 60, |g| {
+        let w = random_w(g);
+        let bs = g.usize(1, w.k().max(1) * 2);
+        let f = BlockedTcsc::from_ternary(&w, bs);
+        f.validate().unwrap();
+        assert_eq!(f.to_dense(), w);
+        assert_eq!(f.nnz(), w.nnz());
+    });
+}
+
+#[test]
+fn prop_interleaved_roundtrip_any_group() {
+    props("interleaved roundtrip", 60, |g| {
+        let w = random_w(g);
+        let group = g.usize(1, 8);
+        let f = InterleavedTcsc::from_ternary(&w, group);
+        f.validate().unwrap();
+        assert_eq!(f.to_dense(), w);
+        assert_eq!(f.nnz(), w.nnz());
+    });
+}
+
+#[test]
+fn prop_interleaved_blocked_roundtrip() {
+    props("interleaved blocked roundtrip", 60, |g| {
+        let w = random_w(g);
+        let bs = g.usize(1, w.k().max(1) * 2);
+        let group = g.usize(1, 4);
+        let f = InterleavedBlockedTcsc::from_ternary(&w, bs, group);
+        f.validate().unwrap();
+        assert_eq!(f.to_dense(), w);
+        assert_eq!(f.nnz(), w.nnz());
+    });
+}
+
+#[test]
+fn prop_symmetric_roundtrip_and_invariants() {
+    props("symmetric roundtrip", 60, |g| {
+        let w = random_w(g);
+        let f = SymmetricTcsc::from_ternary(&w);
+        f.validate().unwrap();
+        assert_eq!(f.to_dense(), w);
+        assert_eq!(f.nnz(), w.nnz());
+        // Symmetry invariant: each group block is steps·16 long, steps even.
+        for gi in 0..f.ngroups() {
+            assert_eq!(f.steps_per_group[gi] % 2, 0);
+            assert_eq!(
+                f.group_indices(gi).len(),
+                f.steps_per_group[gi] as usize * 16
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_compressed_roundtrip() {
+    props("compressed roundtrip", 60, |g| {
+        let w = random_w(g);
+        let f = CompressedTernary::from_ternary(&w);
+        f.validate().unwrap();
+        assert_eq!(f.to_dense(), w);
+        // One byte per 5 rows per column.
+        assert_eq!(f.bytes(), w.n() * w.k().div_ceil(5));
+    });
+}
+
+#[test]
+fn prop_inverted_roundtrip() {
+    props("inverted roundtrip", 60, |g| {
+        let w = random_w(g);
+        let f = InvertedIndex::from_ternary(&w);
+        f.validate().unwrap();
+        assert_eq!(f.to_dense(), w);
+        assert_eq!(f.nnz(), w.nnz());
+    });
+}
+
+#[test]
+fn prop_formats_agree_on_nnz() {
+    props("cross-format nnz agreement", 40, |g| {
+        let w = random_w(g);
+        let nnz = w.nnz();
+        assert_eq!(Tcsc::from_ternary(&w).nnz(), nnz);
+        assert_eq!(BlockedTcsc::from_ternary(&w, 16).nnz(), nnz);
+        assert_eq!(InterleavedTcsc::from_ternary(&w, 4).nnz(), nnz);
+        assert_eq!(InterleavedBlockedTcsc::from_ternary(&w, 16, 2).nnz(), nnz);
+        assert_eq!(SymmetricTcsc::from_ternary(&w).nnz(), nnz);
+        assert_eq!(InvertedIndex::from_ternary(&w).nnz(), nnz);
+    });
+}
+
+#[test]
+fn prop_exact_sparsity_generator() {
+    props("exact sparsity", 80, |g| {
+        let k = g.usize(1, 300);
+        let n = g.usize(1, 100);
+        let s = g.f32(0.0, 1.0);
+        let w = TernaryMatrix::random(k, n, s, g.seed());
+        let expect = (s as f64 * (k * n) as f64).round() as usize;
+        assert_eq!(w.nnz(), expect);
+        // Sign balance within 1.
+        let pos = w.entries().iter().filter(|&&v| v == 1).count();
+        let neg = w.entries().iter().filter(|&&v| v == -1).count();
+        assert!(pos.abs_diff(neg) <= 1);
+    });
+}

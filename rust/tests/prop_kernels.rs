@@ -1,0 +1,142 @@
+//! Property tests over the kernel family: every registry kernel agrees
+//! with the f64-accumulated dense oracle on randomized problems, fused
+//! PReLU equals unfused, and kernels are deterministic.
+
+use stgemm::kernels::{
+    dense_oracle, kernel_names, prelu_inplace, prepare_kernel, KernelParams,
+};
+use stgemm::tensor::Matrix;
+use stgemm::ternary::TernaryMatrix;
+use stgemm::util::quickcheck::{props, Gen};
+
+struct Case {
+    w: TernaryMatrix,
+    x: Matrix,
+    bias: Vec<f32>,
+}
+
+fn random_case(g: &mut Gen) -> Case {
+    let m = g.usize(1, 12);
+    let k = g.usize(1, 180);
+    let n = g.usize(1, 48);
+    let s = *g.choose(&[0.0f32, 0.0625, 0.125, 0.25, 0.5, 1.0]);
+    let w = TernaryMatrix::random(k, n, s, g.seed());
+    let x = Matrix::random(m, k, g.seed());
+    let bias = g.f32_vec(n, -1.0, 1.0);
+    Case { w, x, bias }
+}
+
+#[test]
+fn prop_every_kernel_matches_oracle() {
+    props("all kernels vs oracle", 30, |g| {
+        let c = random_case(g);
+        let oracle = dense_oracle(&c.x, &c.w, &c.bias);
+        for &name in kernel_names() {
+            let kern = prepare_kernel(name, &c.w, KernelParams::default()).unwrap();
+            let mut y = Matrix::zeros(c.x.rows(), c.w.n());
+            kern.run(&c.x, &c.bias, &mut y);
+            assert!(
+                y.allclose(&oracle, 2e-3),
+                "kernel {name} maxΔ {}",
+                y.max_abs_diff(&oracle)
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_fused_prelu_equals_unfused() {
+    props("fused prelu equivalence", 30, |g| {
+        let c = random_case(g);
+        let alpha = g.f32(0.0, 1.0);
+        let mut oracle = dense_oracle(&c.x, &c.w, &c.bias);
+        prelu_inplace(&mut oracle, alpha);
+        let params = KernelParams {
+            prelu_alpha: Some(alpha),
+            ..Default::default()
+        };
+        for name in ["simd_vertical", "simd_horizontal", "simd_blocked_interleaved"] {
+            let kern = prepare_kernel(name, &c.w, params).unwrap();
+            let mut y = Matrix::zeros(c.x.rows(), c.w.n());
+            kern.run(&c.x, &c.bias, &mut y);
+            assert!(
+                y.allclose(&oracle, 2e-3),
+                "kernel {name} maxΔ {}",
+                y.max_abs_diff(&oracle)
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_kernels_deterministic() {
+    props("kernel determinism", 20, |g| {
+        let c = random_case(g);
+        let name = *g.choose(kernel_names());
+        let kern = prepare_kernel(name, &c.w, KernelParams::default()).unwrap();
+        let mut y1 = Matrix::zeros(c.x.rows(), c.w.n());
+        let mut y2 = Matrix::zeros(c.x.rows(), c.w.n());
+        kern.run(&c.x, &c.bias, &mut y1);
+        kern.run(&c.x, &c.bias, &mut y2);
+        assert_eq!(y1, y2, "kernel {name} must be bit-deterministic");
+    });
+}
+
+#[test]
+fn prop_block_size_invariance() {
+    // The blocked kernels must give identical math for ANY block size.
+    props("block size invariance", 25, |g| {
+        let c = random_case(g);
+        let oracle = dense_oracle(&c.x, &c.w, &c.bias);
+        for bs in [1, 3, 16, 4096] {
+            let params = KernelParams {
+                block_size: bs,
+                ..Default::default()
+            };
+            for name in ["unrolled_blocked_tcsc_k4_m4", "interleaved_blocked_tcsc"] {
+                let kern = prepare_kernel(name, &c.w, params).unwrap();
+                let mut y = Matrix::zeros(c.x.rows(), c.w.n());
+                kern.run(&c.x, &c.bias, &mut y);
+                assert!(y.allclose(&oracle, 2e-3), "{name} bs={bs}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_quantizer_roundtrip_signs() {
+    use stgemm::ternary::quantize_absmean;
+    props("quantizer sign preservation", 40, |g| {
+        let rows = g.usize(1, 32);
+        let cols = g.usize(1, 32);
+        let w = Matrix::random(rows, cols, g.seed());
+        let q = quantize_absmean(&w);
+        assert!(q.scale > 0.0);
+        for i in 0..rows {
+            for j in 0..cols {
+                let t = q.weights.get(i, j);
+                // A quantized nonzero never flips sign.
+                if t != 0 {
+                    assert_eq!((t as f32).signum(), w[(i, j)].signum());
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_flops_model_matches_exact_nnz() {
+    use stgemm::perf::flops::CostModel;
+    props("cost model exactness", 40, |g| {
+        let m = g.usize(1, 16);
+        let k = g.usize(1, 128);
+        let n = g.usize(1, 64);
+        let s = *g.choose(&[0.0625f32, 0.125, 0.25, 0.5]);
+        let w = TernaryMatrix::random(k, n, s, g.seed());
+        let model = CostModel::new(m, k, n, s);
+        // Exact generator: nnz = round(s·K·N), so the nominal model can
+        // differ by at most the 0.5-nnz rounding, i.e. m/2 flops.
+        let diff = (model.flops() - model.flops_exact(w.nnz())).abs();
+        assert!(diff <= m as f64 * 0.5 + 1e-9, "diff {diff} > m/2");
+    });
+}

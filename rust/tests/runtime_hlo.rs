@@ -1,0 +1,133 @@
+//! Integration tests over the real AOT artifacts: PJRT compilation of the
+//! JAX/Pallas-lowered HLO, probe-output verification, batch-bucket
+//! padding, and the native-vs-XLA cross-check (the three-layer stack's
+//! end-to-end correctness proof).
+//!
+//! Requires `make artifacts` to have run; tests fail with a clear message
+//! otherwise (CI runs `make test`, which builds artifacts first).
+
+use stgemm::coordinator::Engine;
+use stgemm::model::{TernaryLinear, TernaryMlp};
+use stgemm::runtime::{Manifest, XlaExecutor};
+use stgemm::tensor::Matrix;
+
+fn manifest() -> Manifest {
+    let dir = std::env::var("STGEMM_ARTIFACTS").unwrap_or_else(|_| {
+        // Tests run from the crate root.
+        "artifacts".to_string()
+    });
+    Manifest::load(&dir).expect(
+        "artifacts/manifest.json not found — run `make artifacts` before `cargo test`",
+    )
+}
+
+fn native_from_artifact(manifest: &Manifest, base: &str) -> TernaryMlp {
+    let v0 = manifest.variants_of(base)[0];
+    let mut layers = Vec::new();
+    for (i, l) in v0.layers.iter().enumerate() {
+        let w = v0.load_weights(&manifest.dir, i).expect("weights");
+        let b = v0.load_bias(&manifest.dir, i).expect("bias");
+        layers.push(
+            TernaryLinear::new("interleaved_blocked_tcsc", &w, b, 1.0, l.prelu_alpha)
+                .expect("layer"),
+        );
+    }
+    TernaryMlp::from_layers(base.to_string(), layers).expect("mlp")
+}
+
+#[test]
+fn manifest_lists_expected_models() {
+    let m = manifest();
+    for name in ["ffn_tiny_b1", "ffn_tiny_b8", "ffn_e2e_b1", "ffn_e2e_b8"] {
+        assert!(m.model(name).is_some(), "missing artifact model {name}");
+    }
+}
+
+#[test]
+fn xla_executes_pallas_lowered_hlo_and_matches_probe() {
+    let m = manifest();
+    let xla = XlaExecutor::spawn(&m, "ffn_tiny").expect("spawn xla service");
+    for v in m.variants_of("ffn_tiny") {
+        let x = Matrix::from_slice(v.batch, v.d_in, &v.load_probe_x(&m.dir).unwrap());
+        let want = Matrix::from_slice(v.batch, v.d_out, &v.load_probe_y(&m.dir).unwrap());
+        let got = xla.run(&x).expect("xla run");
+        assert!(
+            got.allclose(&want, 1e-3),
+            "{}: XLA output diverges from python probe by {}",
+            v.name,
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn native_kernels_match_probe_outputs() {
+    let m = manifest();
+    let mlp = native_from_artifact(&m, "ffn_tiny");
+    for v in m.variants_of("ffn_tiny") {
+        let x = Matrix::from_slice(v.batch, v.d_in, &v.load_probe_x(&m.dir).unwrap());
+        let want = Matrix::from_slice(v.batch, v.d_out, &v.load_probe_y(&m.dir).unwrap());
+        let got = mlp.forward(&x);
+        assert!(
+            got.allclose(&want, 1e-3),
+            "{}: native output diverges by {}",
+            v.name,
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn cross_backend_equivalence_on_random_inputs() {
+    let m = manifest();
+    let mlp = native_from_artifact(&m, "ffn_tiny");
+    let xla = XlaExecutor::spawn(&m, "ffn_tiny").expect("xla");
+    let engine = Engine::new("ffn_tiny", mlp).with_xla(xla);
+    for seed in 0..5u64 {
+        let x = Matrix::random(8, engine.d_in(), seed);
+        let (_native, _xla, diff) = engine.cross_check(&x).expect("cross-check");
+        assert!(diff < 1e-3, "seed {seed}: native vs xla maxΔ {diff}");
+    }
+}
+
+#[test]
+fn bucket_padding_slices_correct_rows() {
+    let m = manifest();
+    let xla = XlaExecutor::spawn(&m, "ffn_tiny").expect("xla");
+    assert_eq!(xla.buckets(), &[1, 8]);
+    // m=3 pads into the b8 executable; result must equal the first 3 rows
+    // of running the full padded batch.
+    let x = Matrix::random(3, xla.d_in, 77);
+    let y = xla.run(&x).expect("run padded");
+    assert_eq!(y.rows(), 3);
+    let mut xp = Matrix::zeros(8, xla.d_in);
+    for r in 0..3 {
+        xp.row_mut(r).copy_from_slice(x.row(r));
+    }
+    let yf = xla.run(&xp).expect("run full");
+    for r in 0..3 {
+        for (a, b) in y.row(r).iter().zip(yf.row(r)) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}
+
+#[test]
+fn oversized_batch_is_rejected() {
+    let m = manifest();
+    let xla = XlaExecutor::spawn(&m, "ffn_tiny").expect("xla");
+    let x = Matrix::random(9, xla.d_in, 1); // largest bucket is 8
+    assert!(xla.run(&x).is_err());
+}
+
+#[test]
+fn e2e_model_cross_check() {
+    // The bigger e2e model (256→1024→256) through both backends.
+    let m = manifest();
+    let mlp = native_from_artifact(&m, "ffn_e2e");
+    let xla = XlaExecutor::spawn(&m, "ffn_e2e").expect("xla");
+    let engine = Engine::new("ffn_e2e", mlp).with_xla(xla);
+    let x = Matrix::random(8, engine.d_in(), 42);
+    let (_n, _x2, diff) = engine.cross_check(&x).expect("cross-check");
+    assert!(diff < 1e-3, "e2e maxΔ {diff}");
+}
