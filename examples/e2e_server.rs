@@ -19,17 +19,24 @@ use std::time::Duration;
 use stgemm::coordinator::server::{Server, ServerConfig};
 use stgemm::coordinator::{Backend, BatchPolicy, Engine, LoadGenerator, Router};
 use stgemm::model::{TernaryLinear, TernaryMlp};
+use stgemm::plan::{PlanHints, Planner};
 use stgemm::runtime::{Manifest, XlaExecutor};
 use stgemm::tensor::Matrix;
 
-fn build_native(manifest: &Manifest, base: &str) -> TernaryMlp {
+fn build_native(manifest: &Manifest, base: &str, planner: &Planner) -> TernaryMlp {
+    // Kernel choice is the planner's job (tuning table + paper
+    // heuristics); serving code no longer names kernels.
+    let hints = PlanHints {
+        expected_batch: 8,
+        ..Default::default()
+    };
     let v0 = manifest.variants_of(base)[0];
     let mut layers = Vec::new();
     for (i, l) in v0.layers.iter().enumerate() {
         let w = v0.load_weights(&manifest.dir, i).expect("weights");
         let b = v0.load_bias(&manifest.dir, i).expect("bias");
         layers.push(
-            TernaryLinear::new("interleaved_blocked_tcsc", &w, b, 1.0, l.prelu_alpha)
+            TernaryLinear::planned(planner, &w, b, 1.0, l.prelu_alpha, &hints)
                 .expect("layer"),
         );
     }
@@ -47,7 +54,8 @@ fn main() {
     });
 
     // --- 2+3. Native model from artifact weights + cross-check ------------
-    let native = build_native(&manifest, base);
+    let planner = Planner::new();
+    let native = build_native(&manifest, base, &planner);
     let xla = XlaExecutor::spawn(&manifest, base).expect("spawn XLA service");
     println!(
         "[1] artifact loaded: buckets {:?}, d_in={}, d_out={}",
@@ -78,7 +86,7 @@ fn main() {
     // --- 4. Serve over HTTP with both backends, measure -------------------
     let (clients, reqs) = (8usize, 100usize);
     for backend in [Backend::Native, Backend::Xla] {
-        let native = build_native(&manifest, base);
+        let native = build_native(&manifest, base, &planner);
         let xla = XlaExecutor::spawn(&manifest, base).expect("xla");
         let engine = Engine::new(base, native).with_xla(xla).with_backend(backend);
         let d_in = engine.d_in();

@@ -12,6 +12,7 @@
 use stgemm::kernels::prelu_inplace;
 use stgemm::model::{TernaryLinear, TernaryMlp};
 use stgemm::perf::timer::CycleTimer;
+use stgemm::plan::{PlanHints, Planner};
 use stgemm::tensor::Matrix;
 use stgemm::ternary::quantize_absmean;
 
@@ -60,23 +61,30 @@ fn main() {
         q2.mse(&w2f)
     );
 
-    // Serving model on the paper's best kernel.
-    let l1 = TernaryLinear::new(
-        "interleaved_blocked_tcsc",
+    // Serving model: the planner picks each layer's kernel from its
+    // (K, sparsity) class — no kernel names in model-building code.
+    let planner = Planner::new();
+    let hints = PlanHints {
+        expected_batch: batch,
+        ..Default::default()
+    };
+    let l1 = TernaryLinear::planned(
+        &planner,
         &q1.weights,
         b1.clone(),
         q1.scale,
         Some(0.25),
+        &hints,
     )
     .unwrap();
-    let l2 = TernaryLinear::new(
-        "interleaved_blocked_tcsc",
-        &q2.weights,
-        b2.clone(),
-        q2.scale,
-        None,
-    )
-    .unwrap();
+    let l2 =
+        TernaryLinear::planned(&planner, &q2.weights, b2.clone(), q2.scale, None, &hints)
+            .unwrap();
+    println!(
+        "planner picks: layer 1 → {}, layer 2 → {}\n",
+        l1.kernel_name(),
+        l2.kernel_name()
+    );
     let model = TernaryMlp::from_layers("bitnet_ffn".into(), vec![l1, l2]).unwrap();
 
     // Compare against the float reference on a batch of activations.

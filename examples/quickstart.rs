@@ -1,14 +1,16 @@
-//! Quickstart: build a ternary matrix, run every kernel in the registry,
-//! verify against the dense oracle, and print a small performance table.
+//! Quickstart: build a ternary matrix, run every registry kernel through
+//! the planning layer, verify against the dense oracle, print a small
+//! performance table, and show what the planner would pick on its own.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
 use stgemm::bench::report::Table;
-use stgemm::kernels::{dense_oracle, kernel_names, prepare_kernel, KernelParams};
+use stgemm::kernels::{dense_oracle, kernel_names, KernelParams};
 use stgemm::perf::flops::CostModel;
 use stgemm::perf::timer::CycleTimer;
+use stgemm::plan::{Epilogue, PlanHints, Planner};
 use stgemm::tensor::Matrix;
 use stgemm::ternary::TernaryMatrix;
 
@@ -31,16 +33,26 @@ fn main() {
 
     let flops = CostModel::new(m, k, n, sparsity).flops();
     let timer = CycleTimer::new(1, 3);
+    let planner = Planner::new();
     let mut table = Table::new(
         "kernel comparison (all must match the oracle)",
         &["kernel", "correct", "flops/cycle", "GFLOP/s"],
     );
     for &name in kernel_names() {
-        let kern = prepare_kernel(name, &w, KernelParams::default()).unwrap();
+        // Pin each kernel explicitly; serving code would omit the hint and
+        // let the planner choose.
+        let plan = planner
+            .plan(
+                &w,
+                KernelParams::default(),
+                Epilogue::with_bias(bias.clone()),
+                &PlanHints::with_kernel(name),
+            )
+            .unwrap();
         let mut y = Matrix::zeros(m, n);
-        kern.run(&x, &bias, &mut y);
+        plan.run(&x, &mut y);
         let correct = y.allclose(&oracle, 1e-3);
-        let meas = timer.run(|| kern.run(&x, &bias, &mut y));
+        let meas = timer.run(|| plan.run(&x, &mut y));
         table.row(vec![
             name.to_string(),
             if correct { "✓".into() } else { "✗ FAIL".into() },
@@ -51,4 +63,17 @@ fn main() {
     }
     println!("{}", table.render());
     println!("All kernels verified against the dense oracle.");
+
+    let auto = planner
+        .plan(
+            &w,
+            KernelParams::default(),
+            Epilogue::with_bias(bias.clone()),
+            &PlanHints::default(),
+        )
+        .unwrap();
+    println!(
+        "planner pick for (K={k}, s={sparsity}) with no hint: {}",
+        auto.kernel_name()
+    );
 }

@@ -1,10 +1,18 @@
-//! Measurement protocol: warmup + median-of-reps cycle timing of prepared
+//! Measurement protocol: warmup + median-of-reps cycle timing of planned
 //! kernels, scaled by `STGEMM_BENCH_SCALE` (`full` = paper shapes, `ci` =
 //! same shapes with fewer reps so `cargo bench` stays minutes-fast).
+//!
+//! Measurements run through [`crate::plan::GemmPlan`] — the same execution
+//! path the serving engine uses — with the kernel pinned by name. When
+//! `prelu_alpha` is set, fusing kernels fuse it and scalar kernels get the
+//! separate epilogue pass, so the measured time matches what the cost
+//! model's `with_prelu` counts (the old harness silently skipped PReLU for
+//! non-fusing kernels).
 
-use crate::kernels::{prepare_kernel, KernelParams};
+use crate::kernels::KernelParams;
 use crate::perf::flops::CostModel;
 use crate::perf::timer::{CycleTimer, Measurement};
+use crate::plan::{Epilogue, PlanHints, Planner};
 use crate::tensor::Matrix;
 use crate::ternary::TernaryMatrix;
 
@@ -65,8 +73,10 @@ impl KernelMeasurement {
 
 /// Measure one registry kernel on a synthetic workload.
 ///
-/// Format construction happens *outside* the timed region (the paper
-/// benchmarks the GEMM, not format conversion).
+/// Plan construction (format building, scratch pre-sizing) happens
+/// *outside* the timed region (the paper benchmarks the GEMM, not format
+/// conversion), and steady-state runs reuse the plan's scratch exactly as
+/// serving does.
 pub fn measure_kernel(
     name: &str,
     m: usize,
@@ -78,11 +88,24 @@ pub fn measure_kernel(
     timer: &CycleTimer,
 ) -> KernelMeasurement {
     let w = TernaryMatrix::random(k, n, sparsity, seed);
-    let prepared = prepare_kernel(name, &w, params).expect("registry kernel");
     let x = Matrix::random(m, k, seed + 1);
     let bias: Vec<f32> = (0..n).map(|i| (i % 13) as f32 * 0.05).collect();
+    let planner = Planner::new();
+    let hints = PlanHints {
+        kernel: Some(name.to_string()),
+        expected_batch: m,
+        ..Default::default()
+    };
+    let plan = planner
+        .plan(
+            &w,
+            params,
+            Epilogue::new(bias, 1.0, params.prelu_alpha),
+            &hints,
+        )
+        .expect("registry kernel");
     let mut y = Matrix::zeros(m, n);
-    let measurement = timer.run(|| prepared.run(&x, &bias, &mut y));
+    let measurement = timer.run(|| plan.run(&x, &mut y));
     std::hint::black_box(y.as_slice());
     let mut cost = CostModel::new(m, k, n, sparsity);
     if params.prelu_alpha.is_some() {

@@ -1,4 +1,5 @@
-//! Inference engine: executes batches on the native ternary kernels or the
+//! Inference engine: executes batches on the native ternary kernels (via
+//! the planning layer's [`crate::plan::GemmPlan`]s inside the model) or the
 //! PJRT-compiled JAX/Pallas artifact, and can cross-check the two.
 
 use crate::coordinator::metrics::Metrics;
@@ -48,6 +49,22 @@ impl Engine {
             backend: Backend::Native,
             metrics: Arc::new(Metrics::new()),
         }
+    }
+
+    /// Build the native model through the planning layer: every layer's
+    /// kernel comes from `planner` (tuning table + paper heuristics) unless
+    /// the config pins an explicit override, and batches served by
+    /// [`Engine::run_batch`] execute through the resulting
+    /// [`crate::plan::GemmPlan`]s (allocation-stable scratch, optional
+    /// row-parallel fan-out per the config's `threads`).
+    pub fn from_config(
+        cfg: &crate::model::ModelConfig,
+        planner: &crate::plan::Planner,
+    ) -> Result<Engine, String> {
+        Ok(Engine::new(
+            cfg.name.clone(),
+            TernaryMlp::planned(cfg, planner)?,
+        ))
     }
 
     /// Attach an XLA executor (enables `Backend::Xla` and cross-checks).
@@ -196,7 +213,7 @@ mod tests {
             r#"{"name":"t","dims":[16,32,8],"sparsity":0.25,"seed":3}"#,
         )
         .unwrap();
-        Engine::new("t", TernaryMlp::from_config(&cfg).unwrap())
+        Engine::from_config(&cfg, &crate::plan::Planner::new()).unwrap()
     }
 
     #[test]

@@ -34,7 +34,7 @@ pub use compressed::CompressedKernel;
 pub use inverted::InvertedKernel;
 pub use parallel::ParallelGemm;
 pub use prelu::{prelu_inplace, PRELU_DEFAULT_ALPHA};
-pub use registry::{kernel_names, prepare_kernel, KernelParams, PreparedGemm};
+pub use registry::{kernel_names, prepare_kernel, GemmScratch, KernelParams, PreparedGemm};
 pub use unrolled::UnrolledTcscKernel;
 pub use unrolled_m::UnrolledMKernel;
 

@@ -1,24 +1,37 @@
 //! Multi-core execution of any prepared kernel by row partitioning.
 //!
-//! The paper evaluates single-core performance (its contribution is the
-//! per-core kernel); a serving system also needs to scale across cores.
-//! Because `Y = X·W + b` is embarrassingly parallel over rows of X, we
-//! split the batch into contiguous row chunks and run the *same* prepared
-//! kernel on each chunk in parallel — no synchronization inside the GEMM,
-//! and per-chunk results are written into disjoint slices of Y.
+//! This is now a thin veneer over the planning layer's partitioner
+//! ([`crate::plan::execute_partitioned`]) kept for API compatibility and
+//! as a regression surface: the old implementation copied every X chunk
+//! into a fresh matrix, ran into per-chunk Y matrices, and stitched the
+//! results back with one more pass over Y. The partitioner instead reads X
+//! through zero-copy row views, writes each worker's output directly into
+//! its disjoint `&mut Y` row block, reuses per-worker scratch across runs,
+//! and executes on a pooled fork-join — with chunk boundaries aligned so
+//! results are **bitwise identical** to the sequential path.
+//!
+//! New code should plan with [`crate::plan::Planner`] instead, which
+//! bundles the same partitioner with kernel selection and the epilogue.
 
-use crate::kernels::PreparedGemm;
+use crate::kernels::{GemmScratch, PreparedGemm};
+use crate::plan::partition::{execute_partitioned, RowPartition};
 use crate::tensor::Matrix;
-use std::sync::Arc;
+use crate::util::threadpool::ThreadPool;
+use std::sync::{Arc, Mutex};
 
 /// A prepared kernel wrapped for multi-core row-partitioned execution.
 pub struct ParallelGemm {
     inner: Arc<dyn PreparedGemm>,
-    /// Worker threads used per run (1 = sequential passthrough).
+    /// Worker threads used per run (1 = sequential passthrough). May be
+    /// changed between runs; the pool and scratch adapt on the next call.
     pub threads: usize,
     /// Minimum rows per chunk; batches smaller than `2·min_rows` run
-    /// sequentially (thread spawn isn't worth it).
+    /// sequentially (fan-out isn't worth it).
     pub min_rows: usize,
+    /// Created lazily on the first parallel run (a `threads == 1` wrapper
+    /// never spawns workers).
+    pool: Mutex<Option<ThreadPool>>,
+    scratch: Mutex<Vec<GemmScratch>>,
 }
 
 impl ParallelGemm {
@@ -27,63 +40,35 @@ impl ParallelGemm {
             inner,
             threads: threads.max(1),
             min_rows: 2,
+            pool: Mutex::new(None),
+            scratch: Mutex::new(Vec::new()),
         }
     }
 
     /// Compute `Y = X·W + b` using up to `self.threads` cores.
     pub fn run(&self, x: &Matrix, bias: &[f32], y: &mut Matrix) {
-        let m = x.rows();
-        assert_eq!(y.rows(), m);
-        assert_eq!(x.cols(), self.inner.k());
-        assert_eq!(y.cols(), self.inner.n());
-        let chunks = self
-            .threads
-            .min(m / self.min_rows.max(1))
-            .max(1);
-        if chunks <= 1 {
-            self.inner.run(x, bias, y);
-            return;
+        let threads = self.threads.max(1);
+        let part = RowPartition::new(threads, self.min_rows);
+        let mut scratches = self.scratch.lock().unwrap_or_else(|e| e.into_inner());
+        if scratches.len() < threads {
+            scratches.resize_with(threads, GemmScratch::new);
         }
-        let n = self.inner.n();
-        let rows_per = m.div_ceil(chunks);
-        // Split X rows and collect per-chunk outputs, then stitch. The
-        // copy is one sequential pass over Y — negligible next to the GEMM.
-        let chunk_inputs: Vec<Matrix> = (0..chunks)
-            .filter_map(|c| {
-                let lo = c * rows_per;
-                if lo >= m {
-                    return None; // ceil-division can over-provision chunks
-                }
-                let hi = ((c + 1) * rows_per).min(m);
-                let mut xc = Matrix::zeros(hi - lo, x.cols());
-                for (i, r) in (lo..hi).enumerate() {
-                    xc.row_mut(i).copy_from_slice(x.row(r));
-                }
-                Some(xc)
-            })
-            .collect();
-        let results: Vec<Matrix> = std::thread::scope(|scope| {
-            let handles: Vec<_> = chunk_inputs
-                .iter()
-                .map(|xc| {
-                    let inner = Arc::clone(&self.inner);
-                    scope.spawn(move || {
-                        let mut yc = Matrix::zeros(xc.rows(), n);
-                        inner.run(xc, bias, &mut yc);
-                        yc
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("chunk")).collect()
-        });
-        let mut r = 0;
-        for yc in results {
-            for i in 0..yc.rows() {
-                y.row_mut(r).copy_from_slice(yc.row(i));
-                r += 1;
-            }
+        let mut pool_slot = self.pool.lock().unwrap_or_else(|e| e.into_inner());
+        if threads > 1 && pool_slot.is_none() {
+            // Sized once to the first parallel request; a later larger
+            // `threads` still works (extra chunks queue on the workers).
+            *pool_slot = Some(ThreadPool::new(threads));
         }
-        debug_assert_eq!(r, m);
+        let pool = if threads > 1 { pool_slot.as_ref() } else { None };
+        execute_partitioned(
+            self.inner.as_ref(),
+            part,
+            pool,
+            x,
+            bias,
+            y,
+            &mut scratches,
+        );
     }
 }
 
@@ -117,6 +102,81 @@ mod tests {
     }
 
     #[test]
+    fn parallel_is_bitwise_identical_to_sequential() {
+        // Regression for the old copy-and-stitch implementation: the
+        // in-place partitioner must produce exactly the sequential bits for
+        // every kernel family (scalar, M-tiled, SIMD, dense).
+        let (w, x, bias) = setup(13);
+        for name in [
+            "base_tcsc",
+            "unrolled_tcsc_k4_m4",
+            "interleaved_blocked_tcsc",
+            "simd_vertical",
+            "simd_blocked_interleaved",
+            "dense_gemm",
+        ] {
+            let inner: Arc<dyn crate::kernels::PreparedGemm> =
+                prepare_kernel(name, &w, KernelParams::default())
+                    .unwrap()
+                    .into();
+            let mut y_seq = Matrix::zeros(13, 32);
+            inner.run(&x, &bias, &mut y_seq);
+            let par = ParallelGemm::new(Arc::clone(&inner), 4);
+            let mut y_par = Matrix::zeros(13, 32);
+            par.run(&x, &bias, &mut y_par);
+            assert_eq!(y_seq, y_par, "kernel {name}");
+        }
+    }
+
+    #[test]
+    fn repeated_runs_do_not_grow_scratch() {
+        let (w, x, bias) = setup(12);
+        let inner: Arc<dyn crate::kernels::PreparedGemm> =
+            prepare_kernel("simd_horizontal", &w, KernelParams::default())
+                .unwrap()
+                .into();
+        let par = ParallelGemm::new(inner, 3);
+        let mut y = Matrix::zeros(12, 32);
+        par.run(&x, &bias, &mut y);
+        let caps: Vec<usize> = par
+            .scratch
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|s| s.padded_capacity())
+            .collect();
+        for _ in 0..5 {
+            par.run(&x, &bias, &mut y);
+        }
+        let caps_after: Vec<usize> = par
+            .scratch
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|s| s.padded_capacity())
+            .collect();
+        assert_eq!(caps, caps_after);
+    }
+
+    #[test]
+    fn threads_can_grow_after_construction() {
+        let (w, x, bias) = setup(16);
+        let inner: Arc<dyn crate::kernels::PreparedGemm> =
+            prepare_kernel("base_tcsc", &w, KernelParams::default())
+                .unwrap()
+                .into();
+        let mut y_seq = Matrix::zeros(16, 32);
+        inner.run(&x, &bias, &mut y_seq);
+        let mut par = ParallelGemm::new(Arc::clone(&inner), 1);
+        let mut y = Matrix::zeros(16, 32);
+        par.run(&x, &bias, &mut y); // sequential, spawns no workers
+        assert_eq!(y_seq, y);
+        par.threads = 8; // grow after construction — pool/scratch adapt
+        par.run(&x, &bias, &mut y);
+        assert_eq!(y_seq, y);
+    }
+
+    #[test]
     fn tiny_batches_run_sequentially() {
         let (w, x, bias) = setup(1);
         let oracle = dense_oracle(&x, &w, &bias);
@@ -132,7 +192,7 @@ mod tests {
 
     #[test]
     fn uneven_row_split() {
-        let (w, x, bias) = setup(7); // 7 rows over 3 threads → 3+3+1
+        let (w, x, bias) = setup(7); // 7 rows: tile-aligned split 4+3
         let oracle = dense_oracle(&x, &w, &bias);
         let inner: Arc<dyn crate::kernels::PreparedGemm> =
             prepare_kernel("unrolled_tcsc_12", &w, KernelParams::default())

@@ -19,8 +19,11 @@ use crate::ternary::TernaryMatrix;
 pub struct KernelParams {
     /// Block size for blocked formats; the paper's rule is `min(K, 4096)`.
     pub block_size: usize,
-    /// Interleave group size (indices per sign).
-    pub group: usize,
+    /// Interleave group size (indices per sign). `None` picks the paper
+    /// default per kernel family: 4 for `interleaved_tcsc`, 2 for the
+    /// blocked interleaved kernels. `Some(g)` is honored by every
+    /// interleaving kernel.
+    pub group: Option<usize>,
     /// PReLU slope for kernels that fuse activation; `None` = no activation.
     pub prelu_alpha: Option<f32>,
 }
@@ -29,7 +32,7 @@ impl Default for KernelParams {
     fn default() -> Self {
         KernelParams {
             block_size: crate::PAPER_BLOCK_SIZE,
-            group: crate::PAPER_GROUP_SIZE,
+            group: None,
             prelu_alpha: None,
         }
     }
@@ -40,6 +43,57 @@ impl KernelParams {
     pub fn effective_block(&self, k: usize) -> usize {
         self.block_size.min(k.max(1))
     }
+
+    /// Group for the plain interleaved format (paper default 4).
+    pub fn interleave_group(&self) -> usize {
+        self.group.unwrap_or(crate::PAPER_GROUP_SIZE)
+    }
+
+    /// Group for the blocked interleaved formats (paper default 2).
+    pub fn blocked_group(&self) -> usize {
+        self.group.unwrap_or(crate::PAPER_BLOCKED_GROUP)
+    }
+}
+
+/// Reusable per-caller buffers a prepared kernel may keep across runs.
+/// Today this is the SIMD family's padded X copy — previously rebuilt on
+/// **every** call, now reused whenever the allocation is large enough
+/// (steady-state serving performs no allocation).
+#[derive(Debug, Default)]
+pub struct GemmScratch {
+    padded_x: Option<PaddedMatrix>,
+}
+
+impl GemmScratch {
+    pub fn new() -> GemmScratch {
+        GemmScratch::default()
+    }
+
+    /// Padded copy of `x`, reusing the buffer when capacity allows.
+    pub fn padded_x(&mut self, x: &Matrix) -> &PaddedMatrix {
+        if self.padded_x.is_none() {
+            self.padded_x = Some(PaddedMatrix::from_matrix(x));
+        } else {
+            self.padded_x.as_mut().expect("checked above").copy_from(x);
+        }
+        self.padded_x.as_ref().expect("just filled")
+    }
+
+    /// Pre-size the padded buffer for a `rows`×`k` problem (avoids the
+    /// first-call allocation on the serving path).
+    pub fn reserve_padded(&mut self, rows: usize, k: usize) {
+        let needed = rows * (k + 1);
+        let have = self.padded_x.as_ref().map_or(0, |p| p.capacity());
+        if needed > have {
+            self.padded_x = Some(PaddedMatrix::with_capacity(rows, k));
+        }
+    }
+
+    /// Current padded-buffer capacity in f32 elements (0 = not allocated).
+    /// Allocation-stability tests snapshot this across runs.
+    pub fn padded_capacity(&self) -> usize {
+        self.padded_x.as_ref().map_or(0, |p| p.capacity())
+    }
 }
 
 /// A kernel bound to its prepared format: the serving-time object.
@@ -49,6 +103,20 @@ pub trait PreparedGemm: Send + Sync {
 
     /// Compute `Y = X·W + b` (+ fused activation where supported).
     fn run(&self, x: &Matrix, bias: &[f32], y: &mut Matrix);
+
+    /// Like [`PreparedGemm::run`], but allowed to keep per-call buffers in
+    /// `scratch` for reuse across calls. Kernels that need no scratch fall
+    /// through to `run`. The planned execution path
+    /// ([`crate::plan::GemmPlan`]) always calls this form.
+    fn run_with_scratch(
+        &self,
+        x: &Matrix,
+        bias: &[f32],
+        y: &mut Matrix,
+        _scratch: &mut GemmScratch,
+    ) {
+        self.run(x, bias, y);
+    }
 
     /// Logical K.
     fn k(&self) -> usize;
@@ -66,10 +134,25 @@ pub trait PreparedGemm: Send + Sync {
     fn fused_prelu(&self) -> bool {
         false
     }
+
+    /// Whether `run_with_scratch` uses the padded-X scratch buffer (the
+    /// planner pre-sizes scratch only for kernels that benefit).
+    fn uses_padded_scratch(&self) -> bool {
+        false
+    }
+
+    /// Interleave group of the prepared format, for kernels built from an
+    /// interleaved layout (`None` otherwise). Lets callers verify that
+    /// [`KernelParams::group`] was honored.
+    fn interleave_group(&self) -> Option<usize> {
+        None
+    }
 }
 
+// Trailing `with_group` marker opts in an `interleave_group` accessor for
+// formats with a public `group` field.
 macro_rules! typed_prepared {
-    ($struct_name:ident, $fmt:ty, $kernel:expr, $name:expr) => {
+    ($struct_name:ident, $fmt:ty, $kernel:expr, $name:expr $(, $with_group:ident)?) => {
         struct $struct_name {
             fmt: $fmt,
         }
@@ -92,6 +175,12 @@ macro_rules! typed_prepared {
             fn format_bytes(&self) -> usize {
                 self.fmt.bytes()
             }
+            $(
+                fn interleave_group(&self) -> Option<usize> {
+                    let _ = stringify!($with_group);
+                    Some(self.fmt.group)
+                }
+            )?
         }
     };
 }
@@ -106,12 +195,19 @@ typed_prepared!(
     UnrolledBlockedKernel::<4, 4>,
     "unrolled_blocked_tcsc_k4_m4"
 );
-typed_prepared!(PInterleaved, InterleavedTcsc, InterleavedKernel::<4>, "interleaved_tcsc");
+typed_prepared!(
+    PInterleaved,
+    InterleavedTcsc,
+    InterleavedKernel::<4>,
+    "interleaved_tcsc",
+    with_group
+);
 typed_prepared!(
     PInterleavedBlocked,
     InterleavedBlockedTcsc,
     InterleavedBlockedKernel::<4>,
-    "interleaved_blocked_tcsc"
+    "interleaved_blocked_tcsc",
+    with_group
 );
 typed_prepared!(PCompressed, CompressedTernary, CompressedKernel, "compressed_ternary");
 typed_prepared!(
@@ -162,8 +258,19 @@ impl PreparedGemm for PSimd<VerticalSimdKernel> {
         self.name
     }
     fn run(&self, x: &Matrix, bias: &[f32], y: &mut Matrix) {
+        // One-shot path: pads X fresh. The planned path below reuses the
+        // caller's scratch instead.
         let padded = PaddedMatrix::from_matrix(x);
         self.kernel.run_padded(&padded, &self.fmt, bias, y);
+    }
+    fn run_with_scratch(
+        &self,
+        x: &Matrix,
+        bias: &[f32],
+        y: &mut Matrix,
+        scratch: &mut GemmScratch,
+    ) {
+        self.kernel.run_padded(scratch.padded_x(x), &self.fmt, bias, y);
     }
     fn k(&self) -> usize {
         self.fmt.k()
@@ -179,6 +286,9 @@ impl PreparedGemm for PSimd<VerticalSimdKernel> {
     }
     fn fused_prelu(&self) -> bool {
         self.prelu
+    }
+    fn uses_padded_scratch(&self) -> bool {
+        true
     }
 }
 
@@ -190,6 +300,15 @@ impl PreparedGemm for PSimd<HorizontalSimdKernel> {
         let padded = PaddedMatrix::from_matrix(x);
         self.kernel.run_padded(&padded, &self.fmt, bias, y);
     }
+    fn run_with_scratch(
+        &self,
+        x: &Matrix,
+        bias: &[f32],
+        y: &mut Matrix,
+        scratch: &mut GemmScratch,
+    ) {
+        self.kernel.run_padded(scratch.padded_x(x), &self.fmt, bias, y);
+    }
     fn k(&self) -> usize {
         self.fmt.k()
     }
@@ -204,6 +323,9 @@ impl PreparedGemm for PSimd<HorizontalSimdKernel> {
     }
     fn fused_prelu(&self) -> bool {
         self.prelu
+    }
+    fn uses_padded_scratch(&self) -> bool {
+        true
     }
 }
 
@@ -234,6 +356,9 @@ impl PreparedGemm for PSimdBlocked {
     }
     fn fused_prelu(&self) -> bool {
         self.prelu
+    }
+    fn interleave_group(&self) -> Option<usize> {
+        Some(self.fmt.group)
     }
 }
 
@@ -266,6 +391,9 @@ pub fn prepare_kernel(
     w: &TernaryMatrix,
     params: KernelParams,
 ) -> Result<Box<dyn PreparedGemm>, String> {
+    if params.group == Some(0) {
+        return Err("interleave group must be >= 1".into());
+    }
     let bs = params.effective_block(w.k());
     Ok(match name {
         "base_tcsc" => Box::new(PBase {
@@ -284,10 +412,10 @@ pub fn prepare_kernel(
             fmt: BlockedTcsc::from_ternary(w, bs),
         }),
         "interleaved_tcsc" => Box::new(PInterleaved {
-            fmt: InterleavedTcsc::from_ternary(w, params.group),
+            fmt: InterleavedTcsc::from_ternary(w, params.interleave_group()),
         }),
         "interleaved_blocked_tcsc" => Box::new(PInterleavedBlocked {
-            fmt: InterleavedBlockedTcsc::from_ternary(w, bs, 2),
+            fmt: InterleavedBlockedTcsc::from_ternary(w, bs, params.blocked_group()),
         }),
         "compressed_ternary" => Box::new(PCompressed {
             fmt: CompressedTernary::from_ternary(w),
@@ -311,7 +439,7 @@ pub fn prepare_kernel(
             prelu: params.prelu_alpha.is_some(),
         }),
         "simd_blocked_interleaved" => Box::new(PSimdBlocked {
-            fmt: InterleavedBlockedTcsc::from_ternary(w, bs, 2),
+            fmt: InterleavedBlockedTcsc::from_ternary(w, bs, params.blocked_group()),
             kernel: SimdBlockedMnKernel::new(params.prelu_alpha),
             prelu: params.prelu_alpha.is_some(),
         }),
@@ -370,6 +498,78 @@ mod tests {
     fn unknown_kernel_is_error() {
         let w = TernaryMatrix::random(8, 8, 0.5, 1);
         assert!(prepare_kernel("nope", &w, KernelParams::default()).is_err());
+        assert!(prepare_kernel(
+            "interleaved_tcsc",
+            &w,
+            KernelParams {
+                group: Some(0),
+                ..Default::default()
+            }
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn group_param_is_threaded_through() {
+        let w = TernaryMatrix::random(96, 24, 0.25, 17);
+        let x = Matrix::random(5, 96, 18);
+        let bias: Vec<f32> = (0..24).map(|i| 0.05 * i as f32).collect();
+        let oracle = dense_oracle(&x, &w, &bias);
+        // Paper defaults when no group is given.
+        for (name, want) in [
+            ("interleaved_tcsc", crate::PAPER_GROUP_SIZE),
+            ("interleaved_blocked_tcsc", crate::PAPER_BLOCKED_GROUP),
+            ("simd_blocked_interleaved", crate::PAPER_BLOCKED_GROUP),
+        ] {
+            let kern = prepare_kernel(name, &w, KernelParams::default()).unwrap();
+            assert_eq!(kern.interleave_group(), Some(want), "{name} default");
+        }
+        // Explicit groups are honored by every interleaving kernel and
+        // stay correct.
+        for g in [1usize, 3, 4] {
+            let params = KernelParams {
+                group: Some(g),
+                ..Default::default()
+            };
+            for name in [
+                "interleaved_tcsc",
+                "interleaved_blocked_tcsc",
+                "simd_blocked_interleaved",
+            ] {
+                let kern = prepare_kernel(name, &w, params).unwrap();
+                assert_eq!(kern.interleave_group(), Some(g), "{name} g={g}");
+                let mut y = Matrix::zeros(5, 24);
+                kern.run(&x, &bias, &mut y);
+                assert!(y.allclose(&oracle, 1e-3), "{name} g={g}");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_path_matches_and_reuses_allocation() {
+        let w = TernaryMatrix::random(64, 20, 0.25, 55);
+        let x = Matrix::random(6, 64, 56);
+        let bias = vec![0.1f32; 20];
+        for name in kernel_names() {
+            let kern = prepare_kernel(name, &w, KernelParams::default()).unwrap();
+            let mut y_plain = Matrix::zeros(6, 20);
+            kern.run(&x, &bias, &mut y_plain);
+            let mut scratch = GemmScratch::new();
+            let mut y_scratch = Matrix::zeros(6, 20);
+            kern.run_with_scratch(&x, &bias, &mut y_scratch, &mut scratch);
+            assert_eq!(y_plain, y_scratch, "{name} scratch path must be bitwise equal");
+            // Repeated calls must not grow the scratch.
+            let cap = scratch.padded_capacity();
+            for _ in 0..3 {
+                kern.run_with_scratch(&x, &bias, &mut y_scratch, &mut scratch);
+            }
+            assert_eq!(scratch.padded_capacity(), cap, "{name}");
+            if kern.uses_padded_scratch() {
+                assert_eq!(cap, 6 * 65, "{name} pads X into scratch");
+            } else {
+                assert_eq!(cap, 0, "{name} needs no padded scratch");
+            }
+        }
     }
 
     #[test]

@@ -1,12 +1,13 @@
 //! Vectorization of the best scalar kernel (paper §3, last vectorization
-//! approach): blocked (B = 4096) + interleaved (group 2) format, vectorized
-//! over **M** — one `F32x4` accumulator per W column whose four lanes map
-//! to four rows of X. Each innermost iteration consumes one interleaved
-//! step (2 positive + 2 negative indices) and performs four column-gathers
-//! of X (stride-K "vertical" gathers, four scalar loads each — NEON has no
-//! gather, and neither do we). Remainder segments and ragged rows fall back
-//! to the scalar cleanup, whose ILP is why the paper found this variant
-//! performs *similarly but not better* than the best scalar kernel.
+//! approach): blocked (B = 4096) + interleaved (paper group 2, any group
+//! supported) format, vectorized over **M** — one `F32x4` accumulator per
+//! W column whose four lanes map to four rows of X. Each innermost
+//! iteration consumes one interleaved step (G positive + G negative
+//! indices) and performs column-gathers of X (stride-K "vertical" gathers,
+//! four scalar loads each — NEON has no gather, and neither do we).
+//! Remainder segments and ragged rows fall back to the scalar cleanup,
+//! whose ILP is why the paper found this variant performs *similarly but
+//! not better* than the best scalar kernel.
 
 use crate::formats::{InterleavedBlockedTcsc, SparseFormat};
 use crate::kernels::prelu::prelu_scalar;
@@ -54,12 +55,9 @@ impl SimdBlockedMnKernel {
         assert_eq!(bias.len(), w.n());
         assert_eq!(y.rows(), x.rows());
         assert_eq!(y.cols(), w.n());
-        assert_eq!(
-            w.group, 2,
-            "SIMD blocked kernel requires interleave group 2 (paper config)"
-        );
         let m = x.rows();
         let n = w.n();
+        let g = w.group;
         for r in 0..m {
             y.row_mut(r).copy_from_slice(bias);
         }
@@ -71,15 +69,29 @@ impl SimdBlockedMnKernel {
                 for c in 0..n {
                     let inter = w.seg_interleaved(b, c);
                     let mut acc = F32x4::ZERO;
-                    // Two accumulators would add ILP; measured neutral here
-                    // because the 16 scalar gather loads dominate the port
-                    // pressure (the paper's observation exactly).
-                    for step in inter.chunks_exact(4) {
-                        let p0 = Self::col_gather(&xrows, step[0]);
-                        let p1 = Self::col_gather(&xrows, step[1]);
-                        let n0 = Self::col_gather(&xrows, step[2]);
-                        let n1 = Self::col_gather(&xrows, step[3]);
-                        acc = acc.add(p0).add(p1).sub(n0).sub(n1);
+                    if g == 2 {
+                        // Paper config fast path (group 2): 2 adds + 2 subs
+                        // per step. Two accumulators would add ILP; measured
+                        // neutral here because the 16 scalar gather loads
+                        // dominate the port pressure (the paper's
+                        // observation exactly).
+                        for step in inter.chunks_exact(4) {
+                            let p0 = Self::col_gather(&xrows, step[0]);
+                            let p1 = Self::col_gather(&xrows, step[1]);
+                            let n0 = Self::col_gather(&xrows, step[2]);
+                            let n1 = Self::col_gather(&xrows, step[3]);
+                            acc = acc.add(p0).add(p1).sub(n0).sub(n1);
+                        }
+                    } else {
+                        // Generic group: g adds then g subtracts per step.
+                        for step in inter.chunks_exact(2 * g) {
+                            for &i in &step[..g] {
+                                acc = acc.add(Self::col_gather(&xrows, i));
+                            }
+                            for &i in &step[g..] {
+                                acc = acc.sub(Self::col_gather(&xrows, i));
+                            }
+                        }
                     }
                     // Scalar cleanup for the unmatched remainders.
                     let mut rest = [0.0f32; 4];
@@ -91,16 +103,29 @@ impl SimdBlockedMnKernel {
                 }
                 r += 4;
             }
-            // Ragged rows: scalar path.
+            // Ragged rows: scalar path, same accumulation order as a tile
+            // lane so chunked execution stays bit-identical.
             while r < m {
                 let xrows: [&[f32]; 1] = [x.row(r)];
                 for c in 0..n {
                     let mut acc = [0.0f32; 1];
                     let inter = w.seg_interleaved(b, c);
-                    for step in inter.chunks_exact(4) {
-                        acc[0] += xrows[0][step[0] as usize] + xrows[0][step[1] as usize]
-                            - xrows[0][step[2] as usize]
-                            - xrows[0][step[3] as usize];
+                    if g == 2 {
+                        for step in inter.chunks_exact(4) {
+                            acc[0] = acc[0] + xrows[0][step[0] as usize]
+                                + xrows[0][step[1] as usize]
+                                - xrows[0][step[2] as usize]
+                                - xrows[0][step[3] as usize];
+                        }
+                    } else {
+                        for step in inter.chunks_exact(2 * g) {
+                            for &i in &step[..g] {
+                                acc[0] += xrows[0][i as usize];
+                            }
+                            for &i in &step[g..] {
+                                acc[0] -= xrows[0][i as usize];
+                            }
+                        }
                     }
                     gather_rows::<4, 1>(&xrows, w.seg_rest_pos(b, c), &mut acc, false);
                     gather_rows::<4, 1>(&xrows, w.seg_rest_neg(b, c), &mut acc, true);
@@ -157,12 +182,18 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "group 2")]
-    fn rejects_wrong_group() {
-        let w = TernaryMatrix::random(32, 8, 0.5, 1);
-        let f = InterleavedBlockedTcsc::from_ternary(&w, 16, 4);
-        let x = Matrix::random(4, 32, 2);
-        let mut y = Matrix::zeros(4, 8);
-        SimdBlockedMnKernel::new(None).run(&x, &f, &[0.0; 8], &mut y);
+    fn nondefault_groups_match_oracle() {
+        // The kernel is no longer pinned to the paper's group-2 layout:
+        // any interleave group runs through the generic walk.
+        for g in [1usize, 3, 4] {
+            let w = TernaryMatrix::random(96, 12, 0.25, 7 + g as u64);
+            let f = InterleavedBlockedTcsc::from_ternary(&w, 32, g);
+            let x = Matrix::random(6, 96, 8);
+            let bias: Vec<f32> = (0..12).map(|i| 0.03 * i as f32).collect();
+            let oracle = dense_oracle(&x, &w, &bias);
+            let mut y = Matrix::zeros(6, 12);
+            SimdBlockedMnKernel::new(None).run(&x, &f, &bias, &mut y);
+            assert!(y.allclose(&oracle, 1e-4), "group {g}");
+        }
     }
 }

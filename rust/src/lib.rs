@@ -12,7 +12,9 @@
 //!
 //! ## Crate layout
 //!
-//! - [`tensor`] — dense, cache-aligned row-major `Matrix<f32>`.
+//! - [`tensor`] — dense, cache-aligned row-major `Matrix<f32>`, plus
+//!   zero-copy row views and the padded activation matrix the SIMD kernels
+//!   read through.
 //! - [`ternary`] — dense ternary matrices, exact-sparsity generators and the
 //!   absmean quantizer that turns float weights ternary.
 //! - [`formats`] — every sparse layout from the paper: [`formats::Tcsc`],
@@ -21,46 +23,74 @@
 //!   [`formats::CompressedTernary`] (base-3 packing) and
 //!   [`formats::InvertedIndex`].
 //! - [`kernels`] — the GEMM kernel family over those formats, scalar and
-//!   SIMD, plus the dense oracle and PReLU fusion.
+//!   SIMD, the string-keyed registry (`prepare_kernel`), the dense oracle
+//!   and PReLU fusion.
+//! - [`plan`] — **the layer everything executes through**:
+//!   [`plan::Planner`] turns weights + hints into a [`plan::GemmPlan`]
+//!   (kernel selected via the autotune table or paper heuristics, epilogue
+//!   fused where possible, scratch preallocated, rows partitioned across a
+//!   thread pool with bitwise-sequential results).
 //! - [`autotune`] — the unroll-factor / block-size grid search behind the
-//!   paper's Figures 2–4.
+//!   paper's Figures 2–4, and the persisted `TuningTable` the planner
+//!   consults.
 //! - [`perf`] — cycle timers, the paper's flop cost model
 //!   `C = M·N·(1+sK)`, operational intensity and roofline estimates.
-//! - [`model`] — ternary MLP / FFN built from quantized linear layers; the
-//!   config system and weight serialization.
+//! - [`model`] — ternary MLP / FFN built from planned linear layers; the
+//!   config system and weight serialization. Kernel names are optional
+//!   overrides, not requirements.
 //! - [`runtime`] — PJRT client wrapper that loads the JAX/Pallas AOT
 //!   artifacts (HLO text) produced by `python/compile/aot.py`.
 //! - [`coordinator`] — the L3 serving stack: dynamic batcher, backend
-//!   router, inference engine, HTTP server, metrics and load generator.
-//! - [`bench`] — the measurement harness and per-figure experiment drivers.
+//!   router, inference engine (serving batches through plans), HTTP server,
+//!   metrics and load generator.
+//! - [`bench`] — the measurement harness (timing the planned path) and
+//!   per-figure experiment drivers.
 //! - [`util`] — substrates built in-repo because the environment is offline:
-//!   PRNG, JSON, CLI parsing, thread pool, and a mini property-testing
-//!   framework.
+//!   PRNG, JSON, CLI parsing, thread pool (with scoped fork-join), and a
+//!   mini property-testing framework.
 //!
 //! ## Quickstart
 //!
+//! Plan once, run forever: the planner picks the kernel for the weight's
+//! (K, sparsity) class, and the plan owns epilogue, scratch and threading.
+//!
 //! ```
+//! use stgemm::kernels::KernelParams;
+//! use stgemm::plan::{Epilogue, PlanHints, Planner};
 //! use stgemm::tensor::Matrix;
 //! use stgemm::ternary::TernaryMatrix;
-//! use stgemm::formats::Tcsc;
-//! use stgemm::kernels::{self, Kernel};
 //!
 //! let (m, k, n) = (4, 64, 32);
 //! let w = TernaryMatrix::random(k, n, 0.25, 42);       // 25% nonzero
 //! let x = Matrix::random(m, k, 1);
 //! let bias = vec![0.5f32; n];
-//! let fmt = Tcsc::from_ternary(&w);
+//!
+//! let planner = Planner::new();                        // heuristics only
+//! let plan = planner
+//!     .plan(
+//!         &w,
+//!         KernelParams::default(),
+//!         Epilogue::with_bias(bias.clone()),
+//!         &PlanHints::default(),                       // no kernel name!
+//!     )
+//!     .unwrap();
 //! let mut y = Matrix::zeros(m, n);
-//! kernels::BaseTcscKernel.run(&x, &fmt, &bias, &mut y);
-//! let oracle = kernels::dense_oracle(&x, &w, &bias);
+//! plan.run(&x, &mut y);
+//!
+//! let oracle = stgemm::kernels::dense_oracle(&x, &w, &bias);
 //! assert!(y.allclose(&oracle, 1e-4));
 //! ```
+//!
+//! Benches and ablations pin kernels explicitly via
+//! [`plan::PlanHints::with_kernel`]; serving loads a measured table with
+//! `Planner::from_table_file` (`stgemm serve --tuning table.json`).
 
 pub mod util;
 pub mod tensor;
 pub mod ternary;
 pub mod formats;
 pub mod kernels;
+pub mod plan;
 pub mod autotune;
 pub mod perf;
 pub mod model;
@@ -74,5 +104,10 @@ pub const PAPER_SPARSITIES: [f32; 4] = [0.5, 0.25, 0.125, 0.0625];
 /// The paper's optimal block size (elements of K per block), Apple M1 L1-tuned.
 pub const PAPER_BLOCK_SIZE: usize = 4096;
 
-/// The paper's optimal interleave group size (indices per sign per group).
+/// The paper's optimal interleave group size (indices per sign per group)
+/// for the plain interleaved format.
 pub const PAPER_GROUP_SIZE: usize = 4;
+
+/// The paper's interleave group for the **blocked** interleaved formats
+/// (best scalar config: unroll factor F = 4 → F/2 = 2 indices per sign).
+pub const PAPER_BLOCKED_GROUP: usize = 2;

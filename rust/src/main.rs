@@ -12,7 +12,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use stgemm::autotune::{unroll_grid_search, CacheModel};
+use stgemm::autotune::{unroll_grid_search, CacheModel, TuningTable};
 use stgemm::bench::figures;
 use stgemm::bench::harness::BenchScale;
 use stgemm::bench::report::{write_csv, Table};
@@ -20,6 +20,7 @@ use stgemm::coordinator::server::{Server, ServerConfig};
 use stgemm::coordinator::{Backend, BatchPolicy, Engine, LoadGenerator, Router};
 use stgemm::model::{ModelConfig, TernaryMlp};
 use stgemm::perf::timer::CycleTimer;
+use stgemm::plan::{PlanHints, Planner};
 use stgemm::runtime::artifacts::default_artifacts_dir;
 use stgemm::runtime::{Manifest, XlaExecutor};
 use stgemm::tensor::Matrix;
@@ -53,10 +54,13 @@ fn print_usage() {
 USAGE: stgemm <subcommand> [options]
 
   serve      --model <cfg.json> --addr 127.0.0.1:9000 --backend native|xla
-             [--artifacts <dir>] [--max-batch 8] [--max-wait-us 2000]
+             [--tuning <table.json>] [--threads N] [--artifacts <dir>]
+             [--max-batch 8] [--max-wait-us 2000]
   bench      --figure fig2|fig6|fig8|fig9|fig10|fig11|headline|
                       ablation_compressed|ablation_inverted|all [--csv]
   autotune   [--m 32] [--k 4096] [--n 1024] [--sparsity 0.25]
+             [--save <table.json>]  (measure registry kernels, persist the
+                                     winner for the planner to consult)
   quantize   --dims 256,1024,256 --seed 42 --out model.stw
   selftest   [--artifacts <dir>] [--model ffn_tiny]
   loadgen    --addr <host:port> --model <name> --d-in <n>
@@ -65,7 +69,7 @@ USAGE: stgemm <subcommand> [options]
 }
 
 fn cmd_serve(args: &Args) -> i32 {
-    let cfg = match args.get("model") {
+    let mut cfg = match args.get("model") {
         Some(path) => match ModelConfig::from_file(path) {
             Ok(c) => c,
             Err(e) => {
@@ -78,6 +82,7 @@ fn cmd_serve(args: &Args) -> i32 {
             ModelConfig::default()
         }
     };
+    cfg.threads = args.usize("threads", cfg.threads).max(1);
     let backend: Backend = match args.get_or("backend", "native").parse() {
         Ok(b) => b,
         Err(e) => {
@@ -85,14 +90,28 @@ fn cmd_serve(args: &Args) -> i32 {
             return 2;
         }
     };
-    let mlp = match TernaryMlp::from_config(&cfg) {
-        Ok(m) => m,
+    // Kernel selection: measured tuning table when given, paper heuristics
+    // otherwise; the config's `kernel` key stays an explicit override.
+    let planner = match args.get("tuning") {
+        Some(path) => match Planner::from_table_file(path) {
+            Ok(p) => {
+                println!("[serve] tuning table: {path} ({} classes)", p.table().len());
+                p
+            }
+            Err(e) => {
+                eprintln!("error loading tuning table: {e}");
+                return 1;
+            }
+        },
+        None => Planner::new(),
+    };
+    let mut engine = match Engine::from_config(&cfg, &planner) {
+        Ok(e) => e,
         Err(e) => {
             eprintln!("error building model: {e}");
             return 1;
         }
     };
-    let mut engine = Engine::new(cfg.name.clone(), mlp);
     if backend == Backend::Xla || args.get("artifacts").is_some() {
         let dir = args
             .get("artifacts")
@@ -236,6 +255,34 @@ fn cmd_autotune(args: &Args) -> i32 {
         cache.predicted_mu(k),
         cache.recommended_block(4)
     );
+    // Registry-level tuning: measure every kernel for this shape class and
+    // persist the winner where `serve --tuning` / the Planner can find it.
+    if let Some(path) = args.get("save") {
+        // A missing file starts a fresh table; an existing-but-unreadable
+        // one is an error (silently clobbering measured entries is worse).
+        let mut table = if std::path::Path::new(path).exists() {
+            match TuningTable::load(path) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("error: existing tuning table {path} failed to load: {e}");
+                    return 1;
+                }
+            }
+        } else {
+            TuningTable::new()
+        };
+        let entry = table.tune(k, s, stgemm::kernels::kernel_names(), &timer);
+        if let Err(e) = table.save(path) {
+            eprintln!("error saving tuning table: {e}");
+            return 1;
+        }
+        println!(
+            "[autotune] class (K={k}, s={s}): winner {} at {:.3} flops/cycle → {path} ({} classes)",
+            entry.kernel,
+            entry.flops_per_cycle,
+            table.len()
+        );
+    }
     0
 }
 
@@ -298,22 +345,25 @@ fn cmd_selftest(args: &Args) -> i32 {
         eprintln!("no variants named {base}_b* in manifest");
         return 1;
     }
-    // Build the native model from the artifact's own weight dumps.
+    // Build the native model from the artifact's own weight dumps; each
+    // layer's kernel is planner-selected for its (K, sparsity) class.
+    let planner = Planner::new();
     let v0 = variants[0];
     let mut layers = Vec::new();
     for (i, l) in v0.layers.iter().enumerate() {
         let w = v0.load_weights(&manifest.dir, i).expect("weights");
         let b = v0.load_bias(&manifest.dir, i).expect("bias");
-        layers.push(
-            stgemm::model::TernaryLinear::new(
-                "interleaved_blocked_tcsc",
-                &w,
-                b,
-                1.0,
-                l.prelu_alpha,
-            )
-            .expect("layer"),
-        );
+        let layer = stgemm::model::TernaryLinear::planned(
+            &planner,
+            &w,
+            b,
+            1.0,
+            l.prelu_alpha,
+            &PlanHints::default(),
+        )
+        .expect("layer");
+        println!("  layer {i}: kernel {}", layer.kernel_name());
+        layers.push(layer);
     }
     let mlp = TernaryMlp::from_layers(base.to_string(), layers).expect("mlp");
     let xla = XlaExecutor::spawn(&manifest, base).expect("xla");

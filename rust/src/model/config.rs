@@ -8,10 +8,14 @@
 //!   "sparsity": 0.25,
 //!   "seed": 42,
 //!   "prelu_alpha": 0.25,
-//!   "kernel": "interleaved_blocked_tcsc",
-//!   "batch_buckets": [1, 8]
+//!   "batch_buckets": [1, 8],
+//!   "threads": 1
 //! }
 //! ```
+//!
+//! `kernel` is **optional**: when absent, each layer's kernel is picked by
+//! the [`crate::plan::Planner`] (autotune table + paper heuristics). Set it
+//! only to pin an explicit registry kernel (benches, ablations).
 
 use crate::util::json::Json;
 
@@ -27,10 +31,12 @@ pub struct ModelConfig {
     pub seed: u64,
     /// PReLU slope between layers (never after the last layer).
     pub prelu_alpha: f32,
-    /// Registry kernel name for the native path.
-    pub kernel: String,
+    /// Explicit registry kernel override; `None` = planner-selected.
+    pub kernel: Option<String>,
     /// Batch sizes the server pads to (ascending).
     pub batch_buckets: Vec<usize>,
+    /// Worker threads for row-partitioned layer execution (1 = sequential).
+    pub threads: usize,
 }
 
 impl Default for ModelConfig {
@@ -41,8 +47,9 @@ impl Default for ModelConfig {
             sparsity: 0.25,
             seed: 42,
             prelu_alpha: 0.25,
-            kernel: "interleaved_blocked_tcsc".to_string(),
+            kernel: None,
             batch_buckets: vec![1, 8],
+            threads: 1,
         }
     }
 }
@@ -96,11 +103,19 @@ impl ModelConfig {
             .get("kernel")
             .map(|s| s.as_str().ok_or("kernel must be a string"))
             .transpose()?
-            .map(|s| s.to_string())
-            .unwrap_or(d.kernel);
-        if !crate::kernels::kernel_names().contains(&kernel.as_str()) {
-            return Err(format!("unknown kernel '{kernel}'"));
+            .map(|s| s.to_string());
+        if let Some(k) = &kernel {
+            if !crate::kernels::kernel_names().contains(&k.as_str()) {
+                return Err(format!("unknown kernel '{k}'"));
+            }
         }
+        let threads = match v.get("threads") {
+            Some(t) => t
+                .as_usize()
+                .filter(|&t| t > 0)
+                .ok_or("threads must be a positive integer")?,
+            None => d.threads,
+        };
         Ok(ModelConfig {
             name: v
                 .get("name")
@@ -123,6 +138,7 @@ impl ModelConfig {
                 .unwrap_or(d.prelu_alpha),
             kernel,
             batch_buckets,
+            threads,
         })
     }
 
@@ -133,9 +149,10 @@ impl ModelConfig {
         Self::from_json(&text)
     }
 
-    /// Serialize back to JSON (pretty).
+    /// Serialize back to JSON (pretty). The kernel key is written only
+    /// when an explicit override is set.
     pub fn to_json(&self) -> String {
-        Json::obj(vec![
+        let mut fields = vec![
             ("name", Json::str(self.name.clone())),
             (
                 "dims",
@@ -144,13 +161,16 @@ impl ModelConfig {
             ("sparsity", Json::num(self.sparsity as f64)),
             ("seed", Json::num(self.seed as f64)),
             ("prelu_alpha", Json::num(self.prelu_alpha as f64)),
-            ("kernel", Json::str(self.kernel.clone())),
-            (
-                "batch_buckets",
-                Json::arr(self.batch_buckets.iter().map(|&b| Json::num(b as f64))),
-            ),
-        ])
-        .encode_pretty()
+        ];
+        if let Some(k) = &self.kernel {
+            fields.push(("kernel", Json::str(k.clone())));
+        }
+        fields.push((
+            "batch_buckets",
+            Json::arr(self.batch_buckets.iter().map(|&b| Json::num(b as f64))),
+        ));
+        fields.push(("threads", Json::num(self.threads as f64)));
+        Json::obj(fields).encode_pretty()
     }
 
     pub fn d_in(&self) -> usize {
@@ -177,9 +197,22 @@ mod tests {
     fn partial_json_uses_defaults() {
         let c = ModelConfig::from_json(r#"{"dims": [8, 16, 4]}"#).unwrap();
         assert_eq!(c.dims, vec![8, 16, 4]);
-        assert_eq!(c.kernel, "interleaved_blocked_tcsc");
+        assert_eq!(c.kernel, None, "no kernel key = planner-selected");
+        assert_eq!(c.threads, 1);
         assert_eq!(c.d_in(), 8);
         assert_eq!(c.d_out(), 4);
+    }
+
+    #[test]
+    fn explicit_kernel_and_threads_parse() {
+        let c = ModelConfig::from_json(
+            r#"{"dims": [8, 4], "kernel": "base_tcsc", "threads": 4}"#,
+        )
+        .unwrap();
+        assert_eq!(c.kernel.as_deref(), Some("base_tcsc"));
+        assert_eq!(c.threads, 4);
+        let back = ModelConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
     }
 
     #[test]
@@ -190,6 +223,7 @@ mod tests {
         assert!(ModelConfig::from_json(r#"{"kernel": "nope"}"#).is_err());
         assert!(ModelConfig::from_json(r#"{"batch_buckets": []}"#).is_err());
         assert!(ModelConfig::from_json(r#"{"batch_buckets": [0]}"#).is_err());
+        assert!(ModelConfig::from_json(r#"{"threads": 0}"#).is_err());
     }
 
     #[test]

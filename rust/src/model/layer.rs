@@ -1,27 +1,42 @@
-//! A single ternary linear layer: prepared kernel + bias + optional
-//! dequantization scale + optional PReLU.
+//! A single ternary linear layer: a [`GemmPlan`] owning the prepared
+//! kernel, bias, optional dequantization scale and optional PReLU.
 
-use crate::kernels::{prelu_inplace, prepare_kernel, KernelParams, PreparedGemm};
+use crate::plan::{Epilogue, GemmPlan, PlanHints, Planner};
 use crate::tensor::Matrix;
 use crate::ternary::TernaryMatrix;
 
-/// One `Y = act(scale · (X·W + b))` layer with ternary W.
+/// One `Y = act(scale · (X·W + b))` layer with ternary W, executed through
+/// the planning layer.
 pub struct TernaryLinear {
-    gemm: Box<dyn PreparedGemm>,
-    bias: Vec<f32>,
-    /// Per-tensor dequantization scale (absmean quantizer's gamma); folded
-    /// in after the GEMM, before activation. 1.0 = no scaling.
-    pub scale: f32,
-    /// PReLU slope; `None` = linear output.
-    pub prelu_alpha: Option<f32>,
+    plan: GemmPlan,
 }
 
 impl TernaryLinear {
-    /// Build from dense ternary weights with the named registry kernel.
-    ///
-    /// When `prelu_alpha` is set and the kernel supports fusion (the SIMD
-    /// family), activation is fused into the GEMM; otherwise a separate
-    /// PReLU pass runs after.
+    /// Build with the kernel chosen by `planner` (tuning table + paper
+    /// heuristics) and the execution policy in `hints`. This is the
+    /// serving-path constructor: no kernel name required.
+    pub fn planned(
+        planner: &Planner,
+        w: &TernaryMatrix,
+        bias: Vec<f32>,
+        scale: f32,
+        prelu_alpha: Option<f32>,
+        hints: &PlanHints,
+    ) -> Result<TernaryLinear, String> {
+        let plan = planner.plan(
+            w,
+            Default::default(),
+            Epilogue::new(bias, scale, prelu_alpha),
+            hints,
+        )?;
+        Ok(TernaryLinear { plan })
+    }
+
+    /// Build from dense ternary weights with an **explicit** registry
+    /// kernel — the override path benches and ablations use. When
+    /// `prelu_alpha` is set, the kernel supports fusion (the SIMD family)
+    /// and no scale intervenes, activation fuses into the GEMM; otherwise
+    /// the plan's epilogue applies it after.
     pub fn new(
         kernel: &str,
         w: &TernaryMatrix,
@@ -29,65 +44,64 @@ impl TernaryLinear {
         scale: f32,
         prelu_alpha: Option<f32>,
     ) -> Result<TernaryLinear, String> {
-        assert_eq!(bias.len(), w.n(), "bias length must equal N");
-        // Fusion is only valid when no scale is applied after the GEMM
-        // (PReLU and positive scaling commute, but keep it simple & exact).
-        let fuse = scale == 1.0;
-        let params = KernelParams {
-            prelu_alpha: if fuse { prelu_alpha } else { None },
-            ..Default::default()
-        };
-        let gemm = prepare_kernel(kernel, w, params)?;
-        Ok(TernaryLinear {
-            gemm,
+        Self::planned(
+            &Planner::new(),
+            w,
             bias,
             scale,
             prelu_alpha,
-        })
+            &PlanHints::with_kernel(kernel),
+        )
+    }
+
+    /// Wrap an already-built plan as a layer.
+    pub fn from_plan(plan: GemmPlan) -> TernaryLinear {
+        TernaryLinear { plan }
     }
 
     pub fn k(&self) -> usize {
-        self.gemm.k()
+        self.plan.k()
     }
 
     pub fn n(&self) -> usize {
-        self.gemm.n()
+        self.plan.n()
     }
 
     pub fn nnz(&self) -> usize {
-        self.gemm.nnz()
+        self.plan.nnz()
     }
 
     pub fn kernel_name(&self) -> &str {
-        self.gemm.name()
+        self.plan.kernel_name()
     }
 
     pub fn format_bytes(&self) -> usize {
-        self.gemm.format_bytes()
+        self.plan.format_bytes()
+    }
+
+    /// Per-tensor dequantization scale (1.0 = none).
+    pub fn scale(&self) -> f32 {
+        self.plan.epilogue().scale
+    }
+
+    /// PReLU slope (`None` = linear output).
+    pub fn prelu_alpha(&self) -> Option<f32> {
+        self.plan.epilogue().prelu_alpha
+    }
+
+    /// The underlying plan (introspection and direct use).
+    pub fn plan(&self) -> &GemmPlan {
+        &self.plan
     }
 
     /// Forward: `y` must be (x.rows × N).
     pub fn forward(&self, x: &Matrix, y: &mut Matrix) {
-        self.gemm.run(x, &self.bias, y);
-        if self.scale != 1.0 {
-            for v in y.as_mut_slice() {
-                *v *= self.scale;
-            }
-        }
-        if let Some(alpha) = self.prelu_alpha {
-            if !self.gemm.fused_prelu() {
-                prelu_inplace(y, alpha);
-            }
-        }
+        self.plan.run(x, y);
     }
 
     /// Paper cost model flops for a batch of `m` rows.
     pub fn flops(&self, m: usize) -> f64 {
-        let mut f = m as f64 * self.nnz() as f64 + (m * self.n()) as f64;
-        if self.prelu_alpha.is_some() {
-            f += (m * self.n()) as f64;
-        }
-        f
+        self.plan.flops(m)
     }
 }
 
@@ -126,11 +140,39 @@ mod tests {
             TernaryLinear::new("simd_vertical", &w, bias.clone(), 1.0, Some(0.25)).unwrap();
         let unfused =
             TernaryLinear::new("base_tcsc", &w, bias.clone(), 1.0, Some(0.25)).unwrap();
+        assert!(fused.plan().fused_prelu());
+        assert!(!unfused.plan().fused_prelu());
         let mut yf = Matrix::zeros(4, 16);
         let mut yu = Matrix::zeros(4, 16);
         fused.forward(&x, &mut yf);
         unfused.forward(&x, &mut yu);
         assert!(yf.allclose(&yu, 1e-4));
+    }
+
+    #[test]
+    fn planned_layer_picks_a_kernel_and_matches_explicit() {
+        let planner = Planner::new();
+        let w = TernaryMatrix::random(64, 16, 0.25, 11);
+        let bias = vec![0.05f32; 16];
+        let x = Matrix::random(3, 64, 12);
+        let auto = TernaryLinear::planned(
+            &planner,
+            &w,
+            bias.clone(),
+            1.0,
+            None,
+            &PlanHints::default(),
+        )
+        .unwrap();
+        // 25% nonzeros, no fused PReLU wanted → the paper's best scalar.
+        assert_eq!(auto.kernel_name(), "interleaved_blocked_tcsc");
+        let explicit =
+            TernaryLinear::new("interleaved_blocked_tcsc", &w, bias, 1.0, None).unwrap();
+        let mut ya = Matrix::zeros(3, 16);
+        let mut ye = Matrix::zeros(3, 16);
+        auto.forward(&x, &mut ya);
+        explicit.forward(&x, &mut ye);
+        assert_eq!(ya, ye);
     }
 
     #[test]
@@ -145,5 +187,11 @@ mod tests {
     fn unknown_kernel_errors() {
         let w = TernaryMatrix::random(8, 4, 0.5, 1);
         assert!(TernaryLinear::new("bogus", &w, vec![0.0; 4], 1.0, None).is_err());
+    }
+
+    #[test]
+    fn bias_mismatch_errors() {
+        let w = TernaryMatrix::random(8, 4, 0.5, 1);
+        assert!(TernaryLinear::new("base_tcsc", &w, vec![0.0; 3], 1.0, None).is_err());
     }
 }

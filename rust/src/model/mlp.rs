@@ -2,6 +2,7 @@
 
 use crate::model::config::ModelConfig;
 use crate::model::layer::TernaryLinear;
+use crate::plan::{PlanHints, Planner};
 use crate::tensor::Matrix;
 use crate::ternary::TernaryMatrix;
 use crate::util::rng::Rng;
@@ -13,10 +14,27 @@ pub struct TernaryMlp {
 }
 
 impl TernaryMlp {
-    /// Build from a config: weights generated deterministically from the
-    /// seed (layer i uses `seed + i`), bias from `seed + i + 7777`.
+    /// Build from a config with a throwaway [`Planner`] (no tuning table).
+    /// Serving code should prefer [`TernaryMlp::planned`] with a shared
+    /// planner so layers benefit from measured tuning entries.
     pub fn from_config(cfg: &ModelConfig) -> Result<TernaryMlp, String> {
+        Self::planned(cfg, &Planner::new())
+    }
+
+    /// Build from a config through `planner`: weights generated
+    /// deterministically from the seed (layer i uses `seed + i`), bias from
+    /// `seed + i + 7777`. Each layer's kernel is the config's explicit
+    /// override when set, otherwise the planner's pick for that layer's
+    /// (K, sparsity) class; threading and scratch pre-sizing come from the
+    /// config (`threads`, largest batch bucket).
+    pub fn planned(cfg: &ModelConfig, planner: &Planner) -> Result<TernaryMlp, String> {
         let nlayers = cfg.dims.len() - 1;
+        let hints = PlanHints {
+            kernel: cfg.kernel.clone(),
+            threads: cfg.threads,
+            expected_batch: cfg.batch_buckets.last().copied().unwrap_or(0),
+            ..Default::default()
+        };
         let mut layers = Vec::with_capacity(nlayers);
         for i in 0..nlayers {
             let (k, n) = (cfg.dims[i], cfg.dims[i + 1]);
@@ -28,7 +46,7 @@ impl TernaryMlp {
             } else {
                 None
             };
-            layers.push(TernaryLinear::new(&cfg.kernel, &w, bias, 1.0, alpha)?);
+            layers.push(TernaryLinear::planned(planner, &w, bias, 1.0, alpha, &hints)?);
         }
         Ok(TernaryMlp {
             name: cfg.name.clone(),
@@ -145,10 +163,44 @@ mod tests {
         let x = Matrix::random(5, 32, 2);
         let reference = TernaryMlp::from_config(&c).unwrap().forward(&x);
         for kernel in ["base_tcsc", "simd_vertical", "unrolled_tcsc_12", "dense_gemm"] {
-            c.kernel = kernel.to_string();
+            c.kernel = Some(kernel.to_string());
             let got = TernaryMlp::from_config(&c).unwrap().forward(&x);
             assert!(got.allclose(&reference, 1e-3), "kernel {kernel}");
         }
+        // Planner-selected (no explicit kernel) agrees too.
+        c.kernel = None;
+        let got = TernaryMlp::from_config(&c).unwrap().forward(&x);
+        assert!(got.allclose(&reference, 1e-3), "auto kernel");
+    }
+
+    #[test]
+    fn auto_config_uses_tuning_table() {
+        use crate::autotune::{ShapeClass, TuneEntry};
+        use crate::plan::Planner;
+        let mut c = cfg();
+        c.kernel = None;
+        // Tune both layer classes (K=32 and K=64 at 25%) to a fixed pick.
+        let mut table = crate::autotune::TuningTable::new();
+        for k in [32usize, 64] {
+            table.insert(
+                ShapeClass::of(k, 0.25),
+                TuneEntry {
+                    kernel: "unrolled_tcsc_12".into(),
+                    flops_per_cycle: 1.0,
+                },
+            );
+        }
+        let planner = Planner::with_table(table);
+        let mlp = TernaryMlp::planned(&c, &planner).unwrap();
+        for layer in mlp.layers() {
+            assert_eq!(layer.kernel_name(), "unrolled_tcsc_12");
+        }
+        // And threading from the config still matches sequential output.
+        c.threads = 4;
+        let x = Matrix::random(9, 32, 5);
+        let seq = TernaryMlp::from_config(&cfg()).unwrap().forward(&x);
+        let par = TernaryMlp::planned(&c, &Planner::new()).unwrap().forward(&x);
+        assert_eq!(seq, par, "threaded forward must be bitwise sequential");
     }
 
     #[test]

@@ -1,0 +1,166 @@
+//! [`GemmPlan`]: the planned-execution object — a prepared kernel bound to
+//! its epilogue, partitioning policy, thread pool and reusable scratch.
+
+use crate::kernels::{prelu_inplace, GemmScratch, PreparedGemm};
+use crate::plan::partition::{execute_partitioned, RowPartition};
+use crate::tensor::Matrix;
+use crate::util::threadpool::ThreadPool;
+use std::sync::{Arc, Mutex};
+
+/// Everything applied after the raw GEMM: `y = act(scale · (X·W + b))`.
+///
+/// The bias is always folded into the kernel call (every kernel adds it in
+/// its inner loop). PReLU is fused into the kernel when the kernel family
+/// supports it **and** no dequantization scale sits between the GEMM and
+/// the activation (scale and PReLU don't commute bit-exactly); otherwise it
+/// runs as a separate pass here.
+#[derive(Debug, Clone)]
+pub struct Epilogue {
+    /// Per-output-column bias, length N.
+    pub bias: Vec<f32>,
+    /// Per-tensor dequantization scale (absmean quantizer's gamma);
+    /// 1.0 = no scaling.
+    pub scale: f32,
+    /// PReLU slope; `None` = linear output.
+    pub prelu_alpha: Option<f32>,
+}
+
+impl Epilogue {
+    pub fn new(bias: Vec<f32>, scale: f32, prelu_alpha: Option<f32>) -> Epilogue {
+        Epilogue {
+            bias,
+            scale,
+            prelu_alpha,
+        }
+    }
+
+    /// Bias-only epilogue (no scale, no activation).
+    pub fn with_bias(bias: Vec<f32>) -> Epilogue {
+        Epilogue::new(bias, 1.0, None)
+    }
+
+    /// The PReLU slope if it may be folded into a fusing kernel (exact only
+    /// when no scale is applied between GEMM and activation).
+    pub fn fusible_prelu(&self) -> Option<f32> {
+        if self.scale == 1.0 {
+            self.prelu_alpha
+        } else {
+            None
+        }
+    }
+
+    /// Post-GEMM pass over `y`: scale, then PReLU unless the kernel
+    /// already fused it.
+    pub fn apply(&self, y: &mut Matrix, prelu_fused: bool) {
+        if self.scale != 1.0 {
+            for v in y.as_mut_slice() {
+                *v *= self.scale;
+            }
+        }
+        if let Some(alpha) = self.prelu_alpha {
+            if !prelu_fused {
+                prelu_inplace(y, alpha);
+            }
+        }
+    }
+}
+
+/// A fully planned GEMM: run it, repeatedly, and nothing else needs
+/// deciding — kernel, epilogue, threading and scratch were all fixed at
+/// plan time by [`crate::plan::Planner::plan`].
+///
+/// `run` is `&self` (the serving engine shares plans across threads); the
+/// scratch lives behind a mutex, so concurrent callers serialize on the
+/// same plan while different plans (e.g. different layers) run freely.
+pub struct GemmPlan {
+    pub(crate) gemm: Arc<dyn PreparedGemm>,
+    pub(crate) epilogue: Epilogue,
+    pub(crate) partition: RowPartition,
+    pub(crate) pool: Option<Arc<ThreadPool>>,
+    pub(crate) scratch: Mutex<Vec<GemmScratch>>,
+}
+
+impl GemmPlan {
+    /// Compute `y = act(scale · (x·W + b))` for an M-row batch. `y` must be
+    /// M×N and is fully overwritten. Steady-state calls at a fixed M
+    /// perform no allocation beyond the per-run job list.
+    pub fn run(&self, x: &Matrix, y: &mut Matrix) {
+        {
+            let mut scratches = self.scratch.lock().unwrap_or_else(|e| e.into_inner());
+            execute_partitioned(
+                self.gemm.as_ref(),
+                self.partition,
+                self.pool.as_deref(),
+                x,
+                &self.epilogue.bias,
+                y,
+                &mut scratches,
+            );
+        }
+        self.epilogue.apply(y, self.gemm.fused_prelu());
+    }
+
+    /// Allocating convenience: `run` into a fresh M×N matrix.
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        let mut y = Matrix::zeros(x.rows(), self.n());
+        self.run(x, &mut y);
+        y
+    }
+
+    /// Registry name of the planned kernel.
+    pub fn kernel_name(&self) -> &str {
+        self.gemm.name()
+    }
+
+    pub fn k(&self) -> usize {
+        self.gemm.k()
+    }
+
+    pub fn n(&self) -> usize {
+        self.gemm.n()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.gemm.nnz()
+    }
+
+    /// Exact format byte size (operational-intensity accounting).
+    pub fn format_bytes(&self) -> usize {
+        self.gemm.format_bytes()
+    }
+
+    /// Whether the kernel applies PReLU inside the GEMM.
+    pub fn fused_prelu(&self) -> bool {
+        self.gemm.fused_prelu()
+    }
+
+    pub fn epilogue(&self) -> &Epilogue {
+        &self.epilogue
+    }
+
+    /// Maximum worker chunks this plan fans out to (1 = sequential).
+    pub fn threads(&self) -> usize {
+        self.partition.max_chunks
+    }
+
+    /// Capacity snapshot of every scratch slot, in f32 elements.
+    /// Allocation-stability tests assert this is unchanged across runs.
+    pub fn scratch_capacities(&self) -> Vec<usize> {
+        self.scratch
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .map(|s| s.padded_capacity())
+            .collect()
+    }
+
+    /// Paper cost-model flops for an M-row batch: `M·nnz` add/sub flops,
+    /// `M·N` bias adds, plus an `M·N` activation pass when PReLU is on.
+    pub fn flops(&self, m: usize) -> f64 {
+        let mut f = m as f64 * self.nnz() as f64 + (m * self.n()) as f64;
+        if self.epilogue.prelu_alpha.is_some() {
+            f += (m * self.n()) as f64;
+        }
+        f
+    }
+}

@@ -1,0 +1,36 @@
+//! The GEMM planning layer: one place that owns kernel selection, format
+//! preparation, the epilogue (scale + bias + PReLU), scratch reuse and
+//! multi-core row partitioning.
+//!
+//! The paper's speedups come from picking the right format/kernel/unroll
+//! for a given (K, sparsity) class. Before this module that choice was
+//! scattered: string-keyed [`crate::kernels::prepare_kernel`] calls, an
+//! autotune [`crate::autotune::TuningTable`] nothing consulted at
+//! model-build time, and a bolt-on `ParallelGemm` wrapper the serving
+//! engine never used. [`Planner::plan`] collapses all of it into a single
+//! planned-execution object:
+//!
+//! ```text
+//! Planner::plan(w, params, epilogue, hints)
+//!     │  kernel choice: explicit hint ▸ TuningTable ▸ paper heuristics
+//!     ▼
+//! GemmPlan { prepared kernel + epilogue + partition + scratch }
+//!     │  GemmPlan::run(x, &mut y)
+//!     ▼
+//! row-partitioned execution: workers write disjoint &mut Y row blocks
+//! in place through the shared thread pool; the SIMD kernels' padded-X
+//! copy lives in reused scratch (steady state allocates nothing)
+//! ```
+//!
+//! Consumers: [`crate::model::TernaryLinear`] / [`crate::model::TernaryMlp`]
+//! build layers through a `Planner` (kernel names are optional overrides),
+//! [`crate::coordinator::engine::Engine`] serves batches through plans, and
+//! the bench harness measures kernels through the same path it serves on.
+
+pub mod gemm_plan;
+pub mod partition;
+pub mod planner;
+
+pub use gemm_plan::{Epilogue, GemmPlan};
+pub use partition::{execute_partitioned, RowPartition, ROW_TILE};
+pub use planner::{heuristic_kernel, PlanHints, Planner};

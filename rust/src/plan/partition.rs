@@ -1,0 +1,227 @@
+//! In-place parallel row partitioning.
+//!
+//! `Y = X·W + b` is embarrassingly parallel over rows of X, so a batch is
+//! split into contiguous row chunks and the *same* prepared kernel runs on
+//! each chunk concurrently. Unlike the old `ParallelGemm` wrapper (which
+//! copied each X chunk into a fresh matrix, ran into a fresh per-chunk Y,
+//! and stitched the results back), the partitioner here is zero-copy and
+//! zero-allocation in steady state:
+//!
+//! - each worker reads its X rows through a borrowed [`Matrix::with_view`]
+//!   over the contiguous row-major storage (no chunk materialization);
+//! - each worker writes through [`Matrix::with_view_mut`] directly into its
+//!   disjoint row block of the caller's Y (`split_at_mut`, no stitch copy);
+//! - per-worker kernel scratch (the SIMD padded-X buffer) is owned by the
+//!   caller and reused across runs;
+//! - jobs execute on a shared [`ThreadPool`] via scoped fork-join
+//!   ([`ThreadPool::run_scoped`]) instead of spawning OS threads per call.
+//!
+//! Chunk boundaries are aligned to [`ROW_TILE`] so that a row's membership
+//! in a kernel's M-unroll tile is identical in sequential and chunked
+//! runs — parallel results are **bitwise identical** to sequential ones.
+
+use crate::kernels::{GemmScratch, PreparedGemm};
+use crate::tensor::Matrix;
+use crate::util::threadpool::ThreadPool;
+
+/// The largest M-direction unroll used by any registry kernel (`MU = 4`).
+/// Chunk boundaries are multiples of this so tile membership — and hence
+/// floating-point accumulation order — matches the sequential run exactly.
+pub const ROW_TILE: usize = 4;
+
+/// Row-partitioning policy: how a batch of M rows splits across workers.
+#[derive(Debug, Clone, Copy)]
+pub struct RowPartition {
+    /// Maximum parallel chunks (worker threads used per run).
+    pub max_chunks: usize,
+    /// Minimum rows per chunk; batches smaller than `2·min_rows` run
+    /// sequentially (fan-out isn't worth it).
+    pub min_rows_per_chunk: usize,
+}
+
+impl Default for RowPartition {
+    fn default() -> Self {
+        RowPartition {
+            max_chunks: 1,
+            min_rows_per_chunk: 2,
+        }
+    }
+}
+
+impl RowPartition {
+    pub fn new(max_chunks: usize, min_rows_per_chunk: usize) -> RowPartition {
+        RowPartition {
+            max_chunks: max_chunks.max(1),
+            min_rows_per_chunk: min_rows_per_chunk.max(1),
+        }
+    }
+
+    /// Target number of chunks for an M-row batch (before tile alignment).
+    pub fn chunks_for(&self, m: usize) -> usize {
+        self.max_chunks.min(m / self.min_rows_per_chunk).max(1)
+    }
+
+    /// Contiguous row ranges `[lo, hi)` covering `0..m`. Every boundary is
+    /// a multiple of [`ROW_TILE`] (except the final `m`), which may yield
+    /// fewer chunks than [`RowPartition::chunks_for`] for small batches.
+    pub fn ranges(&self, m: usize) -> Vec<(usize, usize)> {
+        if m == 0 {
+            return Vec::new();
+        }
+        let chunks = self.chunks_for(m);
+        let rows_per = m.div_ceil(chunks).div_ceil(ROW_TILE).max(1) * ROW_TILE;
+        let mut out = Vec::with_capacity(chunks);
+        let mut lo = 0;
+        while lo < m {
+            let hi = (lo + rows_per).min(m);
+            out.push((lo, hi));
+            lo = hi;
+        }
+        out
+    }
+}
+
+/// Execute `gemm` over `x` into `y`, row-partitioned per `part`.
+///
+/// Sequential when the batch is too small, `pool` is `None`, or only one
+/// chunk results; otherwise fans out over `pool`, each worker writing its
+/// disjoint `&mut Y` row block in place. `scratches` must hold at least
+/// one slot, and at least as many as the partition can produce chunks when
+/// a pool is supplied; slot `i` is reused by chunk `i` across calls.
+pub fn execute_partitioned(
+    gemm: &dyn PreparedGemm,
+    part: RowPartition,
+    pool: Option<&ThreadPool>,
+    x: &Matrix,
+    bias: &[f32],
+    y: &mut Matrix,
+    scratches: &mut [GemmScratch],
+) {
+    assert!(!scratches.is_empty(), "need at least one scratch slot");
+    assert_eq!(x.rows(), y.rows(), "X/Y row mismatch");
+    assert_eq!(x.cols(), gemm.k(), "X cols must equal K");
+    assert_eq!(y.cols(), gemm.n(), "Y cols must equal N");
+    let m = x.rows();
+    let ranges = part.ranges(m);
+    if ranges.len() <= 1 || pool.is_none() {
+        gemm.run_with_scratch(x, bias, y, &mut scratches[0]);
+        return;
+    }
+    let pool = pool.expect("checked above");
+    assert!(
+        scratches.len() >= ranges.len(),
+        "need one scratch slot per chunk ({} < {})",
+        scratches.len(),
+        ranges.len()
+    );
+    let k = x.cols();
+    let n = y.cols();
+    let x_data = x.as_slice();
+    let mut y_rest = y.as_mut_slice();
+    let mut s_rest = scratches;
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(ranges.len());
+    for &(lo, hi) in &ranges {
+        let rows = hi - lo;
+        let (y_chunk, y_next) = std::mem::take(&mut y_rest).split_at_mut(rows * n);
+        y_rest = y_next;
+        let (scratch, s_next) = std::mem::take(&mut s_rest)
+            .split_first_mut()
+            .expect("scratch slot per chunk");
+        s_rest = s_next;
+        let x_chunk = &x_data[lo * k..hi * k];
+        jobs.push(Box::new(move || {
+            Matrix::with_view(x_chunk, rows, k, |xv| {
+                Matrix::with_view_mut(y_chunk, rows, n, |yv| {
+                    gemm.run_with_scratch(xv, bias, yv, scratch);
+                });
+            });
+        }));
+    }
+    let panicked = pool.run_scoped(jobs);
+    assert_eq!(panicked, 0, "{panicked} partitioned GEMM worker(s) panicked");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{dense_oracle, prepare_kernel, KernelParams};
+    use crate::ternary::TernaryMatrix;
+
+    #[test]
+    fn ranges_are_tile_aligned_and_cover() {
+        let p = RowPartition::new(4, 2);
+        for m in [0usize, 1, 2, 3, 4, 7, 8, 13, 64, 65] {
+            let r = p.ranges(m);
+            if m == 0 {
+                assert!(r.is_empty());
+                continue;
+            }
+            assert_eq!(r.first().unwrap().0, 0);
+            assert_eq!(r.last().unwrap().1, m);
+            for w in r.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+            for &(lo, hi) in &r {
+                assert!(lo % ROW_TILE == 0, "m={m} lo={lo}");
+                assert!(hi == m || hi % ROW_TILE == 0, "m={m} hi={hi}");
+            }
+            assert!(r.len() <= p.chunks_for(m));
+        }
+    }
+
+    #[test]
+    fn tiny_batches_are_one_chunk() {
+        let p = RowPartition::new(8, 2);
+        assert_eq!(p.ranges(1).len(), 1);
+        assert_eq!(p.ranges(3).len(), 1);
+        assert_eq!(p.chunks_for(1), 1);
+    }
+
+    #[test]
+    fn partitioned_execution_is_bitwise_sequential() {
+        let w = TernaryMatrix::random(96, 32, 0.25, 3);
+        let x = Matrix::random(13, 96, 4);
+        let bias: Vec<f32> = (0..32).map(|i| 0.1 * i as f32).collect();
+        let oracle = dense_oracle(&x, &w, &bias);
+        let pool = ThreadPool::new(4);
+        for name in [
+            "interleaved_blocked_tcsc",
+            "simd_vertical",
+            "simd_blocked_interleaved",
+            "unrolled_tcsc_k4_m4",
+            "dense_gemm",
+        ] {
+            let gemm = prepare_kernel(name, &w, KernelParams::default()).unwrap();
+            let mut y_seq = Matrix::zeros(13, 32);
+            let mut seq_scratch = [GemmScratch::new()];
+            execute_partitioned(
+                gemm.as_ref(),
+                RowPartition::new(1, 2),
+                None,
+                &x,
+                &bias,
+                &mut y_seq,
+                &mut seq_scratch,
+            );
+            assert!(y_seq.allclose(&oracle, 1e-3), "{name} sequential");
+            for threads in [2usize, 4, 8] {
+                let mut scratches: Vec<GemmScratch> =
+                    (0..threads).map(|_| GemmScratch::new()).collect();
+                let mut y_par = Matrix::zeros(13, 32);
+                execute_partitioned(
+                    gemm.as_ref(),
+                    RowPartition::new(threads, 2),
+                    Some(&pool),
+                    &x,
+                    &bias,
+                    &mut y_par,
+                    &mut scratches,
+                );
+                assert_eq!(
+                    y_seq, y_par,
+                    "{name} threads={threads}: parallel must be bitwise sequential"
+                );
+            }
+        }
+    }
+}

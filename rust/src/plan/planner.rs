@@ -1,0 +1,330 @@
+//! [`Planner`]: turns dense ternary weights + execution hints into a
+//! [`GemmPlan`], consulting the autotune [`TuningTable`] and falling back
+//! to the paper's heuristics when a shape class was never tuned.
+
+use crate::autotune::TuningTable;
+use crate::kernels::{prepare_kernel, GemmScratch, KernelParams, PreparedGemm};
+use crate::plan::gemm_plan::{Epilogue, GemmPlan};
+use crate::plan::partition::RowPartition;
+use crate::ternary::TernaryMatrix;
+use crate::util::threadpool::ThreadPool;
+use std::sync::{Arc, Mutex};
+
+/// Execution hints for [`Planner::plan`] — everything that is about *how*
+/// to run rather than *what* to compute.
+#[derive(Debug, Clone)]
+pub struct PlanHints {
+    /// Explicit registry kernel override (benches and ablations keep full
+    /// control); `None` = let the planner choose.
+    pub kernel: Option<String>,
+    /// Worker threads for row-partitioned execution (1 = sequential).
+    pub threads: usize,
+    /// Minimum rows per parallel chunk.
+    pub min_rows_per_chunk: usize,
+    /// Expected steady-state batch size; when > 0 the plan pre-sizes the
+    /// padded-X scratch so even the first serving call allocates nothing.
+    pub expected_batch: usize,
+}
+
+impl Default for PlanHints {
+    fn default() -> Self {
+        PlanHints {
+            kernel: None,
+            threads: 1,
+            min_rows_per_chunk: 2,
+            expected_batch: 0,
+        }
+    }
+}
+
+impl PlanHints {
+    /// Hints that pin a specific registry kernel (the bench-harness form).
+    pub fn with_kernel(name: &str) -> PlanHints {
+        PlanHints {
+            kernel: Some(name.to_string()),
+            ..Default::default()
+        }
+    }
+}
+
+/// Paper-derived kernel choice for an untuned (K, sparsity) class.
+///
+/// - At the sparsest paper level (≈6.25% nonzeros) the per-column index
+///   streams are short and the interleave/blocking machinery has nothing
+///   to amortize; the plain K/M-unrolled kernel wins (Fig 9's low-s end).
+/// - When a fused PReLU is wanted at high density, the symmetric SIMD
+///   kernel's fused epilogue pays for its padding overhead (Fig 11).
+/// - Everywhere else the paper's best scalar kernel — blocked (`min(K,
+///   4096)`) + interleaved — is the winner (Figs 6–9).
+pub fn heuristic_kernel(_k: usize, sparsity: f32, wants_fused_prelu: bool) -> &'static str {
+    if sparsity <= 0.07 {
+        "unrolled_tcsc_k4_m4"
+    } else if wants_fused_prelu && sparsity >= 0.45 {
+        "simd_vertical"
+    } else {
+        "interleaved_blocked_tcsc"
+    }
+}
+
+/// Kernel selection + plan construction. Cheap to create; share one per
+/// model (or per process) so every layer's plan draws from the same tuning
+/// table and thread pool.
+pub struct Planner {
+    table: TuningTable,
+    /// Shared worker pool, created lazily on the first parallel plan and
+    /// sized to the host's parallelism. Plans cap their own fan-out via
+    /// `PlanHints::threads`.
+    pool: Mutex<Option<Arc<ThreadPool>>>,
+}
+
+impl Default for Planner {
+    fn default() -> Self {
+        Planner::new()
+    }
+}
+
+impl Planner {
+    /// Planner with an empty tuning table (pure paper heuristics).
+    pub fn new() -> Planner {
+        Planner::with_table(TuningTable::new())
+    }
+
+    /// Planner backed by a measured tuning table.
+    pub fn with_table(table: TuningTable) -> Planner {
+        Planner {
+            table,
+            pool: Mutex::new(None),
+        }
+    }
+
+    /// Planner from a persisted tuning table (`stgemm autotune --save`).
+    pub fn from_table_file(path: &str) -> Result<Planner, String> {
+        Ok(Planner::with_table(TuningTable::load(path)?))
+    }
+
+    pub fn table(&self) -> &TuningTable {
+        &self.table
+    }
+
+    pub fn table_mut(&mut self) -> &mut TuningTable {
+        &mut self.table
+    }
+
+    /// The kernel this planner would pick for a (K, sparsity) class:
+    /// tuned winner if the table has one, paper heuristic otherwise.
+    pub fn select_kernel(&self, k: usize, sparsity: f32, wants_fused_prelu: bool) -> &str {
+        match self.table.lookup(k, sparsity) {
+            Some(entry) => entry.kernel.as_str(),
+            None => heuristic_kernel(k, sparsity, wants_fused_prelu),
+        }
+    }
+
+    fn shared_pool(&self) -> Arc<ThreadPool> {
+        let mut guard = self.pool.lock().unwrap_or_else(|e| e.into_inner());
+        guard
+            .get_or_insert_with(|| {
+                let workers = std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(4);
+                Arc::new(ThreadPool::new(workers.max(2)))
+            })
+            .clone()
+    }
+
+    /// Build a [`GemmPlan`] for weights `w`.
+    ///
+    /// Kernel choice: `hints.kernel` if given, else the tuning table, else
+    /// the paper heuristics. PReLU fuses into the kernel when the epilogue
+    /// allows it ([`Epilogue::fusible_prelu`]) and the chosen kernel
+    /// supports fusion; the epilogue applies it otherwise.
+    ///
+    /// # Errors
+    /// Unknown kernel names, bad params, or a bias/N mismatch.
+    pub fn plan(
+        &self,
+        w: &TernaryMatrix,
+        params: KernelParams,
+        epilogue: Epilogue,
+        hints: &PlanHints,
+    ) -> Result<GemmPlan, String> {
+        if epilogue.bias.len() != w.n() {
+            return Err(format!(
+                "bias length {} != N {}",
+                epilogue.bias.len(),
+                w.n()
+            ));
+        }
+        let sparsity = w.density() as f32;
+        let wants_fused = epilogue.fusible_prelu().is_some();
+        let name = match &hints.kernel {
+            Some(k) => k.clone(),
+            None => self
+                .select_kernel(w.k(), sparsity, wants_fused)
+                .to_string(),
+        };
+        let kparams = KernelParams {
+            prelu_alpha: epilogue.fusible_prelu(),
+            ..params
+        };
+        let gemm: Arc<dyn PreparedGemm> = prepare_kernel(&name, w, kparams)?.into();
+        let threads = hints.threads.max(1);
+        let partition = RowPartition::new(threads, hints.min_rows_per_chunk);
+        let pool = if threads > 1 {
+            Some(self.shared_pool())
+        } else {
+            None
+        };
+        let mut scratches: Vec<GemmScratch> =
+            (0..threads).map(|_| GemmScratch::new()).collect();
+        if hints.expected_batch > 0 && gemm.uses_padded_scratch() {
+            for (i, &(lo, hi)) in partition.ranges(hints.expected_batch).iter().enumerate() {
+                scratches[i].reserve_padded(hi - lo, w.k());
+            }
+        }
+        Ok(GemmPlan {
+            gemm,
+            epilogue,
+            partition,
+            pool,
+            scratch: Mutex::new(scratches),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::{ShapeClass, TuneEntry};
+    use crate::kernels::dense_oracle;
+    use crate::tensor::Matrix;
+
+    #[test]
+    fn heuristics_follow_the_paper() {
+        assert_eq!(heuristic_kernel(4096, 0.0625, false), "unrolled_tcsc_k4_m4");
+        assert_eq!(heuristic_kernel(4096, 0.25, false), "interleaved_blocked_tcsc");
+        assert_eq!(heuristic_kernel(4096, 0.5, true), "simd_vertical");
+        assert_eq!(heuristic_kernel(4096, 0.5, false), "interleaved_blocked_tcsc");
+    }
+
+    #[test]
+    fn tuning_table_wins_over_heuristics() {
+        let mut table = TuningTable::new();
+        table.insert(
+            ShapeClass::of(128, 0.25),
+            TuneEntry {
+                kernel: "unrolled_tcsc_12".into(),
+                flops_per_cycle: 9.9,
+            },
+        );
+        let planner = Planner::with_table(table);
+        let w = TernaryMatrix::random(128, 16, 0.25, 1);
+        let plan = planner
+            .plan(
+                &w,
+                KernelParams::default(),
+                Epilogue::with_bias(vec![0.0; 16]),
+                &PlanHints::default(),
+            )
+            .unwrap();
+        assert_eq!(plan.kernel_name(), "unrolled_tcsc_12");
+        // Untuned class falls back to the heuristic pick.
+        let w2 = TernaryMatrix::random(4096, 16, 0.25, 2);
+        let plan2 = planner
+            .plan(
+                &w2,
+                KernelParams::default(),
+                Epilogue::with_bias(vec![0.0; 16]),
+                &PlanHints::default(),
+            )
+            .unwrap();
+        assert_eq!(plan2.kernel_name(), "interleaved_blocked_tcsc");
+    }
+
+    #[test]
+    fn explicit_hint_overrides_everything() {
+        let planner = Planner::new();
+        let w = TernaryMatrix::random(64, 8, 0.5, 3);
+        let plan = planner
+            .plan(
+                &w,
+                KernelParams::default(),
+                Epilogue::with_bias(vec![0.0; 8]),
+                &PlanHints::with_kernel("base_tcsc"),
+            )
+            .unwrap();
+        assert_eq!(plan.kernel_name(), "base_tcsc");
+        assert!(planner
+            .plan(
+                &w,
+                KernelParams::default(),
+                Epilogue::with_bias(vec![0.0; 8]),
+                &PlanHints::with_kernel("bogus"),
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn bias_length_is_validated() {
+        let planner = Planner::new();
+        let w = TernaryMatrix::random(16, 8, 0.5, 4);
+        assert!(planner
+            .plan(
+                &w,
+                KernelParams::default(),
+                Epilogue::with_bias(vec![0.0; 7]),
+                &PlanHints::default(),
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn planned_run_matches_oracle_with_full_epilogue() {
+        let planner = Planner::new();
+        let w = TernaryMatrix::random(48, 12, 0.25, 5);
+        let x = Matrix::random(5, 48, 6);
+        let bias: Vec<f32> = (0..12).map(|i| 0.1 * i as f32 - 0.4).collect();
+        let plan = planner
+            .plan(
+                &w,
+                KernelParams::default(),
+                Epilogue::new(bias.clone(), 0.5, Some(0.25)),
+                &PlanHints::default(),
+            )
+            .unwrap();
+        let mut want = dense_oracle(&x, &w, &bias);
+        for v in want.as_mut_slice() {
+            *v *= 0.5;
+            if *v < 0.0 {
+                *v *= 0.25;
+            }
+        }
+        let y = plan.forward(&x);
+        assert!(y.allclose(&want, 1e-4));
+    }
+
+    #[test]
+    fn expected_batch_presizes_simd_scratch() {
+        let planner = Planner::new();
+        let w = TernaryMatrix::random(32, 8, 0.5, 7);
+        let hints = PlanHints {
+            kernel: Some("simd_vertical".into()),
+            expected_batch: 8,
+            ..Default::default()
+        };
+        let plan = planner
+            .plan(
+                &w,
+                KernelParams::default(),
+                Epilogue::with_bias(vec![0.0; 8]),
+                &hints,
+            )
+            .unwrap();
+        let caps = plan.scratch_capacities();
+        assert_eq!(caps, vec![8 * 33]);
+        // First run at the expected batch must not grow the scratch.
+        let x = Matrix::random(8, 32, 8);
+        let mut y = Matrix::zeros(8, 8);
+        plan.run(&x, &mut y);
+        assert_eq!(plan.scratch_capacities(), caps);
+    }
+}

@@ -106,6 +106,54 @@ impl Matrix {
             (a - b).abs() <= tol * scale
         })
     }
+
+    /// Run `f` on a read-only `Matrix` aliasing `data` (rows × cols,
+    /// contiguous row-major). Zero-copy: the plan partitioner uses this to
+    /// hand a row chunk of X to kernels that take `&Matrix` without
+    /// materializing the chunk. The temporary never owns the storage (its
+    /// capacity is zero, so no deallocation can happen), and `f` receives a
+    /// shared reference, so nothing can write through it.
+    pub fn with_view<R>(
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        f: impl FnOnce(&Matrix) -> R,
+    ) -> R {
+        assert_eq!(data.len(), rows * cols, "view shape mismatch");
+        let m = std::mem::ManuallyDrop::new(Matrix {
+            rows,
+            cols,
+            data: AlignedVec {
+                ptr: data.as_ptr() as *mut f32,
+                len: data.len(),
+                cap_bytes: 0,
+            },
+        });
+        f(&m)
+    }
+
+    /// Mutable counterpart of [`Matrix::with_view`]: `f` gets a `Matrix`
+    /// aliasing `data` and writes land directly in the caller's slice. Used
+    /// to let a kernel write its output into a disjoint row block of a
+    /// larger Y with no intermediate buffer or stitch copy.
+    pub fn with_view_mut<R>(
+        data: &mut [f32],
+        rows: usize,
+        cols: usize,
+        f: impl FnOnce(&mut Matrix) -> R,
+    ) -> R {
+        assert_eq!(data.len(), rows * cols, "view shape mismatch");
+        let mut m = std::mem::ManuallyDrop::new(Matrix {
+            rows,
+            cols,
+            data: AlignedVec {
+                ptr: data.as_mut_ptr(),
+                len: data.len(),
+                cap_bytes: 0,
+            },
+        });
+        f(&mut m)
+    }
 }
 
 impl std::ops::Index<(usize, usize)> for Matrix {
@@ -147,6 +195,43 @@ impl PaddedMatrix {
             data.as_mut_slice()[r * (k + 1)..r * (k + 1) + k].copy_from_slice(x.row(r));
         }
         PaddedMatrix { rows, k, data }
+    }
+
+    /// All-zero padded storage sized for `rows` × `k` (scratch pre-sizing).
+    pub fn with_capacity(rows: usize, k: usize) -> PaddedMatrix {
+        PaddedMatrix {
+            rows,
+            k,
+            data: AlignedVec::zeroed(rows * (k + 1)),
+        }
+    }
+
+    /// Backing capacity in f32 elements (allocation-stability accounting).
+    pub fn capacity(&self) -> usize {
+        self.data.capacity()
+    }
+
+    /// Re-fill from `x`, reusing the existing allocation whenever it is
+    /// large enough (the serving hot path: repeated batches at a steady M
+    /// perform no allocation). Falls back to a fresh allocation only when
+    /// `x` needs more storage than the current capacity.
+    pub fn copy_from(&mut self, x: &Matrix) {
+        let rows = x.rows();
+        let k = x.cols();
+        let needed = rows * (k + 1);
+        if needed > self.data.capacity() {
+            *self = PaddedMatrix::from_matrix(x);
+            return;
+        }
+        self.rows = rows;
+        self.k = k;
+        self.data.set_len(needed);
+        let stride = k + 1;
+        let dst = self.data.as_mut_slice();
+        for r in 0..rows {
+            dst[r * stride..r * stride + k].copy_from_slice(x.row(r));
+            dst[r * stride + k] = 0.0;
+        }
     }
 
     #[inline]
@@ -206,6 +291,19 @@ impl AlignedVec {
             len,
             cap_bytes: bytes,
         }
+    }
+
+    /// Capacity in f32 elements. Borrowed views report 0 (they own nothing).
+    #[inline]
+    fn capacity(&self) -> usize {
+        self.cap_bytes / std::mem::size_of::<f32>()
+    }
+
+    /// Shrink or re-grow the logical length within the existing capacity.
+    #[inline]
+    fn set_len(&mut self, len: usize) {
+        assert!(len <= self.capacity(), "set_len beyond capacity");
+        self.len = len;
     }
 
     #[inline]
@@ -313,6 +411,57 @@ mod tests {
         assert_eq!(m.as_slice().len(), 0);
         let m2 = m.clone();
         assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn views_alias_without_copy() {
+        let x = Matrix::from_fn(4, 3, |r, c| (r * 3 + c) as f32);
+        // Read-only view of rows 1..3.
+        let chunk = &x.as_slice()[3..9];
+        Matrix::with_view(chunk, 2, 3, |v| {
+            assert_eq!(v.rows(), 2);
+            assert_eq!(v.row(0), x.row(1));
+            assert_eq!(v.row(1), x.row(2));
+        });
+        // Mutable view writes land in the original storage.
+        let mut y = Matrix::zeros(4, 3);
+        {
+            let rows = y.as_mut_slice();
+            let (_, tail) = rows.split_at_mut(6);
+            Matrix::with_view_mut(tail, 2, 3, |v| {
+                v.row_mut(0).copy_from_slice(&[1.0, 2.0, 3.0]);
+                v[(1, 2)] = 9.0;
+            });
+        }
+        assert_eq!(y.row(2), &[1.0, 2.0, 3.0]);
+        assert_eq!(y[(3, 2)], 9.0);
+        assert_eq!(y.row(0), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn padded_copy_from_reuses_allocation() {
+        let x8 = Matrix::random(8, 16, 1);
+        let mut p = PaddedMatrix::from_matrix(&x8);
+        let cap = p.capacity();
+        assert_eq!(cap, 8 * 17);
+        // Same shape: no reallocation, contents replaced.
+        let x8b = Matrix::random(8, 16, 2);
+        p.copy_from(&x8b);
+        assert_eq!(p.capacity(), cap);
+        assert_eq!(&p.row(3)[..16], x8b.row(3));
+        assert_eq!(p.row(3)[16], 0.0);
+        // Smaller batch: still no reallocation.
+        let x2 = Matrix::random(2, 16, 3);
+        p.copy_from(&x2);
+        assert_eq!(p.capacity(), cap);
+        assert_eq!(p.rows(), 2);
+        assert_eq!(&p.row(1)[..16], x2.row(1));
+        // Larger batch: grows.
+        let x16 = Matrix::random(16, 16, 4);
+        p.copy_from(&x16);
+        assert!(p.capacity() >= 16 * 17);
+        assert_eq!(&p.row(15)[..16], x16.row(15));
+        assert_eq!(p.row(15)[16], 0.0);
     }
 
     #[test]

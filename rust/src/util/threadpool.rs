@@ -8,7 +8,7 @@
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -86,6 +86,61 @@ impl ThreadPool {
     /// Number of jobs that panicked (isolated, workers survive).
     pub fn panic_count(&self) -> usize {
         self.panics.load(Ordering::SeqCst)
+    }
+
+    /// Scoped fork-join: run a batch of jobs that may borrow non-`'static`
+    /// data, blocking until every one of them has finished. This is what
+    /// lets the GEMM partitioner hand workers `&mut` row slices of the
+    /// caller's output matrix through a pool of long-lived threads instead
+    /// of spawning OS threads per call.
+    ///
+    /// Returns the number of jobs that panicked (0 = all completed).
+    /// Scoped-job panics are caught *here* and reported through the return
+    /// value — updated under the same lock as the completion latch, so the
+    /// count is exact by the time this returns (they do not feed
+    /// [`ThreadPool::panic_count`], which stays for fire-and-forget jobs).
+    ///
+    /// Safety of the internal lifetime erasure: this function does not
+    /// return until all jobs have completed — the latch is decremented
+    /// whether a job returns or panics — so no job can outlive the borrows
+    /// it captures.
+    ///
+    /// Do not call from inside a pool worker: a saturated pool would
+    /// deadlock waiting on itself.
+    #[must_use = "a non-zero return means worker jobs panicked"]
+    pub fn run_scoped<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) -> usize {
+        if jobs.is_empty() {
+            return 0;
+        }
+        // (jobs remaining, jobs panicked)
+        let latch = Arc::new((Mutex::new((jobs.len(), 0usize)), Condvar::new()));
+        for job in jobs {
+            // SAFETY: see above — the latch wait below keeps every borrow
+            // captured by `job` alive until the job has run (or panicked).
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'scope>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(job)
+            };
+            let latch = Arc::clone(&latch);
+            self.execute(move || {
+                let panicked = catch_unwind(AssertUnwindSafe(job)).is_err();
+                let (state, cv) = &*latch;
+                let mut s = state.lock().unwrap_or_else(|e| e.into_inner());
+                s.0 -= 1;
+                if panicked {
+                    s.1 += 1;
+                }
+                cv.notify_all();
+            });
+        }
+        let (state, cv) = &*latch;
+        let mut s = state.lock().unwrap_or_else(|e| e.into_inner());
+        while s.0 > 0 {
+            s = cv.wait(s).unwrap_or_else(|e| e.into_inner());
+        }
+        s.1
     }
 
     /// Block until every submitted job has finished (spin + yield; used by
@@ -177,6 +232,45 @@ mod tests {
         });
         pool.wait_idle();
         assert_eq!(flag.load(Ordering::SeqCst), 7);
+    }
+
+    #[test]
+    fn run_scoped_borrows_stack_data() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0u64; 16];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = data
+            .chunks_mut(4)
+            .enumerate()
+            .map(|(i, chunk)| {
+                Box::new(move || {
+                    for v in chunk.iter_mut() {
+                        *v = i as u64 + 1;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        assert_eq!(pool.run_scoped(jobs), 0);
+        assert_eq!(data[0], 1);
+        assert_eq!(data[5], 2);
+        assert_eq!(data[15], 4);
+    }
+
+    #[test]
+    fn run_scoped_reports_panicking_job() {
+        let pool = ThreadPool::new(2);
+        let flag = Arc::new(AtomicU64::new(0));
+        let f = Arc::clone(&flag);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+            Box::new(|| panic!("scoped boom")),
+            Box::new(move || {
+                f.store(11, Ordering::SeqCst);
+            }),
+        ];
+        // Must return, with the panic reported exactly in the return value.
+        assert_eq!(pool.run_scoped(jobs), 1);
+        assert_eq!(flag.load(Ordering::SeqCst), 11);
+        // Scoped panics are caught locally, not via the pool counter.
+        assert_eq!(pool.panic_count(), 0);
     }
 
     #[test]

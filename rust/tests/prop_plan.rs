@@ -1,0 +1,185 @@
+//! Planning-layer properties: every registry kernel runs correctly through
+//! `GemmPlan` across batch sizes, sparsities and epilogue configurations;
+//! steady-state execution is allocation-stable; parallel plans are bitwise
+//! identical to sequential ones.
+
+use stgemm::kernels::{dense_oracle, kernel_names, prelu_inplace, KernelParams};
+use stgemm::plan::{Epilogue, PlanHints, Planner};
+use stgemm::tensor::Matrix;
+use stgemm::ternary::TernaryMatrix;
+
+fn oracle_with(
+    x: &Matrix,
+    w: &TernaryMatrix,
+    bias: &[f32],
+    scale: f32,
+    prelu: Option<f32>,
+) -> Matrix {
+    let mut y = dense_oracle(x, w, bias);
+    if scale != 1.0 {
+        for v in y.as_mut_slice() {
+            *v *= scale;
+        }
+    }
+    if let Some(alpha) = prelu {
+        prelu_inplace(&mut y, alpha);
+    }
+    y
+}
+
+/// Satellite requirement: every registry kernel through `GemmPlan` matches
+/// `dense_oracle` across M ∈ {1, 2, 7, 64}, sparsity ∈ {0.05, 0.25, 0.5},
+/// with and without PReLU and scale.
+#[test]
+fn every_kernel_through_plan_matches_oracle() {
+    let planner = Planner::new();
+    let (k, n) = (96usize, 24usize);
+    let bias: Vec<f32> = (0..n).map(|i| 0.07 * i as f32 - 0.5).collect();
+    for &m in &[1usize, 2, 7, 64] {
+        for &s in &[0.05f32, 0.25, 0.5] {
+            let w = TernaryMatrix::random(k, n, s, 1000 + m as u64);
+            let x = Matrix::random(m, k, 2000 + m as u64);
+            for &(scale, prelu) in &[
+                (1.0f32, None),
+                (1.0, Some(0.25f32)),
+                (0.5, None),
+                (0.5, Some(0.25)),
+            ] {
+                let want = oracle_with(&x, &w, &bias, scale, prelu);
+                for &name in kernel_names() {
+                    let plan = planner
+                        .plan(
+                            &w,
+                            KernelParams::default(),
+                            Epilogue::new(bias.clone(), scale, prelu),
+                            &PlanHints::with_kernel(name),
+                        )
+                        .unwrap();
+                    let mut y = Matrix::zeros(m, n);
+                    plan.run(&x, &mut y);
+                    assert!(
+                        y.allclose(&want, 2e-3),
+                        "kernel {name} m={m} s={s} scale={scale} prelu={prelu:?} \
+                         maxΔ {}",
+                        y.max_abs_diff(&want)
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Satellite requirement: steady-state `GemmPlan::run` performs no scratch
+/// reallocation — capacity snapshot identical before/after repeated runs,
+/// sequential and parallel, including smaller follow-up batches.
+#[test]
+fn steady_state_run_is_allocation_stable() {
+    let planner = Planner::new();
+    let (k, n, m) = (64usize, 32usize, 16usize);
+    let w = TernaryMatrix::random(k, n, 0.25, 42);
+    let x = Matrix::random(m, k, 43);
+    for name in ["simd_vertical", "simd_horizontal", "interleaved_blocked_tcsc"] {
+        for threads in [1usize, 4] {
+            let hints = PlanHints {
+                kernel: Some(name.to_string()),
+                threads,
+                expected_batch: m,
+                ..Default::default()
+            };
+            let plan = planner
+                .plan(
+                    &w,
+                    KernelParams::default(),
+                    Epilogue::with_bias(vec![0.1; n]),
+                    &hints,
+                )
+                .unwrap();
+            let caps_before = plan.scratch_capacities();
+            let mut y = Matrix::zeros(m, n);
+            for _ in 0..8 {
+                plan.run(&x, &mut y);
+            }
+            assert_eq!(
+                plan.scratch_capacities(),
+                caps_before,
+                "{name} threads={threads}: steady-state runs must not reallocate"
+            );
+            // A smaller batch reuses the same buffers.
+            let x_small = Matrix::random(m / 2, k, 44);
+            let mut y_small = Matrix::zeros(m / 2, n);
+            plan.run(&x_small, &mut y_small);
+            assert_eq!(
+                plan.scratch_capacities(),
+                caps_before,
+                "{name} threads={threads}: smaller batches must not reallocate"
+            );
+        }
+    }
+}
+
+/// Parallel plans write disjoint Y row blocks in place and must produce
+/// exactly the sequential bits for every kernel family.
+#[test]
+fn parallel_plan_is_bitwise_sequential() {
+    let planner = Planner::new();
+    let (k, n) = (80usize, 20usize);
+    let w = TernaryMatrix::random(k, n, 0.25, 7);
+    let bias: Vec<f32> = (0..n).map(|i| 0.02 * i as f32).collect();
+    for &m in &[5usize, 13, 31] {
+        let x = Matrix::random(m, k, 8 + m as u64);
+        for &name in kernel_names() {
+            let build = |threads: usize| {
+                planner
+                    .plan(
+                        &w,
+                        KernelParams::default(),
+                        Epilogue::new(bias.clone(), 1.0, Some(0.25)),
+                        &PlanHints {
+                            kernel: Some(name.to_string()),
+                            threads,
+                            ..Default::default()
+                        },
+                    )
+                    .unwrap()
+            };
+            let seq = build(1);
+            let par = build(4);
+            let mut y_seq = Matrix::zeros(m, n);
+            let mut y_par = Matrix::zeros(m, n);
+            seq.run(&x, &mut y_seq);
+            par.run(&x, &mut y_par);
+            assert_eq!(y_seq, y_par, "kernel {name} m={m}");
+        }
+    }
+}
+
+/// The planner consults the tuning table for model-build-time selection
+/// and honors non-default interleave groups end to end.
+#[test]
+fn plan_respects_group_override() {
+    let planner = Planner::new();
+    let (k, n, m) = (96usize, 16usize, 6usize);
+    let w = TernaryMatrix::random(k, n, 0.25, 9);
+    let x = Matrix::random(m, k, 10);
+    let bias = vec![0.05f32; n];
+    let want = dense_oracle(&x, &w, &bias);
+    for g in [1usize, 3, 4] {
+        for name in ["interleaved_tcsc", "interleaved_blocked_tcsc", "simd_blocked_interleaved"] {
+            let params = KernelParams {
+                group: Some(g),
+                ..Default::default()
+            };
+            let plan = planner
+                .plan(
+                    &w,
+                    params,
+                    Epilogue::with_bias(bias.clone()),
+                    &PlanHints::with_kernel(name),
+                )
+                .unwrap();
+            let mut y = Matrix::zeros(m, n);
+            plan.run(&x, &mut y);
+            assert!(y.allclose(&want, 1e-3), "{name} group={g}");
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Offline shim of the `anyhow` crate: the API subset this repository uses
+//! (`Result`, `Error`, `Context`, `anyhow!`, `ensure!`, `bail!`) backed by a
+//! plain string. The build environment has no network access, so the real
+//! crate cannot be fetched; swapping this out is a one-line change in
+//! `rust/Cargo.toml` when a registry is available.
+
+use std::fmt;
+
+/// String-backed error. Context is prepended `"context: cause"` so the
+/// rendered message matches the real crate's `{:#}` alternate format.
+#[derive(Clone)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error(m.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{e}` and `{e:#}` both render the full context chain.
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failures, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{c}: {e}")))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error(c.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/here").context("reading config")?;
+        Ok(())
+    }
+
+    #[test]
+    fn context_chains_and_renders() {
+        let e = io_fail().unwrap_err();
+        let rendered = format!("{e:#}");
+        assert!(rendered.starts_with("reading config:"), "{rendered}");
+        assert_eq!(format!("{e}"), rendered);
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+    }
+
+    #[test]
+    fn macros() {
+        let name = "x";
+        let e = anyhow!("bad {name}");
+        assert_eq!(format!("{e}"), "bad x");
+        let e2 = anyhow!(String::from("owned"));
+        assert_eq!(format!("{e2}"), "owned");
+        let f = |ok: bool| -> Result<u8> {
+            ensure!(ok, "must be ok, got {}", ok);
+            Ok(1)
+        };
+        assert!(f(true).is_ok());
+        assert!(f(false).is_err());
+    }
+}
