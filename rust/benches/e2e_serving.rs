@@ -10,6 +10,7 @@ use stgemm::bench::harness::BenchScale;
 use stgemm::bench::report::{write_csv, Table};
 use stgemm::coordinator::{Backend, BatchPolicy, Engine, LoadGenerator, Router};
 use stgemm::model::{ModelConfig, TernaryLinear, TernaryMlp};
+use stgemm::plan::{PlanHints, Planner};
 use stgemm::runtime::{Manifest, XlaExecutor};
 
 fn bench_backend(name: &str, engine: Engine, clients: usize, reqs: usize) -> Vec<String> {
@@ -63,42 +64,42 @@ fn main() {
         ],
     );
 
-    // Native backend on the synthetic config.
+    // Native backend on the synthetic config, through the serving path
+    // proper: planner-selected kernels, M-bucketed plan cache.
     let cfg = ModelConfig::from_json(
-        r#"{"name":"native","dims":[256,1024,256],"sparsity":0.25,"seed":4321,
-            "kernel":"interleaved_blocked_tcsc"}"#,
+        r#"{"name":"native","dims":[256,1024,256],"sparsity":0.25,"seed":4321}"#,
     )
     .unwrap();
-    let engine = Engine::new("native", TernaryMlp::from_config(&cfg).unwrap());
+    let engine = Engine::from_config(&cfg, &Arc::new(Planner::new())).unwrap();
     table.row(bench_backend("native", engine, clients, reqs));
 
-    // Also native with the baseline kernel — shows what the paper's
+    // Also native with the baseline kernel — the explicit-override escape
+    // hatch (config `kernel` key), kept to show what the paper's
     // optimizations buy at the serving level.
     let cfg_base = ModelConfig::from_json(
         r#"{"name":"native_base","dims":[256,1024,256],"sparsity":0.25,"seed":4321,
             "kernel":"base_tcsc"}"#,
     )
     .unwrap();
-    let engine = Engine::new("native_base", TernaryMlp::from_config(&cfg_base).unwrap());
+    let engine = Engine::from_config(&cfg_base, &Arc::new(Planner::new())).unwrap();
     table.row(bench_backend("native_base", engine, clients, reqs));
 
     // XLA backend from the real artifact (identical weights via manifest).
     match Manifest::load("artifacts") {
         Ok(manifest) if !manifest.variants_of("ffn_e2e").is_empty() => {
+            let planner = Planner::new();
+            let hints = PlanHints {
+                expected_batch: 8,
+                ..Default::default()
+            };
             let v0 = manifest.variants_of("ffn_e2e")[0];
             let mut layers = Vec::new();
             for (i, l) in v0.layers.iter().enumerate() {
                 let w = v0.load_weights(&manifest.dir, i).expect("weights");
                 let b = v0.load_bias(&manifest.dir, i).expect("bias");
                 layers.push(
-                    TernaryLinear::new(
-                        "interleaved_blocked_tcsc",
-                        &w,
-                        b,
-                        1.0,
-                        l.prelu_alpha,
-                    )
-                    .unwrap(),
+                    TernaryLinear::planned(&planner, &w, b, 1.0, l.prelu_alpha, &hints)
+                        .unwrap(),
                 );
             }
             let mlp = TernaryMlp::from_layers("xla".into(), layers).unwrap();

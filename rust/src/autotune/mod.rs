@@ -4,8 +4,10 @@
 
 pub mod grid;
 pub mod cache;
+pub mod sweep;
 pub mod table;
 
 pub use cache::CacheModel;
 pub use grid::{run_unrolled_mk, unroll_grid_search, GridPoint, UNROLL_K_FACTORS, UNROLL_M_FACTORS};
+pub use sweep::{sweep_model, SweepPoint, SweepReport};
 pub use table::{ShapeClass, TuneEntry, TuningTable};

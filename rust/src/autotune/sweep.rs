@@ -1,0 +1,176 @@
+//! `stgemm autotune sweep`: fill the tuning table for **every** layer ×
+//! M-bucket of a model config in one run.
+//!
+//! The per-shape `autotune --save` flow persists one (K, sparsity) class
+//! per invocation; a multi-layer serving config needs its whole set of
+//! classes covered before the planner stops falling back to heuristics
+//! (or the plan cache stops racing). The sweep walks the config's layer
+//! shapes, measures every candidate kernel at each batch bucket, and
+//! records one winner per class — the kernel with the best *mean*
+//! flops/cycle across buckets, since the table is keyed by (K, sparsity)
+//! only (M is performance-neutral per paper Fig 8, but the mean guards
+//! against a kernel that only wins at a single outlier bucket).
+//!
+//! The serve-time background re-tune hook runs exactly this sweep on a
+//! snapshot of the live table and installs the result.
+
+use crate::autotune::table::{ShapeClass, TuneEntry, TuningTable};
+use crate::bench::harness::measure_kernel;
+use crate::kernels::KernelParams;
+use crate::model::ModelConfig;
+use crate::perf::timer::CycleTimer;
+
+/// One (layer shape, bucket, kernel) measurement from a sweep.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub layer: usize,
+    pub k: usize,
+    pub n: usize,
+    pub sparsity: f32,
+    pub bucket: usize,
+    pub kernel: String,
+    pub flops_per_cycle: f64,
+}
+
+/// Everything a sweep measured and decided.
+#[derive(Debug, Clone, Default)]
+pub struct SweepReport {
+    /// Raw measurements, one per (class, bucket, kernel).
+    pub points: Vec<SweepPoint>,
+    /// Winner per shape class, in layer order (deduplicated: layers that
+    /// share a class are measured once).
+    pub winners: Vec<(ShapeClass, TuneEntry)>,
+}
+
+/// Measure `candidates` for every distinct (K, sparsity) class of `cfg`'s
+/// layers at every bucket in `buckets`, record each class winner into
+/// `table`, and return the full report. Existing entries for swept classes
+/// are overwritten (fresh measurements beat stale ones); other entries are
+/// left untouched.
+pub fn sweep_model(
+    cfg: &ModelConfig,
+    buckets: &[usize],
+    candidates: &[&str],
+    timer: &CycleTimer,
+    table: &mut TuningTable,
+) -> SweepReport {
+    assert!(!candidates.is_empty(), "sweep needs at least one candidate");
+    let buckets: Vec<usize> = if buckets.is_empty() {
+        vec![16]
+    } else {
+        buckets.to_vec()
+    };
+    let mut report = SweepReport::default();
+    let mut seen: Vec<ShapeClass> = Vec::new();
+    for layer in 0..cfg.dims.len() - 1 {
+        let (k, n) = (cfg.dims[layer], cfg.dims[layer + 1]);
+        let class = ShapeClass::of(k, cfg.sparsity);
+        if seen.contains(&class) {
+            continue;
+        }
+        seen.push(class);
+        let mut best: Option<TuneEntry> = None;
+        for &kernel in candidates {
+            let mut sum = 0.0;
+            for &m in &buckets {
+                let meas = measure_kernel(
+                    kernel,
+                    m.max(1),
+                    k,
+                    n,
+                    cfg.sparsity,
+                    0xC0_FF_EE + layer as u64,
+                    KernelParams::default(),
+                    timer,
+                );
+                let fpc = meas.flops_per_cycle();
+                report.points.push(SweepPoint {
+                    layer,
+                    k,
+                    n,
+                    sparsity: cfg.sparsity,
+                    bucket: m.max(1),
+                    kernel: kernel.to_string(),
+                    flops_per_cycle: fpc,
+                });
+                sum += fpc;
+            }
+            let mean = sum / buckets.len() as f64;
+            if best
+                .as_ref()
+                .map(|b| mean > b.flops_per_cycle)
+                .unwrap_or(true)
+            {
+                best = Some(TuneEntry {
+                    kernel: kernel.to_string(),
+                    flops_per_cycle: mean,
+                });
+            }
+        }
+        let entry = best.expect("non-empty candidate set");
+        table.insert(class, entry.clone());
+        report.winners.push((class, entry));
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::from_json(
+            r#"{"name":"s","dims":[32,64,16],"sparsity":0.25,"seed":1,
+                "batch_buckets":[1,4]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn sweep_covers_every_layer_class() {
+        let c = cfg();
+        let timer = CycleTimer::new(0, 1);
+        let mut table = TuningTable::new();
+        let report = sweep_model(
+            &c,
+            &c.batch_buckets,
+            &["base_tcsc", "unrolled_tcsc_12"],
+            &timer,
+            &mut table,
+        );
+        // Two distinct classes (K=32 and K=64 at 25%), each covered.
+        assert_eq!(report.winners.len(), 2);
+        for i in 0..c.dims.len() - 1 {
+            assert!(
+                table.lookup(c.dims[i], c.sparsity).is_some(),
+                "layer {i} class untuned after sweep"
+            );
+        }
+        // classes × kernels × buckets raw points.
+        assert_eq!(report.points.len(), 2 * 2 * 2);
+        assert!(report.points.iter().all(|p| p.flops_per_cycle > 0.0));
+    }
+
+    #[test]
+    fn shared_classes_are_measured_once() {
+        let c = ModelConfig::from_json(
+            r#"{"name":"s","dims":[64,64,64],"sparsity":0.25,"seed":1}"#,
+        )
+        .unwrap();
+        let timer = CycleTimer::new(0, 1);
+        let mut table = TuningTable::new();
+        let report = sweep_model(&c, &[1], &["base_tcsc"], &timer, &mut table);
+        assert_eq!(report.winners.len(), 1, "one class, measured once");
+        assert_eq!(table.len(), 1);
+    }
+
+    #[test]
+    fn empty_buckets_fall_back_to_default() {
+        let c = cfg();
+        let timer = CycleTimer::new(0, 1);
+        let mut table = TuningTable::new();
+        let report = sweep_model(&c, &[], &["base_tcsc"], &timer, &mut table);
+        assert_eq!(report.points.len(), 2, "one default bucket per class");
+        assert!(report.points.iter().all(|p| p.bucket == 16));
+    }
+}

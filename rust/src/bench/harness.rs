@@ -77,6 +77,7 @@ impl KernelMeasurement {
 /// *outside* the timed region (the paper benchmarks the GEMM, not format
 /// conversion), and steady-state runs reuse the plan's scratch exactly as
 /// serving does.
+#[allow(clippy::too_many_arguments)] // a measurement is its full shape tuple
 pub fn measure_kernel(
     name: &str,
     m: usize,

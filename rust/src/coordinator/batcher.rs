@@ -4,10 +4,17 @@
 //! queued request has waited `max_wait`. Growing M is performance-neutral
 //! for the paper's kernels (Fig 8: performance is constant across M/N), so
 //! batching converts latency headroom directly into throughput.
+//!
+//! `max_batch` is a *live* knob: the load-aware router re-sizes it from
+//! observed arrival rate and queue depth ([`DynamicBatcher::set_max_batch`]),
+//! and the batcher reports queue depth and arrivals into the engine's
+//! [`Metrics`] so the controller has signals to steer by.
 
+use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::InferenceRequest;
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Batch assembly policy.
@@ -28,6 +35,17 @@ impl Default for BatchPolicy {
     }
 }
 
+/// Why [`DynamicBatcher::submit`] refused a request (the request rides
+/// along so the caller can deliver an error response or retry elsewhere).
+#[derive(Debug)]
+pub enum SubmitError {
+    /// The batcher was shut down.
+    Closed(InferenceRequest),
+    /// The request carried a zero-length input row: it would contribute
+    /// nothing to a GEMM batch and can never produce output.
+    EmptyInput(InferenceRequest),
+}
+
 struct QueueState {
     queue: VecDeque<InferenceRequest>,
     closed: bool,
@@ -36,36 +54,77 @@ struct QueueState {
 /// Thread-safe dynamic batching queue (Mutex + Condvar; producers are
 /// server connections, the consumer is the model's batch loop).
 pub struct DynamicBatcher {
-    policy: BatchPolicy,
+    max_wait: Duration,
+    max_batch: AtomicUsize,
     state: Mutex<QueueState>,
     cv: Condvar,
+    metrics: Option<Arc<Metrics>>,
 }
 
 impl DynamicBatcher {
     pub fn new(policy: BatchPolicy) -> DynamicBatcher {
         assert!(policy.max_batch >= 1);
         DynamicBatcher {
-            policy,
+            max_wait: policy.max_wait,
+            max_batch: AtomicUsize::new(policy.max_batch),
             state: Mutex::new(QueueState {
                 queue: VecDeque::new(),
                 closed: false,
             }),
             cv: Condvar::new(),
+            metrics: None,
         }
     }
 
-    pub fn policy(&self) -> BatchPolicy {
-        self.policy
+    /// Report queue depth and arrivals into `metrics` (the load-aware
+    /// coordinator's signal source).
+    pub fn with_metrics(mut self, metrics: Arc<Metrics>) -> DynamicBatcher {
+        self.metrics = Some(metrics);
+        self
     }
 
-    /// Enqueue a request. Returns `Err(req)` if the batcher is shut down.
-    pub fn submit(&self, req: InferenceRequest) -> Result<(), InferenceRequest> {
+    /// The current policy (with the live `max_batch` value).
+    pub fn policy(&self) -> BatchPolicy {
+        BatchPolicy {
+            max_batch: self.max_batch(),
+            max_wait: self.max_wait,
+        }
+    }
+
+    /// Current batch-size ceiling.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch.load(Ordering::Relaxed)
+    }
+
+    /// Re-size the batch ceiling (load-aware router). Takes effect for the
+    /// next batch decision; a waiting consumer is woken so a now-full
+    /// queue closes immediately.
+    pub fn set_max_batch(&self, max_batch: usize) {
+        self.max_batch.store(max_batch.max(1), Ordering::Relaxed);
+        // Serialize with the consumer's check-then-park: without taking
+        // the mutex, the notify could land between its ceiling check and
+        // its condvar wait and be lost until max_wait expires.
+        drop(self.state.lock().expect("batcher mutex"));
+        self.cv.notify_all();
+    }
+
+    /// Enqueue a request. Fails when the batcher is shut down or the input
+    /// row is empty (zero-row requests never reach the engine).
+    pub fn submit(&self, req: InferenceRequest) -> Result<(), SubmitError> {
+        if req.input.is_empty() {
+            return Err(SubmitError::EmptyInput(req));
+        }
         let mut st = self.state.lock().expect("batcher mutex");
         if st.closed {
-            return Err(req);
+            return Err(SubmitError::Closed(req));
         }
         st.queue.push_back(req);
+        let depth = st.queue.len();
         drop(st);
+        if let Some(m) = &self.metrics {
+            m.note_arrival();
+            m.set_queue_depth(depth);
+        }
         self.cv.notify_all();
         Ok(())
     }
@@ -82,12 +141,19 @@ impl DynamicBatcher {
         let mut st = self.state.lock().expect("batcher mutex");
         loop {
             if !st.queue.is_empty() {
+                let max_batch = self.max_batch();
                 let oldest = st.queue.front().unwrap().enqueued;
-                let deadline = oldest + self.policy.max_wait;
+                let deadline = oldest + self.max_wait;
                 let now = Instant::now();
-                if st.queue.len() >= self.policy.max_batch || now >= deadline || st.closed {
-                    let take = st.queue.len().min(self.policy.max_batch);
-                    return Some(st.queue.drain(..take).collect());
+                if st.queue.len() >= max_batch || now >= deadline || st.closed {
+                    let take = st.queue.len().min(max_batch);
+                    let batch: Vec<InferenceRequest> = st.queue.drain(..take).collect();
+                    let depth = st.queue.len();
+                    drop(st);
+                    if let Some(m) = &self.metrics {
+                        m.set_queue_depth(depth);
+                    }
+                    return Some(batch);
                 }
                 // Wait until the deadline or a new arrival.
                 let (guard, _timeout) = self
@@ -151,6 +217,24 @@ mod tests {
     }
 
     #[test]
+    fn max_wait_expiry_flushes_non_full_batch() {
+        // Three of a possible hundred rows queued: the deadline of the
+        // *oldest* request closes the batch with exactly those three.
+        let b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_millis(10),
+        });
+        for i in 0..3 {
+            b.submit(req(i)).unwrap();
+        }
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 3, "all queued rows ride the expiring batch");
+        assert!(t0.elapsed() >= Duration::from_millis(8));
+        assert_eq!(b.depth(), 0);
+    }
+
+    #[test]
     fn fifo_order_preserved_across_batches() {
         let b = DynamicBatcher::new(BatchPolicy {
             max_batch: 2,
@@ -175,7 +259,81 @@ mod tests {
         std::thread::sleep(Duration::from_millis(10));
         b.close();
         assert!(h.join().unwrap().is_none());
-        assert!(b.submit(req(1)).is_err());
+        assert!(matches!(b.submit(req(1)), Err(SubmitError::Closed(_))));
+    }
+
+    #[test]
+    fn close_while_waiting_flushes_partial_batch() {
+        // The consumer is parked on a partial batch with a long max_wait;
+        // close() must hand it the partial batch immediately (not None,
+        // not after the deadline).
+        let b = Arc::new(DynamicBatcher::new(BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_secs(30),
+        }));
+        b.submit(req(7)).unwrap();
+        let b2 = Arc::clone(&b);
+        let h = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(10));
+        let t0 = Instant::now();
+        b.close();
+        let batch = h.join().unwrap().expect("partial batch, not shutdown None");
+        assert!(t0.elapsed() < Duration::from_secs(5), "close must not wait out max_wait");
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![7]);
+        // Queue drained → now the exit signal.
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn zero_row_request_is_rejected() {
+        let b = DynamicBatcher::new(BatchPolicy::default());
+        let (empty, rx) = InferenceRequest::new(9, "m", vec![]);
+        match b.submit(empty) {
+            Err(SubmitError::EmptyInput(r)) => assert_eq!(r.id, 9),
+            other => panic!("expected EmptyInput, got {other:?}"),
+        }
+        drop(rx);
+        assert_eq!(b.depth(), 0, "rejected request never queues");
+        // Non-empty input still flows.
+        b.submit(req(1)).unwrap();
+        assert_eq!(b.depth(), 1);
+    }
+
+    #[test]
+    fn set_max_batch_applies_to_next_decision() {
+        let b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_secs(10),
+        });
+        for i in 0..4 {
+            b.submit(req(i)).unwrap();
+        }
+        assert_eq!(b.max_batch(), 8);
+        b.set_max_batch(2);
+        assert_eq!(b.policy().max_batch, 2);
+        // 4 queued ≥ new ceiling 2 → closes immediately at 2 rows.
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(b.depth(), 2);
+    }
+
+    #[test]
+    fn metrics_see_arrivals_and_depth() {
+        let m = Arc::new(Metrics::new());
+        let b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_secs(1),
+        })
+        .with_metrics(Arc::clone(&m));
+        for i in 0..4 {
+            b.submit(req(i)).unwrap();
+        }
+        assert_eq!(
+            m.peak_queue_depth.load(std::sync::atomic::Ordering::Relaxed),
+            4
+        );
+        let _ = b.next_batch().unwrap();
+        assert_eq!(m.queue_depth.load(std::sync::atomic::Ordering::Relaxed), 0);
     }
 
     #[test]

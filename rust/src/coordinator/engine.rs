@@ -52,19 +52,32 @@ impl Engine {
     }
 
     /// Build the native model through the planning layer: every layer's
-    /// kernel comes from `planner` (tuning table + paper heuristics) unless
-    /// the config pins an explicit override, and batches served by
-    /// [`Engine::run_batch`] execute through the resulting
-    /// [`crate::plan::GemmPlan`]s (allocation-stable scratch, optional
-    /// row-parallel fan-out per the config's `threads`).
+    /// kernel comes from the shared `planner` (tuning table + paper
+    /// heuristics, refined by the plan cache's online top-2 race) unless
+    /// the config pins an explicit override. Batches served by
+    /// [`Engine::run_batch`] execute through M-bucketed cached
+    /// [`crate::plan::GemmPlan`]s (allocation-stable scratch, row-parallel
+    /// fan-out seeded by the config's `threads` and re-sizable at runtime
+    /// via [`Engine::set_threads`]).
     pub fn from_config(
         cfg: &crate::model::ModelConfig,
-        planner: &crate::plan::Planner,
+        planner: &Arc<crate::plan::Planner>,
     ) -> Result<Engine, String> {
         Ok(Engine::new(
             cfg.name.clone(),
             TernaryMlp::planned(cfg, planner)?,
         ))
+    }
+
+    /// The model's shared plan cache (config-built models only).
+    pub fn plan_cache(&self) -> Option<&Arc<crate::plan::PlanCache>> {
+        self.mlp.plan_cache()
+    }
+
+    /// Re-size the worker-thread ceiling for the model's cached plans
+    /// (no-op for explicit-layer models). Called by the load-aware router.
+    pub fn set_threads(&self, threads: usize) {
+        self.mlp.set_threads(threads);
     }
 
     /// Attach an XLA executor (enables `Backend::Xla` and cross-checks).
@@ -162,6 +175,7 @@ impl Engine {
         let result = self.infer_matrix(&x);
         let compute_us = t0.elapsed().as_micros() as u64;
         self.metrics.compute_latency.record(compute_us);
+        self.metrics.note_compute(compute_us);
         match result {
             Ok(y) => {
                 for (r, req) in valid.into_iter().enumerate() {
@@ -213,7 +227,7 @@ mod tests {
             r#"{"name":"t","dims":[16,32,8],"sparsity":0.25,"seed":3}"#,
         )
         .unwrap();
-        Engine::from_config(&cfg, &crate::plan::Planner::new()).unwrap()
+        Engine::from_config(&cfg, &Arc::new(crate::plan::Planner::new())).unwrap()
     }
 
     #[test]

@@ -1,0 +1,223 @@
+//! Load-aware control: derives per-model `max_batch` and worker-thread
+//! targets from observed traffic instead of static config.
+//!
+//! Signals (all maintained by the batcher/engine in [`Metrics`]):
+//! - arrival rate (EWMA of inter-arrival gaps),
+//! - current queue depth,
+//! - mean batch compute latency.
+//!
+//! Policy, kept deliberately simple and fully unit-testable:
+//! - **Batch size** follows Little's law: the number of arrivals expected
+//!   within the queueing-latency budget (`target_queue_us`) is the largest
+//!   batch the batcher can close without blowing that budget. Growing M is
+//!   free for these kernels (paper Fig 8), so we take every row the budget
+//!   allows.
+//! - **Threads** follow compute pressure: if one batch takes longer to
+//!   compute than the gap between batches, the loop falls behind — fan
+//!   out until a batch drains before the next one fills. Thread targets
+//!   snap to powers of two so the plan cache only ever materializes a
+//!   handful of (bucket, threads) keys.
+//! - A queue deeper than twice the batch ceiling means we are already
+//!   behind regardless of what the averages claim — go maximally wide.
+
+use crate::coordinator::metrics::Metrics;
+use std::sync::atomic::Ordering;
+
+/// Controller limits and targets.
+#[derive(Debug, Clone)]
+pub struct LoadControlConfig {
+    /// Queueing-latency budget the batcher may spend coalescing rows (µs).
+    pub target_queue_us: u64,
+    /// Lower bound for the advised batch ceiling.
+    pub min_batch: usize,
+    /// Upper bound for the advised batch ceiling (e.g. the largest
+    /// compiled bucket, or a memory bound).
+    pub max_batch: usize,
+    /// Upper bound for the advised worker-thread count.
+    pub max_threads: usize,
+    /// Re-advise cadence, in executed batches.
+    pub adjust_every_batches: u64,
+}
+
+impl Default for LoadControlConfig {
+    fn default() -> Self {
+        LoadControlConfig {
+            target_queue_us: 2000,
+            min_batch: 1,
+            max_batch: 64,
+            max_threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+            adjust_every_batches: 16,
+        }
+    }
+}
+
+/// One piece of controller output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Advice {
+    pub max_batch: usize,
+    pub threads: usize,
+}
+
+/// Pure-function load controller (state lives in [`Metrics`]).
+pub struct LoadController {
+    cfg: LoadControlConfig,
+}
+
+impl LoadController {
+    pub fn new(cfg: LoadControlConfig) -> LoadController {
+        LoadController {
+            cfg: LoadControlConfig {
+                min_batch: cfg.min_batch.max(1),
+                max_batch: cfg.max_batch.max(cfg.min_batch.max(1)),
+                max_threads: cfg.max_threads.max(1),
+                adjust_every_batches: cfg.adjust_every_batches.max(1),
+                ..cfg
+            },
+        }
+    }
+
+    pub fn cfg(&self) -> &LoadControlConfig {
+        &self.cfg
+    }
+
+    /// Advise batch/thread targets from raw signals.
+    pub fn advise(
+        &self,
+        queue_depth: usize,
+        arrival_rps: f64,
+        mean_compute_us: f64,
+    ) -> Advice {
+        // Little's law: arrivals expected inside the queueing budget.
+        let expected =
+            (arrival_rps * self.cfg.target_queue_us as f64 / 1e6).ceil() as usize;
+        // Whatever is already queued should also ride the next batch (it
+        // has waited its share of the budget), up to the ceiling.
+        let max_batch = expected
+            .max(queue_depth)
+            .clamp(self.cfg.min_batch, self.cfg.max_batch);
+
+        // Compute pressure: batch compute time vs the time one batch takes
+        // to fill. Pressure > 1 means the consumer loop cannot keep up
+        // single-threaded; each doubling of workers roughly halves the
+        // batch compute time (row partitioning is embarrassingly parallel).
+        let threads = if queue_depth > 2 * max_batch {
+            self.cfg.max_threads
+        } else if arrival_rps > 0.0 && mean_compute_us > 0.0 {
+            let batch_fill_us = max_batch as f64 * 1e6 / arrival_rps;
+            let pressure = mean_compute_us / batch_fill_us.max(1.0);
+            let mut t = 1usize;
+            while (t as f64) < pressure && t < self.cfg.max_threads {
+                t *= 2;
+            }
+            t.min(self.cfg.max_threads)
+        } else {
+            1
+        };
+        Advice { max_batch, threads }
+    }
+
+    /// Advise from a model's live metrics. Uses the compute-latency EWMA
+    /// (not the lifetime mean) so thread advice tracks load *shifts*: an
+    /// hour of tiny batches must not mask a sudden move to heavy ones.
+    pub fn advise_from(&self, metrics: &Metrics) -> Advice {
+        self.advise(
+            metrics.queue_depth.load(Ordering::Relaxed) as usize,
+            metrics.arrival_rate_rps(),
+            metrics.compute_ewma_us(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn controller() -> LoadController {
+        LoadController::new(LoadControlConfig {
+            target_queue_us: 2000,
+            min_batch: 1,
+            max_batch: 64,
+            max_threads: 8,
+            adjust_every_batches: 16,
+        })
+    }
+
+    #[test]
+    fn idle_traffic_gets_minimum_batch_and_one_thread() {
+        let c = controller();
+        let a = c.advise(0, 0.0, 0.0);
+        assert_eq!(a, Advice { max_batch: 1, threads: 1 });
+        // A trickle (10 req/s, fast compute) stays small and sequential.
+        let a = c.advise(0, 10.0, 50.0);
+        assert_eq!(a.max_batch, 1);
+        assert_eq!(a.threads, 1);
+    }
+
+    #[test]
+    fn heavy_arrivals_grow_the_batch_to_the_cap() {
+        let c = controller();
+        // 100k req/s × 2 ms budget = 200 expected rows → clamped to 64.
+        let a = c.advise(0, 100_000.0, 100.0);
+        assert_eq!(a.max_batch, 64);
+        // Moderate load lands between the bounds.
+        let a = c.advise(0, 4_000.0, 10.0);
+        assert_eq!(a.max_batch, 8, "4k rps × 2ms = 8 rows");
+    }
+
+    #[test]
+    fn queued_rows_ride_the_next_batch() {
+        let c = controller();
+        let a = c.advise(24, 100.0, 10.0);
+        assert_eq!(a.max_batch, 24, "existing queue sets the floor");
+    }
+
+    #[test]
+    fn compute_pressure_fans_threads_out_in_pow2_steps() {
+        let c = controller();
+        // Batch of 8 fills in 2 ms; compute takes 7 ms → pressure 3.5 →
+        // 4 threads.
+        let a = c.advise(0, 4_000.0, 7_000.0);
+        assert_eq!(a.max_batch, 8);
+        assert_eq!(a.threads, 4);
+        // Light compute stays sequential.
+        let a = c.advise(0, 4_000.0, 100.0);
+        assert_eq!(a.threads, 1);
+        // Absurd pressure clamps at the ceiling.
+        let a = c.advise(0, 4_000.0, 10_000_000.0);
+        assert_eq!(a.threads, 8);
+    }
+
+    #[test]
+    fn deep_queue_forces_max_width() {
+        let c = controller();
+        // Depth 40 > 2 × advised batch? advised batch = max(1, 40) = 40,
+        // 40 is not > 80 → normal path. Use a tiny cap to trigger.
+        let tight = LoadController::new(LoadControlConfig {
+            max_batch: 8,
+            max_threads: 8,
+            ..LoadControlConfig::default()
+        });
+        let a = tight.advise(40, 10.0, 10.0);
+        assert_eq!(a.max_batch, 8);
+        assert_eq!(a.threads, 8, "deep backlog → all workers");
+    }
+
+    #[test]
+    fn config_bounds_are_sanitized() {
+        let c = LoadController::new(LoadControlConfig {
+            min_batch: 0,
+            max_batch: 0,
+            max_threads: 0,
+            adjust_every_batches: 0,
+            ..LoadControlConfig::default()
+        });
+        assert_eq!(c.cfg().min_batch, 1);
+        assert_eq!(c.cfg().max_batch, 1);
+        assert_eq!(c.cfg().max_threads, 1);
+        assert_eq!(c.cfg().adjust_every_batches, 1);
+        let a = c.advise(100, 1e9, 1e9);
+        assert_eq!(a, Advice { max_batch: 1, threads: 1 });
+    }
+}

@@ -1,8 +1,20 @@
-//! Serving metrics: counters plus a lock-free log-bucketed latency
-//! histogram with percentile estimation.
+//! Serving metrics: counters, a lock-free log-bucketed latency histogram
+//! with percentile estimation, and the load signals the adaptive
+//! coordinator steers by (queue-depth gauge + arrival-rate EWMA).
 
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Microseconds since the first metrics observation in this process
+/// (monotonic; only differences are ever used). Offset by +1 so 0 stays
+/// available as the "never observed" sentinel even for the very first
+/// call, which initializes the epoch and would otherwise read 0.
+fn now_us() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64 + 1
+}
 
 /// Number of log2 latency buckets (1 µs .. ~17 min).
 const BUCKETS: usize = 30;
@@ -71,6 +83,24 @@ pub struct Metrics {
     pub e2e_latency: LatencyHistogram,
     pub queue_latency: LatencyHistogram,
     pub compute_latency: LatencyHistogram,
+    /// Last observed batcher queue depth (gauge, set by the batcher).
+    pub queue_depth: AtomicU64,
+    /// High-water mark of the queue depth.
+    pub peak_queue_depth: AtomicU64,
+    /// Worker threads the autoscaler currently targets (gauge).
+    pub threads_in_use: AtomicU64,
+    /// `max_batch` the autoscaler currently targets (gauge).
+    pub max_batch_in_use: AtomicU64,
+    /// Times the load controller re-advised this model (counter).
+    pub autoscale_adjustments: AtomicU64,
+    /// EWMA of the inter-arrival gap in µs (0 = fewer than two arrivals).
+    ewma_interarrival_us: AtomicU64,
+    /// Timestamp of the last arrival in µs since the metrics epoch.
+    last_arrival_us: AtomicU64,
+    /// EWMA of batch compute latency in µs (0 = no batches yet). Unlike
+    /// `compute_latency`'s lifetime mean, this tracks load *shifts* — the
+    /// signal the autoscaler steers threads by.
+    ewma_compute_us: AtomicU64,
 }
 
 impl Metrics {
@@ -81,6 +111,59 @@ impl Metrics {
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_rows.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    /// Note one request arrival: maintains the inter-arrival EWMA the
+    /// load controller derives the arrival rate from. Called by the
+    /// batcher on every accepted submit.
+    pub fn note_arrival(&self) {
+        let now = now_us();
+        let prev = self.last_arrival_us.swap(now, Ordering::Relaxed);
+        if prev == 0 || now <= prev {
+            return; // first arrival, or same-µs burst: no usable gap
+        }
+        let gap = now - prev;
+        let old = self.ewma_interarrival_us.load(Ordering::Relaxed);
+        // α = 1/8: smooth enough to ride out bursts, fast enough to track
+        // load shifts within a few dozen requests. Benign data race: a
+        // lost update just weights a neighbouring sample instead.
+        let new = if old == 0 { gap } else { (old * 7 + gap) / 8 };
+        self.ewma_interarrival_us.store(new.max(1), Ordering::Relaxed);
+    }
+
+    /// Update the queue-depth gauge (and its high-water mark).
+    pub fn set_queue_depth(&self, depth: usize) {
+        self.queue_depth.store(depth as u64, Ordering::Relaxed);
+        self.peak_queue_depth
+            .fetch_max(depth as u64, Ordering::Relaxed);
+    }
+
+    /// Note one batch's compute latency (EWMA companion to the
+    /// `compute_latency` histogram; same α as the arrival EWMA).
+    pub fn note_compute(&self, us: u64) {
+        let old = self.ewma_compute_us.load(Ordering::Relaxed);
+        let new = if old == 0 { us.max(1) } else { (old * 7 + us) / 8 };
+        self.ewma_compute_us.store(new.max(1), Ordering::Relaxed);
+    }
+
+    /// Smoothed batch compute latency in µs (0.0 until a batch ran).
+    pub fn compute_ewma_us(&self) -> f64 {
+        self.ewma_compute_us.load(Ordering::Relaxed) as f64
+    }
+
+    /// Smoothed request arrival rate in requests/second (0.0 until two
+    /// arrivals have been observed). The EWMA only updates on arrivals, so
+    /// the current silence is folded in: once the gap since the last
+    /// arrival exceeds the EWMA, the reported rate decays as 1/elapsed —
+    /// a burst that ended does not pin the rate high forever.
+    pub fn arrival_rate_rps(&self) -> f64 {
+        let ewma = self.ewma_interarrival_us.load(Ordering::Relaxed);
+        if ewma == 0 {
+            return 0.0;
+        }
+        let last = self.last_arrival_us.load(Ordering::Relaxed);
+        let silence = now_us().saturating_sub(last);
+        1e6 / ewma.max(silence) as f64
     }
 
     /// Mean rows per executed batch.
@@ -128,6 +211,27 @@ impl Metrics {
                 "compute_us_mean",
                 Json::num(self.compute_latency.mean_us()),
             ),
+            (
+                "queue_depth",
+                Json::num(self.queue_depth.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "peak_queue_depth",
+                Json::num(self.peak_queue_depth.load(Ordering::Relaxed) as f64),
+            ),
+            ("arrival_rps", Json::num(self.arrival_rate_rps())),
+            (
+                "threads",
+                Json::num(self.threads_in_use.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "max_batch",
+                Json::num(self.max_batch_in_use.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "autoscale_adjustments",
+                Json::num(self.autoscale_adjustments.load(Ordering::Relaxed) as f64),
+            ),
         ])
     }
 }
@@ -168,6 +272,57 @@ mod tests {
         }
         let p = h.percentile_us(50.0);
         assert!(p >= 500 && p <= 1024, "p50 {p}");
+    }
+
+    #[test]
+    fn arrival_ewma_tracks_rate() {
+        let m = Metrics::new();
+        assert_eq!(m.arrival_rate_rps(), 0.0, "no arrivals yet");
+        m.note_arrival();
+        assert_eq!(m.arrival_rate_rps(), 0.0, "one arrival has no gap");
+        for _ in 0..5 {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            m.note_arrival();
+        }
+        let rps = m.arrival_rate_rps();
+        // ~2 ms gaps → on the order of 500 req/s; allow wide slack for
+        // scheduler jitter, but it must be a plausible finite rate.
+        assert!(rps > 1.0 && rps < 100_000.0, "rps {rps}");
+        // After traffic stops the reported rate decays with the silence:
+        // ≥30 ms without arrivals bounds the rate at 1e6/30000 ≈ 33 rps
+        // no matter what the EWMA held.
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let decayed = m.arrival_rate_rps();
+        assert!(decayed <= 35.0, "rate must decay in silence: {decayed}");
+    }
+
+    #[test]
+    fn compute_ewma_tracks_shifts() {
+        let m = Metrics::new();
+        assert_eq!(m.compute_ewma_us(), 0.0);
+        for _ in 0..64 {
+            m.note_compute(100);
+        }
+        let slow_start = m.compute_ewma_us();
+        assert!((90.0..=110.0).contains(&slow_start), "{slow_start}");
+        for _ in 0..64 {
+            m.note_compute(10_000);
+        }
+        assert!(
+            m.compute_ewma_us() > 5_000.0,
+            "EWMA must follow a load shift, got {}",
+            m.compute_ewma_us()
+        );
+    }
+
+    #[test]
+    fn queue_depth_gauge_tracks_peak() {
+        let m = Metrics::new();
+        m.set_queue_depth(3);
+        m.set_queue_depth(9);
+        m.set_queue_depth(1);
+        assert_eq!(m.queue_depth.load(Ordering::Relaxed), 1);
+        assert_eq!(m.peak_queue_depth.load(Ordering::Relaxed), 9);
     }
 
     #[test]

@@ -7,18 +7,26 @@
 //! batching is pure throughput win), a router picks the backend (native
 //! Rust kernels or the PJRT-compiled JAX/Pallas artifact), and an engine
 //! executes the ternary FFN. Python never appears on this path.
+//!
+//! The stack is load-aware: the batcher feeds queue depth and arrival
+//! rate into [`Metrics`], and an autoscaled model's batch loop
+//! ([`Router::register_autoscaled`]) periodically turns those signals into
+//! new `max_batch` / thread-fan-out targets via [`load::LoadController`],
+//! applied to the live batcher and the model's plan cache.
 
 pub mod request;
 pub mod metrics;
 pub mod batcher;
 pub mod engine;
+pub mod load;
 pub mod router;
 pub mod server;
 pub mod loadgen;
 pub mod trace;
 
-pub use batcher::{BatchPolicy, DynamicBatcher};
+pub use batcher::{BatchPolicy, DynamicBatcher, SubmitError};
 pub use engine::{Backend, Engine};
+pub use load::{Advice, LoadControlConfig, LoadController};
 pub use loadgen::{LoadGenReport, LoadGenerator};
 pub use metrics::Metrics;
 pub use request::{InferenceRequest, InferenceResponse};

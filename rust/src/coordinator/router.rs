@@ -1,10 +1,18 @@
 //! Router: maps model names to engines and owns each model's batcher +
 //! batch-loop thread. This is the coordinator's composition root.
+//!
+//! Registration comes in two flavours: [`Router::register`] with a fixed
+//! [`BatchPolicy`], and [`Router::register_autoscaled`], where the batch
+//! loop periodically consults a [`LoadController`] and re-sizes the live
+//! `max_batch` and the model's plan-cache thread ceiling from observed
+//! queue depth, arrival rate and compute latency.
 
-use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher};
+use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher, SubmitError};
 use crate::coordinator::engine::Engine;
+use crate::coordinator::load::{LoadControlConfig, LoadController};
 use crate::coordinator::request::{InferenceRequest, InferenceResponse};
 use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -36,18 +44,72 @@ impl Router {
         }
     }
 
-    /// Register an engine and start its batch loop.
+    /// Register an engine and start its batch loop with a fixed policy.
     pub fn register(&mut self, engine: Engine, policy: BatchPolicy) {
+        self.register_inner(engine, policy, None);
+    }
+
+    /// Register an engine whose batch ceiling and thread fan-out track
+    /// observed load: every `control.adjust_every_batches` executed
+    /// batches, the loop re-advises from the model's metrics and applies
+    /// the result to the live batcher and plan cache.
+    pub fn register_autoscaled(
+        &mut self,
+        engine: Engine,
+        policy: BatchPolicy,
+        control: LoadControlConfig,
+    ) {
+        self.register_inner(engine, policy, Some(LoadController::new(control)));
+    }
+
+    fn register_inner(
+        &mut self,
+        engine: Engine,
+        policy: BatchPolicy,
+        controller: Option<LoadController>,
+    ) {
         let name = engine.name.clone();
         let engine = Arc::new(engine);
-        let batcher = Arc::new(DynamicBatcher::new(policy));
+        let batcher = Arc::new(
+            DynamicBatcher::new(policy).with_metrics(Arc::clone(&engine.metrics)),
+        );
+        engine
+            .metrics
+            .max_batch_in_use
+            .store(policy.max_batch as u64, Ordering::Relaxed);
+        let initial_threads = engine.plan_cache().map(|c| c.threads()).unwrap_or(1);
+        engine
+            .metrics
+            .threads_in_use
+            .store(initial_threads as u64, Ordering::Relaxed);
         let loop_engine = Arc::clone(&engine);
         let loop_batcher = Arc::clone(&batcher);
         let handle = std::thread::Builder::new()
             .name(format!("stgemm-batch-{name}"))
             .spawn(move || {
+                let mut executed: u64 = 0;
                 while let Some(batch) = loop_batcher.next_batch() {
                     loop_engine.run_batch(batch);
+                    executed += 1;
+                    if let Some(ctl) = &controller {
+                        if executed % ctl.cfg().adjust_every_batches == 0 {
+                            let advice = ctl.advise_from(&loop_engine.metrics);
+                            loop_batcher.set_max_batch(advice.max_batch);
+                            loop_engine.set_threads(advice.threads);
+                            loop_engine
+                                .metrics
+                                .max_batch_in_use
+                                .store(advice.max_batch as u64, Ordering::Relaxed);
+                            loop_engine
+                                .metrics
+                                .threads_in_use
+                                .store(advice.threads as u64, Ordering::Relaxed);
+                            loop_engine
+                                .metrics
+                                .autoscale_adjustments
+                                .fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
                 }
             })
             .expect("spawn batch loop");
@@ -88,10 +150,17 @@ impl Router {
             .requests
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let (req, rx) = InferenceRequest::new(id, model, input);
-        entry
-            .batcher
-            .submit(req)
-            .map_err(|_| "model is shutting down".to_string())?;
+        entry.batcher.submit(req).map_err(|e| {
+            entry
+                .engine
+                .metrics
+                .errors
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            match e {
+                SubmitError::Closed(_) => "model is shutting down".to_string(),
+                SubmitError::EmptyInput(_) => "empty input".to_string(),
+            }
+        })?;
         Ok(rx)
     }
 
@@ -130,6 +199,7 @@ impl Drop for Router {
 mod tests {
     use super::*;
     use crate::model::{ModelConfig, TernaryMlp};
+    use crate::plan::Planner;
 
     fn router() -> Router {
         let cfg = ModelConfig::from_json(
@@ -164,6 +234,18 @@ mod tests {
     }
 
     #[test]
+    fn empty_input_rejected_before_batching() {
+        let r = router();
+        let err = r.submit("m1", vec![]).unwrap_err();
+        assert!(err.contains("empty input"), "{err}");
+        let e = r.engine("m1").unwrap();
+        assert_eq!(
+            e.metrics.errors.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+    }
+
+    #[test]
     fn many_concurrent_requests_all_answered() {
         let r = Arc::new(router());
         let handles: Vec<_> = (0..16)
@@ -187,6 +269,55 @@ mod tests {
         // should have formed (not a hard guarantee, but overwhelmingly
         // likely; tolerate zero to avoid flakes on slow machines).
         let _ = batched;
+    }
+
+    #[test]
+    fn autoscaled_model_serves_and_adjusts() {
+        let cfg = ModelConfig::from_json(
+            r#"{"name":"a1","dims":[8,16,4],"sparsity":0.5,"seed":2}"#,
+        )
+        .unwrap();
+        let engine =
+            Engine::from_config(&cfg, &Arc::new(Planner::new())).unwrap();
+        let mut r = Router::new();
+        r.register_autoscaled(
+            engine,
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_micros(200),
+            },
+            LoadControlConfig {
+                max_batch: 16,
+                max_threads: 4,
+                adjust_every_batches: 1, // advise after every batch
+                ..LoadControlConfig::default()
+            },
+        );
+        let r = Arc::new(r);
+        let handles: Vec<_> = (0..24)
+            .map(|_| {
+                let r = Arc::clone(&r);
+                std::thread::spawn(move || {
+                    r.infer_blocking("a1", vec![0.1; 8], Duration::from_secs(10))
+                        .unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert!(h.join().unwrap().output.is_ok());
+        }
+        // 24 requests with a batch cap of 16 forces ≥ 2 batches, and the
+        // controller advises after every one — so by the time the last
+        // response (of a later batch) arrived, at least one adjustment
+        // must have been recorded. Gauges are seeded at registration, so
+        // only this counter proves the advise loop actually ran.
+        let m = &r.engine("a1").unwrap().metrics;
+        assert!(
+            m.autoscale_adjustments.load(Ordering::Relaxed) >= 1,
+            "load controller never re-advised"
+        );
+        assert!(m.max_batch_in_use.load(Ordering::Relaxed) >= 1);
+        assert!(m.threads_in_use.load(Ordering::Relaxed) >= 1);
     }
 
     #[test]

@@ -188,6 +188,11 @@ fn handle_infer(
         }
         None => return respond(stream, 400, &err_json("missing 'input' array")),
     };
+    if input.is_empty() {
+        // The batcher would reject it anyway (zero-row requests never
+        // reach the engine); answer with a client error, not a 503.
+        return respond(stream, 400, &err_json("empty input"));
+    }
     match router.infer_blocking(&model, input, timeout) {
         Ok(resp) => match resp.output {
             Ok(out) => {
@@ -345,6 +350,13 @@ mod tests {
                 .unwrap()
                 .0,
             422
+        );
+        // zero-row request → client error before batching
+        assert_eq!(
+            http_request(&a, "POST", "/infer", r#"{"model":"m1","input":[]}"#)
+                .unwrap()
+                .0,
+            400
         );
         assert_eq!(http_request(&a, "GET", "/nope", "").unwrap().0, 404);
     }

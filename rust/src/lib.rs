@@ -29,10 +29,17 @@
 //!   [`plan::Planner`] turns weights + hints into a [`plan::GemmPlan`]
 //!   (kernel selected via the autotune table or paper heuristics, epilogue
 //!   fused where possible, scratch preallocated, rows partitioned across a
-//!   thread pool with bitwise-sequential results).
+//!   thread pool with bitwise-sequential results). On the serving path,
+//!   plans live in the M-bucketed [`plan::PlanCache`]: one plan per
+//!   (layer, batch-size bucket, thread count), built on first traffic and
+//!   reused forever, with an **online top-2 race** that times the two
+//!   paper-candidate kernels on the first real batch of an untuned
+//!   (K, sparsity) class and locks the winner into the shared table.
 //! - [`autotune`] — the unroll-factor / block-size grid search behind the
-//!   paper's Figures 2–4, and the persisted `TuningTable` the planner
-//!   consults.
+//!   paper's Figures 2–4, the persisted `TuningTable` the planner
+//!   consults, and [`autotune::sweep_model`] (`stgemm autotune sweep`),
+//!   which fills the table for every layer × M-bucket of a model config
+//!   in one run.
 //! - [`perf`] — cycle timers, the paper's flop cost model
 //!   `C = M·N·(1+sK)`, operational intensity and roofline estimates.
 //! - [`model`] — ternary MLP / FFN built from planned linear layers; the
@@ -41,8 +48,13 @@
 //! - [`runtime`] — PJRT client wrapper that loads the JAX/Pallas AOT
 //!   artifacts (HLO text) produced by `python/compile/aot.py`.
 //! - [`coordinator`] — the L3 serving stack: dynamic batcher, backend
-//!   router, inference engine (serving batches through plans), HTTP server,
-//!   metrics and load generator.
+//!   router, inference engine (serving batches through cached plans), HTTP
+//!   server, metrics and load generator. The stack is **load-aware**: the
+//!   batcher reports queue depth and an arrival-rate EWMA into
+//!   [`coordinator::Metrics`], and an autoscaled model's batch loop
+//!   ([`coordinator::Router::register_autoscaled`]) re-sizes the live
+//!   `max_batch` and the plan cache's thread ceiling from those signals
+//!   ([`coordinator::LoadController`]).
 //! - [`bench`] — the measurement harness (timing the planned path) and
 //!   per-figure experiment drivers.
 //! - [`util`] — substrates built in-repo because the environment is offline:
@@ -82,8 +94,11 @@
 //! ```
 //!
 //! Benches and ablations pin kernels explicitly via
-//! [`plan::PlanHints::with_kernel`]; serving loads a measured table with
-//! `Planner::from_table_file` (`stgemm serve --tuning table.json`).
+//! [`plan::PlanHints::with_kernel`] (or a config's `kernel` key — the
+//! documented escape hatch); serving loads a measured table with
+//! `Planner::from_table_file` (`stgemm serve --tuning table.json`), fills
+//! it for a whole model with `stgemm autotune sweep --save`, and re-tunes
+//! in the background with `serve --retune-secs N`.
 
 pub mod util;
 pub mod tensor;

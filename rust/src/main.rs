@@ -12,12 +12,14 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use stgemm::autotune::{unroll_grid_search, CacheModel, TuningTable};
+use stgemm::autotune::{sweep_model, unroll_grid_search, CacheModel, TuningTable};
 use stgemm::bench::figures;
 use stgemm::bench::harness::BenchScale;
 use stgemm::bench::report::{write_csv, Table};
 use stgemm::coordinator::server::{Server, ServerConfig};
-use stgemm::coordinator::{Backend, BatchPolicy, Engine, LoadGenerator, Router};
+use stgemm::coordinator::{
+    Backend, BatchPolicy, Engine, LoadControlConfig, LoadGenerator, Router,
+};
 use stgemm::model::{ModelConfig, TernaryMlp};
 use stgemm::perf::timer::CycleTimer;
 use stgemm::plan::{PlanHints, Planner};
@@ -56,11 +58,20 @@ USAGE: stgemm <subcommand> [options]
   serve      --model <cfg.json> --addr 127.0.0.1:9000 --backend native|xla
              [--tuning <table.json>] [--threads N] [--artifacts <dir>]
              [--max-batch 8] [--max-wait-us 2000]
+             [--no-autoscale] [--max-batch-cap 64] [--max-threads N]
+             [--target-queue-us 2000] [--retune-secs N]
+             (load-aware by default: max_batch and threads track observed
+              queue depth / arrival rate; --retune-secs re-sweeps the
+              tuning table in the background every N seconds)
   bench      --figure fig2|fig6|fig8|fig9|fig10|fig11|headline|
                       ablation_compressed|ablation_inverted|all [--csv]
   autotune   [--m 32] [--k 4096] [--n 1024] [--sparsity 0.25]
              [--save <table.json>]  (measure registry kernels, persist the
                                      winner for the planner to consult)
+  autotune sweep
+             [--model <cfg.json>] [--buckets 1,8] [--reps 2]
+             [--save <table.json>]  (fill the table for every layer ×
+                                     M-bucket of a model config in one run)
   quantize   --dims 256,1024,256 --seed 42 --out model.stw
   selftest   [--artifacts <dir>] [--model ffn_tiny]
   loadgen    --addr <host:port> --model <name> --d-in <n>
@@ -91,11 +102,16 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     };
     // Kernel selection: measured tuning table when given, paper heuristics
+    // (refined by the plan cache's online top-2 race on first traffic)
     // otherwise; the config's `kernel` key stays an explicit override.
-    let planner = match args.get("tuning") {
+    let have_table = args.get("tuning").is_some();
+    let planner = Arc::new(match args.get("tuning") {
         Some(path) => match Planner::from_table_file(path) {
             Ok(p) => {
-                println!("[serve] tuning table: {path} ({} classes)", p.table().len());
+                println!(
+                    "[serve] tuning table: {path} ({} classes)",
+                    p.tuned_classes()
+                );
                 p
             }
             Err(e) => {
@@ -104,7 +120,7 @@ fn cmd_serve(args: &Args) -> i32 {
             }
         },
         None => Planner::new(),
-    };
+    });
     let mut engine = match Engine::from_config(&cfg, &planner) {
         Ok(e) => e,
         Err(e) => {
@@ -128,14 +144,97 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     }
     let engine = engine.with_backend(backend);
+    let policy = BatchPolicy {
+        max_batch: args.usize("max-batch", 8),
+        max_wait: Duration::from_micros(args.u64("max-wait-us", 2000)),
+    };
     let mut router = Router::new();
-    router.register(
-        engine,
-        BatchPolicy {
-            max_batch: args.usize("max-batch", 8),
-            max_wait: Duration::from_micros(args.u64("max-wait-us", 2000)),
-        },
-    );
+    // Threads the plan cache may be asked for: the static config when
+    // autoscaling is off, else every step up to the controller's ceiling.
+    let warm_threads;
+    if args.has("no-autoscale") {
+        warm_threads = cfg.threads;
+        router.register(engine, policy);
+    } else {
+        let default_threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        let control = LoadControlConfig {
+            target_queue_us: args.u64("target-queue-us", 2000),
+            min_batch: 1,
+            max_batch: args.usize("max-batch-cap", 64).max(policy.max_batch),
+            max_threads: args.usize("max-threads", default_threads),
+            adjust_every_batches: 16,
+        };
+        println!(
+            "[serve] autoscale: batch ≤ {}, threads ≤ {}, queue budget {} µs",
+            control.max_batch, control.max_threads, control.target_queue_us
+        );
+        warm_threads = control.max_threads;
+        router.register_autoscaled(engine, policy, control);
+    }
+    // Warm the configured buckets at every thread step the coordinator
+    // can use — but only for layers whose kernel choice is settled (an
+    // explicit override or a tuning-table entry). Untuned classes stay
+    // cold so their first real traffic races the top-2 candidates.
+    if let Some(cache) = router.engine(&cfg.name).and_then(|e| e.plan_cache()) {
+        let steps = if args.has("no-autoscale") {
+            vec![warm_threads] // fixed ceiling: only one step is reachable
+        } else {
+            stgemm::plan::PlanCache::controller_thread_steps(warm_threads)
+        };
+        if let Err(e) = cache.warm_settled(&cfg.batch_buckets, &steps) {
+            eprintln!("error warming plan cache: {e}");
+            return 1;
+        }
+        if have_table {
+            println!(
+                "[serve] plan cache warmed: buckets {:?} × thread steps {steps:?} \
+                 (tuned/pinned layers only)",
+                cfg.batch_buckets
+            );
+        }
+    }
+    // Background re-tune: periodically re-sweep every layer × bucket on a
+    // snapshot of the live table, install the result, and invalidate the
+    // plan cache so the next batches pick up the fresh winners.
+    let retune_secs = args.u64("retune-secs", 0);
+    if retune_secs > 0 {
+        let planner_bg = Arc::clone(&planner);
+        let cfg_bg = cfg.clone();
+        let cache_bg = router
+            .engine(&cfg.name)
+            .and_then(|e| e.plan_cache().cloned());
+        std::thread::Builder::new()
+            .name("stgemm-retune".into())
+            .spawn(move || loop {
+                std::thread::sleep(Duration::from_secs(retune_secs));
+                let mut table = planner_bg.table_snapshot();
+                let timer = CycleTimer::new(1, 2);
+                let report = sweep_model(
+                    &cfg_bg,
+                    &cfg_bg.batch_buckets,
+                    stgemm::kernels::kernel_names(),
+                    &timer,
+                    &mut table,
+                );
+                planner_bg.install_table(table);
+                // Swap fresh plans in off the hot path; traffic always
+                // finds a plan, and only changed winners pay a format
+                // build.
+                if let Some(cache) = &cache_bg {
+                    if let Err(e) = cache.rebuild() {
+                        eprintln!("[serve] re-tune rebuild failed: {e}");
+                    }
+                }
+                println!(
+                    "[serve] background re-tune: {} class(es) refreshed",
+                    report.winners.len()
+                );
+            })
+            .expect("spawn retune thread");
+        println!("[serve] background re-tune every {retune_secs}s");
+    }
     let router = Arc::new(router);
     let server = Server::start(
         Arc::clone(&router),
@@ -235,6 +334,9 @@ fn cmd_bench(args: &Args) -> i32 {
 }
 
 fn cmd_autotune(args: &Args) -> i32 {
+    if args.positional.first().map(String::as_str) == Some("sweep") {
+        return cmd_autotune_sweep(args);
+    }
     let m = args.usize("m", 32);
     let k = args.usize("k", 4096);
     let n = args.usize("n", 1024);
@@ -280,6 +382,79 @@ fn cmd_autotune(args: &Args) -> i32 {
             "[autotune] class (K={k}, s={s}): winner {} at {:.3} flops/cycle → {path} ({} classes)",
             entry.kernel,
             entry.flops_per_cycle,
+            table.len()
+        );
+    }
+    0
+}
+
+/// `stgemm autotune sweep`: one run that measures every registry kernel
+/// for every distinct layer class of a model config, at every batch
+/// bucket, and persists the winners where `serve --tuning` finds them.
+fn cmd_autotune_sweep(args: &Args) -> i32 {
+    let cfg = match args.get("model") {
+        Some(path) => match ModelConfig::from_file(path) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        },
+        None => {
+            eprintln!("[autotune] no --model given; sweeping the default demo config");
+            ModelConfig::default()
+        }
+    };
+    let buckets = args.usize_list("buckets", &cfg.batch_buckets);
+    let reps = args.usize("reps", 2).max(1);
+    let timer = CycleTimer::new(1, reps);
+    // Extend an existing table when --save points at one; a fresh file
+    // starts empty. An existing-but-unreadable table is an error (silently
+    // clobbering measured entries is worse).
+    let mut table = match args.get("save") {
+        Some(path) if std::path::Path::new(path).exists() => {
+            match TuningTable::load(path) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("error: existing tuning table {path} failed to load: {e}");
+                    return 1;
+                }
+            }
+        }
+        _ => TuningTable::new(),
+    };
+    println!(
+        "[autotune] sweep: model '{}' ({} layer(s)), buckets {:?}, {} kernel(s)",
+        cfg.name,
+        cfg.dims.len() - 1,
+        buckets,
+        stgemm::kernels::kernel_names().len()
+    );
+    let report = sweep_model(
+        &cfg,
+        &buckets,
+        stgemm::kernels::kernel_names(),
+        &timer,
+        &mut table,
+    );
+    for (class, entry) in &report.winners {
+        println!(
+            "  class k{}_s{}: winner {} at {:.3} flops/cycle (mean over {} bucket(s))",
+            class.k_bucket,
+            class.sparsity_bp,
+            entry.kernel,
+            entry.flops_per_cycle,
+            buckets.len().max(1)
+        );
+    }
+    if let Some(path) = args.get("save") {
+        if let Err(e) = table.save(path) {
+            eprintln!("error saving tuning table: {e}");
+            return 1;
+        }
+        println!(
+            "[autotune] sweep: {} class(es) → {path} ({} total)",
+            report.winners.len(),
             table.len()
         );
     }

@@ -1,20 +1,32 @@
-//! A single ternary linear layer: a [`GemmPlan`] owning the prepared
-//! kernel, bias, optional dequantization scale and optional PReLU.
+//! A single ternary linear layer: bias, optional dequantization scale and
+//! optional PReLU over a planned GEMM — either one pinned [`GemmPlan`]
+//! (the explicit-override escape hatch benches use) or a handle into the
+//! shared M-bucketed [`PlanCache`] (the serving path).
 
-use crate::plan::{Epilogue, GemmPlan, PlanHints, Planner};
+use crate::plan::{Epilogue, GemmPlan, LayerId, LayerSpec, PlanCache, PlanHints, Planner};
 use crate::tensor::Matrix;
 use crate::ternary::TernaryMatrix;
+use std::sync::Arc;
+
+enum Exec {
+    /// One plan, fixed at construction (explicit kernel override or a
+    /// single-shape tool like `selftest`).
+    Pinned(GemmPlan),
+    /// Plans come from the shared cache, keyed by the batch's M-bucket and
+    /// the live thread ceiling.
+    Cached { cache: Arc<PlanCache>, id: LayerId },
+}
 
 /// One `Y = act(scale · (X·W + b))` layer with ternary W, executed through
 /// the planning layer.
 pub struct TernaryLinear {
-    plan: GemmPlan,
+    exec: Exec,
 }
 
 impl TernaryLinear {
     /// Build with the kernel chosen by `planner` (tuning table + paper
-    /// heuristics) and the execution policy in `hints`. This is the
-    /// serving-path constructor: no kernel name required.
+    /// heuristics) and the execution policy in `hints`: a single pinned
+    /// plan, for callers that serve one shape (e.g. `selftest`).
     pub fn planned(
         planner: &Planner,
         w: &TernaryMatrix,
@@ -29,7 +41,30 @@ impl TernaryLinear {
             Epilogue::new(bias, scale, prelu_alpha),
             hints,
         )?;
-        Ok(TernaryLinear { plan })
+        Ok(TernaryLinear { exec: Exec::Pinned(plan) })
+    }
+
+    /// Register the layer in a shared [`PlanCache`]: plans are built
+    /// lazily per (M-bucket, threads), with the cache's online top-2 race
+    /// covering untuned classes. This is the serving-path constructor.
+    /// `kernel` stays the explicit override escape hatch.
+    pub fn cached(
+        cache: &Arc<PlanCache>,
+        w: TernaryMatrix,
+        bias: Vec<f32>,
+        scale: f32,
+        prelu_alpha: Option<f32>,
+        kernel: Option<String>,
+    ) -> Result<TernaryLinear, String> {
+        let mut spec = LayerSpec::new(w, Epilogue::new(bias, scale, prelu_alpha));
+        spec.kernel = kernel;
+        let id = cache.register(spec)?;
+        Ok(TernaryLinear {
+            exec: Exec::Cached {
+                cache: Arc::clone(cache),
+                id,
+            },
+        })
     }
 
     /// Build from dense ternary weights with an **explicit** registry
@@ -56,52 +91,93 @@ impl TernaryLinear {
 
     /// Wrap an already-built plan as a layer.
     pub fn from_plan(plan: GemmPlan) -> TernaryLinear {
-        TernaryLinear { plan }
+        TernaryLinear { exec: Exec::Pinned(plan) }
     }
 
     pub fn k(&self) -> usize {
-        self.plan.k()
+        match &self.exec {
+            Exec::Pinned(p) => p.k(),
+            Exec::Cached { cache, id } => cache.k(*id),
+        }
     }
 
     pub fn n(&self) -> usize {
-        self.plan.n()
+        match &self.exec {
+            Exec::Pinned(p) => p.n(),
+            Exec::Cached { cache, id } => cache.n(*id),
+        }
     }
 
     pub fn nnz(&self) -> usize {
-        self.plan.nnz()
+        match &self.exec {
+            Exec::Pinned(p) => p.nnz(),
+            Exec::Cached { cache, id } => cache.nnz(*id),
+        }
     }
 
-    pub fn kernel_name(&self) -> &str {
-        self.plan.kernel_name()
+    /// The kernel this layer executes with (for cached layers: the current
+    /// selection for small batches; the online race may refine it on first
+    /// traffic in an untuned class).
+    pub fn kernel_name(&self) -> String {
+        match &self.exec {
+            Exec::Pinned(p) => p.kernel_name().to_string(),
+            Exec::Cached { cache, id } => cache.kernel_for(*id, 1),
+        }
     }
 
+    /// Exact format byte size (operational-intensity accounting). For
+    /// cached layers this builds (once) the smallest-bucket plan.
     pub fn format_bytes(&self) -> usize {
-        self.plan.format_bytes()
+        match &self.exec {
+            Exec::Pinned(p) => p.format_bytes(),
+            Exec::Cached { cache, id } => cache
+                .plan_for(*id, 1)
+                .map(|p| p.format_bytes())
+                .unwrap_or(0),
+        }
     }
 
     /// Per-tensor dequantization scale (1.0 = none).
     pub fn scale(&self) -> f32 {
-        self.plan.epilogue().scale
+        match &self.exec {
+            Exec::Pinned(p) => p.epilogue().scale,
+            Exec::Cached { cache, id } => cache.scale(*id),
+        }
     }
 
     /// PReLU slope (`None` = linear output).
     pub fn prelu_alpha(&self) -> Option<f32> {
-        self.plan.epilogue().prelu_alpha
+        match &self.exec {
+            Exec::Pinned(p) => p.epilogue().prelu_alpha,
+            Exec::Cached { cache, id } => cache.prelu_alpha(*id),
+        }
     }
 
-    /// The underlying plan (introspection and direct use).
-    pub fn plan(&self) -> &GemmPlan {
-        &self.plan
+    /// The pinned plan, when this layer was built with one (introspection
+    /// and direct use); `None` for cache-backed layers.
+    pub fn pinned_plan(&self) -> Option<&GemmPlan> {
+        match &self.exec {
+            Exec::Pinned(p) => Some(p),
+            Exec::Cached { .. } => None,
+        }
     }
 
     /// Forward: `y` must be (x.rows × N).
     pub fn forward(&self, x: &Matrix, y: &mut Matrix) {
-        self.plan.run(x, y);
+        match &self.exec {
+            Exec::Pinned(p) => p.run(x, y),
+            Exec::Cached { cache, id } => cache
+                .run(*id, x, y)
+                .expect("registered layer plans must build"),
+        }
     }
 
     /// Paper cost model flops for a batch of `m` rows.
     pub fn flops(&self, m: usize) -> f64 {
-        self.plan.flops(m)
+        match &self.exec {
+            Exec::Pinned(p) => p.flops(m),
+            Exec::Cached { cache, id } => cache.flops(*id, m),
+        }
     }
 }
 
@@ -109,6 +185,7 @@ impl TernaryLinear {
 mod tests {
     use super::*;
     use crate::kernels::dense_oracle;
+    use crate::plan::PlanCacheConfig;
 
     #[test]
     fn forward_matches_oracle_with_scale_and_prelu() {
@@ -140,8 +217,8 @@ mod tests {
             TernaryLinear::new("simd_vertical", &w, bias.clone(), 1.0, Some(0.25)).unwrap();
         let unfused =
             TernaryLinear::new("base_tcsc", &w, bias.clone(), 1.0, Some(0.25)).unwrap();
-        assert!(fused.plan().fused_prelu());
-        assert!(!unfused.plan().fused_prelu());
+        assert!(fused.pinned_plan().unwrap().fused_prelu());
+        assert!(!unfused.pinned_plan().unwrap().fused_prelu());
         let mut yf = Matrix::zeros(4, 16);
         let mut yu = Matrix::zeros(4, 16);
         fused.forward(&x, &mut yf);
@@ -173,6 +250,33 @@ mod tests {
         auto.forward(&x, &mut ya);
         explicit.forward(&x, &mut ye);
         assert_eq!(ya, ye);
+    }
+
+    #[test]
+    fn cached_layer_runs_through_the_plan_cache() {
+        let cache = Arc::new(PlanCache::new(
+            Arc::new(Planner::new()),
+            PlanCacheConfig {
+                threads: 2,
+                online_top2: false,
+                race_reps: 1,
+            },
+        ));
+        let w = TernaryMatrix::random(48, 12, 0.25, 21);
+        let bias = vec![0.2f32; 12];
+        let layer =
+            TernaryLinear::cached(&cache, w.clone(), bias.clone(), 1.0, None, None).unwrap();
+        assert_eq!((layer.k(), layer.n()), (48, 12));
+        assert_eq!(layer.nnz(), w.nnz());
+        assert!(layer.pinned_plan().is_none());
+        for m in [1usize, 5, 8] {
+            let x = Matrix::random(m, 48, 30 + m as u64);
+            let mut y = Matrix::zeros(m, 12);
+            layer.forward(&x, &mut y);
+            assert!(y.allclose(&dense_oracle(&x, &w, &bias), 1e-4), "m={m}");
+        }
+        assert!(cache.snapshot().plans > 0);
+        assert!(layer.format_bytes() > 0);
     }
 
     #[test]

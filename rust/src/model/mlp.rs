@@ -1,16 +1,26 @@
 //! The ternary MLP / FFN stack: the model object the serving engine runs.
+//!
+//! Config-built models execute through a shared [`PlanCache`]: each layer
+//! registers its weights once and plans are built lazily per (M-bucket,
+//! threads), so a mixed-batch-size request stream converges onto a small
+//! set of reused plans and the load-aware coordinator can re-size the
+//! thread fan-out at runtime ([`TernaryMlp::set_threads`]).
 
 use crate::model::config::ModelConfig;
 use crate::model::layer::TernaryLinear;
-use crate::plan::{PlanHints, Planner};
+use crate::plan::{PlanCache, PlanCacheConfig, Planner};
 use crate::tensor::Matrix;
 use crate::ternary::TernaryMatrix;
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 /// A stack of ternary linear layers with PReLU between them.
 pub struct TernaryMlp {
     pub name: String,
     layers: Vec<TernaryLinear>,
+    /// Present for config-built models; `None` for explicit-layer stacks
+    /// ([`TernaryMlp::from_layers`]).
+    cache: Option<Arc<PlanCache>>,
 }
 
 impl TernaryMlp {
@@ -18,23 +28,26 @@ impl TernaryMlp {
     /// Serving code should prefer [`TernaryMlp::planned`] with a shared
     /// planner so layers benefit from measured tuning entries.
     pub fn from_config(cfg: &ModelConfig) -> Result<TernaryMlp, String> {
-        Self::planned(cfg, &Planner::new())
+        Self::planned(cfg, &Arc::new(Planner::new()))
     }
 
     /// Build from a config through `planner`: weights generated
     /// deterministically from the seed (layer i uses `seed + i`), bias from
-    /// `seed + i + 7777`. Each layer's kernel is the config's explicit
-    /// override when set, otherwise the planner's pick for that layer's
-    /// (K, sparsity) class; threading and scratch pre-sizing come from the
-    /// config (`threads`, largest batch bucket).
-    pub fn planned(cfg: &ModelConfig, planner: &Planner) -> Result<TernaryMlp, String> {
+    /// `seed + i + 7777`. Layers execute through a shared [`PlanCache`]:
+    /// each layer's kernel is the config's explicit override when set,
+    /// otherwise the planner's pick for that layer's (K, sparsity) class —
+    /// refined by the cache's online top-2 race on first traffic in an
+    /// untuned class. The config's `threads` seeds the cache's (runtime
+    /// adjustable) worker ceiling.
+    pub fn planned(cfg: &ModelConfig, planner: &Arc<Planner>) -> Result<TernaryMlp, String> {
         let nlayers = cfg.dims.len() - 1;
-        let hints = PlanHints {
-            kernel: cfg.kernel.clone(),
-            threads: cfg.threads,
-            expected_batch: cfg.batch_buckets.last().copied().unwrap_or(0),
-            ..Default::default()
-        };
+        let cache = Arc::new(PlanCache::new(
+            Arc::clone(planner),
+            PlanCacheConfig {
+                threads: cfg.threads,
+                ..Default::default()
+            },
+        ));
         let mut layers = Vec::with_capacity(nlayers);
         for i in 0..nlayers {
             let (k, n) = (cfg.dims[i], cfg.dims[i + 1]);
@@ -46,11 +59,19 @@ impl TernaryMlp {
             } else {
                 None
             };
-            layers.push(TernaryLinear::planned(planner, &w, bias, 1.0, alpha, &hints)?);
+            layers.push(TernaryLinear::cached(
+                &cache,
+                w,
+                bias,
+                1.0,
+                alpha,
+                cfg.kernel.clone(),
+            )?);
         }
         Ok(TernaryMlp {
             name: cfg.name.clone(),
             layers,
+            cache: Some(cache),
         })
     }
 
@@ -68,7 +89,11 @@ impl TernaryMlp {
                 ));
             }
         }
-        Ok(TernaryMlp { name, layers })
+        Ok(TernaryMlp {
+            name,
+            layers,
+            cache: None,
+        })
     }
 
     pub fn d_in(&self) -> usize {
@@ -85,6 +110,19 @@ impl TernaryMlp {
 
     pub fn layers(&self) -> &[TernaryLinear] {
         &self.layers
+    }
+
+    /// The shared plan cache, when this model was built from a config.
+    pub fn plan_cache(&self) -> Option<&Arc<PlanCache>> {
+        self.cache.as_ref()
+    }
+
+    /// Re-size the worker-thread ceiling for every layer (no-op for
+    /// explicit-layer stacks). Plans for the new count build lazily.
+    pub fn set_threads(&self, threads: usize) {
+        if let Some(cache) = &self.cache {
+            cache.set_threads(threads);
+        }
     }
 
     /// Full forward pass for a batch (rows of `x`).
@@ -167,7 +205,8 @@ mod tests {
             let got = TernaryMlp::from_config(&c).unwrap().forward(&x);
             assert!(got.allclose(&reference, 1e-3), "kernel {kernel}");
         }
-        // Planner-selected (no explicit kernel) agrees too.
+        // Planner-selected (no explicit kernel) agrees too — even when the
+        // cache's online top-2 race picks the winner.
         c.kernel = None;
         let got = TernaryMlp::from_config(&c).unwrap().forward(&x);
         assert!(got.allclose(&reference, 1e-3), "auto kernel");
@@ -176,7 +215,6 @@ mod tests {
     #[test]
     fn auto_config_uses_tuning_table() {
         use crate::autotune::{ShapeClass, TuneEntry};
-        use crate::plan::Planner;
         let mut c = cfg();
         c.kernel = None;
         // Tune both layer classes (K=32 and K=64 at 25%) to a fixed pick.
@@ -190,17 +228,54 @@ mod tests {
                 },
             );
         }
-        let planner = Planner::with_table(table);
+        let planner = Arc::new(Planner::with_table(table));
         let mlp = TernaryMlp::planned(&c, &planner).unwrap();
         for layer in mlp.layers() {
             assert_eq!(layer.kernel_name(), "unrolled_tcsc_12");
         }
-        // And threading from the config still matches sequential output.
+        // And threading from the config still matches sequential output
+        // (kernel pinned so the comparison is plan-for-plan bitwise).
+        c.kernel = Some("interleaved_blocked_tcsc".to_string());
         c.threads = 4;
         let x = Matrix::random(9, 32, 5);
         let seq = TernaryMlp::from_config(&cfg()).unwrap().forward(&x);
-        let par = TernaryMlp::planned(&c, &Planner::new()).unwrap().forward(&x);
+        let par = TernaryMlp::planned(&c, &Arc::new(Planner::new()))
+            .unwrap()
+            .forward(&x);
         assert_eq!(seq, par, "threaded forward must be bitwise sequential");
+    }
+
+    #[test]
+    fn mixed_batch_sizes_reuse_cached_plans() {
+        let mut c = cfg();
+        c.kernel = None;
+        let mlp = TernaryMlp::planned(&c, &Arc::new(Planner::new())).unwrap();
+        let ms = [1usize, 7, 8, 3, 16, 8, 1];
+        for &m in &ms {
+            let y = mlp.forward(&Matrix::random(m, 32, 60 + m as u64));
+            assert_eq!((y.rows(), y.cols()), (m, 16));
+        }
+        let cache = mlp.plan_cache().expect("config-built model has a cache");
+        let warm = cache.snapshot();
+        for &m in &ms {
+            mlp.forward(&Matrix::random(m, 32, 80 + m as u64));
+        }
+        let hot = cache.snapshot();
+        assert_eq!(hot.misses, warm.misses, "warm traffic must not re-plan");
+        assert_eq!(hot.plans, warm.plans);
+    }
+
+    #[test]
+    fn set_threads_keeps_results_bitwise_identical() {
+        let mut c = cfg();
+        c.kernel = None;
+        let mlp = TernaryMlp::planned(&c, &Arc::new(Planner::new())).unwrap();
+        let x = Matrix::random(13, 32, 5);
+        let seq = mlp.forward(&x);
+        for t in [2usize, 4, 8] {
+            mlp.set_threads(t);
+            assert_eq!(mlp.forward(&x), seq, "threads={t}");
+        }
     }
 
     #[test]

@@ -1,0 +1,863 @@
+//! [`PlanCache`]: M-bucketed plan reuse for the serving path.
+//!
+//! The serving workload is a stream of batches whose row count M varies
+//! request-to-request (the dynamic batcher closes on whatever has queued).
+//! A single [`GemmPlan`] per layer — PR 1's design — freezes the scratch
+//! pre-sizing and thread fan-out at whatever the config guessed, and every
+//! change of execution policy would mean re-planning on the hot path.
+//!
+//! The cache fixes both: plans are keyed by **(layer, M-bucket, threads)**
+//! and built lazily on first traffic, then reused until a background
+//! re-tune swaps them ([`PlanCache::rebuild`]). M is bucketed
+//! to powers of two (capped at [`MAX_M_BUCKET`]) so a mixed-M stream
+//! converges onto a handful of plans; the thread count is part of the key
+//! so the load-aware coordinator can re-size fan-out without touching
+//! existing plans.
+//!
+//! Kernel choice per layer: the explicit override if the spec pins one,
+//! else the shared [`Planner`]'s tuning table, else — uniquely to this
+//! layer of the stack — an **online top-2 race**: the first real batch of
+//! an untuned (K, sparsity) class runs both paper-candidate kernels,
+//! times them, and records the winner in the shared table so every other
+//! layer, bucket and engine skips the race.
+
+use crate::autotune::{ShapeClass, TuneEntry};
+use crate::kernels::{prepare_kernel, GemmScratch, KernelParams, PreparedGemm};
+use crate::perf::timer::CycleTimer;
+use crate::plan::gemm_plan::{Epilogue, GemmPlan};
+use crate::plan::partition::RowPartition;
+use crate::plan::planner::{heuristic_kernel, heuristic_top2, Planner};
+use crate::tensor::Matrix;
+use crate::ternary::TernaryMatrix;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Largest M bucket: batches beyond this share one plan (the row
+/// partitioner handles any M; bucketing only controls plan reuse).
+pub const MAX_M_BUCKET: usize = 1024;
+
+/// Bucket a batch size: next power of two, clamped to `[1, MAX_M_BUCKET]`.
+pub fn m_bucket(m: usize) -> usize {
+    m.max(1).next_power_of_two().min(MAX_M_BUCKET)
+}
+
+/// Handle to a registered layer (index into the cache's layer list).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerId(usize);
+
+/// Everything the cache needs to (re)build a layer's plans on demand.
+pub struct LayerSpec {
+    /// Dense ternary weights; kept so any bucket's plan (and the top-2
+    /// race's rival format) can be prepared lazily.
+    pub weights: TernaryMatrix,
+    pub params: KernelParams,
+    pub epilogue: Epilogue,
+    /// Explicit registry kernel override; `None` = table/heuristic/race.
+    pub kernel: Option<String>,
+    /// Minimum rows per parallel chunk (see [`crate::plan::RowPartition`]).
+    pub min_rows_per_chunk: usize,
+}
+
+impl LayerSpec {
+    /// Spec with default params, no override, paper chunking.
+    pub fn new(weights: TernaryMatrix, epilogue: Epilogue) -> LayerSpec {
+        LayerSpec {
+            weights,
+            params: KernelParams::default(),
+            epilogue,
+            kernel: None,
+            min_rows_per_chunk: 2,
+        }
+    }
+}
+
+/// Cache construction knobs.
+#[derive(Debug, Clone)]
+pub struct PlanCacheConfig {
+    /// Initial worker-thread ceiling (live-adjustable via
+    /// [`PlanCache::set_threads`]; the load-aware router uses that).
+    pub threads: usize,
+    /// Race the top-2 candidate kernels on the first real batch of an
+    /// untuned (K, sparsity) class and record the winner.
+    pub online_top2: bool,
+    /// Timing reps per candidate in the online race (plus one warmup).
+    pub race_reps: usize,
+}
+
+impl Default for PlanCacheConfig {
+    fn default() -> Self {
+        PlanCacheConfig {
+            threads: 1,
+            online_top2: true,
+            race_reps: 2,
+        }
+    }
+}
+
+/// Monotonic cache counters (relaxed; for tests and /metrics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheSnapshot {
+    /// Runs served by an already-built plan.
+    pub hits: u64,
+    /// Runs (or `plan_for` calls) that had to build a plan.
+    pub misses: u64,
+    /// Online top-2 races executed.
+    pub races: u64,
+    /// Plans currently cached across all layers.
+    pub plans: usize,
+}
+
+/// (M-bucket, threads) → plan.
+type PlanMap = BTreeMap<(usize, usize), Arc<GemmPlan>>;
+
+/// Kernel name → prepared format. The expensive part of a plan is the
+/// sparse-format construction, which depends only on (weights, params,
+/// kernel) — never on the M-bucket or thread count — so every plan key of
+/// a layer shares one prepared GEMM per kernel.
+type GemmMap = BTreeMap<String, Arc<dyn PreparedGemm>>;
+
+struct CachedLayer {
+    spec: LayerSpec,
+    /// Built lazily, kept until invalidated.
+    plans: Mutex<PlanMap>,
+    /// Shared prepared formats (kept across [`PlanCache::invalidate`];
+    /// bounded by the handful of kernels a class ever selects).
+    gemms: Mutex<GemmMap>,
+}
+
+/// M-bucketed, thread-aware plan cache shared by a model's layers.
+pub struct PlanCache {
+    planner: Arc<Planner>,
+    online_top2: bool,
+    race_reps: usize,
+    threads: AtomicUsize,
+    layers: RwLock<Vec<Arc<CachedLayer>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    races: AtomicU64,
+}
+
+impl PlanCache {
+    pub fn new(planner: Arc<Planner>, cfg: PlanCacheConfig) -> PlanCache {
+        PlanCache {
+            planner,
+            online_top2: cfg.online_top2,
+            race_reps: cfg.race_reps.max(1),
+            threads: AtomicUsize::new(cfg.threads.max(1)),
+            layers: RwLock::new(Vec::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            races: AtomicU64::new(0),
+        }
+    }
+
+    /// The shared planner (tuning table owner).
+    pub fn planner(&self) -> &Arc<Planner> {
+        &self.planner
+    }
+
+    /// Register a layer; plans are built lazily per (M-bucket, threads).
+    ///
+    /// Everything `prepare_kernel` could reject is validated here, so a
+    /// registered layer's lazy builds cannot fail mid-traffic (the batch
+    /// loop has no caller left to surface an error to).
+    pub fn register(&self, spec: LayerSpec) -> Result<LayerId, String> {
+        if spec.epilogue.bias.len() != spec.weights.n() {
+            return Err(format!(
+                "bias length {} != N {}",
+                spec.epilogue.bias.len(),
+                spec.weights.n()
+            ));
+        }
+        if let Some(k) = &spec.kernel {
+            if !crate::kernels::kernel_names().contains(&k.as_str()) {
+                return Err(format!("unknown kernel '{k}'"));
+            }
+        }
+        if spec.params.group == Some(0) {
+            return Err("interleave group must be >= 1".into());
+        }
+        let mut layers = self.layers.write().unwrap_or_else(|e| e.into_inner());
+        layers.push(Arc::new(CachedLayer {
+            spec,
+            plans: Mutex::new(BTreeMap::new()),
+            gemms: Mutex::new(BTreeMap::new()),
+        }));
+        Ok(LayerId(layers.len() - 1))
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.read().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    /// Current worker-thread ceiling.
+    pub fn threads(&self) -> usize {
+        self.threads.load(Ordering::Relaxed)
+    }
+
+    /// Re-size the worker-thread ceiling (load-aware coordinator). Plans
+    /// for the new count are built on first use; existing plans remain.
+    pub fn set_threads(&self, threads: usize) {
+        self.threads.store(threads.max(1), Ordering::Relaxed);
+    }
+
+    fn layer(&self, id: LayerId) -> Arc<CachedLayer> {
+        self.layers.read().unwrap_or_else(|e| e.into_inner())[id.0].clone()
+    }
+
+    pub fn k(&self, id: LayerId) -> usize {
+        self.layer(id).spec.weights.k()
+    }
+
+    pub fn n(&self, id: LayerId) -> usize {
+        self.layer(id).spec.weights.n()
+    }
+
+    pub fn nnz(&self, id: LayerId) -> usize {
+        self.layer(id).spec.weights.nnz()
+    }
+
+    pub fn scale(&self, id: LayerId) -> f32 {
+        self.layer(id).spec.epilogue.scale
+    }
+
+    pub fn prelu_alpha(&self, id: LayerId) -> Option<f32> {
+        self.layer(id).spec.epilogue.prelu_alpha
+    }
+
+    /// Paper cost-model flops for an M-row batch of this layer (same
+    /// accounting as [`GemmPlan::flops`]).
+    pub fn flops(&self, id: LayerId, m: usize) -> f64 {
+        let layer = self.layer(id);
+        let n = layer.spec.weights.n();
+        let mut f = m as f64 * layer.spec.weights.nnz() as f64 + (m * n) as f64;
+        if layer.spec.epilogue.prelu_alpha.is_some() {
+            f += (m * n) as f64;
+        }
+        f
+    }
+
+    /// The kernel a plan for batch size `m` would use right now: explicit
+    /// override, else the shared table, else the paper heuristic. (The
+    /// online race may still overturn the heuristic on first traffic.)
+    pub fn kernel_for(&self, id: LayerId, _m: usize) -> String {
+        let layer = self.layer(id);
+        self.kernel_for_spec(&layer.spec)
+    }
+
+    fn kernel_for_spec(&self, spec: &LayerSpec) -> String {
+        match &spec.kernel {
+            Some(k) => k.clone(),
+            None => self.planner.select_kernel(
+                spec.weights.k(),
+                spec.weights.density() as f32,
+                spec.epilogue.fusible_prelu().is_some(),
+            ),
+        }
+    }
+
+    fn effective_threads(&self, bucket: usize) -> usize {
+        // `bucket >= 1`, so this is a plain ceiling, not a clamp.
+        self.threads().clamp(1, bucket)
+    }
+
+    /// The shared prepared format for `kernel` (built once per layer ×
+    /// kernel; every plan key reuses it).
+    fn prepared_gemm(
+        &self,
+        layer: &CachedLayer,
+        kernel: &str,
+    ) -> Result<Arc<dyn PreparedGemm>, String> {
+        let cached = {
+            let gemms = layer.gemms.lock().unwrap_or_else(|e| e.into_inner());
+            gemms.get(kernel).cloned()
+        };
+        if let Some(gemm) = cached {
+            return Ok(gemm);
+        }
+        // Same fusion rule as `Planner::plan`: the kernel fuses PReLU only
+        // when the epilogue allows it bit-exactly.
+        let kparams = KernelParams {
+            prelu_alpha: layer.spec.epilogue.fusible_prelu(),
+            ..layer.spec.params
+        };
+        let gemm: Arc<dyn PreparedGemm> =
+            prepare_kernel(kernel, &layer.spec.weights, kparams)?.into();
+        Ok(layer
+            .gemms
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .entry(kernel.to_string())
+            .or_insert(gemm)
+            .clone())
+    }
+
+    /// Assemble a plan over the shared prepared format: partition, pool
+    /// hookup and scratch pre-sized for `bucket` rows. Mirrors
+    /// `Planner::plan` exactly, minus the per-plan format build.
+    fn build_plan(
+        &self,
+        layer: &CachedLayer,
+        bucket: usize,
+        threads: usize,
+        kernel: &str,
+    ) -> Result<Arc<GemmPlan>, String> {
+        let gemm = self.prepared_gemm(layer, kernel)?;
+        let threads = threads.max(1);
+        let partition = RowPartition::new(threads, layer.spec.min_rows_per_chunk);
+        let pool = if threads > 1 {
+            Some(self.planner.shared_pool())
+        } else {
+            None
+        };
+        let mut scratches: Vec<GemmScratch> =
+            (0..threads).map(|_| GemmScratch::new()).collect();
+        if gemm.uses_padded_scratch() {
+            for (i, &(lo, hi)) in partition.ranges(bucket).iter().enumerate() {
+                scratches[i].reserve_padded(hi - lo, layer.spec.weights.k());
+            }
+        }
+        Ok(Arc::new(GemmPlan {
+            gemm,
+            epilogue: layer.spec.epilogue.clone(),
+            partition,
+            pool,
+            scratch: Mutex::new(scratches),
+        }))
+    }
+
+    /// Build with the spec/table/heuristic kernel choice; if a
+    /// table-selected kernel fails to prepare (a poisoned entry must not
+    /// take the serving path down mid-traffic), fall back to the paper
+    /// heuristic. Explicit spec overrides stay hard errors.
+    fn build_auto(
+        &self,
+        layer: &CachedLayer,
+        bucket: usize,
+        threads: usize,
+    ) -> Result<Arc<GemmPlan>, String> {
+        let spec = &layer.spec;
+        let kernel = self.kernel_for_spec(spec);
+        match self.build_plan(layer, bucket, threads, &kernel) {
+            Ok(plan) => Ok(plan),
+            Err(_) if spec.kernel.is_none() => {
+                let fallback = heuristic_kernel(
+                    spec.weights.k(),
+                    spec.weights.density() as f32,
+                    spec.epilogue.fusible_prelu().is_some(),
+                );
+                self.build_plan(layer, bucket, threads, fallback)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Time both top-2 candidates on the live batch, record the winner in
+    /// the shared table, and return the winning plan.
+    fn race_top2(
+        &self,
+        layer: &CachedLayer,
+        bucket: usize,
+        threads: usize,
+        x: &Matrix,
+    ) -> Result<Arc<GemmPlan>, String> {
+        self.races.fetch_add(1, Ordering::Relaxed);
+        let spec = &layer.spec;
+        let k = spec.weights.k();
+        let sparsity = spec.weights.density() as f32;
+        let wants_fused = spec.epilogue.fusible_prelu().is_some();
+        let [a, b] = heuristic_top2(k, sparsity, wants_fused);
+        let plan_a = self.build_plan(layer, bucket, threads, a)?;
+        let plan_b = self.build_plan(layer, bucket, threads, b)?;
+        let timer = CycleTimer::new(1, self.race_reps);
+        let mut y = Matrix::zeros(x.rows(), spec.weights.n());
+        let meas_a = timer.run(|| plan_a.run(x, &mut y));
+        let meas_b = timer.run(|| plan_b.run(x, &mut y));
+        let flops = plan_a.flops(x.rows());
+        let (winner, meas, name) = if meas_a.cycles <= meas_b.cycles {
+            (plan_a, meas_a, a)
+        } else {
+            (plan_b, meas_b, b)
+        };
+        self.planner.record(
+            ShapeClass::of(k, sparsity),
+            TuneEntry {
+                kernel: name.to_string(),
+                flops_per_cycle: meas.flops_per_cycle(flops),
+            },
+        );
+        Ok(winner)
+    }
+
+    /// The plan for batch size `m` at the current thread ceiling, building
+    /// it (without racing — there is no live batch to time) on a miss.
+    pub fn plan_for(&self, id: LayerId, m: usize) -> Result<Arc<GemmPlan>, String> {
+        let layer = self.layer(id);
+        let bucket = m_bucket(m);
+        let threads = self.effective_threads(bucket);
+        let key = (bucket, threads);
+        // Bind outside the `if let` so the guard drops before any work.
+        let cached = self.plans_lock(&layer).get(&key).cloned();
+        if let Some(plan) = cached {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(plan);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let built = self.build_auto(&layer, bucket, threads)?;
+        Ok(self.plans_lock(&layer).entry(key).or_insert(built).clone())
+    }
+
+    fn plans_lock<'a>(&self, layer: &'a CachedLayer) -> std::sync::MutexGuard<'a, PlanMap> {
+        layer.plans.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Run layer `id` on `x` into `y` through the cached plan for `x`'s
+    /// M-bucket, building (and, for untuned auto classes, racing) on the
+    /// first sighting of the bucket.
+    pub fn run(&self, id: LayerId, x: &Matrix, y: &mut Matrix) -> Result<(), String> {
+        let layer = self.layer(id);
+        let bucket = m_bucket(x.rows());
+        let threads = self.effective_threads(bucket);
+        let key = (bucket, threads);
+        // Bind outside the `if let` so the map guard drops before the GEMM
+        // runs — concurrent batches on different buckets must not contend.
+        let cached = self.plans_lock(&layer).get(&key).cloned();
+        if let Some(plan) = cached {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            plan.run(x, y);
+            return Ok(());
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let spec = &layer.spec;
+        let untuned = self
+            .planner
+            .lookup_entry(spec.weights.k(), spec.weights.density() as f32)
+            .is_none();
+        let built = if spec.kernel.is_none() && self.online_top2 && untuned {
+            self.race_top2(&layer, bucket, threads, x)?
+        } else {
+            self.build_auto(&layer, bucket, threads)?
+        };
+        // First insert wins so concurrent builders converge on one plan.
+        let plan = self
+            .plans_lock(&layer)
+            .entry(key)
+            .or_insert(built)
+            .clone();
+        plan.run(x, y);
+        Ok(())
+    }
+
+    /// Allocating convenience: run into a fresh M×N matrix.
+    pub fn forward(&self, id: LayerId, x: &Matrix) -> Result<Matrix, String> {
+        let mut y = Matrix::zeros(x.rows(), self.n(id));
+        self.run(id, x, &mut y)?;
+        Ok(y)
+    }
+
+    /// Pre-build plans for every layer at the given batch buckets and the
+    /// current thread ceiling (serve startup with a measured table: first
+    /// traffic then allocates nothing and races nothing).
+    pub fn warm(&self, buckets: &[usize]) -> Result<(), String> {
+        let n = self.num_layers();
+        for i in 0..n {
+            for &m in buckets {
+                self.plan_for(LayerId(i), m)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// The thread values the load-aware controller can advise up to
+    /// `max_threads`: powers of two, plus `max_threads` itself.
+    pub fn controller_thread_steps(max_threads: usize) -> Vec<usize> {
+        let max_threads = max_threads.max(1);
+        let mut steps = Vec::new();
+        let mut t = 1usize;
+        loop {
+            steps.push(t);
+            if t >= max_threads {
+                break;
+            }
+            t = (t * 2).min(max_threads);
+        }
+        steps
+    }
+
+    /// Warm `buckets` × `thread_steps`, but **only for layers whose kernel
+    /// choice is already settled** — an explicit override, a tuning-table
+    /// entry for the class, or racing disabled. Untuned classes are left
+    /// cold on purpose: their first real traffic should run the online
+    /// top-2 race, and a pre-built heuristic plan would silently skip it.
+    /// Restores the thread ceiling it found; startup-time only (the
+    /// temporary ceiling changes are visible to concurrent traffic).
+    pub fn warm_settled(
+        &self,
+        buckets: &[usize],
+        thread_steps: &[usize],
+    ) -> Result<(), String> {
+        let saved = self.threads();
+        let n = self.num_layers();
+        for &step in thread_steps {
+            self.set_threads(step);
+            for i in 0..n {
+                let id = LayerId(i);
+                let layer = self.layer(id);
+                let settled = layer.spec.kernel.is_some()
+                    || !self.online_top2
+                    || self
+                        .planner
+                        .lookup_entry(
+                            layer.spec.weights.k(),
+                            layer.spec.weights.density() as f32,
+                        )
+                        .is_some();
+                if !settled {
+                    continue;
+                }
+                for &m in buckets {
+                    if let Err(e) = self.plan_for(id, m) {
+                        self.set_threads(saved);
+                        return Err(e);
+                    }
+                }
+            }
+        }
+        self.set_threads(saved);
+        Ok(())
+    }
+
+    /// Drop every cached plan (the next batches rebuild from the current
+    /// tuning entries). Prefer [`PlanCache::rebuild`] on a serving path —
+    /// it replaces plans without a window where none exist.
+    pub fn invalidate(&self) {
+        let layers = self.layers.read().unwrap_or_else(|e| e.into_inner());
+        for layer in layers.iter() {
+            self.plans_lock(layer).clear();
+        }
+    }
+
+    /// Re-resolve every cached plan key against the current tuning table
+    /// and swap the fresh plans in, one key at a time — serving traffic
+    /// always finds a plan, and only genuinely changed winners pay a new
+    /// format build (shared formats make unchanged keys shell-cheap).
+    /// This is the background re-tune hook's path.
+    pub fn rebuild(&self) -> Result<(), String> {
+        let layers: Vec<Arc<CachedLayer>> = self
+            .layers
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone();
+        for layer in &layers {
+            let keys: Vec<(usize, usize)> =
+                self.plans_lock(layer).keys().copied().collect();
+            for (bucket, threads) in keys {
+                let plan = self.build_auto(layer, bucket, threads)?;
+                self.plans_lock(layer).insert((bucket, threads), plan);
+            }
+        }
+        Ok(())
+    }
+
+    /// Plans currently cached across all layers.
+    pub fn plans_built(&self) -> usize {
+        let layers = self.layers.read().unwrap_or_else(|e| e.into_inner());
+        layers.iter().map(|l| self.plans_lock(l).len()).sum()
+    }
+
+    pub fn snapshot(&self) -> CacheSnapshot {
+        CacheSnapshot {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            races: self.races.load(Ordering::Relaxed),
+            plans: self.plans_built(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense_oracle;
+
+    fn cache_with(threads: usize, online: bool) -> PlanCache {
+        PlanCache::new(
+            Arc::new(Planner::new()),
+            PlanCacheConfig {
+                threads,
+                online_top2: online,
+                race_reps: 1,
+            },
+        )
+    }
+
+    #[test]
+    fn buckets_are_pow2_and_capped() {
+        assert_eq!(m_bucket(0), 1);
+        assert_eq!(m_bucket(1), 1);
+        assert_eq!(m_bucket(2), 2);
+        assert_eq!(m_bucket(3), 4);
+        assert_eq!(m_bucket(8), 8);
+        assert_eq!(m_bucket(9), 16);
+        assert_eq!(m_bucket(100_000), MAX_M_BUCKET);
+    }
+
+    #[test]
+    fn mixed_m_stream_reuses_bucket_plans() {
+        let cache = cache_with(1, false);
+        let w = TernaryMatrix::random(48, 12, 0.25, 3);
+        let id = cache
+            .register(LayerSpec::new(w, Epilogue::with_bias(vec![0.1; 12])))
+            .unwrap();
+        let ms = [1usize, 3, 8, 5, 2, 16, 7, 8, 1, 4];
+        for &m in &ms {
+            let x = Matrix::random(m, 48, 50 + m as u64);
+            let y = cache.forward(id, &x).unwrap();
+            assert_eq!((y.rows(), y.cols()), (m, 12));
+        }
+        let warm = cache.snapshot();
+        // Buckets seen: 1, 2, 4, 8, 16 → five plans, five misses.
+        assert_eq!(warm.plans, 5);
+        assert_eq!(warm.misses, 5);
+        for &m in &ms {
+            let x = Matrix::random(m, 48, 90 + m as u64);
+            cache.forward(id, &x).unwrap();
+        }
+        let hot = cache.snapshot();
+        assert_eq!(hot.misses, warm.misses, "warm stream must not re-plan");
+        assert_eq!(hot.plans, warm.plans);
+        assert_eq!(hot.hits, warm.hits + ms.len() as u64);
+    }
+
+    #[test]
+    fn cached_run_matches_oracle_and_explicit_override_sticks() {
+        let cache = cache_with(2, false);
+        let w = TernaryMatrix::random(64, 16, 0.5, 7);
+        let bias: Vec<f32> = (0..16).map(|i| 0.05 * i as f32).collect();
+        let id = cache
+            .register(LayerSpec {
+                weights: w.clone(),
+                params: KernelParams::default(),
+                epilogue: Epilogue::with_bias(bias.clone()),
+                kernel: Some("base_tcsc".into()),
+                min_rows_per_chunk: 2,
+            })
+            .unwrap();
+        assert_eq!(cache.kernel_for(id, 8), "base_tcsc");
+        let x = Matrix::random(8, 64, 8);
+        let y = cache.forward(id, &x).unwrap();
+        assert!(y.allclose(&dense_oracle(&x, &w, &bias), 1e-4));
+    }
+
+    #[test]
+    fn online_race_locks_winner_into_shared_table() {
+        let planner = Arc::new(Planner::new());
+        let cache = PlanCache::new(
+            Arc::clone(&planner),
+            PlanCacheConfig {
+                threads: 1,
+                online_top2: true,
+                race_reps: 1,
+            },
+        );
+        let w = TernaryMatrix::random(64, 16, 0.25, 9);
+        let bias = vec![0.0f32; 16];
+        let id = cache
+            .register(LayerSpec::new(w.clone(), Epilogue::with_bias(bias.clone())))
+            .unwrap();
+        assert!(planner.lookup_entry(64, 0.25).is_none());
+        let x = Matrix::random(8, 64, 10);
+        let y = cache.forward(id, &x).unwrap();
+        assert!(y.allclose(&dense_oracle(&x, &w, &bias), 1e-3));
+        let entry = planner.lookup_entry(64, 0.25).expect("race records winner");
+        let [a, b] = heuristic_top2(64, 0.25, false);
+        assert!([a, b].contains(&entry.kernel.as_str()), "{}", entry.kernel);
+        assert_eq!(cache.snapshot().races, 1);
+        // A second layer in the same class reuses the entry — no new race.
+        let id2 = cache
+            .register(LayerSpec::new(
+                TernaryMatrix::random(64, 8, 0.25, 11),
+                Epilogue::with_bias(vec![0.0; 8]),
+            ))
+            .unwrap();
+        cache.forward(id2, &x).unwrap();
+        assert_eq!(cache.snapshot().races, 1);
+        assert_eq!(cache.kernel_for(id2, 8), entry.kernel);
+    }
+
+    #[test]
+    fn set_threads_adds_keys_and_invalidate_clears() {
+        let cache = cache_with(1, false);
+        let id = cache
+            .register(LayerSpec::new(
+                TernaryMatrix::random(32, 8, 0.5, 2),
+                Epilogue::with_bias(vec![0.0; 8]),
+            ))
+            .unwrap();
+        let x = Matrix::random(8, 32, 3);
+        cache.forward(id, &x).unwrap();
+        assert_eq!(cache.plans_built(), 1);
+        cache.set_threads(4);
+        cache.forward(id, &x).unwrap();
+        assert_eq!(cache.plans_built(), 2, "new thread count → new key");
+        cache.forward(id, &x).unwrap();
+        assert_eq!(cache.plans_built(), 2, "then cached");
+        cache.invalidate();
+        assert_eq!(cache.plans_built(), 0);
+        cache.forward(id, &x).unwrap();
+        assert_eq!(cache.plans_built(), 1);
+    }
+
+    #[test]
+    fn warm_prebuilds_every_layer_bucket() {
+        let cache = cache_with(1, true);
+        for seed in 0..3u64 {
+            cache
+                .register(LayerSpec::new(
+                    TernaryMatrix::random(32, 8, 0.5, seed),
+                    Epilogue::with_bias(vec![0.0; 8]),
+                ))
+                .unwrap();
+        }
+        cache.warm(&[1, 8]).unwrap();
+        assert_eq!(cache.plans_built(), 6);
+        // Warmed buckets neither race nor re-plan on first traffic.
+        let x = Matrix::random(8, 32, 40);
+        cache.forward(LayerId(0), &x).unwrap();
+        let snap = cache.snapshot();
+        assert_eq!(snap.races, 0);
+        assert_eq!(snap.plans, 6);
+    }
+
+    #[test]
+    fn thread_steps_are_pow2_plus_ceiling() {
+        assert_eq!(PlanCache::controller_thread_steps(1), vec![1]);
+        assert_eq!(PlanCache::controller_thread_steps(4), vec![1, 2, 4]);
+        assert_eq!(PlanCache::controller_thread_steps(6), vec![1, 2, 4, 6]);
+        assert_eq!(PlanCache::controller_thread_steps(0), vec![1]);
+    }
+
+    #[test]
+    fn warm_settled_skips_untuned_classes_so_they_still_race() {
+        let planner = Arc::new(Planner::new());
+        let cache = PlanCache::new(
+            Arc::clone(&planner),
+            PlanCacheConfig {
+                threads: 1,
+                online_top2: true,
+                race_reps: 1,
+            },
+        );
+        // Layer 0: pinned kernel (settled). Layer 1: untuned auto class.
+        let mut pinned = LayerSpec::new(
+            TernaryMatrix::random(32, 8, 0.5, 1),
+            Epilogue::with_bias(vec![0.0; 8]),
+        );
+        pinned.kernel = Some("base_tcsc".into());
+        cache.register(pinned).unwrap();
+        let auto_id = cache
+            .register(LayerSpec::new(
+                TernaryMatrix::random(64, 8, 0.25, 2),
+                Epilogue::with_bias(vec![0.0; 8]),
+            ))
+            .unwrap();
+        cache
+            .warm_settled(&[1, 8], &PlanCache::controller_thread_steps(4))
+            .unwrap();
+        // Pinned layer warmed: bucket 1 → (1,1); bucket 8 → (8,1..4).
+        assert_eq!(cache.plans_built(), 4);
+        assert_eq!(cache.threads(), 1, "ceiling restored after warming");
+        assert_eq!(cache.snapshot().races, 0);
+        // The untuned layer stayed cold, so first traffic still races.
+        let x = Matrix::random(8, 64, 3);
+        cache.forward(auto_id, &x).unwrap();
+        assert_eq!(cache.snapshot().races, 1);
+        assert!(planner.lookup_entry(64, 0.25).is_some());
+    }
+
+    #[test]
+    fn rebuild_swaps_plans_to_fresh_table_winners() {
+        let planner = Arc::new(Planner::new());
+        let cache = PlanCache::new(
+            Arc::clone(&planner),
+            PlanCacheConfig {
+                threads: 1,
+                online_top2: false,
+                race_reps: 1,
+            },
+        );
+        let w = TernaryMatrix::random(64, 8, 0.25, 5);
+        let bias = vec![0.0f32; 8];
+        let id = cache
+            .register(LayerSpec::new(w.clone(), Epilogue::with_bias(bias.clone())))
+            .unwrap();
+        let x = Matrix::random(8, 64, 6);
+        cache.forward(id, &x).unwrap();
+        assert_eq!(cache.plan_for(id, 8).unwrap().kernel_name(), "interleaved_blocked_tcsc");
+        // A re-tune records a new winner; rebuild swaps it in, same keys.
+        planner.record(
+            ShapeClass::of(64, 0.25),
+            TuneEntry {
+                kernel: "unrolled_tcsc_12".into(),
+                flops_per_cycle: 9.0,
+            },
+        );
+        let plans_before = cache.plans_built();
+        cache.rebuild().unwrap();
+        assert_eq!(cache.plans_built(), plans_before, "rebuild keeps the key set");
+        assert_eq!(cache.plan_for(id, 8).unwrap().kernel_name(), "unrolled_tcsc_12");
+        let y = cache.forward(id, &x).unwrap();
+        assert!(y.allclose(&dense_oracle(&x, &w, &bias), 1e-3));
+    }
+
+    #[test]
+    fn poisoned_table_entry_falls_back_to_heuristic() {
+        // A hand-inserted table entry naming a kernel the registry doesn't
+        // know must degrade to the paper heuristic, not panic the serving
+        // path mid-traffic.
+        use crate::autotune::TuningTable;
+        let mut table = TuningTable::new();
+        table.insert(
+            ShapeClass::of(32, 0.5),
+            TuneEntry {
+                kernel: "gone_kernel".into(),
+                flops_per_cycle: 1.0,
+            },
+        );
+        let cache = PlanCache::new(
+            Arc::new(Planner::with_table(table)),
+            PlanCacheConfig {
+                threads: 1,
+                online_top2: true,
+                race_reps: 1,
+            },
+        );
+        let w = TernaryMatrix::random(32, 8, 0.5, 3);
+        let bias = vec![0.0f32; 8];
+        let id = cache
+            .register(LayerSpec::new(w.clone(), Epilogue::with_bias(bias.clone())))
+            .unwrap();
+        let x = Matrix::random(4, 32, 4);
+        // Class counts as tuned (entry exists) → no race → build falls back.
+        let y = cache.forward(id, &x).unwrap();
+        assert!(y.allclose(&dense_oracle(&x, &w, &bias), 1e-3));
+        assert_eq!(cache.snapshot().races, 0);
+    }
+
+    #[test]
+    fn register_validates_bias_and_kernel() {
+        let cache = cache_with(1, false);
+        let w = TernaryMatrix::random(16, 8, 0.5, 1);
+        assert!(cache
+            .register(LayerSpec::new(w.clone(), Epilogue::with_bias(vec![0.0; 7])))
+            .is_err());
+        let mut spec = LayerSpec::new(w.clone(), Epilogue::with_bias(vec![0.0; 8]));
+        spec.kernel = Some("bogus".into());
+        assert!(cache.register(spec).is_err());
+        // Bad params are rejected up front too — lazy builds cannot fail.
+        let mut spec = LayerSpec::new(w, Epilogue::with_bias(vec![0.0; 8]));
+        spec.params.group = Some(0);
+        assert!(cache.register(spec).is_err());
+    }
+}

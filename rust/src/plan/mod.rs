@@ -22,15 +22,34 @@
 //! copy lives in reused scratch (steady state allocates nothing)
 //! ```
 //!
+//! On the serving path, plans are not built per request: the
+//! [`PlanCache`] keys them by (layer, M-bucket, threads) and builds each
+//! combination once, on first traffic —
+//!
+//! ```text
+//! PlanCache::run(layer, x, &mut y)
+//!     │  bucket = next_pow2(x.rows()), threads = live ceiling
+//!     ├─ hit  → cached GemmPlan::run (no planning, no allocation)
+//!     └─ miss → build once; for an untuned (K, sparsity) class, race the
+//!               top-2 candidate kernels on the live batch and lock the
+//!               winner into the shared TuningTable
+//! ```
+//!
 //! Consumers: [`crate::model::TernaryLinear`] / [`crate::model::TernaryMlp`]
-//! build layers through a `Planner` (kernel names are optional overrides),
-//! [`crate::coordinator::engine::Engine`] serves batches through plans, and
-//! the bench harness measures kernels through the same path it serves on.
+//! build layers through a shared `Arc<Planner>` + `PlanCache` (kernel names
+//! are optional overrides), [`crate::coordinator::engine::Engine`] serves
+//! batches through cached plans (and the load-aware router re-sizes the
+//! cache's thread ceiling), and the bench harness measures kernels through
+//! the same path it serves on.
 
+pub mod cache;
 pub mod gemm_plan;
 pub mod partition;
 pub mod planner;
 
+pub use cache::{
+    m_bucket, CacheSnapshot, LayerId, LayerSpec, PlanCache, PlanCacheConfig, MAX_M_BUCKET,
+};
 pub use gemm_plan::{Epilogue, GemmPlan};
 pub use partition::{execute_partitioned, RowPartition, ROW_TILE};
-pub use planner::{heuristic_kernel, PlanHints, Planner};
+pub use planner::{heuristic_kernel, heuristic_top2, PlanHints, Planner};

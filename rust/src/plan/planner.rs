@@ -1,14 +1,19 @@
 //! [`Planner`]: turns dense ternary weights + execution hints into a
 //! [`GemmPlan`], consulting the autotune [`TuningTable`] and falling back
 //! to the paper's heuristics when a shape class was never tuned.
+//!
+//! The tuning table lives behind a `RwLock` so one `Arc<Planner>` can be
+//! shared by every layer, the [`crate::plan::PlanCache`]'s online top-2
+//! races, and the serve-time background re-tune thread: a winner recorded
+//! by any of them is immediately visible to every subsequent plan.
 
-use crate::autotune::TuningTable;
+use crate::autotune::{ShapeClass, TuneEntry, TuningTable};
 use crate::kernels::{prepare_kernel, GemmScratch, KernelParams, PreparedGemm};
 use crate::plan::gemm_plan::{Epilogue, GemmPlan};
 use crate::plan::partition::RowPartition;
 use crate::ternary::TernaryMatrix;
 use crate::util::threadpool::ThreadPool;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 
 /// Execution hints for [`Planner::plan`] — everything that is about *how*
 /// to run rather than *what* to compute.
@@ -66,11 +71,35 @@ pub fn heuristic_kernel(_k: usize, sparsity: f32, wants_fused_prelu: bool) -> &'
     }
 }
 
-/// Kernel selection + plan construction. Cheap to create; share one per
-/// model (or per process) so every layer's plan draws from the same tuning
-/// table and thread pool.
+/// The two strongest candidates for an untuned (K, sparsity) class, best
+/// first: the paper-heuristic pick plus its closest rival from the paper's
+/// figures. The [`crate::plan::PlanCache`] races exactly these two on the
+/// first real batch of an untuned class and locks the measured winner into
+/// the shared [`TuningTable`].
+pub fn heuristic_top2(
+    k: usize,
+    sparsity: f32,
+    wants_fused_prelu: bool,
+) -> [&'static str; 2] {
+    let primary = heuristic_kernel(k, sparsity, wants_fused_prelu);
+    let secondary = match primary {
+        // Fig 9: as density grows past the sparsest level, the blocked
+        // interleaved kernel overtakes plain unrolling.
+        "unrolled_tcsc_k4_m4" => "interleaved_blocked_tcsc",
+        // Fig 11: the SIMD path and the best scalar path trade the lead
+        // depending on padding overhead for the host's actual shapes.
+        "simd_vertical" => "interleaved_blocked_tcsc",
+        _ => "simd_vertical",
+    };
+    [primary, secondary]
+}
+
+/// Kernel selection + plan construction. Cheap to create; share one
+/// `Arc<Planner>` per model (or per process) so every layer's plan draws
+/// from the same tuning table and thread pool, and online/background
+/// tuning results propagate to all of them.
 pub struct Planner {
-    table: TuningTable,
+    table: RwLock<TuningTable>,
     /// Shared worker pool, created lazily on the first parallel plan and
     /// sized to the host's parallelism. Plans cap their own fan-out via
     /// `PlanHints::threads`.
@@ -92,7 +121,7 @@ impl Planner {
     /// Planner backed by a measured tuning table.
     pub fn with_table(table: TuningTable) -> Planner {
         Planner {
-            table,
+            table: RwLock::new(table),
             pool: Mutex::new(None),
         }
     }
@@ -102,24 +131,60 @@ impl Planner {
         Ok(Planner::with_table(TuningTable::load(path)?))
     }
 
-    pub fn table(&self) -> &TuningTable {
-        &self.table
+    /// Clone of the current tuning table (persistence, background re-tune).
+    pub fn table_snapshot(&self) -> TuningTable {
+        self.table
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
     }
 
-    pub fn table_mut(&mut self) -> &mut TuningTable {
-        &mut self.table
+    /// Number of tuned shape classes.
+    pub fn tuned_classes(&self) -> usize {
+        self.table.read().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    /// The tuned entry for a (K, sparsity) class, if any.
+    pub fn lookup_entry(&self, k: usize, sparsity: f32) -> Option<TuneEntry> {
+        self.table
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .lookup(k, sparsity)
+            .cloned()
+    }
+
+    /// Record a measured winner for a shape class (online top-2 fallback,
+    /// `autotune sweep`). Last write wins. Unknown kernel names are
+    /// dropped: a poisoned entry must never reach the serving path, where
+    /// a lazy plan build has no caller left to surface the error to.
+    pub fn record(&self, class: ShapeClass, entry: TuneEntry) {
+        if !crate::kernels::kernel_names().contains(&entry.kernel.as_str()) {
+            return;
+        }
+        self.table
+            .write()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(class, entry);
+    }
+
+    /// Replace the tuning table wholesale (serve-time background re-tune).
+    /// Existing plans keep running with their already-chosen kernels; new
+    /// plans (and an invalidated [`crate::plan::PlanCache`]) pick up the
+    /// fresh entries.
+    pub fn install_table(&self, table: TuningTable) {
+        *self.table.write().unwrap_or_else(|e| e.into_inner()) = table;
     }
 
     /// The kernel this planner would pick for a (K, sparsity) class:
     /// tuned winner if the table has one, paper heuristic otherwise.
-    pub fn select_kernel(&self, k: usize, sparsity: f32, wants_fused_prelu: bool) -> &str {
-        match self.table.lookup(k, sparsity) {
-            Some(entry) => entry.kernel.as_str(),
-            None => heuristic_kernel(k, sparsity, wants_fused_prelu),
+    pub fn select_kernel(&self, k: usize, sparsity: f32, wants_fused_prelu: bool) -> String {
+        match self.lookup_entry(k, sparsity) {
+            Some(entry) => entry.kernel,
+            None => heuristic_kernel(k, sparsity, wants_fused_prelu).to_string(),
         }
     }
 
-    fn shared_pool(&self) -> Arc<ThreadPool> {
+    pub(crate) fn shared_pool(&self) -> Arc<ThreadPool> {
         let mut guard = self.pool.lock().unwrap_or_else(|e| e.into_inner());
         guard
             .get_or_insert_with(|| {
@@ -158,9 +223,7 @@ impl Planner {
         let wants_fused = epilogue.fusible_prelu().is_some();
         let name = match &hints.kernel {
             Some(k) => k.clone(),
-            None => self
-                .select_kernel(w.k(), sparsity, wants_fused)
-                .to_string(),
+            None => self.select_kernel(w.k(), sparsity, wants_fused),
         };
         let kparams = KernelParams {
             prelu_alpha: epilogue.fusible_prelu(),
@@ -207,6 +270,16 @@ mod tests {
     }
 
     #[test]
+    fn top2_leads_with_heuristic_and_differs() {
+        for &(s, fused) in &[(0.0625f32, false), (0.25, false), (0.5, true), (0.5, false)] {
+            let [a, b] = heuristic_top2(4096, s, fused);
+            assert_eq!(a, heuristic_kernel(4096, s, fused));
+            assert_ne!(a, b, "candidates must differ (s={s}, fused={fused})");
+            assert!(crate::kernels::kernel_names().contains(&b), "unknown rival {b}");
+        }
+    }
+
+    #[test]
     fn tuning_table_wins_over_heuristics() {
         let mut table = TuningTable::new();
         table.insert(
@@ -238,6 +311,51 @@ mod tests {
             )
             .unwrap();
         assert_eq!(plan2.kernel_name(), "interleaved_blocked_tcsc");
+    }
+
+    #[test]
+    fn recorded_entries_are_shared_and_replaceable() {
+        let planner = Planner::new();
+        assert_eq!(planner.tuned_classes(), 0);
+        assert!(planner.lookup_entry(512, 0.25).is_none());
+        planner.record(
+            ShapeClass::of(512, 0.25),
+            TuneEntry {
+                kernel: "base_tcsc".into(),
+                flops_per_cycle: 1.0,
+            },
+        );
+        assert_eq!(planner.tuned_classes(), 1);
+        assert_eq!(
+            planner.select_kernel(512, 0.25, false),
+            "base_tcsc".to_string()
+        );
+        // install_table replaces everything (the background re-tune path).
+        planner.install_table(TuningTable::new());
+        assert_eq!(planner.tuned_classes(), 0);
+        assert_eq!(
+            planner.select_kernel(512, 0.25, false),
+            "interleaved_blocked_tcsc".to_string()
+        );
+        // Snapshot is a detached copy.
+        let mut snap = planner.table_snapshot();
+        snap.insert(
+            ShapeClass::of(64, 0.5),
+            TuneEntry {
+                kernel: "base_tcsc".into(),
+                flops_per_cycle: 1.0,
+            },
+        );
+        assert_eq!(planner.tuned_classes(), 0);
+        // Unknown kernels never enter the shared table.
+        planner.record(
+            ShapeClass::of(64, 0.5),
+            TuneEntry {
+                kernel: "bogus".into(),
+                flops_per_cycle: 99.0,
+            },
+        );
+        assert_eq!(planner.tuned_classes(), 0);
     }
 
     #[test]

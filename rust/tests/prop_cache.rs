@@ -1,0 +1,224 @@
+//! Plan-cache properties (the adaptive-runtime acceptance bar):
+//!
+//! 1. Cached-plan output is **bitwise identical** to a freshly planned
+//!    sequential run, across M buckets and thread counts.
+//! 2. A mixed-M request stream builds each (bucket, threads) plan once;
+//!    after warmup, traffic only hits the cache.
+//! 3. The online top-2 fallback races real batches, locks the winner into
+//!    the shared tuning table, and never races a tuned class again.
+
+use std::sync::Arc;
+
+use stgemm::kernels::{dense_oracle, KernelParams};
+use stgemm::plan::{
+    m_bucket, Epilogue, LayerSpec, PlanCache, PlanCacheConfig, PlanHints, Planner,
+};
+use stgemm::tensor::Matrix;
+use stgemm::ternary::TernaryMatrix;
+
+const K: usize = 96;
+const N: usize = 24;
+
+fn bias() -> Vec<f32> {
+    (0..N).map(|i| 0.07 * i as f32 - 0.5).collect()
+}
+
+fn layer_spec(seed: u64, prelu: Option<f32>) -> LayerSpec {
+    LayerSpec::new(
+        TernaryMatrix::random(K, N, 0.25, seed),
+        Epilogue::new(bias(), 1.0, prelu),
+    )
+}
+
+/// Acceptance: cached-plan output equals a freshly planned sequential run,
+/// bitwise, for every M bucket and thread count. Online racing is off so
+/// the cache and the fresh planner make the same deterministic choice.
+#[test]
+fn cached_plan_is_bitwise_identical_to_fresh_sequential_plan() {
+    let planner = Arc::new(Planner::new());
+    let w = TernaryMatrix::random(K, N, 0.25, 7);
+    for &threads in &[1usize, 2, 4, 8] {
+        let cache = PlanCache::new(
+            Arc::clone(&planner),
+            PlanCacheConfig {
+                threads,
+                online_top2: false,
+                race_reps: 1,
+            },
+        );
+        let id = cache.register(layer_spec(7, Some(0.25))).unwrap();
+        for &m in &[1usize, 2, 5, 7, 8, 9, 16, 33, 64] {
+            let x = Matrix::random(m, K, 1000 + m as u64);
+            let mut y_cached = Matrix::zeros(m, N);
+            cache.run(id, &x, &mut y_cached).unwrap();
+
+            // Fresh, sequential, planner-selected plan over the same data.
+            let fresh = planner
+                .plan(
+                    &w,
+                    KernelParams::default(),
+                    Epilogue::new(bias(), 1.0, Some(0.25)),
+                    &PlanHints::default(),
+                )
+                .unwrap();
+            let mut y_fresh = Matrix::zeros(m, N);
+            fresh.run(&x, &mut y_fresh);
+            assert_eq!(
+                y_cached, y_fresh,
+                "threads={threads} m={m} (bucket {}): cache diverged from \
+                 fresh sequential plan",
+                m_bucket(m)
+            );
+        }
+    }
+}
+
+/// Even when the online race picks the kernel, the cached plan must stay
+/// bitwise identical to a fresh *sequential* plan pinned to the same
+/// kernel — thread fan-out never changes bits.
+#[test]
+fn raced_plan_is_bitwise_identical_to_its_sequential_twin() {
+    let planner = Arc::new(Planner::new());
+    let cache = PlanCache::new(
+        Arc::clone(&planner),
+        PlanCacheConfig {
+            threads: 4,
+            online_top2: true,
+            race_reps: 1,
+        },
+    );
+    let w = TernaryMatrix::random(K, N, 0.25, 13);
+    let id = cache
+        .register(LayerSpec::new(w.clone(), Epilogue::new(bias(), 1.0, None)))
+        .unwrap();
+    for &m in &[3usize, 8, 17] {
+        let x = Matrix::random(m, K, 2000 + m as u64);
+        let mut y_cached = Matrix::zeros(m, N);
+        cache.run(id, &x, &mut y_cached).unwrap();
+        // The race recorded a winner; a sequential plan now selects it too.
+        let winner = planner
+            .lookup_entry(K, 0.25)
+            .expect("race must record a winner")
+            .kernel;
+        let fresh = planner
+            .plan(
+                &w,
+                KernelParams::default(),
+                Epilogue::new(bias(), 1.0, None),
+                &PlanHints::with_kernel(&winner),
+            )
+            .unwrap();
+        let mut y_fresh = Matrix::zeros(m, N);
+        fresh.run(&x, &mut y_fresh);
+        assert_eq!(y_cached, y_fresh, "m={m} winner={winner}");
+    }
+}
+
+/// Acceptance: a mixed-M stream constructs no plans after warmup — every
+/// post-warmup request is a cache hit, and results stay correct.
+#[test]
+fn mixed_m_stream_hits_cache_after_warmup() {
+    let planner = Arc::new(Planner::new());
+    let cache = PlanCache::new(
+        Arc::clone(&planner),
+        PlanCacheConfig {
+            threads: 2,
+            online_top2: true,
+            race_reps: 1,
+        },
+    );
+    let w = TernaryMatrix::random(K, N, 0.25, 21);
+    let id = cache
+        .register(LayerSpec::new(w.clone(), Epilogue::new(bias(), 1.0, None)))
+        .unwrap();
+    let stream = [1usize, 4, 8, 2, 16, 7, 3, 8, 1, 5, 9, 16];
+    // Warmup pass: first sighting of each bucket builds (and may race).
+    for (i, &m) in stream.iter().enumerate() {
+        let x = Matrix::random(m, K, 3000 + i as u64);
+        let y = cache.forward(id, &x).unwrap();
+        assert!(y.allclose(&dense_oracle(&x, &w, &bias()), 1e-3), "m={m}");
+    }
+    let warm = cache.snapshot();
+    let distinct_buckets = {
+        let mut b: Vec<usize> = stream.iter().map(|&m| m_bucket(m)).collect();
+        b.sort_unstable();
+        b.dedup();
+        b.len()
+    };
+    assert_eq!(warm.plans, distinct_buckets);
+    assert_eq!(warm.misses, distinct_buckets as u64);
+    // Steady state: identical stream, zero plan construction.
+    for (i, &m) in stream.iter().enumerate() {
+        let x = Matrix::random(m, K, 4000 + i as u64);
+        cache.forward(id, &x).unwrap();
+    }
+    let hot = cache.snapshot();
+    assert_eq!(hot.misses, warm.misses, "no per-request plan construction");
+    assert_eq!(hot.plans, warm.plans);
+    assert_eq!(hot.races, warm.races, "tuned classes never race again");
+    assert_eq!(hot.hits, warm.hits + stream.len() as u64);
+}
+
+/// The online race records exactly one winner per class and the entry is
+/// one of the two paper candidates.
+#[test]
+fn online_race_is_once_per_class_and_paper_sane() {
+    let planner = Arc::new(Planner::new());
+    let cache = PlanCache::new(
+        Arc::clone(&planner),
+        PlanCacheConfig {
+            threads: 1,
+            online_top2: true,
+            race_reps: 1,
+        },
+    );
+    // Two layers in the same (K, sparsity) class.
+    let a = cache.register(layer_spec(31, None)).unwrap();
+    let b = cache
+        .register(LayerSpec::new(
+            TernaryMatrix::random(K, 8, 0.25, 32),
+            Epilogue::with_bias(vec![0.0; 8]),
+        ))
+        .unwrap();
+    assert!(planner.lookup_entry(K, 0.25).is_none());
+    let x = Matrix::random(8, K, 5000);
+    cache.forward(a, &x).unwrap();
+    let snap = cache.snapshot();
+    assert_eq!(snap.races, 1);
+    let entry = planner.lookup_entry(K, 0.25).expect("winner recorded");
+    let candidates = stgemm::plan::heuristic_top2(K, 0.25, false);
+    assert!(
+        candidates.contains(&entry.kernel.as_str()),
+        "winner '{}' must be a top-2 candidate {:?}",
+        entry.kernel,
+        candidates
+    );
+    // Second layer of the class: table hit, no second race.
+    cache.forward(b, &x).unwrap();
+    assert_eq!(cache.snapshot().races, 1);
+}
+
+/// Explicit kernel overrides bypass table and race — the documented
+/// escape hatch survives the cache refactor.
+#[test]
+fn explicit_override_bypasses_race_and_table() {
+    let planner = Arc::new(Planner::new());
+    let cache = PlanCache::new(
+        Arc::clone(&planner),
+        PlanCacheConfig {
+            threads: 1,
+            online_top2: true,
+            race_reps: 1,
+        },
+    );
+    let w = TernaryMatrix::random(K, N, 0.25, 41);
+    let mut spec = LayerSpec::new(w.clone(), Epilogue::new(bias(), 1.0, None));
+    spec.kernel = Some("base_tcsc".into());
+    let id = cache.register(spec).unwrap();
+    let x = Matrix::random(8, K, 6000);
+    let y = cache.forward(id, &x).unwrap();
+    assert!(y.allclose(&dense_oracle(&x, &w, &bias()), 1e-3));
+    assert_eq!(cache.snapshot().races, 0, "override must not race");
+    assert!(planner.lookup_entry(K, 0.25).is_none());
+    assert_eq!(cache.kernel_for(id, 8), "base_tcsc");
+}

@@ -10,6 +10,7 @@
 
 use stgemm::coordinator::Engine;
 use stgemm::model::{TernaryLinear, TernaryMlp};
+use stgemm::plan::{PlanHints, Planner};
 use stgemm::runtime::{Manifest, XlaExecutor};
 use stgemm::tensor::Matrix;
 
@@ -27,14 +28,17 @@ fn manifest() -> Option<Manifest> {
     }
 }
 
+/// Artifact weights flow through the planner (tuning table + paper
+/// heuristics) like the serving path — no kernel names pinned here.
 fn native_from_artifact(manifest: &Manifest, base: &str) -> TernaryMlp {
+    let planner = Planner::new();
     let v0 = manifest.variants_of(base)[0];
     let mut layers = Vec::new();
     for (i, l) in v0.layers.iter().enumerate() {
         let w = v0.load_weights(&manifest.dir, i).expect("weights");
         let b = v0.load_bias(&manifest.dir, i).expect("bias");
         layers.push(
-            TernaryLinear::new("interleaved_blocked_tcsc", &w, b, 1.0, l.prelu_alpha)
+            TernaryLinear::planned(&planner, &w, b, 1.0, l.prelu_alpha, &PlanHints::default())
                 .expect("layer"),
         );
     }
