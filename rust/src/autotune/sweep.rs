@@ -5,16 +5,21 @@
 //! per invocation; a multi-layer serving config needs its whole set of
 //! classes covered before the planner stops falling back to heuristics
 //! (or the plan cache stops racing). The sweep walks the config's layer
-//! shapes, measures every candidate kernel at each batch bucket, and
-//! records one winner per class — the kernel with the best *mean*
-//! flops/cycle across buckets, since the table is keyed by (K, sparsity)
-//! only (M is performance-neutral per paper Fig 8, but the mean guards
-//! against a kernel that only wins at a single outlier bucket).
+//! shapes and measures every candidate kernel at each batch bucket.
 //!
-//! The serve-time background re-tune hook runs exactly this sweep on a
-//! snapshot of the live table and installs the result.
+//! Winner selection ([`decide_winners`]): every class always gets an
+//! **M-agnostic** entry — the kernel with the best *mean* flops/cycle
+//! across buckets, the fallback every batch size resolves to. With
+//! [`SweepOptions::per_m`] (`autotune sweep --per-m`), a bucket whose own
+//! winner beats that mean winner's measurement *in that bucket* by more
+//! than [`SweepOptions::divergence_threshold`] additionally gets an
+//! **M-aware** `k{K}_s{S}_m{M}` entry — so a kernel that only wins at
+//! M=1 is no longer silently locked in for M=64 (and vice versa).
+//!
+//! The serve-time background re-tune hook runs exactly this sweep (per-M
+//! enabled) on a snapshot of the live table and installs the result.
 
-use crate::autotune::table::{ShapeClass, TuneEntry, TuningTable};
+use crate::autotune::table::{m_bucket, ShapeClass, TuneEntry, TuningTable};
 use crate::bench::harness::measure_kernel;
 use crate::kernels::KernelParams;
 use crate::model::ModelConfig;
@@ -32,27 +37,142 @@ pub struct SweepPoint {
     pub flops_per_cycle: f64,
 }
 
+/// Winner-selection knobs for [`sweep_model_opts`].
+#[derive(Debug, Clone)]
+pub struct SweepOptions {
+    /// Record an extra winner per M bucket when the per-bucket winners
+    /// diverge from the mean winner (`--per-m`). Off = PR-2 behaviour
+    /// (mean collapse only).
+    pub per_m: bool,
+    /// Minimum relative flops/cycle gain of a bucket's own winner over
+    /// the mean winner's measurement in that bucket before an M-aware
+    /// entry is recorded (e.g. 0.08 = 8%). Guards against timing noise
+    /// splitting every class into per-bucket entries.
+    pub divergence_threshold: f64,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions {
+            per_m: false,
+            divergence_threshold: 0.08,
+        }
+    }
+}
+
 /// Everything a sweep measured and decided.
 #[derive(Debug, Clone, Default)]
 pub struct SweepReport {
     /// Raw measurements, one per (class, bucket, kernel).
     pub points: Vec<SweepPoint>,
-    /// Winner per shape class, in layer order (deduplicated: layers that
-    /// share a class are measured once).
+    /// Winners in layer order (deduplicated: layers that share a class are
+    /// measured once). M-agnostic entries first per class, then any
+    /// M-aware splits.
     pub winners: Vec<(ShapeClass, TuneEntry)>,
 }
 
+/// Decide the tuning entries for one class from its per-(kernel, bucket)
+/// measurements. `measured[i]` is a candidate kernel with one flops/cycle
+/// value per entry of `buckets` (same order). Pure so the divergence
+/// logic is unit-testable without timing anything.
+///
+/// Raw buckets are **grouped onto their pow2 M buckets first**: two raw
+/// sizes that share a plan bucket share one tuning entry, so their
+/// measurements are averaged — they can neither contradict each other in
+/// a split nor double-weight their bucket in the mean. The M-agnostic
+/// mean winner (yielded first, always) is the best mean over those
+/// grouped aggregates; with `opts.per_m`, a grouped bucket whose own
+/// winner beats the mean winner's aggregate there by more than the
+/// threshold gets an M-aware entry too.
+pub fn decide_winners(
+    k: usize,
+    sparsity: f32,
+    buckets: &[usize],
+    measured: &[(String, Vec<f64>)],
+    opts: &SweepOptions,
+) -> Vec<(ShapeClass, TuneEntry)> {
+    assert!(!measured.is_empty(), "sweep needs at least one candidate");
+    // Group raw bucket indices by their snapped pow2 M bucket.
+    let mut snapped: Vec<usize> = Vec::new();
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    for (bi, &m) in buckets.iter().enumerate() {
+        let b = m_bucket(m);
+        match snapped.iter().position(|&s| s == b) {
+            Some(gi) => groups[gi].push(bi),
+            None => {
+                snapped.push(b);
+                groups.push(vec![bi]);
+            }
+        }
+    }
+    let agg = |ki: usize, group: &[usize]| {
+        group.iter().map(|&bi| measured[ki].1[bi]).sum::<f64>() / group.len().max(1) as f64
+    };
+    let bucket_mean = |ki: usize| {
+        groups.iter().map(|g| agg(ki, g)).sum::<f64>() / groups.len().max(1) as f64
+    };
+    let mean_idx = (0..measured.len())
+        .max_by(|&x, &y| {
+            bucket_mean(x)
+                .partial_cmp(&bucket_mean(y))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
+        .expect("non-empty candidate set");
+    let mut winners = vec![(
+        ShapeClass::of(k, sparsity),
+        TuneEntry {
+            kernel: measured[mean_idx].0.clone(),
+            flops_per_cycle: bucket_mean(mean_idx),
+        },
+    )];
+    if !opts.per_m {
+        return winners;
+    }
+    for (b, group) in snapped.iter().zip(&groups) {
+        let best_idx = (0..measured.len())
+            .max_by(|&x, &y| {
+                agg(x, group)
+                    .partial_cmp(&agg(y, group))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .expect("non-empty candidate set");
+        if best_idx == mean_idx {
+            continue;
+        }
+        let best = agg(best_idx, group);
+        let baseline = agg(mean_idx, group).max(f64::MIN_POSITIVE);
+        if best / baseline <= 1.0 + opts.divergence_threshold {
+            continue;
+        }
+        winners.push((
+            ShapeClass::of_m(k, sparsity, *b),
+            TuneEntry {
+                kernel: measured[best_idx].0.clone(),
+                flops_per_cycle: best,
+            },
+        ));
+    }
+    winners
+}
+
 /// Measure `candidates` for every distinct (K, sparsity) class of `cfg`'s
-/// layers at every bucket in `buckets`, record each class winner into
-/// `table`, and return the full report. Existing entries for swept classes
-/// are overwritten (fresh measurements beat stale ones); other entries are
-/// left untouched.
-pub fn sweep_model(
+/// layers at every bucket in `buckets`, record the class winners (see
+/// [`decide_winners`]) into `table`, and return the full report.
+///
+/// Table hygiene: a swept class's **M-agnostic** entry is always
+/// overwritten (fresh measurements beat stale ones). Its **M-aware**
+/// splits are retired only by a per-M sweep, and only for the buckets it
+/// measured — a mean-collapse sweep never evaluated per-bucket
+/// divergence, so it leaves race-recorded splits in place rather than
+/// silently discarding per-bucket knowledge it cannot recreate (run
+/// `--per-m` to re-evaluate them). Unswept classes are untouched.
+pub fn sweep_model_opts(
     cfg: &ModelConfig,
     buckets: &[usize],
     candidates: &[&str],
     timer: &CycleTimer,
     table: &mut TuningTable,
+    opts: &SweepOptions,
 ) -> SweepReport {
     assert!(!candidates.is_empty(), "sweep needs at least one candidate");
     let buckets: Vec<usize> = if buckets.is_empty() {
@@ -69,9 +189,9 @@ pub fn sweep_model(
             continue;
         }
         seen.push(class);
-        let mut best: Option<TuneEntry> = None;
+        let mut measured: Vec<(String, Vec<f64>)> = Vec::with_capacity(candidates.len());
         for &kernel in candidates {
-            let mut sum = 0.0;
+            let mut fpcs = Vec::with_capacity(buckets.len());
             for &m in &buckets {
                 let meas = measure_kernel(
                     kernel,
@@ -93,25 +213,39 @@ pub fn sweep_model(
                     kernel: kernel.to_string(),
                     flops_per_cycle: fpc,
                 });
-                sum += fpc;
+                fpcs.push(fpc);
             }
-            let mean = sum / buckets.len() as f64;
-            if best
-                .as_ref()
-                .map(|b| mean > b.flops_per_cycle)
-                .unwrap_or(true)
-            {
-                best = Some(TuneEntry {
-                    kernel: kernel.to_string(),
-                    flops_per_cycle: mean,
-                });
+            measured.push((kernel.to_string(), fpcs));
+        }
+        // A per-M sweep re-measured every bucket it covers, so stale
+        // M-aware entries for those buckets (e.g. a noisy online-race
+        // winner, or a divergence split that no longer holds) must be
+        // retired — `lookup_m` prefers M-aware entries, so merely
+        // inserting the fresh winners could never correct them. Buckets
+        // this sweep did not measure keep their entries.
+        if opts.per_m {
+            for &m in &buckets {
+                table.remove(&ShapeClass::of_m(k, cfg.sparsity, m));
             }
         }
-        let entry = best.expect("non-empty candidate set");
-        table.insert(class, entry.clone());
-        report.winners.push((class, entry));
+        for (class, entry) in decide_winners(k, cfg.sparsity, &buckets, &measured, opts) {
+            table.insert(class, entry.clone());
+            report.winners.push((class, entry));
+        }
     }
     report
+}
+
+/// [`sweep_model_opts`] with default options: M-agnostic mean winners
+/// only, exactly the PR-2 behaviour.
+pub fn sweep_model(
+    cfg: &ModelConfig,
+    buckets: &[usize],
+    candidates: &[&str],
+    timer: &CycleTimer,
+    table: &mut TuningTable,
+) -> SweepReport {
+    sweep_model_opts(cfg, buckets, candidates, timer, table, &SweepOptions::default())
 }
 
 #[cfg(test)]
@@ -124,6 +258,10 @@ mod tests {
                 "batch_buckets":[1,4]}"#,
         )
         .unwrap()
+    }
+
+    fn entry_for(winners: &[(ShapeClass, TuneEntry)], class: ShapeClass) -> Option<&TuneEntry> {
+        winners.iter().find(|(c, _)| *c == class).map(|(_, e)| e)
     }
 
     #[test]
@@ -172,5 +310,198 @@ mod tests {
         let report = sweep_model(&c, &[], &["base_tcsc"], &timer, &mut table);
         assert_eq!(report.points.len(), 2, "one default bucket per class");
         assert!(report.points.iter().all(|p| p.bucket == 16));
+    }
+
+    #[test]
+    fn decide_winners_mean_collapse_without_per_m() {
+        // Kernel A wins at M=1, B wins (bigger) at M=16: B has the better
+        // mean, and without per_m that is the only entry recorded.
+        let measured = vec![
+            ("a".to_string(), vec![3.0, 1.0]),
+            ("b".to_string(), vec![2.0, 4.0]),
+        ];
+        let w = decide_winners(64, 0.25, &[1, 16], &measured, &SweepOptions::default());
+        assert_eq!(w.len(), 1);
+        assert_eq!(w[0].0, ShapeClass::of(64, 0.25));
+        assert_eq!(w[0].1.kernel, "b");
+        assert!((w[0].1.flops_per_cycle - 3.0).abs() < 1e-9, "mean of 2 and 4");
+    }
+
+    #[test]
+    fn decide_winners_splits_diverging_buckets() {
+        let measured = vec![
+            ("a".to_string(), vec![3.0, 1.0]),
+            ("b".to_string(), vec![2.0, 4.0]),
+        ];
+        let opts = SweepOptions {
+            per_m: true,
+            divergence_threshold: 0.10,
+        };
+        let w = decide_winners(64, 0.25, &[1, 16], &measured, &opts);
+        // Mean winner b, plus an M-aware split for bucket 1 where a's 3.0
+        // beats b's 2.0 by 50% > 10%.
+        assert_eq!(w.len(), 2);
+        assert_eq!(
+            entry_for(&w, ShapeClass::of(64, 0.25)).unwrap().kernel,
+            "b"
+        );
+        let split = entry_for(&w, ShapeClass::of_m(64, 0.25, 1)).unwrap();
+        assert_eq!(split.kernel, "a");
+        assert!((split.flops_per_cycle - 3.0).abs() < 1e-9);
+        // No entry for bucket 16: b wins it outright.
+        assert!(entry_for(&w, ShapeClass::of_m(64, 0.25, 16)).is_none());
+    }
+
+    #[test]
+    fn decide_winners_threshold_suppresses_noise_splits() {
+        // a beats b at M=1 by only 4% — below an 8% threshold, so the
+        // divergence is treated as noise and collapsed into the mean.
+        let measured = vec![
+            ("a".to_string(), vec![2.08, 1.0]),
+            ("b".to_string(), vec![2.0, 4.0]),
+        ];
+        let opts = SweepOptions {
+            per_m: true,
+            divergence_threshold: 0.08,
+        };
+        let w = decide_winners(64, 0.25, &[1, 16], &measured, &opts);
+        assert_eq!(w.len(), 1, "4% gain must not split the class");
+        // Raise the gain past the threshold and the split appears.
+        let measured = vec![
+            ("a".to_string(), vec![2.4, 1.0]),
+            ("b".to_string(), vec![2.0, 4.0]),
+        ];
+        let w = decide_winners(64, 0.25, &[1, 16], &measured, &opts);
+        assert_eq!(w.len(), 2, "20% gain splits the class");
+    }
+
+    #[test]
+    fn decide_winners_groups_same_pow2_bucket_before_selection() {
+        // Raw buckets 3 and 4 both snap to M bucket 4: their measurements
+        // are averaged before winner selection, yielding one entry whose
+        // flops/cycle is the group aggregate.
+        let measured = vec![
+            ("a".to_string(), vec![3.0, 3.5, 1.0]),
+            ("b".to_string(), vec![2.0, 2.0, 4.0]),
+        ];
+        let opts = SweepOptions {
+            per_m: true,
+            divergence_threshold: 0.10,
+        };
+        let w = decide_winners(64, 0.25, &[3, 4, 16], &measured, &opts);
+        let split = entry_for(&w, ShapeClass::of_m(64, 0.25, 4)).unwrap();
+        assert_eq!(split.kernel, "a");
+        assert!((split.flops_per_cycle - 3.25).abs() < 1e-9, "mean of 3.0, 3.5");
+        assert_eq!(w.len(), 2, "one agnostic + one grouped M-aware entry");
+    }
+
+    #[test]
+    fn decide_winners_mean_weights_each_plan_bucket_once() {
+        // Raw buckets 3 and 4 collide on plan bucket 4. Ungrouped, the
+        // small-M specialist a would win the mean (2.53 vs 2.47) purely
+        // because its best bucket is counted twice; grouped per plan
+        // bucket, b wins (2.7 vs 2.25) — and b is what unmeasured large
+        // buckets (e.g. M=1024 traffic) resolve to via the fallback.
+        let measured = vec![
+            ("a".to_string(), vec![3.1, 3.1, 1.4]),
+            ("b".to_string(), vec![2.0, 2.0, 3.4]),
+        ];
+        let opts = SweepOptions {
+            per_m: true,
+            divergence_threshold: 0.10,
+        };
+        let w = decide_winners(64, 0.25, &[3, 4, 16], &measured, &opts);
+        let fallback = entry_for(&w, ShapeClass::of(64, 0.25)).unwrap();
+        assert_eq!(fallback.kernel, "b");
+        assert!((fallback.flops_per_cycle - 2.7).abs() < 1e-9);
+        // Plan bucket 4 still gets its specialist split (a: 3.1 vs b: 2.0).
+        let split = entry_for(&w, ShapeClass::of_m(64, 0.25, 4)).unwrap();
+        assert_eq!(split.kernel, "a");
+        assert_eq!(w.len(), 2);
+    }
+
+    #[test]
+    fn decide_winners_colliding_raw_buckets_cannot_contradict_each_other() {
+        // Raw buckets 3 and 4 share M bucket 4. At raw 3 kernel a leads,
+        // but at raw 4 (the bucket's actual size) b wins big: aggregated,
+        // b leads the group (3.0 vs 2.0), so no split may be recorded —
+        // pre-grouping, raw 3's divergence would have installed a for the
+        // whole bucket even though the sweep measured it 4x slower at M=4.
+        let measured = vec![
+            ("a".to_string(), vec![3.0, 1.0]),
+            ("b".to_string(), vec![2.0, 4.0]),
+        ];
+        let opts = SweepOptions {
+            per_m: true,
+            divergence_threshold: 0.08,
+        };
+        let w = decide_winners(64, 0.25, &[3, 4], &measured, &opts);
+        assert_eq!(w.len(), 1, "group winner equals mean winner → no split");
+        assert_eq!(w[0].1.kernel, "b");
+    }
+
+    #[test]
+    fn per_m_sweep_retires_stale_m_entries_for_measured_buckets() {
+        let c = cfg(); // buckets [1, 4], classes K=32 and K=64 at 25%
+        let timer = CycleTimer::new(0, 1);
+        let mut table = TuningTable::new();
+        // Stale M-aware entries: one for a bucket this sweep measures
+        // (must be retired — with a single candidate the fresh sweep can
+        // never re-split, so only retirement can correct it), one for a
+        // bucket it does not (must survive).
+        let stale = TuneEntry {
+            kernel: "unrolled_tcsc_12".into(),
+            flops_per_cycle: 9.9,
+        };
+        table.insert(ShapeClass::of_m(32, 0.25, 1), stale.clone());
+        table.insert(ShapeClass::of_m(32, 0.25, 64), stale.clone());
+        let opts = SweepOptions {
+            per_m: true,
+            ..Default::default()
+        };
+        sweep_model_opts(&c, &c.batch_buckets, &["base_tcsc"], &timer, &mut table, &opts);
+        // Bucket 1 was measured: the stale split is gone, so lookups fall
+        // back to the fresh mean winner.
+        assert_eq!(table.lookup_m(32, 0.25, 1).unwrap().kernel, "base_tcsc");
+        // Bucket 64 was not measured: its entry is untouched.
+        assert_eq!(table.lookup_m(32, 0.25, 64).unwrap(), &stale);
+        // A non-per-M sweep must not retire race-recorded splits.
+        let mut table2 = TuningTable::new();
+        table2.insert(ShapeClass::of_m(32, 0.25, 1), stale.clone());
+        sweep_model(&c, &c.batch_buckets, &["base_tcsc"], &timer, &mut table2);
+        assert_eq!(table2.lookup_m(32, 0.25, 1).unwrap(), &stale);
+    }
+
+    #[test]
+    fn per_m_sweep_records_fallback_plus_any_splits() {
+        let c = cfg();
+        let timer = CycleTimer::new(0, 1);
+        let mut table = TuningTable::new();
+        let opts = SweepOptions {
+            per_m: true,
+            ..Default::default()
+        };
+        let report = sweep_model_opts(
+            &c,
+            &c.batch_buckets,
+            &["base_tcsc", "unrolled_tcsc_12"],
+            &timer,
+            &mut table,
+            &opts,
+        );
+        // Whatever the timings did, every class has its M-agnostic
+        // fallback, and any M-aware winner's bucket traces back to a
+        // bucket this sweep actually measured.
+        for i in 0..c.dims.len() - 1 {
+            assert!(table.lookup(c.dims[i], c.sparsity).is_some());
+        }
+        for (class, _) in &report.winners {
+            if let Some(m) = class.m_bucket {
+                assert!(
+                    c.batch_buckets.iter().any(|&b| m_bucket(b) == m as usize),
+                    "M-aware entry recorded for unmeasured bucket {m}"
+                );
+            }
+        }
     }
 }

@@ -2,6 +2,15 @@
 //! class, saved as JSON and consulted by the model builder so serving
 //! picks the empirically best kernel for each layer shape — the runtime
 //! counterpart of the paper's offline grid searches.
+//!
+//! # Key format and fallback
+//!
+//! Classes are keyed `k{K}_s{S}` (M-agnostic, the PR-2 format) or
+//! `k{K}_s{S}_m{M}` (M-aware, recorded when a sweep or an online race
+//! observes per-batch-bucket winners diverging). [`TuningTable::lookup_m`]
+//! resolves `(K, sparsity, M)` to the M-aware entry when one exists and
+//! falls back to the M-agnostic `(K, sparsity)` entry otherwise, so
+//! existing JSON tables keep working unchanged.
 
 use crate::bench::harness::measure_kernel;
 use crate::kernels::KernelParams;
@@ -9,35 +18,107 @@ use crate::perf::timer::CycleTimer;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
-/// Problem class key: K and sparsity are the parameters that matter
-/// (paper §4: M and N are performance-neutral). K is bucketed to powers
-/// of two; sparsity to the paper's four levels.
+/// Largest M bucket: batches beyond this share one plan / tuning entry.
+pub const MAX_M_BUCKET: usize = 1024;
+
+/// Bucket a batch size: next power of two, clamped to `[1, MAX_M_BUCKET]`.
+///
+/// This is the **single source of truth** for M bucketing: plan-cache keys
+/// and M-aware tuning classes must agree on the bucket boundaries, or a
+/// cached plan could never find the entry a sweep recorded for it.
+pub fn m_bucket(m: usize) -> usize {
+    m.max(1).next_power_of_two().min(MAX_M_BUCKET)
+}
+
+/// Problem class key: K and sparsity always matter (paper §4); the batch
+/// bucket M is optional, recorded only when per-bucket winners actually
+/// diverge (M is performance-neutral for *one* kernel per paper Fig 8, but
+/// the winning kernel can change with M). K is bucketed to powers of two;
+/// sparsity to the paper's four levels; M to pow2 plan-cache buckets.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub struct ShapeClass {
     pub k_bucket: u32,
     /// Sparsity in basis points (e.g. 2500 = 25%), bucketed.
     pub sparsity_bp: u32,
+    /// Batch bucket for M-aware entries; `None` = M-agnostic (the PR-2
+    /// key format, and the fallback every batch size resolves to).
+    pub m_bucket: Option<u32>,
 }
 
 impl ShapeClass {
+    /// The M-agnostic class for a shape (PR-2 semantics).
     pub fn of(k: usize, sparsity: f32) -> ShapeClass {
         ShapeClass {
             k_bucket: (k.max(1) as u32).next_power_of_two(),
             sparsity_bp: bucket_sparsity(sparsity),
+            m_bucket: None,
+        }
+    }
+
+    /// The M-aware class for a shape at batch size `m`.
+    pub fn of_m(k: usize, sparsity: f32, m: usize) -> ShapeClass {
+        ShapeClass {
+            m_bucket: Some(m_bucket(m) as u32),
+            ..ShapeClass::of(k, sparsity)
+        }
+    }
+
+    /// This class with the M dimension dropped (the fallback key).
+    pub fn m_agnostic(&self) -> ShapeClass {
+        ShapeClass {
+            m_bucket: None,
+            ..*self
         }
     }
 
     fn key(&self) -> String {
-        format!("k{}_s{}", self.k_bucket, self.sparsity_bp)
+        match self.m_bucket {
+            Some(m) => format!("k{}_s{}_m{}", self.k_bucket, self.sparsity_bp, m),
+            None => format!("k{}_s{}", self.k_bucket, self.sparsity_bp),
+        }
     }
 
+    /// Parse a table key. Values are **re-bucketed** (K snapped to a power
+    /// of two, sparsity to the nearest paper level, M to a pow2 bucket):
+    /// `of`/`of_m` always snap, so a hand-edited or stale key that skips
+    /// the snapping could never match a lookup and would be silently dead
+    /// weight. A warning is emitted when re-bucketing changed anything.
     fn parse(key: &str) -> Option<ShapeClass> {
         let rest = key.strip_prefix('k')?;
-        let (k, s) = rest.split_once("_s")?;
-        Some(ShapeClass {
-            k_bucket: k.parse().ok()?,
-            sparsity_bp: s.parse().ok()?,
-        })
+        let (k, rest) = rest.split_once("_s")?;
+        let (s, m) = match rest.split_once("_m") {
+            Some((s, m)) => (s, Some(m)),
+            None => (rest, None),
+        };
+        let k: u32 = k.parse().ok()?;
+        let s: u32 = s.parse().ok()?;
+        let m: Option<u32> = match m {
+            Some(raw) => Some(raw.parse().ok()?),
+            None => None,
+        };
+        let parsed = ShapeClass {
+            k_bucket: k,
+            sparsity_bp: s,
+            m_bucket: m,
+        };
+        let sparsity = s as f32 / 10_000.0;
+        let snapped = match m {
+            Some(m) => ShapeClass::of_m(k as usize, sparsity, m as usize),
+            None => ShapeClass::of(k as usize, sparsity),
+        };
+        if snapped != parsed {
+            eprintln!(
+                "[tuning] warning: key '{key}' is not bucketed; re-bucketed to '{}'",
+                snapped.key()
+            );
+        }
+        Some(snapped)
+    }
+}
+
+impl std::fmt::Display for ShapeClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.key())
     }
 }
 
@@ -77,23 +158,43 @@ impl TuningTable {
         self.entries.is_empty()
     }
 
-    pub fn insert(&mut self, class: ShapeClass, entry: TuneEntry) {
-        self.entries.insert(class, entry);
+    /// Insert (or replace) an entry; returns the entry it displaced.
+    pub fn insert(&mut self, class: ShapeClass, entry: TuneEntry) -> Option<TuneEntry> {
+        self.entries.insert(class, entry)
     }
 
-    /// Best-known kernel for a shape, if tuned.
+    /// Remove one entry (sweeps retire stale M-aware splits with this).
+    pub fn remove(&mut self, class: &ShapeClass) -> Option<TuneEntry> {
+        self.entries.remove(class)
+    }
+
+    /// The exact M-agnostic entry for a shape, if tuned (PR-2 semantics;
+    /// batch-aware callers want [`TuningTable::lookup_m`]).
     pub fn lookup(&self, k: usize, sparsity: f32) -> Option<&TuneEntry> {
         self.entries.get(&ShapeClass::of(k, sparsity))
     }
 
-    /// Kernel to use for a shape: tuned winner or the paper default.
-    pub fn kernel_for(&self, k: usize, sparsity: f32) -> &str {
-        self.lookup(k, sparsity)
+    /// Best-known entry for a shape at batch size `m`: the M-aware entry
+    /// when a sweep/race recorded one for `m`'s bucket, else the
+    /// M-agnostic `(K, sparsity)` entry — so PR-2-era tables keep
+    /// resolving for every batch size.
+    pub fn lookup_m(&self, k: usize, sparsity: f32, m: usize) -> Option<&TuneEntry> {
+        self.entries
+            .get(&ShapeClass::of_m(k, sparsity, m))
+            .or_else(|| self.entries.get(&ShapeClass::of(k, sparsity)))
+    }
+
+    /// Kernel to use for a shape at batch size `m`: tuned winner (M-aware
+    /// first, then the M-agnostic fallback) or the paper default.
+    pub fn kernel_for(&self, k: usize, sparsity: f32, m: usize) -> &str {
+        self.lookup_m(k, sparsity, m)
             .map(|e| e.kernel.as_str())
             .unwrap_or("interleaved_blocked_tcsc")
     }
 
-    /// Measure the candidate set for one shape class and record the winner.
+    /// Measure the candidate set for one shape class and record the winner
+    /// under the M-agnostic class (single-shape `autotune --save` flow;
+    /// M-aware entries come from [`crate::autotune::sweep_model_opts`]).
     pub fn tune(
         &mut self,
         k: usize,
@@ -165,13 +266,25 @@ impl TuningTable {
                 .get("flops_per_cycle")
                 .and_then(|f| f.as_f64())
                 .unwrap_or(0.0);
-            t.insert(
+            let displaced = t.insert(
                 class,
                 TuneEntry {
-                    kernel,
+                    kernel: kernel.clone(),
                     flops_per_cycle: fpc,
                 },
             );
+            // Re-bucketing can make formerly-distinct keys (one snapped,
+            // one not) land on the same class; the later-iterated key
+            // wins (objects iterate in lexicographic key order), but
+            // silently dropping a measured entry is worth a warning.
+            if let Some(prev) = displaced {
+                eprintln!(
+                    "[tuning] warning: key '{key}' collides with an earlier \
+                     entry for '{class}' after re-bucketing; replacing \
+                     '{}' with '{kernel}'",
+                    prev.kernel
+                );
+            }
         }
         Ok(t)
     }
@@ -199,23 +312,110 @@ mod tests {
         assert_eq!(ShapeClass::of(1025, 0.25).k_bucket, 2048);
         assert_eq!(ShapeClass::of(8192, 0.26).sparsity_bp, 2500);
         assert_eq!(ShapeClass::of(8192, 0.06).sparsity_bp, 625);
+        assert_eq!(ShapeClass::of(1024, 0.25).m_bucket, None);
+        assert_eq!(ShapeClass::of_m(1024, 0.25, 3).m_bucket, Some(4));
+        assert_eq!(
+            ShapeClass::of_m(1024, 0.25, 100_000).m_bucket,
+            Some(MAX_M_BUCKET as u32)
+        );
+        assert_eq!(
+            ShapeClass::of_m(1024, 0.25, 8).m_agnostic(),
+            ShapeClass::of(1024, 0.25)
+        );
+    }
+
+    #[test]
+    fn m_buckets_are_pow2_and_capped() {
+        assert_eq!(m_bucket(0), 1);
+        assert_eq!(m_bucket(1), 1);
+        assert_eq!(m_bucket(2), 2);
+        assert_eq!(m_bucket(3), 4);
+        assert_eq!(m_bucket(8), 8);
+        assert_eq!(m_bucket(9), 16);
+        assert_eq!(m_bucket(100_000), MAX_M_BUCKET);
     }
 
     #[test]
     fn key_roundtrip() {
         let c = ShapeClass::of(4096, 0.5);
+        assert_eq!(c.key(), "k4096_s5000");
         assert_eq!(ShapeClass::parse(&c.key()), Some(c));
+        let cm = ShapeClass::of_m(4096, 0.5, 16);
+        assert_eq!(cm.key(), "k4096_s5000_m16");
+        assert_eq!(ShapeClass::parse(&cm.key()), Some(cm));
         assert_eq!(ShapeClass::parse("garbage"), None);
+        assert_eq!(ShapeClass::parse("k12_s25_mx"), None);
+    }
+
+    #[test]
+    fn unbucketed_keys_are_rebucketed_on_parse() {
+        // PR-2 bug: `k1000_s2400` round-tripped but could never match a
+        // lookup, since `of()` snaps K to pow2 and sparsity to paper
+        // levels — stale hand-edited JSON was silently dead weight.
+        assert_eq!(
+            ShapeClass::parse("k1000_s2400"),
+            Some(ShapeClass::of(1000, 0.24))
+        );
+        assert_eq!(
+            ShapeClass::parse("k1024_s2500_m3"),
+            Some(ShapeClass::of_m(1024, 0.25, 3))
+        );
+        let mut t = TuningTable::new();
+        t.insert(
+            ShapeClass::parse("k1000_s2400").unwrap(),
+            TuneEntry {
+                kernel: "base_tcsc".into(),
+                flops_per_cycle: 1.0,
+            },
+        );
+        assert!(t.lookup(1000, 0.24).is_some(), "re-bucketed entry resolves");
+    }
+
+    #[test]
+    fn lookup_m_prefers_exact_bucket_then_falls_back() {
+        let mut t = TuningTable::new();
+        t.insert(
+            ShapeClass::of(512, 0.25),
+            TuneEntry {
+                kernel: "interleaved_blocked_tcsc".into(),
+                flops_per_cycle: 2.0,
+            },
+        );
+        t.insert(
+            ShapeClass::of_m(512, 0.25, 1),
+            TuneEntry {
+                kernel: "unrolled_tcsc_k4_m4".into(),
+                flops_per_cycle: 3.0,
+            },
+        );
+        // Exact bucket wins.
+        assert_eq!(t.kernel_for(512, 0.25, 1), "unrolled_tcsc_k4_m4");
+        // Other buckets fall back to the M-agnostic entry.
+        assert_eq!(t.kernel_for(512, 0.25, 16), "interleaved_blocked_tcsc");
+        // An M-aware-only table still misses unrelated buckets...
+        let mut only_m = TuningTable::new();
+        only_m.insert(
+            ShapeClass::of_m(256, 0.5, 8),
+            TuneEntry {
+                kernel: "base_tcsc".into(),
+                flops_per_cycle: 1.0,
+            },
+        );
+        assert!(only_m.lookup_m(256, 0.5, 64).is_none());
+        // ...but same-bucket batch sizes share the entry (5 → bucket 8).
+        assert!(only_m.lookup_m(256, 0.5, 5).is_some());
+        // Untuned shapes get the paper default.
+        assert_eq!(t.kernel_for(2048, 0.25, 4), "interleaved_blocked_tcsc");
     }
 
     #[test]
     fn tune_records_a_winner_and_default_fallback() {
         let mut t = TuningTable::new();
-        assert_eq!(t.kernel_for(2048, 0.25), "interleaved_blocked_tcsc");
+        assert_eq!(t.kernel_for(2048, 0.25, 16), "interleaved_blocked_tcsc");
         let timer = CycleTimer::new(0, 1);
         let entry = t.tune(512, 0.25, &["base_tcsc", "unrolled_tcsc_12"], &timer);
         assert!(["base_tcsc", "unrolled_tcsc_12"].contains(&entry.kernel.as_str()));
-        assert_eq!(t.kernel_for(512, 0.25), entry.kernel);
+        assert_eq!(t.kernel_for(512, 0.25, 16), entry.kernel);
         assert_eq!(t.len(), 1);
     }
 
@@ -236,13 +436,37 @@ mod tests {
                 flops_per_cycle: 1.5,
             },
         );
+        t.insert(
+            ShapeClass::of_m(1024, 0.0625, 64),
+            TuneEntry {
+                kernel: "simd_vertical".into(),
+                flops_per_cycle: 3.5,
+            },
+        );
         let decoded = TuningTable::from_json(&t.to_json()).unwrap();
         assert_eq!(decoded, t);
     }
 
     #[test]
+    fn colliding_rebucketed_keys_keep_one_entry_on_load() {
+        // "k1000_s2500" re-buckets onto "k1024_s2500": one class survives
+        // (the lexicographically later key — Json objects iterate in key
+        // order) and a warning is emitted rather than a silent drop.
+        let json = Json::parse(
+            r#"{"k1000_s2500": {"kernel": "base_tcsc"},
+                "k1024_s2500": {"kernel": "unrolled_tcsc_12"}}"#,
+        )
+        .unwrap();
+        let t = TuningTable::from_json(&json).unwrap();
+        assert_eq!(t.len(), 1, "both keys snap to the same class");
+        assert_eq!(t.lookup(1024, 0.25).unwrap().kernel, "unrolled_tcsc_12");
+    }
+
+    #[test]
     fn rejects_unknown_kernel_on_load() {
         let json = Json::parse(r#"{"k1024_s2500": {"kernel": "bogus"}}"#).unwrap();
+        assert!(TuningTable::from_json(&json).is_err());
+        let json = Json::parse(r#"{"k1024_s2500_m8": {"kernel": "bogus"}}"#).unwrap();
         assert!(TuningTable::from_json(&json).is_err());
     }
 
@@ -251,6 +475,13 @@ mod tests {
         let mut t = TuningTable::new();
         let timer = CycleTimer::new(0, 1);
         t.tune(256, 0.5, &["base_tcsc"], &timer);
+        t.insert(
+            ShapeClass::of_m(256, 0.5, 4),
+            TuneEntry {
+                kernel: "unrolled_tcsc_12".into(),
+                flops_per_cycle: 2.0,
+            },
+        );
         let path = std::env::temp_dir().join("stgemm_tuning_test.json");
         let path = path.to_str().unwrap();
         t.save(path).unwrap();

@@ -33,10 +33,16 @@ pub struct LoadControlConfig {
     /// Upper bound for the advised batch ceiling (e.g. the largest
     /// compiled bucket, or a memory bound).
     pub max_batch: usize,
-    /// Upper bound for the advised worker-thread count.
+    /// Upper bound for the advised worker-thread count (advice snaps to
+    /// powers of two ≤ this).
     pub max_threads: usize,
     /// Re-advise cadence, in executed batches.
     pub adjust_every_batches: u64,
+    /// Timer-driven re-advise cadence. The batch-count cadence alone
+    /// never fires on an idle model (no batches execute), so a burst's
+    /// elevated batch/thread targets would stick forever; the timer tick
+    /// decays them, gated by [`AdviceHysteresis`].
+    pub tick: std::time::Duration,
 }
 
 impl Default for LoadControlConfig {
@@ -49,6 +55,7 @@ impl Default for LoadControlConfig {
                 .map(|n| n.get())
                 .unwrap_or(4),
             adjust_every_batches: 16,
+            tick: std::time::Duration::from_millis(250),
         }
     }
 }
@@ -58,6 +65,43 @@ impl Default for LoadControlConfig {
 pub struct Advice {
     pub max_batch: usize,
     pub threads: usize,
+}
+
+/// Largest power of two ≤ `n` (1 for `n == 0`). Thread advice snaps down
+/// to this so the plan cache only ever materializes pow2 thread keys —
+/// `min(t, max_threads)` alone would leak the raw ceiling through on
+/// non-pow2 core counts (e.g. the 6 P-cores of an Apple M-series part).
+pub(crate) fn pow2_floor(n: usize) -> usize {
+    match n {
+        0 => 1,
+        n => 1usize << (usize::BITS - 1 - n.leading_zeros()),
+    }
+}
+
+/// Two-consecutive-tick hysteresis for timer-driven advice: a target
+/// change is applied only after the controller has advised the *same*
+/// differing target on two ticks in a row, so a single noisy sample
+/// (e.g. one straggler batch inflating the compute EWMA) cannot make
+/// the batch/thread targets oscillate.
+#[derive(Debug, Default)]
+pub struct AdviceHysteresis {
+    pending: Option<Advice>,
+}
+
+impl AdviceHysteresis {
+    /// Feed one tick's advice; returns the advice to apply, if any.
+    pub fn observe(&mut self, advice: Advice, current: Advice) -> Option<Advice> {
+        if advice == current {
+            self.pending = None;
+            return None;
+        }
+        if self.pending == Some(advice) {
+            self.pending = None;
+            return Some(advice);
+        }
+        self.pending = Some(advice);
+        None
+    }
 }
 
 /// Pure-function load controller (state lives in [`Metrics`]).
@@ -73,6 +117,7 @@ impl LoadController {
                 max_batch: cfg.max_batch.max(cfg.min_batch.max(1)),
                 max_threads: cfg.max_threads.max(1),
                 adjust_every_batches: cfg.adjust_every_batches.max(1),
+                tick: cfg.tick.max(std::time::Duration::from_millis(1)),
                 ..cfg
             },
         }
@@ -102,16 +147,20 @@ impl LoadController {
         // to fill. Pressure > 1 means the consumer loop cannot keep up
         // single-threaded; each doubling of workers roughly halves the
         // batch compute time (row partitioning is embarrassingly parallel).
+        // Advice always lands on a power of two ≤ `max_threads`: the plan
+        // cache keys plans by thread count, and pow2 steps keep that key
+        // set to a handful even on non-pow2 core counts.
+        let t_cap = pow2_floor(self.cfg.max_threads);
         let threads = if queue_depth > 2 * max_batch {
-            self.cfg.max_threads
+            t_cap
         } else if arrival_rps > 0.0 && mean_compute_us > 0.0 {
             let batch_fill_us = max_batch as f64 * 1e6 / arrival_rps;
             let pressure = mean_compute_us / batch_fill_us.max(1.0);
             let mut t = 1usize;
-            while (t as f64) < pressure && t < self.cfg.max_threads {
+            while (t as f64) < pressure && t < t_cap {
                 t *= 2;
             }
-            t.min(self.cfg.max_threads)
+            t.min(t_cap)
         } else {
             1
         };
@@ -141,6 +190,7 @@ mod tests {
             max_batch: 64,
             max_threads: 8,
             adjust_every_batches: 16,
+            ..LoadControlConfig::default()
         })
     }
 
@@ -202,6 +252,57 @@ mod tests {
         let a = tight.advise(40, 10.0, 10.0);
         assert_eq!(a.max_batch, 8);
         assert_eq!(a.threads, 8, "deep backlog → all workers");
+    }
+
+    #[test]
+    fn thread_advice_is_pow2_on_non_pow2_ceilings() {
+        // Regression: `max_threads: 6` with pressure ~5 used to advise
+        // t=8 → min(8, 6) = 6 — a non-pow2 thread count that violates the
+        // pow2-steps invariant the plan cache relies on. Real on Apple
+        // M-series parts, whose P-core counts are not powers of two.
+        let c = LoadController::new(LoadControlConfig {
+            max_batch: 8,
+            max_threads: 6,
+            ..LoadControlConfig::default()
+        });
+        // Batch of 8 fills in 2 ms; compute takes 10 ms → pressure 5.
+        let a = c.advise(0, 4_000.0, 10_000.0);
+        assert_eq!(a.threads, 4, "largest pow2 ≤ 6");
+        // Deep backlog goes maximally wide — still pow2.
+        let a = c.advise(100, 10.0, 10.0);
+        assert_eq!(a.threads, 4);
+        // Every advised value across a sweep of signals is pow2 ≤ cap.
+        for &(q, rps, us) in &[
+            (0usize, 0.0f64, 0.0f64),
+            (3, 100.0, 5_000.0),
+            (50, 50_000.0, 50_000.0),
+            (7, 1e9, 1e9),
+        ] {
+            let a = c.advise(q, rps, us);
+            assert!(a.threads.is_power_of_two() && a.threads <= 6, "{a:?}");
+        }
+    }
+
+    #[test]
+    fn hysteresis_applies_only_after_two_consecutive_ticks() {
+        let cur = Advice { max_batch: 8, threads: 4 };
+        let decay = Advice { max_batch: 1, threads: 1 };
+        let other = Advice { max_batch: 2, threads: 2 };
+        let mut h = AdviceHysteresis::default();
+        // Advice equal to the current targets never applies (and clears
+        // any pending change).
+        assert_eq!(h.observe(cur, cur), None);
+        // A change needs two consecutive identical ticks.
+        assert_eq!(h.observe(decay, cur), None);
+        assert_eq!(h.observe(decay, cur), Some(decay));
+        // A flapping signal never applies...
+        assert_eq!(h.observe(decay, cur), None);
+        assert_eq!(h.observe(other, cur), None);
+        assert_eq!(h.observe(decay, cur), None);
+        // ...and settling back to current resets the pending change.
+        assert_eq!(h.observe(cur, cur), None);
+        assert_eq!(h.observe(decay, cur), None);
+        assert_eq!(h.observe(decay, cur), Some(decay));
     }
 
     #[test]

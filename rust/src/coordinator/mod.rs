@@ -26,7 +26,7 @@ pub mod trace;
 
 pub use batcher::{BatchPolicy, DynamicBatcher, SubmitError};
 pub use engine::{Backend, Engine};
-pub use load::{Advice, LoadControlConfig, LoadController};
+pub use load::{Advice, AdviceHysteresis, LoadControlConfig, LoadController};
 pub use loadgen::{LoadGenReport, LoadGenerator};
 pub use metrics::Metrics;
 pub use request::{InferenceRequest, InferenceResponse};

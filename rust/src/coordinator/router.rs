@@ -2,14 +2,25 @@
 //! batch-loop thread. This is the coordinator's composition root.
 //!
 //! Registration comes in two flavours: [`Router::register`] with a fixed
-//! [`BatchPolicy`], and [`Router::register_autoscaled`], where the batch
-//! loop periodically consults a [`LoadController`] and re-sizes the live
-//! `max_batch` and the model's plan-cache thread ceiling from observed
-//! queue depth, arrival rate and compute latency.
+//! [`BatchPolicy`], and [`Router::register_autoscaled`], where a
+//! [`LoadController`] re-sizes the live `max_batch` and the model's
+//! plan-cache thread ceiling from observed queue depth, arrival rate and
+//! compute latency — on two triggers:
+//!
+//! - every `adjust_every_batches` **executed batches** (the batch loop,
+//!   applied immediately: real traffic is already steering), and
+//! - every [`LoadControlConfig::tick`] on a **timer** with
+//!   two-consecutive-tick hysteresis ([`crate::coordinator::load::AdviceHysteresis`]).
+//!   The batch-count trigger alone never fires on an idle model (no
+//!   batches execute), so a burst's elevated targets would stick forever;
+//!   the timer decays them once the arrival-rate EWMA's silence folding
+//!   drags the advice back down.
 
 use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher, SubmitError};
 use crate::coordinator::engine::Engine;
-use crate::coordinator::load::{LoadControlConfig, LoadController};
+use crate::coordinator::load::{
+    pow2_floor, Advice, AdviceHysteresis, LoadControlConfig, LoadController,
+};
 use crate::coordinator::request::{InferenceRequest, InferenceResponse};
 use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
@@ -22,6 +33,29 @@ struct ModelEntry {
     engine: Arc<Engine>,
     batcher: Arc<DynamicBatcher>,
     loop_handle: Option<JoinHandle<()>>,
+    /// Dropping this stops the autoscale tick thread (its `recv_timeout`
+    /// sees the disconnect).
+    tick_stop: Option<mpsc::Sender<()>>,
+    tick_handle: Option<JoinHandle<()>>,
+}
+
+/// Apply one piece of controller advice to a model's live knobs and
+/// gauges (shared by the batch-loop and timer-tick triggers).
+fn apply_advice(batcher: &DynamicBatcher, engine: &Engine, advice: Advice) {
+    batcher.set_max_batch(advice.max_batch);
+    engine.set_threads(advice.threads);
+    engine
+        .metrics
+        .max_batch_in_use
+        .store(advice.max_batch as u64, Ordering::Relaxed);
+    engine
+        .metrics
+        .threads_in_use
+        .store(advice.threads as u64, Ordering::Relaxed);
+    engine
+        .metrics
+        .autoscale_adjustments
+        .fetch_add(1, Ordering::Relaxed);
 }
 
 /// Multi-model router with per-model dynamic batching loops.
@@ -51,22 +85,24 @@ impl Router {
 
     /// Register an engine whose batch ceiling and thread fan-out track
     /// observed load: every `control.adjust_every_batches` executed
-    /// batches, the loop re-advises from the model's metrics and applies
-    /// the result to the live batcher and plan cache.
+    /// batches — and every `control.tick` of wall clock, so an idle
+    /// model's targets decay too — the controller re-advises from the
+    /// model's metrics and applies the result to the live batcher and
+    /// plan cache.
     pub fn register_autoscaled(
         &mut self,
         engine: Engine,
         policy: BatchPolicy,
         control: LoadControlConfig,
     ) {
-        self.register_inner(engine, policy, Some(LoadController::new(control)));
+        self.register_inner(engine, policy, Some(Arc::new(LoadController::new(control))));
     }
 
     fn register_inner(
         &mut self,
         engine: Engine,
         policy: BatchPolicy,
-        controller: Option<LoadController>,
+        controller: Option<Arc<LoadController>>,
     ) {
         let name = engine.name.clone();
         let engine = Arc::new(engine);
@@ -77,13 +113,35 @@ impl Router {
             .metrics
             .max_batch_in_use
             .store(policy.max_batch as u64, Ordering::Relaxed);
-        let initial_threads = engine.plan_cache().map(|c| c.threads()).unwrap_or(1);
+        let mut initial_threads = engine.plan_cache().map(|c| c.threads()).unwrap_or(1);
+        // Controller advice only ever lands on powers of two ≤ its
+        // `max_threads`, and the warm steps cover exactly those — an
+        // autoscaled model whose config seeded a ceiling outside that set
+        // (e.g. "threads": 6, or 8 with --max-threads 4) would otherwise
+        // build unwarmed plans that become dead weight on the first
+        // advice. Fixed-policy models keep the config value untouched
+        // (the documented escape hatch).
+        if let Some(ctl) = &controller {
+            let clamped = pow2_floor(initial_threads.min(ctl.cfg().max_threads));
+            if clamped != initial_threads {
+                engine.set_threads(clamped);
+                initial_threads = clamped;
+            }
+        }
         engine
             .metrics
             .threads_in_use
             .store(initial_threads as u64, Ordering::Relaxed);
+        // Both advise triggers (batch-count and timer tick) serialize on
+        // this lock, and each computes its advice from the metrics
+        // *inside* the critical section — so a tick that read pre-burst
+        // signals can never stomp the batch loop's fresh scale-up, and
+        // the gauge pair is never observed torn between two advices.
+        let advise_lock = Arc::new(std::sync::Mutex::new(()));
         let loop_engine = Arc::clone(&engine);
         let loop_batcher = Arc::clone(&batcher);
+        let loop_controller = controller.clone();
+        let loop_advise_lock = Arc::clone(&advise_lock);
         let handle = std::thread::Builder::new()
             .name(format!("stgemm-batch-{name}"))
             .spawn(move || {
@@ -91,34 +149,73 @@ impl Router {
                 while let Some(batch) = loop_batcher.next_batch() {
                     loop_engine.run_batch(batch);
                     executed += 1;
-                    if let Some(ctl) = &controller {
+                    if let Some(ctl) = &loop_controller {
                         if executed % ctl.cfg().adjust_every_batches == 0 {
+                            let _guard = loop_advise_lock
+                                .lock()
+                                .unwrap_or_else(|e| e.into_inner());
                             let advice = ctl.advise_from(&loop_engine.metrics);
-                            loop_batcher.set_max_batch(advice.max_batch);
-                            loop_engine.set_threads(advice.threads);
-                            loop_engine
-                                .metrics
-                                .max_batch_in_use
-                                .store(advice.max_batch as u64, Ordering::Relaxed);
-                            loop_engine
-                                .metrics
-                                .threads_in_use
-                                .store(advice.threads as u64, Ordering::Relaxed);
-                            loop_engine
-                                .metrics
-                                .autoscale_adjustments
-                                .fetch_add(1, Ordering::Relaxed);
+                            apply_advice(&loop_batcher, &loop_engine, advice);
                         }
                     }
                 }
             })
             .expect("spawn batch loop");
+        // Timer-driven advise tick: without it an idle model never
+        // re-advises (advice otherwise fires per executed batch), so
+        // threads/batch targets could never decay back after a burst.
+        let (tick_stop, tick_handle) = match &controller {
+            Some(ctl) => {
+                let (stop_tx, stop_rx) = mpsc::channel::<()>();
+                let ctl = Arc::clone(ctl);
+                let tick_engine = Arc::clone(&engine);
+                let tick_batcher = Arc::clone(&batcher);
+                let tick_advise_lock = Arc::clone(&advise_lock);
+                let handle = std::thread::Builder::new()
+                    .name(format!("stgemm-tick-{name}"))
+                    .spawn(move || {
+                        let mut hysteresis = AdviceHysteresis::default();
+                        loop {
+                            match stop_rx.recv_timeout(ctl.cfg().tick) {
+                                Err(mpsc::RecvTimeoutError::Timeout) => {
+                                    let _guard = tick_advise_lock
+                                        .lock()
+                                        .unwrap_or_else(|e| e.into_inner());
+                                    let advice = ctl.advise_from(&tick_engine.metrics);
+                                    let current = Advice {
+                                        max_batch: tick_engine
+                                            .metrics
+                                            .max_batch_in_use
+                                            .load(Ordering::Relaxed)
+                                            as usize,
+                                        threads: tick_engine
+                                            .metrics
+                                            .threads_in_use
+                                            .load(Ordering::Relaxed)
+                                            as usize,
+                                    };
+                                    if let Some(a) = hysteresis.observe(advice, current) {
+                                        apply_advice(&tick_batcher, &tick_engine, a);
+                                    }
+                                }
+                                // Sender dropped (shutdown) or explicit stop.
+                                _ => break,
+                            }
+                        }
+                    })
+                    .expect("spawn autoscale tick");
+                (Some(stop_tx), Some(handle))
+            }
+            None => (None, None),
+        };
         self.models.insert(
             name,
             ModelEntry {
                 engine,
                 batcher,
                 loop_handle: Some(handle),
+                tick_stop,
+                tick_handle,
             },
         );
     }
@@ -176,13 +273,19 @@ impl Router {
             .map_err(|e| format!("inference timed out/disconnected: {e}"))
     }
 
-    /// Stop all batch loops, draining queues first.
+    /// Stop all batch loops (draining queues first) and autoscale ticks.
     pub fn shutdown(&mut self) {
-        for entry in self.models.values() {
+        for entry in self.models.values_mut() {
             entry.batcher.close();
+            // Dropping the sender disconnects the tick thread's
+            // `recv_timeout` so it exits without waiting out a tick.
+            entry.tick_stop.take();
         }
         for entry in self.models.values_mut() {
             if let Some(h) = entry.loop_handle.take() {
+                let _ = h.join();
+            }
+            if let Some(h) = entry.tick_handle.take() {
                 let _ = h.join();
             }
         }
@@ -318,6 +421,117 @@ mod tests {
         );
         assert!(m.max_batch_in_use.load(Ordering::Relaxed) >= 1);
         assert!(m.threads_in_use.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn autoscaled_registration_clamps_non_pow2_config_threads() {
+        let cfg = ModelConfig::from_json(
+            r#"{"name":"a3","dims":[8,16,4],"sparsity":0.5,"seed":5,"threads":6}"#,
+        )
+        .unwrap();
+        let engine =
+            Engine::from_config(&cfg, &Arc::new(Planner::new())).unwrap();
+        let mut r = Router::new();
+        r.register_autoscaled(
+            engine,
+            BatchPolicy::default(),
+            LoadControlConfig {
+                max_threads: 6,
+                // Keep the advise tick out of this test's window so the
+                // assertions observe the registration-time seed only.
+                tick: Duration::from_secs(3600),
+                ..LoadControlConfig::default()
+            },
+        );
+        let e = r.engine("a3").unwrap();
+        assert_eq!(
+            e.plan_cache().unwrap().threads(),
+            4,
+            "autoscaled ceiling snaps to pow2 so warmed keys cover it"
+        );
+        assert_eq!(e.metrics.threads_in_use.load(Ordering::Relaxed), 4);
+        // Fixed-policy registration keeps the configured value verbatim.
+        let cfg2 = ModelConfig::from_json(
+            r#"{"name":"a4","dims":[8,16,4],"sparsity":0.5,"seed":6,"threads":6}"#,
+        )
+        .unwrap();
+        let engine2 =
+            Engine::from_config(&cfg2, &Arc::new(Planner::new())).unwrap();
+        r.register(engine2, BatchPolicy::default());
+        assert_eq!(r.engine("a4").unwrap().plan_cache().unwrap().threads(), 6);
+        // A pow2 config seed above the controller's ceiling is clamped to
+        // it too: advice can never reach 8, so (bucket, 8) plans would be
+        // unwarmed dead weight.
+        let cfg3 = ModelConfig::from_json(
+            r#"{"name":"a5","dims":[8,16,4],"sparsity":0.5,"seed":7,"threads":8}"#,
+        )
+        .unwrap();
+        let engine3 =
+            Engine::from_config(&cfg3, &Arc::new(Planner::new())).unwrap();
+        r.register_autoscaled(
+            engine3,
+            BatchPolicy::default(),
+            LoadControlConfig {
+                max_threads: 4,
+                tick: Duration::from_secs(3600),
+                ..LoadControlConfig::default()
+            },
+        );
+        assert_eq!(r.engine("a5").unwrap().plan_cache().unwrap().threads(), 4);
+    }
+
+    #[test]
+    fn idle_autoscaled_model_decays_targets_via_timer_ticks() {
+        let cfg = ModelConfig::from_json(
+            r#"{"name":"a2","dims":[8,16,4],"sparsity":0.5,"seed":3}"#,
+        )
+        .unwrap();
+        let engine =
+            Engine::from_config(&cfg, &Arc::new(Planner::new())).unwrap();
+        let mut r = Router::new();
+        r.register_autoscaled(
+            engine,
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_micros(200),
+            },
+            LoadControlConfig {
+                max_batch: 16,
+                max_threads: 4,
+                // The batch-count trigger can never fire (no batches
+                // execute); only the timer tick can re-advise.
+                adjust_every_batches: 1_000_000,
+                tick: Duration::from_millis(10),
+                ..LoadControlConfig::default()
+            },
+        );
+        // Gauges are seeded from the static policy (max_batch 8). Idle
+        // advice is (min_batch = 1, threads = 1); the hysteresis applies
+        // it on the second consecutive tick, so the decay must land well
+        // within the (generous, anti-flake) deadline.
+        let m = Arc::clone(&r.engine("a2").unwrap().metrics);
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            let mb = m.max_batch_in_use.load(Ordering::Relaxed);
+            let th = m.threads_in_use.load(Ordering::Relaxed);
+            if mb == 1 && th == 1 {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "idle targets never decayed: max_batch={mb} threads={th}"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(
+            m.autoscale_adjustments.load(Ordering::Relaxed) >= 1,
+            "timer tick must count as an adjustment"
+        );
+        r.shutdown();
+        // Shutdown joined the tick thread; counters stop moving.
+        let after = m.autoscale_adjustments.load(Ordering::Relaxed);
+        std::thread::sleep(Duration::from_millis(40));
+        assert_eq!(m.autoscale_adjustments.load(Ordering::Relaxed), after);
     }
 
     #[test]

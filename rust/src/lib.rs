@@ -34,12 +34,19 @@
 //!   (layer, batch-size bucket, thread count), built on first traffic and
 //!   reused forever, with an **online top-2 race** that times the two
 //!   paper-candidate kernels on the first real batch of an untuned
-//!   (K, sparsity) class and locks the winner into the shared table.
+//!   (K, sparsity, M-bucket) class and locks the winner into the shared
+//!   table under the M-aware class.
 //! - [`autotune`] — the unroll-factor / block-size grid search behind the
 //!   paper's Figures 2–4, the persisted `TuningTable` the planner
-//!   consults, and [`autotune::sweep_model`] (`stgemm autotune sweep`),
-//!   which fills the table for every layer × M-bucket of a model config
-//!   in one run.
+//!   consults, and [`autotune::sweep_model_opts`] (`stgemm autotune
+//!   sweep`), which fills the table for every layer × M-bucket of a model
+//!   config in one run. Table keys are `k{K}_s{S}` (M-agnostic) or
+//!   `k{K}_s{S}_m{M}` (M-aware, recorded by `sweep --per-m` and the
+//!   online races when per-bucket winners diverge); lookups try the
+//!   M-aware entry for the batch's bucket first and fall back to the
+//!   M-agnostic entry, so PR-2-era JSON tables keep working unchanged.
+//!   Un-bucketed (hand-edited/stale) keys are re-bucketed on load with a
+//!   warning instead of becoming silently unmatchable dead weight.
 //! - [`perf`] — cycle timers, the paper's flop cost model
 //!   `C = M·N·(1+sK)`, operational intensity and roofline estimates.
 //! - [`model`] — ternary MLP / FFN built from planned linear layers; the
@@ -51,10 +58,12 @@
 //!   router, inference engine (serving batches through cached plans), HTTP
 //!   server, metrics and load generator. The stack is **load-aware**: the
 //!   batcher reports queue depth and an arrival-rate EWMA into
-//!   [`coordinator::Metrics`], and an autoscaled model's batch loop
+//!   [`coordinator::Metrics`], and an autoscaled model
 //!   ([`coordinator::Router::register_autoscaled`]) re-sizes the live
 //!   `max_batch` and the plan cache's thread ceiling from those signals
-//!   ([`coordinator::LoadController`]).
+//!   ([`coordinator::LoadController`]; thread advice snaps to powers of
+//!   two ≤ the ceiling) — both per executed batch and on a timer tick
+//!   with hysteresis, so an idle model's targets decay after a burst.
 //! - [`bench`] — the measurement harness (timing the planned path) and
 //!   per-figure experiment drivers.
 //! - [`util`] — substrates built in-repo because the environment is offline:

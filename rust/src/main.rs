@@ -12,7 +12,9 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use stgemm::autotune::{sweep_model, unroll_grid_search, CacheModel, TuningTable};
+use stgemm::autotune::{
+    sweep_model_opts, unroll_grid_search, CacheModel, SweepOptions, TuningTable,
+};
 use stgemm::bench::figures;
 use stgemm::bench::harness::BenchScale;
 use stgemm::bench::report::{write_csv, Table};
@@ -70,8 +72,12 @@ USAGE: stgemm <subcommand> [options]
                                      winner for the planner to consult)
   autotune sweep
              [--model <cfg.json>] [--buckets 1,8] [--reps 2]
+             [--per-m] [--divergence 0.08]
              [--save <table.json>]  (fill the table for every layer ×
-                                     M-bucket of a model config in one run)
+                                     M-bucket of a model config in one run;
+                                     --per-m records k{K}_s{S}_m{M} entries
+                                     for buckets whose winner diverges from
+                                     the mean winner beyond the threshold)
   quantize   --dims 256,1024,256 --seed 42 --out model.stw
   selftest   [--artifacts <dir>] [--model ffn_tiny]
   loadgen    --addr <host:port> --model <name> --d-in <n>
@@ -148,13 +154,10 @@ fn cmd_serve(args: &Args) -> i32 {
         max_batch: args.usize("max-batch", 8),
         max_wait: Duration::from_micros(args.u64("max-wait-us", 2000)),
     };
-    let mut router = Router::new();
     // Threads the plan cache may be asked for: the static config when
     // autoscaling is off, else every step up to the controller's ceiling.
-    let warm_threads;
-    if args.has("no-autoscale") {
-        warm_threads = cfg.threads;
-        router.register(engine, policy);
+    let control = if args.has("no-autoscale") {
+        None
     } else {
         let default_threads = std::thread::available_parallelism()
             .map(|n| n.get())
@@ -165,23 +168,26 @@ fn cmd_serve(args: &Args) -> i32 {
             max_batch: args.usize("max-batch-cap", 64).max(policy.max_batch),
             max_threads: args.usize("max-threads", default_threads),
             adjust_every_batches: 16,
+            ..LoadControlConfig::default()
         };
         println!(
             "[serve] autoscale: batch ≤ {}, threads ≤ {}, queue budget {} µs",
             control.max_batch, control.max_threads, control.target_queue_us
         );
-        warm_threads = control.max_threads;
-        router.register_autoscaled(engine, policy, control);
-    }
+        Some(control)
+    };
     // Warm the configured buckets at every thread step the coordinator
     // can use — but only for layers whose kernel choice is settled (an
-    // explicit override or a tuning-table entry). Untuned classes stay
-    // cold so their first real traffic races the top-2 candidates.
-    if let Some(cache) = router.engine(&cfg.name).and_then(|e| e.plan_cache()) {
-        let steps = if args.has("no-autoscale") {
-            vec![warm_threads] // fixed ceiling: only one step is reachable
-        } else {
-            stgemm::plan::PlanCache::controller_thread_steps(warm_threads)
+    // explicit override or a tuning-table entry resolving for that
+    // bucket). Untuned buckets stay cold so their first real traffic
+    // races the top-2 candidates. Warming happens **before** registration:
+    // registering an autoscaled model spawns its advise tick, which would
+    // race warm_settled's temporary thread-ceiling changes.
+    if let Some(cache) = engine.plan_cache() {
+        let steps = match &control {
+            // Fixed ceiling: only one step is reachable.
+            None => vec![cfg.threads],
+            Some(c) => stgemm::plan::PlanCache::controller_thread_steps(c.max_threads),
         };
         if let Err(e) = cache.warm_settled(&cfg.batch_buckets, &steps) {
             eprintln!("error warming plan cache: {e}");
@@ -194,6 +200,11 @@ fn cmd_serve(args: &Args) -> i32 {
                 cfg.batch_buckets
             );
         }
+    }
+    let mut router = Router::new();
+    match control {
+        None => router.register(engine, policy),
+        Some(control) => router.register_autoscaled(engine, policy, control),
     }
     // Background re-tune: periodically re-sweep every layer × bucket on a
     // snapshot of the live table, install the result, and invalidate the
@@ -211,12 +222,19 @@ fn cmd_serve(args: &Args) -> i32 {
                 std::thread::sleep(Duration::from_secs(retune_secs));
                 let mut table = planner_bg.table_snapshot();
                 let timer = CycleTimer::new(1, 2);
-                let report = sweep_model(
+                // Serving races kernels per M bucket, so the background
+                // re-tune records per-bucket winners too — a mean-collapsed
+                // entry would undo what the online races learned.
+                let report = sweep_model_opts(
                     &cfg_bg,
                     &cfg_bg.batch_buckets,
                     stgemm::kernels::kernel_names(),
                     &timer,
                     &mut table,
+                    &SweepOptions {
+                        per_m: true,
+                        ..Default::default()
+                    },
                 );
                 planner_bg.install_table(table);
                 // Swap fresh plans in off the hot path; traffic always
@@ -407,6 +425,10 @@ fn cmd_autotune_sweep(args: &Args) -> i32 {
     };
     let buckets = args.usize_list("buckets", &cfg.batch_buckets);
     let reps = args.usize("reps", 2).max(1);
+    let opts = SweepOptions {
+        per_m: args.has("per-m"),
+        divergence_threshold: args.f32("divergence", 0.08) as f64,
+    };
     let timer = CycleTimer::new(1, reps);
     // Extend an existing table when --save points at one; a fresh file
     // starts empty. An existing-but-unreadable table is an error (silently
@@ -424,28 +446,41 @@ fn cmd_autotune_sweep(args: &Args) -> i32 {
         _ => TuningTable::new(),
     };
     println!(
-        "[autotune] sweep: model '{}' ({} layer(s)), buckets {:?}, {} kernel(s)",
+        "[autotune] sweep: model '{}' ({} layer(s)), buckets {:?}, {} kernel(s){}",
         cfg.name,
         cfg.dims.len() - 1,
         buckets,
-        stgemm::kernels::kernel_names().len()
+        stgemm::kernels::kernel_names().len(),
+        if opts.per_m {
+            format!(
+                ", per-M splits beyond {:.0}% divergence",
+                opts.divergence_threshold * 100.0
+            )
+        } else {
+            String::new()
+        }
     );
-    let report = sweep_model(
+    let report = sweep_model_opts(
         &cfg,
         &buckets,
         stgemm::kernels::kernel_names(),
         &timer,
         &mut table,
+        &opts,
     );
     for (class, entry) in &report.winners {
-        println!(
-            "  class k{}_s{}: winner {} at {:.3} flops/cycle (mean over {} bucket(s))",
-            class.k_bucket,
-            class.sparsity_bp,
-            entry.kernel,
-            entry.flops_per_cycle,
-            buckets.len().max(1)
-        );
+        match class.m_bucket {
+            Some(m) => println!(
+                "  class {class}: winner {} at {:.3} flops/cycle (M-aware, bucket {m})",
+                entry.kernel, entry.flops_per_cycle,
+            ),
+            None => println!(
+                "  class {class}: winner {} at {:.3} flops/cycle (mean over {} bucket(s))",
+                entry.kernel,
+                entry.flops_per_cycle,
+                buckets.len().max(1)
+            ),
+        }
     }
     if let Some(path) = args.get("save") {
         if let Err(e) = table.save(path) {

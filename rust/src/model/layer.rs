@@ -116,8 +116,9 @@ impl TernaryLinear {
     }
 
     /// The kernel this layer executes with (for cached layers: the current
-    /// selection for small batches; the online race may refine it on first
-    /// traffic in an untuned class).
+    /// selection for single-row batches — M-aware tuning entries may pick
+    /// a different kernel per batch bucket, and the online race may refine
+    /// any untuned bucket on its first traffic).
     pub fn kernel_name(&self) -> String {
         match &self.exec {
             Exec::Pinned(p) => p.kernel_name().to_string(),

@@ -15,11 +15,14 @@
 //! existing plans.
 //!
 //! Kernel choice per layer: the explicit override if the spec pins one,
-//! else the shared [`Planner`]'s tuning table, else — uniquely to this
-//! layer of the stack — an **online top-2 race**: the first real batch of
-//! an untuned (K, sparsity) class runs both paper-candidate kernels,
-//! times them, and records the winner in the shared table so every other
-//! layer, bucket and engine skips the race.
+//! else the shared [`Planner`]'s tuning table (M-aware entries first,
+//! then the M-agnostic fallback), else — uniquely to this layer of the
+//! stack — an **online top-2 race**: the first real batch of an untuned
+//! (K, sparsity, M-bucket) class runs both paper-candidate kernels,
+//! times them, and records the winner in the shared table **under the
+//! M-aware class**, so every other layer and engine skips the race for
+//! that bucket while other buckets still get their own race — a kernel
+//! that wins at M=1 is never silently locked in for M=64.
 
 use crate::autotune::{ShapeClass, TuneEntry};
 use crate::kernels::{prepare_kernel, GemmScratch, KernelParams, PreparedGemm};
@@ -33,14 +36,10 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
-/// Largest M bucket: batches beyond this share one plan (the row
-/// partitioner handles any M; bucketing only controls plan reuse).
-pub const MAX_M_BUCKET: usize = 1024;
-
-/// Bucket a batch size: next power of two, clamped to `[1, MAX_M_BUCKET]`.
-pub fn m_bucket(m: usize) -> usize {
-    m.max(1).next_power_of_two().min(MAX_M_BUCKET)
-}
+// The canonical M bucketing lives next to `ShapeClass` so plan keys and
+// M-aware tuning classes can never disagree; re-exported here because the
+// plan cache is where callers meet it.
+pub use crate::autotune::table::{m_bucket, MAX_M_BUCKET};
 
 /// Handle to a registered layer (index into the cache's layer list).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -239,19 +238,22 @@ impl PlanCache {
     }
 
     /// The kernel a plan for batch size `m` would use right now: explicit
-    /// override, else the shared table, else the paper heuristic. (The
-    /// online race may still overturn the heuristic on first traffic.)
-    pub fn kernel_for(&self, id: LayerId, _m: usize) -> String {
+    /// override, else the shared table (the M-aware entry for `m`'s
+    /// bucket first, then the M-agnostic fallback), else the paper
+    /// heuristic. (The online race may still overturn the heuristic on
+    /// first traffic in that bucket.)
+    pub fn kernel_for(&self, id: LayerId, m: usize) -> String {
         let layer = self.layer(id);
-        self.kernel_for_spec(&layer.spec)
+        self.kernel_for_spec(&layer.spec, m_bucket(m))
     }
 
-    fn kernel_for_spec(&self, spec: &LayerSpec) -> String {
+    fn kernel_for_spec(&self, spec: &LayerSpec, bucket: usize) -> String {
         match &spec.kernel {
             Some(k) => k.clone(),
             None => self.planner.select_kernel(
                 spec.weights.k(),
                 spec.weights.density() as f32,
+                bucket,
                 spec.epilogue.fusible_prelu().is_some(),
             ),
         }
@@ -338,7 +340,7 @@ impl PlanCache {
         threads: usize,
     ) -> Result<Arc<GemmPlan>, String> {
         let spec = &layer.spec;
-        let kernel = self.kernel_for_spec(spec);
+        let kernel = self.kernel_for_spec(spec, bucket);
         match self.build_plan(layer, bucket, threads, &kernel) {
             Ok(plan) => Ok(plan),
             Err(_) if spec.kernel.is_none() => {
@@ -354,7 +356,9 @@ impl PlanCache {
     }
 
     /// Time both top-2 candidates on the live batch, record the winner in
-    /// the shared table, and return the winning plan.
+    /// the shared table **under the M-aware class** (this bucket's race
+    /// must not decide other buckets' kernels), and return the winning
+    /// plan.
     fn race_top2(
         &self,
         layer: &CachedLayer,
@@ -367,7 +371,7 @@ impl PlanCache {
         let k = spec.weights.k();
         let sparsity = spec.weights.density() as f32;
         let wants_fused = spec.epilogue.fusible_prelu().is_some();
-        let [a, b] = heuristic_top2(k, sparsity, wants_fused);
+        let [a, b] = heuristic_top2(k, sparsity, bucket, wants_fused);
         let plan_a = self.build_plan(layer, bucket, threads, a)?;
         let plan_b = self.build_plan(layer, bucket, threads, b)?;
         let timer = CycleTimer::new(1, self.race_reps);
@@ -381,7 +385,7 @@ impl PlanCache {
             (plan_b, meas_b, b)
         };
         self.planner.record(
-            ShapeClass::of(k, sparsity),
+            ShapeClass::of_m(k, sparsity, bucket),
             TuneEntry {
                 kernel: name.to_string(),
                 flops_per_cycle: meas.flops_per_cycle(flops),
@@ -430,9 +434,11 @@ impl PlanCache {
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let spec = &layer.spec;
+        // Untuned for *this bucket*: neither an M-aware entry nor the
+        // M-agnostic fallback covers it, so this bucket gets its own race.
         let untuned = self
             .planner
-            .lookup_entry(spec.weights.k(), spec.weights.density() as f32)
+            .lookup_entry(spec.weights.k(), spec.weights.density() as f32, bucket)
             .is_none();
         let built = if spec.kernel.is_none() && self.online_top2 && untuned {
             self.race_top2(&layer, bucket, threads, x)?
@@ -470,28 +476,31 @@ impl PlanCache {
     }
 
     /// The thread values the load-aware controller can advise up to
-    /// `max_threads`: powers of two, plus `max_threads` itself.
+    /// `max_threads`: powers of two ≤ `max_threads`. The controller
+    /// clamps its advice the same way
+    /// ([`crate::coordinator::LoadController`]), so warming exactly these
+    /// steps covers every (bucket, threads) key it can ever create — on
+    /// non-pow2 core counts (Apple M-series) the ceiling itself is
+    /// deliberately not a step.
     pub fn controller_thread_steps(max_threads: usize) -> Vec<usize> {
         let max_threads = max_threads.max(1);
         let mut steps = Vec::new();
         let mut t = 1usize;
-        loop {
+        while t <= max_threads {
             steps.push(t);
-            if t >= max_threads {
-                break;
-            }
-            t = (t * 2).min(max_threads);
+            t *= 2;
         }
         steps
     }
 
-    /// Warm `buckets` × `thread_steps`, but **only for layers whose kernel
-    /// choice is already settled** — an explicit override, a tuning-table
-    /// entry for the class, or racing disabled. Untuned classes are left
-    /// cold on purpose: their first real traffic should run the online
-    /// top-2 race, and a pre-built heuristic plan would silently skip it.
-    /// Restores the thread ceiling it found; startup-time only (the
-    /// temporary ceiling changes are visible to concurrent traffic).
+    /// Warm `buckets` × `thread_steps`, but **only for (layer, bucket)
+    /// pairs whose kernel choice is already settled** — an explicit
+    /// override, a tuning-table entry resolving for that bucket (M-aware
+    /// or the M-agnostic fallback), or racing disabled. Unsettled buckets
+    /// are left cold on purpose: their first real traffic should run the
+    /// online top-2 race, and a pre-built heuristic plan would silently
+    /// skip it. Restores the thread ceiling it found; startup-time only
+    /// (the temporary ceiling changes are visible to concurrent traffic).
     pub fn warm_settled(
         &self,
         buckets: &[usize],
@@ -504,19 +513,20 @@ impl PlanCache {
             for i in 0..n {
                 let id = LayerId(i);
                 let layer = self.layer(id);
-                let settled = layer.spec.kernel.is_some()
-                    || !self.online_top2
-                    || self
-                        .planner
-                        .lookup_entry(
-                            layer.spec.weights.k(),
-                            layer.spec.weights.density() as f32,
-                        )
-                        .is_some();
-                if !settled {
-                    continue;
-                }
                 for &m in buckets {
+                    let settled = layer.spec.kernel.is_some()
+                        || !self.online_top2
+                        || self
+                            .planner
+                            .lookup_entry(
+                                layer.spec.weights.k(),
+                                layer.spec.weights.density() as f32,
+                                m,
+                            )
+                            .is_some();
+                    if !settled {
+                        continue;
+                    }
                     if let Err(e) = self.plan_for(id, m) {
                         self.set_threads(saved);
                         return Err(e);
@@ -666,15 +676,18 @@ mod tests {
         let id = cache
             .register(LayerSpec::new(w.clone(), Epilogue::with_bias(bias.clone())))
             .unwrap();
-        assert!(planner.lookup_entry(64, 0.25).is_none());
+        assert!(planner.lookup_entry(64, 0.25, 8).is_none());
         let x = Matrix::random(8, 64, 10);
         let y = cache.forward(id, &x).unwrap();
         assert!(y.allclose(&dense_oracle(&x, &w, &bias), 1e-3));
-        let entry = planner.lookup_entry(64, 0.25).expect("race records winner");
-        let [a, b] = heuristic_top2(64, 0.25, false);
+        let entry = planner
+            .lookup_entry(64, 0.25, 8)
+            .expect("race records winner");
+        let [a, b] = heuristic_top2(64, 0.25, 8, false);
         assert!([a, b].contains(&entry.kernel.as_str()), "{}", entry.kernel);
         assert_eq!(cache.snapshot().races, 1);
-        // A second layer in the same class reuses the entry — no new race.
+        // A second layer in the same class (same bucket) reuses the entry
+        // — no new race.
         let id2 = cache
             .register(LayerSpec::new(
                 TernaryMatrix::random(64, 8, 0.25, 11),
@@ -731,10 +744,12 @@ mod tests {
     }
 
     #[test]
-    fn thread_steps_are_pow2_plus_ceiling() {
+    fn thread_steps_are_pow2_capped() {
         assert_eq!(PlanCache::controller_thread_steps(1), vec![1]);
         assert_eq!(PlanCache::controller_thread_steps(4), vec![1, 2, 4]);
-        assert_eq!(PlanCache::controller_thread_steps(6), vec![1, 2, 4, 6]);
+        // Non-pow2 ceilings (Apple M-series core counts) stop at the
+        // largest pow2 — the controller can never advise 6 threads.
+        assert_eq!(PlanCache::controller_thread_steps(6), vec![1, 2, 4]);
         assert_eq!(PlanCache::controller_thread_steps(0), vec![1]);
     }
 
@@ -773,7 +788,88 @@ mod tests {
         let x = Matrix::random(8, 64, 3);
         cache.forward(auto_id, &x).unwrap();
         assert_eq!(cache.snapshot().races, 1);
-        assert!(planner.lookup_entry(64, 0.25).is_some());
+        assert!(planner.lookup_entry(64, 0.25, 8).is_some());
+    }
+
+    #[test]
+    fn each_m_bucket_races_once_and_records_its_own_winner() {
+        let planner = Arc::new(Planner::new());
+        let cache = PlanCache::new(
+            Arc::clone(&planner),
+            PlanCacheConfig {
+                threads: 1,
+                online_top2: true,
+                race_reps: 1,
+            },
+        );
+        let w = TernaryMatrix::random(64, 16, 0.25, 17);
+        let id = cache
+            .register(LayerSpec::new(w, Epilogue::with_bias(vec![0.0; 16])))
+            .unwrap();
+        // First sighting of bucket 1 races and records under m=1 only.
+        cache.forward(id, &Matrix::random(1, 64, 20)).unwrap();
+        assert_eq!(cache.snapshot().races, 1);
+        assert!(planner.lookup_entry(64, 0.25, 1).is_some());
+        assert!(
+            planner.lookup_entry(64, 0.25, 16).is_none(),
+            "bucket 1's race must not settle bucket 16"
+        );
+        // Bucket 16 runs its own race on first sighting.
+        cache.forward(id, &Matrix::random(16, 64, 21)).unwrap();
+        assert_eq!(cache.snapshot().races, 2);
+        assert!(planner.lookup_entry(64, 0.25, 16).is_some());
+        // Both buckets are now settled: repeat traffic never races.
+        cache.forward(id, &Matrix::random(1, 64, 22)).unwrap();
+        cache.forward(id, &Matrix::random(16, 64, 23)).unwrap();
+        assert_eq!(cache.snapshot().races, 2);
+    }
+
+    #[test]
+    fn per_m_table_entries_pick_different_kernels_per_bucket() {
+        use crate::autotune::TuningTable;
+        let mut table = TuningTable::new();
+        table.insert(
+            ShapeClass::of(64, 0.25),
+            TuneEntry {
+                kernel: "interleaved_blocked_tcsc".into(),
+                flops_per_cycle: 2.0,
+            },
+        );
+        table.insert(
+            ShapeClass::of_m(64, 0.25, 1),
+            TuneEntry {
+                kernel: "unrolled_tcsc_k4_m4".into(),
+                flops_per_cycle: 3.0,
+            },
+        );
+        let cache = PlanCache::new(
+            Arc::new(Planner::with_table(table)),
+            PlanCacheConfig {
+                threads: 1,
+                online_top2: true,
+                race_reps: 1,
+            },
+        );
+        let id = cache
+            .register(LayerSpec::new(
+                TernaryMatrix::random(64, 8, 0.25, 19),
+                Epilogue::with_bias(vec![0.0; 8]),
+            ))
+            .unwrap();
+        assert_eq!(cache.kernel_for(id, 1), "unrolled_tcsc_k4_m4");
+        assert_eq!(cache.kernel_for(id, 8), "interleaved_blocked_tcsc");
+        assert_eq!(
+            cache.plan_for(id, 1).unwrap().kernel_name(),
+            "unrolled_tcsc_k4_m4"
+        );
+        assert_eq!(
+            cache.plan_for(id, 8).unwrap().kernel_name(),
+            "interleaved_blocked_tcsc"
+        );
+        // Every bucket resolves through the table → no races anywhere.
+        cache.forward(id, &Matrix::random(1, 64, 24)).unwrap();
+        cache.forward(id, &Matrix::random(8, 64, 25)).unwrap();
+        assert_eq!(cache.snapshot().races, 0);
     }
 
     #[test]

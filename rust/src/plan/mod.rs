@@ -30,9 +30,12 @@
 //! PlanCache::run(layer, x, &mut y)
 //!     │  bucket = next_pow2(x.rows()), threads = live ceiling
 //!     ├─ hit  → cached GemmPlan::run (no planning, no allocation)
-//!     └─ miss → build once; for an untuned (K, sparsity) class, race the
-//!               top-2 candidate kernels on the live batch and lock the
-//!               winner into the shared TuningTable
+//!     └─ miss → build once; for an untuned (K, sparsity, M-bucket)
+//!               class, race the top-2 candidate kernels on the live
+//!               batch and lock the winner into the shared TuningTable
+//!               under the M-aware `k{K}_s{S}_m{M}` class — lookups fall
+//!               back to the M-agnostic `k{K}_s{S}` entry, so PR-2-era
+//!               tables keep resolving for every batch size
 //! ```
 //!
 //! Consumers: [`crate::model::TernaryLinear`] / [`crate::model::TernaryMlp`]

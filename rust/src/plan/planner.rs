@@ -71,14 +71,15 @@ pub fn heuristic_kernel(_k: usize, sparsity: f32, wants_fused_prelu: bool) -> &'
     }
 }
 
-/// The two strongest candidates for an untuned (K, sparsity) class, best
-/// first: the paper-heuristic pick plus its closest rival from the paper's
-/// figures. The [`crate::plan::PlanCache`] races exactly these two on the
-/// first real batch of an untuned class and locks the measured winner into
-/// the shared [`TuningTable`].
+/// The two strongest candidates for an untuned (K, sparsity, M-bucket)
+/// class, best first: the paper-heuristic pick plus its closest rival for
+/// that batch regime. The [`crate::plan::PlanCache`] races exactly these
+/// two on the first real batch of an untuned class and locks the measured
+/// winner into the shared [`TuningTable`] under the M-aware class.
 pub fn heuristic_top2(
     k: usize,
     sparsity: f32,
+    m: usize,
     wants_fused_prelu: bool,
 ) -> [&'static str; 2] {
     let primary = heuristic_kernel(k, sparsity, wants_fused_prelu);
@@ -89,6 +90,10 @@ pub fn heuristic_top2(
         // Fig 11: the SIMD path and the best scalar path trade the lead
         // depending on padding overhead for the host's actual shapes.
         "simd_vertical" => "interleaved_blocked_tcsc",
+        // Single-row batches leave the SIMD path's padded-X copy nothing
+        // to amortize; the latency-shape rival is the plain K/M-unrolled
+        // kernel (Fig 2's GEMV end).
+        _ if m <= 1 => "unrolled_tcsc_k4_m4",
         _ => "simd_vertical",
     };
     [primary, secondary]
@@ -144,8 +149,23 @@ impl Planner {
         self.table.read().unwrap_or_else(|e| e.into_inner()).len()
     }
 
-    /// The tuned entry for a (K, sparsity) class, if any.
-    pub fn lookup_entry(&self, k: usize, sparsity: f32) -> Option<TuneEntry> {
+    /// The tuned entry for a (K, sparsity) class at batch size `m`: the
+    /// M-aware entry for `m`'s bucket when one was recorded, else the
+    /// M-agnostic fallback (PR-2-era tables resolve through this for
+    /// every batch size).
+    pub fn lookup_entry(&self, k: usize, sparsity: f32, m: usize) -> Option<TuneEntry> {
+        self.table
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .lookup_m(k, sparsity, m)
+            .cloned()
+    }
+
+    /// The tuned **M-agnostic** entry for a (K, sparsity) class, skipping
+    /// any M-aware splits — for pinned plans whose batch size is unknown:
+    /// a GEMV-specialized `_m1` entry must not decide a plan that may
+    /// serve any batch size.
+    pub fn lookup_entry_agnostic(&self, k: usize, sparsity: f32) -> Option<TuneEntry> {
         self.table
             .read()
             .unwrap_or_else(|e| e.into_inner())
@@ -175,10 +195,17 @@ impl Planner {
         *self.table.write().unwrap_or_else(|e| e.into_inner()) = table;
     }
 
-    /// The kernel this planner would pick for a (K, sparsity) class:
-    /// tuned winner if the table has one, paper heuristic otherwise.
-    pub fn select_kernel(&self, k: usize, sparsity: f32, wants_fused_prelu: bool) -> String {
-        match self.lookup_entry(k, sparsity) {
+    /// The kernel this planner would pick for a (K, sparsity) class at
+    /// batch size `m`: tuned winner if the table has one (M-aware entry
+    /// first, then the M-agnostic fallback), paper heuristic otherwise.
+    pub fn select_kernel(
+        &self,
+        k: usize,
+        sparsity: f32,
+        m: usize,
+        wants_fused_prelu: bool,
+    ) -> String {
+        match self.lookup_entry(k, sparsity, m) {
             Some(entry) => entry.kernel,
             None => heuristic_kernel(k, sparsity, wants_fused_prelu).to_string(),
         }
@@ -223,7 +250,19 @@ impl Planner {
         let wants_fused = epilogue.fusible_prelu().is_some();
         let name = match &hints.kernel {
             Some(k) => k.clone(),
-            None => self.select_kernel(w.k(), sparsity, wants_fused),
+            // A declared expected batch picks that regime's M-aware entry;
+            // an unset one (0) resolves through the M-agnostic entry only —
+            // the plan may serve any batch size, so a single-bucket split
+            // (e.g. a GEMV-tuned `_m1` winner) must not decide it.
+            None => {
+                let entry = match hints.expected_batch {
+                    0 => self.lookup_entry_agnostic(w.k(), sparsity),
+                    m => self.lookup_entry(w.k(), sparsity, m),
+                };
+                entry.map(|e| e.kernel).unwrap_or_else(|| {
+                    heuristic_kernel(w.k(), sparsity, wants_fused).to_string()
+                })
+            }
         };
         let kparams = KernelParams {
             prelu_alpha: epilogue.fusible_prelu(),
@@ -271,12 +310,17 @@ mod tests {
 
     #[test]
     fn top2_leads_with_heuristic_and_differs() {
-        for &(s, fused) in &[(0.0625f32, false), (0.25, false), (0.5, true), (0.5, false)] {
-            let [a, b] = heuristic_top2(4096, s, fused);
-            assert_eq!(a, heuristic_kernel(4096, s, fused));
-            assert_ne!(a, b, "candidates must differ (s={s}, fused={fused})");
-            assert!(crate::kernels::kernel_names().contains(&b), "unknown rival {b}");
+        for &m in &[1usize, 8, 64] {
+            for &(s, fused) in &[(0.0625f32, false), (0.25, false), (0.5, true), (0.5, false)] {
+                let [a, b] = heuristic_top2(4096, s, m, fused);
+                assert_eq!(a, heuristic_kernel(4096, s, fused));
+                assert_ne!(a, b, "candidates must differ (s={s}, m={m}, fused={fused})");
+                assert!(crate::kernels::kernel_names().contains(&b), "unknown rival {b}");
+            }
         }
+        // The M=1 regime swaps the SIMD rival for the unrolled GEMV shape.
+        assert_eq!(heuristic_top2(4096, 0.25, 1, false)[1], "unrolled_tcsc_k4_m4");
+        assert_eq!(heuristic_top2(4096, 0.25, 8, false)[1], "simd_vertical");
     }
 
     #[test]
@@ -317,7 +361,7 @@ mod tests {
     fn recorded_entries_are_shared_and_replaceable() {
         let planner = Planner::new();
         assert_eq!(planner.tuned_classes(), 0);
-        assert!(planner.lookup_entry(512, 0.25).is_none());
+        assert!(planner.lookup_entry(512, 0.25, 8).is_none());
         planner.record(
             ShapeClass::of(512, 0.25),
             TuneEntry {
@@ -327,14 +371,30 @@ mod tests {
         );
         assert_eq!(planner.tuned_classes(), 1);
         assert_eq!(
-            planner.select_kernel(512, 0.25, false),
+            planner.select_kernel(512, 0.25, 8, false),
+            "base_tcsc".to_string()
+        );
+        // An M-aware entry overrides the fallback for its bucket only.
+        planner.record(
+            ShapeClass::of_m(512, 0.25, 1),
+            TuneEntry {
+                kernel: "unrolled_tcsc_k4_m4".into(),
+                flops_per_cycle: 2.0,
+            },
+        );
+        assert_eq!(
+            planner.select_kernel(512, 0.25, 1, false),
+            "unrolled_tcsc_k4_m4".to_string()
+        );
+        assert_eq!(
+            planner.select_kernel(512, 0.25, 8, false),
             "base_tcsc".to_string()
         );
         // install_table replaces everything (the background re-tune path).
         planner.install_table(TuningTable::new());
         assert_eq!(planner.tuned_classes(), 0);
         assert_eq!(
-            planner.select_kernel(512, 0.25, false),
+            planner.select_kernel(512, 0.25, 8, false),
             "interleaved_blocked_tcsc".to_string()
         );
         // Snapshot is a detached copy.
@@ -356,6 +416,52 @@ mod tests {
             },
         );
         assert_eq!(planner.tuned_classes(), 0);
+    }
+
+    #[test]
+    fn pinned_plan_without_expected_batch_skips_m_aware_splits() {
+        let mut table = TuningTable::new();
+        table.insert(
+            ShapeClass::of(128, 0.25),
+            TuneEntry {
+                kernel: "interleaved_blocked_tcsc".into(),
+                flops_per_cycle: 2.0,
+            },
+        );
+        table.insert(
+            ShapeClass::of_m(128, 0.25, 1),
+            TuneEntry {
+                kernel: "unrolled_tcsc_k4_m4".into(),
+                flops_per_cycle: 3.0,
+            },
+        );
+        let planner = Planner::with_table(table);
+        let w = TernaryMatrix::random(128, 8, 0.25, 13);
+        let epi = || Epilogue::with_bias(vec![0.0; 8]);
+        // Batch size unknown → the M-agnostic mean winner, not the GEMV
+        // split (the plan may serve any batch size).
+        let plan = planner
+            .plan(&w, KernelParams::default(), epi(), &PlanHints::default())
+            .unwrap();
+        assert_eq!(plan.kernel_name(), "interleaved_blocked_tcsc");
+        // A declared single-row batch opts into the M=1 regime.
+        let hints = PlanHints {
+            expected_batch: 1,
+            ..Default::default()
+        };
+        let plan = planner
+            .plan(&w, KernelParams::default(), epi(), &hints)
+            .unwrap();
+        assert_eq!(plan.kernel_name(), "unrolled_tcsc_k4_m4");
+        // A declared large batch resolves through the fallback.
+        let hints = PlanHints {
+            expected_batch: 64,
+            ..Default::default()
+        };
+        let plan = planner
+            .plan(&w, KernelParams::default(), epi(), &hints)
+            .unwrap();
+        assert_eq!(plan.kernel_name(), "interleaved_blocked_tcsc");
     }
 
     #[test]

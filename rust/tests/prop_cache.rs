@@ -1,14 +1,19 @@
 //! Plan-cache properties (the adaptive-runtime acceptance bar):
 //!
 //! 1. Cached-plan output is **bitwise identical** to a freshly planned
-//!    sequential run, across M buckets and thread counts.
+//!    sequential run, across M buckets and thread counts — including when
+//!    an M-aware tuning table picks a *different* kernel per bucket.
 //! 2. A mixed-M request stream builds each (bucket, threads) plan once;
 //!    after warmup, traffic only hits the cache.
 //! 3. The online top-2 fallback races real batches, locks the winner into
-//!    the shared tuning table, and never races a tuned class again.
+//!    the shared tuning table **under the M-aware class**, and never races
+//!    a tuned (class, bucket) again.
+//! 4. A PR-2-era (K, sparsity)-keyed tuning JSON still loads and resolves
+//!    for every batch size via the M-agnostic fallback.
 
 use std::sync::Arc;
 
+use stgemm::autotune::{ShapeClass, TuneEntry, TuningTable};
 use stgemm::kernels::{dense_oracle, KernelParams};
 use stgemm::plan::{
     m_bucket, Epilogue, LayerSpec, PlanCache, PlanCacheConfig, PlanHints, Planner,
@@ -73,6 +78,133 @@ fn cached_plan_is_bitwise_identical_to_fresh_sequential_plan() {
     }
 }
 
+/// Tentpole acceptance: a synthetic table whose (K, s, M) winners differ
+/// per bucket. Each M bucket's plan must use **its own** winner — the
+/// M-aware entry when one exists, the M-agnostic fallback otherwise —
+/// and every output must stay bitwise identical to a fresh sequential
+/// plan pinned to that same kernel, at every thread count.
+#[test]
+fn per_m_table_winners_are_honored_per_bucket_and_stay_bitwise_identical() {
+    let mut table = TuningTable::new();
+    table.insert(
+        ShapeClass::of(K, 0.25),
+        TuneEntry {
+            kernel: "interleaved_blocked_tcsc".into(),
+            flops_per_cycle: 2.0,
+        },
+    );
+    table.insert(
+        ShapeClass::of_m(K, 0.25, 1),
+        TuneEntry {
+            kernel: "unrolled_tcsc_k4_m4".into(),
+            flops_per_cycle: 3.0,
+        },
+    );
+    table.insert(
+        ShapeClass::of_m(K, 0.25, 16),
+        TuneEntry {
+            kernel: "simd_vertical".into(),
+            flops_per_cycle: 4.0,
+        },
+    );
+    let planner = Arc::new(Planner::with_table(table));
+    let w = TernaryMatrix::random(K, N, 0.25, 51);
+    for &threads in &[1usize, 2, 4] {
+        let cache = PlanCache::new(
+            Arc::clone(&planner),
+            PlanCacheConfig {
+                threads,
+                online_top2: true, // fully tuned → must never race
+                race_reps: 1,
+            },
+        );
+        let id = cache
+            .register(LayerSpec::new(w.clone(), Epilogue::new(bias(), 1.0, None)))
+            .unwrap();
+        // Bucket → expected winner (9 → bucket 16; 5 → bucket 8 →
+        // fallback; 64 → untouched bucket → fallback).
+        for &(m, want) in &[
+            (1usize, "unrolled_tcsc_k4_m4"),
+            (16, "simd_vertical"),
+            (9, "simd_vertical"),
+            (5, "interleaved_blocked_tcsc"),
+            (64, "interleaved_blocked_tcsc"),
+        ] {
+            assert_eq!(cache.kernel_for(id, m), want, "m={m}");
+            let plan = cache.plan_for(id, m).unwrap();
+            assert_eq!(plan.kernel_name(), want, "m={m}");
+            let x = Matrix::random(m, K, 7000 + m as u64);
+            let mut y_cached = Matrix::zeros(m, N);
+            cache.run(id, &x, &mut y_cached).unwrap();
+            // Fresh sequential plan pinned to the bucket's own winner.
+            let fresh = planner
+                .plan(
+                    &w,
+                    KernelParams::default(),
+                    Epilogue::new(bias(), 1.0, None),
+                    &PlanHints::with_kernel(want),
+                )
+                .unwrap();
+            let mut y_fresh = Matrix::zeros(m, N);
+            fresh.run(&x, &mut y_fresh);
+            assert_eq!(
+                y_cached, y_fresh,
+                "threads={threads} m={m}: M-aware winner diverged from its \
+                 sequential twin"
+            );
+        }
+        assert_eq!(cache.snapshot().races, 0, "tuned buckets must not race");
+    }
+}
+
+/// Back-compat acceptance: the checked-in PR-2-era tuning JSON (M-agnostic
+/// `k{K}_s{S}` keys only) still loads, and resolves for **every** batch
+/// size via the (K, sparsity) fallback — so upgrading the binary never
+/// orphans an existing table.
+#[test]
+fn pr2_era_tuning_json_resolves_via_m_agnostic_fallback() {
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/tuning_pr2.json"
+    );
+    let table = TuningTable::load(path).expect("PR-2 fixture must keep loading");
+    assert_eq!(table.len(), 2);
+    // K=96 buckets to 128, so the fixture's k128_s2500 entry covers it
+    // at any batch size.
+    for m in [1usize, 4, 8, 33, 1024] {
+        let entry = table
+            .lookup_m(K, 0.25, m)
+            .expect("fallback must resolve every batch size");
+        assert_eq!(entry.kernel, "unrolled_tcsc_12", "m={m}");
+    }
+    assert_eq!(table.kernel_for(4096, 0.0625, 7), "unrolled_tcsc_k4_m4");
+    // The serving path honors the fixture: no race, fixture kernel used.
+    let planner = Arc::new(Planner::with_table(table));
+    let cache = PlanCache::new(
+        Arc::clone(&planner),
+        PlanCacheConfig {
+            threads: 1,
+            online_top2: true,
+            race_reps: 1,
+        },
+    );
+    let w = TernaryMatrix::random(K, N, 0.25, 61);
+    let id = cache
+        .register(LayerSpec::new(w.clone(), Epilogue::new(bias(), 1.0, None)))
+        .unwrap();
+    for m in [1usize, 8] {
+        assert_eq!(cache.kernel_for(id, m), "unrolled_tcsc_12");
+        let x = Matrix::random(m, K, 8000 + m as u64);
+        let y = cache.forward(id, &x).unwrap();
+        assert!(y.allclose(&dense_oracle(&x, &w, &bias()), 1e-3), "m={m}");
+    }
+    assert_eq!(
+        cache.snapshot().races,
+        0,
+        "a fallback-covered class must never race"
+    );
+}
+
 /// Even when the online race picks the kernel, the cached plan must stay
 /// bitwise identical to a fresh *sequential* plan pinned to the same
 /// kernel — thread fan-out never changes bits.
@@ -95,10 +227,11 @@ fn raced_plan_is_bitwise_identical_to_its_sequential_twin() {
         let x = Matrix::random(m, K, 2000 + m as u64);
         let mut y_cached = Matrix::zeros(m, N);
         cache.run(id, &x, &mut y_cached).unwrap();
-        // The race recorded a winner; a sequential plan now selects it too.
+        // The race recorded this bucket's winner; a sequential plan pinned
+        // to it must agree bitwise.
         let winner = planner
-            .lookup_entry(K, 0.25)
-            .expect("race must record a winner")
+            .lookup_entry(K, 0.25, m)
+            .expect("race must record a winner for the bucket")
             .kernel;
         let fresh = planner
             .plan(
@@ -132,7 +265,7 @@ fn mixed_m_stream_hits_cache_after_warmup() {
         .register(LayerSpec::new(w.clone(), Epilogue::new(bias(), 1.0, None)))
         .unwrap();
     let stream = [1usize, 4, 8, 2, 16, 7, 3, 8, 1, 5, 9, 16];
-    // Warmup pass: first sighting of each bucket builds (and may race).
+    // Warmup pass: first sighting of each bucket builds (and races it).
     for (i, &m) in stream.iter().enumerate() {
         let x = Matrix::random(m, K, 3000 + i as u64);
         let y = cache.forward(id, &x).unwrap();
@@ -147,6 +280,8 @@ fn mixed_m_stream_hits_cache_after_warmup() {
     };
     assert_eq!(warm.plans, distinct_buckets);
     assert_eq!(warm.misses, distinct_buckets as u64);
+    // Per-bucket racing: every bucket raced exactly once during warmup.
+    assert_eq!(warm.races, distinct_buckets as u64);
     // Steady state: identical stream, zero plan construction.
     for (i, &m) in stream.iter().enumerate() {
         let x = Matrix::random(m, K, 4000 + i as u64);
@@ -155,14 +290,14 @@ fn mixed_m_stream_hits_cache_after_warmup() {
     let hot = cache.snapshot();
     assert_eq!(hot.misses, warm.misses, "no per-request plan construction");
     assert_eq!(hot.plans, warm.plans);
-    assert_eq!(hot.races, warm.races, "tuned classes never race again");
+    assert_eq!(hot.races, warm.races, "tuned buckets never race again");
     assert_eq!(hot.hits, warm.hits + stream.len() as u64);
 }
 
-/// The online race records exactly one winner per class and the entry is
-/// one of the two paper candidates.
+/// The online race records exactly one winner per (class, bucket) and the
+/// entry is one of the two paper candidates for that batch regime.
 #[test]
-fn online_race_is_once_per_class_and_paper_sane() {
+fn online_race_is_once_per_class_bucket_and_paper_sane() {
     let planner = Arc::new(Planner::new());
     let cache = PlanCache::new(
         Arc::clone(&planner),
@@ -180,20 +315,26 @@ fn online_race_is_once_per_class_and_paper_sane() {
             Epilogue::with_bias(vec![0.0; 8]),
         ))
         .unwrap();
-    assert!(planner.lookup_entry(K, 0.25).is_none());
+    assert!(planner.lookup_entry(K, 0.25, 8).is_none());
     let x = Matrix::random(8, K, 5000);
     cache.forward(a, &x).unwrap();
     let snap = cache.snapshot();
     assert_eq!(snap.races, 1);
-    let entry = planner.lookup_entry(K, 0.25).expect("winner recorded");
-    let candidates = stgemm::plan::heuristic_top2(K, 0.25, false);
+    let entry = planner.lookup_entry(K, 0.25, 8).expect("winner recorded");
+    let candidates = stgemm::plan::heuristic_top2(K, 0.25, 8, false);
     assert!(
         candidates.contains(&entry.kernel.as_str()),
         "winner '{}' must be a top-2 candidate {:?}",
         entry.kernel,
         candidates
     );
-    // Second layer of the class: table hit, no second race.
+    // The race was recorded under the M-aware class only: other buckets
+    // of the same (K, sparsity) stay open for their own race.
+    assert!(
+        planner.lookup_entry(K, 0.25, 1).is_none(),
+        "bucket 8's race must not settle bucket 1"
+    );
+    // Second layer of the class, same bucket: table hit, no second race.
     cache.forward(b, &x).unwrap();
     assert_eq!(cache.snapshot().races, 1);
 }
@@ -219,6 +360,6 @@ fn explicit_override_bypasses_race_and_table() {
     let y = cache.forward(id, &x).unwrap();
     assert!(y.allclose(&dense_oracle(&x, &w, &bias()), 1e-3));
     assert_eq!(cache.snapshot().races, 0, "override must not race");
-    assert!(planner.lookup_entry(K, 0.25).is_none());
+    assert!(planner.lookup_entry(K, 0.25, 8).is_none());
     assert_eq!(cache.kernel_for(id, 8), "base_tcsc");
 }
