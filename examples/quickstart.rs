@@ -46,7 +46,7 @@ fn main() {
                 &w,
                 KernelParams::default(),
                 Epilogue::with_bias(bias.clone()),
-                &PlanHints::with_kernel(name),
+                &PlanHints::with_kernel(name.parse().unwrap()),
             )
             .unwrap();
         let mut y = Matrix::zeros(m, n);

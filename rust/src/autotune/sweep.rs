@@ -12,16 +12,25 @@
 //! across buckets, the fallback every batch size resolves to. With
 //! [`SweepOptions::per_m`] (`autotune sweep --per-m`), a bucket whose own
 //! winner beats that mean winner's measurement *in that bucket* by more
-//! than [`SweepOptions::divergence_threshold`] additionally gets an
-//! **M-aware** `k{K}_s{S}_m{M}` entry — so a kernel that only wins at
-//! M=1 is no longer silently locked in for M=64 (and vice versa).
+//! than the divergence threshold additionally gets an **M-aware**
+//! `k{K}_s{S}_m{M}` entry — so a kernel that only wins at M=1 is no
+//! longer silently locked in for M=64 (and vice versa).
+//!
+//! **Self-calibrating divergence**: the sweep's repetitions double as a
+//! noise probe. Every measurement reports its coefficient of variation
+//! across reps ([`crate::bench::KernelMeasurement::cycles_cv`]); a class's
+//! divergence threshold is clamped to at least the *largest* CV observed
+//! among its own measurements ([`variance_floor`]), so a noisy machine
+//! cannot split classes on timing noise no matter how low `--divergence`
+//! was set. The floor actually applied is reported in
+//! [`SweepReport::variance_floor`] / [`SweepReport::effective_divergence`].
 //!
 //! The serve-time background re-tune hook runs exactly this sweep (per-M
 //! enabled) on a snapshot of the live table and installs the result.
 
 use crate::autotune::table::{m_bucket, ShapeClass, TuneEntry, TuningTable};
 use crate::bench::harness::measure_kernel;
-use crate::kernels::KernelParams;
+use crate::kernels::{KernelId, KernelParams};
 use crate::model::ModelConfig;
 use crate::perf::timer::CycleTimer;
 
@@ -33,8 +42,11 @@ pub struct SweepPoint {
     pub n: usize,
     pub sparsity: f32,
     pub bucket: usize,
-    pub kernel: String,
+    pub kernel: KernelId,
     pub flops_per_cycle: f64,
+    /// Coefficient of variation of the measured cycles across the timer's
+    /// reps (0 for a single rep) — the sweep's noise signal.
+    pub cycles_cv: f64,
 }
 
 /// Winner-selection knobs for [`sweep_model_opts`].
@@ -47,7 +59,8 @@ pub struct SweepOptions {
     /// Minimum relative flops/cycle gain of a bucket's own winner over
     /// the mean winner's measurement in that bucket before an M-aware
     /// entry is recorded (e.g. 0.08 = 8%). Guards against timing noise
-    /// splitting every class into per-bucket entries.
+    /// splitting every class into per-bucket entries. The sweep clamps
+    /// this to at least the measured [`variance_floor`] of each class.
     pub divergence_threshold: f64,
 }
 
@@ -69,6 +82,26 @@ pub struct SweepReport {
     /// measured once). M-agnostic entries first per class, then any
     /// M-aware splits.
     pub winners: Vec<(ShapeClass, TuneEntry)>,
+    /// Largest per-class noise floor observed (max coefficient of
+    /// variation across every measurement's reps).
+    pub variance_floor: f64,
+    /// The divergence threshold actually applied to the noisiest class:
+    /// `max(requested, variance_floor)`.
+    pub effective_divergence: f64,
+}
+
+/// The noise floor of a set of measurements: the largest finite
+/// coefficient of variation among them. A per-M split below this floor is
+/// indistinguishable from run-to-run noise.
+pub fn variance_floor(cvs: impl IntoIterator<Item = f64>) -> f64 {
+    cvs.into_iter()
+        .filter(|c| c.is_finite())
+        .fold(0.0f64, f64::max)
+}
+
+/// Clamp a requested divergence threshold to the measured noise floor.
+pub fn effective_divergence(requested: f64, floor: f64) -> f64 {
+    requested.max(floor)
 }
 
 /// Decide the tuning entries for one class from its per-(kernel, bucket)
@@ -88,7 +121,7 @@ pub fn decide_winners(
     k: usize,
     sparsity: f32,
     buckets: &[usize],
-    measured: &[(String, Vec<f64>)],
+    measured: &[(KernelId, Vec<f64>)],
     opts: &SweepOptions,
 ) -> Vec<(ShapeClass, TuneEntry)> {
     assert!(!measured.is_empty(), "sweep needs at least one candidate");
@@ -121,7 +154,7 @@ pub fn decide_winners(
     let mut winners = vec![(
         ShapeClass::of(k, sparsity),
         TuneEntry {
-            kernel: measured[mean_idx].0.clone(),
+            kernel: measured[mean_idx].0,
             flops_per_cycle: bucket_mean(mean_idx),
         },
     )];
@@ -147,7 +180,7 @@ pub fn decide_winners(
         winners.push((
             ShapeClass::of_m(k, sparsity, *b),
             TuneEntry {
-                kernel: measured[best_idx].0.clone(),
+                kernel: measured[best_idx].0,
                 flops_per_cycle: best,
             },
         ));
@@ -159,6 +192,11 @@ pub fn decide_winners(
 /// layers at every bucket in `buckets`, record the class winners (see
 /// [`decide_winners`]) into `table`, and return the full report.
 ///
+/// Per-class, the divergence threshold is clamped to the class's measured
+/// [`variance_floor`] before winner selection — reps double as the noise
+/// probe, so `--divergence 0.01` on a noisy machine behaves like the
+/// measured floor rather than splitting on noise.
+///
 /// Table hygiene: a swept class's **M-agnostic** entry is always
 /// overwritten (fresh measurements beat stale ones). Its **M-aware**
 /// splits are retired only by a per-M sweep, and only for the buckets it
@@ -169,7 +207,7 @@ pub fn decide_winners(
 pub fn sweep_model_opts(
     cfg: &ModelConfig,
     buckets: &[usize],
-    candidates: &[&str],
+    candidates: &[KernelId],
     timer: &CycleTimer,
     table: &mut TuningTable,
     opts: &SweepOptions,
@@ -180,7 +218,10 @@ pub fn sweep_model_opts(
     } else {
         buckets.to_vec()
     };
-    let mut report = SweepReport::default();
+    let mut report = SweepReport {
+        effective_divergence: opts.divergence_threshold,
+        ..SweepReport::default()
+    };
     let mut seen: Vec<ShapeClass> = Vec::new();
     for layer in 0..cfg.dims.len() - 1 {
         let (k, n) = (cfg.dims[layer], cfg.dims[layer + 1]);
@@ -189,12 +230,13 @@ pub fn sweep_model_opts(
             continue;
         }
         seen.push(class);
-        let mut measured: Vec<(String, Vec<f64>)> = Vec::with_capacity(candidates.len());
+        let mut measured: Vec<(KernelId, Vec<f64>)> = Vec::with_capacity(candidates.len());
+        let mut class_cvs: Vec<f64> = Vec::new();
         for &kernel in candidates {
             let mut fpcs = Vec::with_capacity(buckets.len());
             for &m in &buckets {
                 let meas = measure_kernel(
-                    kernel,
+                    kernel.name(),
                     m.max(1),
                     k,
                     n,
@@ -204,19 +246,33 @@ pub fn sweep_model_opts(
                     timer,
                 );
                 let fpc = meas.flops_per_cycle();
+                class_cvs.push(meas.cycles_cv);
                 report.points.push(SweepPoint {
                     layer,
                     k,
                     n,
                     sparsity: cfg.sparsity,
                     bucket: m.max(1),
-                    kernel: kernel.to_string(),
+                    kernel,
                     flops_per_cycle: fpc,
+                    cycles_cv: meas.cycles_cv,
                 });
                 fpcs.push(fpc);
             }
-            measured.push((kernel.to_string(), fpcs));
+            measured.push((kernel, fpcs));
         }
+        // Self-calibrating divergence: this class's measured noise floor
+        // (largest CV across its reps) clamps the requested threshold, so
+        // per-M splits below run-to-run noise are suppressed.
+        let floor = variance_floor(class_cvs);
+        report.variance_floor = report.variance_floor.max(floor);
+        let class_opts = SweepOptions {
+            divergence_threshold: effective_divergence(opts.divergence_threshold, floor),
+            ..opts.clone()
+        };
+        report.effective_divergence = report
+            .effective_divergence
+            .max(class_opts.divergence_threshold);
         // A per-M sweep re-measured every bucket it covers, so stale
         // M-aware entries for those buckets (e.g. a noisy online-race
         // winner, or a divergence split that no longer holds) must be
@@ -228,7 +284,8 @@ pub fn sweep_model_opts(
                 table.remove(&ShapeClass::of_m(k, cfg.sparsity, m));
             }
         }
-        for (class, entry) in decide_winners(k, cfg.sparsity, &buckets, &measured, opts) {
+        for (class, entry) in decide_winners(k, cfg.sparsity, &buckets, &measured, &class_opts)
+        {
             table.insert(class, entry.clone());
             report.winners.push((class, entry));
         }
@@ -241,7 +298,7 @@ pub fn sweep_model_opts(
 pub fn sweep_model(
     cfg: &ModelConfig,
     buckets: &[usize],
-    candidates: &[&str],
+    candidates: &[KernelId],
     timer: &CycleTimer,
     table: &mut TuningTable,
 ) -> SweepReport {
@@ -251,6 +308,10 @@ pub fn sweep_model(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    // Arbitrary distinct candidates for the pure decide_winners tests.
+    const A: KernelId = KernelId::BaseTcsc;
+    const B: KernelId = KernelId::UnrolledTcsc12;
 
     fn cfg() -> ModelConfig {
         ModelConfig::from_json(
@@ -269,13 +330,7 @@ mod tests {
         let c = cfg();
         let timer = CycleTimer::new(0, 1);
         let mut table = TuningTable::new();
-        let report = sweep_model(
-            &c,
-            &c.batch_buckets,
-            &["base_tcsc", "unrolled_tcsc_12"],
-            &timer,
-            &mut table,
-        );
+        let report = sweep_model(&c, &c.batch_buckets, &[A, B], &timer, &mut table);
         // Two distinct classes (K=32 and K=64 at 25%), each covered.
         assert_eq!(report.winners.len(), 2);
         for i in 0..c.dims.len() - 1 {
@@ -297,7 +352,7 @@ mod tests {
         .unwrap();
         let timer = CycleTimer::new(0, 1);
         let mut table = TuningTable::new();
-        let report = sweep_model(&c, &[1], &["base_tcsc"], &timer, &mut table);
+        let report = sweep_model(&c, &[1], &[A], &timer, &mut table);
         assert_eq!(report.winners.len(), 1, "one class, measured once");
         assert_eq!(table.len(), 1);
     }
@@ -307,59 +362,82 @@ mod tests {
         let c = cfg();
         let timer = CycleTimer::new(0, 1);
         let mut table = TuningTable::new();
-        let report = sweep_model(&c, &[], &["base_tcsc"], &timer, &mut table);
+        let report = sweep_model(&c, &[], &[A], &timer, &mut table);
         assert_eq!(report.points.len(), 2, "one default bucket per class");
         assert!(report.points.iter().all(|p| p.bucket == 16));
+    }
+
+    #[test]
+    fn variance_floor_is_max_finite_cv() {
+        assert_eq!(variance_floor([]), 0.0);
+        assert_eq!(variance_floor([0.02, 0.11, 0.05]), 0.11);
+        assert_eq!(variance_floor([0.02, f64::NAN, f64::INFINITY]), 0.02);
+        assert_eq!(effective_divergence(0.08, 0.03), 0.08);
+        assert_eq!(effective_divergence(0.08, 0.15), 0.15, "noise clamps up");
+    }
+
+    #[test]
+    fn sweep_reports_noise_floor_and_clamped_divergence() {
+        let c = cfg();
+        // Multiple reps so a CV can actually be measured.
+        let timer = CycleTimer::new(0, 3);
+        let mut table = TuningTable::new();
+        let opts = SweepOptions {
+            per_m: true,
+            divergence_threshold: 0.0, // degenerate request: split on anything
+        };
+        let report = sweep_model_opts(&c, &c.batch_buckets, &[A, B], &timer, &mut table, &opts);
+        assert!(report.variance_floor >= 0.0);
+        assert!(
+            report.effective_divergence >= report.variance_floor,
+            "applied threshold is never below the measured floor"
+        );
+        assert!(report.points.iter().all(|p| p.cycles_cv >= 0.0));
+        // Single-rep timers have no spread to measure: floor stays 0 and
+        // the requested threshold passes through unclamped.
+        let timer1 = CycleTimer::new(0, 1);
+        let report1 =
+            sweep_model_opts(&c, &c.batch_buckets, &[A], &timer1, &mut table, &opts);
+        assert_eq!(report1.variance_floor, 0.0);
+        assert_eq!(report1.effective_divergence, 0.0);
     }
 
     #[test]
     fn decide_winners_mean_collapse_without_per_m() {
         // Kernel A wins at M=1, B wins (bigger) at M=16: B has the better
         // mean, and without per_m that is the only entry recorded.
-        let measured = vec![
-            ("a".to_string(), vec![3.0, 1.0]),
-            ("b".to_string(), vec![2.0, 4.0]),
-        ];
+        let measured = vec![(A, vec![3.0, 1.0]), (B, vec![2.0, 4.0])];
         let w = decide_winners(64, 0.25, &[1, 16], &measured, &SweepOptions::default());
         assert_eq!(w.len(), 1);
         assert_eq!(w[0].0, ShapeClass::of(64, 0.25));
-        assert_eq!(w[0].1.kernel, "b");
+        assert_eq!(w[0].1.kernel, B);
         assert!((w[0].1.flops_per_cycle - 3.0).abs() < 1e-9, "mean of 2 and 4");
     }
 
     #[test]
     fn decide_winners_splits_diverging_buckets() {
-        let measured = vec![
-            ("a".to_string(), vec![3.0, 1.0]),
-            ("b".to_string(), vec![2.0, 4.0]),
-        ];
+        let measured = vec![(A, vec![3.0, 1.0]), (B, vec![2.0, 4.0])];
         let opts = SweepOptions {
             per_m: true,
             divergence_threshold: 0.10,
         };
         let w = decide_winners(64, 0.25, &[1, 16], &measured, &opts);
-        // Mean winner b, plus an M-aware split for bucket 1 where a's 3.0
-        // beats b's 2.0 by 50% > 10%.
+        // Mean winner B, plus an M-aware split for bucket 1 where A's 3.0
+        // beats B's 2.0 by 50% > 10%.
         assert_eq!(w.len(), 2);
-        assert_eq!(
-            entry_for(&w, ShapeClass::of(64, 0.25)).unwrap().kernel,
-            "b"
-        );
+        assert_eq!(entry_for(&w, ShapeClass::of(64, 0.25)).unwrap().kernel, B);
         let split = entry_for(&w, ShapeClass::of_m(64, 0.25, 1)).unwrap();
-        assert_eq!(split.kernel, "a");
+        assert_eq!(split.kernel, A);
         assert!((split.flops_per_cycle - 3.0).abs() < 1e-9);
-        // No entry for bucket 16: b wins it outright.
+        // No entry for bucket 16: B wins it outright.
         assert!(entry_for(&w, ShapeClass::of_m(64, 0.25, 16)).is_none());
     }
 
     #[test]
     fn decide_winners_threshold_suppresses_noise_splits() {
-        // a beats b at M=1 by only 4% — below an 8% threshold, so the
+        // A beats B at M=1 by only 4% — below an 8% threshold, so the
         // divergence is treated as noise and collapsed into the mean.
-        let measured = vec![
-            ("a".to_string(), vec![2.08, 1.0]),
-            ("b".to_string(), vec![2.0, 4.0]),
-        ];
+        let measured = vec![(A, vec![2.08, 1.0]), (B, vec![2.0, 4.0])];
         let opts = SweepOptions {
             per_m: true,
             divergence_threshold: 0.08,
@@ -367,10 +445,7 @@ mod tests {
         let w = decide_winners(64, 0.25, &[1, 16], &measured, &opts);
         assert_eq!(w.len(), 1, "4% gain must not split the class");
         // Raise the gain past the threshold and the split appears.
-        let measured = vec![
-            ("a".to_string(), vec![2.4, 1.0]),
-            ("b".to_string(), vec![2.0, 4.0]),
-        ];
+        let measured = vec![(A, vec![2.4, 1.0]), (B, vec![2.0, 4.0])];
         let w = decide_winners(64, 0.25, &[1, 16], &measured, &opts);
         assert_eq!(w.len(), 2, "20% gain splits the class");
     }
@@ -380,17 +455,14 @@ mod tests {
         // Raw buckets 3 and 4 both snap to M bucket 4: their measurements
         // are averaged before winner selection, yielding one entry whose
         // flops/cycle is the group aggregate.
-        let measured = vec![
-            ("a".to_string(), vec![3.0, 3.5, 1.0]),
-            ("b".to_string(), vec![2.0, 2.0, 4.0]),
-        ];
+        let measured = vec![(A, vec![3.0, 3.5, 1.0]), (B, vec![2.0, 2.0, 4.0])];
         let opts = SweepOptions {
             per_m: true,
             divergence_threshold: 0.10,
         };
         let w = decide_winners(64, 0.25, &[3, 4, 16], &measured, &opts);
         let split = entry_for(&w, ShapeClass::of_m(64, 0.25, 4)).unwrap();
-        assert_eq!(split.kernel, "a");
+        assert_eq!(split.kernel, A);
         assert!((split.flops_per_cycle - 3.25).abs() < 1e-9, "mean of 3.0, 3.5");
         assert_eq!(w.len(), 2, "one agnostic + one grouped M-aware entry");
     }
@@ -398,46 +470,40 @@ mod tests {
     #[test]
     fn decide_winners_mean_weights_each_plan_bucket_once() {
         // Raw buckets 3 and 4 collide on plan bucket 4. Ungrouped, the
-        // small-M specialist a would win the mean (2.53 vs 2.47) purely
+        // small-M specialist A would win the mean (2.53 vs 2.47) purely
         // because its best bucket is counted twice; grouped per plan
-        // bucket, b wins (2.7 vs 2.25) — and b is what unmeasured large
+        // bucket, B wins (2.7 vs 2.25) — and B is what unmeasured large
         // buckets (e.g. M=1024 traffic) resolve to via the fallback.
-        let measured = vec![
-            ("a".to_string(), vec![3.1, 3.1, 1.4]),
-            ("b".to_string(), vec![2.0, 2.0, 3.4]),
-        ];
+        let measured = vec![(A, vec![3.1, 3.1, 1.4]), (B, vec![2.0, 2.0, 3.4])];
         let opts = SweepOptions {
             per_m: true,
             divergence_threshold: 0.10,
         };
         let w = decide_winners(64, 0.25, &[3, 4, 16], &measured, &opts);
         let fallback = entry_for(&w, ShapeClass::of(64, 0.25)).unwrap();
-        assert_eq!(fallback.kernel, "b");
+        assert_eq!(fallback.kernel, B);
         assert!((fallback.flops_per_cycle - 2.7).abs() < 1e-9);
-        // Plan bucket 4 still gets its specialist split (a: 3.1 vs b: 2.0).
+        // Plan bucket 4 still gets its specialist split (A: 3.1 vs B: 2.0).
         let split = entry_for(&w, ShapeClass::of_m(64, 0.25, 4)).unwrap();
-        assert_eq!(split.kernel, "a");
+        assert_eq!(split.kernel, A);
         assert_eq!(w.len(), 2);
     }
 
     #[test]
     fn decide_winners_colliding_raw_buckets_cannot_contradict_each_other() {
-        // Raw buckets 3 and 4 share M bucket 4. At raw 3 kernel a leads,
-        // but at raw 4 (the bucket's actual size) b wins big: aggregated,
-        // b leads the group (3.0 vs 2.0), so no split may be recorded —
-        // pre-grouping, raw 3's divergence would have installed a for the
+        // Raw buckets 3 and 4 share M bucket 4. At raw 3 kernel A leads,
+        // but at raw 4 (the bucket's actual size) B wins big: aggregated,
+        // B leads the group (3.0 vs 2.0), so no split may be recorded —
+        // pre-grouping, raw 3's divergence would have installed A for the
         // whole bucket even though the sweep measured it 4x slower at M=4.
-        let measured = vec![
-            ("a".to_string(), vec![3.0, 1.0]),
-            ("b".to_string(), vec![2.0, 4.0]),
-        ];
+        let measured = vec![(A, vec![3.0, 1.0]), (B, vec![2.0, 4.0])];
         let opts = SweepOptions {
             per_m: true,
             divergence_threshold: 0.08,
         };
         let w = decide_winners(64, 0.25, &[3, 4], &measured, &opts);
         assert_eq!(w.len(), 1, "group winner equals mean winner → no split");
-        assert_eq!(w[0].1.kernel, "b");
+        assert_eq!(w[0].1.kernel, B);
     }
 
     #[test]
@@ -450,7 +516,7 @@ mod tests {
         // never re-split, so only retirement can correct it), one for a
         // bucket it does not (must survive).
         let stale = TuneEntry {
-            kernel: "unrolled_tcsc_12".into(),
+            kernel: B,
             flops_per_cycle: 9.9,
         };
         table.insert(ShapeClass::of_m(32, 0.25, 1), stale.clone());
@@ -459,16 +525,16 @@ mod tests {
             per_m: true,
             ..Default::default()
         };
-        sweep_model_opts(&c, &c.batch_buckets, &["base_tcsc"], &timer, &mut table, &opts);
+        sweep_model_opts(&c, &c.batch_buckets, &[A], &timer, &mut table, &opts);
         // Bucket 1 was measured: the stale split is gone, so lookups fall
         // back to the fresh mean winner.
-        assert_eq!(table.lookup_m(32, 0.25, 1).unwrap().kernel, "base_tcsc");
+        assert_eq!(table.lookup_m(32, 0.25, 1).unwrap().kernel, A);
         // Bucket 64 was not measured: its entry is untouched.
         assert_eq!(table.lookup_m(32, 0.25, 64).unwrap(), &stale);
         // A non-per-M sweep must not retire race-recorded splits.
         let mut table2 = TuningTable::new();
         table2.insert(ShapeClass::of_m(32, 0.25, 1), stale.clone());
-        sweep_model(&c, &c.batch_buckets, &["base_tcsc"], &timer, &mut table2);
+        sweep_model(&c, &c.batch_buckets, &[A], &timer, &mut table2);
         assert_eq!(table2.lookup_m(32, 0.25, 1).unwrap(), &stale);
     }
 
@@ -481,14 +547,7 @@ mod tests {
             per_m: true,
             ..Default::default()
         };
-        let report = sweep_model_opts(
-            &c,
-            &c.batch_buckets,
-            &["base_tcsc", "unrolled_tcsc_12"],
-            &timer,
-            &mut table,
-            &opts,
-        );
+        let report = sweep_model_opts(&c, &c.batch_buckets, &[A, B], &timer, &mut table, &opts);
         // Whatever the timings did, every class has its M-agnostic
         // fallback, and any M-aware winner's bucket traces back to a
         // bucket this sweep actually measured.

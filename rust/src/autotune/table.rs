@@ -13,9 +13,10 @@
 //! existing JSON tables keep working unchanged.
 
 use crate::bench::harness::measure_kernel;
-use crate::kernels::KernelParams;
+use crate::kernels::{KernelId, KernelParams};
 use crate::perf::timer::CycleTimer;
 use crate::util::json::Json;
+use crate::{Error, Result};
 use std::collections::BTreeMap;
 
 /// Largest M bucket: batches beyond this share one plan / tuning entry.
@@ -132,10 +133,12 @@ fn bucket_sparsity(s: f32) -> u32 {
         .unwrap()
 }
 
-/// One tuning entry: the winning kernel and its measured performance.
+/// One tuning entry: the winning kernel (typed — resolved from the
+/// registry at load time, so a poisoned entry naming an unregistered
+/// kernel is unrepresentable) and its measured performance.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TuneEntry {
-    pub kernel: String,
+    pub kernel: KernelId,
     pub flops_per_cycle: f64,
 }
 
@@ -143,6 +146,13 @@ pub struct TuneEntry {
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct TuningTable {
     entries: BTreeMap<ShapeClass, TuneEntry>,
+    /// Entries whose kernel name did not resolve to a [`KernelId`] at load
+    /// (a table written by a build with extra kernels). They never reach
+    /// lookups, but [`TuningTable::to_json`] re-emits them so a
+    /// load-modify-save cycle (`autotune --save` over an existing file)
+    /// does not silently destroy another build's measurements. A resolved
+    /// entry recorded later for the same class shadows the unresolved one.
+    unresolved: BTreeMap<ShapeClass, (String, f64)>,
 }
 
 impl TuningTable {
@@ -185,11 +195,12 @@ impl TuningTable {
     }
 
     /// Kernel to use for a shape at batch size `m`: tuned winner (M-aware
-    /// first, then the M-agnostic fallback) or the paper default.
-    pub fn kernel_for(&self, k: usize, sparsity: f32, m: usize) -> &str {
+    /// first, then the M-agnostic fallback) or the paper default (the
+    /// registry's best-scalar capability query).
+    pub fn kernel_for(&self, k: usize, sparsity: f32, m: usize) -> KernelId {
         self.lookup_m(k, sparsity, m)
-            .map(|e| e.kernel.as_str())
-            .unwrap_or("interleaved_blocked_tcsc")
+            .map(|e| e.kernel)
+            .unwrap_or_else(crate::kernels::best_scalar)
     }
 
     /// Measure the candidate set for one shape class and record the winner
@@ -199,7 +210,7 @@ impl TuningTable {
         &mut self,
         k: usize,
         sparsity: f32,
-        candidates: &[&str],
+        candidates: &[KernelId],
         timer: &CycleTimer,
     ) -> TuneEntry {
         // Representative M/N: performance-neutral per the paper (Fig 8),
@@ -208,7 +219,7 @@ impl TuningTable {
         let mut best: Option<TuneEntry> = None;
         for &kernel in candidates {
             let meas = measure_kernel(
-                kernel,
+                kernel.name(),
                 m,
                 k,
                 n,
@@ -220,7 +231,7 @@ impl TuningTable {
             let fpc = meas.flops_per_cycle();
             if best.as_ref().map(|b| fpc > b.flops_per_cycle).unwrap_or(true) {
                 best = Some(TuneEntry {
-                    kernel: kernel.to_string(),
+                    kernel,
                     flops_per_cycle: fpc,
                 });
             }
@@ -233,43 +244,72 @@ impl TuningTable {
     // ---- persistence ------------------------------------------------------
 
     pub fn to_json(&self) -> Json {
-        Json::Obj(
-            self.entries
-                .iter()
-                .map(|(class, e)| {
-                    (
-                        class.key(),
-                        Json::obj(vec![
-                            ("kernel", Json::str(e.kernel.clone())),
-                            ("flops_per_cycle", Json::num(e.flops_per_cycle)),
-                        ]),
-                    )
-                })
-                .collect(),
-        )
+        let resolved = self.entries.iter().map(|(class, e)| {
+            (
+                class.key(),
+                Json::obj(vec![
+                    ("kernel", Json::str(e.kernel.name())),
+                    ("flops_per_cycle", Json::num(e.flops_per_cycle)),
+                ]),
+            )
+        });
+        // Unresolved entries ride along unless a resolved entry now covers
+        // their class (fresh measurements shadow foreign-build leftovers).
+        let carried = self
+            .unresolved
+            .iter()
+            .filter(|(class, _)| !self.entries.contains_key(class))
+            .map(|(class, (kernel, fpc))| {
+                (
+                    class.key(),
+                    Json::obj(vec![
+                        ("kernel", Json::str(kernel.clone())),
+                        ("flops_per_cycle", Json::num(*fpc)),
+                    ]),
+                )
+            });
+        Json::Obj(resolved.chain(carried).collect())
     }
 
-    pub fn from_json(v: &Json) -> Result<TuningTable, String> {
-        let obj = v.as_obj().ok_or("tuning table must be an object")?;
+    /// Decode a table. Keys and kernel values stay **name-keyed on disk**
+    /// (PR-2/PR-3 JSON fixtures parse unchanged); kernel names resolve to
+    /// typed [`KernelId`]s here. A name the registry no longer knows (a
+    /// table written by a build with extra kernels, or hand-edited) is
+    /// **excluded from lookups with a warning** rather than failing the
+    /// whole table — every entry that does resolve keeps working, and the
+    /// unresolved entry is carried through [`TuningTable::to_json`] so a
+    /// load-modify-save cycle never destroys it.
+    pub fn from_json(v: &Json) -> Result<TuningTable> {
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| Error::Tuning("tuning table must be an object".into()))?;
         let mut t = TuningTable::new();
         for (key, entry) in obj {
-            let class = ShapeClass::parse(key).ok_or_else(|| format!("bad key '{key}'"))?;
-            let kernel = entry
+            let class = ShapeClass::parse(key)
+                .ok_or_else(|| Error::Tuning(format!("bad key '{key}'")))?;
+            let name = entry
                 .get("kernel")
                 .and_then(|k| k.as_str())
-                .ok_or("entry missing kernel")?
-                .to_string();
-            if !crate::kernels::kernel_names().contains(&kernel.as_str()) {
-                return Err(format!("unknown kernel '{kernel}' in tuning table"));
-            }
+                .ok_or_else(|| Error::Tuning(format!("entry '{key}' missing kernel")))?;
             let fpc = entry
                 .get("flops_per_cycle")
                 .and_then(|f| f.as_f64())
                 .unwrap_or(0.0);
+            let kernel = match KernelId::parse(name) {
+                Some(k) => k,
+                None => {
+                    eprintln!(
+                        "[tuning] warning: key '{key}' names unknown kernel \
+                         '{name}'; excluded from lookups (kept on re-save)"
+                    );
+                    t.unresolved.insert(class, (name.to_string(), fpc));
+                    continue;
+                }
+            };
             let displaced = t.insert(
                 class,
                 TuneEntry {
-                    kernel: kernel.clone(),
+                    kernel,
                     flops_per_cycle: fpc,
                 },
             );
@@ -289,15 +329,15 @@ impl TuningTable {
         Ok(t)
     }
 
-    pub fn save(&self, path: &str) -> Result<(), String> {
+    pub fn save(&self, path: &str) -> Result<()> {
         std::fs::write(path, self.to_json().encode_pretty())
-            .map_err(|e| format!("write {path}: {e}"))
+            .map_err(|e| Error::io(format!("write {path}"), e))
     }
 
-    pub fn load(path: &str) -> Result<TuningTable, String> {
-        let text =
-            std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
-        Self::from_json(&Json::parse(&text).map_err(|e| e.to_string())?)
+    pub fn load(path: &str) -> Result<TuningTable> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::io(format!("read {path}"), e))?;
+        Self::from_json(&Json::parse(&text).map_err(|e| Error::Tuning(e.to_string()))?)
     }
 }
 
@@ -364,7 +404,7 @@ mod tests {
         t.insert(
             ShapeClass::parse("k1000_s2400").unwrap(),
             TuneEntry {
-                kernel: "base_tcsc".into(),
+                kernel: KernelId::BaseTcsc,
                 flops_per_cycle: 1.0,
             },
         );
@@ -377,44 +417,46 @@ mod tests {
         t.insert(
             ShapeClass::of(512, 0.25),
             TuneEntry {
-                kernel: "interleaved_blocked_tcsc".into(),
+                kernel: KernelId::InterleavedBlockedTcsc,
                 flops_per_cycle: 2.0,
             },
         );
         t.insert(
             ShapeClass::of_m(512, 0.25, 1),
             TuneEntry {
-                kernel: "unrolled_tcsc_k4_m4".into(),
+                kernel: KernelId::UnrolledTcscK4M4,
                 flops_per_cycle: 3.0,
             },
         );
         // Exact bucket wins.
-        assert_eq!(t.kernel_for(512, 0.25, 1), "unrolled_tcsc_k4_m4");
+        assert_eq!(t.kernel_for(512, 0.25, 1), KernelId::UnrolledTcscK4M4);
         // Other buckets fall back to the M-agnostic entry.
-        assert_eq!(t.kernel_for(512, 0.25, 16), "interleaved_blocked_tcsc");
+        assert_eq!(t.kernel_for(512, 0.25, 16), KernelId::InterleavedBlockedTcsc);
         // An M-aware-only table still misses unrelated buckets...
         let mut only_m = TuningTable::new();
         only_m.insert(
             ShapeClass::of_m(256, 0.5, 8),
             TuneEntry {
-                kernel: "base_tcsc".into(),
+                kernel: KernelId::BaseTcsc,
                 flops_per_cycle: 1.0,
             },
         );
         assert!(only_m.lookup_m(256, 0.5, 64).is_none());
         // ...but same-bucket batch sizes share the entry (5 → bucket 8).
         assert!(only_m.lookup_m(256, 0.5, 5).is_some());
-        // Untuned shapes get the paper default.
-        assert_eq!(t.kernel_for(2048, 0.25, 4), "interleaved_blocked_tcsc");
+        // Untuned shapes get the paper default (the derived best-scalar
+        // role, not a name literal).
+        assert_eq!(t.kernel_for(2048, 0.25, 4), crate::kernels::best_scalar());
     }
 
     #[test]
     fn tune_records_a_winner_and_default_fallback() {
         let mut t = TuningTable::new();
-        assert_eq!(t.kernel_for(2048, 0.25, 16), "interleaved_blocked_tcsc");
+        assert_eq!(t.kernel_for(2048, 0.25, 16), crate::kernels::best_scalar());
         let timer = CycleTimer::new(0, 1);
-        let entry = t.tune(512, 0.25, &["base_tcsc", "unrolled_tcsc_12"], &timer);
-        assert!(["base_tcsc", "unrolled_tcsc_12"].contains(&entry.kernel.as_str()));
+        let candidates = [KernelId::BaseTcsc, KernelId::UnrolledTcsc12];
+        let entry = t.tune(512, 0.25, &candidates, &timer);
+        assert!(candidates.contains(&entry.kernel));
         assert_eq!(t.kernel_for(512, 0.25, 16), entry.kernel);
         assert_eq!(t.len(), 1);
     }
@@ -425,21 +467,21 @@ mod tests {
         t.insert(
             ShapeClass::of(4096, 0.5),
             TuneEntry {
-                kernel: "interleaved_blocked_tcsc".into(),
+                kernel: KernelId::InterleavedBlockedTcsc,
                 flops_per_cycle: 2.5,
             },
         );
         t.insert(
             ShapeClass::of(1024, 0.0625),
             TuneEntry {
-                kernel: "unrolled_tcsc_12".into(),
+                kernel: KernelId::UnrolledTcsc12,
                 flops_per_cycle: 1.5,
             },
         );
         t.insert(
             ShapeClass::of_m(1024, 0.0625, 64),
             TuneEntry {
-                kernel: "simd_vertical".into(),
+                kernel: KernelId::SimdVertical,
                 flops_per_cycle: 3.5,
             },
         );
@@ -459,14 +501,47 @@ mod tests {
         .unwrap();
         let t = TuningTable::from_json(&json).unwrap();
         assert_eq!(t.len(), 1, "both keys snap to the same class");
-        assert_eq!(t.lookup(1024, 0.25).unwrap().kernel, "unrolled_tcsc_12");
+        assert_eq!(t.lookup(1024, 0.25).unwrap().kernel, KernelId::UnrolledTcsc12);
     }
 
     #[test]
-    fn rejects_unknown_kernel_on_load() {
-        let json = Json::parse(r#"{"k1024_s2500": {"kernel": "bogus"}}"#).unwrap();
-        assert!(TuningTable::from_json(&json).is_err());
-        let json = Json::parse(r#"{"k1024_s2500_m8": {"kernel": "bogus"}}"#).unwrap();
+    fn unknown_kernel_is_excluded_from_lookups_but_survives_resave() {
+        // A name the registry doesn't know (table written by a newer
+        // build, hand-edited) is excluded from lookups; resolvable
+        // entries keep working — the whole table is not rejected.
+        let json = Json::parse(
+            r#"{"k1024_s2500": {"kernel": "bogus", "flops_per_cycle": 7.5},
+                "k512_s2500": {"kernel": "base_tcsc"}}"#,
+        )
+        .unwrap();
+        let mut t = TuningTable::from_json(&json).unwrap();
+        assert_eq!(t.len(), 1, "unknown-kernel entry not in lookups");
+        assert!(t.lookup(1024, 0.25).is_none());
+        assert_eq!(t.lookup(512, 0.25).unwrap().kernel, KernelId::BaseTcsc);
+        // Load-modify-save must not destroy the foreign-build entry: the
+        // CLI's `--save` flow re-writes the whole file.
+        let resaved = TuningTable::from_json(&t.to_json()).unwrap();
+        let back = resaved.to_json();
+        let carried = back.get("k1024_s2500").expect("unknown entry carried");
+        assert_eq!(carried.get("kernel").unwrap().as_str(), Some("bogus"));
+        assert_eq!(carried.get("flops_per_cycle").unwrap().as_f64(), Some(7.5));
+        // ...unless a resolved entry now covers the class — fresh
+        // measurements shadow the leftover.
+        t.insert(
+            ShapeClass::of(1024, 0.25),
+            TuneEntry {
+                kernel: KernelId::UnrolledTcsc12,
+                flops_per_cycle: 2.0,
+            },
+        );
+        let shadowed = t.to_json();
+        assert_eq!(
+            shadowed.get("k1024_s2500").unwrap().get("kernel").unwrap().as_str(),
+            Some("unrolled_tcsc_12")
+        );
+        // A malformed key is still a hard error — that's corruption, not
+        // version skew.
+        let json = Json::parse(r#"{"garbage": {"kernel": "base_tcsc"}}"#).unwrap();
         assert!(TuningTable::from_json(&json).is_err());
     }
 
@@ -474,11 +549,11 @@ mod tests {
     fn file_roundtrip() {
         let mut t = TuningTable::new();
         let timer = CycleTimer::new(0, 1);
-        t.tune(256, 0.5, &["base_tcsc"], &timer);
+        t.tune(256, 0.5, &[KernelId::BaseTcsc], &timer);
         t.insert(
             ShapeClass::of_m(256, 0.5, 4),
             TuneEntry {
-                kernel: "unrolled_tcsc_12".into(),
+                kernel: KernelId::UnrolledTcsc12,
                 flops_per_cycle: 2.0,
             },
         );

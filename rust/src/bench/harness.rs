@@ -9,7 +9,7 @@
 //! model's `with_prelu` counts (the old harness silently skipped PReLU for
 //! non-fusing kernels).
 
-use crate::kernels::KernelParams;
+use crate::kernels::{KernelId, KernelParams};
 use crate::perf::flops::CostModel;
 use crate::perf::timer::{CycleTimer, Measurement};
 use crate::plan::{Epilogue, PlanHints, Planner};
@@ -59,6 +59,10 @@ pub struct KernelMeasurement {
     pub sparsity: f32,
     pub measurement: Measurement,
     pub flops: f64,
+    /// Coefficient of variation of the cycle counts across the timer's
+    /// reps (0 for a single rep) — run-to-run noise, consumed by the
+    /// autotune sweep's self-calibrating divergence floor.
+    pub cycles_cv: f64,
 }
 
 impl KernelMeasurement {
@@ -77,6 +81,13 @@ impl KernelMeasurement {
 /// *outside* the timed region (the paper benchmarks the GEMM, not format
 /// conversion), and steady-state runs reuse the plan's scratch exactly as
 /// serving does.
+///
+/// # Panics
+/// On a name that is not a registry kernel. The harness is
+/// programmer-facing (figure drivers and sweeps iterate
+/// [`crate::kernels::kernel_names`]); user-supplied names must be
+/// resolved with `name.parse::<KernelId>()` *before* reaching here so the
+/// failure surfaces as [`crate::Error::UnknownKernel`], not a panic.
 #[allow(clippy::too_many_arguments)] // a measurement is its full shape tuple
 pub fn measure_kernel(
     name: &str,
@@ -92,8 +103,9 @@ pub fn measure_kernel(
     let x = Matrix::random(m, k, seed + 1);
     let bias: Vec<f32> = (0..n).map(|i| (i % 13) as f32 * 0.05).collect();
     let planner = Planner::new();
+    let kernel: KernelId = name.parse().expect("registry kernel");
     let hints = PlanHints {
-        kernel: Some(name.to_string()),
+        kernel: Some(kernel),
         expected_batch: m,
         ..Default::default()
     };
@@ -106,7 +118,7 @@ pub fn measure_kernel(
         )
         .expect("registry kernel");
     let mut y = Matrix::zeros(m, n);
-    let measurement = timer.run(|| plan.run(&x, &mut y));
+    let (measurement, cycles_cv) = timer.run_stats(|| plan.run(&x, &mut y));
     std::hint::black_box(y.as_slice());
     let mut cost = CostModel::new(m, k, n, sparsity);
     if params.prelu_alpha.is_some() {
@@ -120,6 +132,7 @@ pub fn measure_kernel(
         sparsity,
         measurement,
         flops: cost.flops(),
+        cycles_cv,
     }
 }
 

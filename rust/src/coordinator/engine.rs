@@ -7,6 +7,7 @@ use crate::coordinator::request::{InferenceRequest, InferenceResponse};
 use crate::model::TernaryMlp;
 use crate::runtime::XlaExecutor;
 use crate::tensor::Matrix;
+use crate::{Error, Result};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -20,13 +21,13 @@ pub enum Backend {
 }
 
 impl std::str::FromStr for Backend {
-    type Err = String;
+    type Err = Error;
 
-    fn from_str(s: &str) -> Result<Backend, String> {
+    fn from_str(s: &str) -> Result<Backend> {
         match s {
             "native" => Ok(Backend::Native),
             "xla" => Ok(Backend::Xla),
-            other => Err(format!("unknown backend '{other}' (native|xla)")),
+            other => Err(Error::Config(format!("unknown backend '{other}' (native|xla)"))),
         }
     }
 }
@@ -62,7 +63,7 @@ impl Engine {
     pub fn from_config(
         cfg: &crate::model::ModelConfig,
         planner: &Arc<crate::plan::Planner>,
-    ) -> Result<Engine, String> {
+    ) -> Result<Engine> {
         Ok(Engine::new(
             cfg.name.clone(),
             TernaryMlp::planned(cfg, planner)?,
@@ -109,7 +110,7 @@ impl Engine {
     }
 
     /// Run a raw batch matrix on the configured backend.
-    pub fn infer_matrix(&self, x: &Matrix) -> Result<Matrix, String> {
+    pub fn infer_matrix(&self, x: &Matrix) -> Result<Matrix> {
         match self.backend {
             Backend::Native => Ok(self.mlp.forward(x)),
             Backend::Xla => self
@@ -117,18 +118,18 @@ impl Engine {
                 .as_ref()
                 .expect("backend checked at construction")
                 .run(x)
-                .map_err(|e| format!("{e:#}")),
+                .map_err(|e| Error::Runtime(format!("{e:#}"))),
         }
     }
 
     /// Run a batch on *both* backends and return (native, xla, max |Δ|).
-    pub fn cross_check(&self, x: &Matrix) -> Result<(Matrix, Matrix, f32), String> {
+    pub fn cross_check(&self, x: &Matrix) -> Result<(Matrix, Matrix, f32)> {
         let xla = self
             .xla
             .as_ref()
-            .ok_or("cross-check requires an XLA executor")?;
+            .ok_or_else(|| Error::Runtime("cross-check requires an XLA executor".into()))?;
         let native = self.mlp.forward(x);
-        let xla_out = xla.run(x).map_err(|e| format!("{e:#}"))?;
+        let xla_out = xla.run(x).map_err(|e| Error::Runtime(format!("{e:#}")))?;
         let diff = native.max_abs_diff(&xla_out);
         Ok((native, xla_out, diff))
     }
@@ -151,10 +152,10 @@ impl Engine {
                     .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 let resp = InferenceResponse {
                     id: req.id,
-                    output: Err(format!(
+                    output: Err(Error::Shape(format!(
                         "input length {} != d_in {d_in}",
                         req.input.len()
-                    )),
+                    ))),
                     queue_us: req.enqueued.elapsed().as_micros() as u64,
                     compute_us: 0,
                     batch_size: 0,

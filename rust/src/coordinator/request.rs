@@ -1,5 +1,6 @@
 //! Request/response types flowing through the coordinator.
 
+use crate::Error;
 use std::sync::mpsc;
 use std::time::Instant;
 
@@ -18,7 +19,7 @@ pub struct InferenceRequest {
 #[derive(Debug, Clone)]
 pub struct InferenceResponse {
     pub id: u64,
-    pub output: Result<Vec<f32>, String>,
+    pub output: Result<Vec<f32>, Error>,
     /// Time spent queued before batch assembly.
     pub queue_us: u64,
     /// Batch compute time (shared by all requests in the batch).

@@ -233,11 +233,11 @@ impl Router {
         &self,
         model: &str,
         input: Vec<f32>,
-    ) -> Result<mpsc::Receiver<InferenceResponse>, String> {
+    ) -> crate::Result<mpsc::Receiver<InferenceResponse>> {
         let entry = self
             .models
             .get(model)
-            .ok_or_else(|| format!("unknown model '{model}'"))?;
+            .ok_or_else(|| crate::Error::Serve(format!("unknown model '{model}'")))?;
         let id = self
             .next_id
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -253,10 +253,10 @@ impl Router {
                 .metrics
                 .errors
                 .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            match e {
+            crate::Error::Serve(match e {
                 SubmitError::Closed(_) => "model is shutting down".to_string(),
                 SubmitError::EmptyInput(_) => "empty input".to_string(),
-            }
+            })
         })?;
         Ok(rx)
     }
@@ -267,10 +267,10 @@ impl Router {
         model: &str,
         input: Vec<f32>,
         timeout: Duration,
-    ) -> Result<InferenceResponse, String> {
+    ) -> crate::Result<InferenceResponse> {
         let rx = self.submit(model, input)?;
         rx.recv_timeout(timeout)
-            .map_err(|e| format!("inference timed out/disconnected: {e}"))
+            .map_err(|e| crate::Error::Serve(format!("inference timed out/disconnected: {e}")))
     }
 
     /// Stop all batch loops (draining queues first) and autoscale ticks.

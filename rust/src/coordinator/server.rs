@@ -208,9 +208,9 @@ fn handle_infer(
                 ]);
                 respond(stream, 200, &json.encode())
             }
-            Err(e) => respond(stream, 422, &err_json(&e)),
+            Err(e) => respond(stream, 422, &err_json(&e.to_string())),
         },
-        Err(e) => respond(stream, 503, &err_json(&e)),
+        Err(e) => respond(stream, 503, &err_json(&e.to_string())),
     }
 }
 

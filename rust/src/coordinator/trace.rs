@@ -74,17 +74,23 @@ impl RequestTrace {
         Json::arr(self.offsets_us.iter().map(|&o| Json::num(o as f64)))
     }
 
-    pub fn from_json(v: &Json) -> Result<RequestTrace, String> {
-        let arr = v.as_arr().ok_or("trace must be an array")?;
+    pub fn from_json(v: &Json) -> crate::Result<RequestTrace> {
+        let arr = v
+            .as_arr()
+            .ok_or_else(|| crate::Error::Config("trace must be an array".into()))?;
         let mut offsets = Vec::with_capacity(arr.len());
         let mut prev = 0u64;
         for item in arr {
             let o = item
                 .as_f64()
                 .filter(|&f| f >= 0.0)
-                .ok_or("trace offsets must be non-negative numbers")? as u64;
+                .ok_or_else(|| {
+                    crate::Error::Config("trace offsets must be non-negative numbers".into())
+                })? as u64;
             if o < prev {
-                return Err("trace offsets must be non-decreasing".into());
+                return Err(crate::Error::Config(
+                    "trace offsets must be non-decreasing".into(),
+                ));
             }
             prev = o;
             offsets.push(o);

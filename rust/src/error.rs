@@ -1,0 +1,129 @@
+//! The library-wide typed error: every fallible `stgemm` API returns
+//! [`enum@Error`] (via the [`Result`] alias) instead of a bare `String`.
+//!
+//! Variants classify *what kind* of failure occurred so callers can react
+//! programmatically — the CLI boundary maps usage-class errors to exit
+//! code 2 and runtime-class errors to exit code 1 ([`Error::exit_code`]),
+//! the serving path distinguishes client mistakes ([`Error::Shape`],
+//! [`Error::Serve`]) from backend faults ([`Error::Runtime`]), and tests
+//! can assert on the variant rather than substring-matching a message.
+//!
+//! Every variant carries a human-readable description; [`Error`]
+//! implements [`std::fmt::Display`] and [`std::error::Error`], so it
+//! interoperates with `?`-based code and `Box<dyn std::error::Error>`
+//! consumers. All payloads are `String`s, keeping the type `Clone` (the
+//! engine fans one batch error out to every request in the batch).
+
+/// Library-wide result alias: `stgemm::Result<T>` = `Result<T, stgemm::Error>`.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Unified error type for the whole library.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Error {
+    /// A kernel name that does not resolve to a registry
+    /// [`crate::kernels::KernelId`] (config `kernel` key, `PlanHints`
+    /// override, bench `--kernel` flags).
+    UnknownKernel(String),
+    /// Kernel build parameters rejected by
+    /// [`crate::kernels::KernelParams::validate`] (e.g. interleave group 0).
+    BadKernelParams(String),
+    /// Operand shape mismatch: bias length vs N, layer dim chaining,
+    /// request input width vs `d_in`.
+    Shape(String),
+    /// Malformed or invalid configuration (model config JSON, CLI values,
+    /// request traces).
+    Config(String),
+    /// Tuning-table problems: unparseable keys or undecodable JSON.
+    Tuning(String),
+    /// Serialized-data problems: corrupt `.stw` weights, invalid sparse
+    /// format invariants, artifact manifest decoding.
+    Format(String),
+    /// XLA/PJRT runtime failures (artifact compilation, execution,
+    /// service-thread death).
+    Runtime(String),
+    /// Serving-path failures: unknown model, shut-down batcher, response
+    /// timeout.
+    Serve(String),
+    /// Underlying I/O failure, with the path/context baked into the
+    /// message.
+    Io(String),
+}
+
+impl Error {
+    /// I/O error with context (`Error::io("read table.json", e)`).
+    pub fn io(context: impl std::fmt::Display, err: std::io::Error) -> Error {
+        Error::Io(format!("{context}: {err}"))
+    }
+
+    /// Process exit code for the CLI boundary: 2 for usage/configuration
+    /// mistakes the caller can fix by re-invoking (bad kernel name, bad
+    /// params, bad config, malformed tuning table), 1 for runtime
+    /// failures.
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            Error::UnknownKernel(_)
+            | Error::BadKernelParams(_)
+            | Error::Config(_)
+            | Error::Tuning(_) => 2,
+            Error::Shape(_)
+            | Error::Format(_)
+            | Error::Runtime(_)
+            | Error::Serve(_)
+            | Error::Io(_) => 1,
+        }
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::UnknownKernel(name) => write!(f, "unknown kernel '{name}'"),
+            Error::BadKernelParams(msg) => write!(f, "bad kernel params: {msg}"),
+            Error::Shape(msg) => write!(f, "shape mismatch: {msg}"),
+            Error::Config(msg) => write!(f, "config: {msg}"),
+            Error::Tuning(msg) => write!(f, "tuning table: {msg}"),
+            Error::Format(msg) => write!(f, "format: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime: {msg}"),
+            Error::Serve(msg) => write!(f, "serve: {msg}"),
+            Error::Io(msg) => write!(f, "io: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_classify() {
+        assert_eq!(
+            Error::UnknownKernel("nope".into()).to_string(),
+            "unknown kernel 'nope'"
+        );
+        assert!(Error::Shape("bias 3 != N 4".into())
+            .to_string()
+            .starts_with("shape mismatch"));
+        assert!(Error::Io("read x: gone".into()).to_string().starts_with("io:"));
+    }
+
+    #[test]
+    fn exit_codes_split_usage_from_runtime() {
+        assert_eq!(Error::UnknownKernel("x".into()).exit_code(), 2);
+        assert_eq!(Error::Config("bad".into()).exit_code(), 2);
+        assert_eq!(Error::BadKernelParams("g=0".into()).exit_code(), 2);
+        assert_eq!(Error::Tuning("bad key".into()).exit_code(), 2);
+        assert_eq!(Error::Runtime("pjrt".into()).exit_code(), 1);
+        assert_eq!(Error::Io("read".into()).exit_code(), 1);
+        assert_eq!(Error::Serve("closed".into()).exit_code(), 1);
+    }
+
+    #[test]
+    fn error_is_std_error_and_clone() {
+        let e: Box<dyn std::error::Error> = Box::new(Error::Tuning("bad key".into()));
+        assert!(e.to_string().contains("bad key"));
+        let a = Error::Format("corrupt".into());
+        assert_eq!(a.clone(), a);
+    }
+}

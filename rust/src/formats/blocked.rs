@@ -125,11 +125,11 @@ impl SparseFormat for BlockedTcsc {
         w
     }
 
-    fn validate(&self) -> Result<(), String> {
+    fn validate(&self) -> crate::Result<()> {
         let nblocks = self.nblocks();
         let expect_ptrs = nblocks * self.n + 1;
         if self.col_start_pos.len() != expect_ptrs || self.col_start_neg.len() != expect_ptrs {
-            return Err("pointer array length mismatch".into());
+            return Err(crate::Error::Format("pointer array length mismatch".into()));
         }
         for b in 0..nblocks {
             let lo = (b * self.block_size) as u32;
@@ -141,16 +141,16 @@ impl SparseFormat for BlockedTcsc {
                 ] {
                     for w in seg.windows(2) {
                         if w[0] >= w[1] {
-                            return Err(format!(
+                            return Err(crate::Error::Format(format!(
                                 "{label}: block {b} col {j} not strictly ascending"
-                            ));
+                            )));
                         }
                     }
                     for &i in seg {
                         if i < lo || i >= hi {
-                            return Err(format!(
+                            return Err(crate::Error::Format(format!(
                                 "{label}: block {b} col {j} index {i} outside [{lo},{hi})"
-                            ));
+                            )));
                         }
                     }
                 }

@@ -126,9 +126,9 @@ impl SparseFormat for CompressedTernary {
         w
     }
 
-    fn validate(&self) -> Result<(), String> {
+    fn validate(&self) -> crate::Result<()> {
         if self.codes.len() != self.n * self.codes_per_col {
-            return Err("code array length mismatch".into());
+            return Err(crate::Error::Format("code array length mismatch".into()));
         }
         let lut = decode_lut();
         // Tail codes must not place values beyond K.
@@ -138,7 +138,9 @@ impl SparseFormat for CompressedTernary {
                 let tail = self.col_codes(j)[self.codes_per_col - 1];
                 let digits = &lut[tail as usize];
                 if digits[valid..].iter().any(|&v| v != 0) {
-                    return Err(format!("column {j}: tail code writes beyond K"));
+                    return Err(crate::Error::Format(format!(
+                        "column {j}: tail code writes beyond K"
+                    )));
                 }
             }
         }

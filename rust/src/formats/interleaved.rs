@@ -124,27 +124,27 @@ impl SparseFormat for InterleavedTcsc {
         w
     }
 
-    fn validate(&self) -> Result<(), String> {
+    fn validate(&self) -> crate::Result<()> {
         if self.col_segment_ptr.len() != 3 * self.n + 1 {
-            return Err("segment pointer length mismatch".into());
+            return Err(crate::Error::Format("segment pointer length mismatch".into()));
         }
         if self.col_segment_ptr[0] != 0
             || *self.col_segment_ptr.last().unwrap() as usize != self.all_indices.len()
         {
-            return Err("segment pointer endpoints wrong".into());
+            return Err(crate::Error::Format("segment pointer endpoints wrong".into()));
         }
         for w in self.col_segment_ptr.windows(2) {
             if w[0] > w[1] {
-                return Err("segment pointers not monotone".into());
+                return Err(crate::Error::Format("segment pointers not monotone".into()));
             }
         }
         for j in 0..self.n {
             let inter = self.col_interleaved(j);
             if inter.len() % (2 * self.group) != 0 {
-                return Err(format!(
+                return Err(crate::Error::Format(format!(
                     "column {j}: interleaved length {} not a multiple of 2G",
                     inter.len()
-                ));
+                )));
             }
             for &i in self
                 .col_interleaved(j)
@@ -153,7 +153,7 @@ impl SparseFormat for InterleavedTcsc {
                 .chain(self.col_rest_neg(j))
             {
                 if i as usize >= self.k {
-                    return Err(format!("column {j}: index {i} out of range"));
+                    return Err(crate::Error::Format(format!("column {j}: index {i} out of range")));
                 }
             }
         }

@@ -147,25 +147,27 @@ impl SparseFormat for InterleavedBlockedTcsc {
         w
     }
 
-    fn validate(&self) -> Result<(), String> {
+    fn validate(&self) -> crate::Result<()> {
         let nblocks = self.nblocks();
         if self.col_segment_ptr.len() != 3 * nblocks * self.n + 1 {
-            return Err("segment pointer length mismatch".into());
+            return Err(crate::Error::Format("segment pointer length mismatch".into()));
         }
         for w in self.col_segment_ptr.windows(2) {
             if w[0] > w[1] {
-                return Err("segment pointers not monotone".into());
+                return Err(crate::Error::Format("segment pointers not monotone".into()));
             }
         }
         if *self.col_segment_ptr.last().unwrap() as usize != self.all_indices.len() {
-            return Err("segment pointer end mismatch".into());
+            return Err(crate::Error::Format("segment pointer end mismatch".into()));
         }
         for b in 0..nblocks {
             let lo = (b * self.block_size) as u32;
             let hi = (((b + 1) * self.block_size).min(self.k)) as u32;
             for j in 0..self.n {
                 if self.seg_interleaved(b, j).len() % (2 * self.group) != 0 {
-                    return Err(format!("block {b} col {j}: bad interleaved length"));
+                    return Err(crate::Error::Format(format!(
+                        "block {b} col {j}: bad interleaved length"
+                    )));
                 }
                 for &i in self
                     .seg_interleaved(b, j)
@@ -174,9 +176,9 @@ impl SparseFormat for InterleavedBlockedTcsc {
                     .chain(self.seg_rest_neg(b, j))
                 {
                     if i < lo || i >= hi {
-                        return Err(format!(
+                        return Err(crate::Error::Format(format!(
                             "block {b} col {j}: index {i} outside [{lo},{hi})"
-                        ));
+                        )));
                     }
                 }
             }

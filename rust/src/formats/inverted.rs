@@ -107,23 +107,25 @@ impl SparseFormat for InvertedIndex {
         w
     }
 
-    fn validate(&self) -> Result<(), String> {
+    fn validate(&self) -> crate::Result<()> {
         if self.col_start.len() != self.n + 1 || self.col_start[0] != 0 {
-            return Err("bad column pointers".into());
+            return Err(crate::Error::Format("bad column pointers".into()));
         }
         if *self.col_start.last().unwrap() as usize != self.indices.len() {
-            return Err("pointer end mismatch".into());
+            return Err(crate::Error::Format("pointer end mismatch".into()));
         }
         for j in 0..self.n {
             let mut prev_row: Option<usize> = None;
             for &e in self.col(j) {
                 let (i, _) = decode(e);
                 if i >= self.k {
-                    return Err(format!("column {j}: row {i} out of range"));
+                    return Err(crate::Error::Format(format!("column {j}: row {i} out of range")));
                 }
                 if let Some(p) = prev_row {
                     if i <= p {
-                        return Err(format!("column {j}: rows not strictly ascending"));
+                        return Err(crate::Error::Format(format!(
+                            "column {j}: rows not strictly ascending"
+                        )));
                     }
                 }
                 prev_row = Some(i);

@@ -46,7 +46,7 @@ pub trait SparseFormat: Sized {
     fn to_dense(&self) -> TernaryMatrix;
 
     /// Check internal invariants; returns an error description on violation.
-    fn validate(&self) -> Result<(), String>;
+    fn validate(&self) -> crate::Result<()>;
 }
 
 /// Shared helper: standard block count for blocked formats.

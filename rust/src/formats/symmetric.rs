@@ -161,25 +161,25 @@ impl SparseFormat for SymmetricTcsc {
         w
     }
 
-    fn validate(&self) -> Result<(), String> {
+    fn validate(&self) -> crate::Result<()> {
         if self.group_ptr.len() != self.ngroups() + 1 {
-            return Err("group_ptr length mismatch".into());
+            return Err(crate::Error::Format("group_ptr length mismatch".into()));
         }
         if self.steps_per_group.len() != self.ngroups() {
-            return Err("steps_per_group length mismatch".into());
+            return Err(crate::Error::Format("steps_per_group length mismatch".into()));
         }
         for g in 0..self.ngroups() {
             let steps = self.steps_per_group[g];
             if steps % 2 != 0 {
-                return Err(format!("group {g}: odd step count {steps}"));
+                return Err(crate::Error::Format(format!("group {g}: odd step count {steps}")));
             }
             let span = self.group_ptr[g + 1] - self.group_ptr[g];
             if span != steps * 16 {
-                return Err(format!("group {g}: span {span} != steps·16"));
+                return Err(crate::Error::Format(format!("group {g}: span {span} != steps·16")));
             }
             for &i in self.group_indices(g) {
                 if i > self.k as u32 {
-                    return Err(format!("group {g}: index {i} beyond dummy"));
+                    return Err(crate::Error::Format(format!("group {g}: index {i} beyond dummy")));
                 }
             }
             // Padded (beyond-N) columns must be all-dummy.
@@ -187,7 +187,9 @@ impl SparseFormat for SymmetricTcsc {
                 let c = ci % 4;
                 let j = 4 * g + c;
                 if j >= self.n && chunk.iter().any(|&i| i != self.dummy_index()) {
-                    return Err(format!("group {g}: padded column {j} has real indices"));
+                    return Err(crate::Error::Format(format!(
+                        "group {g}: padded column {j} has real indices"
+                    )));
                 }
             }
         }

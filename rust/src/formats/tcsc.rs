@@ -101,7 +101,7 @@ impl SparseFormat for Tcsc {
         w
     }
 
-    fn validate(&self) -> Result<(), String> {
+    fn validate(&self) -> crate::Result<()> {
         validate_csc(
             "pos",
             self.k,
@@ -128,29 +128,38 @@ pub(crate) fn validate_csc(
     n: usize,
     col_start: &[u32],
     row_index: &[u32],
-) -> Result<(), String> {
+) -> crate::Result<()> {
     if col_start.len() != n + 1 {
-        return Err(format!("{label}: col_start length {} != N+1", col_start.len()));
+        return Err(crate::Error::Format(format!(
+            "{label}: col_start length {} != N+1",
+            col_start.len()
+        )));
     }
     if col_start[0] != 0 {
-        return Err(format!("{label}: col_start[0] != 0"));
+        return Err(crate::Error::Format(format!("{label}: col_start[0] != 0")));
     }
     if *col_start.last().unwrap() as usize != row_index.len() {
-        return Err(format!("{label}: col_start end != index count"));
+        return Err(crate::Error::Format(format!("{label}: col_start end != index count")));
     }
     for j in 0..n {
         if col_start[j] > col_start[j + 1] {
-            return Err(format!("{label}: col_start not monotone at column {j}"));
+            return Err(crate::Error::Format(format!(
+                "{label}: col_start not monotone at column {j}"
+            )));
         }
         let seg = &row_index[col_start[j] as usize..col_start[j + 1] as usize];
         for w in seg.windows(2) {
             if w[0] >= w[1] {
-                return Err(format!("{label}: column {j} indices not strictly ascending"));
+                return Err(crate::Error::Format(format!(
+                    "{label}: column {j} indices not strictly ascending"
+                )));
             }
         }
         if let Some(&last) = seg.last() {
             if last as usize >= k {
-                return Err(format!("{label}: column {j} index {last} out of range"));
+                return Err(crate::Error::Format(format!(
+                    "{label}: column {j} index {last} out of range"
+                )));
             }
         }
     }

@@ -34,7 +34,11 @@ pub use compressed::CompressedKernel;
 pub use inverted::InvertedKernel;
 pub use parallel::ParallelGemm;
 pub use prelu::{prelu_inplace, PRELU_DEFAULT_ALPHA};
-pub use registry::{kernel_names, prepare_kernel, GemmScratch, KernelParams, PreparedGemm};
+pub use registry::{
+    best_scalar, descriptors, first_matching, fused_simd, gemv_specialist, kernel_ids,
+    kernel_names, prepare_kernel, BatchAffinity, GemmScratch, KernelDescriptor, KernelFamily,
+    KernelId, KernelParams, PreparedGemm,
+};
 pub use unrolled::UnrolledTcscKernel;
 pub use unrolled_m::UnrolledMKernel;
 

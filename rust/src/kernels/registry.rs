@@ -1,6 +1,23 @@
-//! Kernel registry: build a *prepared* GEMM (format constructed, kernel
-//! bound) from a kernel name + dense ternary weights. This is the dispatch
-//! surface the serving engine, CLI and benches share.
+//! Typed kernel registry: one static [`KernelDescriptor`] table is the
+//! single source of truth for the whole kernel family.
+//!
+//! Every kernel the paper evaluates (TCSC baseline → unrolled →
+//! blocked/interleaved → SIMD, plus the two ablation formats and the dense
+//! reference) has exactly one [`KernelId`] and one row in [`descriptors`].
+//! Everything else is a *derived query* over that table:
+//!
+//! - [`kernel_names`] / [`kernel_ids`] — enumeration, in canonical
+//!   benchmark order;
+//! - [`KernelId::parse`] / [`KernelId::name`] — the name ↔ id boundary
+//!   (JSON tuning tables, model configs and bench flags stay name-keyed);
+//! - [`KernelId::prepare`] — format construction + kernel binding, via the
+//!   descriptor's constructor;
+//! - capability filters ([`gemv_specialist`], [`best_scalar`],
+//!   [`fused_simd`]) — the planner's heuristic candidate sets, selected by
+//!   declared capability instead of hard-coded name literals.
+//!
+//! Adding a kernel is one enum variant + one table row; the planner,
+//! autotune sweep, config validation and benches pick it up without edits.
 
 use crate::formats::{
     BlockedTcsc, CompressedTernary, InterleavedBlockedTcsc, InterleavedTcsc, InvertedIndex,
@@ -13,6 +30,8 @@ use crate::kernels::{
 };
 use crate::tensor::{Matrix, PaddedMatrix};
 use crate::ternary::TernaryMatrix;
+use crate::{Error, Result};
+use std::sync::OnceLock;
 
 /// Parameters a kernel build may consume (paper defaults).
 #[derive(Debug, Clone, Copy)]
@@ -52,6 +71,18 @@ impl KernelParams {
     /// Group for the blocked interleaved formats (paper default 2).
     pub fn blocked_group(&self) -> usize {
         self.group.unwrap_or(crate::PAPER_BLOCKED_GROUP)
+    }
+
+    /// Reject parameter values no kernel constructor can honor. Called by
+    /// [`KernelId::prepare`]; validating up front keeps the descriptor
+    /// constructors infallible.
+    pub fn validate(&self) -> Result<()> {
+        if self.group == Some(0) {
+            return Err(Error::BadKernelParams(
+                "interleave group must be >= 1".into(),
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -146,6 +177,152 @@ pub trait PreparedGemm: Send + Sync {
     /// [`KernelParams::group`] was honored.
     fn interleave_group(&self) -> Option<usize> {
         None
+    }
+}
+
+/// Typed identity of a registry kernel. The dispatch currency of the
+/// whole stack: tuning entries, plan-cache keys, planner candidates and
+/// config overrides all carry a `KernelId`; strings appear only at the
+/// parse/display boundary ([`KernelId::parse`] / [`KernelId::name`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum KernelId {
+    BaseTcsc,
+    UnrolledTcsc5,
+    UnrolledTcsc12,
+    UnrolledTcscK4M4,
+    UnrolledBlockedTcscK4M4,
+    InterleavedTcsc,
+    InterleavedBlockedTcsc,
+    CompressedTernary,
+    CompressedTernaryBranch,
+    InvertedIndex,
+    SimdVertical,
+    SimdHorizontal,
+    SimdBlockedInterleaved,
+    DenseGemm,
+}
+
+impl KernelId {
+    /// The descriptor row for this kernel.
+    pub fn descriptor(self) -> &'static KernelDescriptor {
+        descriptors()
+            .iter()
+            .find(|d| d.id == self)
+            .expect("descriptor table covers every KernelId")
+    }
+
+    /// Registry name (the JSON / CLI / benchmark-table spelling).
+    pub fn name(self) -> &'static str {
+        self.descriptor().name
+    }
+
+    /// Resolve a registry name to its id (`None` for unknown names).
+    pub fn parse(name: &str) -> Option<KernelId> {
+        descriptors().iter().find(|d| d.name == name).map(|d| d.id)
+    }
+
+    /// Build the prepared GEMM for this kernel over dense ternary weights.
+    ///
+    /// # Errors
+    /// [`Error::BadKernelParams`] when `params` fails validation; the
+    /// descriptor constructors themselves are infallible.
+    pub fn prepare(
+        self,
+        w: &TernaryMatrix,
+        params: KernelParams,
+    ) -> Result<Box<dyn PreparedGemm>> {
+        params.validate()?;
+        Ok((self.descriptor().constructor)(w, params))
+    }
+}
+
+impl std::fmt::Display for KernelId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for KernelId {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<KernelId> {
+        KernelId::parse(s).ok_or_else(|| Error::UnknownKernel(s.to_string()))
+    }
+}
+
+/// Paper lineage of a kernel (how the figures group the family).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelFamily {
+    /// Scalar TCSC column walkers (base + unrolled variants, Figs 2/6).
+    Tcsc,
+    /// Cache-blocked K (Fig 5's tiling, scalar).
+    Blocked,
+    /// Interleaved index/sign streams (the paper's best scalar line).
+    Interleaved,
+    /// Symmetric-format SIMD kernels (Fig 11).
+    Simd,
+    /// Base-3 value packing (evaluated-and-dropped ablation).
+    Compressed,
+    /// Inverted row index (evaluated-and-dropped ablation).
+    Inverted,
+    /// Dense f32 reference GEMM.
+    Dense,
+}
+
+/// Which batch regime a kernel is *specialized* for. Selection metadata,
+/// not a correctness constraint — every kernel handles any M.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchAffinity {
+    /// Single-row / latency specialist: wins at the GEMV end of Fig 2 and
+    /// at the sparsest class, where there is nothing to amortize.
+    Gemv,
+    /// Needs rows to amortize per-batch overhead (the SIMD family's
+    /// padded-X copy).
+    Gemm,
+    /// Performance-neutral in M (paper Fig 8).
+    Any,
+}
+
+/// One row of the registry: a kernel's identity, capabilities and
+/// constructor. The planner, autotune sweep, config validation and the
+/// benches all derive their behavior from these fields.
+pub struct KernelDescriptor {
+    pub id: KernelId,
+    /// Registry name (stable: JSON tuning tables are keyed by it).
+    pub name: &'static str,
+    pub family: KernelFamily,
+    /// Can fold PReLU into the GEMM inner loop ([`KernelParams::prelu_alpha`]).
+    pub supports_fused_prelu: bool,
+    /// Honors [`KernelParams::group`].
+    pub uses_group: bool,
+    /// Paper-default interleave group when `uses_group` (else `None`).
+    pub default_group: Option<usize>,
+    /// Builds a K-blocked format (block size `min(K, 4096)`).
+    pub uses_block: bool,
+    /// `run_with_scratch` reads X through the reusable padded buffer.
+    pub uses_padded_scratch: bool,
+    /// Vector (SIMD) kernel, vs scalar.
+    pub simd: bool,
+    pub batch_affinity: BatchAffinity,
+    /// Build the prepared GEMM. Infallible: [`KernelParams::validate`]
+    /// runs before any constructor.
+    constructor: fn(&TernaryMatrix, KernelParams) -> Box<dyn PreparedGemm>,
+}
+
+impl std::fmt::Debug for KernelDescriptor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("KernelDescriptor")
+            .field("id", &self.id)
+            .field("name", &self.name)
+            .field("family", &self.family)
+            .field("supports_fused_prelu", &self.supports_fused_prelu)
+            .field("uses_group", &self.uses_group)
+            .field("default_group", &self.default_group)
+            .field("uses_block", &self.uses_block)
+            .field("uses_padded_scratch", &self.uses_padded_scratch)
+            .field("simd", &self.simd)
+            .field("batch_affinity", &self.batch_affinity)
+            .finish_non_exhaustive()
     }
 }
 
@@ -362,95 +539,351 @@ impl PreparedGemm for PSimdBlocked {
     }
 }
 
-/// All registry kernel names, in canonical benchmark order.
-pub fn kernel_names() -> &'static [&'static str] {
-    &[
-        "base_tcsc",
-        "unrolled_tcsc_5",
-        "unrolled_tcsc_12",
-        "unrolled_tcsc_k4_m4",
-        "unrolled_blocked_tcsc_k4_m4",
-        "interleaved_tcsc",
-        "interleaved_blocked_tcsc",
-        "compressed_ternary",
-        "compressed_ternary_branch",
-        "inverted_index",
-        "simd_vertical",
-        "simd_horizontal",
-        "simd_blocked_interleaved",
-        "dense_gemm",
-    ]
+// ---- descriptor constructors (one per table row, all infallible) ----------
+
+fn build_base(w: &TernaryMatrix, _p: KernelParams) -> Box<dyn PreparedGemm> {
+    Box::new(PBase {
+        fmt: Tcsc::from_ternary(w),
+    })
 }
 
-/// Build a prepared kernel by registry name.
+fn build_unrolled5(w: &TernaryMatrix, _p: KernelParams) -> Box<dyn PreparedGemm> {
+    Box::new(PUnrolled5 {
+        fmt: Tcsc::from_ternary(w),
+    })
+}
+
+fn build_unrolled12(w: &TernaryMatrix, _p: KernelParams) -> Box<dyn PreparedGemm> {
+    Box::new(PUnrolled12 {
+        fmt: Tcsc::from_ternary(w),
+    })
+}
+
+fn build_unrolled_k4_m4(w: &TernaryMatrix, _p: KernelParams) -> Box<dyn PreparedGemm> {
+    Box::new(PUnrolledK4M4 {
+        fmt: Tcsc::from_ternary(w),
+    })
+}
+
+fn build_unrolled_blocked(w: &TernaryMatrix, p: KernelParams) -> Box<dyn PreparedGemm> {
+    Box::new(PBlocked {
+        fmt: BlockedTcsc::from_ternary(w, p.effective_block(w.k())),
+    })
+}
+
+fn build_interleaved(w: &TernaryMatrix, p: KernelParams) -> Box<dyn PreparedGemm> {
+    Box::new(PInterleaved {
+        fmt: InterleavedTcsc::from_ternary(w, p.interleave_group()),
+    })
+}
+
+fn build_interleaved_blocked(w: &TernaryMatrix, p: KernelParams) -> Box<dyn PreparedGemm> {
+    Box::new(PInterleavedBlocked {
+        fmt: InterleavedBlockedTcsc::from_ternary(w, p.effective_block(w.k()), p.blocked_group()),
+    })
+}
+
+fn build_compressed(w: &TernaryMatrix, _p: KernelParams) -> Box<dyn PreparedGemm> {
+    Box::new(PCompressed {
+        fmt: CompressedTernary::from_ternary(w),
+    })
+}
+
+fn build_compressed_branch(w: &TernaryMatrix, _p: KernelParams) -> Box<dyn PreparedGemm> {
+    Box::new(PCompressedBranch {
+        fmt: CompressedTernary::from_ternary(w),
+    })
+}
+
+fn build_inverted(w: &TernaryMatrix, _p: KernelParams) -> Box<dyn PreparedGemm> {
+    Box::new(PInverted {
+        fmt: InvertedIndex::from_ternary(w),
+    })
+}
+
+fn build_simd_vertical(w: &TernaryMatrix, p: KernelParams) -> Box<dyn PreparedGemm> {
+    Box::new(PSimd {
+        fmt: SymmetricTcsc::from_ternary(w),
+        kernel: VerticalSimdKernel::new(p.prelu_alpha),
+        name: "simd_vertical",
+        prelu: p.prelu_alpha.is_some(),
+    })
+}
+
+fn build_simd_horizontal(w: &TernaryMatrix, p: KernelParams) -> Box<dyn PreparedGemm> {
+    Box::new(PSimd {
+        fmt: SymmetricTcsc::from_ternary(w),
+        kernel: HorizontalSimdKernel::new(p.prelu_alpha),
+        name: "simd_horizontal",
+        prelu: p.prelu_alpha.is_some(),
+    })
+}
+
+fn build_simd_blocked(w: &TernaryMatrix, p: KernelParams) -> Box<dyn PreparedGemm> {
+    Box::new(PSimdBlocked {
+        fmt: InterleavedBlockedTcsc::from_ternary(w, p.effective_block(w.k()), p.blocked_group()),
+        kernel: SimdBlockedMnKernel::new(p.prelu_alpha),
+        prelu: p.prelu_alpha.is_some(),
+    })
+}
+
+fn build_dense(w: &TernaryMatrix, _p: KernelParams) -> Box<dyn PreparedGemm> {
+    Box::new(PDense {
+        gemm: DenseGemm::new(w),
+        k: w.k(),
+        n: w.n(),
+        nnz: w.nnz(),
+    })
+}
+
+/// The registry table, in canonical benchmark order. **Adding a kernel is
+/// one `KernelId` variant plus one row here** — enumeration, dispatch,
+/// validation and the planner's candidate filters all derive from it.
+static DESCRIPTORS: [KernelDescriptor; 14] = [
+    KernelDescriptor {
+        id: KernelId::BaseTcsc,
+        name: "base_tcsc",
+        family: KernelFamily::Tcsc,
+        supports_fused_prelu: false,
+        uses_group: false,
+        default_group: None,
+        uses_block: false,
+        uses_padded_scratch: false,
+        simd: false,
+        batch_affinity: BatchAffinity::Any,
+        constructor: build_base,
+    },
+    KernelDescriptor {
+        id: KernelId::UnrolledTcsc5,
+        name: "unrolled_tcsc_5",
+        family: KernelFamily::Tcsc,
+        supports_fused_prelu: false,
+        uses_group: false,
+        default_group: None,
+        uses_block: false,
+        uses_padded_scratch: false,
+        simd: false,
+        batch_affinity: BatchAffinity::Any,
+        constructor: build_unrolled5,
+    },
+    KernelDescriptor {
+        id: KernelId::UnrolledTcsc12,
+        name: "unrolled_tcsc_12",
+        family: KernelFamily::Tcsc,
+        supports_fused_prelu: false,
+        uses_group: false,
+        default_group: None,
+        uses_block: false,
+        uses_padded_scratch: false,
+        simd: false,
+        batch_affinity: BatchAffinity::Any,
+        constructor: build_unrolled12,
+    },
+    KernelDescriptor {
+        id: KernelId::UnrolledTcscK4M4,
+        name: "unrolled_tcsc_k4_m4",
+        family: KernelFamily::Tcsc,
+        supports_fused_prelu: false,
+        uses_group: false,
+        default_group: None,
+        uses_block: false,
+        uses_padded_scratch: false,
+        simd: false,
+        // Fig 2's GEMV-end winner and the sparsest-class pick: nothing to
+        // amortize, so the plain K/M-unrolled walk wins.
+        batch_affinity: BatchAffinity::Gemv,
+        constructor: build_unrolled_k4_m4,
+    },
+    KernelDescriptor {
+        id: KernelId::UnrolledBlockedTcscK4M4,
+        name: "unrolled_blocked_tcsc_k4_m4",
+        family: KernelFamily::Blocked,
+        supports_fused_prelu: false,
+        uses_group: false,
+        default_group: None,
+        uses_block: true,
+        uses_padded_scratch: false,
+        simd: false,
+        batch_affinity: BatchAffinity::Any,
+        constructor: build_unrolled_blocked,
+    },
+    KernelDescriptor {
+        id: KernelId::InterleavedTcsc,
+        name: "interleaved_tcsc",
+        family: KernelFamily::Interleaved,
+        supports_fused_prelu: false,
+        uses_group: true,
+        default_group: Some(crate::PAPER_GROUP_SIZE),
+        uses_block: false,
+        uses_padded_scratch: false,
+        simd: false,
+        batch_affinity: BatchAffinity::Any,
+        constructor: build_interleaved,
+    },
+    KernelDescriptor {
+        id: KernelId::InterleavedBlockedTcsc,
+        name: "interleaved_blocked_tcsc",
+        family: KernelFamily::Interleaved,
+        supports_fused_prelu: false,
+        uses_group: true,
+        default_group: Some(crate::PAPER_BLOCKED_GROUP),
+        uses_block: true,
+        uses_padded_scratch: false,
+        simd: false,
+        batch_affinity: BatchAffinity::Any,
+        constructor: build_interleaved_blocked,
+    },
+    KernelDescriptor {
+        id: KernelId::CompressedTernary,
+        name: "compressed_ternary",
+        family: KernelFamily::Compressed,
+        supports_fused_prelu: false,
+        uses_group: false,
+        default_group: None,
+        uses_block: false,
+        uses_padded_scratch: false,
+        simd: false,
+        batch_affinity: BatchAffinity::Any,
+        constructor: build_compressed,
+    },
+    KernelDescriptor {
+        id: KernelId::CompressedTernaryBranch,
+        name: "compressed_ternary_branch",
+        family: KernelFamily::Compressed,
+        supports_fused_prelu: false,
+        uses_group: false,
+        default_group: None,
+        uses_block: false,
+        uses_padded_scratch: false,
+        simd: false,
+        batch_affinity: BatchAffinity::Any,
+        constructor: build_compressed_branch,
+    },
+    KernelDescriptor {
+        id: KernelId::InvertedIndex,
+        name: "inverted_index",
+        family: KernelFamily::Inverted,
+        supports_fused_prelu: false,
+        uses_group: false,
+        default_group: None,
+        uses_block: false,
+        uses_padded_scratch: false,
+        simd: false,
+        batch_affinity: BatchAffinity::Any,
+        constructor: build_inverted,
+    },
+    KernelDescriptor {
+        id: KernelId::SimdVertical,
+        name: "simd_vertical",
+        family: KernelFamily::Simd,
+        supports_fused_prelu: true,
+        uses_group: false,
+        default_group: None,
+        uses_block: false,
+        uses_padded_scratch: true,
+        simd: true,
+        batch_affinity: BatchAffinity::Gemm,
+        constructor: build_simd_vertical,
+    },
+    KernelDescriptor {
+        id: KernelId::SimdHorizontal,
+        name: "simd_horizontal",
+        family: KernelFamily::Simd,
+        supports_fused_prelu: true,
+        uses_group: false,
+        default_group: None,
+        uses_block: false,
+        uses_padded_scratch: true,
+        simd: true,
+        batch_affinity: BatchAffinity::Gemm,
+        constructor: build_simd_horizontal,
+    },
+    KernelDescriptor {
+        id: KernelId::SimdBlockedInterleaved,
+        name: "simd_blocked_interleaved",
+        family: KernelFamily::Simd,
+        supports_fused_prelu: true,
+        uses_group: true,
+        default_group: Some(crate::PAPER_BLOCKED_GROUP),
+        uses_block: true,
+        uses_padded_scratch: false,
+        simd: true,
+        batch_affinity: BatchAffinity::Gemm,
+        constructor: build_simd_blocked,
+    },
+    KernelDescriptor {
+        id: KernelId::DenseGemm,
+        name: "dense_gemm",
+        family: KernelFamily::Dense,
+        supports_fused_prelu: false,
+        uses_group: false,
+        default_group: None,
+        uses_block: false,
+        uses_padded_scratch: false,
+        simd: false,
+        batch_affinity: BatchAffinity::Any,
+        constructor: build_dense,
+    },
+];
+
+/// Every descriptor, in canonical benchmark order.
+pub fn descriptors() -> &'static [KernelDescriptor] {
+    &DESCRIPTORS
+}
+
+/// All registry kernel names, in canonical benchmark order (derived from
+/// the descriptor table).
+pub fn kernel_names() -> &'static [&'static str] {
+    static NAMES: OnceLock<Vec<&'static str>> = OnceLock::new();
+    NAMES.get_or_init(|| DESCRIPTORS.iter().map(|d| d.name).collect())
+}
+
+/// All registry kernel ids, in canonical benchmark order.
+pub fn kernel_ids() -> &'static [KernelId] {
+    static IDS: OnceLock<Vec<KernelId>> = OnceLock::new();
+    IDS.get_or_init(|| DESCRIPTORS.iter().map(|d| d.id).collect())
+}
+
+/// First kernel in canonical order whose descriptor satisfies `pred` —
+/// the derived-query primitive behind the planner's candidate selection.
+pub fn first_matching(pred: impl Fn(&KernelDescriptor) -> bool) -> Option<KernelId> {
+    DESCRIPTORS.iter().find(|d| pred(d)).map(|d| d.id)
+}
+
+/// The scalar single-row specialist (Fig 2's GEMV end): the kernel for
+/// the sparsest class and the M=1 rival in the planner's top-2 race.
+pub fn gemv_specialist() -> KernelId {
+    first_matching(|d| d.batch_affinity == BatchAffinity::Gemv && !d.simd)
+        .expect("descriptor table declares a scalar GEMV specialist")
+}
+
+/// The paper's best scalar kernel (Figs 6–9): blocked + interleaved,
+/// no SIMD.
+pub fn best_scalar() -> KernelId {
+    first_matching(|d| d.uses_block && d.uses_group && !d.simd)
+        .expect("descriptor table declares a blocked interleaved scalar kernel")
+}
+
+/// The preferred fused-PReLU SIMD kernel (Fig 11): vector, fuses the
+/// activation, no blocking machinery to amortize.
+pub fn fused_simd() -> KernelId {
+    first_matching(|d| d.simd && d.supports_fused_prelu && !d.uses_block)
+        .expect("descriptor table declares a fusing SIMD kernel")
+}
+
+/// Build a prepared kernel by registry **name** — the boundary for
+/// name-keyed callers (benches, CLI flags). Typed callers use
+/// [`KernelId::prepare`] directly.
 ///
 /// # Errors
-/// Returns `Err` for unknown names.
+/// [`Error::UnknownKernel`] for unregistered names,
+/// [`Error::BadKernelParams`] for invalid params.
 pub fn prepare_kernel(
     name: &str,
     w: &TernaryMatrix,
     params: KernelParams,
-) -> Result<Box<dyn PreparedGemm>, String> {
-    if params.group == Some(0) {
-        return Err("interleave group must be >= 1".into());
-    }
-    let bs = params.effective_block(w.k());
-    Ok(match name {
-        "base_tcsc" => Box::new(PBase {
-            fmt: Tcsc::from_ternary(w),
-        }),
-        "unrolled_tcsc_5" => Box::new(PUnrolled5 {
-            fmt: Tcsc::from_ternary(w),
-        }),
-        "unrolled_tcsc_12" => Box::new(PUnrolled12 {
-            fmt: Tcsc::from_ternary(w),
-        }),
-        "unrolled_tcsc_k4_m4" => Box::new(PUnrolledK4M4 {
-            fmt: Tcsc::from_ternary(w),
-        }),
-        "unrolled_blocked_tcsc_k4_m4" => Box::new(PBlocked {
-            fmt: BlockedTcsc::from_ternary(w, bs),
-        }),
-        "interleaved_tcsc" => Box::new(PInterleaved {
-            fmt: InterleavedTcsc::from_ternary(w, params.interleave_group()),
-        }),
-        "interleaved_blocked_tcsc" => Box::new(PInterleavedBlocked {
-            fmt: InterleavedBlockedTcsc::from_ternary(w, bs, params.blocked_group()),
-        }),
-        "compressed_ternary" => Box::new(PCompressed {
-            fmt: CompressedTernary::from_ternary(w),
-        }),
-        "compressed_ternary_branch" => Box::new(PCompressedBranch {
-            fmt: CompressedTernary::from_ternary(w),
-        }),
-        "inverted_index" => Box::new(PInverted {
-            fmt: InvertedIndex::from_ternary(w),
-        }),
-        "simd_vertical" => Box::new(PSimd {
-            fmt: SymmetricTcsc::from_ternary(w),
-            kernel: VerticalSimdKernel::new(params.prelu_alpha),
-            name: "simd_vertical",
-            prelu: params.prelu_alpha.is_some(),
-        }),
-        "simd_horizontal" => Box::new(PSimd {
-            fmt: SymmetricTcsc::from_ternary(w),
-            kernel: HorizontalSimdKernel::new(params.prelu_alpha),
-            name: "simd_horizontal",
-            prelu: params.prelu_alpha.is_some(),
-        }),
-        "simd_blocked_interleaved" => Box::new(PSimdBlocked {
-            fmt: InterleavedBlockedTcsc::from_ternary(w, bs, params.blocked_group()),
-            kernel: SimdBlockedMnKernel::new(params.prelu_alpha),
-            prelu: params.prelu_alpha.is_some(),
-        }),
-        "dense_gemm" => Box::new(PDense {
-            gemm: DenseGemm::new(w),
-            k: w.k(),
-            n: w.n(),
-            nnz: w.nnz(),
-        }),
-        other => return Err(format!("unknown kernel '{other}'")),
-    })
+) -> Result<Box<dyn PreparedGemm>> {
+    name.parse::<KernelId>()?.prepare(w, params)
 }
 
 #[cfg(test)]
@@ -475,6 +908,50 @@ mod tests {
     }
 
     #[test]
+    fn descriptor_table_is_consistent() {
+        // Names and ids are unique; the derived enumerations match the
+        // table exactly; names round-trip through parse/Display.
+        let ds = descriptors();
+        for (i, d) in ds.iter().enumerate() {
+            assert_eq!(d.id.descriptor().name, d.name);
+            assert_eq!(KernelId::parse(d.name), Some(d.id), "{}", d.name);
+            assert_eq!(d.name.parse::<KernelId>().unwrap(), d.id);
+            assert_eq!(d.id.to_string(), d.name);
+            for other in &ds[i + 1..] {
+                assert_ne!(d.name, other.name, "duplicate kernel name");
+                assert_ne!(d.id, other.id, "duplicate kernel id");
+            }
+        }
+        let derived: Vec<&str> = ds.iter().map(|d| d.name).collect();
+        assert_eq!(kernel_names(), derived.as_slice());
+        let ids: Vec<KernelId> = ds.iter().map(|d| d.id).collect();
+        assert_eq!(kernel_ids(), ids.as_slice());
+        assert_eq!(
+            KernelId::parse("nope"),
+            None,
+            "unknown names must not resolve"
+        );
+        assert_eq!(
+            "nope".parse::<KernelId>(),
+            Err(Error::UnknownKernel("nope".into()))
+        );
+    }
+
+    #[test]
+    fn capability_roles_resolve_to_paper_picks() {
+        // The planner's derived candidate queries must land on the paper's
+        // kernels; if a new descriptor accidentally matches a role filter
+        // first, the heuristics silently change — this pins them.
+        assert_eq!(gemv_specialist(), KernelId::UnrolledTcscK4M4);
+        assert_eq!(best_scalar(), KernelId::InterleavedBlockedTcsc);
+        assert_eq!(fused_simd(), KernelId::SimdVertical);
+    }
+
+    // Declared-capability vs runtime-behavior consistency is covered by
+    // the random-shape property test in rust/tests/prop_kernels.rs
+    // (prop_descriptor_capabilities_match_runtime_on_random_shapes).
+
+    #[test]
     fn prelu_param_fuses() {
         let w = TernaryMatrix::random(64, 16, 0.5, 7);
         let x = Matrix::random(4, 64, 8);
@@ -485,28 +962,38 @@ mod tests {
             prelu_alpha: Some(0.25),
             ..Default::default()
         };
-        for name in ["simd_vertical", "simd_horizontal", "simd_blocked_interleaved"] {
-            let kern = prepare_kernel(name, &w, params).unwrap();
+        // Derived query: every kernel declaring fusion support fuses and
+        // still matches the oracle.
+        let fusing: Vec<KernelId> = descriptors()
+            .iter()
+            .filter(|d| d.supports_fused_prelu)
+            .map(|d| d.id)
+            .collect();
+        assert_eq!(fusing.len(), 3, "the SIMD family fuses");
+        for id in fusing {
+            let kern = id.prepare(&w, params).unwrap();
             assert!(kern.fused_prelu());
             let mut y = Matrix::zeros(4, 16);
             kern.run(&x, &bias, &mut y);
-            assert!(y.allclose(&oracle, 1e-4), "kernel {name}");
+            assert!(y.allclose(&oracle, 1e-4), "kernel {id}");
         }
     }
 
     #[test]
-    fn unknown_kernel_is_error() {
+    fn unknown_kernel_and_bad_params_are_typed_errors() {
         let w = TernaryMatrix::random(8, 8, 0.5, 1);
-        assert!(prepare_kernel("nope", &w, KernelParams::default()).is_err());
-        assert!(prepare_kernel(
-            "interleaved_tcsc",
-            &w,
-            KernelParams {
-                group: Some(0),
-                ..Default::default()
-            }
-        )
-        .is_err());
+        assert_eq!(
+            prepare_kernel("nope", &w, KernelParams::default()).err(),
+            Some(Error::UnknownKernel("nope".into()))
+        );
+        let bad = KernelParams {
+            group: Some(0),
+            ..Default::default()
+        };
+        assert!(matches!(
+            KernelId::InterleavedTcsc.prepare(&w, bad),
+            Err(Error::BadKernelParams(_))
+        ));
     }
 
     #[test]
@@ -516,31 +1003,27 @@ mod tests {
         let bias: Vec<f32> = (0..24).map(|i| 0.05 * i as f32).collect();
         let oracle = dense_oracle(&x, &w, &bias);
         // Paper defaults when no group is given.
-        for (name, want) in [
-            ("interleaved_tcsc", crate::PAPER_GROUP_SIZE),
-            ("interleaved_blocked_tcsc", crate::PAPER_BLOCKED_GROUP),
-            ("simd_blocked_interleaved", crate::PAPER_BLOCKED_GROUP),
+        for (id, want) in [
+            (KernelId::InterleavedTcsc, crate::PAPER_GROUP_SIZE),
+            (KernelId::InterleavedBlockedTcsc, crate::PAPER_BLOCKED_GROUP),
+            (KernelId::SimdBlockedInterleaved, crate::PAPER_BLOCKED_GROUP),
         ] {
-            let kern = prepare_kernel(name, &w, KernelParams::default()).unwrap();
-            assert_eq!(kern.interleave_group(), Some(want), "{name} default");
+            let kern = id.prepare(&w, KernelParams::default()).unwrap();
+            assert_eq!(kern.interleave_group(), Some(want), "{id} default");
         }
-        // Explicit groups are honored by every interleaving kernel and
-        // stay correct.
+        // Explicit groups are honored by every interleaving kernel
+        // (derived from the descriptor table) and stay correct.
         for g in [1usize, 3, 4] {
             let params = KernelParams {
                 group: Some(g),
                 ..Default::default()
             };
-            for name in [
-                "interleaved_tcsc",
-                "interleaved_blocked_tcsc",
-                "simd_blocked_interleaved",
-            ] {
-                let kern = prepare_kernel(name, &w, params).unwrap();
-                assert_eq!(kern.interleave_group(), Some(g), "{name} g={g}");
+            for d in descriptors().iter().filter(|d| d.uses_group) {
+                let kern = d.id.prepare(&w, params).unwrap();
+                assert_eq!(kern.interleave_group(), Some(g), "{} g={g}", d.name);
                 let mut y = Matrix::zeros(5, 24);
                 kern.run(&x, &bias, &mut y);
-                assert!(y.allclose(&oracle, 1e-3), "{name} g={g}");
+                assert!(y.allclose(&oracle, 1e-3), "{} g={g}", d.name);
             }
         }
     }
@@ -550,24 +1033,28 @@ mod tests {
         let w = TernaryMatrix::random(64, 20, 0.25, 55);
         let x = Matrix::random(6, 64, 56);
         let bias = vec![0.1f32; 20];
-        for name in kernel_names() {
-            let kern = prepare_kernel(name, &w, KernelParams::default()).unwrap();
+        for d in descriptors() {
+            let kern = d.id.prepare(&w, KernelParams::default()).unwrap();
             let mut y_plain = Matrix::zeros(6, 20);
             kern.run(&x, &bias, &mut y_plain);
             let mut scratch = GemmScratch::new();
             let mut y_scratch = Matrix::zeros(6, 20);
             kern.run_with_scratch(&x, &bias, &mut y_scratch, &mut scratch);
-            assert_eq!(y_plain, y_scratch, "{name} scratch path must be bitwise equal");
+            assert_eq!(
+                y_plain, y_scratch,
+                "{} scratch path must be bitwise equal",
+                d.name
+            );
             // Repeated calls must not grow the scratch.
             let cap = scratch.padded_capacity();
             for _ in 0..3 {
                 kern.run_with_scratch(&x, &bias, &mut y_scratch, &mut scratch);
             }
-            assert_eq!(scratch.padded_capacity(), cap, "{name}");
-            if kern.uses_padded_scratch() {
-                assert_eq!(cap, 6 * 65, "{name} pads X into scratch");
+            assert_eq!(scratch.padded_capacity(), cap, "{}", d.name);
+            if d.uses_padded_scratch {
+                assert_eq!(cap, 6 * 65, "{} pads X into scratch", d.name);
             } else {
-                assert_eq!(cap, 0, "{name} needs no padded scratch");
+                assert_eq!(cap, 0, "{} needs no padded scratch", d.name);
             }
         }
     }

@@ -23,8 +23,17 @@
 //!   [`formats::CompressedTernary`] (base-3 packing) and
 //!   [`formats::InvertedIndex`].
 //! - [`kernels`] — the GEMM kernel family over those formats, scalar and
-//!   SIMD, the string-keyed registry (`prepare_kernel`), the dense oracle
-//!   and PReLU fusion.
+//!   SIMD, plus the **typed registry**: every kernel has a
+//!   [`kernels::KernelId`] and one row in the static
+//!   [`kernels::KernelDescriptor`] table ([`kernels::descriptors`])
+//!   declaring its family, fused-PReLU support, interleave-group/blocking
+//!   behavior, padded-scratch use and batch affinity. Enumeration
+//!   ([`kernels::kernel_names`] / [`kernels::kernel_ids`]), dispatch
+//!   ([`kernels::KernelId::prepare`]), config validation and the
+//!   planner's heuristic candidates are all derived queries over that
+//!   table — adding a kernel is one enum variant plus one row. Strings
+//!   appear only at the parse/display boundary
+//!   ([`kernels::KernelId::parse`] / [`kernels::KernelId::name`]).
 //! - [`plan`] — **the layer everything executes through**:
 //!   [`plan::Planner`] turns weights + hints into a [`plan::GemmPlan`]
 //!   (kernel selected via the autotune table or paper heuristics, epilogue
@@ -45,8 +54,13 @@
 //!   online races when per-bucket winners diverge); lookups try the
 //!   M-aware entry for the batch's bucket first and fall back to the
 //!   M-agnostic entry, so PR-2-era JSON tables keep working unchanged.
-//!   Un-bucketed (hand-edited/stale) keys are re-bucketed on load with a
-//!   warning instead of becoming silently unmatchable dead weight.
+//!   **JSON stays name-keyed on disk**; kernel names resolve to typed
+//!   [`kernels::KernelId`]s at load — an unknown name is excluded from
+//!   lookups with a warning (but survives a load-modify-save cycle), and
+//!   un-bucketed (hand-edited/stale) keys are re-bucketed with a warning
+//!   instead of becoming silently unmatchable dead weight. The per-M divergence threshold self-calibrates: it is
+//!   clamped to the variance floor ([`autotune::variance_floor`])
+//!   measured across the sweep's own repetitions.
 //! - [`perf`] — cycle timers, the paper's flop cost model
 //!   `C = M·N·(1+sK)`, operational intensity and roofline estimates.
 //! - [`model`] — ternary MLP / FFN built from planned linear layers; the
@@ -69,6 +83,11 @@
 //! - [`util`] — substrates built in-repo because the environment is offline:
 //!   PRNG, JSON, CLI parsing, thread pool (with scoped fork-join), and a
 //!   mini property-testing framework.
+//! - [`error`] — the library-wide typed [`enum@Error`] (re-exported at the
+//!   crate root with the [`Result`] alias): every fallible API returns it,
+//!   variants classify failures (`UnknownKernel`, `BadKernelParams`,
+//!   `Shape`, `Config`, `Tuning`, `Format`, `Runtime`, `Serve`, `Io`),
+//!   and the CLI maps them to exit codes via [`Error::exit_code`].
 //!
 //! ## Quickstart
 //!
@@ -103,12 +122,15 @@
 //! ```
 //!
 //! Benches and ablations pin kernels explicitly via
-//! [`plan::PlanHints::with_kernel`] (or a config's `kernel` key — the
-//! documented escape hatch); serving loads a measured table with
-//! `Planner::from_table_file` (`stgemm serve --tuning table.json`), fills
-//! it for a whole model with `stgemm autotune sweep --save`, and re-tunes
-//! in the background with `serve --retune-secs N`.
+//! [`plan::PlanHints::with_kernel`] with a typed [`kernels::KernelId`]
+//! (name-keyed callers resolve through `"name".parse::<KernelId>()`; a
+//! config's `kernel` key does this at parse time — the documented escape
+//! hatch); serving loads a measured table with `Planner::from_table_file`
+//! (`stgemm serve --tuning table.json`), fills it for a whole model with
+//! `stgemm autotune sweep --save`, and re-tunes in the background with
+//! `serve --retune-secs N`.
 
+pub mod error;
 pub mod util;
 pub mod tensor;
 pub mod ternary;
@@ -121,6 +143,8 @@ pub mod model;
 pub mod runtime;
 pub mod coordinator;
 pub mod bench;
+
+pub use error::{Error, Result};
 
 /// Sparsity levels evaluated by the paper (fraction of nonzero entries).
 pub const PAPER_SPARSITIES: [f32; 4] = [0.5, 0.25, 0.125, 0.0625];

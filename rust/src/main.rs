@@ -8,6 +8,11 @@
 //! - `quantize`  generate + absmean-quantize a float model, save as .stw
 //! - `selftest`  cross-check native kernels against the PJRT artifact
 //! - `loadgen`   drive a running server with concurrent clients
+//!
+//! This file is the **error boundary**: every library failure arrives as a
+//! typed [`stgemm::Error`], is printed once, and maps to a process exit
+//! code via [`stgemm::Error::exit_code`] (2 = usage/configuration, 1 =
+//! runtime failure) — no library error panics the CLI.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -29,10 +34,11 @@ use stgemm::runtime::artifacts::default_artifacts_dir;
 use stgemm::runtime::{Manifest, XlaExecutor};
 use stgemm::tensor::Matrix;
 use stgemm::util::cli::Args;
+use stgemm::{Error, Result};
 
 fn main() {
     let args = Args::parse();
-    let code = match args.subcommand.as_deref() {
+    let result = match args.subcommand.as_deref() {
         Some("serve") => cmd_serve(&args),
         Some("bench") => cmd_bench(&args),
         Some("autotune") => cmd_autotune(&args),
@@ -41,11 +47,18 @@ fn main() {
         Some("loadgen") => cmd_loadgen(&args),
         _ => {
             print_usage();
-            if args.has("help") || args.subcommand.is_none() {
+            Ok(if args.has("help") || args.subcommand.is_none() {
                 0
             } else {
                 2
-            }
+            })
+        }
+    };
+    let code = match result {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("error: {e}");
+            e.exit_code()
         }
     };
     std::process::exit(code);
@@ -75,9 +88,12 @@ USAGE: stgemm <subcommand> [options]
              [--per-m] [--divergence 0.08]
              [--save <table.json>]  (fill the table for every layer ×
                                      M-bucket of a model config in one run;
-                                     --per-m records k{K}_s{S}_m{M} entries
+                                     --per-m records k{{K}}_s{{S}}_m{{M}} entries
                                      for buckets whose winner diverges from
-                                     the mean winner beyond the threshold)
+                                     the mean winner beyond the threshold;
+                                     the threshold self-calibrates: it is
+                                     clamped to the variance floor measured
+                                     across --reps repetitions)
   quantize   --dims 256,1024,256 --seed 42 --out model.stw
   selftest   [--artifacts <dir>] [--model ffn_tiny]
   loadgen    --addr <host:port> --model <name> --d-in <n>
@@ -85,55 +101,32 @@ USAGE: stgemm <subcommand> [options]
     );
 }
 
-fn cmd_serve(args: &Args) -> i32 {
+fn cmd_serve(args: &Args) -> Result<i32> {
     let mut cfg = match args.get("model") {
-        Some(path) => match ModelConfig::from_file(path) {
-            Ok(c) => c,
-            Err(e) => {
-                eprintln!("error: {e}");
-                return 1;
-            }
-        },
+        Some(path) => ModelConfig::from_file(path)?,
         None => {
             eprintln!("[serve] no --model given; serving the default demo config");
             ModelConfig::default()
         }
     };
     cfg.threads = args.usize("threads", cfg.threads).max(1);
-    let backend: Backend = match args.get_or("backend", "native").parse() {
-        Ok(b) => b,
-        Err(e) => {
-            eprintln!("error: {e}");
-            return 2;
-        }
-    };
+    let backend: Backend = args.get_or("backend", "native").parse()?;
     // Kernel selection: measured tuning table when given, paper heuristics
     // (refined by the plan cache's online top-2 race on first traffic)
     // otherwise; the config's `kernel` key stays an explicit override.
     let have_table = args.get("tuning").is_some();
     let planner = Arc::new(match args.get("tuning") {
-        Some(path) => match Planner::from_table_file(path) {
-            Ok(p) => {
-                println!(
-                    "[serve] tuning table: {path} ({} classes)",
-                    p.tuned_classes()
-                );
-                p
-            }
-            Err(e) => {
-                eprintln!("error loading tuning table: {e}");
-                return 1;
-            }
-        },
+        Some(path) => {
+            let p = Planner::from_table_file(path)?;
+            println!(
+                "[serve] tuning table: {path} ({} classes)",
+                p.tuned_classes()
+            );
+            p
+        }
         None => Planner::new(),
     });
-    let mut engine = match Engine::from_config(&cfg, &planner) {
-        Ok(e) => e,
-        Err(e) => {
-            eprintln!("error building model: {e}");
-            return 1;
-        }
-    };
+    let mut engine = Engine::from_config(&cfg, &planner)?;
     if backend == Backend::Xla || args.get("artifacts").is_some() {
         let dir = args
             .get("artifacts")
@@ -142,10 +135,10 @@ fn cmd_serve(args: &Args) -> i32 {
         match attach_xla(&dir, &cfg.name) {
             Ok(xla) => engine = engine.with_xla(xla),
             Err(e) => {
-                eprintln!("error loading XLA artifacts: {e}");
                 if backend == Backend::Xla {
-                    return 1;
+                    return Err(e);
                 }
+                eprintln!("warning: XLA artifacts unavailable, serving native only: {e}");
             }
         }
     }
@@ -189,10 +182,7 @@ fn cmd_serve(args: &Args) -> i32 {
             None => vec![cfg.threads],
             Some(c) => stgemm::plan::PlanCache::controller_thread_steps(c.max_threads),
         };
-        if let Err(e) = cache.warm_settled(&cfg.batch_buckets, &steps) {
-            eprintln!("error warming plan cache: {e}");
-            return 1;
-        }
+        cache.warm_settled(&cfg.batch_buckets, &steps)?;
         if have_table {
             println!(
                 "[serve] plan cache warmed: buckets {:?} × thread steps {steps:?} \
@@ -228,7 +218,7 @@ fn cmd_serve(args: &Args) -> i32 {
                 let report = sweep_model_opts(
                     &cfg_bg,
                     &cfg_bg.batch_buckets,
-                    stgemm::kernels::kernel_names(),
+                    stgemm::kernels::kernel_ids(),
                     &timer,
                     &mut table,
                     &SweepOptions {
@@ -261,31 +251,24 @@ fn cmd_serve(args: &Args) -> i32 {
             workers: args.usize("workers", 8),
             ..Default::default()
         },
+    )
+    .map_err(|e| Error::io("start server", e))?;
+    println!(
+        "[serve] model '{}' ({} → {}) on http://{} backend={backend:?}",
+        cfg.name,
+        cfg.d_in(),
+        cfg.d_out(),
+        server.local_addr
     );
-    match server {
-        Ok(s) => {
-            println!(
-                "[serve] model '{}' ({} → {}) on http://{} backend={backend:?}",
-                cfg.name,
-                cfg.d_in(),
-                cfg.d_out(),
-                s.local_addr
-            );
-            // Serve until killed.
-            loop {
-                std::thread::sleep(Duration::from_secs(3600));
-            }
-        }
-        Err(e) => {
-            eprintln!("error starting server: {e}");
-            1
-        }
+    // Serve until killed.
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
     }
 }
 
-fn attach_xla(dir: &std::path::Path, base: &str) -> Result<XlaExecutor, String> {
+fn attach_xla(dir: &std::path::Path, base: &str) -> Result<XlaExecutor> {
     let manifest = Manifest::load(dir)?;
-    XlaExecutor::spawn(&manifest, base).map_err(|e| format!("{e:#}"))
+    XlaExecutor::spawn(&manifest, base).map_err(|e| Error::Runtime(format!("{e:#}")))
 }
 
 fn emit(tables: Vec<Table>, csv: bool) {
@@ -306,7 +289,7 @@ fn emit(tables: Vec<Table>, csv: bool) {
     }
 }
 
-fn cmd_bench(args: &Args) -> i32 {
+fn cmd_bench(args: &Args) -> Result<i32> {
     let scale = BenchScale::from_env();
     let csv = args.has("csv");
     let figure = args.get_or("figure", "all");
@@ -344,14 +327,14 @@ fn cmd_bench(args: &Args) -> i32 {
     } else {
         let tables = run(figure);
         if tables.is_empty() {
-            return 2;
+            return Ok(2);
         }
         emit(tables, csv);
     }
-    0
+    Ok(0)
 }
 
-fn cmd_autotune(args: &Args) -> i32 {
+fn cmd_autotune(args: &Args) -> Result<i32> {
     if args.positional.first().map(String::as_str) == Some("sweep") {
         return cmd_autotune_sweep(args);
     }
@@ -381,21 +364,12 @@ fn cmd_autotune(args: &Args) -> i32 {
         // A missing file starts a fresh table; an existing-but-unreadable
         // one is an error (silently clobbering measured entries is worse).
         let mut table = if std::path::Path::new(path).exists() {
-            match TuningTable::load(path) {
-                Ok(t) => t,
-                Err(e) => {
-                    eprintln!("error: existing tuning table {path} failed to load: {e}");
-                    return 1;
-                }
-            }
+            TuningTable::load(path)?
         } else {
             TuningTable::new()
         };
-        let entry = table.tune(k, s, stgemm::kernels::kernel_names(), &timer);
-        if let Err(e) = table.save(path) {
-            eprintln!("error saving tuning table: {e}");
-            return 1;
-        }
+        let entry = table.tune(k, s, stgemm::kernels::kernel_ids(), &timer);
+        table.save(path)?;
         println!(
             "[autotune] class (K={k}, s={s}): winner {} at {:.3} flops/cycle → {path} ({} classes)",
             entry.kernel,
@@ -403,21 +377,15 @@ fn cmd_autotune(args: &Args) -> i32 {
             table.len()
         );
     }
-    0
+    Ok(0)
 }
 
 /// `stgemm autotune sweep`: one run that measures every registry kernel
 /// for every distinct layer class of a model config, at every batch
 /// bucket, and persists the winners where `serve --tuning` finds them.
-fn cmd_autotune_sweep(args: &Args) -> i32 {
+fn cmd_autotune_sweep(args: &Args) -> Result<i32> {
     let cfg = match args.get("model") {
-        Some(path) => match ModelConfig::from_file(path) {
-            Ok(c) => c,
-            Err(e) => {
-                eprintln!("error: {e}");
-                return 1;
-            }
-        },
+        Some(path) => ModelConfig::from_file(path)?,
         None => {
             eprintln!("[autotune] no --model given; sweeping the default demo config");
             ModelConfig::default()
@@ -434,15 +402,7 @@ fn cmd_autotune_sweep(args: &Args) -> i32 {
     // starts empty. An existing-but-unreadable table is an error (silently
     // clobbering measured entries is worse).
     let mut table = match args.get("save") {
-        Some(path) if std::path::Path::new(path).exists() => {
-            match TuningTable::load(path) {
-                Ok(t) => t,
-                Err(e) => {
-                    eprintln!("error: existing tuning table {path} failed to load: {e}");
-                    return 1;
-                }
-            }
-        }
+        Some(path) if std::path::Path::new(path).exists() => TuningTable::load(path)?,
         _ => TuningTable::new(),
     };
     println!(
@@ -450,7 +410,7 @@ fn cmd_autotune_sweep(args: &Args) -> i32 {
         cfg.name,
         cfg.dims.len() - 1,
         buckets,
-        stgemm::kernels::kernel_names().len(),
+        stgemm::kernels::kernel_ids().len(),
         if opts.per_m {
             format!(
                 ", per-M splits beyond {:.0}% divergence",
@@ -463,11 +423,19 @@ fn cmd_autotune_sweep(args: &Args) -> i32 {
     let report = sweep_model_opts(
         &cfg,
         &buckets,
-        stgemm::kernels::kernel_names(),
+        stgemm::kernels::kernel_ids(),
         &timer,
         &mut table,
         &opts,
     );
+    if report.effective_divergence > opts.divergence_threshold {
+        println!(
+            "[autotune] divergence clamped: requested {:.1}%, measured variance \
+             floor {:.1}% across {reps} rep(s) — splits below the floor are noise",
+            opts.divergence_threshold * 100.0,
+            report.variance_floor * 100.0
+        );
+    }
     for (class, entry) in &report.winners {
         match class.m_bucket {
             Some(m) => println!(
@@ -483,20 +451,17 @@ fn cmd_autotune_sweep(args: &Args) -> i32 {
         }
     }
     if let Some(path) = args.get("save") {
-        if let Err(e) = table.save(path) {
-            eprintln!("error saving tuning table: {e}");
-            return 1;
-        }
+        table.save(path)?;
         println!(
             "[autotune] sweep: {} class(es) → {path} ({} total)",
             report.winners.len(),
             table.len()
         );
     }
-    0
+    Ok(0)
 }
 
-fn cmd_quantize(args: &Args) -> i32 {
+fn cmd_quantize(args: &Args) -> Result<i32> {
     use stgemm::model::serialize::{save, LayerData};
     use stgemm::ternary::quantize_absmean;
     let dims = args.usize_list("dims", &[256, 1024, 256]);
@@ -524,19 +489,12 @@ fn cmd_quantize(args: &Args) -> i32 {
             prelu_alpha: (i + 1 < dims.len() - 1).then_some(alpha),
         });
     }
-    match save(out, &layers) {
-        Ok(()) => {
-            println!("[quantize] wrote {out}");
-            0
-        }
-        Err(e) => {
-            eprintln!("error: {e}");
-            1
-        }
-    }
+    save(out, &layers)?;
+    println!("[quantize] wrote {out}");
+    Ok(0)
 }
 
-fn cmd_selftest(args: &Args) -> i32 {
+fn cmd_selftest(args: &Args) -> Result<i32> {
     let dir = args
         .get("artifacts")
         .map(std::path::PathBuf::from)
@@ -547,22 +505,25 @@ fn cmd_selftest(args: &Args) -> i32 {
         Ok(m) => m,
         Err(e) => {
             eprintln!("error: {e} (run `make artifacts` first)");
-            return 1;
+            return Ok(1);
         }
     };
     let variants = manifest.variants_of(base);
     if variants.is_empty() {
-        eprintln!("no variants named {base}_b* in manifest");
-        return 1;
+        return Err(Error::Config(format!(
+            "no variants named {base}_b* in manifest"
+        )));
     }
     // Build the native model from the artifact's own weight dumps; each
-    // layer's kernel is planner-selected for its (K, sparsity) class.
+    // layer's kernel is planner-selected for its (K, sparsity) class. All
+    // loading errors are typed and bubble to the CLI boundary — no panics
+    // on a missing or truncated dump.
     let planner = Planner::new();
     let v0 = variants[0];
     let mut layers = Vec::new();
     for (i, l) in v0.layers.iter().enumerate() {
-        let w = v0.load_weights(&manifest.dir, i).expect("weights");
-        let b = v0.load_bias(&manifest.dir, i).expect("bias");
+        let w = v0.load_weights(&manifest.dir, i)?;
+        let b = v0.load_bias(&manifest.dir, i)?;
         let layer = stgemm::model::TernaryLinear::planned(
             &planner,
             &w,
@@ -570,21 +531,21 @@ fn cmd_selftest(args: &Args) -> i32 {
             1.0,
             l.prelu_alpha,
             &PlanHints::default(),
-        )
-        .expect("layer");
+        )?;
         println!("  layer {i}: kernel {}", layer.kernel_name());
         layers.push(layer);
     }
-    let mlp = TernaryMlp::from_layers(base.to_string(), layers).expect("mlp");
-    let xla = XlaExecutor::spawn(&manifest, base).expect("xla");
+    let mlp = TernaryMlp::from_layers(base.to_string(), layers)?;
+    let xla = XlaExecutor::spawn(&manifest, base)
+        .map_err(|e| Error::Runtime(format!("{e:#}")))?;
     let engine = Engine::new(base, mlp).with_xla(xla);
 
     let mut failures = 0;
     for v in &variants {
-        let probe = v.load_probe_x(&manifest.dir).expect("probe x");
-        let want = v.load_probe_y(&manifest.dir).expect("probe y");
+        let probe = v.load_probe_x(&manifest.dir)?;
+        let want = v.load_probe_y(&manifest.dir)?;
         let x = Matrix::from_slice(v.batch, v.d_in, &probe);
-        let (native, xla_out, diff) = engine.cross_check(&x).expect("cross-check");
+        let (native, xla_out, diff) = engine.cross_check(&x)?;
         let want_m = Matrix::from_slice(v.batch, v.d_out, &want);
         let native_ok = native.allclose(&want_m, 1e-3);
         let xla_ok = xla_out.allclose(&want_m, 1e-3);
@@ -601,22 +562,18 @@ fn cmd_selftest(args: &Args) -> i32 {
     }
     if failures == 0 {
         println!("[selftest] all {} variants PASS", variants.len());
-        0
+        Ok(0)
     } else {
         eprintln!("[selftest] {failures} variant(s) FAILED");
-        1
+        Ok(1)
     }
 }
 
-fn cmd_loadgen(args: &Args) -> i32 {
+fn cmd_loadgen(args: &Args) -> Result<i32> {
     let addr_str = args.get_or("addr", "127.0.0.1:9000");
-    let addr: std::net::SocketAddr = match addr_str.parse() {
-        Ok(a) => a,
-        Err(e) => {
-            eprintln!("bad --addr: {e}");
-            return 2;
-        }
-    };
+    let addr: std::net::SocketAddr = addr_str
+        .parse()
+        .map_err(|e| Error::Config(format!("bad --addr '{addr_str}': {e}")))?;
     let gen = LoadGenerator {
         clients: args.usize("clients", 8),
         requests_per_client: args.usize("requests", 100),
@@ -630,5 +587,5 @@ fn cmd_loadgen(args: &Args) -> i32 {
     );
     let report = gen.run_http(addr);
     println!("{}", report.summary());
-    i32::from(report.errors > 0)
+    Ok(i32::from(report.errors > 0))
 }

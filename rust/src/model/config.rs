@@ -17,7 +17,9 @@
 //! the [`crate::plan::Planner`] (autotune table + paper heuristics). Set it
 //! only to pin an explicit registry kernel (benches, ablations).
 
+use crate::kernels::KernelId;
 use crate::util::json::Json;
+use crate::{Error, Result};
 
 /// Parsed model configuration.
 #[derive(Debug, Clone, PartialEq)]
@@ -31,8 +33,9 @@ pub struct ModelConfig {
     pub seed: u64,
     /// PReLU slope between layers (never after the last layer).
     pub prelu_alpha: f32,
-    /// Explicit registry kernel override; `None` = planner-selected.
-    pub kernel: Option<String>,
+    /// Explicit registry kernel override, resolved to a typed id at parse
+    /// time (the JSON stays name-keyed); `None` = planner-selected.
+    pub kernel: Option<KernelId>,
     /// Batch sizes the server pads to (ascending).
     pub batch_buckets: Vec<usize>,
     /// Worker threads for row-partitioned layer execution (1 = sequential).
@@ -56,19 +59,20 @@ impl Default for ModelConfig {
 
 impl ModelConfig {
     /// Parse from a JSON string.
-    pub fn from_json(text: &str) -> Result<ModelConfig, String> {
-        let v = Json::parse(text).map_err(|e| e.to_string())?;
+    pub fn from_json(text: &str) -> Result<ModelConfig> {
+        let bad = |msg: &str| Error::Config(msg.to_string());
+        let v = Json::parse(text).map_err(|e| Error::Config(e.to_string()))?;
         let d = ModelConfig::default();
         let dims = match v.get("dims") {
             Some(Json::Arr(items)) => items
                 .iter()
-                .map(|i| i.as_usize().ok_or_else(|| "dims must be integers".to_string()))
-                .collect::<Result<Vec<_>, _>>()?,
+                .map(|i| i.as_usize().ok_or_else(|| bad("dims must be integers")))
+                .collect::<Result<Vec<_>>>()?,
             None => d.dims,
-            _ => return Err("dims must be an array".into()),
+            _ => return Err(bad("dims must be an array")),
         };
         if dims.len() < 2 {
-            return Err("dims needs at least [d_in, d_out]".into());
+            return Err(bad("dims needs at least [d_in, d_out]"));
         }
         let batch_buckets = match v.get("batch_buckets") {
             Some(Json::Arr(items)) => {
@@ -77,43 +81,43 @@ impl ModelConfig {
                     .map(|i| {
                         i.as_usize()
                             .filter(|&x| x > 0)
-                            .ok_or_else(|| "batch_buckets must be positive integers".to_string())
+                            .ok_or_else(|| bad("batch_buckets must be positive integers"))
                     })
-                    .collect::<Result<Vec<_>, _>>()?;
+                    .collect::<Result<Vec<_>>>()?;
                 b.sort_unstable();
                 b.dedup();
                 if b.is_empty() {
-                    return Err("batch_buckets must be non-empty".into());
+                    return Err(bad("batch_buckets must be non-empty"));
                 }
                 b
             }
             None => d.batch_buckets,
-            _ => return Err("batch_buckets must be an array".into()),
+            _ => return Err(bad("batch_buckets must be an array")),
         };
         let sparsity = v
             .get("sparsity")
-            .map(|s| s.as_f64().ok_or("sparsity must be a number"))
+            .map(|s| s.as_f64().ok_or_else(|| bad("sparsity must be a number")))
             .transpose()?
             .map(|s| s as f32)
             .unwrap_or(d.sparsity);
         if !(0.0..=1.0).contains(&sparsity) {
-            return Err("sparsity must be in [0,1]".into());
+            return Err(bad("sparsity must be in [0,1]"));
         }
-        let kernel = v
-            .get("kernel")
-            .map(|s| s.as_str().ok_or("kernel must be a string"))
-            .transpose()?
-            .map(|s| s.to_string());
-        if let Some(k) = &kernel {
-            if !crate::kernels::kernel_names().contains(&k.as_str()) {
-                return Err(format!("unknown kernel '{k}'"));
+        // The kernel key stays a registry *name* in JSON but resolves to a
+        // typed id here — an unknown name fails the parse with
+        // `Error::UnknownKernel`.
+        let kernel = match v.get("kernel") {
+            Some(k) => {
+                let name = k.as_str().ok_or_else(|| bad("kernel must be a string"))?;
+                Some(name.parse::<KernelId>()?)
             }
-        }
+            None => None,
+        };
         let threads = match v.get("threads") {
             Some(t) => t
                 .as_usize()
                 .filter(|&t| t > 0)
-                .ok_or("threads must be a positive integer")?,
+                .ok_or_else(|| bad("threads must be a positive integer"))?,
             None => d.threads,
         };
         Ok(ModelConfig {
@@ -126,13 +130,13 @@ impl ModelConfig {
             sparsity,
             seed: v
                 .get("seed")
-                .map(|s| s.as_f64().ok_or("seed must be a number"))
+                .map(|s| s.as_f64().ok_or_else(|| bad("seed must be a number")))
                 .transpose()?
                 .map(|s| s as u64)
                 .unwrap_or(d.seed),
             prelu_alpha: v
                 .get("prelu_alpha")
-                .map(|s| s.as_f64().ok_or("prelu_alpha must be a number"))
+                .map(|s| s.as_f64().ok_or_else(|| bad("prelu_alpha must be a number")))
                 .transpose()?
                 .map(|s| s as f32)
                 .unwrap_or(d.prelu_alpha),
@@ -143,9 +147,9 @@ impl ModelConfig {
     }
 
     /// Load from a file path.
-    pub fn from_file(path: &str) -> Result<ModelConfig, String> {
-        let text =
-            std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    pub fn from_file(path: &str) -> Result<ModelConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::io(format!("read {path}"), e))?;
         Self::from_json(&text)
     }
 
@@ -163,7 +167,7 @@ impl ModelConfig {
             ("prelu_alpha", Json::num(self.prelu_alpha as f64)),
         ];
         if let Some(k) = &self.kernel {
-            fields.push(("kernel", Json::str(k.clone())));
+            fields.push(("kernel", Json::str(k.name())));
         }
         fields.push((
             "batch_buckets",
@@ -209,7 +213,7 @@ mod tests {
             r#"{"dims": [8, 4], "kernel": "base_tcsc", "threads": 4}"#,
         )
         .unwrap();
-        assert_eq!(c.kernel.as_deref(), Some("base_tcsc"));
+        assert_eq!(c.kernel, Some(KernelId::BaseTcsc));
         assert_eq!(c.threads, 4);
         let back = ModelConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back, c);
@@ -220,7 +224,10 @@ mod tests {
         assert!(ModelConfig::from_json("{").is_err());
         assert!(ModelConfig::from_json(r#"{"dims": [8]}"#).is_err());
         assert!(ModelConfig::from_json(r#"{"sparsity": 1.5}"#).is_err());
-        assert!(ModelConfig::from_json(r#"{"kernel": "nope"}"#).is_err());
+        assert!(matches!(
+            ModelConfig::from_json(r#"{"kernel": "nope"}"#),
+            Err(Error::UnknownKernel(_))
+        ));
         assert!(ModelConfig::from_json(r#"{"batch_buckets": []}"#).is_err());
         assert!(ModelConfig::from_json(r#"{"batch_buckets": [0]}"#).is_err());
         assert!(ModelConfig::from_json(r#"{"threads": 0}"#).is_err());

@@ -3,9 +3,11 @@
 //! (the explicit-override escape hatch benches use) or a handle into the
 //! shared M-bucketed [`PlanCache`] (the serving path).
 
+use crate::kernels::KernelId;
 use crate::plan::{Epilogue, GemmPlan, LayerId, LayerSpec, PlanCache, PlanHints, Planner};
 use crate::tensor::Matrix;
 use crate::ternary::TernaryMatrix;
+use crate::Result;
 use std::sync::Arc;
 
 enum Exec {
@@ -34,7 +36,7 @@ impl TernaryLinear {
         scale: f32,
         prelu_alpha: Option<f32>,
         hints: &PlanHints,
-    ) -> Result<TernaryLinear, String> {
+    ) -> Result<TernaryLinear> {
         let plan = planner.plan(
             w,
             Default::default(),
@@ -54,8 +56,8 @@ impl TernaryLinear {
         bias: Vec<f32>,
         scale: f32,
         prelu_alpha: Option<f32>,
-        kernel: Option<String>,
-    ) -> Result<TernaryLinear, String> {
+        kernel: Option<KernelId>,
+    ) -> Result<TernaryLinear> {
         let mut spec = LayerSpec::new(w, Epilogue::new(bias, scale, prelu_alpha));
         spec.kernel = kernel;
         let id = cache.register(spec)?;
@@ -68,24 +70,26 @@ impl TernaryLinear {
     }
 
     /// Build from dense ternary weights with an **explicit** registry
-    /// kernel — the override path benches and ablations use. When
-    /// `prelu_alpha` is set, the kernel supports fusion (the SIMD family)
-    /// and no scale intervenes, activation fuses into the GEMM; otherwise
-    /// the plan's epilogue applies it after.
+    /// kernel name — the override path benches and ablations use (the
+    /// name resolves to a typed [`KernelId`] here; unknown names fail
+    /// with [`crate::Error::UnknownKernel`]). When `prelu_alpha` is set,
+    /// the kernel supports fusion (the SIMD family) and no scale
+    /// intervenes, activation fuses into the GEMM; otherwise the plan's
+    /// epilogue applies it after.
     pub fn new(
         kernel: &str,
         w: &TernaryMatrix,
         bias: Vec<f32>,
         scale: f32,
         prelu_alpha: Option<f32>,
-    ) -> Result<TernaryLinear, String> {
+    ) -> Result<TernaryLinear> {
         Self::planned(
             &Planner::new(),
             w,
             bias,
             scale,
             prelu_alpha,
-            &PlanHints::with_kernel(kernel),
+            &PlanHints::with_kernel(kernel.parse::<KernelId>()?),
         )
     }
 
@@ -122,7 +126,7 @@ impl TernaryLinear {
     pub fn kernel_name(&self) -> String {
         match &self.exec {
             Exec::Pinned(p) => p.kernel_name().to_string(),
-            Exec::Cached { cache, id } => cache.kernel_for(*id, 1),
+            Exec::Cached { cache, id } => cache.kernel_for(*id, 1).name().to_string(),
         }
     }
 

@@ -12,6 +12,7 @@ use crate::plan::{PlanCache, PlanCacheConfig, Planner};
 use crate::tensor::Matrix;
 use crate::ternary::TernaryMatrix;
 use crate::util::rng::Rng;
+use crate::{Error, Result};
 use std::sync::Arc;
 
 /// A stack of ternary linear layers with PReLU between them.
@@ -27,7 +28,7 @@ impl TernaryMlp {
     /// Build from a config with a throwaway [`Planner`] (no tuning table).
     /// Serving code should prefer [`TernaryMlp::planned`] with a shared
     /// planner so layers benefit from measured tuning entries.
-    pub fn from_config(cfg: &ModelConfig) -> Result<TernaryMlp, String> {
+    pub fn from_config(cfg: &ModelConfig) -> Result<TernaryMlp> {
         Self::planned(cfg, &Arc::new(Planner::new()))
     }
 
@@ -39,7 +40,7 @@ impl TernaryMlp {
     /// refined by the cache's online top-2 race on first traffic in an
     /// untuned class. The config's `threads` seeds the cache's (runtime
     /// adjustable) worker ceiling.
-    pub fn planned(cfg: &ModelConfig, planner: &Arc<Planner>) -> Result<TernaryMlp, String> {
+    pub fn planned(cfg: &ModelConfig, planner: &Arc<Planner>) -> Result<TernaryMlp> {
         let nlayers = cfg.dims.len() - 1;
         let cache = Arc::new(PlanCache::new(
             Arc::clone(planner),
@@ -65,7 +66,7 @@ impl TernaryMlp {
                 bias,
                 1.0,
                 alpha,
-                cfg.kernel.clone(),
+                cfg.kernel,
             )?);
         }
         Ok(TernaryMlp {
@@ -76,17 +77,17 @@ impl TernaryMlp {
     }
 
     /// Build from explicit layers (the artifact loader uses this).
-    pub fn from_layers(name: String, layers: Vec<TernaryLinear>) -> Result<TernaryMlp, String> {
+    pub fn from_layers(name: String, layers: Vec<TernaryLinear>) -> Result<TernaryMlp> {
         if layers.is_empty() {
-            return Err("model needs at least one layer".into());
+            return Err(Error::Config("model needs at least one layer".into()));
         }
         for pair in layers.windows(2) {
             if pair[0].n() != pair[1].k() {
-                return Err(format!(
+                return Err(Error::Shape(format!(
                     "layer dim mismatch: {} out vs {} in",
                     pair[0].n(),
                     pair[1].k()
-                ));
+                )));
             }
         }
         Ok(TernaryMlp {
@@ -201,7 +202,7 @@ mod tests {
         let x = Matrix::random(5, 32, 2);
         let reference = TernaryMlp::from_config(&c).unwrap().forward(&x);
         for kernel in ["base_tcsc", "simd_vertical", "unrolled_tcsc_12", "dense_gemm"] {
-            c.kernel = Some(kernel.to_string());
+            c.kernel = Some(kernel.parse().unwrap());
             let got = TernaryMlp::from_config(&c).unwrap().forward(&x);
             assert!(got.allclose(&reference, 1e-3), "kernel {kernel}");
         }
@@ -223,7 +224,7 @@ mod tests {
             table.insert(
                 ShapeClass::of(k, 0.25),
                 TuneEntry {
-                    kernel: "unrolled_tcsc_12".into(),
+                    kernel: crate::kernels::KernelId::UnrolledTcsc12,
                     flops_per_cycle: 1.0,
                 },
             );
@@ -235,7 +236,7 @@ mod tests {
         }
         // And threading from the config still matches sequential output
         // (kernel pinned so the comparison is plan-for-plan bitwise).
-        c.kernel = Some("interleaved_blocked_tcsc".to_string());
+        c.kernel = Some(crate::kernels::KernelId::InterleavedBlockedTcsc);
         c.threads = 4;
         let x = Matrix::random(9, 32, 5);
         let seq = TernaryMlp::from_config(&cfg()).unwrap().forward(&x);

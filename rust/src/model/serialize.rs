@@ -13,6 +13,7 @@
 //! files instead (simpler for Python), loaded by [`crate::runtime`].
 
 use crate::ternary::TernaryMatrix;
+use crate::{Error, Result};
 use std::io::{Read, Write};
 
 /// One serializable layer.
@@ -59,36 +60,36 @@ struct Reader<'a> {
 }
 
 impl<'a> Reader<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         if self.pos + n > self.buf.len() {
-            return Err(format!(
+            return Err(Error::Format(format!(
                 "truncated stw file: need {n} bytes at offset {}",
                 self.pos
-            ));
+            )));
         }
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
     }
 
-    fn u32(&mut self) -> Result<u32, String> {
+    fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn f32(&mut self) -> Result<f32, String> {
+    fn f32(&mut self) -> Result<f32> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 }
 
 /// Deserialize layers from bytes.
-pub fn from_bytes(buf: &[u8]) -> Result<Vec<LayerData>, String> {
+pub fn from_bytes(buf: &[u8]) -> Result<Vec<LayerData>> {
     let mut r = Reader { buf, pos: 0 };
     if r.take(4)? != MAGIC {
-        return Err("not an STW1 file".into());
+        return Err(Error::Format("not an STW1 file".into()));
     }
     let nlayers = r.u32()? as usize;
     if nlayers > 1024 {
-        return Err(format!("implausible layer count {nlayers}"));
+        return Err(Error::Format(format!("implausible layer count {nlayers}")));
     }
     let mut layers = Vec::with_capacity(nlayers);
     for _ in 0..nlayers {
@@ -100,7 +101,7 @@ pub fn from_bytes(buf: &[u8]) -> Result<Vec<LayerData>, String> {
         let raw = r.take(k * n)?;
         let entries: Vec<i8> = raw.iter().map(|&b| b as i8).collect();
         if entries.iter().any(|&v| !(-1..=1).contains(&v)) {
-            return Err("corrupt weights: non-ternary entry".into());
+            return Err(Error::Format("corrupt weights: non-ternary entry".into()));
         }
         let weights = TernaryMatrix::from_entries(k, n, &entries);
         let mut bias = Vec::with_capacity(n);
@@ -115,24 +116,26 @@ pub fn from_bytes(buf: &[u8]) -> Result<Vec<LayerData>, String> {
         });
     }
     if r.pos != buf.len() {
-        return Err("trailing bytes after last layer".into());
+        return Err(Error::Format("trailing bytes after last layer".into()));
     }
     Ok(layers)
 }
 
 /// Write layers to a file.
-pub fn save(path: &str, layers: &[LayerData]) -> Result<(), String> {
-    let mut f = std::fs::File::create(path).map_err(|e| format!("create {path}: {e}"))?;
+pub fn save(path: &str, layers: &[LayerData]) -> Result<()> {
+    let mut f =
+        std::fs::File::create(path).map_err(|e| Error::io(format!("create {path}"), e))?;
     f.write_all(&to_bytes(layers))
-        .map_err(|e| format!("write {path}: {e}"))
+        .map_err(|e| Error::io(format!("write {path}"), e))
 }
 
 /// Read layers from a file.
-pub fn load(path: &str) -> Result<Vec<LayerData>, String> {
-    let mut f = std::fs::File::open(path).map_err(|e| format!("open {path}: {e}"))?;
+pub fn load(path: &str) -> Result<Vec<LayerData>> {
+    let mut f =
+        std::fs::File::open(path).map_err(|e| Error::io(format!("open {path}"), e))?;
     let mut buf = Vec::new();
     f.read_to_end(&mut buf)
-        .map_err(|e| format!("read {path}: {e}"))?;
+        .map_err(|e| Error::io(format!("read {path}"), e))?;
     from_bytes(&buf)
 }
 

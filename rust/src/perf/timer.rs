@@ -93,7 +93,16 @@ impl CycleTimer {
     }
 
     /// Time `f`, returning the median measurement across reps.
-    pub fn run<F: FnMut()>(&self, mut f: F) -> Measurement {
+    pub fn run<F: FnMut()>(&self, f: F) -> Measurement {
+        self.run_stats(f).0
+    }
+
+    /// Time `f`, returning the median measurement across reps **and** the
+    /// coefficient of variation (sample σ/μ) of the per-rep cycle counts
+    /// — the run-to-run noise signal `autotune sweep` calibrates its
+    /// per-M divergence threshold against. The CV is 0 for a single rep
+    /// (no spread to measure).
+    pub fn run_stats<F: FnMut()>(&self, mut f: F) -> (Measurement, f64) {
         for _ in 0..self.warmup {
             f();
         }
@@ -107,12 +116,23 @@ impl CycleTimer {
             cycles.push((c1.wrapping_sub(c0)) as f64);
             secs.push(t0.elapsed().as_secs_f64());
         }
+        let mean = cycles.iter().sum::<f64>() / cycles.len() as f64;
+        let cv = if cycles.len() > 1 && mean > 0.0 {
+            let var = cycles.iter().map(|c| (c - mean).powi(2)).sum::<f64>()
+                / (cycles.len() - 1) as f64;
+            var.sqrt() / mean
+        } else {
+            0.0
+        };
         cycles.sort_by(|a, b| a.partial_cmp(b).unwrap());
         secs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        Measurement {
-            cycles: cycles[cycles.len() / 2],
-            seconds: secs[secs.len() / 2],
-        }
+        (
+            Measurement {
+                cycles: cycles[cycles.len() / 2],
+                seconds: secs[secs.len() / 2],
+            },
+            cv,
+        )
     }
 }
 
@@ -146,6 +166,27 @@ mod tests {
         std::hint::black_box(acc);
         assert!(m.cycles > 1000.0, "100k sqrts must cost >1k cycles");
         assert!(m.seconds > 0.0);
+    }
+
+    #[test]
+    fn run_stats_reports_spread() {
+        // Multi-rep runs report a finite, non-negative CV; a single rep
+        // has no spread to measure.
+        let timer = CycleTimer::new(0, 5);
+        let mut acc = 0.0f64;
+        let (m, cv) = timer.run_stats(|| {
+            for i in 0..10_000 {
+                acc += (i as f64).sqrt();
+            }
+        });
+        std::hint::black_box(acc);
+        assert!(m.cycles > 0.0);
+        assert!(cv.is_finite() && cv >= 0.0, "cv={cv}");
+        let single = CycleTimer::new(0, 1);
+        let (_, cv1) = single.run_stats(|| {
+            acc += 1.0;
+        });
+        assert_eq!(cv1, 0.0);
     }
 
     #[test]

@@ -14,24 +14,30 @@
 //! so the load-aware coordinator can re-size fan-out without touching
 //! existing plans.
 //!
-//! Kernel choice per layer: the explicit override if the spec pins one,
-//! else the shared [`Planner`]'s tuning table (M-aware entries first,
-//! then the M-agnostic fallback), else — uniquely to this layer of the
-//! stack — an **online top-2 race**: the first real batch of an untuned
-//! (K, sparsity, M-bucket) class runs both paper-candidate kernels,
-//! times them, and records the winner in the shared table **under the
-//! M-aware class**, so every other layer and engine skips the race for
-//! that bucket while other buckets still get their own race — a kernel
-//! that wins at M=1 is never silently locked in for M=64.
+//! Kernel choice per layer: the explicit [`KernelId`] override if the
+//! spec pins one, else the shared [`Planner`]'s tuning table (M-aware
+//! entries first, then the M-agnostic fallback), else — uniquely to this
+//! layer of the stack — an **online top-2 race**: the first real batch of
+//! an untuned (K, sparsity, M-bucket) class runs both paper-candidate
+//! kernels, times them, and records the winner in the shared table
+//! **under the M-aware class**, so every other layer and engine skips the
+//! race for that bucket while other buckets still get their own race — a
+//! kernel that wins at M=1 is never silently locked in for M=64.
+//!
+//! Everything here dispatches on typed [`KernelId`]s: a tuning entry
+//! naming a kernel the registry doesn't know is unrepresentable, so the
+//! PR-2-era "poisoned table entry" failure mode (and its heuristic
+//! fallback on the serving path) is gone by construction.
 
 use crate::autotune::{ShapeClass, TuneEntry};
-use crate::kernels::{prepare_kernel, GemmScratch, KernelParams, PreparedGemm};
+use crate::kernels::{GemmScratch, KernelId, KernelParams, PreparedGemm};
 use crate::perf::timer::CycleTimer;
 use crate::plan::gemm_plan::{Epilogue, GemmPlan};
 use crate::plan::partition::RowPartition;
-use crate::plan::planner::{heuristic_kernel, heuristic_top2, Planner};
+use crate::plan::planner::{heuristic_top2, Planner};
 use crate::tensor::Matrix;
 use crate::ternary::TernaryMatrix;
+use crate::{Error, Result};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -53,7 +59,7 @@ pub struct LayerSpec {
     pub params: KernelParams,
     pub epilogue: Epilogue,
     /// Explicit registry kernel override; `None` = table/heuristic/race.
-    pub kernel: Option<String>,
+    pub kernel: Option<KernelId>,
     /// Minimum rows per parallel chunk (see [`crate::plan::RowPartition`]).
     pub min_rows_per_chunk: usize,
 }
@@ -110,11 +116,11 @@ pub struct CacheSnapshot {
 /// (M-bucket, threads) → plan.
 type PlanMap = BTreeMap<(usize, usize), Arc<GemmPlan>>;
 
-/// Kernel name → prepared format. The expensive part of a plan is the
+/// Kernel → prepared format. The expensive part of a plan is the
 /// sparse-format construction, which depends only on (weights, params,
 /// kernel) — never on the M-bucket or thread count — so every plan key of
 /// a layer shares one prepared GEMM per kernel.
-type GemmMap = BTreeMap<String, Arc<dyn PreparedGemm>>;
+type GemmMap = BTreeMap<KernelId, Arc<dyn PreparedGemm>>;
 
 struct CachedLayer {
     spec: LayerSpec,
@@ -158,25 +164,19 @@ impl PlanCache {
 
     /// Register a layer; plans are built lazily per (M-bucket, threads).
     ///
-    /// Everything `prepare_kernel` could reject is validated here, so a
+    /// Everything a kernel build could reject is validated here, so a
     /// registered layer's lazy builds cannot fail mid-traffic (the batch
-    /// loop has no caller left to surface an error to).
-    pub fn register(&self, spec: LayerSpec) -> Result<LayerId, String> {
+    /// loop has no caller left to surface an error to). Kernel identity is
+    /// typed — an unknown kernel cannot reach this point.
+    pub fn register(&self, spec: LayerSpec) -> Result<LayerId> {
         if spec.epilogue.bias.len() != spec.weights.n() {
-            return Err(format!(
+            return Err(Error::Shape(format!(
                 "bias length {} != N {}",
                 spec.epilogue.bias.len(),
                 spec.weights.n()
-            ));
+            )));
         }
-        if let Some(k) = &spec.kernel {
-            if !crate::kernels::kernel_names().contains(&k.as_str()) {
-                return Err(format!("unknown kernel '{k}'"));
-            }
-        }
-        if spec.params.group == Some(0) {
-            return Err("interleave group must be >= 1".into());
-        }
+        spec.params.validate()?;
         let mut layers = self.layers.write().unwrap_or_else(|e| e.into_inner());
         layers.push(Arc::new(CachedLayer {
             spec,
@@ -242,14 +242,14 @@ impl PlanCache {
     /// bucket first, then the M-agnostic fallback), else the paper
     /// heuristic. (The online race may still overturn the heuristic on
     /// first traffic in that bucket.)
-    pub fn kernel_for(&self, id: LayerId, m: usize) -> String {
+    pub fn kernel_for(&self, id: LayerId, m: usize) -> KernelId {
         let layer = self.layer(id);
         self.kernel_for_spec(&layer.spec, m_bucket(m))
     }
 
-    fn kernel_for_spec(&self, spec: &LayerSpec, bucket: usize) -> String {
-        match &spec.kernel {
-            Some(k) => k.clone(),
+    fn kernel_for_spec(&self, spec: &LayerSpec, bucket: usize) -> KernelId {
+        match spec.kernel {
+            Some(k) => k,
             None => self.planner.select_kernel(
                 spec.weights.k(),
                 spec.weights.density() as f32,
@@ -269,11 +269,11 @@ impl PlanCache {
     fn prepared_gemm(
         &self,
         layer: &CachedLayer,
-        kernel: &str,
-    ) -> Result<Arc<dyn PreparedGemm>, String> {
+        kernel: KernelId,
+    ) -> Result<Arc<dyn PreparedGemm>> {
         let cached = {
             let gemms = layer.gemms.lock().unwrap_or_else(|e| e.into_inner());
-            gemms.get(kernel).cloned()
+            gemms.get(&kernel).cloned()
         };
         if let Some(gemm) = cached {
             return Ok(gemm);
@@ -285,12 +285,12 @@ impl PlanCache {
             ..layer.spec.params
         };
         let gemm: Arc<dyn PreparedGemm> =
-            prepare_kernel(kernel, &layer.spec.weights, kparams)?.into();
+            kernel.prepare(&layer.spec.weights, kparams)?.into();
         Ok(layer
             .gemms
             .lock()
             .unwrap_or_else(|e| e.into_inner())
-            .entry(kernel.to_string())
+            .entry(kernel)
             .or_insert(gemm)
             .clone())
     }
@@ -303,8 +303,8 @@ impl PlanCache {
         layer: &CachedLayer,
         bucket: usize,
         threads: usize,
-        kernel: &str,
-    ) -> Result<Arc<GemmPlan>, String> {
+        kernel: KernelId,
+    ) -> Result<Arc<GemmPlan>> {
         let gemm = self.prepared_gemm(layer, kernel)?;
         let threads = threads.max(1);
         let partition = RowPartition::new(threads, layer.spec.min_rows_per_chunk);
@@ -329,30 +329,18 @@ impl PlanCache {
         }))
     }
 
-    /// Build with the spec/table/heuristic kernel choice; if a
-    /// table-selected kernel fails to prepare (a poisoned entry must not
-    /// take the serving path down mid-traffic), fall back to the paper
-    /// heuristic. Explicit spec overrides stay hard errors.
+    /// Build with the spec/table/heuristic kernel choice. With typed
+    /// kernel ids a table entry can never name a missing kernel, and
+    /// params were validated at registration — so unlike the PR-2 string
+    /// era there is no "poisoned entry" fallback path here.
     fn build_auto(
         &self,
         layer: &CachedLayer,
         bucket: usize,
         threads: usize,
-    ) -> Result<Arc<GemmPlan>, String> {
-        let spec = &layer.spec;
-        let kernel = self.kernel_for_spec(spec, bucket);
-        match self.build_plan(layer, bucket, threads, &kernel) {
-            Ok(plan) => Ok(plan),
-            Err(_) if spec.kernel.is_none() => {
-                let fallback = heuristic_kernel(
-                    spec.weights.k(),
-                    spec.weights.density() as f32,
-                    spec.epilogue.fusible_prelu().is_some(),
-                );
-                self.build_plan(layer, bucket, threads, fallback)
-            }
-            Err(e) => Err(e),
-        }
+    ) -> Result<Arc<GemmPlan>> {
+        let kernel = self.kernel_for_spec(&layer.spec, bucket);
+        self.build_plan(layer, bucket, threads, kernel)
     }
 
     /// Time both top-2 candidates on the live batch, record the winner in
@@ -365,7 +353,7 @@ impl PlanCache {
         bucket: usize,
         threads: usize,
         x: &Matrix,
-    ) -> Result<Arc<GemmPlan>, String> {
+    ) -> Result<Arc<GemmPlan>> {
         self.races.fetch_add(1, Ordering::Relaxed);
         let spec = &layer.spec;
         let k = spec.weights.k();
@@ -379,7 +367,7 @@ impl PlanCache {
         let meas_a = timer.run(|| plan_a.run(x, &mut y));
         let meas_b = timer.run(|| plan_b.run(x, &mut y));
         let flops = plan_a.flops(x.rows());
-        let (winner, meas, name) = if meas_a.cycles <= meas_b.cycles {
+        let (winner, meas, kernel) = if meas_a.cycles <= meas_b.cycles {
             (plan_a, meas_a, a)
         } else {
             (plan_b, meas_b, b)
@@ -387,7 +375,7 @@ impl PlanCache {
         self.planner.record(
             ShapeClass::of_m(k, sparsity, bucket),
             TuneEntry {
-                kernel: name.to_string(),
+                kernel,
                 flops_per_cycle: meas.flops_per_cycle(flops),
             },
         );
@@ -396,7 +384,7 @@ impl PlanCache {
 
     /// The plan for batch size `m` at the current thread ceiling, building
     /// it (without racing — there is no live batch to time) on a miss.
-    pub fn plan_for(&self, id: LayerId, m: usize) -> Result<Arc<GemmPlan>, String> {
+    pub fn plan_for(&self, id: LayerId, m: usize) -> Result<Arc<GemmPlan>> {
         let layer = self.layer(id);
         let bucket = m_bucket(m);
         let threads = self.effective_threads(bucket);
@@ -419,7 +407,7 @@ impl PlanCache {
     /// Run layer `id` on `x` into `y` through the cached plan for `x`'s
     /// M-bucket, building (and, for untuned auto classes, racing) on the
     /// first sighting of the bucket.
-    pub fn run(&self, id: LayerId, x: &Matrix, y: &mut Matrix) -> Result<(), String> {
+    pub fn run(&self, id: LayerId, x: &Matrix, y: &mut Matrix) -> Result<()> {
         let layer = self.layer(id);
         let bucket = m_bucket(x.rows());
         let threads = self.effective_threads(bucket);
@@ -456,7 +444,7 @@ impl PlanCache {
     }
 
     /// Allocating convenience: run into a fresh M×N matrix.
-    pub fn forward(&self, id: LayerId, x: &Matrix) -> Result<Matrix, String> {
+    pub fn forward(&self, id: LayerId, x: &Matrix) -> Result<Matrix> {
         let mut y = Matrix::zeros(x.rows(), self.n(id));
         self.run(id, x, &mut y)?;
         Ok(y)
@@ -465,7 +453,7 @@ impl PlanCache {
     /// Pre-build plans for every layer at the given batch buckets and the
     /// current thread ceiling (serve startup with a measured table: first
     /// traffic then allocates nothing and races nothing).
-    pub fn warm(&self, buckets: &[usize]) -> Result<(), String> {
+    pub fn warm(&self, buckets: &[usize]) -> Result<()> {
         let n = self.num_layers();
         for i in 0..n {
             for &m in buckets {
@@ -501,11 +489,7 @@ impl PlanCache {
     /// online top-2 race, and a pre-built heuristic plan would silently
     /// skip it. Restores the thread ceiling it found; startup-time only
     /// (the temporary ceiling changes are visible to concurrent traffic).
-    pub fn warm_settled(
-        &self,
-        buckets: &[usize],
-        thread_steps: &[usize],
-    ) -> Result<(), String> {
+    pub fn warm_settled(&self, buckets: &[usize], thread_steps: &[usize]) -> Result<()> {
         let saved = self.threads();
         let n = self.num_layers();
         for &step in thread_steps {
@@ -553,7 +537,7 @@ impl PlanCache {
     /// always finds a plan, and only genuinely changed winners pay a new
     /// format build (shared formats make unchanged keys shell-cheap).
     /// This is the background re-tune hook's path.
-    pub fn rebuild(&self) -> Result<(), String> {
+    pub fn rebuild(&self) -> Result<()> {
         let layers: Vec<Arc<CachedLayer>> = self
             .layers
             .read()
@@ -650,11 +634,11 @@ mod tests {
                 weights: w.clone(),
                 params: KernelParams::default(),
                 epilogue: Epilogue::with_bias(bias.clone()),
-                kernel: Some("base_tcsc".into()),
+                kernel: Some(KernelId::BaseTcsc),
                 min_rows_per_chunk: 2,
             })
             .unwrap();
-        assert_eq!(cache.kernel_for(id, 8), "base_tcsc");
+        assert_eq!(cache.kernel_for(id, 8), KernelId::BaseTcsc);
         let x = Matrix::random(8, 64, 8);
         let y = cache.forward(id, &x).unwrap();
         assert!(y.allclose(&dense_oracle(&x, &w, &bias), 1e-4));
@@ -683,8 +667,8 @@ mod tests {
         let entry = planner
             .lookup_entry(64, 0.25, 8)
             .expect("race records winner");
-        let [a, b] = heuristic_top2(64, 0.25, 8, false);
-        assert!([a, b].contains(&entry.kernel.as_str()), "{}", entry.kernel);
+        let candidates = heuristic_top2(64, 0.25, 8, false);
+        assert!(candidates.contains(&entry.kernel), "{}", entry.kernel);
         assert_eq!(cache.snapshot().races, 1);
         // A second layer in the same class (same bucket) reuses the entry
         // — no new race.
@@ -769,7 +753,7 @@ mod tests {
             TernaryMatrix::random(32, 8, 0.5, 1),
             Epilogue::with_bias(vec![0.0; 8]),
         );
-        pinned.kernel = Some("base_tcsc".into());
+        pinned.kernel = Some(KernelId::BaseTcsc);
         cache.register(pinned).unwrap();
         let auto_id = cache
             .register(LayerSpec::new(
@@ -831,14 +815,14 @@ mod tests {
         table.insert(
             ShapeClass::of(64, 0.25),
             TuneEntry {
-                kernel: "interleaved_blocked_tcsc".into(),
+                kernel: KernelId::InterleavedBlockedTcsc,
                 flops_per_cycle: 2.0,
             },
         );
         table.insert(
             ShapeClass::of_m(64, 0.25, 1),
             TuneEntry {
-                kernel: "unrolled_tcsc_k4_m4".into(),
+                kernel: KernelId::UnrolledTcscK4M4,
                 flops_per_cycle: 3.0,
             },
         );
@@ -856,8 +840,8 @@ mod tests {
                 Epilogue::with_bias(vec![0.0; 8]),
             ))
             .unwrap();
-        assert_eq!(cache.kernel_for(id, 1), "unrolled_tcsc_k4_m4");
-        assert_eq!(cache.kernel_for(id, 8), "interleaved_blocked_tcsc");
+        assert_eq!(cache.kernel_for(id, 1), KernelId::UnrolledTcscK4M4);
+        assert_eq!(cache.kernel_for(id, 8), KernelId::InterleavedBlockedTcsc);
         assert_eq!(
             cache.plan_for(id, 1).unwrap().kernel_name(),
             "unrolled_tcsc_k4_m4"
@@ -890,12 +874,15 @@ mod tests {
             .unwrap();
         let x = Matrix::random(8, 64, 6);
         cache.forward(id, &x).unwrap();
-        assert_eq!(cache.plan_for(id, 8).unwrap().kernel_name(), "interleaved_blocked_tcsc");
+        assert_eq!(
+            cache.plan_for(id, 8).unwrap().kernel_name(),
+            "interleaved_blocked_tcsc"
+        );
         // A re-tune records a new winner; rebuild swaps it in, same keys.
         planner.record(
             ShapeClass::of(64, 0.25),
             TuneEntry {
-                kernel: "unrolled_tcsc_12".into(),
+                kernel: KernelId::UnrolledTcsc12,
                 flops_per_cycle: 9.0,
             },
         );
@@ -908,52 +895,22 @@ mod tests {
     }
 
     #[test]
-    fn poisoned_table_entry_falls_back_to_heuristic() {
-        // A hand-inserted table entry naming a kernel the registry doesn't
-        // know must degrade to the paper heuristic, not panic the serving
-        // path mid-traffic.
-        use crate::autotune::TuningTable;
-        let mut table = TuningTable::new();
-        table.insert(
-            ShapeClass::of(32, 0.5),
-            TuneEntry {
-                kernel: "gone_kernel".into(),
-                flops_per_cycle: 1.0,
-            },
-        );
-        let cache = PlanCache::new(
-            Arc::new(Planner::with_table(table)),
-            PlanCacheConfig {
-                threads: 1,
-                online_top2: true,
-                race_reps: 1,
-            },
-        );
-        let w = TernaryMatrix::random(32, 8, 0.5, 3);
-        let bias = vec![0.0f32; 8];
-        let id = cache
-            .register(LayerSpec::new(w.clone(), Epilogue::with_bias(bias.clone())))
-            .unwrap();
-        let x = Matrix::random(4, 32, 4);
-        // Class counts as tuned (entry exists) → no race → build falls back.
-        let y = cache.forward(id, &x).unwrap();
-        assert!(y.allclose(&dense_oracle(&x, &w, &bias), 1e-3));
-        assert_eq!(cache.snapshot().races, 0);
-    }
-
-    #[test]
-    fn register_validates_bias_and_kernel() {
+    fn register_validates_bias_and_params() {
         let cache = cache_with(1, false);
         let w = TernaryMatrix::random(16, 8, 0.5, 1);
-        assert!(cache
-            .register(LayerSpec::new(w.clone(), Epilogue::with_bias(vec![0.0; 7])))
-            .is_err());
-        let mut spec = LayerSpec::new(w.clone(), Epilogue::with_bias(vec![0.0; 8]));
-        spec.kernel = Some("bogus".into());
-        assert!(cache.register(spec).is_err());
+        assert!(matches!(
+            cache.register(LayerSpec::new(w.clone(), Epilogue::with_bias(vec![0.0; 7]))),
+            Err(Error::Shape(_))
+        ));
         // Bad params are rejected up front too — lazy builds cannot fail.
+        // (An unknown kernel is unrepresentable: the override is a typed
+        // KernelId, so the PR-2 "bogus name" rejection test is gone with
+        // the failure mode it covered.)
         let mut spec = LayerSpec::new(w, Epilogue::with_bias(vec![0.0; 8]));
         spec.params.group = Some(0);
-        assert!(cache.register(spec).is_err());
+        assert!(matches!(
+            cache.register(spec),
+            Err(Error::BadKernelParams(_))
+        ));
     }
 }

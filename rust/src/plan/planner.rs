@@ -2,17 +2,25 @@
 //! [`GemmPlan`], consulting the autotune [`TuningTable`] and falling back
 //! to the paper's heuristics when a shape class was never tuned.
 //!
+//! Kernel choice is **typed end-to-end**: hints, tuning entries and the
+//! heuristic candidates all carry a [`KernelId`], and the heuristic
+//! candidate sets are *derived queries over the registry's descriptor
+//! table* ([`crate::kernels::gemv_specialist`], [`crate::kernels::best_scalar`],
+//! [`crate::kernels::fused_simd`]) — no kernel is named by string literal
+//! here, so a new registry row automatically participates in selection.
+//!
 //! The tuning table lives behind a `RwLock` so one `Arc<Planner>` can be
 //! shared by every layer, the [`crate::plan::PlanCache`]'s online top-2
 //! races, and the serve-time background re-tune thread: a winner recorded
 //! by any of them is immediately visible to every subsequent plan.
 
 use crate::autotune::{ShapeClass, TuneEntry, TuningTable};
-use crate::kernels::{prepare_kernel, GemmScratch, KernelParams, PreparedGemm};
+use crate::kernels::{self, GemmScratch, KernelId, KernelParams, PreparedGemm};
 use crate::plan::gemm_plan::{Epilogue, GemmPlan};
 use crate::plan::partition::RowPartition;
 use crate::ternary::TernaryMatrix;
 use crate::util::threadpool::ThreadPool;
+use crate::{Error, Result};
 use std::sync::{Arc, Mutex, RwLock};
 
 /// Execution hints for [`Planner::plan`] — everything that is about *how*
@@ -20,8 +28,9 @@ use std::sync::{Arc, Mutex, RwLock};
 #[derive(Debug, Clone)]
 pub struct PlanHints {
     /// Explicit registry kernel override (benches and ablations keep full
-    /// control); `None` = let the planner choose.
-    pub kernel: Option<String>,
+    /// control); `None` = let the planner choose. Name-keyed callers
+    /// resolve through [`KernelId::parse`] / `str::parse` first.
+    pub kernel: Option<KernelId>,
     /// Worker threads for row-partitioned execution (1 = sequential).
     pub threads: usize,
     /// Minimum rows per parallel chunk.
@@ -44,9 +53,9 @@ impl Default for PlanHints {
 
 impl PlanHints {
     /// Hints that pin a specific registry kernel (the bench-harness form).
-    pub fn with_kernel(name: &str) -> PlanHints {
+    pub fn with_kernel(kernel: KernelId) -> PlanHints {
         PlanHints {
-            kernel: Some(name.to_string()),
+            kernel: Some(kernel),
             ..Default::default()
         }
     }
@@ -56,18 +65,21 @@ impl PlanHints {
 ///
 /// - At the sparsest paper level (≈6.25% nonzeros) the per-column index
 ///   streams are short and the interleave/blocking machinery has nothing
-///   to amortize; the plain K/M-unrolled kernel wins (Fig 9's low-s end).
-/// - When a fused PReLU is wanted at high density, the symmetric SIMD
+///   to amortize; the scalar GEMV specialist wins (Fig 9's low-s end).
+/// - When a fused PReLU is wanted at high density, the fusing SIMD
 ///   kernel's fused epilogue pays for its padding overhead (Fig 11).
 /// - Everywhere else the paper's best scalar kernel — blocked (`min(K,
 ///   4096)`) + interleaved — is the winner (Figs 6–9).
-pub fn heuristic_kernel(_k: usize, sparsity: f32, wants_fused_prelu: bool) -> &'static str {
+///
+/// All three candidates are capability queries over the registry's
+/// descriptor table, not name literals.
+pub fn heuristic_kernel(_k: usize, sparsity: f32, wants_fused_prelu: bool) -> KernelId {
     if sparsity <= 0.07 {
-        "unrolled_tcsc_k4_m4"
+        kernels::gemv_specialist()
     } else if wants_fused_prelu && sparsity >= 0.45 {
-        "simd_vertical"
+        kernels::fused_simd()
     } else {
-        "interleaved_blocked_tcsc"
+        kernels::best_scalar()
     }
 }
 
@@ -81,20 +93,23 @@ pub fn heuristic_top2(
     sparsity: f32,
     m: usize,
     wants_fused_prelu: bool,
-) -> [&'static str; 2] {
+) -> [KernelId; 2] {
     let primary = heuristic_kernel(k, sparsity, wants_fused_prelu);
-    let secondary = match primary {
+    let secondary = if primary == kernels::gemv_specialist() {
         // Fig 9: as density grows past the sparsest level, the blocked
         // interleaved kernel overtakes plain unrolling.
-        "unrolled_tcsc_k4_m4" => "interleaved_blocked_tcsc",
+        kernels::best_scalar()
+    } else if primary == kernels::fused_simd() {
         // Fig 11: the SIMD path and the best scalar path trade the lead
         // depending on padding overhead for the host's actual shapes.
-        "simd_vertical" => "interleaved_blocked_tcsc",
+        kernels::best_scalar()
+    } else if m <= 1 {
         // Single-row batches leave the SIMD path's padded-X copy nothing
-        // to amortize; the latency-shape rival is the plain K/M-unrolled
-        // kernel (Fig 2's GEMV end).
-        _ if m <= 1 => "unrolled_tcsc_k4_m4",
-        _ => "simd_vertical",
+        // to amortize; the latency-shape rival is the scalar GEMV
+        // specialist (Fig 2's GEMV end).
+        kernels::gemv_specialist()
+    } else {
+        kernels::fused_simd()
     };
     [primary, secondary]
 }
@@ -132,7 +147,7 @@ impl Planner {
     }
 
     /// Planner from a persisted tuning table (`stgemm autotune --save`).
-    pub fn from_table_file(path: &str) -> Result<Planner, String> {
+    pub fn from_table_file(path: &str) -> Result<Planner> {
         Ok(Planner::with_table(TuningTable::load(path)?))
     }
 
@@ -174,13 +189,10 @@ impl Planner {
     }
 
     /// Record a measured winner for a shape class (online top-2 fallback,
-    /// `autotune sweep`). Last write wins. Unknown kernel names are
-    /// dropped: a poisoned entry must never reach the serving path, where
-    /// a lazy plan build has no caller left to surface the error to.
+    /// `autotune sweep`). Last write wins. The entry's kernel is a typed
+    /// [`KernelId`], so — unlike the PR-2 string era — a poisoned entry
+    /// naming an unregistered kernel is unrepresentable.
     pub fn record(&self, class: ShapeClass, entry: TuneEntry) {
-        if !crate::kernels::kernel_names().contains(&entry.kernel.as_str()) {
-            return;
-        }
         self.table
             .write()
             .unwrap_or_else(|e| e.into_inner())
@@ -204,10 +216,10 @@ impl Planner {
         sparsity: f32,
         m: usize,
         wants_fused_prelu: bool,
-    ) -> String {
+    ) -> KernelId {
         match self.lookup_entry(k, sparsity, m) {
             Some(entry) => entry.kernel,
-            None => heuristic_kernel(k, sparsity, wants_fused_prelu).to_string(),
+            None => heuristic_kernel(k, sparsity, wants_fused_prelu),
         }
     }
 
@@ -231,25 +243,26 @@ impl Planner {
     /// supports fusion; the epilogue applies it otherwise.
     ///
     /// # Errors
-    /// Unknown kernel names, bad params, or a bias/N mismatch.
+    /// [`Error::Shape`] on a bias/N mismatch, [`Error::BadKernelParams`]
+    /// on invalid params.
     pub fn plan(
         &self,
         w: &TernaryMatrix,
         params: KernelParams,
         epilogue: Epilogue,
         hints: &PlanHints,
-    ) -> Result<GemmPlan, String> {
+    ) -> Result<GemmPlan> {
         if epilogue.bias.len() != w.n() {
-            return Err(format!(
+            return Err(Error::Shape(format!(
                 "bias length {} != N {}",
                 epilogue.bias.len(),
                 w.n()
-            ));
+            )));
         }
         let sparsity = w.density() as f32;
         let wants_fused = epilogue.fusible_prelu().is_some();
-        let name = match &hints.kernel {
-            Some(k) => k.clone(),
+        let kernel = match hints.kernel {
+            Some(k) => k,
             // A declared expected batch picks that regime's M-aware entry;
             // an unset one (0) resolves through the M-agnostic entry only —
             // the plan may serve any batch size, so a single-bucket split
@@ -259,16 +272,16 @@ impl Planner {
                     0 => self.lookup_entry_agnostic(w.k(), sparsity),
                     m => self.lookup_entry(w.k(), sparsity, m),
                 };
-                entry.map(|e| e.kernel).unwrap_or_else(|| {
-                    heuristic_kernel(w.k(), sparsity, wants_fused).to_string()
-                })
+                entry
+                    .map(|e| e.kernel)
+                    .unwrap_or_else(|| heuristic_kernel(w.k(), sparsity, wants_fused))
             }
         };
         let kparams = KernelParams {
             prelu_alpha: epilogue.fusible_prelu(),
             ..params
         };
-        let gemm: Arc<dyn PreparedGemm> = prepare_kernel(&name, w, kparams)?.into();
+        let gemm: Arc<dyn PreparedGemm> = kernel.prepare(w, kparams)?.into();
         let threads = hints.threads.max(1);
         let partition = RowPartition::new(threads, hints.min_rows_per_chunk);
         let pool = if threads > 1 {
@@ -302,10 +315,19 @@ mod tests {
 
     #[test]
     fn heuristics_follow_the_paper() {
-        assert_eq!(heuristic_kernel(4096, 0.0625, false), "unrolled_tcsc_k4_m4");
-        assert_eq!(heuristic_kernel(4096, 0.25, false), "interleaved_blocked_tcsc");
-        assert_eq!(heuristic_kernel(4096, 0.5, true), "simd_vertical");
-        assert_eq!(heuristic_kernel(4096, 0.5, false), "interleaved_blocked_tcsc");
+        assert_eq!(
+            heuristic_kernel(4096, 0.0625, false),
+            KernelId::UnrolledTcscK4M4
+        );
+        assert_eq!(
+            heuristic_kernel(4096, 0.25, false),
+            KernelId::InterleavedBlockedTcsc
+        );
+        assert_eq!(heuristic_kernel(4096, 0.5, true), KernelId::SimdVertical);
+        assert_eq!(
+            heuristic_kernel(4096, 0.5, false),
+            KernelId::InterleavedBlockedTcsc
+        );
     }
 
     #[test]
@@ -315,12 +337,15 @@ mod tests {
                 let [a, b] = heuristic_top2(4096, s, m, fused);
                 assert_eq!(a, heuristic_kernel(4096, s, fused));
                 assert_ne!(a, b, "candidates must differ (s={s}, m={m}, fused={fused})");
-                assert!(crate::kernels::kernel_names().contains(&b), "unknown rival {b}");
+                assert!(crate::kernels::kernel_ids().contains(&b), "unknown rival {b}");
             }
         }
-        // The M=1 regime swaps the SIMD rival for the unrolled GEMV shape.
-        assert_eq!(heuristic_top2(4096, 0.25, 1, false)[1], "unrolled_tcsc_k4_m4");
-        assert_eq!(heuristic_top2(4096, 0.25, 8, false)[1], "simd_vertical");
+        // The M=1 regime swaps the SIMD rival for the GEMV specialist.
+        assert_eq!(
+            heuristic_top2(4096, 0.25, 1, false)[1],
+            KernelId::UnrolledTcscK4M4
+        );
+        assert_eq!(heuristic_top2(4096, 0.25, 8, false)[1], KernelId::SimdVertical);
     }
 
     #[test]
@@ -329,7 +354,7 @@ mod tests {
         table.insert(
             ShapeClass::of(128, 0.25),
             TuneEntry {
-                kernel: "unrolled_tcsc_12".into(),
+                kernel: KernelId::UnrolledTcsc12,
                 flops_per_cycle: 9.9,
             },
         );
@@ -365,54 +390,39 @@ mod tests {
         planner.record(
             ShapeClass::of(512, 0.25),
             TuneEntry {
-                kernel: "base_tcsc".into(),
+                kernel: KernelId::BaseTcsc,
                 flops_per_cycle: 1.0,
             },
         );
         assert_eq!(planner.tuned_classes(), 1);
-        assert_eq!(
-            planner.select_kernel(512, 0.25, 8, false),
-            "base_tcsc".to_string()
-        );
+        assert_eq!(planner.select_kernel(512, 0.25, 8, false), KernelId::BaseTcsc);
         // An M-aware entry overrides the fallback for its bucket only.
         planner.record(
             ShapeClass::of_m(512, 0.25, 1),
             TuneEntry {
-                kernel: "unrolled_tcsc_k4_m4".into(),
+                kernel: KernelId::UnrolledTcscK4M4,
                 flops_per_cycle: 2.0,
             },
         );
         assert_eq!(
             planner.select_kernel(512, 0.25, 1, false),
-            "unrolled_tcsc_k4_m4".to_string()
+            KernelId::UnrolledTcscK4M4
         );
-        assert_eq!(
-            planner.select_kernel(512, 0.25, 8, false),
-            "base_tcsc".to_string()
-        );
+        assert_eq!(planner.select_kernel(512, 0.25, 8, false), KernelId::BaseTcsc);
         // install_table replaces everything (the background re-tune path).
         planner.install_table(TuningTable::new());
         assert_eq!(planner.tuned_classes(), 0);
         assert_eq!(
             planner.select_kernel(512, 0.25, 8, false),
-            "interleaved_blocked_tcsc".to_string()
+            KernelId::InterleavedBlockedTcsc
         );
         // Snapshot is a detached copy.
         let mut snap = planner.table_snapshot();
         snap.insert(
             ShapeClass::of(64, 0.5),
             TuneEntry {
-                kernel: "base_tcsc".into(),
+                kernel: KernelId::BaseTcsc,
                 flops_per_cycle: 1.0,
-            },
-        );
-        assert_eq!(planner.tuned_classes(), 0);
-        // Unknown kernels never enter the shared table.
-        planner.record(
-            ShapeClass::of(64, 0.5),
-            TuneEntry {
-                kernel: "bogus".into(),
-                flops_per_cycle: 99.0,
             },
         );
         assert_eq!(planner.tuned_classes(), 0);
@@ -424,14 +434,14 @@ mod tests {
         table.insert(
             ShapeClass::of(128, 0.25),
             TuneEntry {
-                kernel: "interleaved_blocked_tcsc".into(),
+                kernel: KernelId::InterleavedBlockedTcsc,
                 flops_per_cycle: 2.0,
             },
         );
         table.insert(
             ShapeClass::of_m(128, 0.25, 1),
             TuneEntry {
-                kernel: "unrolled_tcsc_k4_m4".into(),
+                kernel: KernelId::UnrolledTcscK4M4,
                 flops_per_cycle: 3.0,
             },
         );
@@ -473,32 +483,31 @@ mod tests {
                 &w,
                 KernelParams::default(),
                 Epilogue::with_bias(vec![0.0; 8]),
-                &PlanHints::with_kernel("base_tcsc"),
+                &PlanHints::with_kernel(KernelId::BaseTcsc),
             )
             .unwrap();
         assert_eq!(plan.kernel_name(), "base_tcsc");
-        assert!(planner
-            .plan(
-                &w,
-                KernelParams::default(),
-                Epilogue::with_bias(vec![0.0; 8]),
-                &PlanHints::with_kernel("bogus"),
-            )
-            .is_err());
+        // Unknown kernel names now fail at the parse boundary — a bogus
+        // name cannot even be expressed as a typed hint.
+        assert_eq!(
+            "bogus".parse::<KernelId>().err(),
+            Some(Error::UnknownKernel("bogus".into()))
+        );
     }
 
     #[test]
     fn bias_length_is_validated() {
         let planner = Planner::new();
         let w = TernaryMatrix::random(16, 8, 0.5, 4);
-        assert!(planner
-            .plan(
+        assert!(matches!(
+            planner.plan(
                 &w,
                 KernelParams::default(),
                 Epilogue::with_bias(vec![0.0; 7]),
                 &PlanHints::default(),
-            )
-            .is_err());
+            ),
+            Err(Error::Shape(_))
+        ));
     }
 
     #[test]
@@ -531,7 +540,7 @@ mod tests {
         let planner = Planner::new();
         let w = TernaryMatrix::random(32, 8, 0.5, 7);
         let hints = PlanHints {
-            kernel: Some("simd_vertical".into()),
+            kernel: Some(KernelId::SimdVertical),
             expected_batch: 8,
             ..Default::default()
         };

@@ -8,6 +8,7 @@
 
 use crate::ternary::TernaryMatrix;
 use crate::util::json::Json;
+use crate::{Error, Result};
 use std::path::{Path, PathBuf};
 
 /// One layer of an artifact model.
@@ -42,37 +43,37 @@ pub struct Manifest {
     pub models: Vec<ArtifactModel>,
 }
 
-fn req_usize(v: &Json, key: &str) -> Result<usize, String> {
+fn req_usize(v: &Json, key: &str) -> Result<usize> {
     v.get(key)
         .and_then(|x| x.as_usize())
-        .ok_or_else(|| format!("manifest: missing/invalid '{key}'"))
+        .ok_or_else(|| Error::Format(format!("manifest: missing/invalid '{key}'")))
 }
 
-fn req_str(v: &Json, key: &str) -> Result<String, String> {
+fn req_str(v: &Json, key: &str) -> Result<String> {
     v.get(key)
         .and_then(|x| x.as_str())
         .map(|s| s.to_string())
-        .ok_or_else(|| format!("manifest: missing/invalid '{key}'"))
+        .ok_or_else(|| Error::Format(format!("manifest: missing/invalid '{key}'")))
 }
 
 impl Manifest {
     /// Load `manifest.json` from an artifacts directory.
-    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, String> {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
-            .map_err(|e| format!("read {}: {e}", path.display()))?;
-        let v = Json::parse(&text).map_err(|e| e.to_string())?;
+            .map_err(|e| Error::io(format!("read {}", path.display()), e))?;
+        let v = Json::parse(&text).map_err(|e| Error::Format(e.to_string()))?;
         let models_json = v
             .get("models")
             .and_then(|m| m.as_arr())
-            .ok_or("manifest: missing 'models' array")?;
+            .ok_or_else(|| Error::Format("manifest: missing 'models' array".into()))?;
         let mut models = Vec::new();
         for mj in models_json {
             let layers_json = mj
                 .get("layers")
                 .and_then(|l| l.as_arr())
-                .ok_or("manifest: model missing 'layers'")?;
+                .ok_or_else(|| Error::Format("manifest: model missing 'layers'".into()))?;
             let mut layers = Vec::new();
             for lj in layers_json {
                 layers.push(ArtifactLayer {
@@ -128,52 +129,54 @@ impl Manifest {
 
 impl ArtifactModel {
     /// Load a layer's ternary weights from its raw i8 dump.
-    pub fn load_weights(&self, dir: &Path, layer: usize) -> Result<TernaryMatrix, String> {
+    pub fn load_weights(&self, dir: &Path, layer: usize) -> Result<TernaryMatrix> {
         let l = &self.layers[layer];
         let path = dir.join(&l.weights_file);
-        let bytes = std::fs::read(&path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        let bytes = std::fs::read(&path)
+            .map_err(|e| Error::io(format!("read {}", path.display()), e))?;
         if bytes.len() != l.k * l.n {
-            return Err(format!(
+            return Err(Error::Format(format!(
                 "{}: expected {} bytes, got {}",
                 l.weights_file,
                 l.k * l.n,
                 bytes.len()
-            ));
+            )));
         }
         let entries: Vec<i8> = bytes.iter().map(|&b| b as i8).collect();
         if entries.iter().any(|&v| !(-1..=1).contains(&v)) {
-            return Err(format!("{}: non-ternary entry", l.weights_file));
+            return Err(Error::Format(format!("{}: non-ternary entry", l.weights_file)));
         }
         Ok(TernaryMatrix::from_entries(l.k, l.n, &entries))
     }
 
     /// Load a layer's bias from its raw little-endian f32 dump.
-    pub fn load_bias(&self, dir: &Path, layer: usize) -> Result<Vec<f32>, String> {
+    pub fn load_bias(&self, dir: &Path, layer: usize) -> Result<Vec<f32>> {
         let l = &self.layers[layer];
         read_f32_file(&dir.join(&l.bias_file), l.n)
     }
 
     /// Load the probe input (batch × d_in).
-    pub fn load_probe_x(&self, dir: &Path) -> Result<Vec<f32>, String> {
+    pub fn load_probe_x(&self, dir: &Path) -> Result<Vec<f32>> {
         read_f32_file(&dir.join(&self.probe_x_file), self.batch * self.d_in)
     }
 
     /// Load the probe output (batch × d_out).
-    pub fn load_probe_y(&self, dir: &Path) -> Result<Vec<f32>, String> {
+    pub fn load_probe_y(&self, dir: &Path) -> Result<Vec<f32>> {
         read_f32_file(&dir.join(&self.probe_y_file), self.batch * self.d_out)
     }
 }
 
 /// Read a raw little-endian f32 file with an expected element count.
-pub fn read_f32_file(path: &Path, expect: usize) -> Result<Vec<f32>, String> {
-    let bytes = std::fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+pub fn read_f32_file(path: &Path, expect: usize) -> Result<Vec<f32>> {
+    let bytes =
+        std::fs::read(path).map_err(|e| Error::io(format!("read {}", path.display()), e))?;
     if bytes.len() != expect * 4 {
-        return Err(format!(
+        return Err(Error::Format(format!(
             "{}: expected {} f32s, got {} bytes",
             path.display(),
             expect,
             bytes.len()
-        ));
+        )));
     }
     Ok(bytes
         .chunks_exact(4)

@@ -12,6 +12,7 @@
 use crate::runtime::artifacts::Manifest;
 use crate::runtime::pjrt::{CompiledModel, PjrtRuntime};
 use crate::tensor::Matrix;
+use crate::Error;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::sync::mpsc;
@@ -20,7 +21,7 @@ use std::sync::Mutex;
 enum Request {
     Run {
         x: Matrix,
-        reply: mpsc::Sender<Result<Matrix, String>>,
+        reply: mpsc::Sender<std::result::Result<Matrix, Error>>,
     },
     Shutdown,
 }
@@ -57,7 +58,7 @@ impl XlaExecutor {
             .collect();
         let buckets: Vec<usize> = plan.iter().map(|(b, _)| *b).collect();
         let (tx, rx) = mpsc::channel::<Request>();
-        let (init_tx, init_rx) = mpsc::channel::<Result<(), String>>();
+        let (init_tx, init_rx) = mpsc::channel::<std::result::Result<(), Error>>();
         let base_name = base.to_string();
         let thread_base = base_name.clone();
         let thread = std::thread::Builder::new()
@@ -81,7 +82,7 @@ impl XlaExecutor {
                         m
                     }
                     Err(e) => {
-                        let _ = init_tx.send(Err(format!("{e:#}")));
+                        let _ = init_tx.send(Err(Error::Runtime(format!("{e:#}"))));
                         return;
                     }
                 };
@@ -89,7 +90,8 @@ impl XlaExecutor {
                     match req {
                         Request::Run { x, reply } => {
                             let result = run_bucketed(&models, &x, d_in, d_out);
-                            let _ = reply.send(result.map_err(|e| format!("{e:#}")));
+                            let _ =
+                                reply.send(result.map_err(|e| Error::Runtime(format!("{e:#}"))));
                         }
                         Request::Shutdown => break,
                     }

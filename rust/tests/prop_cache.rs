@@ -14,7 +14,7 @@
 use std::sync::Arc;
 
 use stgemm::autotune::{ShapeClass, TuneEntry, TuningTable};
-use stgemm::kernels::{dense_oracle, KernelParams};
+use stgemm::kernels::{dense_oracle, KernelId, KernelParams};
 use stgemm::plan::{
     m_bucket, Epilogue, LayerSpec, PlanCache, PlanCacheConfig, PlanHints, Planner,
 };
@@ -89,21 +89,21 @@ fn per_m_table_winners_are_honored_per_bucket_and_stay_bitwise_identical() {
     table.insert(
         ShapeClass::of(K, 0.25),
         TuneEntry {
-            kernel: "interleaved_blocked_tcsc".into(),
+            kernel: KernelId::InterleavedBlockedTcsc,
             flops_per_cycle: 2.0,
         },
     );
     table.insert(
         ShapeClass::of_m(K, 0.25, 1),
         TuneEntry {
-            kernel: "unrolled_tcsc_k4_m4".into(),
+            kernel: KernelId::UnrolledTcscK4M4,
             flops_per_cycle: 3.0,
         },
     );
     table.insert(
         ShapeClass::of_m(K, 0.25, 16),
         TuneEntry {
-            kernel: "simd_vertical".into(),
+            kernel: KernelId::SimdVertical,
             flops_per_cycle: 4.0,
         },
     );
@@ -124,15 +124,15 @@ fn per_m_table_winners_are_honored_per_bucket_and_stay_bitwise_identical() {
         // Bucket → expected winner (9 → bucket 16; 5 → bucket 8 →
         // fallback; 64 → untouched bucket → fallback).
         for &(m, want) in &[
-            (1usize, "unrolled_tcsc_k4_m4"),
-            (16, "simd_vertical"),
-            (9, "simd_vertical"),
-            (5, "interleaved_blocked_tcsc"),
-            (64, "interleaved_blocked_tcsc"),
+            (1usize, KernelId::UnrolledTcscK4M4),
+            (16, KernelId::SimdVertical),
+            (9, KernelId::SimdVertical),
+            (5, KernelId::InterleavedBlockedTcsc),
+            (64, KernelId::InterleavedBlockedTcsc),
         ] {
             assert_eq!(cache.kernel_for(id, m), want, "m={m}");
             let plan = cache.plan_for(id, m).unwrap();
-            assert_eq!(plan.kernel_name(), want, "m={m}");
+            assert_eq!(plan.kernel_name(), want.name(), "m={m}");
             let x = Matrix::random(m, K, 7000 + m as u64);
             let mut y_cached = Matrix::zeros(m, N);
             cache.run(id, &x, &mut y_cached).unwrap();
@@ -175,9 +175,9 @@ fn pr2_era_tuning_json_resolves_via_m_agnostic_fallback() {
         let entry = table
             .lookup_m(K, 0.25, m)
             .expect("fallback must resolve every batch size");
-        assert_eq!(entry.kernel, "unrolled_tcsc_12", "m={m}");
+        assert_eq!(entry.kernel, KernelId::UnrolledTcsc12, "m={m}");
     }
-    assert_eq!(table.kernel_for(4096, 0.0625, 7), "unrolled_tcsc_k4_m4");
+    assert_eq!(table.kernel_for(4096, 0.0625, 7), KernelId::UnrolledTcscK4M4);
     // The serving path honors the fixture: no race, fixture kernel used.
     let planner = Arc::new(Planner::with_table(table));
     let cache = PlanCache::new(
@@ -193,7 +193,7 @@ fn pr2_era_tuning_json_resolves_via_m_agnostic_fallback() {
         .register(LayerSpec::new(w.clone(), Epilogue::new(bias(), 1.0, None)))
         .unwrap();
     for m in [1usize, 8] {
-        assert_eq!(cache.kernel_for(id, m), "unrolled_tcsc_12");
+        assert_eq!(cache.kernel_for(id, m), KernelId::UnrolledTcsc12);
         let x = Matrix::random(m, K, 8000 + m as u64);
         let y = cache.forward(id, &x).unwrap();
         assert!(y.allclose(&dense_oracle(&x, &w, &bias()), 1e-3), "m={m}");
@@ -238,7 +238,7 @@ fn raced_plan_is_bitwise_identical_to_its_sequential_twin() {
                 &w,
                 KernelParams::default(),
                 Epilogue::new(bias(), 1.0, None),
-                &PlanHints::with_kernel(&winner),
+                &PlanHints::with_kernel(winner),
             )
             .unwrap();
         let mut y_fresh = Matrix::zeros(m, N);
@@ -323,7 +323,7 @@ fn online_race_is_once_per_class_bucket_and_paper_sane() {
     let entry = planner.lookup_entry(K, 0.25, 8).expect("winner recorded");
     let candidates = stgemm::plan::heuristic_top2(K, 0.25, 8, false);
     assert!(
-        candidates.contains(&entry.kernel.as_str()),
+        candidates.contains(&entry.kernel),
         "winner '{}' must be a top-2 candidate {:?}",
         entry.kernel,
         candidates
@@ -354,12 +354,12 @@ fn explicit_override_bypasses_race_and_table() {
     );
     let w = TernaryMatrix::random(K, N, 0.25, 41);
     let mut spec = LayerSpec::new(w.clone(), Epilogue::new(bias(), 1.0, None));
-    spec.kernel = Some("base_tcsc".into());
+    spec.kernel = Some(KernelId::BaseTcsc);
     let id = cache.register(spec).unwrap();
     let x = Matrix::random(8, K, 6000);
     let y = cache.forward(id, &x).unwrap();
     assert!(y.allclose(&dense_oracle(&x, &w, &bias()), 1e-3));
     assert_eq!(cache.snapshot().races, 0, "override must not race");
     assert!(planner.lookup_entry(K, 0.25, 8).is_none());
-    assert_eq!(cache.kernel_for(id, 8), "base_tcsc");
+    assert_eq!(cache.kernel_for(id, 8), KernelId::BaseTcsc);
 }

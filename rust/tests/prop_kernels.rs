@@ -1,9 +1,12 @@
 //! Property tests over the kernel family: every registry kernel agrees
 //! with the f64-accumulated dense oracle on randomized problems, fused
-//! PReLU equals unfused, and kernels are deterministic.
+//! PReLU equals unfused, kernels are deterministic, and every
+//! [`stgemm::kernels::KernelDescriptor`]'s declared capabilities match the
+//! prepared kernel's observable runtime behavior.
 
 use stgemm::kernels::{
-    dense_oracle, kernel_names, prelu_inplace, prepare_kernel, KernelParams,
+    dense_oracle, descriptors, kernel_names, prelu_inplace, prepare_kernel, KernelId,
+    KernelParams,
 };
 use stgemm::tensor::Matrix;
 use stgemm::ternary::TernaryMatrix;
@@ -40,6 +43,60 @@ fn prop_every_kernel_matches_oracle() {
                 "kernel {name} maxΔ {}",
                 y.max_abs_diff(&oracle)
             );
+        }
+    });
+}
+
+#[test]
+fn prop_descriptor_capabilities_match_runtime_on_random_shapes() {
+    // Satellite: the descriptor table is internally consistent (unique
+    // names, derived enumerations match) and every descriptor prepares
+    // successfully on random shapes with runtime behavior — fused PReLU,
+    // padded-scratch use, interleave-group honoring — exactly as declared.
+    props("descriptor capabilities vs runtime", 20, |g| {
+        let c = random_case(g);
+        let names: Vec<&str> = descriptors().iter().map(|d| d.name).collect();
+        assert_eq!(kernel_names(), names.as_slice(), "derived name list");
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), names.len(), "kernel names must be unique");
+        let with_prelu = KernelParams {
+            prelu_alpha: Some(0.25),
+            ..Default::default()
+        };
+        for d in descriptors() {
+            assert_eq!(KernelId::parse(d.name), Some(d.id), "{}", d.name);
+            let plain = d.id.prepare(&c.w, KernelParams::default()).unwrap();
+            assert_eq!(plain.name(), d.name);
+            assert!(!plain.fused_prelu(), "{}: no PReLU requested", d.name);
+            assert_eq!(
+                plain.uses_padded_scratch(),
+                d.uses_padded_scratch,
+                "{}: padded-scratch capability",
+                d.name
+            );
+            assert_eq!(
+                plain.interleave_group(),
+                d.default_group,
+                "{}: default interleave group",
+                d.name
+            );
+            let fused = d.id.prepare(&c.w, with_prelu).unwrap();
+            assert_eq!(
+                fused.fused_prelu(),
+                d.supports_fused_prelu,
+                "{}: fused-PReLU capability",
+                d.name
+            );
+            if d.uses_group {
+                let params = KernelParams {
+                    group: Some(3),
+                    ..Default::default()
+                };
+                let kern = d.id.prepare(&c.w, params).unwrap();
+                assert_eq!(kern.interleave_group(), Some(3), "{}: honors group", d.name);
+            }
         }
     });
 }

@@ -52,7 +52,7 @@ fn every_kernel_through_plan_matches_oracle() {
                             &w,
                             KernelParams::default(),
                             Epilogue::new(bias.clone(), scale, prelu),
-                            &PlanHints::with_kernel(name),
+                            &PlanHints::with_kernel(name.parse().unwrap()),
                         )
                         .unwrap();
                     let mut y = Matrix::zeros(m, n);
@@ -81,7 +81,7 @@ fn steady_state_run_is_allocation_stable() {
     for name in ["simd_vertical", "simd_horizontal", "interleaved_blocked_tcsc"] {
         for threads in [1usize, 4] {
             let hints = PlanHints {
-                kernel: Some(name.to_string()),
+                kernel: Some(name.parse().unwrap()),
                 threads,
                 expected_batch: m,
                 ..Default::default()
@@ -135,7 +135,7 @@ fn parallel_plan_is_bitwise_sequential() {
                         KernelParams::default(),
                         Epilogue::new(bias.clone(), 1.0, Some(0.25)),
                         &PlanHints {
-                            kernel: Some(name.to_string()),
+                            kernel: Some(name.parse().unwrap()),
                             threads,
                             ..Default::default()
                         },
@@ -174,7 +174,7 @@ fn plan_respects_group_override() {
                     &w,
                     params,
                     Epilogue::with_bias(bias.clone()),
-                    &PlanHints::with_kernel(name),
+                    &PlanHints::with_kernel(name.parse().unwrap()),
                 )
                 .unwrap();
             let mut y = Matrix::zeros(m, n);

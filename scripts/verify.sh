@@ -15,4 +15,7 @@ cargo fmt --check
 echo "== cargo clippy -D warnings =="
 cargo clippy --all-targets -- -D warnings
 
+echo "== cargo doc --no-deps (warnings denied) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 echo "verify: OK"
