@@ -90,7 +90,7 @@ fn main() {
     // Compare against the float reference on a batch of activations.
     let x = Matrix::random(batch, d_model, 9);
     let y_float = float_ffn(&x, &w1f, &b1, &w2f, &b2);
-    let y_ternary = model.forward(&x);
+    let y_ternary = model.forward(&x).expect("forward");
 
     // Quantization error in the *output* (relative RMS).
     let mut num = 0.0f64;
@@ -105,7 +105,7 @@ fn main() {
     // Throughput of the quantized path.
     let timer = CycleTimer::new(1, 5);
     let meas = timer.run(|| {
-        std::hint::black_box(model.forward(&x));
+        std::hint::black_box(model.forward(&x).expect("forward"));
     });
     let flops = model.flops(batch);
     println!(

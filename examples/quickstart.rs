@@ -50,9 +50,9 @@ fn main() {
             )
             .unwrap();
         let mut y = Matrix::zeros(m, n);
-        plan.run(&x, &mut y);
+        plan.run(&x, &mut y).unwrap();
         let correct = y.allclose(&oracle, 1e-3);
-        let meas = timer.run(|| plan.run(&x, &mut y));
+        let meas = timer.run(|| plan.run(&x, &mut y).expect("plan run"));
         table.row(vec![
             name.to_string(),
             if correct { "✓".into() } else { "✗ FAIL".into() },

@@ -2,6 +2,13 @@
 //! FFN under concurrent load, native backend vs (when artifacts exist) the
 //! PJRT/XLA backend, reporting throughput, latency percentiles and batcher
 //! effectiveness.
+//!
+//! PR 5 additions: the native model is served twice — wavefront-pipelined
+//! (default) and with the per-layer barrier path (`--no-pipeline`) — and a
+//! direct scheduler comparison runs the *same* compiled layer stack in
+//! [`PipelineMode::Barrier`] vs [`PipelineMode::Wavefront`], recording
+//! per-layer barrier stall time. Everything lands in `e2e_serving.json` so
+//! the pipelining win is tracked across PRs.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -10,10 +17,51 @@ use stgemm::bench::harness::BenchScale;
 use stgemm::bench::report::{write_csv, Table};
 use stgemm::coordinator::{Backend, BatchPolicy, Engine, LoadGenerator, Router};
 use stgemm::model::{ModelConfig, TernaryLinear, TernaryMlp};
-use stgemm::plan::{PlanHints, Planner};
+use stgemm::plan::{PipelineMode, PipelineStats, PlanHints, Planner};
 use stgemm::runtime::{Manifest, XlaExecutor};
+use stgemm::tensor::Matrix;
+use stgemm::util::json::Json;
 
-fn bench_backend(name: &str, engine: Engine, clients: usize, reqs: usize) -> Vec<String> {
+struct ServingRow {
+    backend: String,
+    requests: usize,
+    rps: f64,
+    p50_us: u64,
+    p95_us: u64,
+    p99_us: u64,
+    mean_batch: f64,
+    errors: usize,
+}
+
+impl ServingRow {
+    fn table_row(&self) -> Vec<String> {
+        vec![
+            self.backend.clone(),
+            format!("{}", self.requests),
+            format!("{:.0}", self.rps),
+            format!("{}", self.p50_us),
+            format!("{}", self.p95_us),
+            format!("{}", self.p99_us),
+            format!("{:.2}", self.mean_batch),
+            format!("{}", self.errors),
+        ]
+    }
+
+    fn json(&self) -> Json {
+        Json::obj(vec![
+            ("backend", Json::str(self.backend.clone())),
+            ("requests", Json::num(self.requests as f64)),
+            ("rps", Json::num(self.rps)),
+            ("p50_us", Json::num(self.p50_us as f64)),
+            ("p95_us", Json::num(self.p95_us as f64)),
+            ("p99_us", Json::num(self.p99_us as f64)),
+            ("mean_batch", Json::num(self.mean_batch)),
+            ("errors", Json::num(self.errors as f64)),
+        ])
+    }
+}
+
+fn bench_backend(name: &str, engine: Engine, clients: usize, reqs: usize) -> ServingRow {
     let d_in = engine.d_in();
     let mut router = Router::new();
     router.register(
@@ -32,23 +80,117 @@ fn bench_backend(name: &str, engine: Engine, clients: usize, reqs: usize) -> Vec
         seed: 7,
     };
     let report = gen.run_inprocess(&router);
-    vec![
-        name.to_string(),
-        format!("{}", report.total_requests),
-        format!("{:.0}", report.throughput_rps),
-        format!("{}", report.latency_us_p50),
-        format!("{}", report.latency_us_p95),
-        format!("{}", report.latency_us_p99),
-        format!("{:.2}", report.mean_batch_size),
-        format!("{}", report.errors),
-    ]
+    ServingRow {
+        backend: name.to_string(),
+        requests: report.total_requests,
+        rps: report.throughput_rps,
+        p50_us: report.latency_us_p50,
+        p95_us: report.latency_us_p95,
+        p99_us: report.latency_us_p99,
+        mean_batch: report.mean_batch_size,
+        errors: report.errors,
+    }
+}
+
+/// Aggregate of repeated [`PipelineStats`] for one schedule mode.
+#[derive(Default)]
+struct ModeAggregate {
+    wall_us: u64,
+    stall_us: u64,
+    max_depth: usize,
+    per_layer_stall_us: Vec<u64>,
+}
+
+impl ModeAggregate {
+    fn absorb(&mut self, stats: &PipelineStats) {
+        self.wall_us += stats.wall_us;
+        self.stall_us += stats.stall_us;
+        self.max_depth = self.max_depth.max(stats.max_depth);
+        if self.per_layer_stall_us.len() < stats.per_layer_stall_us.len() {
+            self.per_layer_stall_us
+                .resize(stats.per_layer_stall_us.len(), 0);
+        }
+        for (total, s) in self
+            .per_layer_stall_us
+            .iter_mut()
+            .zip(&stats.per_layer_stall_us)
+        {
+            *total += s;
+        }
+    }
+
+    fn json(&self) -> Json {
+        Json::obj(vec![
+            ("wall_us_total", Json::num(self.wall_us as f64)),
+            ("stall_us_total", Json::num(self.stall_us as f64)),
+            ("max_depth", Json::num(self.max_depth as f64)),
+            (
+                "per_layer_stall_us",
+                Json::arr(self.per_layer_stall_us.iter().map(|&s| Json::num(s as f64))),
+            ),
+        ])
+    }
+}
+
+/// Barrier vs wavefront through the *same* compiled layer stack: the only
+/// variable is the dependency graph, so the stall delta is the scheduling
+/// win itself (and the per-layer barrier stall is the join tail the
+/// wavefront removes).
+fn barrier_vs_wavefront(reps: usize) -> Json {
+    let (m, threads) = (64usize, 4usize);
+    let cfg = ModelConfig::from_json(&format!(
+        r#"{{"name":"stall","dims":[256,1024,512,256],"sparsity":0.25,"seed":99,
+            "prelu_alpha":0.25,"threads":{threads}}}"#
+    ))
+    .unwrap();
+    let mlp = TernaryMlp::planned(&cfg, &Arc::new(Planner::new())).unwrap();
+    let cache = mlp.plan_cache().expect("config-built model");
+    let x = Matrix::random(m, 256, 5);
+    let mut y = Matrix::zeros(m, 256);
+    let mut aggregates = Vec::new();
+    for mode in [PipelineMode::Barrier, PipelineMode::Wavefront] {
+        let plan = cache.compile_pipeline(m, mode).expect("compile");
+        let mut agg = ModeAggregate::default();
+        // One warmup run fills scratch/arena outside the measurement.
+        plan.run(&x, &mut y).expect("pipeline run");
+        for _ in 0..reps {
+            agg.absorb(&plan.run(&x, &mut y).expect("pipeline run"));
+        }
+        aggregates.push(agg);
+    }
+    let (barrier, wavefront) = (&aggregates[0], &aggregates[1]);
+    let speedup = if wavefront.wall_us > 0 {
+        barrier.wall_us as f64 / wavefront.wall_us as f64
+    } else {
+        1.0
+    };
+    println!(
+        "[e2e] barrier vs wavefront (M={m}, {} layers, {threads} threads, {reps} reps): \
+         wall {} µs → {} µs ({speedup:.2}x), stall {} µs → {} µs, \
+         per-layer barrier stall {:?} µs",
+        cfg.dims.len() - 1,
+        barrier.wall_us,
+        wavefront.wall_us,
+        barrier.stall_us,
+        wavefront.stall_us,
+        barrier.per_layer_stall_us,
+    );
+    Json::obj(vec![
+        ("m", Json::num(m as f64)),
+        ("layers", Json::num((cfg.dims.len() - 1) as f64)),
+        ("threads", Json::num(threads as f64)),
+        ("reps", Json::num(reps as f64)),
+        ("barrier", barrier.json()),
+        ("wavefront", wavefront.json()),
+        ("wavefront_speedup", Json::num(speedup)),
+    ])
 }
 
 fn main() {
     let scale = BenchScale::from_env();
-    let (clients, reqs) = match scale {
-        BenchScale::Full => (16, 200),
-        BenchScale::Ci => (4, 25),
+    let (clients, reqs, stall_reps) = match scale {
+        BenchScale::Full => (16, 200, 50),
+        BenchScale::Ci => (4, 25, 5),
     };
     let mut table = Table::new(
         format!("E2E serving: ternary FFN 256→1024→256, {clients} clients × {reqs} reqs"),
@@ -63,15 +205,27 @@ fn main() {
             "errors",
         ],
     );
+    let mut rows: Vec<ServingRow> = Vec::new();
 
     // Native backend on the synthetic config, through the serving path
-    // proper: planner-selected kernels, M-bucketed plan cache.
+    // proper: planner-selected kernels, M-bucketed plan cache, wavefront
+    // pipelining (the default).
     let cfg = ModelConfig::from_json(
         r#"{"name":"native","dims":[256,1024,256],"sparsity":0.25,"seed":4321}"#,
     )
     .unwrap();
     let engine = Engine::from_config(&cfg, &Arc::new(Planner::new())).unwrap();
-    table.row(bench_backend("native", engine, clients, reqs));
+    rows.push(bench_backend("native", engine, clients, reqs));
+
+    // Same model with the per-layer barrier path (`--no-pipeline`): the
+    // serving-level cost of the inter-layer joins the wavefront removes.
+    let cfg_barrier = ModelConfig::from_json(
+        r#"{"name":"native_barrier","dims":[256,1024,256],"sparsity":0.25,"seed":4321,
+            "pipeline":false}"#,
+    )
+    .unwrap();
+    let engine = Engine::from_config(&cfg_barrier, &Arc::new(Planner::new())).unwrap();
+    rows.push(bench_backend("native_barrier", engine, clients, reqs));
 
     // Also native with the baseline kernel — the explicit-override escape
     // hatch (config `kernel` key), kept to show what the paper's
@@ -82,7 +236,7 @@ fn main() {
     )
     .unwrap();
     let engine = Engine::from_config(&cfg_base, &Arc::new(Planner::new())).unwrap();
-    table.row(bench_backend("native_base", engine, clients, reqs));
+    rows.push(bench_backend("native_base", engine, clients, reqs));
 
     // XLA backend from the real artifact (identical weights via manifest).
     match Manifest::load("artifacts") {
@@ -107,13 +261,31 @@ fn main() {
             let engine = Engine::new("xla", mlp)
                 .with_xla(xla)
                 .with_backend(Backend::Xla);
-            table.row(bench_backend("xla", engine, clients, reqs));
+            rows.push(bench_backend("xla", engine, clients, reqs));
         }
         _ => eprintln!("[e2e] artifacts not found — skipping XLA backend row"),
     }
 
+    for row in &rows {
+        table.row(row.table_row());
+    }
     println!("{}", table.render());
     if let Ok(p) = write_csv(&table, "e2e_serving.csv") {
         println!("  [csv] {}", p.display());
+    }
+
+    // Scheduler-level barrier vs wavefront with per-layer stall, then the
+    // whole report as JSON for cross-PR tracking.
+    let stall = barrier_vs_wavefront(stall_reps);
+    let report = Json::obj(vec![
+        ("bench", Json::str("e2e_serving")),
+        ("clients", Json::num(clients as f64)),
+        ("requests_per_client", Json::num(reqs as f64)),
+        ("serving", Json::arr(rows.iter().map(ServingRow::json))),
+        ("barrier_vs_wavefront", stall),
+    ]);
+    match std::fs::write("e2e_serving.json", report.encode_pretty()) {
+        Ok(()) => println!("  [json] e2e_serving.json"),
+        Err(e) => eprintln!("  [json] write failed: {e}"),
     }
 }

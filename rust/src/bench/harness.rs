@@ -118,7 +118,8 @@ pub fn measure_kernel(
         )
         .expect("registry kernel");
     let mut y = Matrix::zeros(m, n);
-    let (measurement, cycles_cv) = timer.run_stats(|| plan.run(&x, &mut y));
+    let (measurement, cycles_cv) =
+        timer.run_stats(|| plan.run(&x, &mut y).expect("bench kernels do not panic"));
     std::hint::black_box(y.as_slice());
     let mut cost = CostModel::new(m, k, n, sparsity);
     if params.prelu_alpha.is_some() {

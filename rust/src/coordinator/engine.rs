@@ -112,7 +112,7 @@ impl Engine {
     /// Run a raw batch matrix on the configured backend.
     pub fn infer_matrix(&self, x: &Matrix) -> Result<Matrix> {
         match self.backend {
-            Backend::Native => Ok(self.mlp.forward(x)),
+            Backend::Native => self.mlp.forward(x),
             Backend::Xla => self
                 .xla
                 .as_ref()
@@ -128,7 +128,7 @@ impl Engine {
             .xla
             .as_ref()
             .ok_or_else(|| Error::Runtime("cross-check requires an XLA executor".into()))?;
-        let native = self.mlp.forward(x);
+        let native = self.mlp.forward(x)?;
         let xla_out = xla.run(x).map_err(|e| Error::Runtime(format!("{e:#}")))?;
         let diff = native.max_abs_diff(&xla_out);
         Ok((native, xla_out, diff))
@@ -173,7 +173,21 @@ impl Engine {
             x.row_mut(r).copy_from_slice(&req.input);
         }
         let t0 = Instant::now();
-        let result = self.infer_matrix(&x);
+        // The native path runs through `forward_into_stats` so wavefront
+        // scheduler observability (depth/stall) lands in the metrics the
+        // load controller's queue model reads.
+        let result = match self.backend {
+            Backend::Native => {
+                let mut y = Matrix::zeros(m, self.d_out());
+                self.mlp.forward_into_stats(&x, &mut y).map(|stats| {
+                    if let Some(stats) = stats {
+                        self.metrics.note_pipeline(&stats);
+                    }
+                    y
+                })
+            }
+            Backend::Xla => self.infer_matrix(&x),
+        };
         let compute_us = t0.elapsed().as_micros() as u64;
         self.metrics.compute_latency.record(compute_us);
         self.metrics.note_compute(compute_us);
@@ -279,6 +293,31 @@ mod tests {
         for (a, b) in yb.iter().zip(s2.as_slice()) {
             assert!((a - b).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn pipelined_serving_records_metrics() {
+        let e = engine();
+        // Batch 1 races the untuned classes (barrier fallback); batch 2+
+        // runs the wavefront pipeline and records its stats.
+        for round in 0..3u64 {
+            let mut batch = Vec::new();
+            let mut rxs = Vec::new();
+            for i in 0..4u64 {
+                let (req, rx) = InferenceRequest::new(round * 10 + i, "t", vec![0.1; 16]);
+                batch.push(req);
+                rxs.push(rx);
+            }
+            e.run_batch(batch);
+            for rx in rxs {
+                rx.recv().unwrap().output.unwrap();
+            }
+        }
+        use std::sync::atomic::Ordering;
+        assert!(e.metrics.pipeline_runs.load(Ordering::Relaxed) >= 1);
+        assert!(e.metrics.pipeline_depth.load(Ordering::Relaxed) >= 1);
+        let cache = e.plan_cache().expect("config-built engine");
+        assert!(cache.snapshot().pipeline_plans >= 1);
     }
 
     #[test]

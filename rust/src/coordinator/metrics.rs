@@ -93,6 +93,17 @@ pub struct Metrics {
     pub max_batch_in_use: AtomicU64,
     /// Times the load controller re-advised this model (counter).
     pub autoscale_adjustments: AtomicU64,
+    /// Wavefront forwards executed (counter; barrier/race batches don't
+    /// count).
+    pub pipeline_runs: AtomicU64,
+    /// Layers simultaneously in flight during the last pipelined batch
+    /// (gauge). 1 means the wavefront degenerated to sequential.
+    pub pipeline_depth: AtomicU64,
+    /// Cumulative scheduler stall — worker time spent waiting for a
+    /// runnable band — across pipelined batches, in µs (counter). Stall is
+    /// part of the compute wall time the batcher's queue model sees, so
+    /// surfacing it keeps the load controller's latency budget honest.
+    pub pipeline_stall_us: AtomicU64,
     /// EWMA of the inter-arrival gap in µs (0 = fewer than two arrivals).
     ewma_interarrival_us: AtomicU64,
     /// Timestamp of the last arrival in µs since the metrics epoch.
@@ -136,6 +147,16 @@ impl Metrics {
         self.queue_depth.store(depth as u64, Ordering::Relaxed);
         self.peak_queue_depth
             .fetch_max(depth as u64, Ordering::Relaxed);
+    }
+
+    /// Note one wavefront-pipelined batch: bumps the run counter, sets the
+    /// depth gauge and accumulates scheduler stall.
+    pub fn note_pipeline(&self, stats: &crate::plan::PipelineStats) {
+        self.pipeline_runs.fetch_add(1, Ordering::Relaxed);
+        self.pipeline_depth
+            .store(stats.max_depth as u64, Ordering::Relaxed);
+        self.pipeline_stall_us
+            .fetch_add(stats.stall_us, Ordering::Relaxed);
     }
 
     /// Note one batch's compute latency (EWMA companion to the
@@ -231,6 +252,23 @@ impl Metrics {
             (
                 "autoscale_adjustments",
                 Json::num(self.autoscale_adjustments.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "pipeline",
+                Json::obj(vec![
+                    (
+                        "runs",
+                        Json::num(self.pipeline_runs.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "depth",
+                        Json::num(self.pipeline_depth.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "stall_us_total",
+                        Json::num(self.pipeline_stall_us.load(Ordering::Relaxed) as f64),
+                    ),
+                ]),
             ),
         ])
     }
@@ -332,9 +370,26 @@ mod tests {
         m.record_batch(8);
         m.record_batch(4);
         m.e2e_latency.record(1234);
+        m.note_pipeline(&crate::plan::PipelineStats {
+            tasks: 6,
+            workers: 2,
+            max_depth: 2,
+            stall_us: 40,
+            wall_us: 100,
+            per_layer_stall_us: vec![10, 30],
+        });
+        m.note_pipeline(&crate::plan::PipelineStats {
+            max_depth: 3,
+            stall_us: 10,
+            ..Default::default()
+        });
         let snap = m.snapshot().encode();
         let parsed = Json::parse(&snap).unwrap();
         assert_eq!(parsed.get("requests").unwrap().as_f64(), Some(3.0));
         assert_eq!(parsed.get("mean_batch_size").unwrap().as_f64(), Some(6.0));
+        let pipeline = parsed.get("pipeline").unwrap();
+        assert_eq!(pipeline.get("runs").unwrap().as_f64(), Some(2.0));
+        assert_eq!(pipeline.get("depth").unwrap().as_f64(), Some(3.0));
+        assert_eq!(pipeline.get("stall_us_total").unwrap().as_f64(), Some(50.0));
     }
 }

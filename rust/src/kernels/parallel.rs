@@ -17,6 +17,7 @@ use crate::kernels::{GemmScratch, PreparedGemm};
 use crate::plan::partition::{execute_partitioned, RowPartition};
 use crate::tensor::Matrix;
 use crate::util::threadpool::ThreadPool;
+use crate::Result;
 use std::sync::{Arc, Mutex};
 
 /// A prepared kernel wrapped for multi-core row-partitioned execution.
@@ -46,7 +47,11 @@ impl ParallelGemm {
     }
 
     /// Compute `Y = X·W + b` using up to `self.threads` cores.
-    pub fn run(&self, x: &Matrix, bias: &[f32], y: &mut Matrix) {
+    ///
+    /// # Errors
+    /// [`crate::Error::Runtime`] when a worker job panicked (`y` is then
+    /// incomplete and must be discarded).
+    pub fn run(&self, x: &Matrix, bias: &[f32], y: &mut Matrix) -> Result<()> {
         let threads = self.threads.max(1);
         let part = RowPartition::new(threads, self.min_rows);
         let mut scratches = self.scratch.lock().unwrap_or_else(|e| e.into_inner());
@@ -68,7 +73,7 @@ impl ParallelGemm {
             bias,
             y,
             &mut scratches,
-        );
+        )
     }
 }
 
@@ -96,7 +101,7 @@ mod tests {
         for threads in [1, 2, 4, 8] {
             let par = ParallelGemm::new(Arc::clone(&inner), threads);
             let mut y = Matrix::zeros(13, 32);
-            par.run(&x, &bias, &mut y);
+            par.run(&x, &bias, &mut y).unwrap();
             assert!(y.allclose(&oracle, 1e-3), "threads={threads}");
         }
     }
@@ -123,7 +128,7 @@ mod tests {
             inner.run(&x, &bias, &mut y_seq);
             let par = ParallelGemm::new(Arc::clone(&inner), 4);
             let mut y_par = Matrix::zeros(13, 32);
-            par.run(&x, &bias, &mut y_par);
+            par.run(&x, &bias, &mut y_par).unwrap();
             assert_eq!(y_seq, y_par, "kernel {name}");
         }
     }
@@ -137,7 +142,7 @@ mod tests {
                 .into();
         let par = ParallelGemm::new(inner, 3);
         let mut y = Matrix::zeros(12, 32);
-        par.run(&x, &bias, &mut y);
+        par.run(&x, &bias, &mut y).unwrap();
         let caps: Vec<usize> = par
             .scratch
             .lock()
@@ -146,7 +151,7 @@ mod tests {
             .map(|s| s.padded_capacity())
             .collect();
         for _ in 0..5 {
-            par.run(&x, &bias, &mut y);
+            par.run(&x, &bias, &mut y).unwrap();
         }
         let caps_after: Vec<usize> = par
             .scratch
@@ -169,10 +174,10 @@ mod tests {
         inner.run(&x, &bias, &mut y_seq);
         let mut par = ParallelGemm::new(Arc::clone(&inner), 1);
         let mut y = Matrix::zeros(16, 32);
-        par.run(&x, &bias, &mut y); // sequential, spawns no workers
+        par.run(&x, &bias, &mut y).unwrap(); // sequential, spawns no workers
         assert_eq!(y_seq, y);
         par.threads = 8; // grow after construction — pool/scratch adapt
-        par.run(&x, &bias, &mut y);
+        par.run(&x, &bias, &mut y).unwrap();
         assert_eq!(y_seq, y);
     }
 
@@ -186,7 +191,7 @@ mod tests {
                 .into();
         let par = ParallelGemm::new(inner, 8);
         let mut y = Matrix::zeros(1, 32);
-        par.run(&x, &bias, &mut y);
+        par.run(&x, &bias, &mut y).unwrap();
         assert!(y.allclose(&oracle, 1e-3));
     }
 
@@ -200,7 +205,7 @@ mod tests {
                 .into();
         let par = ParallelGemm::new(inner, 3);
         let mut y = Matrix::zeros(7, 32);
-        par.run(&x, &bias, &mut y);
+        par.run(&x, &bias, &mut y).unwrap();
         assert!(y.allclose(&oracle, 1e-3));
     }
 }

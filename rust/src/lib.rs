@@ -44,7 +44,13 @@
 //!   reused forever, with an **online top-2 race** that times the two
 //!   paper-candidate kernels on the first real batch of an untuned
 //!   (K, sparsity, M-bucket) class and locks the winner into the shared
-//!   table under the M-aware class.
+//!   table under the M-aware class. Multi-layer forwards additionally run
+//!   through the **wavefront pipeline** ([`plan::pipeline`]): all layers
+//!   compile into one [`plan::MlpPlan`] band-dependency graph per bucket,
+//!   `(layer, band)` tasks are pulled by persistent pool workers with no
+//!   barrier between layers, and intermediate activations live in
+//!   [`plan::ActivationArena`] ping-pong buffers (zero allocation in
+//!   steady state) — see *Execution model* below.
 //! - [`autotune`] — the unroll-factor / block-size grid search behind the
 //!   paper's Figures 2–4, the persisted `TuningTable` the planner
 //!   consults, and [`autotune::sweep_model_opts`] (`stgemm autotune
@@ -81,13 +87,41 @@
 //! - [`bench`] — the measurement harness (timing the planned path) and
 //!   per-figure experiment drivers.
 //! - [`util`] — substrates built in-repo because the environment is offline:
-//!   PRNG, JSON, CLI parsing, thread pool (with scoped fork-join), and a
+//!   PRNG, JSON, CLI parsing, thread pool (with scoped fork-join and the
+//!   scoped worker loops the wavefront scheduler pulls tasks on), and a
 //!   mini property-testing framework.
 //! - [`error`] — the library-wide typed [`enum@Error`] (re-exported at the
 //!   crate root with the [`Result`] alias): every fallible API returns it,
 //!   variants classify failures (`UnknownKernel`, `BadKernelParams`,
 //!   `Shape`, `Config`, `Tuning`, `Format`, `Runtime`, `Serve`, `Io`),
 //!   and the CLI maps them to exit codes via [`Error::exit_code`].
+//!
+//! ## Execution model: barrier vs wavefront
+//!
+//! A multi-layer forward pass can run two ways, with a hard guarantee
+//! that both produce **bitwise-identical outputs**:
+//!
+//! - **Barrier** (pre-PR-5 semantics; `pipeline: false` in the model
+//!   config, `serve --no-pipeline`): each layer's batch is row-partitioned
+//!   across the pool, then a full join runs before the next layer starts.
+//!   This is also the path the online kernel race executes on, so racing
+//!   is never skipped.
+//! - **Wavefront** (the default): row band `[a, b)` of layer `i+1`
+//!   depends only on row band `[a, b)` of layer `i`'s output, so band
+//!   tasks flow through the whole stack with no global barrier —
+//!   persistent workers pull the deepest runnable band first. Identity
+//!   holds because bands reuse the same [`plan::RowPartition`]
+//!   tile-aligned ranges and prepared kernels as the barrier path, and
+//!   the epilogue is elementwise.
+//!
+//! Intermediate activations ping-pong through two pre-sized
+//! [`plan::ActivationArena`] buffers per (model, M-bucket): after
+//! plan-cache warmup, steady-state serving performs **zero activation
+//! allocation** (asserted by arena reuse counters in `tests/prop_cache.rs`).
+//! Scheduler observability (pipeline depth, stall time) feeds the serving
+//! metrics, and `cargo bench --bench e2e_serving` emits a
+//! barrier-vs-wavefront comparison with per-layer stall into
+//! `e2e_serving.json`.
 //!
 //! ## Quickstart
 //!
@@ -115,7 +149,7 @@
 //!     )
 //!     .unwrap();
 //! let mut y = Matrix::zeros(m, n);
-//! plan.run(&x, &mut y);
+//! plan.run(&x, &mut y).unwrap();
 //!
 //! let oracle = stgemm::kernels::dense_oracle(&x, &w, &bias);
 //! assert!(y.allclose(&oracle, 1e-4));

@@ -72,12 +72,14 @@ USAGE: stgemm <subcommand> [options]
 
   serve      --model <cfg.json> --addr 127.0.0.1:9000 --backend native|xla
              [--tuning <table.json>] [--threads N] [--artifacts <dir>]
-             [--max-batch 8] [--max-wait-us 2000]
+             [--max-batch 8] [--max-wait-us 2000] [--no-pipeline]
              [--no-autoscale] [--max-batch-cap 64] [--max-threads N]
              [--target-queue-us 2000] [--retune-secs N]
              (load-aware by default: max_batch and threads track observed
               queue depth / arrival rate; --retune-secs re-sweeps the
-              tuning table in the background every N seconds)
+              tuning table in the background every N seconds; multi-layer
+              forwards are wavefront-pipelined unless --no-pipeline
+              restores the per-layer barrier path)
   bench      --figure fig2|fig6|fig8|fig9|fig10|fig11|headline|
                       ablation_compressed|ablation_inverted|all [--csv]
   autotune   [--m 32] [--k 4096] [--n 1024] [--sparsity 0.25]
@@ -110,6 +112,12 @@ fn cmd_serve(args: &Args) -> Result<i32> {
         }
     };
     cfg.threads = args.usize("threads", cfg.threads).max(1);
+    // Wavefront pipelining is the default for multi-layer models;
+    // --no-pipeline restores the per-layer barrier path (escape hatch for
+    // debugging and A/B measurement — outputs are bitwise identical).
+    if args.has("no-pipeline") {
+        cfg.pipeline = false;
+    }
     let backend: Backend = args.get_or("backend", "native").parse()?;
     // Kernel selection: measured tuning table when given, paper heuristics
     // (refined by the plan cache's online top-2 race on first traffic)
@@ -254,11 +262,12 @@ fn cmd_serve(args: &Args) -> Result<i32> {
     )
     .map_err(|e| Error::io("start server", e))?;
     println!(
-        "[serve] model '{}' ({} → {}) on http://{} backend={backend:?}",
+        "[serve] model '{}' ({} → {}) on http://{} backend={backend:?} pipeline={}",
         cfg.name,
         cfg.d_in(),
         cfg.d_out(),
-        server.local_addr
+        server.local_addr,
+        if cfg.pipeline { "wavefront" } else { "barrier" }
     );
     // Serve until killed.
     loop {

@@ -9,7 +9,8 @@
 //!   "seed": 42,
 //!   "prelu_alpha": 0.25,
 //!   "batch_buckets": [1, 8],
-//!   "threads": 1
+//!   "threads": 1,
+//!   "pipeline": true
 //! }
 //! ```
 //!
@@ -40,6 +41,10 @@ pub struct ModelConfig {
     pub batch_buckets: Vec<usize>,
     /// Worker threads for row-partitioned layer execution (1 = sequential).
     pub threads: usize,
+    /// Wavefront-pipeline multi-layer forwards (cross-layer band
+    /// scheduling, zero-allocation activation arena). `false` restores
+    /// the per-layer barrier path (`serve --no-pipeline` does the same).
+    pub pipeline: bool,
 }
 
 impl Default for ModelConfig {
@@ -53,6 +58,7 @@ impl Default for ModelConfig {
             kernel: None,
             batch_buckets: vec![1, 8],
             threads: 1,
+            pipeline: true,
         }
     }
 }
@@ -120,6 +126,11 @@ impl ModelConfig {
                 .ok_or_else(|| bad("threads must be a positive integer"))?,
             None => d.threads,
         };
+        let pipeline = match v.get("pipeline") {
+            Some(Json::Bool(b)) => *b,
+            None => d.pipeline,
+            _ => return Err(bad("pipeline must be a boolean")),
+        };
         Ok(ModelConfig {
             name: v
                 .get("name")
@@ -143,6 +154,7 @@ impl ModelConfig {
             kernel,
             batch_buckets,
             threads,
+            pipeline,
         })
     }
 
@@ -174,6 +186,7 @@ impl ModelConfig {
             Json::arr(self.batch_buckets.iter().map(|&b| Json::num(b as f64))),
         ));
         fields.push(("threads", Json::num(self.threads as f64)));
+        fields.push(("pipeline", Json::Bool(self.pipeline)));
         Json::obj(fields).encode_pretty()
     }
 
@@ -203,6 +216,7 @@ mod tests {
         assert_eq!(c.dims, vec![8, 16, 4]);
         assert_eq!(c.kernel, None, "no kernel key = planner-selected");
         assert_eq!(c.threads, 1);
+        assert!(c.pipeline, "pipelining defaults on");
         assert_eq!(c.d_in(), 8);
         assert_eq!(c.d_out(), 4);
     }
@@ -231,6 +245,15 @@ mod tests {
         assert!(ModelConfig::from_json(r#"{"batch_buckets": []}"#).is_err());
         assert!(ModelConfig::from_json(r#"{"batch_buckets": [0]}"#).is_err());
         assert!(ModelConfig::from_json(r#"{"threads": 0}"#).is_err());
+        assert!(ModelConfig::from_json(r#"{"pipeline": 3}"#).is_err());
+    }
+
+    #[test]
+    fn pipeline_key_parses_and_roundtrips() {
+        let c = ModelConfig::from_json(r#"{"dims": [8, 4], "pipeline": false}"#).unwrap();
+        assert!(!c.pipeline);
+        let back = ModelConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
     }
 
     #[test]

@@ -167,13 +167,15 @@ impl TernaryLinear {
         }
     }
 
-    /// Forward: `y` must be (x.rows × N).
-    pub fn forward(&self, x: &Matrix, y: &mut Matrix) {
+    /// Forward into caller-provided storage: `y` must be (x.rows × N).
+    ///
+    /// # Errors
+    /// [`crate::Error::Runtime`] when a partitioned worker panicked (`y`
+    /// is then incomplete and must be discarded).
+    pub fn forward(&self, x: &Matrix, y: &mut Matrix) -> Result<()> {
         match &self.exec {
             Exec::Pinned(p) => p.run(x, y),
-            Exec::Cached { cache, id } => cache
-                .run(*id, x, y)
-                .expect("registered layer plans must build"),
+            Exec::Cached { cache, id } => cache.run(*id, x, y),
         }
     }
 
@@ -201,7 +203,7 @@ mod tests {
             TernaryLinear::new("interleaved_blocked_tcsc", &w, bias.clone(), 0.5, Some(0.25))
                 .unwrap();
         let mut y = Matrix::zeros(4, 32);
-        layer.forward(&x, &mut y);
+        layer.forward(&x, &mut y).unwrap();
 
         let mut want = dense_oracle(&x, &w, &bias);
         for v in want.as_mut_slice() {
@@ -226,8 +228,8 @@ mod tests {
         assert!(!unfused.pinned_plan().unwrap().fused_prelu());
         let mut yf = Matrix::zeros(4, 16);
         let mut yu = Matrix::zeros(4, 16);
-        fused.forward(&x, &mut yf);
-        unfused.forward(&x, &mut yu);
+        fused.forward(&x, &mut yf).unwrap();
+        unfused.forward(&x, &mut yu).unwrap();
         assert!(yf.allclose(&yu, 1e-4));
     }
 
@@ -252,8 +254,8 @@ mod tests {
             TernaryLinear::new("interleaved_blocked_tcsc", &w, bias, 1.0, None).unwrap();
         let mut ya = Matrix::zeros(3, 16);
         let mut ye = Matrix::zeros(3, 16);
-        auto.forward(&x, &mut ya);
-        explicit.forward(&x, &mut ye);
+        auto.forward(&x, &mut ya).unwrap();
+        explicit.forward(&x, &mut ye).unwrap();
         assert_eq!(ya, ye);
     }
 
@@ -277,7 +279,7 @@ mod tests {
         for m in [1usize, 5, 8] {
             let x = Matrix::random(m, 48, 30 + m as u64);
             let mut y = Matrix::zeros(m, 12);
-            layer.forward(&x, &mut y);
+            layer.forward(&x, &mut y).unwrap();
             assert!(y.allclose(&dense_oracle(&x, &w, &bias), 1e-4), "m={m}");
         }
         assert!(cache.snapshot().plans > 0);

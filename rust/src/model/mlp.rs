@@ -5,14 +5,25 @@
 //! threads), so a mixed-batch-size request stream converges onto a small
 //! set of reused plans and the load-aware coordinator can re-size the
 //! thread fan-out at runtime ([`TernaryMlp::set_threads`]).
+//!
+//! Multi-layer forwards are **wavefront-pipelined by default**
+//! ([`crate::plan::pipeline`]): row bands of layer `i+1` start as soon as
+//! the same bands of layer `i` finish — no global barrier between layers —
+//! with intermediate activations in pre-sized arena ping-pong buffers, so
+//! steady-state serving performs zero activation allocation while outputs
+//! stay bitwise identical to the barrier path. The barrier path remains as
+//! the `pipeline: false` / `serve --no-pipeline` escape hatch (and as the
+//! execution path of the online kernel race), and it too reads the first
+//! layer's input borrowed instead of cloning it.
 
 use crate::model::config::ModelConfig;
 use crate::model::layer::TernaryLinear;
-use crate::plan::{PlanCache, PlanCacheConfig, Planner};
+use crate::plan::{ActivationArena, PipelineStats, PlanCache, PlanCacheConfig, Planner};
 use crate::tensor::Matrix;
 use crate::ternary::TernaryMatrix;
 use crate::util::rng::Rng;
 use crate::{Error, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 /// A stack of ternary linear layers with PReLU between them.
@@ -22,6 +33,12 @@ pub struct TernaryMlp {
     /// Present for config-built models; `None` for explicit-layer stacks
     /// ([`TernaryMlp::from_layers`]).
     cache: Option<Arc<PlanCache>>,
+    /// Activation ping-pong buffers for the explicit-layer path (cached
+    /// models use the [`PlanCache`]'s shared arena instead).
+    arena: ActivationArena,
+    /// Wavefront pipelining for cached multi-layer forwards (config
+    /// `pipeline`, default on; `serve --no-pipeline`).
+    pipeline: AtomicBool,
 }
 
 impl TernaryMlp {
@@ -39,7 +56,8 @@ impl TernaryMlp {
     /// otherwise the planner's pick for that layer's (K, sparsity) class —
     /// refined by the cache's online top-2 race on first traffic in an
     /// untuned class. The config's `threads` seeds the cache's (runtime
-    /// adjustable) worker ceiling.
+    /// adjustable) worker ceiling, and `pipeline` selects wavefront vs
+    /// barrier execution for multi-layer forwards.
     pub fn planned(cfg: &ModelConfig, planner: &Arc<Planner>) -> Result<TernaryMlp> {
         let nlayers = cfg.dims.len() - 1;
         let cache = Arc::new(PlanCache::new(
@@ -49,6 +67,8 @@ impl TernaryMlp {
                 ..Default::default()
             },
         ));
+        // Barrier-only models skip warm-time pipeline compilation.
+        cache.set_pipelining(cfg.pipeline);
         let mut layers = Vec::with_capacity(nlayers);
         for i in 0..nlayers {
             let (k, n) = (cfg.dims[i], cfg.dims[i + 1]);
@@ -71,8 +91,10 @@ impl TernaryMlp {
         }
         Ok(TernaryMlp {
             name: cfg.name.clone(),
+            arena: ActivationArena::new(0), // cached path uses the cache's
             layers,
             cache: Some(cache),
+            pipeline: AtomicBool::new(cfg.pipeline),
         })
     }
 
@@ -90,10 +112,17 @@ impl TernaryMlp {
                 )));
             }
         }
+        let widest = layers[..layers.len() - 1]
+            .iter()
+            .map(TernaryLinear::n)
+            .max()
+            .unwrap_or(0);
         Ok(TernaryMlp {
             name,
             layers,
             cache: None,
+            arena: ActivationArena::new(widest),
+            pipeline: AtomicBool::new(false),
         })
     }
 
@@ -126,17 +155,58 @@ impl TernaryMlp {
         }
     }
 
-    /// Full forward pass for a batch (rows of `x`).
-    pub fn forward(&self, x: &Matrix) -> Matrix {
-        assert_eq!(x.cols(), self.d_in(), "input width mismatch");
-        let m = x.rows();
-        let mut cur = x.clone();
-        for layer in &self.layers {
-            let mut next = Matrix::zeros(m, layer.n());
-            layer.forward(&cur, &mut next);
-            cur = next;
+    /// Whether cached multi-layer forwards run through the wavefront
+    /// pipeline (explicit-layer stacks always use the barrier path).
+    pub fn pipelined(&self) -> bool {
+        self.cache.is_some() && self.pipeline.load(Ordering::Relaxed)
+    }
+
+    /// Toggle wavefront pipelining at runtime (`serve --no-pipeline`
+    /// passes `false` through the config instead; this is the live knob).
+    pub fn set_pipeline(&self, on: bool) {
+        self.pipeline.store(on, Ordering::Relaxed);
+        if let Some(cache) = &self.cache {
+            cache.set_pipelining(on);
         }
-        cur
+    }
+
+    /// Full forward pass for a batch (rows of `x`) into a fresh matrix.
+    pub fn forward(&self, x: &Matrix) -> Result<Matrix> {
+        let mut y = Matrix::zeros(x.rows(), self.d_out());
+        self.forward_into(x, &mut y)?;
+        Ok(y)
+    }
+
+    /// Forward into caller-provided storage (`y` must be `x.rows × d_out`).
+    pub fn forward_into(&self, x: &Matrix, y: &mut Matrix) -> Result<()> {
+        self.forward_into_stats(x, y).map(|_| ())
+    }
+
+    /// Like [`TernaryMlp::forward_into`], returning the scheduler stats
+    /// when the wavefront pipeline served the batch (`None` = barrier
+    /// path; the engine feeds these into the serving metrics).
+    pub fn forward_into_stats(
+        &self,
+        x: &Matrix,
+        y: &mut Matrix,
+    ) -> Result<Option<PipelineStats>> {
+        assert_eq!(x.cols(), self.d_in(), "input width mismatch");
+        assert_eq!(y.rows(), x.rows(), "output rows mismatch");
+        assert_eq!(y.cols(), self.d_out(), "output width mismatch");
+        if let Some(cache) = &self.cache {
+            if self.pipeline.load(Ordering::Relaxed) {
+                return cache.run_pipelined(x, y);
+            }
+            cache.run_layers(x, y)?;
+            return Ok(None);
+        }
+        // Explicit-layer stacks: borrowed first-layer input, arena
+        // ping-pong thereafter (no per-layer allocation, no x.clone()).
+        let widths: Vec<usize> = self.layers.iter().map(TernaryLinear::n).collect();
+        crate::plan::pipeline::pingpong_forward(&self.arena, &widths, x, y, |i, xin, yout| {
+            self.layers[i].forward(xin, yout)
+        })?;
+        Ok(None)
     }
 
     /// Cost-model flops for a batch of `m` rows.
@@ -167,6 +237,7 @@ mod tests {
     fn forward_matches_manual_composition() {
         let c = cfg();
         let mlp = TernaryMlp::from_config(&c).unwrap();
+        assert!(mlp.pipelined(), "config default is wavefront");
         let x = Matrix::random(4, 32, 1);
 
         // Rebuild the same weights/biases manually and compose oracles.
@@ -180,7 +251,7 @@ mod tests {
         prelu_inplace(&mut h, 0.25);
         let want = dense_oracle(&h, &w2, &b2);
 
-        let got = mlp.forward(&x);
+        let got = mlp.forward(&x).unwrap();
         assert!(got.allclose(&want, 1e-3));
     }
 
@@ -192,25 +263,48 @@ mod tests {
         assert_eq!(mlp.num_layers(), 2);
         assert!(mlp.flops(1) > 0.0);
         assert!(mlp.format_bytes() > 0);
-        let y = mlp.forward(&Matrix::zeros(3, 32));
+        let y = mlp.forward(&Matrix::zeros(3, 32)).unwrap();
         assert_eq!((y.rows(), y.cols()), (3, 16));
+        // Zero-row batches flow through every path.
+        let y0 = mlp.forward(&Matrix::zeros(0, 32)).unwrap();
+        assert_eq!((y0.rows(), y0.cols()), (0, 16));
     }
 
     #[test]
     fn kernel_choice_does_not_change_result() {
         let mut c = cfg();
         let x = Matrix::random(5, 32, 2);
-        let reference = TernaryMlp::from_config(&c).unwrap().forward(&x);
+        let reference = TernaryMlp::from_config(&c).unwrap().forward(&x).unwrap();
         for kernel in ["base_tcsc", "simd_vertical", "unrolled_tcsc_12", "dense_gemm"] {
             c.kernel = Some(kernel.parse().unwrap());
-            let got = TernaryMlp::from_config(&c).unwrap().forward(&x);
+            let got = TernaryMlp::from_config(&c).unwrap().forward(&x).unwrap();
             assert!(got.allclose(&reference, 1e-3), "kernel {kernel}");
         }
         // Planner-selected (no explicit kernel) agrees too — even when the
         // cache's online top-2 race picks the winner.
         c.kernel = None;
-        let got = TernaryMlp::from_config(&c).unwrap().forward(&x);
+        let got = TernaryMlp::from_config(&c).unwrap().forward(&x).unwrap();
         assert!(got.allclose(&reference, 1e-3), "auto kernel");
+    }
+
+    #[test]
+    fn pipelined_and_barrier_paths_are_bitwise_identical() {
+        let mut c = cfg();
+        c.threads = 4;
+        for &m in &[0usize, 1, 5, 13, 33] {
+            let x = Matrix::random(m, 32, 40 + m as u64);
+            let mlp = TernaryMlp::from_config(&c).unwrap();
+            let wave = mlp.forward(&x).unwrap();
+            mlp.set_pipeline(false);
+            let barrier = mlp.forward(&x).unwrap();
+            assert_eq!(wave, barrier, "m={m}");
+            // A config with pipeline off builds the barrier model.
+            c.pipeline = false;
+            let off = TernaryMlp::from_config(&c).unwrap();
+            assert!(!off.pipelined());
+            assert_eq!(off.forward(&x).unwrap(), wave, "m={m} (config off)");
+            c.pipeline = true;
+        }
     }
 
     #[test]
@@ -239,10 +333,11 @@ mod tests {
         c.kernel = Some(crate::kernels::KernelId::InterleavedBlockedTcsc);
         c.threads = 4;
         let x = Matrix::random(9, 32, 5);
-        let seq = TernaryMlp::from_config(&cfg()).unwrap().forward(&x);
+        let seq = TernaryMlp::from_config(&cfg()).unwrap().forward(&x).unwrap();
         let par = TernaryMlp::planned(&c, &Arc::new(Planner::new()))
             .unwrap()
-            .forward(&x);
+            .forward(&x)
+            .unwrap();
         assert_eq!(seq, par, "threaded forward must be bitwise sequential");
     }
 
@@ -253,17 +348,33 @@ mod tests {
         let mlp = TernaryMlp::planned(&c, &Arc::new(Planner::new())).unwrap();
         let ms = [1usize, 7, 8, 3, 16, 8, 1];
         for &m in &ms {
-            let y = mlp.forward(&Matrix::random(m, 32, 60 + m as u64));
+            let y = mlp.forward(&Matrix::random(m, 32, 60 + m as u64)).unwrap();
             assert_eq!((y.rows(), y.cols()), (m, 16));
         }
         let cache = mlp.plan_cache().expect("config-built model has a cache");
         let warm = cache.snapshot();
         for &m in &ms {
-            mlp.forward(&Matrix::random(m, 32, 80 + m as u64));
+            mlp.forward(&Matrix::random(m, 32, 80 + m as u64)).unwrap();
         }
         let hot = cache.snapshot();
         assert_eq!(hot.misses, warm.misses, "warm traffic must not re-plan");
         assert_eq!(hot.plans, warm.plans);
+        // After two passes every bucket raced, settled and compiled its
+        // pipeline; a third pass compiles nothing and allocates no
+        // activation buffers — arena reuse only.
+        let arena_warm = cache.arena_stats();
+        for &m in &ms {
+            mlp.forward(&Matrix::random(m, 32, 90 + m as u64)).unwrap();
+        }
+        let steady = cache.snapshot();
+        assert_eq!(
+            steady.pipeline_misses, hot.pipeline_misses,
+            "steady traffic must not re-compile pipelines"
+        );
+        assert!(steady.pipeline_hits > hot.pipeline_hits);
+        let arena_hot = cache.arena_stats();
+        assert_eq!(arena_hot.allocations, arena_warm.allocations);
+        assert!(arena_hot.reuses > arena_warm.reuses);
     }
 
     #[test]
@@ -272,11 +383,34 @@ mod tests {
         c.kernel = None;
         let mlp = TernaryMlp::planned(&c, &Arc::new(Planner::new())).unwrap();
         let x = Matrix::random(13, 32, 5);
-        let seq = mlp.forward(&x);
+        let seq = mlp.forward(&x).unwrap();
         for t in [2usize, 4, 8] {
             mlp.set_threads(t);
-            assert_eq!(mlp.forward(&x), seq, "threads={t}");
+            assert_eq!(mlp.forward(&x).unwrap(), seq, "threads={t}");
         }
+    }
+
+    #[test]
+    fn from_layers_ping_pongs_without_cloning_input() {
+        // Explicit-layer stacks run the barrier path over their own arena.
+        let w1 = TernaryMatrix::random(24, 40, 0.25, 31);
+        let w2 = TernaryMatrix::random(40, 8, 0.25, 32);
+        let b1 = vec![0.1f32; 40];
+        let b2 = vec![0.2f32; 8];
+        let l1 =
+            TernaryLinear::new("base_tcsc", &w1, b1.clone(), 1.0, Some(0.25)).unwrap();
+        let l2 = TernaryLinear::new("base_tcsc", &w2, b2.clone(), 1.0, None).unwrap();
+        let mlp = TernaryMlp::from_layers("explicit".into(), vec![l1, l2]).unwrap();
+        assert!(!mlp.pipelined());
+        let x = Matrix::random(6, 24, 33);
+        let mut h = dense_oracle(&x, &w1, &b1);
+        prelu_inplace(&mut h, 0.25);
+        let want = dense_oracle(&h, &w2, &b2);
+        let y1 = mlp.forward(&x).unwrap();
+        assert!(y1.allclose(&want, 1e-3));
+        // Steady state reuses the arena pair.
+        mlp.forward(&x).unwrap();
+        mlp.forward(&x).unwrap();
     }
 
     #[test]

@@ -28,18 +28,25 @@
 //! naming a kernel the registry doesn't know is unrepresentable, so the
 //! PR-2-era "poisoned table entry" failure mode (and its heuristic
 //! fallback on the serving path) is gone by construction.
+//!
+//! Multi-layer forwards: the cache also compiles and caches **wavefront
+//! pipelines** ([`MlpPlan`], keyed (M-bucket, threads) like plans) over
+//! the whole registered layer chain, with intermediates in a shared
+//! [`ActivationArena`] — see [`PlanCache::run_pipelined`] /
+//! [`PlanCache::run_layers`] and [`crate::plan::pipeline`].
 
 use crate::autotune::{ShapeClass, TuneEntry};
 use crate::kernels::{GemmScratch, KernelId, KernelParams, PreparedGemm};
 use crate::perf::timer::CycleTimer;
 use crate::plan::gemm_plan::{Epilogue, GemmPlan};
 use crate::plan::partition::RowPartition;
+use crate::plan::pipeline::{ActivationArena, ArenaStats, MlpPlan, PipelineMode, PipelineStats};
 use crate::plan::planner::{heuristic_top2, Planner};
 use crate::tensor::Matrix;
 use crate::ternary::TernaryMatrix;
 use crate::{Error, Result};
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 // The canonical M bucketing lives next to `ShapeClass` so plan keys and
@@ -111,6 +118,12 @@ pub struct CacheSnapshot {
     pub races: u64,
     /// Plans currently cached across all layers.
     pub plans: usize,
+    /// Pipelined forwards served by an already-compiled [`MlpPlan`].
+    pub pipeline_hits: u64,
+    /// Pipelined forwards that had to compile an [`MlpPlan`].
+    pub pipeline_misses: u64,
+    /// Pipelines currently cached across (bucket, threads) keys.
+    pub pipeline_plans: usize,
 }
 
 /// (M-bucket, threads) → plan.
@@ -141,6 +154,22 @@ pub struct PlanCache {
     hits: AtomicU64,
     misses: AtomicU64,
     races: AtomicU64,
+    /// Compiled wavefront pipelines, keyed like plans by
+    /// (M-bucket, threads); cleared alongside them on invalidate/register.
+    pipelines: Mutex<BTreeMap<(usize, usize), Arc<MlpPlan>>>,
+    /// Layer-set generation: bumped by [`PlanCache::register`] so a
+    /// pipeline compiled concurrently over the *old* layer set is never
+    /// inserted after the register-time clear (stale-plan race).
+    generation: AtomicU64,
+    /// Shared activation arena for pipelined and barrier multi-layer
+    /// forwards; built lazily once the layer set is known.
+    arena: Mutex<Option<Arc<ActivationArena>>>,
+    /// Whether warm-up should pre-compile wavefront pipelines (`false`
+    /// for `--no-pipeline` models: their forwards only ever take the
+    /// barrier path, so warmed pipelines would be dead weight).
+    pipelining: AtomicBool,
+    pipeline_hits: AtomicU64,
+    pipeline_misses: AtomicU64,
 }
 
 impl PlanCache {
@@ -154,6 +183,12 @@ impl PlanCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             races: AtomicU64::new(0),
+            pipelines: Mutex::new(BTreeMap::new()),
+            generation: AtomicU64::new(0),
+            arena: Mutex::new(None),
+            pipelining: AtomicBool::new(true),
+            pipeline_hits: AtomicU64::new(0),
+            pipeline_misses: AtomicU64::new(0),
         }
     }
 
@@ -177,13 +212,26 @@ impl PlanCache {
             )));
         }
         spec.params.validate()?;
-        let mut layers = self.layers.write().unwrap_or_else(|e| e.into_inner());
-        layers.push(Arc::new(CachedLayer {
-            spec,
-            plans: Mutex::new(BTreeMap::new()),
-            gemms: Mutex::new(BTreeMap::new()),
-        }));
-        Ok(LayerId(layers.len() - 1))
+        let id = {
+            let mut layers = self.layers.write().unwrap_or_else(|e| e.into_inner());
+            layers.push(Arc::new(CachedLayer {
+                spec,
+                plans: Mutex::new(BTreeMap::new()),
+                gemms: Mutex::new(BTreeMap::new()),
+            }));
+            LayerId(layers.len() - 1)
+        };
+        // The layer set changed: compiled pipelines and the arena sizing
+        // are stale. The generation bump keeps an in-flight concurrent
+        // compile over the old layer set from being inserted after this
+        // clear (see `PlanCache::cache_pipeline`).
+        self.generation.fetch_add(1, Ordering::SeqCst);
+        self.pipelines
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clear();
+        *self.arena.lock().unwrap_or_else(|e| e.into_inner()) = None;
+        Ok(id)
     }
 
     pub fn num_layers(&self) -> usize {
@@ -364,8 +412,16 @@ impl PlanCache {
         let plan_b = self.build_plan(layer, bucket, threads, b)?;
         let timer = CycleTimer::new(1, self.race_reps);
         let mut y = Matrix::zeros(x.rows(), spec.weights.n());
-        let meas_a = timer.run(|| plan_a.run(x, &mut y));
-        let meas_b = timer.run(|| plan_b.run(x, &mut y));
+        // One checked run per candidate first: a worker panic must surface
+        // as a typed error, not vanish inside the timing loop.
+        plan_a.run(x, &mut y)?;
+        plan_b.run(x, &mut y)?;
+        let meas_a = timer.run(|| {
+            let _ = plan_a.run(x, &mut y);
+        });
+        let meas_b = timer.run(|| {
+            let _ = plan_b.run(x, &mut y);
+        });
         let flops = plan_a.flops(x.rows());
         let (winner, meas, kernel) = if meas_a.cycles <= meas_b.cycles {
             (plan_a, meas_a, a)
@@ -417,8 +473,7 @@ impl PlanCache {
         let cached = self.plans_lock(&layer).get(&key).cloned();
         if let Some(plan) = cached {
             self.hits.fetch_add(1, Ordering::Relaxed);
-            plan.run(x, y);
-            return Ok(());
+            return plan.run(x, y);
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let spec = &layer.spec;
@@ -439,8 +494,7 @@ impl PlanCache {
             .entry(key)
             .or_insert(built)
             .clone();
-        plan.run(x, y);
-        Ok(())
+        plan.run(x, y)
     }
 
     /// Allocating convenience: run into a fresh M×N matrix.
@@ -450,14 +504,270 @@ impl PlanCache {
         Ok(y)
     }
 
+    /// Whether the registered layers form a chain (`N_i == K_{i+1}`) the
+    /// multi-layer paths can execute end to end. A model's cache always
+    /// does; caches holding unrelated layers (tests, tools) don't.
+    fn layers_chain(&self) -> bool {
+        let layers = self.layers.read().unwrap_or_else(|e| e.into_inner());
+        !layers.is_empty()
+            && layers
+                .windows(2)
+                .all(|pair| pair[0].spec.weights.n() == pair[1].spec.weights.k())
+    }
+
+    /// The shared activation arena, sized to the widest intermediate
+    /// activation of the registered layer chain (built lazily; reset when
+    /// a layer is registered).
+    fn arena(&self) -> Arc<ActivationArena> {
+        let mut guard = self.arena.lock().unwrap_or_else(|e| e.into_inner());
+        guard
+            .get_or_insert_with(|| {
+                let layers = self.layers.read().unwrap_or_else(|e| e.into_inner());
+                let widest = layers
+                    .iter()
+                    .take(layers.len().saturating_sub(1))
+                    .map(|l| l.spec.weights.n())
+                    .max()
+                    .unwrap_or(0);
+                Arc::new(ActivationArena::new(widest))
+            })
+            .clone()
+    }
+
+    /// Activation-arena counters (zero-allocation steady-state assertion,
+    /// /metrics).
+    pub fn arena_stats(&self) -> ArenaStats {
+        self.arena
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .as_ref()
+            .map(|a| a.stats())
+            .unwrap_or_default()
+    }
+
+    /// Whether the kernel choice for `layer` at batch size `m` is already
+    /// settled: an explicit override, a tuning-table entry resolving for
+    /// `m`'s bucket (M-aware or the M-agnostic fallback), or racing
+    /// disabled. Unsettled choices belong to the online top-2 race.
+    fn settled_for(&self, layer: &CachedLayer, m: usize) -> bool {
+        layer.spec.kernel.is_some()
+            || !self.online_top2
+            || self
+                .planner
+                .lookup_entry(
+                    layer.spec.weights.k(),
+                    layer.spec.weights.density() as f32,
+                    m,
+                )
+                .is_some()
+    }
+
+    /// Compile an [`MlpPlan`] over **all registered layers** (in
+    /// registration order) for batch size `m` at the current thread
+    /// ceiling — uncached, so benches can compile
+    /// [`PipelineMode::Barrier`] twins for stall comparisons.
+    ///
+    /// # Errors
+    /// [`Error::Shape`] when the layers do not chain, [`Error::Config`]
+    /// when none are registered.
+    pub fn compile_pipeline(&self, m: usize, mode: PipelineMode) -> Result<Arc<MlpPlan>> {
+        let bucket = m_bucket(m);
+        self.build_pipeline(bucket, self.effective_threads(bucket), mode)
+    }
+
+    fn build_pipeline(
+        &self,
+        bucket: usize,
+        threads: usize,
+        mode: PipelineMode,
+    ) -> Result<Arc<MlpPlan>> {
+        let layers: Vec<Arc<CachedLayer>> = self
+            .layers
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone();
+        if layers.is_empty() {
+            return Err(Error::Config("no layers registered".into()));
+        }
+        let mut specs = Vec::with_capacity(layers.len());
+        for layer in &layers {
+            let kernel = self.kernel_for_spec(&layer.spec, bucket);
+            let gemm = self.prepared_gemm(layer, kernel)?;
+            specs.push((
+                gemm,
+                layer.spec.epilogue.clone(),
+                layer.spec.min_rows_per_chunk,
+            ));
+        }
+        let pool = if threads > 1 {
+            Some(self.planner.shared_pool())
+        } else {
+            None
+        };
+        Ok(Arc::new(MlpPlan::compile(
+            specs,
+            bucket,
+            threads,
+            mode,
+            pool,
+            self.arena(),
+        )?))
+    }
+
+    /// Whether warm-up pre-compiles wavefront pipelines (default true;
+    /// [`crate::model::TernaryMlp`] turns it off for `pipeline: false` /
+    /// `--no-pipeline` models whose forwards only take the barrier path).
+    pub fn pipelining(&self) -> bool {
+        self.pipelining.load(Ordering::Relaxed)
+    }
+
+    /// Toggle warm-time pipeline compilation (see [`PlanCache::pipelining`]).
+    pub fn set_pipelining(&self, on: bool) {
+        self.pipelining.store(on, Ordering::Relaxed);
+    }
+
+    /// Compile and cache the wavefront pipeline for `key`, unless the
+    /// layer set changed while we were building — then the freshly built
+    /// plan is stale and a register-time clear must not be undone, so
+    /// rebuild against the new layer set and return it uncached (the next
+    /// call caches).
+    fn cache_pipeline(
+        &self,
+        key: (usize, usize),
+        mode: PipelineMode,
+    ) -> Result<Arc<MlpPlan>> {
+        let gen = self.generation.load(Ordering::SeqCst);
+        let built = self.build_pipeline(key.0, key.1, mode)?;
+        if self.generation.load(Ordering::SeqCst) != gen {
+            return self.build_pipeline(key.0, key.1, mode);
+        }
+        let mut pipelines = self.pipelines.lock().unwrap_or_else(|e| e.into_inner());
+        if self.generation.load(Ordering::SeqCst) != gen {
+            drop(pipelines);
+            return self.build_pipeline(key.0, key.1, mode);
+        }
+        Ok(pipelines.entry(key).or_insert(built).clone())
+    }
+
+    /// The cached wavefront pipeline for batch size `m` at the current
+    /// thread ceiling, compiling it on a miss.
+    pub fn pipeline_for(&self, m: usize) -> Result<Arc<MlpPlan>> {
+        let bucket = m_bucket(m);
+        let threads = self.effective_threads(bucket);
+        let key = (bucket, threads);
+        let cached = self
+            .pipelines
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(&key)
+            .cloned();
+        if let Some(plan) = cached {
+            self.pipeline_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(plan);
+        }
+        self.pipeline_misses.fetch_add(1, Ordering::Relaxed);
+        self.cache_pipeline(key, PipelineMode::Wavefront)
+    }
+
+    /// Full wavefront-pipelined forward pass through every registered
+    /// layer: `y` must be `x.rows × d_out` and is fully overwritten.
+    ///
+    /// Returns `Some(stats)` when the pipeline ran. Returns `None` when
+    /// the batch was served through the per-layer barrier path instead —
+    /// that happens while any layer's kernel choice for this bucket is
+    /// still unsettled, so the online top-2 race (which needs the
+    /// per-layer path's live-batch timing) is never skipped; once every
+    /// layer is settled the bucket's pipeline compiles and sticks.
+    pub fn run_pipelined(
+        &self,
+        x: &Matrix,
+        y: &mut Matrix,
+    ) -> Result<Option<PipelineStats>> {
+        // Past the bucket cap the bucketed pipelines (and their arena
+        // sizing) stop covering `m`; the barrier path leases exact-size
+        // buffers and handles any batch.
+        if x.rows() > MAX_M_BUCKET {
+            self.run_layers(x, y)?;
+            return Ok(None);
+        }
+        let bucket = m_bucket(x.rows());
+        let threads = self.effective_threads(bucket);
+        let key = (bucket, threads);
+        let cached = self
+            .pipelines
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(&key)
+            .cloned();
+        if let Some(plan) = cached {
+            self.pipeline_hits.fetch_add(1, Ordering::Relaxed);
+            return plan.run(x, y).map(Some);
+        }
+        let unsettled = {
+            let layers = self.layers.read().unwrap_or_else(|e| e.into_inner());
+            layers.iter().any(|l| !self.settled_for(l, x.rows()))
+        };
+        if unsettled {
+            self.run_layers(x, y)?;
+            return Ok(None);
+        }
+        self.pipeline_misses.fetch_add(1, Ordering::Relaxed);
+        let plan = self.cache_pipeline(key, PipelineMode::Wavefront)?;
+        plan.run(x, y).map(Some)
+    }
+
+    /// Barrier forward pass through every registered layer, per-layer
+    /// cached plans with a full join between layers — the `--no-pipeline`
+    /// escape hatch and the online race's execution path. The first
+    /// layer reads `x` borrowed (no input clone) and intermediates
+    /// ping-pong through the arena, so steady state allocates nothing;
+    /// batches beyond the bucket cap lease exact-size buffers.
+    pub fn run_layers(&self, x: &Matrix, y: &mut Matrix) -> Result<()> {
+        let n_layers = self.num_layers();
+        if n_layers == 0 {
+            return Err(Error::Config("no layers registered".into()));
+        }
+        // Same typed rejection the pipelined path gives — without this a
+        // non-chaining cache would feed one layer's output into the next
+        // layer's mismatched K and panic in a shape assert instead.
+        if n_layers > 1 && !self.layers_chain() {
+            return Err(Error::Shape(
+                "registered layers do not chain (N_i != K_{i+1})".into(),
+            ));
+        }
+        let widths: Vec<usize> = (0..n_layers).map(|i| self.n(LayerId(i))).collect();
+        crate::plan::pipeline::pingpong_forward(
+            &self.arena(),
+            &widths,
+            x,
+            y,
+            |i, xin, yout| self.run(LayerId(i), xin, yout),
+        )
+    }
+
     /// Pre-build plans for every layer at the given batch buckets and the
     /// current thread ceiling (serve startup with a measured table: first
-    /// traffic then allocates nothing and races nothing).
+    /// traffic then allocates nothing and races nothing). When the layers
+    /// chain, the bucket's wavefront pipeline and arena buffers are warmed
+    /// too.
     pub fn warm(&self, buckets: &[usize]) -> Result<()> {
         let n = self.num_layers();
         for i in 0..n {
             for &m in buckets {
                 self.plan_for(LayerId(i), m)?;
+            }
+        }
+        if self.layers_chain() {
+            let arena = self.arena();
+            for &m in buckets {
+                if self.pipelining() {
+                    self.pipeline_for(m)?;
+                }
+                // run_layers uses the arena too, so reserve regardless of
+                // the pipelining flag.
+                if n >= 2 {
+                    arena.reserve(m_bucket(m));
+                }
             }
         }
         Ok(())
@@ -487,49 +797,65 @@ impl PlanCache {
     /// or the M-agnostic fallback), or racing disabled. Unsettled buckets
     /// are left cold on purpose: their first real traffic should run the
     /// online top-2 race, and a pre-built heuristic plan would silently
-    /// skip it. Restores the thread ceiling it found; startup-time only
-    /// (the temporary ceiling changes are visible to concurrent traffic).
+    /// skip it. Buckets whose **every** layer is settled also get their
+    /// wavefront pipeline compiled and arena buffers reserved, so first
+    /// traffic neither compiles nor allocates. Restores the thread ceiling
+    /// it found; startup-time only (the temporary ceiling changes are
+    /// visible to concurrent traffic).
     pub fn warm_settled(&self, buckets: &[usize], thread_steps: &[usize]) -> Result<()> {
         let saved = self.threads();
         let n = self.num_layers();
-        for &step in thread_steps {
+        let chain = self.layers_chain();
+        let mut result = Ok(());
+        'outer: for &step in thread_steps {
             self.set_threads(step);
-            for i in 0..n {
-                let id = LayerId(i);
-                let layer = self.layer(id);
-                for &m in buckets {
-                    let settled = layer.spec.kernel.is_some()
-                        || !self.online_top2
-                        || self
-                            .planner
-                            .lookup_entry(
-                                layer.spec.weights.k(),
-                                layer.spec.weights.density() as f32,
-                                m,
-                            )
-                            .is_some();
-                    if !settled {
+            for &m in buckets {
+                let mut all_settled = true;
+                for i in 0..n {
+                    let id = LayerId(i);
+                    let layer = self.layer(id);
+                    if !self.settled_for(&layer, m) {
+                        all_settled = false;
                         continue;
                     }
                     if let Err(e) = self.plan_for(id, m) {
-                        self.set_threads(saved);
-                        return Err(e);
+                        result = Err(e);
+                        break 'outer;
+                    }
+                }
+                if chain && all_settled {
+                    if self.pipelining() {
+                        if let Err(e) = self.pipeline_for(m) {
+                            result = Err(e);
+                            break 'outer;
+                        }
+                    }
+                    // run_layers uses the arena too, so reserve regardless
+                    // of the pipelining flag.
+                    if n >= 2 {
+                        self.arena().reserve(m_bucket(m));
                     }
                 }
             }
         }
         self.set_threads(saved);
-        Ok(())
+        result
     }
 
-    /// Drop every cached plan (the next batches rebuild from the current
-    /// tuning entries). Prefer [`PlanCache::rebuild`] on a serving path —
-    /// it replaces plans without a window where none exist.
+    /// Drop every cached plan and compiled pipeline (the next batches
+    /// rebuild from the current tuning entries). Prefer
+    /// [`PlanCache::rebuild`] on a serving path — it replaces plans
+    /// without a window where none exist.
     pub fn invalidate(&self) {
         let layers = self.layers.read().unwrap_or_else(|e| e.into_inner());
         for layer in layers.iter() {
             self.plans_lock(layer).clear();
         }
+        drop(layers);
+        self.pipelines
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clear();
     }
 
     /// Re-resolve every cached plan key against the current tuning table
@@ -551,6 +877,21 @@ impl PlanCache {
                 self.plans_lock(layer).insert((bucket, threads), plan);
             }
         }
+        // Re-compile pipelines against the fresh winners, same keys.
+        let keys: Vec<(usize, usize)> = self
+            .pipelines
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .keys()
+            .copied()
+            .collect();
+        for (bucket, threads) in keys {
+            let plan = self.build_pipeline(bucket, threads, PipelineMode::Wavefront)?;
+            self.pipelines
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .insert((bucket, threads), plan);
+        }
         Ok(())
     }
 
@@ -566,6 +907,13 @@ impl PlanCache {
             misses: self.misses.load(Ordering::Relaxed),
             races: self.races.load(Ordering::Relaxed),
             plans: self.plans_built(),
+            pipeline_hits: self.pipeline_hits.load(Ordering::Relaxed),
+            pipeline_misses: self.pipeline_misses.load(Ordering::Relaxed),
+            pipeline_plans: self
+                .pipelines
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .len(),
         }
     }
 }
@@ -892,6 +1240,210 @@ mod tests {
         assert_eq!(cache.plan_for(id, 8).unwrap().kernel_name(), "unrolled_tcsc_12");
         let y = cache.forward(id, &x).unwrap();
         assert!(y.allclose(&dense_oracle(&x, &w, &bias), 1e-3));
+    }
+
+    /// Two chained layers for the pipeline tests (K=48 → 32 → 12).
+    fn chain_cache(threads: usize, online: bool, kernel: Option<KernelId>) -> PlanCache {
+        let cache = cache_with(threads, online);
+        for (k, n, seed) in [(48usize, 32usize, 70u64), (32, 12, 71)] {
+            let mut spec = LayerSpec::new(
+                TernaryMatrix::random(k, n, 0.25, seed),
+                Epilogue::new(vec![0.05; n], 1.0, Some(0.25)),
+            );
+            spec.kernel = kernel;
+            cache.register(spec).unwrap();
+        }
+        cache
+    }
+
+    #[test]
+    fn pipelined_forward_matches_barrier_path_bitwise() {
+        for &threads in &[1usize, 4] {
+            let cache = chain_cache(threads, false, Some(KernelId::InterleavedBlockedTcsc));
+            for &m in &[0usize, 1, 5, 8, 17] {
+                let x = Matrix::random(m, 48, 300 + m as u64);
+                let mut y_barrier = Matrix::zeros(m, 12);
+                cache.run_layers(&x, &mut y_barrier).unwrap();
+                let mut y_pipe = Matrix::zeros(m, 12);
+                let stats = cache
+                    .run_pipelined(&x, &mut y_pipe)
+                    .unwrap()
+                    .expect("settled chain must pipeline");
+                assert_eq!(y_barrier, y_pipe, "threads={threads} m={m}");
+                if m > 0 {
+                    assert!(stats.tasks >= 2);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unsettled_buckets_race_through_barrier_then_pipeline() {
+        let cache = chain_cache(1, true, None);
+        let x = Matrix::random(8, 48, 400);
+        let mut y = Matrix::zeros(8, 12);
+        // First sighting: layers untuned → barrier fallback + races.
+        assert!(cache.run_pipelined(&x, &mut y).unwrap().is_none());
+        assert_eq!(cache.snapshot().races, 2, "both layer classes race");
+        assert_eq!(cache.snapshot().pipeline_plans, 0);
+        // Second sighting: settled → pipeline compiles and runs.
+        let stats = cache.run_pipelined(&x, &mut y).unwrap();
+        assert!(stats.is_some());
+        let snap = cache.snapshot();
+        assert_eq!(snap.races, 2, "pipeline must not skip or repeat races");
+        assert_eq!(snap.pipeline_plans, 1);
+        assert_eq!(snap.pipeline_misses, 1);
+        // Third: cached pipeline.
+        cache.run_pipelined(&x, &mut y).unwrap().unwrap();
+        assert_eq!(cache.snapshot().pipeline_hits, 1);
+    }
+
+    #[test]
+    fn steady_state_pipelined_serving_allocates_no_activations() {
+        let cache = chain_cache(2, false, None);
+        let ms = [1usize, 8, 5, 16];
+        for &m in &ms {
+            let x = Matrix::random(m, 48, 500 + m as u64);
+            let mut y = Matrix::zeros(m, 12);
+            cache.run_pipelined(&x, &mut y).unwrap();
+        }
+        let warm = cache.arena_stats();
+        assert!(warm.allocations > 0, "warmup allocated arena pairs");
+        for round in 0..3u64 {
+            for &m in &ms {
+                let x = Matrix::random(m, 48, 600 + 10 * round + m as u64);
+                let mut y = Matrix::zeros(m, 12);
+                cache.run_pipelined(&x, &mut y).unwrap();
+            }
+        }
+        let hot = cache.arena_stats();
+        assert_eq!(
+            hot.allocations, warm.allocations,
+            "steady state must perform zero activation allocation"
+        );
+        assert_eq!(hot.reuses, warm.reuses + 3 * ms.len() as u64);
+    }
+
+    #[test]
+    fn warm_compiles_pipelines_and_reserves_arena() {
+        let cache = chain_cache(1, false, None);
+        cache.warm(&[1, 8]).unwrap();
+        let snap = cache.snapshot();
+        assert_eq!(snap.pipeline_plans, 2);
+        let warm_allocs = cache.arena_stats().allocations;
+        assert!(warm_allocs >= 2, "arena reserved per bucket");
+        // First traffic: no compile, no allocation — only reuse.
+        let x = Matrix::random(8, 48, 700);
+        let mut y = Matrix::zeros(8, 12);
+        cache.run_pipelined(&x, &mut y).unwrap().unwrap();
+        let snap = cache.snapshot();
+        assert_eq!(snap.pipeline_misses, 2, "warm counted the compiles");
+        assert_eq!(snap.pipeline_hits, 1);
+        assert_eq!(cache.arena_stats().allocations, warm_allocs);
+        assert_eq!(cache.arena_stats().reuses, 1);
+    }
+
+    #[test]
+    fn rebuild_recompiles_pipelines_to_fresh_winners() {
+        let planner = Arc::new(Planner::new());
+        let cache = PlanCache::new(
+            Arc::clone(&planner),
+            PlanCacheConfig {
+                threads: 1,
+                online_top2: false,
+                race_reps: 1,
+            },
+        );
+        for (k, n, seed) in [(64usize, 32usize, 80u64), (32, 8, 81)] {
+            cache
+                .register(LayerSpec::new(
+                    TernaryMatrix::random(k, n, 0.25, seed),
+                    Epilogue::with_bias(vec![0.0; n]),
+                ))
+                .unwrap();
+        }
+        let x = Matrix::random(8, 64, 800);
+        let mut y = Matrix::zeros(8, 8);
+        cache.run_pipelined(&x, &mut y).unwrap().unwrap();
+        assert_eq!(
+            cache.pipeline_for(8).unwrap().kernel_names(),
+            vec!["interleaved_blocked_tcsc"; 2]
+        );
+        planner.record(
+            ShapeClass::of(64, 0.25),
+            TuneEntry {
+                kernel: KernelId::UnrolledTcsc12,
+                flops_per_cycle: 9.0,
+            },
+        );
+        cache.rebuild().unwrap();
+        assert_eq!(
+            cache.pipeline_for(8).unwrap().kernel_names(),
+            vec!["unrolled_tcsc_12", "interleaved_blocked_tcsc"]
+        );
+        let mut y2 = Matrix::zeros(8, 8);
+        cache.run_pipelined(&x, &mut y2).unwrap().unwrap();
+        let mut y_barrier = Matrix::zeros(8, 8);
+        cache.run_layers(&x, &mut y_barrier).unwrap();
+        assert_eq!(y2, y_barrier);
+    }
+
+    #[test]
+    fn non_chaining_layers_reject_pipelining() {
+        // Settled path (no racing): typed rejection from pipeline compile.
+        let cache = cache_with(1, false);
+        for seed in 0..2u64 {
+            cache
+                .register(LayerSpec::new(
+                    TernaryMatrix::random(32, 8, 0.5, seed),
+                    Epilogue::with_bias(vec![0.0; 8]),
+                ))
+                .unwrap();
+        }
+        let x = Matrix::random(4, 32, 900);
+        let mut y = Matrix::zeros(4, 8);
+        assert!(matches!(
+            cache.run_pipelined(&x, &mut y),
+            Err(Error::Shape(_))
+        ));
+        // Racing config: the unsettled fallback goes through run_layers,
+        // which must give the same typed error, not a shape-assert panic.
+        let racing = cache_with(1, true);
+        for seed in 0..2u64 {
+            racing
+                .register(LayerSpec::new(
+                    TernaryMatrix::random(32, 8, 0.5, seed),
+                    Epilogue::with_bias(vec![0.0; 8]),
+                ))
+                .unwrap();
+        }
+        assert!(matches!(
+            racing.run_pipelined(&x, &mut y),
+            Err(Error::Shape(_))
+        ));
+        assert!(matches!(racing.run_layers(&x, &mut y), Err(Error::Shape(_))));
+        // warm() skips the pipeline for non-chains instead of failing.
+        cache.warm(&[1, 4]).unwrap();
+        assert_eq!(cache.snapshot().pipeline_plans, 0);
+    }
+
+    #[test]
+    fn no_pipelining_flag_skips_warm_compiles_but_keeps_arena() {
+        let cache = chain_cache(1, false, Some(KernelId::InterleavedBlockedTcsc));
+        cache.set_pipelining(false);
+        cache.warm(&[1, 8]).unwrap();
+        let snap = cache.snapshot();
+        assert_eq!(snap.pipeline_plans, 0, "--no-pipeline warms no pipelines");
+        assert_eq!(snap.pipeline_misses, 0);
+        assert!(
+            cache.arena_stats().allocations >= 2,
+            "barrier path still gets warmed arena pairs"
+        );
+        // The barrier forward reuses the reserved pair immediately.
+        let x = Matrix::random(8, 48, 910);
+        let mut y = Matrix::zeros(8, 12);
+        cache.run_layers(&x, &mut y).unwrap();
+        assert!(cache.arena_stats().reuses >= 1);
     }
 
     #[test]

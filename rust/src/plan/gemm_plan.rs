@@ -5,6 +5,7 @@ use crate::kernels::{prelu_inplace, GemmScratch, PreparedGemm};
 use crate::plan::partition::{execute_partitioned, RowPartition};
 use crate::tensor::Matrix;
 use crate::util::threadpool::ThreadPool;
+use crate::Result;
 use std::sync::{Arc, Mutex};
 
 /// Everything applied after the raw GEMM: `y = act(scale · (X·W + b))`.
@@ -84,7 +85,11 @@ impl GemmPlan {
     /// Compute `y = act(scale · (x·W + b))` for an M-row batch. `y` must be
     /// M×N and is fully overwritten. Steady-state calls at a fixed M
     /// perform no allocation beyond the per-run job list.
-    pub fn run(&self, x: &Matrix, y: &mut Matrix) {
+    ///
+    /// # Errors
+    /// [`crate::Error::Runtime`] when a partitioned worker panicked (`y`
+    /// is then incomplete and must be discarded).
+    pub fn run(&self, x: &Matrix, y: &mut Matrix) -> Result<()> {
         {
             let mut scratches = self.scratch.lock().unwrap_or_else(|e| e.into_inner());
             execute_partitioned(
@@ -95,16 +100,17 @@ impl GemmPlan {
                 &self.epilogue.bias,
                 y,
                 &mut scratches,
-            );
+            )?;
         }
         self.epilogue.apply(y, self.gemm.fused_prelu());
+        Ok(())
     }
 
     /// Allocating convenience: `run` into a fresh M×N matrix.
-    pub fn forward(&self, x: &Matrix) -> Matrix {
+    pub fn forward(&self, x: &Matrix) -> Result<Matrix> {
         let mut y = Matrix::zeros(x.rows(), self.n());
-        self.run(x, &mut y);
-        y
+        self.run(x, &mut y)?;
+        Ok(y)
     }
 
     /// Registry name of the planned kernel.

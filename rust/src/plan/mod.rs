@@ -38,6 +38,15 @@
 //!               tables keep resolving for every batch size
 //! ```
 //!
+//! Multi-layer models additionally flow through the **wavefront pipeline**
+//! ([`pipeline`]): [`PlanCache::run_pipelined`] compiles every layer into
+//! an [`MlpPlan`] per (M-bucket, threads) — a band-dependency graph whose
+//! `(layer, band)` tasks are pulled by persistent pool workers, with
+//! intermediate activations in [`ActivationArena`] ping-pong buffers — so
+//! layer `i+1`'s first bands overlap layer `i`'s tail and steady-state
+//! serving performs zero activation allocation, while outputs stay bitwise
+//! identical to the barrier path.
+//!
 //! Consumers: [`crate::model::TernaryLinear`] / [`crate::model::TernaryMlp`]
 //! build layers through a shared `Arc<Planner>` + `PlanCache` (kernel names
 //! are optional overrides), [`crate::coordinator::engine::Engine`] serves
@@ -48,6 +57,7 @@
 pub mod cache;
 pub mod gemm_plan;
 pub mod partition;
+pub mod pipeline;
 pub mod planner;
 
 pub use cache::{
@@ -55,4 +65,5 @@ pub use cache::{
 };
 pub use gemm_plan::{Epilogue, GemmPlan};
 pub use partition::{execute_partitioned, RowPartition, ROW_TILE};
+pub use pipeline::{ActivationArena, ArenaStats, MlpPlan, PipelineMode, PipelineStats};
 pub use planner::{heuristic_kernel, heuristic_top2, PlanHints, Planner};

@@ -23,6 +23,7 @@
 use crate::kernels::{GemmScratch, PreparedGemm};
 use crate::tensor::Matrix;
 use crate::util::threadpool::ThreadPool;
+use crate::{Error, Result};
 
 /// The largest M-direction unroll used by any registry kernel (`MU = 4`).
 /// Chunk boundaries are multiples of this so tile membership — and hence
@@ -88,6 +89,12 @@ impl RowPartition {
 /// disjoint `&mut Y` row block in place. `scratches` must hold at least
 /// one slot, and at least as many as the partition can produce chunks when
 /// a pool is supplied; slot `i` is reused by chunk `i` across calls.
+///
+/// # Errors
+/// [`Error::Runtime`] when any worker job panicked — the panic is isolated
+/// by the pool, but `y` is then incomplete and must not be served.
+/// (Sequential execution propagates a kernel panic on the caller thread
+/// unchanged.)
 pub fn execute_partitioned(
     gemm: &dyn PreparedGemm,
     part: RowPartition,
@@ -96,7 +103,7 @@ pub fn execute_partitioned(
     bias: &[f32],
     y: &mut Matrix,
     scratches: &mut [GemmScratch],
-) {
+) -> Result<()> {
     assert!(!scratches.is_empty(), "need at least one scratch slot");
     assert_eq!(x.rows(), y.rows(), "X/Y row mismatch");
     assert_eq!(x.cols(), gemm.k(), "X cols must equal K");
@@ -105,7 +112,7 @@ pub fn execute_partitioned(
     let ranges = part.ranges(m);
     if ranges.len() <= 1 || pool.is_none() {
         gemm.run_with_scratch(x, bias, y, &mut scratches[0]);
-        return;
+        return Ok(());
     }
     let pool = pool.expect("checked above");
     assert!(
@@ -138,7 +145,12 @@ pub fn execute_partitioned(
         }));
     }
     let panicked = pool.run_scoped(jobs);
-    assert_eq!(panicked, 0, "{panicked} partitioned GEMM worker(s) panicked");
+    if panicked > 0 {
+        return Err(Error::Runtime(format!(
+            "{panicked} partitioned GEMM worker(s) panicked"
+        )));
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -202,7 +214,8 @@ mod tests {
                 &bias,
                 &mut y_seq,
                 &mut seq_scratch,
-            );
+            )
+            .unwrap();
             assert!(y_seq.allclose(&oracle, 1e-3), "{name} sequential");
             for threads in [2usize, 4, 8] {
                 let mut scratches: Vec<GemmScratch> =
@@ -216,12 +229,81 @@ mod tests {
                     &bias,
                     &mut y_par,
                     &mut scratches,
-                );
+                )
+                .unwrap();
                 assert_eq!(
                     y_seq, y_par,
                     "{name} threads={threads}: parallel must be bitwise sequential"
                 );
             }
         }
+    }
+
+    /// A kernel that panics mid-batch: the GEMM family's own invariants
+    /// (`debug_check_shapes`, unchecked-gather contracts) panic rather
+    /// than return, so a worker panic is the failure mode the serving
+    /// path must survive.
+    struct PanickingGemm;
+
+    impl PreparedGemm for PanickingGemm {
+        fn name(&self) -> &str {
+            "panicking_test_gemm"
+        }
+        fn run(&self, _x: &Matrix, _bias: &[f32], _y: &mut Matrix) {
+            panic!("injected kernel panic");
+        }
+        fn k(&self) -> usize {
+            8
+        }
+        fn n(&self) -> usize {
+            4
+        }
+        fn nnz(&self) -> usize {
+            0
+        }
+        fn format_bytes(&self) -> usize {
+            0
+        }
+    }
+
+    /// Regression (PR 5): worker panics used to be an ignorable return
+    /// count — now they surface as a typed `Error::Runtime` through the
+    /// plan/execute path, and the pool survives to serve the next batch.
+    #[test]
+    fn worker_panic_surfaces_as_runtime_error() {
+        let pool = ThreadPool::new(2);
+        let x = Matrix::random(16, 8, 1);
+        let bias = vec![0.0f32; 4];
+        let mut y = Matrix::zeros(16, 4);
+        let mut scratches: Vec<GemmScratch> = (0..4).map(|_| GemmScratch::new()).collect();
+        let err = execute_partitioned(
+            &PanickingGemm,
+            RowPartition::new(4, 2),
+            Some(&pool),
+            &x,
+            &bias,
+            &mut y,
+            &mut scratches,
+        )
+        .unwrap_err();
+        assert!(
+            matches!(err, Error::Runtime(ref msg) if msg.contains("panicked")),
+            "{err}"
+        );
+        // The pool is intact: a healthy kernel still runs through it.
+        let w = TernaryMatrix::random(8, 4, 0.5, 2);
+        let gemm = prepare_kernel("base_tcsc", &w, KernelParams::default()).unwrap();
+        let mut ok = Matrix::zeros(16, 4);
+        execute_partitioned(
+            gemm.as_ref(),
+            RowPartition::new(4, 2),
+            Some(&pool),
+            &x,
+            &bias,
+            &mut ok,
+            &mut scratches,
+        )
+        .unwrap();
+        assert!(ok.allclose(&dense_oracle(&x, &w, &bias), 1e-4));
     }
 }

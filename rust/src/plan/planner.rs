@@ -531,7 +531,7 @@ mod tests {
                 *v *= 0.25;
             }
         }
-        let y = plan.forward(&x);
+        let y = plan.forward(&x).unwrap();
         assert!(y.allclose(&want, 1e-4));
     }
 
@@ -557,7 +557,7 @@ mod tests {
         // First run at the expected batch must not grow the scratch.
         let x = Matrix::random(8, 32, 8);
         let mut y = Matrix::zeros(8, 8);
-        plan.run(&x, &mut y);
+        plan.run(&x, &mut y).unwrap();
         assert_eq!(plan.scratch_capacities(), caps);
     }
 }

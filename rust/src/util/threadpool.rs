@@ -143,6 +143,34 @@ impl ThreadPool {
         s.1
     }
 
+    /// Scoped **worker-loop** fan-out: run `n` copies of `worker` (each
+    /// handed its worker index) and block until all of them return. Where
+    /// [`ThreadPool::run_scoped`] submits one closure per pre-assigned
+    /// chunk, this is the pull-model generalization the wavefront pipeline
+    /// scheduler needs: each copy of `worker` loops pulling `(layer, band)`
+    /// tasks from a shared scheduler until the task graph is drained, so
+    /// one forward pass costs `n` pool jobs instead of layers × bands.
+    ///
+    /// The copies must not depend on each other to make progress (any
+    /// single worker must be able to drain the shared work source alone):
+    /// on a saturated pool the copies may run *sequentially*, and a worker
+    /// that blocks waiting on a sibling would deadlock.
+    ///
+    /// Returns the number of workers that panicked (0 = all completed);
+    /// borrows in `worker` stay alive until every copy has finished, same
+    /// as [`ThreadPool::run_scoped`].
+    #[must_use = "a non-zero return means worker jobs panicked"]
+    pub fn run_scoped_workers<F>(&self, n: usize, worker: F) -> usize
+    where
+        F: Fn(usize) + Send + Sync,
+    {
+        let worker = &worker;
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..n)
+            .map(|i| Box::new(move || worker(i)) as Box<dyn FnOnce() + Send + '_>)
+            .collect();
+        self.run_scoped(jobs)
+    }
+
     /// Block until every submitted job has finished (spin + yield; used by
     /// tests and batch drivers, not the server hot path).
     pub fn wait_idle(&self) {
@@ -271,6 +299,38 @@ mod tests {
         assert_eq!(flag.load(Ordering::SeqCst), 11);
         // Scoped panics are caught locally, not via the pool counter.
         assert_eq!(pool.panic_count(), 0);
+    }
+
+    #[test]
+    fn run_scoped_workers_share_a_task_queue() {
+        let pool = ThreadPool::new(4);
+        let next = AtomicU64::new(0);
+        let done = AtomicU64::new(0);
+        // Any worker can drain the queue alone; together they cover it
+        // exactly once.
+        assert_eq!(
+            pool.run_scoped_workers(4, |_worker| {
+                while next.fetch_add(1, Ordering::SeqCst) < 100 {
+                    done.fetch_add(1, Ordering::SeqCst);
+                }
+            }),
+            0
+        );
+        assert_eq!(done.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn run_scoped_workers_reports_panics() {
+        let pool = ThreadPool::new(2);
+        let survivors = AtomicU64::new(0);
+        let panicked = pool.run_scoped_workers(3, |worker| {
+            if worker == 1 {
+                panic!("worker boom");
+            }
+            survivors.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(panicked, 1);
+        assert_eq!(survivors.load(Ordering::SeqCst), 2);
     }
 
     #[test]

@@ -121,8 +121,8 @@ fn stw_serialization_preserves_forward_semantics() {
     let rebuilt = TernaryMlp::from_layers("s".into(), rebuilt_layers).unwrap();
 
     let x = Matrix::random(5, 24, 99);
-    let a = original.forward(&x);
-    let b = rebuilt.forward(&x);
+    let a = original.forward(&x).unwrap();
+    let b = rebuilt.forward(&x).unwrap();
     // Cross-kernel tolerance: the serving model's online race and the
     // rebuilt model's heuristic may legitimately pick different kernels.
     assert!(a.allclose(&b, 1e-4), "maxΔ {}", a.max_abs_diff(&b));
@@ -151,8 +151,8 @@ fn explicit_kernel_override_is_the_escape_hatch() {
     let x = Matrix::random(4, 64, 6);
     let mut yp = Matrix::zeros(4, 16);
     let mut ya = Matrix::zeros(4, 16);
-    pinned.forward(&x, &mut yp);
-    planned.forward(&x, &mut ya);
+    pinned.forward(&x, &mut yp).unwrap();
+    planned.forward(&x, &mut ya).unwrap();
     assert!(yp.allclose(&ya, 1e-4), "override and planned path agree");
 }
 

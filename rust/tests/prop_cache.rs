@@ -10,11 +10,16 @@
 //!    a tuned (class, bucket) again.
 //! 4. A PR-2-era (K, sparsity)-keyed tuning JSON still loads and resolves
 //!    for every batch size via the M-agnostic fallback.
+//! 5. (PR 5) The wavefront-pipelined forward pass is **bitwise identical**
+//!    to the sequential barrier path across M buckets × thread counts ×
+//!    layer counts, including the M=0 and single-band edge cases, and
+//!    steady-state pipelined serving performs zero activation allocation.
 
 use std::sync::Arc;
 
 use stgemm::autotune::{ShapeClass, TuneEntry, TuningTable};
 use stgemm::kernels::{dense_oracle, KernelId, KernelParams};
+use stgemm::model::{ModelConfig, TernaryMlp};
 use stgemm::plan::{
     m_bucket, Epilogue, LayerSpec, PlanCache, PlanCacheConfig, PlanHints, Planner,
 };
@@ -67,7 +72,7 @@ fn cached_plan_is_bitwise_identical_to_fresh_sequential_plan() {
                 )
                 .unwrap();
             let mut y_fresh = Matrix::zeros(m, N);
-            fresh.run(&x, &mut y_fresh);
+            fresh.run(&x, &mut y_fresh).unwrap();
             assert_eq!(
                 y_cached, y_fresh,
                 "threads={threads} m={m} (bucket {}): cache diverged from \
@@ -146,7 +151,7 @@ fn per_m_table_winners_are_honored_per_bucket_and_stay_bitwise_identical() {
                 )
                 .unwrap();
             let mut y_fresh = Matrix::zeros(m, N);
-            fresh.run(&x, &mut y_fresh);
+            fresh.run(&x, &mut y_fresh).unwrap();
             assert_eq!(
                 y_cached, y_fresh,
                 "threads={threads} m={m}: M-aware winner diverged from its \
@@ -242,7 +247,7 @@ fn raced_plan_is_bitwise_identical_to_its_sequential_twin() {
             )
             .unwrap();
         let mut y_fresh = Matrix::zeros(m, N);
-        fresh.run(&x, &mut y_fresh);
+        fresh.run(&x, &mut y_fresh).unwrap();
         assert_eq!(y_cached, y_fresh, "m={m} winner={winner}");
     }
 }
@@ -362,4 +367,134 @@ fn explicit_override_bypasses_race_and_table() {
     assert_eq!(cache.snapshot().races, 0, "override must not race");
     assert!(planner.lookup_entry(K, 0.25, 8).is_none());
     assert_eq!(cache.kernel_for(id, 8), KernelId::BaseTcsc);
+}
+
+/// PR-5 tentpole acceptance: the wavefront-pipelined forward pass is
+/// bitwise identical to the sequential barrier path across M buckets ×
+/// thread counts (1–4) × layer counts (1–4) — including the M=0-rows edge
+/// case and batches small enough to produce a single band per layer.
+/// Kernel pinned so both paths deterministically execute the same plan.
+#[test]
+fn pipelined_forward_is_bitwise_identical_to_barrier_path() {
+    let dims_by_layers: [&[usize]; 5] = [
+        &[48, 16],
+        &[48, 32, 16],
+        &[48, 32, 24, 16],
+        &[48, 32, 24, 20, 16],
+        // Same-parity width mismatches (8 → 64 growing, 16 → 4 shrinking):
+        // the ping-pong anti-dependency regression case.
+        &[48, 8, 16, 64, 4, 16],
+    ];
+    for dims in &dims_by_layers {
+        for threads in 1usize..=4 {
+            let cfg = ModelConfig::from_json(&format!(
+                r#"{{"name":"p","dims":{dims:?},"sparsity":0.25,"seed":9,
+                    "prelu_alpha":0.25,"kernel":"interleaved_blocked_tcsc",
+                    "threads":{threads}}}"#
+            ))
+            .unwrap();
+            let mlp = TernaryMlp::from_config(&cfg).unwrap();
+            // m=0: empty batch; m=1/3: a single band per layer.
+            for &m in &[0usize, 1, 3, 8, 13, 33] {
+                let x = Matrix::random(m, 48, 100 + m as u64);
+                mlp.set_pipeline(true);
+                let wave = mlp.forward(&x).unwrap();
+                mlp.set_pipeline(false);
+                let barrier = mlp.forward(&x).unwrap();
+                assert_eq!(
+                    wave, barrier,
+                    "layers={} threads={threads} m={m}: wavefront diverged \
+                     from the barrier path",
+                    dims.len() - 1
+                );
+            }
+        }
+    }
+}
+
+/// Same identity with planner-selected kernels: the online races settle
+/// each (class, bucket) into the shared table first (through the barrier
+/// fallback), and the pipeline compiled afterwards must pick — and stay
+/// bitwise identical to — exactly those winners.
+#[test]
+fn pipelined_auto_kernels_stay_bitwise_identical_after_races() {
+    let planner = Arc::new(Planner::new());
+    let cfg = ModelConfig::from_json(
+        r#"{"name":"p","dims":[48,32,16],"sparsity":0.25,"seed":13,
+            "prelu_alpha":0.25,"threads":4}"#,
+    )
+    .unwrap();
+    let mlp = TernaryMlp::planned(&cfg, &planner).unwrap();
+    for &m in &[1usize, 8, 16] {
+        // First pass races (barrier fallback), second runs the pipeline.
+        mlp.forward(&Matrix::random(m, 48, 200 + m as u64)).unwrap();
+        let x = Matrix::random(m, 48, 300 + m as u64);
+        mlp.set_pipeline(true);
+        let wave = mlp.forward(&x).unwrap();
+        mlp.set_pipeline(false);
+        let barrier = mlp.forward(&x).unwrap();
+        mlp.set_pipeline(true);
+        assert_eq!(wave, barrier, "m={m}");
+    }
+    let cache = mlp.plan_cache().expect("config-built model");
+    let snap = cache.snapshot();
+    assert!(snap.races > 0, "untuned classes must have raced");
+    assert!(snap.pipeline_plans > 0, "settled buckets must have pipelined");
+}
+
+/// Zero-allocation acceptance: after plan-cache warmup, steady-state
+/// pipelined serving checks every activation buffer out of the arena —
+/// the allocation counter freezes while the reuse counter climbs.
+#[test]
+fn steady_state_pipeline_has_zero_activation_allocations() {
+    let cfg = ModelConfig::from_json(
+        r#"{"name":"p","dims":[48,32,16],"sparsity":0.25,"seed":17,
+            "kernel":"interleaved_blocked_tcsc","threads":2}"#,
+    )
+    .unwrap();
+    let mlp = TernaryMlp::from_config(&cfg).unwrap();
+    let cache = mlp.plan_cache().expect("config-built model");
+    let stream = [1usize, 4, 8, 2, 16, 7, 3, 8];
+    for (i, &m) in stream.iter().enumerate() {
+        mlp.forward(&Matrix::random(m, 48, 400 + i as u64)).unwrap();
+    }
+    let warm = cache.arena_stats();
+    assert!(warm.allocations > 0);
+    for round in 0..3u64 {
+        for (i, &m) in stream.iter().enumerate() {
+            mlp.forward(&Matrix::random(m, 48, 500 + 20 * round + i as u64))
+                .unwrap();
+        }
+    }
+    let hot = cache.arena_stats();
+    assert_eq!(
+        hot.allocations, warm.allocations,
+        "steady state must allocate no activation buffers"
+    );
+    assert_eq!(
+        hot.reuses,
+        warm.reuses + 3 * stream.len() as u64,
+        "every steady-state forward reuses an arena pair"
+    );
+}
+
+/// Regression: batches past the M-bucket cap (1024) must keep working on
+/// every path — the arena leases exact-size buffer pairs there, and the
+/// pipelined entry point falls back to the barrier path (whose bucketed
+/// plans and pipelines stop covering `m`).
+#[test]
+fn batches_beyond_the_bucket_cap_still_forward() {
+    let cfg = ModelConfig::from_json(
+        r#"{"name":"big","dims":[8,16,4],"sparsity":0.25,"seed":23,
+            "kernel":"base_tcsc","threads":2}"#,
+    )
+    .unwrap();
+    let mlp = TernaryMlp::from_config(&cfg).unwrap();
+    let m = stgemm::plan::MAX_M_BUCKET + 77;
+    let x = Matrix::random(m, 8, 9);
+    let wave = mlp.forward(&x).unwrap();
+    assert_eq!((wave.rows(), wave.cols()), (m, 4));
+    mlp.set_pipeline(false);
+    let barrier = mlp.forward(&x).unwrap();
+    assert_eq!(wave, barrier, "cap-overflow fallback must stay bitwise");
 }

@@ -56,7 +56,7 @@ fn every_kernel_through_plan_matches_oracle() {
                         )
                         .unwrap();
                     let mut y = Matrix::zeros(m, n);
-                    plan.run(&x, &mut y);
+                    plan.run(&x, &mut y).unwrap();
                     assert!(
                         y.allclose(&want, 2e-3),
                         "kernel {name} m={m} s={s} scale={scale} prelu={prelu:?} \
@@ -97,7 +97,7 @@ fn steady_state_run_is_allocation_stable() {
             let caps_before = plan.scratch_capacities();
             let mut y = Matrix::zeros(m, n);
             for _ in 0..8 {
-                plan.run(&x, &mut y);
+                plan.run(&x, &mut y).unwrap();
             }
             assert_eq!(
                 plan.scratch_capacities(),
@@ -107,7 +107,7 @@ fn steady_state_run_is_allocation_stable() {
             // A smaller batch reuses the same buffers.
             let x_small = Matrix::random(m / 2, k, 44);
             let mut y_small = Matrix::zeros(m / 2, n);
-            plan.run(&x_small, &mut y_small);
+            plan.run(&x_small, &mut y_small).unwrap();
             assert_eq!(
                 plan.scratch_capacities(),
                 caps_before,
@@ -146,8 +146,8 @@ fn parallel_plan_is_bitwise_sequential() {
             let par = build(4);
             let mut y_seq = Matrix::zeros(m, n);
             let mut y_par = Matrix::zeros(m, n);
-            seq.run(&x, &mut y_seq);
-            par.run(&x, &mut y_par);
+            seq.run(&x, &mut y_seq).unwrap();
+            par.run(&x, &mut y_par).unwrap();
             assert_eq!(y_seq, y_par, "kernel {name} m={m}");
         }
     }
@@ -178,7 +178,7 @@ fn plan_respects_group_override() {
                 )
                 .unwrap();
             let mut y = Matrix::zeros(m, n);
-            plan.run(&x, &mut y);
+            plan.run(&x, &mut y).unwrap();
             assert!(y.allclose(&want, 1e-3), "{name} group={g}");
         }
     }

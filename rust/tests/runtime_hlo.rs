@@ -77,7 +77,7 @@ fn native_kernels_match_probe_outputs() {
     for v in m.variants_of("ffn_tiny") {
         let x = Matrix::from_slice(v.batch, v.d_in, &v.load_probe_x(&m.dir).unwrap());
         let want = Matrix::from_slice(v.batch, v.d_out, &v.load_probe_y(&m.dir).unwrap());
-        let got = mlp.forward(&x);
+        let got = mlp.forward(&x).expect("native forward");
         assert!(
             got.allclose(&want, 1e-3),
             "{}: native output diverges by {}",

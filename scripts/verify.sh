@@ -9,6 +9,11 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# Release-mode smoke: optimized timing shifts the wavefront scheduler's
+# interleavings, so races masked by debug-build slowness surface here.
+echo "== cargo test --release -q =="
+cargo test --release -q
+
 echo "== cargo fmt --check =="
 cargo fmt --check
 
