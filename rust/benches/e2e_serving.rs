@@ -9,14 +9,21 @@
 //! [`PipelineMode::Barrier`] vs [`PipelineMode::Wavefront`], recording
 //! per-layer barrier stall time. Everything lands in `e2e_serving.json` so
 //! the pipelining win is tracked across PRs.
+//!
+//! PR 6 additions: a per-kernel-family GFLOP/s section — one representative
+//! per [`KernelFamily`], chosen purely through the descriptor capability
+//! query (the host's [`CpuCaps`] filter, no kernel-name literals) — plus
+//! the serving p50/p99 rows, written to `BENCH_pr6.json` at the repo root.
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use stgemm::bench::harness::BenchScale;
+use stgemm::bench::harness::{measure_kernel, BenchScale};
 use stgemm::bench::report::{write_csv, Table};
 use stgemm::coordinator::{Backend, BatchPolicy, Engine, LoadGenerator, Router};
+use stgemm::kernels::{descriptors, KernelDescriptor, KernelFamily, KernelParams};
 use stgemm::model::{ModelConfig, TernaryLinear, TernaryMlp};
+use stgemm::perf::CpuCaps;
 use stgemm::plan::{PipelineMode, PipelineStats, PlanHints, Planner};
 use stgemm::runtime::{Manifest, XlaExecutor};
 use stgemm::tensor::Matrix;
@@ -186,6 +193,56 @@ fn barrier_vs_wavefront(reps: usize) -> Json {
     ])
 }
 
+/// One representative kernel per [`KernelFamily`], measured on the serving
+/// FFN's hot shape. Representatives come from a pure capability query: the
+/// host-available descriptors of each family, preferring a SIMD member
+/// (the family at its best on this machine) — no kernel-name literals, so
+/// new families land here automatically and a capability-gated kernel is
+/// never measured on a host that cannot run it.
+fn family_gflops(scale: BenchScale) -> Json {
+    let caps = CpuCaps::host();
+    let timer = scale.timer();
+    let (m, k, n, s) = (64usize, 1024usize, 256usize, 0.25f32);
+    let mut families: Vec<KernelFamily> = Vec::new();
+    for d in descriptors() {
+        if !families.contains(&d.family) {
+            families.push(d.family);
+        }
+    }
+    let mut rows = Vec::new();
+    for family in families {
+        let avail: Vec<&KernelDescriptor> = descriptors()
+            .iter()
+            .filter(|d| d.family == family && caps.satisfies(d.requires))
+            .collect();
+        let rep = match avail.iter().find(|d| d.simd).or_else(|| avail.first()) {
+            Some(rep) => *rep,
+            None => {
+                println!("[e2e] family {family:?}: no kernel runnable on this host — skipped");
+                continue;
+            }
+        };
+        let meas = measure_kernel(rep.name, m, k, n, s, 42, KernelParams::default(), &timer);
+        println!(
+            "[e2e] family {family:?}: {} at {:.2} GFLOP/s ({:.3} flops/cycle, M={m} K={k} N={n} s={s})",
+            rep.name,
+            meas.gflops(),
+            meas.flops_per_cycle(),
+        );
+        rows.push(Json::obj(vec![
+            ("family", Json::str(format!("{family:?}"))),
+            ("kernel", Json::str(rep.name.to_string())),
+            ("m", Json::num(m as f64)),
+            ("k", Json::num(k as f64)),
+            ("n", Json::num(n as f64)),
+            ("sparsity", Json::num(s as f64)),
+            ("gflops", Json::num(meas.gflops())),
+            ("flops_per_cycle", Json::num(meas.flops_per_cycle())),
+        ]));
+    }
+    Json::arr(rows)
+}
+
 fn main() {
     let scale = BenchScale::from_env();
     let (clients, reqs, stall_reps) = match scale {
@@ -287,5 +344,33 @@ fn main() {
     match std::fs::write("e2e_serving.json", report.encode_pretty()) {
         Ok(()) => println!("  [json] e2e_serving.json"),
         Err(e) => eprintln!("  [json] write failed: {e}"),
+    }
+
+    // PR 6 tracking artifact: per-family GFLOP/s (capability-selected
+    // representatives) plus the serving latency rows, at the repo root so
+    // cross-PR tooling finds it without knowing the crate layout.
+    let families = family_gflops(scale);
+    let pr6 = Json::obj(vec![
+        ("bench", Json::str("pr6_outer_product")),
+        (
+            "serving",
+            Json::arr(rows.iter().map(|r| {
+                Json::obj(vec![
+                    ("backend", Json::str(r.backend.clone())),
+                    ("p50_us", Json::num(r.p50_us as f64)),
+                    ("p99_us", Json::num(r.p99_us as f64)),
+                    ("rps", Json::num(r.rps)),
+                ])
+            })),
+        ),
+        ("kernel_families", families),
+    ]);
+    let pr6_path = match std::path::Path::new(env!("CARGO_MANIFEST_DIR")).parent() {
+        Some(root) => root.join("BENCH_pr6.json"),
+        None => std::path::PathBuf::from("BENCH_pr6.json"),
+    };
+    match std::fs::write(&pr6_path, pr6.encode_pretty()) {
+        Ok(()) => println!("  [json] {}", pr6_path.display()),
+        Err(e) => eprintln!("  [json] {} write failed: {e}", pr6_path.display()),
     }
 }

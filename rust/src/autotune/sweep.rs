@@ -32,6 +32,7 @@ use crate::autotune::table::{m_bucket, ShapeClass, TuneEntry, TuningTable};
 use crate::bench::harness::measure_kernel;
 use crate::kernels::{KernelId, KernelParams};
 use crate::model::ModelConfig;
+use crate::perf::cpu::CpuCaps;
 use crate::perf::timer::CycleTimer;
 
 /// One (layer shape, bucket, kernel) measurement from a sweep.
@@ -102,6 +103,20 @@ pub fn variance_floor(cvs: impl IntoIterator<Item = f64>) -> f64 {
 /// Clamp a requested divergence threshold to the measured noise floor.
 pub fn effective_divergence(requested: f64, floor: f64) -> f64 {
     requested.max(floor)
+}
+
+/// The subset of `candidates` whose descriptor capability requirements
+/// `caps` satisfies. The sweep applies this with the host's capabilities
+/// so a capability-gated kernel (e.g. the NEON outer-product tile) can
+/// never be measured — or recorded as a winner — on a host that cannot
+/// run it, even if a caller hands the sweep the full registry. Pure so
+/// gating is testable with synthetic capability sets.
+pub fn admissible_candidates(caps: &CpuCaps, candidates: &[KernelId]) -> Vec<KernelId> {
+    candidates
+        .iter()
+        .copied()
+        .filter(|id| caps.satisfies(id.descriptor().requires))
+        .collect()
 }
 
 /// Decide the tuning entries for one class from its per-(kernel, bucket)
@@ -204,6 +219,11 @@ pub fn decide_winners(
 /// divergence, so it leaves race-recorded splits in place rather than
 /// silently discarding per-bucket knowledge it cannot recreate (run
 /// `--per-m` to re-evaluate them). Unswept classes are untouched.
+///
+/// Capability hygiene: candidates are filtered through
+/// [`admissible_candidates`] against the host's [`CpuCaps`] before any
+/// measurement, so a gated kernel cannot be swept — let alone recorded as
+/// a table winner — on a host lacking its required capabilities.
 pub fn sweep_model_opts(
     cfg: &ModelConfig,
     buckets: &[usize],
@@ -212,7 +232,11 @@ pub fn sweep_model_opts(
     table: &mut TuningTable,
     opts: &SweepOptions,
 ) -> SweepReport {
-    assert!(!candidates.is_empty(), "sweep needs at least one candidate");
+    let candidates = admissible_candidates(&CpuCaps::host(), candidates);
+    assert!(
+        !candidates.is_empty(),
+        "sweep needs at least one candidate runnable on this host"
+    );
     let buckets: Vec<usize> = if buckets.is_empty() {
         vec![16]
     } else {
@@ -232,7 +256,7 @@ pub fn sweep_model_opts(
         seen.push(class);
         let mut measured: Vec<(KernelId, Vec<f64>)> = Vec::with_capacity(candidates.len());
         let mut class_cvs: Vec<f64> = Vec::new();
-        for &kernel in candidates {
+        for &kernel in &candidates {
             let mut fpcs = Vec::with_capacity(buckets.len());
             for &m in &buckets {
                 let meas = measure_kernel(
@@ -365,6 +389,50 @@ mod tests {
         let report = sweep_model(&c, &[], &[A], &timer, &mut table);
         assert_eq!(report.points.len(), 2, "one default bucket per class");
         assert!(report.points.iter().all(|p| p.bucket == 16));
+    }
+
+    #[test]
+    fn capability_gated_candidates_are_filtered() {
+        use crate::kernels::{available_ids, kernel_ids, KernelFamily};
+        // A scalar-only capability set loses exactly the gated kernels —
+        // and agrees with the registry's own availability query.
+        let scalar = admissible_candidates(&CpuCaps::scalar_only(), kernel_ids());
+        assert!(scalar.iter().all(|id| id.descriptor().requires.is_empty()));
+        assert!(
+            scalar
+                .iter()
+                .any(|id| id.descriptor().family == KernelFamily::OuterProduct),
+            "portable tile emulation must survive scalar filtering"
+        );
+        assert!(!scalar.contains(&KernelId::OuterProductTileSimd));
+        assert_eq!(scalar, available_ids(&CpuCaps::scalar_only()));
+        // An apple-like capability set keeps the full registry.
+        let apple = admissible_candidates(&CpuCaps::apple_like(), kernel_ids());
+        assert_eq!(apple, kernel_ids().to_vec());
+    }
+
+    #[test]
+    fn capability_gated_sweep_never_measures_unrunnable_kernels() {
+        use crate::kernels::kernel_ids;
+        let c = cfg();
+        let timer = CycleTimer::new(0, 1);
+        let mut table = TuningTable::new();
+        // Hand the sweep the *full* registry: the host filter must drop
+        // anything this machine cannot run before measurement, so every
+        // point and every recorded winner is runnable here.
+        let report = sweep_model(&c, &[1], kernel_ids(), &timer, &mut table);
+        let caps = CpuCaps::host();
+        for p in &report.points {
+            assert!(
+                caps.satisfies(p.kernel.descriptor().requires),
+                "swept a kernel the host cannot run: {}",
+                p.kernel
+            );
+        }
+        for (_, entry) in &report.winners {
+            assert!(caps.satisfies(entry.kernel.descriptor().requires));
+        }
+        assert!(!report.points.is_empty());
     }
 
     #[test]

@@ -27,6 +27,10 @@ pub enum Error {
     /// Kernel build parameters rejected by
     /// [`crate::kernels::KernelParams::validate`] (e.g. interleave group 0).
     BadKernelParams(String),
+    /// A kernel whose descriptor `requires` a CPU capability the planner's
+    /// [`crate::perf::CpuCaps`] does not satisfy (explicit plan hints or
+    /// plan-cache registrations naming a gated kernel on the wrong host).
+    UnsupportedKernel(String),
     /// Operand shape mismatch: bias length vs N, layer dim chaining,
     /// request input width vs `d_in`.
     Shape(String),
@@ -63,6 +67,7 @@ impl Error {
         match self {
             Error::UnknownKernel(_)
             | Error::BadKernelParams(_)
+            | Error::UnsupportedKernel(_)
             | Error::Config(_)
             | Error::Tuning(_) => 2,
             Error::Shape(_)
@@ -79,6 +84,7 @@ impl std::fmt::Display for Error {
         match self {
             Error::UnknownKernel(name) => write!(f, "unknown kernel '{name}'"),
             Error::BadKernelParams(msg) => write!(f, "bad kernel params: {msg}"),
+            Error::UnsupportedKernel(msg) => write!(f, "unsupported kernel: {msg}"),
             Error::Shape(msg) => write!(f, "shape mismatch: {msg}"),
             Error::Config(msg) => write!(f, "config: {msg}"),
             Error::Tuning(msg) => write!(f, "tuning table: {msg}"),
@@ -105,6 +111,9 @@ mod tests {
         assert!(Error::Shape("bias 3 != N 4".into())
             .to_string()
             .starts_with("shape mismatch"));
+        assert!(Error::UnsupportedKernel("needs neon".into())
+            .to_string()
+            .starts_with("unsupported kernel"));
         assert!(Error::Io("read x: gone".into()).to_string().starts_with("io:"));
     }
 
@@ -113,6 +122,10 @@ mod tests {
         assert_eq!(Error::UnknownKernel("x".into()).exit_code(), 2);
         assert_eq!(Error::Config("bad".into()).exit_code(), 2);
         assert_eq!(Error::BadKernelParams("g=0".into()).exit_code(), 2);
+        assert_eq!(
+            Error::UnsupportedKernel("needs neon".into()).exit_code(),
+            2
+        );
         assert_eq!(Error::Tuning("bad key".into()).exit_code(), 2);
         assert_eq!(Error::Runtime("pjrt".into()).exit_code(), 1);
         assert_eq!(Error::Io("read".into()).exit_code(), 1);

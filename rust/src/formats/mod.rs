@@ -15,7 +15,9 @@ pub mod interleaved_blocked;
 pub mod symmetric;
 pub mod compressed;
 pub mod inverted;
+pub mod outer_tile;
 
+pub use outer_tile::{TilePanelTcsc, OUTER_TILE};
 pub use tcsc::Tcsc;
 pub use blocked::BlockedTcsc;
 pub use interleaved::InterleavedTcsc;

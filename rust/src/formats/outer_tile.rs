@@ -1,0 +1,304 @@
+//! Tile-panel TCSC — the storage layout behind the outer-product kernel
+//! family.
+//!
+//! Columns are grouped into panels of [`OUTER_TILE`] consecutive output
+//! columns. Within a panel the sign-split nonzeros are stored as two
+//! streams — `(k, c)` pairs in `(k, c)`-lexicographic order, where `c` is
+//! the column offset *inside* the panel (fits in a `u8`). An outer-product
+//! kernel walks one panel's streams once per M-row tile: every entry turns
+//! into an add (or sub) of a gathered X value into a register-resident
+//! T×T accumulator tile, so the accumulators never round-trip through
+//! memory inside a panel.
+//!
+//! The `(k, c)` order is load-bearing for bitwise reproducibility: for any
+//! fixed output cell `(r, col)` the entries of that cell's column appear in
+//! ascending-k order within the stream, which is exactly the order the
+//! sequential baseline ([`crate::kernels::BaseTcscKernel`]) accumulates
+//! them in. With one accumulator per cell, positives applied before
+//! negatives, the outer-product kernels reproduce the baseline's f32
+//! rounding bit for bit.
+
+use crate::formats::SparseFormat;
+use crate::ternary::TernaryMatrix;
+
+/// Accumulator tile width: panels cover `OUTER_TILE` output columns, and
+/// the kernels pair that with `OUTER_TILE` X rows for a T×T register tile.
+pub const OUTER_TILE: usize = 4;
+
+/// Sign-split tile-panel format: per-panel `(k, c)`-ordered entry streams.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TilePanelTcsc {
+    k: usize,
+    n: usize,
+    /// Panel (column-tile) width; currently always [`OUTER_TILE`].
+    pub tile: usize,
+    /// Start of each panel's +1 entries in `pos_k`/`pos_c`; length
+    /// `panels + 1`.
+    pub panel_start_pos: Vec<u32>,
+    /// Start of each panel's -1 entries in `neg_k`/`neg_c`; length
+    /// `panels + 1`.
+    pub panel_start_neg: Vec<u32>,
+    /// Row (k) index of every +1 entry, panel-major, `(k, c)`-ascending
+    /// within a panel.
+    pub pos_k: Vec<u32>,
+    /// In-panel column offset of every +1 entry; parallel to `pos_k`.
+    pub pos_c: Vec<u8>,
+    /// Row (k) index of every -1 entry, panel-major, `(k, c)`-ascending
+    /// within a panel.
+    pub neg_k: Vec<u32>,
+    /// In-panel column offset of every -1 entry; parallel to `neg_k`.
+    pub neg_c: Vec<u8>,
+}
+
+impl TilePanelTcsc {
+    /// Build from a dense ternary matrix, panels of [`OUTER_TILE`] columns.
+    pub fn from_ternary(w: &TernaryMatrix) -> TilePanelTcsc {
+        let (k, n) = (w.k(), w.n());
+        let tile = OUTER_TILE;
+        let panels = n.div_ceil(tile);
+        let mut panel_start_pos = Vec::with_capacity(panels + 1);
+        let mut panel_start_neg = Vec::with_capacity(panels + 1);
+        let mut pos_k = Vec::new();
+        let mut pos_c = Vec::new();
+        let mut neg_k = Vec::new();
+        let mut neg_c = Vec::new();
+        panel_start_pos.push(0);
+        panel_start_neg.push(0);
+        for p in 0..panels {
+            let col0 = p * tile;
+            let width = tile.min(n - col0);
+            // k outer, c inner → (k, c)-lexicographic per panel per sign.
+            for row in 0..k {
+                for c in 0..width {
+                    match w.get(row, col0 + c) {
+                        1 => {
+                            pos_k.push(row as u32);
+                            pos_c.push(c as u8);
+                        }
+                        -1 => {
+                            neg_k.push(row as u32);
+                            neg_c.push(c as u8);
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            panel_start_pos.push(pos_k.len() as u32);
+            panel_start_neg.push(neg_k.len() as u32);
+        }
+        let f = TilePanelTcsc {
+            k,
+            n,
+            tile,
+            panel_start_pos,
+            panel_start_neg,
+            pos_k,
+            pos_c,
+            neg_k,
+            neg_c,
+        };
+        debug_assert_eq!(f.validate(), Ok(()));
+        f
+    }
+
+    /// Number of column panels.
+    pub fn panels(&self) -> usize {
+        self.n.div_ceil(self.tile)
+    }
+
+    /// Width of panel `p` (the last panel may be narrower than `tile`).
+    pub fn panel_width(&self, p: usize) -> usize {
+        self.tile.min(self.n - p * self.tile)
+    }
+
+    /// Panel `p`'s +1 entries as parallel `(k, c)` slices.
+    #[inline]
+    pub fn panel_pos(&self, p: usize) -> (&[u32], &[u8]) {
+        let lo = self.panel_start_pos[p] as usize;
+        let hi = self.panel_start_pos[p + 1] as usize;
+        (&self.pos_k[lo..hi], &self.pos_c[lo..hi])
+    }
+
+    /// Panel `p`'s -1 entries as parallel `(k, c)` slices.
+    #[inline]
+    pub fn panel_neg(&self, p: usize) -> (&[u32], &[u8]) {
+        let lo = self.panel_start_neg[p] as usize;
+        let hi = self.panel_start_neg[p + 1] as usize;
+        (&self.neg_k[lo..hi], &self.neg_c[lo..hi])
+    }
+
+    fn validate_stream(
+        &self,
+        label: &str,
+        panel_start: &[u32],
+        ks: &[u32],
+        cs: &[u8],
+    ) -> crate::Result<()> {
+        let panels = self.panels();
+        let err = |msg: String| Err(crate::Error::Format(format!("TilePanelTCSC {label}: {msg}")));
+        if panel_start.len() != panels + 1 {
+            return err(format!("panel_start length {} != panels+1", panel_start.len()));
+        }
+        if panel_start[0] != 0 {
+            return err("panel_start[0] != 0".to_string());
+        }
+        if *panel_start.last().unwrap() as usize != ks.len() {
+            return err("panel_start end != entry count".to_string());
+        }
+        if ks.len() != cs.len() {
+            return err("k/c stream length mismatch".to_string());
+        }
+        for p in 0..panels {
+            if panel_start[p] > panel_start[p + 1] {
+                return err(format!("panel_start not monotone at panel {p}"));
+            }
+            let lo = panel_start[p] as usize;
+            let hi = panel_start[p + 1] as usize;
+            let width = self.panel_width(p);
+            let mut prev: Option<(u32, u8)> = None;
+            for (&row, &c) in ks[lo..hi].iter().zip(&cs[lo..hi]) {
+                if row as usize >= self.k {
+                    return err(format!("panel {p} k index {row} out of range"));
+                }
+                if c as usize >= width {
+                    return err(format!("panel {p} column offset {c} >= width {width}"));
+                }
+                if let Some(prev) = prev {
+                    if prev >= (row, c) {
+                        return err(format!("panel {p} entries not strictly (k,c)-ascending"));
+                    }
+                }
+                prev = Some((row, c));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl SparseFormat for TilePanelTcsc {
+    const NAME: &'static str = "TilePanelTCSC";
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn nnz(&self) -> usize {
+        self.pos_k.len() + self.neg_k.len()
+    }
+
+    fn bytes(&self) -> usize {
+        std::mem::size_of::<u32>()
+            * (self.panel_start_pos.len()
+                + self.panel_start_neg.len()
+                + self.pos_k.len()
+                + self.neg_k.len())
+            + std::mem::size_of::<u8>() * (self.pos_c.len() + self.neg_c.len())
+    }
+
+    fn to_dense(&self) -> TernaryMatrix {
+        let mut w = TernaryMatrix::zeros(self.k, self.n);
+        for p in 0..self.panels() {
+            let col0 = p * self.tile;
+            let (ks, cs) = self.panel_pos(p);
+            for (&row, &c) in ks.iter().zip(cs) {
+                w.set(row as usize, col0 + c as usize, 1);
+            }
+            let (ks, cs) = self.panel_neg(p);
+            for (&row, &c) in ks.iter().zip(cs) {
+                w.set(row as usize, col0 + c as usize, -1);
+            }
+        }
+        w
+    }
+
+    fn validate(&self) -> crate::Result<()> {
+        if self.tile == 0 {
+            return Err(crate::Error::Format(
+                "TilePanelTCSC: tile width must be positive".to_string(),
+            ));
+        }
+        self.validate_stream("pos", &self.panel_start_pos, &self.pos_k, &self.pos_c)?;
+        self.validate_stream("neg", &self.panel_start_neg, &self.neg_k, &self.neg_c)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_random() {
+        for &s in &crate::PAPER_SPARSITIES {
+            // 48 columns = 12 full panels; 50 leaves a 2-wide last panel.
+            for n in [48, 50] {
+                let w = TernaryMatrix::random(64, n, s, 23);
+                let f = TilePanelTcsc::from_ternary(&w);
+                assert_eq!(f.to_dense(), w, "sparsity {s} n {n}");
+                assert_eq!(f.nnz(), w.nnz());
+                f.validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn panel_entries_are_k_ascending_per_column() {
+        // The bitwise-identity contract: restricted to one in-panel column,
+        // the stream order is ascending k — the baseline's accumulation
+        // order.
+        let w = TernaryMatrix::random(97, 13, 0.5, 7);
+        let f = TilePanelTcsc::from_ternary(&w);
+        for p in 0..f.panels() {
+            for (ks, cs) in [f.panel_pos(p), f.panel_neg(p)] {
+                for c in 0..f.panel_width(p) {
+                    let col_ks: Vec<u32> = ks
+                        .iter()
+                        .zip(cs)
+                        .filter(|&(_, &cc)| cc as usize == c)
+                        .map(|(&row, _)| row)
+                        .collect();
+                    assert!(
+                        col_ks.windows(2).all(|w| w[0] < w[1]),
+                        "panel {p} col {c} not k-ascending"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn narrow_last_panel_and_empty_matrix() {
+        let w = TernaryMatrix::zeros(8, 5);
+        let f = TilePanelTcsc::from_ternary(&w);
+        assert_eq!(f.panels(), 2);
+        assert_eq!(f.panel_width(0), 4);
+        assert_eq!(f.panel_width(1), 1);
+        assert_eq!(f.nnz(), 0);
+        assert_eq!(f.to_dense(), w);
+        f.validate().unwrap();
+    }
+
+    #[test]
+    fn bytes_counts_all_arrays() {
+        let w = TernaryMatrix::random(16, 8, 0.5, 3);
+        let f = TilePanelTcsc::from_ternary(&w);
+        let expect = 4 * (2 * (f.panels() + 1) + f.nnz()) + f.nnz();
+        assert_eq!(f.bytes(), expect);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let w = TernaryMatrix::random(16, 8, 0.5, 4);
+        let mut f = TilePanelTcsc::from_ternary(&w);
+        assert!(!f.pos_c.is_empty(), "seed must produce +1 entries");
+        f.pos_c[0] = OUTER_TILE as u8; // offset beyond panel width
+        assert!(f.validate().is_err());
+        let mut f = TilePanelTcsc::from_ternary(&w);
+        f.pos_k[0] = 99; // k out of range
+        assert!(f.validate().is_err());
+    }
+}

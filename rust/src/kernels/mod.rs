@@ -24,6 +24,7 @@ pub mod prelu;
 pub mod simd;
 pub mod registry;
 pub mod parallel;
+pub mod outer_product;
 
 pub use base::BaseTcscKernel;
 pub use blocked::UnrolledBlockedKernel;
@@ -32,12 +33,13 @@ pub use interleaved::InterleavedKernel;
 pub use interleaved_blocked::InterleavedBlockedKernel;
 pub use compressed::CompressedKernel;
 pub use inverted::InvertedKernel;
+pub use outer_product::{OuterTileKernel, OuterTileSimdKernel};
 pub use parallel::ParallelGemm;
 pub use prelu::{prelu_inplace, PRELU_DEFAULT_ALPHA};
 pub use registry::{
-    best_scalar, descriptors, first_matching, fused_simd, gemv_specialist, kernel_ids,
-    kernel_names, prepare_kernel, BatchAffinity, GemmScratch, KernelDescriptor, KernelFamily,
-    KernelId, KernelParams, PreparedGemm,
+    available_ids, available_kernel_ids, best_scalar, descriptors, first_matching, fused_simd,
+    gemv_specialist, kernel_ids, kernel_names, matrix_tile, prepare_kernel, BatchAffinity,
+    GemmScratch, KernelDescriptor, KernelFamily, KernelId, KernelParams, PreparedGemm,
 };
 pub use unrolled::UnrolledTcscKernel;
 pub use unrolled_m::UnrolledMKernel;

@@ -13,21 +13,29 @@
 //! - [`KernelId::prepare`] — format construction + kernel binding, via the
 //!   descriptor's constructor;
 //! - capability filters ([`gemv_specialist`], [`best_scalar`],
-//!   [`fused_simd`]) — the planner's heuristic candidate sets, selected by
-//!   declared capability instead of hard-coded name literals.
+//!   [`fused_simd`], [`matrix_tile`]) — the planner's heuristic candidate
+//!   sets, selected by declared capability instead of hard-coded name
+//!   literals;
+//! - CPU-capability gating ([`available_ids`], [`available_kernel_ids`]) —
+//!   each row declares the [`CpuFeature`]s its *selection* requires, and
+//!   the planner, autotune sweep and online race enumerate only kernels
+//!   the given [`CpuCaps`] satisfies. `prepare` stays host-agnostic: every
+//!   kernel is portable by construction, so tests can always build one.
 //!
 //! Adding a kernel is one enum variant + one table row; the planner,
 //! autotune sweep, config validation and benches pick it up without edits.
 
 use crate::formats::{
     BlockedTcsc, CompressedTernary, InterleavedBlockedTcsc, InterleavedTcsc, InvertedIndex,
-    SparseFormat, SymmetricTcsc, Tcsc,
+    SparseFormat, SymmetricTcsc, Tcsc, TilePanelTcsc,
 };
 use crate::kernels::simd::{HorizontalSimdKernel, SimdBlockedMnKernel, VerticalSimdKernel};
 use crate::kernels::{
     BaseTcscKernel, CompressedKernel, DenseGemm, InterleavedBlockedKernel, InterleavedKernel,
-    InvertedKernel, Kernel, UnrolledBlockedKernel, UnrolledMKernel, UnrolledTcscKernel,
+    InvertedKernel, Kernel, OuterTileKernel, OuterTileSimdKernel, UnrolledBlockedKernel,
+    UnrolledMKernel, UnrolledTcscKernel,
 };
+use crate::perf::cpu::{CpuCaps, CpuFeature};
 use crate::tensor::{Matrix, PaddedMatrix};
 use crate::ternary::TernaryMatrix;
 use crate::{Error, Result};
@@ -86,13 +94,15 @@ impl KernelParams {
     }
 }
 
-/// Reusable per-caller buffers a prepared kernel may keep across runs.
-/// Today this is the SIMD family's padded X copy — previously rebuilt on
-/// **every** call, now reused whenever the allocation is large enough
-/// (steady-state serving performs no allocation).
+/// Reusable per-caller buffers a prepared kernel may keep across runs:
+/// the SIMD family's padded X copy and the outer-product family's
+/// transposed X tile — both previously rebuilt on **every** call, now
+/// reused whenever the allocation is large enough (steady-state serving
+/// performs no allocation).
 #[derive(Debug, Default)]
 pub struct GemmScratch {
     padded_x: Option<PaddedMatrix>,
+    tile_x: Vec<f32>,
 }
 
 impl GemmScratch {
@@ -124,6 +134,27 @@ impl GemmScratch {
     /// Allocation-stability tests snapshot this across runs.
     pub fn padded_capacity(&self) -> usize {
         self.padded_x.as_ref().map_or(0, |p| p.capacity())
+    }
+
+    /// Transposed-tile staging buffer for the outer-product SIMD kernel.
+    /// Layout and sizing belong to the kernel; the scratch just owns the
+    /// allocation so it survives across calls.
+    pub fn tile_x(&mut self) -> &mut Vec<f32> {
+        &mut self.tile_x
+    }
+
+    /// Pre-size the tile buffer for a K-column problem
+    /// (`K ·` [`crate::formats::OUTER_TILE`] f32 elements).
+    pub fn reserve_tile(&mut self, k: usize) {
+        let needed = k * crate::formats::OUTER_TILE;
+        if self.tile_x.capacity() < needed {
+            self.tile_x.reserve_exact(needed - self.tile_x.len());
+        }
+    }
+
+    /// Current tile-buffer capacity in f32 elements (0 = not allocated).
+    pub fn tile_capacity(&self) -> usize {
+        self.tile_x.capacity()
     }
 }
 
@@ -172,6 +203,12 @@ pub trait PreparedGemm: Send + Sync {
         false
     }
 
+    /// Whether `run_with_scratch` stages X through the reusable transposed
+    /// tile buffer ([`GemmScratch::tile_x`]).
+    fn uses_tile_scratch(&self) -> bool {
+        false
+    }
+
     /// Interleave group of the prepared format, for kernels built from an
     /// interleaved layout (`None` otherwise). Lets callers verify that
     /// [`KernelParams::group`] was honored.
@@ -199,6 +236,8 @@ pub enum KernelId {
     SimdVertical,
     SimdHorizontal,
     SimdBlockedInterleaved,
+    OuterProductTile,
+    OuterProductTileSimd,
     DenseGemm,
 }
 
@@ -265,6 +304,9 @@ pub enum KernelFamily {
     Compressed,
     /// Inverted row index (evaluated-and-dropped ablation).
     Inverted,
+    /// Outer-product tile kernels over the tile-panel format — the
+    /// matrix-unit orientation ("Above the Inner Loop").
+    OuterProduct,
     /// Dense f32 reference GEMM.
     Dense,
 }
@@ -301,8 +343,15 @@ pub struct KernelDescriptor {
     pub uses_block: bool,
     /// `run_with_scratch` reads X through the reusable padded buffer.
     pub uses_padded_scratch: bool,
+    /// `run_with_scratch` stages X through the reusable transposed tile
+    /// buffer.
+    pub uses_tile_scratch: bool,
     /// Vector (SIMD) kernel, vs scalar.
     pub simd: bool,
+    /// CPU features this kernel's *selection* requires (empty = selectable
+    /// anywhere). Gates candidate enumeration only — `prepare` is
+    /// host-agnostic, so tests can construct gated kernels on any host.
+    pub requires: &'static [CpuFeature],
     pub batch_affinity: BatchAffinity,
     /// Build the prepared GEMM. Infallible: [`KernelParams::validate`]
     /// runs before any constructor.
@@ -320,7 +369,9 @@ impl std::fmt::Debug for KernelDescriptor {
             .field("default_group", &self.default_group)
             .field("uses_block", &self.uses_block)
             .field("uses_padded_scratch", &self.uses_padded_scratch)
+            .field("uses_tile_scratch", &self.uses_tile_scratch)
             .field("simd", &self.simd)
+            .field("requires", &self.requires)
             .field("batch_affinity", &self.batch_affinity)
             .finish_non_exhaustive()
     }
@@ -394,6 +445,47 @@ typed_prepared!(
     "compressed_ternary_branch"
 );
 typed_prepared!(PInverted, InvertedIndex, InvertedKernel, "inverted_index");
+typed_prepared!(POuterTile, TilePanelTcsc, OuterTileKernel, "outer_product_tile");
+
+struct POuterSimd {
+    fmt: TilePanelTcsc,
+    kernel: OuterTileSimdKernel,
+}
+
+impl PreparedGemm for POuterSimd {
+    fn name(&self) -> &str {
+        "outer_product_tile_simd"
+    }
+    fn run(&self, x: &Matrix, bias: &[f32], y: &mut Matrix) {
+        // One-shot path: stages the transposed X tile in a fresh buffer.
+        // The planned path below reuses the caller's scratch instead.
+        self.kernel.run(x, &self.fmt, bias, y);
+    }
+    fn run_with_scratch(
+        &self,
+        x: &Matrix,
+        bias: &[f32],
+        y: &mut Matrix,
+        scratch: &mut GemmScratch,
+    ) {
+        self.kernel.run_with_buf(x, &self.fmt, bias, y, scratch.tile_x());
+    }
+    fn k(&self) -> usize {
+        self.fmt.k()
+    }
+    fn n(&self) -> usize {
+        self.fmt.n()
+    }
+    fn nnz(&self) -> usize {
+        self.fmt.nnz()
+    }
+    fn format_bytes(&self) -> usize {
+        self.fmt.bytes()
+    }
+    fn uses_tile_scratch(&self) -> bool {
+        true
+    }
+}
 
 struct PDense {
     gemm: DenseGemm,
@@ -627,6 +719,19 @@ fn build_simd_blocked(w: &TernaryMatrix, p: KernelParams) -> Box<dyn PreparedGem
     })
 }
 
+fn build_outer_tile(w: &TernaryMatrix, _p: KernelParams) -> Box<dyn PreparedGemm> {
+    Box::new(POuterTile {
+        fmt: TilePanelTcsc::from_ternary(w),
+    })
+}
+
+fn build_outer_tile_simd(w: &TernaryMatrix, _p: KernelParams) -> Box<dyn PreparedGemm> {
+    Box::new(POuterSimd {
+        fmt: TilePanelTcsc::from_ternary(w),
+        kernel: OuterTileSimdKernel,
+    })
+}
+
 fn build_dense(w: &TernaryMatrix, _p: KernelParams) -> Box<dyn PreparedGemm> {
     Box::new(PDense {
         gemm: DenseGemm::new(w),
@@ -639,7 +744,7 @@ fn build_dense(w: &TernaryMatrix, _p: KernelParams) -> Box<dyn PreparedGemm> {
 /// The registry table, in canonical benchmark order. **Adding a kernel is
 /// one `KernelId` variant plus one row here** — enumeration, dispatch,
 /// validation and the planner's candidate filters all derive from it.
-static DESCRIPTORS: [KernelDescriptor; 14] = [
+static DESCRIPTORS: [KernelDescriptor; 16] = [
     KernelDescriptor {
         id: KernelId::BaseTcsc,
         name: "base_tcsc",
@@ -649,7 +754,9 @@ static DESCRIPTORS: [KernelDescriptor; 14] = [
         default_group: None,
         uses_block: false,
         uses_padded_scratch: false,
+        uses_tile_scratch: false,
         simd: false,
+        requires: &[],
         batch_affinity: BatchAffinity::Any,
         constructor: build_base,
     },
@@ -662,7 +769,9 @@ static DESCRIPTORS: [KernelDescriptor; 14] = [
         default_group: None,
         uses_block: false,
         uses_padded_scratch: false,
+        uses_tile_scratch: false,
         simd: false,
+        requires: &[],
         batch_affinity: BatchAffinity::Any,
         constructor: build_unrolled5,
     },
@@ -675,7 +784,9 @@ static DESCRIPTORS: [KernelDescriptor; 14] = [
         default_group: None,
         uses_block: false,
         uses_padded_scratch: false,
+        uses_tile_scratch: false,
         simd: false,
+        requires: &[],
         batch_affinity: BatchAffinity::Any,
         constructor: build_unrolled12,
     },
@@ -688,7 +799,9 @@ static DESCRIPTORS: [KernelDescriptor; 14] = [
         default_group: None,
         uses_block: false,
         uses_padded_scratch: false,
+        uses_tile_scratch: false,
         simd: false,
+        requires: &[],
         // Fig 2's GEMV-end winner and the sparsest-class pick: nothing to
         // amortize, so the plain K/M-unrolled walk wins.
         batch_affinity: BatchAffinity::Gemv,
@@ -703,7 +816,9 @@ static DESCRIPTORS: [KernelDescriptor; 14] = [
         default_group: None,
         uses_block: true,
         uses_padded_scratch: false,
+        uses_tile_scratch: false,
         simd: false,
+        requires: &[],
         batch_affinity: BatchAffinity::Any,
         constructor: build_unrolled_blocked,
     },
@@ -716,7 +831,9 @@ static DESCRIPTORS: [KernelDescriptor; 14] = [
         default_group: Some(crate::PAPER_GROUP_SIZE),
         uses_block: false,
         uses_padded_scratch: false,
+        uses_tile_scratch: false,
         simd: false,
+        requires: &[],
         batch_affinity: BatchAffinity::Any,
         constructor: build_interleaved,
     },
@@ -729,7 +846,9 @@ static DESCRIPTORS: [KernelDescriptor; 14] = [
         default_group: Some(crate::PAPER_BLOCKED_GROUP),
         uses_block: true,
         uses_padded_scratch: false,
+        uses_tile_scratch: false,
         simd: false,
+        requires: &[],
         batch_affinity: BatchAffinity::Any,
         constructor: build_interleaved_blocked,
     },
@@ -742,7 +861,9 @@ static DESCRIPTORS: [KernelDescriptor; 14] = [
         default_group: None,
         uses_block: false,
         uses_padded_scratch: false,
+        uses_tile_scratch: false,
         simd: false,
+        requires: &[],
         batch_affinity: BatchAffinity::Any,
         constructor: build_compressed,
     },
@@ -755,7 +876,9 @@ static DESCRIPTORS: [KernelDescriptor; 14] = [
         default_group: None,
         uses_block: false,
         uses_padded_scratch: false,
+        uses_tile_scratch: false,
         simd: false,
+        requires: &[],
         batch_affinity: BatchAffinity::Any,
         constructor: build_compressed_branch,
     },
@@ -768,7 +891,9 @@ static DESCRIPTORS: [KernelDescriptor; 14] = [
         default_group: None,
         uses_block: false,
         uses_padded_scratch: false,
+        uses_tile_scratch: false,
         simd: false,
+        requires: &[],
         batch_affinity: BatchAffinity::Any,
         constructor: build_inverted,
     },
@@ -781,7 +906,9 @@ static DESCRIPTORS: [KernelDescriptor; 14] = [
         default_group: None,
         uses_block: false,
         uses_padded_scratch: true,
+        uses_tile_scratch: false,
         simd: true,
+        requires: &[],
         batch_affinity: BatchAffinity::Gemm,
         constructor: build_simd_vertical,
     },
@@ -794,7 +921,9 @@ static DESCRIPTORS: [KernelDescriptor; 14] = [
         default_group: None,
         uses_block: false,
         uses_padded_scratch: true,
+        uses_tile_scratch: false,
         simd: true,
+        requires: &[],
         batch_affinity: BatchAffinity::Gemm,
         constructor: build_simd_horizontal,
     },
@@ -807,9 +936,45 @@ static DESCRIPTORS: [KernelDescriptor; 14] = [
         default_group: Some(crate::PAPER_BLOCKED_GROUP),
         uses_block: true,
         uses_padded_scratch: false,
+        uses_tile_scratch: false,
         simd: true,
+        requires: &[],
         batch_affinity: BatchAffinity::Gemm,
         constructor: build_simd_blocked,
+    },
+    KernelDescriptor {
+        id: KernelId::OuterProductTile,
+        name: "outer_product_tile",
+        family: KernelFamily::OuterProduct,
+        supports_fused_prelu: false,
+        uses_group: false,
+        default_group: None,
+        uses_block: false,
+        uses_padded_scratch: false,
+        uses_tile_scratch: false,
+        simd: false,
+        // Portable tile emulation: selectable anywhere, so the family's
+        // bitwise-identity properties run on every CI host.
+        requires: &[],
+        batch_affinity: BatchAffinity::Gemm,
+        constructor: build_outer_tile,
+    },
+    KernelDescriptor {
+        id: KernelId::OuterProductTileSimd,
+        name: "outer_product_tile_simd",
+        family: KernelFamily::OuterProduct,
+        supports_fused_prelu: false,
+        uses_group: false,
+        default_group: None,
+        uses_block: false,
+        uses_padded_scratch: false,
+        uses_tile_scratch: true,
+        simd: true,
+        // The vector-register tile layout only wins with a real 128-bit
+        // unit behind it; selection is gated, construction is not.
+        requires: &[CpuFeature::Neon],
+        batch_affinity: BatchAffinity::Gemm,
+        constructor: build_outer_tile_simd,
     },
     KernelDescriptor {
         id: KernelId::DenseGemm,
@@ -820,7 +985,9 @@ static DESCRIPTORS: [KernelDescriptor; 14] = [
         default_group: None,
         uses_block: false,
         uses_padded_scratch: false,
+        uses_tile_scratch: false,
         simd: false,
+        requires: &[],
         batch_affinity: BatchAffinity::Any,
         constructor: build_dense,
     },
@@ -869,6 +1036,37 @@ pub fn best_scalar() -> KernelId {
 pub fn fused_simd() -> KernelId {
     first_matching(|d| d.simd && d.supports_fused_prelu && !d.uses_block)
         .expect("descriptor table declares a fusing SIMD kernel")
+}
+
+/// Kernels whose `requires` list `caps` satisfies, in canonical order —
+/// the capability-filtered enumeration behind planner candidate sets,
+/// sweep grids and the online top-2 race.
+pub fn available_ids(caps: &CpuCaps) -> Vec<KernelId> {
+    DESCRIPTORS
+        .iter()
+        .filter(|d| caps.satisfies(d.requires))
+        .map(|d| d.id)
+        .collect()
+}
+
+/// [`available_ids`] for the host CPU, computed once per process.
+pub fn available_kernel_ids() -> &'static [KernelId] {
+    static IDS: OnceLock<Vec<KernelId>> = OnceLock::new();
+    IDS.get_or_init(|| available_ids(&CpuCaps::host()))
+}
+
+/// The outer-product (matrix-unit orientation) pick for `caps`: the SIMD
+/// tile kernel where its capability is present, else the portable scalar
+/// tile emulation. `None` only if the whole family were gated off.
+pub fn matrix_tile(caps: &CpuCaps) -> Option<KernelId> {
+    first_matching(|d| {
+        d.family == KernelFamily::OuterProduct && d.simd && caps.satisfies(d.requires)
+    })
+    .or_else(|| {
+        first_matching(|d| {
+            d.family == KernelFamily::OuterProduct && !d.simd && caps.satisfies(d.requires)
+        })
+    })
 }
 
 /// Build a prepared kernel by registry **name** — the boundary for
@@ -1047,16 +1245,72 @@ mod tests {
             );
             // Repeated calls must not grow the scratch.
             let cap = scratch.padded_capacity();
+            let tile_cap = scratch.tile_capacity();
             for _ in 0..3 {
                 kern.run_with_scratch(&x, &bias, &mut y_scratch, &mut scratch);
             }
             assert_eq!(scratch.padded_capacity(), cap, "{}", d.name);
+            assert_eq!(scratch.tile_capacity(), tile_cap, "{}", d.name);
             if d.uses_padded_scratch {
                 assert_eq!(cap, 6 * 65, "{} pads X into scratch", d.name);
             } else {
                 assert_eq!(cap, 0, "{} needs no padded scratch", d.name);
             }
+            if d.uses_tile_scratch {
+                assert!(
+                    tile_cap >= 64 * crate::formats::OUTER_TILE,
+                    "{} stages the transposed tile in scratch",
+                    d.name
+                );
+            } else {
+                assert_eq!(tile_cap, 0, "{} needs no tile scratch", d.name);
+            }
         }
+    }
+
+    #[test]
+    fn scratch_reserve_tile_presizes() {
+        let mut scratch = GemmScratch::new();
+        scratch.reserve_tile(100);
+        let cap = scratch.tile_capacity();
+        assert!(cap >= 100 * crate::formats::OUTER_TILE);
+        scratch.reserve_tile(50); // smaller K must not shrink or realloc
+        assert_eq!(scratch.tile_capacity(), cap);
+    }
+
+    #[test]
+    fn capability_gated_kernels_follow_caps() {
+        let scalar = CpuCaps::scalar_only();
+        let avail = available_ids(&scalar);
+        // Exactly the rows with an empty requires list survive the
+        // weakest host.
+        for d in descriptors() {
+            assert_eq!(
+                avail.contains(&d.id),
+                d.requires.is_empty(),
+                "{}",
+                d.name
+            );
+        }
+        assert!(avail.contains(&KernelId::OuterProductTile));
+        assert!(!avail.contains(&KernelId::OuterProductTileSimd));
+        // A NEON + matrix-unit host sees the full table.
+        assert_eq!(available_ids(&CpuCaps::apple_like()), kernel_ids());
+        // The cached host enumeration agrees with the host snapshot.
+        let host = available_ids(&CpuCaps::host());
+        assert_eq!(available_kernel_ids(), host.as_slice());
+    }
+
+    #[test]
+    fn capability_gated_matrix_tile_pick() {
+        assert_eq!(
+            matrix_tile(&CpuCaps::apple_like()),
+            Some(KernelId::OuterProductTileSimd)
+        );
+        assert_eq!(
+            matrix_tile(&CpuCaps::scalar_only()),
+            Some(KernelId::OuterProductTile)
+        );
     }
 
     #[test]

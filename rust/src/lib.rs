@@ -20,20 +20,34 @@
 //! - [`formats`] — every sparse layout from the paper: [`formats::Tcsc`],
 //!   [`formats::BlockedTcsc`], [`formats::InterleavedTcsc`],
 //!   [`formats::InterleavedBlockedTcsc`], [`formats::SymmetricTcsc`] (SIMD),
-//!   [`formats::CompressedTernary`] (base-3 packing) and
-//!   [`formats::InvertedIndex`].
+//!   [`formats::CompressedTernary`] (base-3 packing),
+//!   [`formats::InvertedIndex`], and [`formats::TilePanelTcsc`] — ternary
+//!   columns grouped into [`formats::OUTER_TILE`]-wide panels with
+//!   sign-split (k, c)-lexicographic streams, feeding the outer-product
+//!   tile kernels.
 //! - [`kernels`] — the GEMM kernel family over those formats, scalar and
 //!   SIMD, plus the **typed registry**: every kernel has a
 //!   [`kernels::KernelId`] and one row in the static
 //!   [`kernels::KernelDescriptor`] table ([`kernels::descriptors`])
 //!   declaring its family, fused-PReLU support, interleave-group/blocking
-//!   behavior, padded-scratch use and batch affinity. Enumeration
-//!   ([`kernels::kernel_names`] / [`kernels::kernel_ids`]), dispatch
-//!   ([`kernels::KernelId::prepare`]), config validation and the
+//!   behavior, padded/tile-scratch use, **required CPU capabilities**
+//!   and batch affinity. Enumeration ([`kernels::kernel_names`] /
+//!   [`kernels::kernel_ids`]), host-filtered availability
+//!   ([`kernels::available_kernel_ids`] / [`kernels::available_ids`]),
+//!   dispatch ([`kernels::KernelId::prepare`]), config validation and the
 //!   planner's heuristic candidates are all derived queries over that
 //!   table — adding a kernel is one enum variant plus one row. Strings
 //!   appear only at the parse/display boundary
 //!   ([`kernels::KernelId::parse`] / [`kernels::KernelId::name`]).
+//!   The **outer-product family** ([`kernels::KernelFamily::OuterProduct`])
+//!   accumulates whole [`formats::OUTER_TILE`]×[`formats::OUTER_TILE`]
+//!   tiles per panel — the matrix-unit orientation — in a portable scalar
+//!   emulation plus a NEON-gated lane-parallel variant, both **bitwise
+//!   identical** to the sequential baseline (streams replay the baseline's
+//!   per-cell accumulation order exactly).
+//!   Capability gating is *selection-time only*: [`perf::CpuCaps`] decides
+//!   what may be picked; `prepare` stays host-agnostic so any host can
+//!   construct (and test) any kernel.
 //! - [`plan`] — **the layer everything executes through**:
 //!   [`plan::Planner`] turns weights + hints into a [`plan::GemmPlan`]
 //!   (kernel selected via the autotune table or paper heuristics, epilogue
@@ -68,7 +82,12 @@
 //!   clamped to the variance floor ([`autotune::variance_floor`])
 //!   measured across the sweep's own repetitions.
 //! - [`perf`] — cycle timers, the paper's flop cost model
-//!   `C = M·N·(1+sK)`, operational intensity and roofline estimates.
+//!   `C = M·N·(1+sK)`, operational intensity and roofline estimates, and
+//!   **runtime CPU-capability detection** ([`perf::CpuCaps`]): arch,
+//!   NEON, an Apple-matrix-unit hint and cache sizes where probeable,
+//!   detected once per process and consumed by every selection-time
+//!   kernel query (planner heuristics, tuning-table lookups, sweep
+//!   candidates, the online race).
 //! - [`model`] — ternary MLP / FFN built from planned linear layers; the
 //!   config system and weight serialization. Kernel names are optional
 //!   overrides, not requirements.
@@ -93,8 +112,9 @@
 //! - [`error`] — the library-wide typed [`enum@Error`] (re-exported at the
 //!   crate root with the [`Result`] alias): every fallible API returns it,
 //!   variants classify failures (`UnknownKernel`, `BadKernelParams`,
-//!   `Shape`, `Config`, `Tuning`, `Format`, `Runtime`, `Serve`, `Io`),
-//!   and the CLI maps them to exit codes via [`Error::exit_code`].
+//!   `UnsupportedKernel`, `Shape`, `Config`, `Tuning`, `Format`,
+//!   `Runtime`, `Serve`, `Io`), and the CLI maps them to exit codes via
+//!   [`Error::exit_code`].
 //!
 //! ## Execution model: barrier vs wavefront
 //!

@@ -226,7 +226,7 @@ fn cmd_serve(args: &Args) -> Result<i32> {
                 let report = sweep_model_opts(
                     &cfg_bg,
                     &cfg_bg.batch_buckets,
-                    stgemm::kernels::kernel_ids(),
+                    stgemm::kernels::available_kernel_ids(),
                     &timer,
                     &mut table,
                     &SweepOptions {
@@ -377,7 +377,7 @@ fn cmd_autotune(args: &Args) -> Result<i32> {
         } else {
             TuningTable::new()
         };
-        let entry = table.tune(k, s, stgemm::kernels::kernel_ids(), &timer);
+        let entry = table.tune(k, s, stgemm::kernels::available_kernel_ids(), &timer);
         table.save(path)?;
         println!(
             "[autotune] class (K={k}, s={s}): winner {} at {:.3} flops/cycle → {path} ({} classes)",
@@ -419,7 +419,7 @@ fn cmd_autotune_sweep(args: &Args) -> Result<i32> {
         cfg.name,
         cfg.dims.len() - 1,
         buckets,
-        stgemm::kernels::kernel_ids().len(),
+        stgemm::kernels::available_kernel_ids().len(),
         if opts.per_m {
             format!(
                 ", per-M splits beyond {:.0}% divergence",
@@ -432,7 +432,7 @@ fn cmd_autotune_sweep(args: &Args) -> Result<i32> {
     let report = sweep_model_opts(
         &cfg,
         &buckets,
-        stgemm::kernels::kernel_ids(),
+        stgemm::kernels::available_kernel_ids(),
         &timer,
         &mut table,
         &opts,

@@ -1,0 +1,219 @@
+//! Runtime CPU-capability detection: what the *host* can run, as opposed
+//! to what the shape *wants* — the second dispatch dimension the planner
+//! gained alongside the paper's (K, sparsity, M) heuristics.
+//!
+//! A [`CpuCaps`] snapshot carries the architecture, vector/matrix-unit
+//! hints and (where probeable) cache sizes. Kernel registry rows declare
+//! their requirements as a [`CpuFeature`] list
+//! ([`crate::kernels::KernelDescriptor::requires`]); the planner, the
+//! autotune sweep and the online top-2 race all filter candidates through
+//! [`CpuCaps::satisfies`], so a NEON-gated kernel is *selectable* only
+//! where the capability exists. Preparation stays host-agnostic — every
+//! kernel in this crate has a portable implementation (the SIMD family's
+//! [`crate::kernels::simd::F32x4`] is a NEON stand-in that LLVM lowers to
+//! vector ops on any target), so tests and cross-compiled tools can always
+//! *construct* a gated kernel; only *selection* is gated.
+//!
+//! Detection is compile-time `cfg!` for the architecture facts (NEON is
+//! baseline AdvSIMD on aarch64; the AMX/SME-class matrix coprocessor is an
+//! Apple Silicon macOS hint) plus a best-effort Linux sysfs probe for
+//! cache sizes. Everything degrades to `None`/`false` — a failed probe
+//! can only make fewer kernels selectable, never a wrong one.
+
+use std::sync::OnceLock;
+
+/// A CPU capability a kernel row may require. Selection metadata: the
+/// registry's capability filters compare a descriptor's `requires` list
+/// against the host's [`CpuCaps`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CpuFeature {
+    /// 128-bit NEON/AdvSIMD vector unit (baseline on aarch64).
+    Neon,
+    /// AMX/SME-class matrix-coprocessor hint (Apple Silicon under macOS):
+    /// the regime where outer-product tile kernels change the
+    /// operational-intensity picture. A *hint* because the unit is not
+    /// directly user-visible; the heuristics treat it as "this host
+    /// rewards tile-resident accumulation".
+    MatrixUnitHint,
+}
+
+/// Snapshot of the host CPU's capabilities (or a synthetic one for tests
+/// and what-if planning). `Copy` so planners can embed it by value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CpuCaps {
+    /// Target architecture (`"aarch64"`, `"x86_64"`, …).
+    pub arch: &'static str,
+    /// NEON/AdvSIMD available.
+    pub neon: bool,
+    /// AMX/SME-class matrix coprocessor likely present (Apple Silicon).
+    pub matrix_unit_hint: bool,
+    /// L1 data cache size in bytes, where probeable.
+    pub l1d_bytes: Option<usize>,
+    /// L2 cache size in bytes, where probeable.
+    pub l2_bytes: Option<usize>,
+}
+
+impl CpuCaps {
+    /// Probe the current host. Architecture facts are compile-time
+    /// (`cfg!`); cache sizes come from sysfs on Linux and are `None`
+    /// elsewhere or on probe failure.
+    pub fn detect() -> CpuCaps {
+        let (l1d_bytes, l2_bytes) = sysfs_cache_sizes();
+        CpuCaps {
+            arch: std::env::consts::ARCH,
+            neon: cfg!(target_arch = "aarch64"),
+            matrix_unit_hint: cfg!(all(target_arch = "aarch64", target_os = "macos")),
+            l1d_bytes,
+            l2_bytes,
+        }
+    }
+
+    /// The cached host snapshot (detection runs once per process).
+    pub fn host() -> CpuCaps {
+        static HOST: OnceLock<CpuCaps> = OnceLock::new();
+        *HOST.get_or_init(CpuCaps::detect)
+    }
+
+    /// A synthetic capability set with no vector or matrix features — the
+    /// "weakest host" tests use to assert capability-gated kernels drop
+    /// out of candidate sets.
+    pub fn scalar_only() -> CpuCaps {
+        CpuCaps {
+            arch: "test-scalar",
+            neon: false,
+            matrix_unit_hint: false,
+            l1d_bytes: None,
+            l2_bytes: None,
+        }
+    }
+
+    /// A synthetic Apple-Silicon-like capability set (NEON + matrix-unit
+    /// hint) for host-independent planner tests.
+    pub fn apple_like() -> CpuCaps {
+        CpuCaps {
+            arch: "test-aarch64",
+            neon: true,
+            matrix_unit_hint: true,
+            l1d_bytes: Some(128 * 1024),
+            l2_bytes: Some(12 * 1024 * 1024),
+        }
+    }
+
+    /// Whether this capability set provides `feature`.
+    pub fn supports(&self, feature: CpuFeature) -> bool {
+        match feature {
+            CpuFeature::Neon => self.neon,
+            CpuFeature::MatrixUnitHint => self.matrix_unit_hint,
+        }
+    }
+
+    /// Whether every feature in `requires` is available — the predicate
+    /// behind all capability-filtered candidate sets. An empty list is
+    /// satisfied everywhere.
+    pub fn satisfies(&self, requires: &[CpuFeature]) -> bool {
+        requires.iter().all(|&f| self.supports(f))
+    }
+}
+
+/// Parse a sysfs cache-size string (`"32K"`, `"8M"`, `"131072"`) into
+/// bytes. Returns `None` for anything unrecognized.
+pub(crate) fn parse_cache_size(s: &str) -> Option<usize> {
+    let s = s.trim();
+    if s.is_empty() {
+        return None;
+    }
+    let (digits, mult) = match s.as_bytes()[s.len() - 1] {
+        b'K' | b'k' => (&s[..s.len() - 1], 1024usize),
+        b'M' | b'm' => (&s[..s.len() - 1], 1024 * 1024),
+        b'G' | b'g' => (&s[..s.len() - 1], 1024 * 1024 * 1024),
+        _ => (s, 1),
+    };
+    digits.parse::<usize>().ok().map(|v| v * mult)
+}
+
+/// Best-effort (L1d, L2) cache sizes from Linux sysfs; `(None, None)`
+/// elsewhere or when the hierarchy is unreadable.
+fn sysfs_cache_sizes() -> (Option<usize>, Option<usize>) {
+    if !cfg!(target_os = "linux") {
+        return (None, None);
+    }
+    let base = "/sys/devices/system/cpu/cpu0/cache";
+    let read = |idx: usize, file: &str| -> Option<String> {
+        std::fs::read_to_string(format!("{base}/index{idx}/{file}")).ok()
+    };
+    let mut l1d = None;
+    let mut l2 = None;
+    for idx in 0..8 {
+        let (level, kind) = match (read(idx, "level"), read(idx, "type")) {
+            (Some(level), Some(kind)) => (level, kind),
+            _ => break,
+        };
+        let level = level.trim();
+        let kind = kind.trim();
+        let size = read(idx, "size").as_deref().and_then(parse_cache_size);
+        if level == "1" && (kind == "Data" || kind == "Unified") && l1d.is_none() {
+            l1d = size;
+        }
+        if level == "2" && (kind == "Data" || kind == "Unified") && l2.is_none() {
+            l2 = size;
+        }
+    }
+    (l1d, l2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_cache_size_units() {
+        assert_eq!(parse_cache_size("32K"), Some(32 * 1024));
+        assert_eq!(parse_cache_size("32K\n"), Some(32 * 1024));
+        assert_eq!(parse_cache_size("8M"), Some(8 * 1024 * 1024));
+        assert_eq!(parse_cache_size("1G"), Some(1024 * 1024 * 1024));
+        assert_eq!(parse_cache_size("131072"), Some(131072));
+        assert_eq!(parse_cache_size(""), None);
+        assert_eq!(parse_cache_size("abc"), None);
+        assert_eq!(parse_cache_size("K"), None);
+    }
+
+    #[test]
+    fn satisfies_is_subset_check() {
+        let scalar = CpuCaps::scalar_only();
+        assert!(scalar.satisfies(&[]));
+        assert!(!scalar.satisfies(&[CpuFeature::Neon]));
+        assert!(!scalar.satisfies(&[CpuFeature::MatrixUnitHint]));
+        let apple = CpuCaps::apple_like();
+        assert!(apple.satisfies(&[]));
+        assert!(apple.satisfies(&[CpuFeature::Neon]));
+        assert!(apple.satisfies(&[CpuFeature::Neon, CpuFeature::MatrixUnitHint]));
+        assert!(apple.supports(CpuFeature::Neon));
+        assert!(!scalar.supports(CpuFeature::Neon));
+    }
+
+    #[test]
+    fn host_detection_is_consistent_and_cached() {
+        let a = CpuCaps::host();
+        let b = CpuCaps::host();
+        assert_eq!(a, b, "host snapshot is cached");
+        assert_eq!(a, CpuCaps::detect().with_same_cache_probe(a));
+        // Architecture facts agree with the compile target.
+        assert_eq!(a.neon, cfg!(target_arch = "aarch64"));
+        assert_eq!(
+            a.matrix_unit_hint,
+            cfg!(all(target_arch = "aarch64", target_os = "macos"))
+        );
+        assert_eq!(a.arch, std::env::consts::ARCH);
+    }
+}
+
+#[cfg(test)]
+impl CpuCaps {
+    /// Test helper: `detect()` re-probes sysfs, which can legitimately
+    /// race CPU hotplug; compare everything but the probed sizes.
+    fn with_same_cache_probe(mut self, other: CpuCaps) -> CpuCaps {
+        self.l1d_bytes = other.l1d_bytes;
+        self.l2_bytes = other.l2_bytes;
+        self
+    }
+}

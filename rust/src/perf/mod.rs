@@ -11,7 +11,9 @@ pub mod flops;
 pub mod opint;
 pub mod roofline;
 pub mod membw;
+pub mod cpu;
 
+pub use cpu::{CpuCaps, CpuFeature};
 pub use timer::{cycles_per_second, read_cycles, CycleTimer, Measurement};
 pub use flops::{cost_flops, CostModel};
 pub use opint::{format_bytes_model, operational_intensity, OpIntInputs};

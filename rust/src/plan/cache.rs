@@ -41,7 +41,7 @@ use crate::perf::timer::CycleTimer;
 use crate::plan::gemm_plan::{Epilogue, GemmPlan};
 use crate::plan::partition::RowPartition;
 use crate::plan::pipeline::{ActivationArena, ArenaStats, MlpPlan, PipelineMode, PipelineStats};
-use crate::plan::planner::{heuristic_top2, Planner};
+use crate::plan::planner::{heuristic_top2_caps, Planner};
 use crate::tensor::Matrix;
 use crate::ternary::TernaryMatrix;
 use crate::{Error, Result};
@@ -202,7 +202,10 @@ impl PlanCache {
     /// Everything a kernel build could reject is validated here, so a
     /// registered layer's lazy builds cannot fail mid-traffic (the batch
     /// loop has no caller left to surface an error to). Kernel identity is
-    /// typed — an unknown kernel cannot reach this point.
+    /// typed — an unknown kernel cannot reach this point — and an explicit
+    /// override naming a capability-gated kernel the planner's CPU cannot
+    /// run is rejected up front ([`Error::UnsupportedKernel`]), keeping
+    /// plans for unavailable capabilities unrepresentable in the cache.
     pub fn register(&self, spec: LayerSpec) -> Result<LayerId> {
         if spec.epilogue.bias.len() != spec.weights.n() {
             return Err(Error::Shape(format!(
@@ -212,6 +215,16 @@ impl PlanCache {
             )));
         }
         spec.params.validate()?;
+        if let Some(kernel) = spec.kernel {
+            let d = kernel.descriptor();
+            if !self.planner.caps().satisfies(d.requires) {
+                return Err(Error::UnsupportedKernel(format!(
+                    "kernel '{}' requires {:?}, which the planner's CPU \
+                     capabilities do not provide",
+                    d.name, d.requires
+                )));
+            }
+        }
         let id = {
             let mut layers = self.layers.write().unwrap_or_else(|e| e.into_inner());
             layers.push(Arc::new(CachedLayer {
@@ -368,6 +381,11 @@ impl PlanCache {
                 scratches[i].reserve_padded(hi - lo, layer.spec.weights.k());
             }
         }
+        if gemm.uses_tile_scratch() {
+            for s in &mut scratches {
+                s.reserve_tile(layer.spec.weights.k());
+            }
+        }
         Ok(Arc::new(GemmPlan {
             gemm,
             epilogue: layer.spec.epilogue.clone(),
@@ -407,7 +425,8 @@ impl PlanCache {
         let k = spec.weights.k();
         let sparsity = spec.weights.density() as f32;
         let wants_fused = spec.epilogue.fusible_prelu().is_some();
-        let [a, b] = heuristic_top2(k, sparsity, bucket, wants_fused);
+        let caps = self.planner.caps();
+        let [a, b] = heuristic_top2_caps(&caps, k, sparsity, bucket, wants_fused);
         let plan_a = self.build_plan(layer, bucket, threads, a)?;
         let plan_b = self.build_plan(layer, bucket, threads, b)?;
         let timer = CycleTimer::new(1, self.race_reps);
@@ -922,6 +941,7 @@ impl PlanCache {
 mod tests {
     use super::*;
     use crate::kernels::dense_oracle;
+    use crate::plan::planner::heuristic_top2;
 
     fn cache_with(threads: usize, online: bool) -> PlanCache {
         PlanCache::new(
@@ -1464,5 +1484,76 @@ mod tests {
             cache.register(spec),
             Err(Error::BadKernelParams(_))
         ));
+    }
+
+    #[test]
+    fn capability_gated_register_rejects_unavailable_kernel() {
+        use crate::perf::CpuCaps;
+        let cache = PlanCache::new(
+            Arc::new(Planner::new().with_caps(CpuCaps::scalar_only())),
+            PlanCacheConfig {
+                threads: 1,
+                online_top2: false,
+                race_reps: 1,
+            },
+        );
+        let w = TernaryMatrix::random(64, 8, 0.25, 21);
+        let bias = vec![0.0f32; 8];
+        // The NEON tile kernel is gated; a scalar-only planner must reject
+        // it at registration, before any lazy build could trip on it.
+        let mut spec = LayerSpec::new(w.clone(), Epilogue::with_bias(bias.clone()));
+        spec.kernel = Some(KernelId::OuterProductTileSimd);
+        assert!(matches!(
+            cache.register(spec),
+            Err(Error::UnsupportedKernel(_))
+        ));
+        // The portable tile-emulation variant has no requirements and
+        // registers (and runs) anywhere.
+        let mut spec = LayerSpec::new(w.clone(), Epilogue::with_bias(bias.clone()));
+        spec.kernel = Some(KernelId::OuterProductTile);
+        let id = cache.register(spec).unwrap();
+        let x = Matrix::random(4, 64, 22);
+        let y = cache.forward(id, &x).unwrap();
+        assert!(y.allclose(&dense_oracle(&x, &w, &bias), 1e-3));
+    }
+
+    #[test]
+    fn capability_gated_race_discovers_tile_family() {
+        use crate::perf::CpuCaps;
+        // On a large-K wide-M class the capability-aware top-2 injects the
+        // outer-product family as the rival even on a scalar host (the
+        // portable variant), so the race can discover it with zero name
+        // literals.
+        let planner = Arc::new(Planner::new().with_caps(CpuCaps::scalar_only()));
+        let cache = PlanCache::new(
+            Arc::clone(&planner),
+            PlanCacheConfig {
+                threads: 1,
+                online_top2: true,
+                race_reps: 1,
+            },
+        );
+        let w = TernaryMatrix::random(1024, 8, 0.25, 31);
+        let bias = vec![0.0f32; 8];
+        let id = cache
+            .register(LayerSpec::new(w.clone(), Epilogue::with_bias(bias.clone())))
+            .unwrap();
+        let x = Matrix::random(16, 1024, 32);
+        let y = cache.forward(id, &x).unwrap();
+        assert!(y.allclose(&dense_oracle(&x, &w, &bias), 1e-3));
+        let entry = planner
+            .lookup_entry(1024, 0.25, 16)
+            .expect("race records winner");
+        let caps = planner.caps();
+        let expected = heuristic_top2_caps(&caps, 1024, 0.25, 16, false);
+        assert!(
+            expected.contains(&KernelId::OuterProductTile),
+            "scalar host races the portable tile rival"
+        );
+        assert!(expected.contains(&entry.kernel), "{}", entry.kernel);
+        assert!(
+            caps.satisfies(entry.kernel.descriptor().requires),
+            "race winner must be runnable on the planner's CPU"
+        );
     }
 }

@@ -6,8 +6,16 @@
 //! heuristic candidates all carry a [`KernelId`], and the heuristic
 //! candidate sets are *derived queries over the registry's descriptor
 //! table* ([`crate::kernels::gemv_specialist`], [`crate::kernels::best_scalar`],
-//! [`crate::kernels::fused_simd`]) — no kernel is named by string literal
-//! here, so a new registry row automatically participates in selection.
+//! [`crate::kernels::fused_simd`], [`crate::kernels::matrix_tile`]) — no
+//! kernel is named by string literal here, so a new registry row
+//! automatically participates in selection.
+//!
+//! Selection is also **capability-filtered**: the planner carries a
+//! [`CpuCaps`] snapshot (host by default, synthetic via
+//! [`Planner::with_caps`]) and refuses to emit any kernel whose descriptor
+//! `requires` a feature the caps lack — tuned entries are skipped, hinted
+//! kernels error with [`Error::UnsupportedKernel`] — so a plan built for
+//! an unavailable capability is unrepresentable.
 //!
 //! The tuning table lives behind a `RwLock` so one `Arc<Planner>` can be
 //! shared by every layer, the [`crate::plan::PlanCache`]'s online top-2
@@ -16,6 +24,7 @@
 
 use crate::autotune::{ShapeClass, TuneEntry, TuningTable};
 use crate::kernels::{self, GemmScratch, KernelId, KernelParams, PreparedGemm};
+use crate::perf::cpu::CpuCaps;
 use crate::plan::gemm_plan::{Epilogue, GemmPlan};
 use crate::plan::partition::RowPartition;
 use crate::ternary::TernaryMatrix;
@@ -60,6 +69,15 @@ impl PlanHints {
         }
     }
 }
+
+/// Minimum M-bucket for the outer-product family to enter the heuristics:
+/// the T×T accumulator tile needs batch rows to amortize the per-row-tile
+/// staging (and single-row batches never fill a tile).
+pub const OUTER_MIN_M: usize = 16;
+
+/// Minimum K for the outer-product family to enter the heuristics: short
+/// panels leave the register-resident tile nothing to amortize.
+pub const OUTER_MIN_K: usize = 1024;
 
 /// Paper-derived kernel choice for an untuned (K, sparsity) class.
 ///
@@ -114,12 +132,63 @@ pub fn heuristic_top2(
     [primary, secondary]
 }
 
+/// Capability-aware kernel choice for an untuned (K, sparsity, M) class.
+///
+/// On hosts whose [`CpuCaps`] carry the matrix-unit hint, large-batch
+/// large-K classes above the sparsest level go to the outer-product tile
+/// family ([`kernels::matrix_tile`]) — the regime where tile-resident
+/// accumulation changes the operational-intensity picture. Everywhere else
+/// this is exactly [`heuristic_kernel`]. The outer family never fuses
+/// PReLU; the epilogue applies it as a separate pass.
+pub fn heuristic_kernel_caps(
+    caps: &CpuCaps,
+    k: usize,
+    sparsity: f32,
+    m: usize,
+    wants_fused_prelu: bool,
+) -> KernelId {
+    if caps.matrix_unit_hint && m >= OUTER_MIN_M && k >= OUTER_MIN_K && sparsity > 0.07 {
+        if let Some(id) = kernels::matrix_tile(caps) {
+            return id;
+        }
+    }
+    heuristic_kernel(k, sparsity, wants_fused_prelu)
+}
+
+/// Capability-aware top-2: [`heuristic_kernel_caps`]'s pick plus its
+/// closest rival under `caps`. When the outer-product family leads, the
+/// paper's best scalar kernel is the rival; when a big-batch big-K class
+/// leads with the paper pick, the best *selectable* tile kernel rides
+/// along as rival — which is how hosts without the matrix-unit hint (and
+/// CI's scalar emulation) still discover the family through the online
+/// race. Otherwise this is exactly [`heuristic_top2`].
+pub fn heuristic_top2_caps(
+    caps: &CpuCaps,
+    k: usize,
+    sparsity: f32,
+    m: usize,
+    wants_fused_prelu: bool,
+) -> [KernelId; 2] {
+    let primary = heuristic_kernel_caps(caps, k, sparsity, m, wants_fused_prelu);
+    if let Some(tile) = kernels::matrix_tile(caps) {
+        if primary == tile {
+            return [primary, kernels::best_scalar()];
+        }
+        if m >= OUTER_MIN_M && k >= OUTER_MIN_K && sparsity > 0.07 {
+            return [primary, tile];
+        }
+    }
+    heuristic_top2(k, sparsity, m, wants_fused_prelu)
+}
+
 /// Kernel selection + plan construction. Cheap to create; share one
 /// `Arc<Planner>` per model (or per process) so every layer's plan draws
 /// from the same tuning table and thread pool, and online/background
 /// tuning results propagate to all of them.
 pub struct Planner {
     table: RwLock<TuningTable>,
+    /// Capability set every emitted kernel must satisfy (host by default).
+    caps: CpuCaps,
     /// Shared worker pool, created lazily on the first parallel plan and
     /// sized to the host's parallelism. Plans cap their own fan-out via
     /// `PlanHints::threads`.
@@ -142,8 +211,28 @@ impl Planner {
     pub fn with_table(table: TuningTable) -> Planner {
         Planner {
             table: RwLock::new(table),
+            caps: CpuCaps::host(),
             pool: Mutex::new(None),
         }
+    }
+
+    /// Same planner, selecting against a synthetic capability set instead
+    /// of the probed host (tests, cross-host what-if planning).
+    pub fn with_caps(mut self, caps: CpuCaps) -> Planner {
+        self.caps = caps;
+        self
+    }
+
+    /// The capability set this planner selects against.
+    pub fn caps(&self) -> CpuCaps {
+        self.caps
+    }
+
+    /// Whether a tuned entry's kernel is selectable under this planner's
+    /// capability set (a table recorded on a stronger host may carry
+    /// winners this host cannot run).
+    fn admissible(&self, entry: &TuneEntry) -> bool {
+        self.caps.satisfies(entry.kernel.descriptor().requires)
     }
 
     /// Planner from a persisted tuning table (`stgemm autotune --save`).
@@ -167,24 +256,28 @@ impl Planner {
     /// The tuned entry for a (K, sparsity) class at batch size `m`: the
     /// M-aware entry for `m`'s bucket when one was recorded, else the
     /// M-agnostic fallback (PR-2-era tables resolve through this for
-    /// every batch size).
+    /// every batch size). Entries naming a kernel this planner's caps
+    /// cannot select are skipped — an inadmissible M-split falls through
+    /// to an admissible M-agnostic entry.
     pub fn lookup_entry(&self, k: usize, sparsity: f32, m: usize) -> Option<TuneEntry> {
-        self.table
-            .read()
-            .unwrap_or_else(|e| e.into_inner())
+        let table = self.table.read().unwrap_or_else(|e| e.into_inner());
+        table
             .lookup_m(k, sparsity, m)
+            .filter(|e| self.admissible(e))
+            .or_else(|| table.lookup(k, sparsity).filter(|e| self.admissible(e)))
             .cloned()
     }
 
     /// The tuned **M-agnostic** entry for a (K, sparsity) class, skipping
     /// any M-aware splits — for pinned plans whose batch size is unknown:
     /// a GEMV-specialized `_m1` entry must not decide a plan that may
-    /// serve any batch size.
+    /// serve any batch size. Capability-inadmissible entries are skipped.
     pub fn lookup_entry_agnostic(&self, k: usize, sparsity: f32) -> Option<TuneEntry> {
         self.table
             .read()
             .unwrap_or_else(|e| e.into_inner())
             .lookup(k, sparsity)
+            .filter(|e| self.admissible(e))
             .cloned()
     }
 
@@ -219,7 +312,7 @@ impl Planner {
     ) -> KernelId {
         match self.lookup_entry(k, sparsity, m) {
             Some(entry) => entry.kernel,
-            None => heuristic_kernel(k, sparsity, wants_fused_prelu),
+            None => heuristic_kernel_caps(&self.caps, k, sparsity, m, wants_fused_prelu),
         }
     }
 
@@ -244,7 +337,9 @@ impl Planner {
     ///
     /// # Errors
     /// [`Error::Shape`] on a bias/N mismatch, [`Error::BadKernelParams`]
-    /// on invalid params.
+    /// on invalid params, [`Error::UnsupportedKernel`] when `hints.kernel`
+    /// names a kernel whose capability requirements this planner's
+    /// [`CpuCaps`] do not satisfy.
     pub fn plan(
         &self,
         w: &TernaryMatrix,
@@ -262,7 +357,17 @@ impl Planner {
         let sparsity = w.density() as f32;
         let wants_fused = epilogue.fusible_prelu().is_some();
         let kernel = match hints.kernel {
-            Some(k) => k,
+            Some(k) => {
+                let d = k.descriptor();
+                if !self.caps.satisfies(d.requires) {
+                    return Err(Error::UnsupportedKernel(format!(
+                        "kernel '{}' requires {:?}, which the planner's CPU \
+                         capabilities do not provide",
+                        d.name, d.requires
+                    )));
+                }
+                k
+            }
             // A declared expected batch picks that regime's M-aware entry;
             // an unset one (0) resolves through the M-agnostic entry only —
             // the plan may serve any batch size, so a single-bucket split
@@ -272,9 +377,15 @@ impl Planner {
                     0 => self.lookup_entry_agnostic(w.k(), sparsity),
                     m => self.lookup_entry(w.k(), sparsity, m),
                 };
-                entry
-                    .map(|e| e.kernel)
-                    .unwrap_or_else(|| heuristic_kernel(w.k(), sparsity, wants_fused))
+                entry.map(|e| e.kernel).unwrap_or_else(|| {
+                    heuristic_kernel_caps(
+                        &self.caps,
+                        w.k(),
+                        sparsity,
+                        hints.expected_batch,
+                        wants_fused,
+                    )
+                })
             }
         };
         let kparams = KernelParams {
@@ -294,6 +405,13 @@ impl Planner {
         if hints.expected_batch > 0 && gemm.uses_padded_scratch() {
             for (i, &(lo, hi)) in partition.ranges(hints.expected_batch).iter().enumerate() {
                 scratches[i].reserve_padded(hi - lo, w.k());
+            }
+        }
+        if gemm.uses_tile_scratch() {
+            // Tile staging is K-sized regardless of batch, so pre-size it
+            // unconditionally: the first call allocates nothing.
+            for s in &mut scratches {
+                s.reserve_tile(w.k());
             }
         }
         Ok(GemmPlan {
@@ -346,6 +464,144 @@ mod tests {
             KernelId::UnrolledTcscK4M4
         );
         assert_eq!(heuristic_top2(4096, 0.25, 8, false)[1], KernelId::SimdVertical);
+    }
+
+    #[test]
+    fn capability_gated_heuristics_route_to_tile_family() {
+        let apple = CpuCaps::apple_like();
+        let scalar = CpuCaps::scalar_only();
+        // Matrix-unit hint + big batch + big K above the sparsest level →
+        // the outer-product pick leads, racing the paper's best scalar.
+        assert_eq!(
+            heuristic_kernel_caps(&apple, 4096, 0.25, 64, false),
+            KernelId::OuterProductTileSimd
+        );
+        assert_eq!(
+            heuristic_top2_caps(&apple, 4096, 0.25, 64, false),
+            [KernelId::OuterProductTileSimd, KernelId::InterleavedBlockedTcsc]
+        );
+        // Below any threshold the paper heuristics stand unchanged.
+        assert_eq!(
+            heuristic_kernel_caps(&apple, 4096, 0.25, 1, false),
+            heuristic_kernel(4096, 0.25, false)
+        );
+        assert_eq!(
+            heuristic_kernel_caps(&apple, 256, 0.25, 64, false),
+            heuristic_kernel(256, 0.25, false)
+        );
+        assert_eq!(
+            heuristic_top2_caps(&apple, 4096, 0.0625, 64, false),
+            heuristic_top2(4096, 0.0625, 64, false)
+        );
+        // Without the hint the paper pick leads, but the best *selectable*
+        // tile kernel rides as rival — the race can still discover the
+        // family, via the scalar emulation on the weakest host.
+        assert_eq!(
+            heuristic_kernel_caps(&scalar, 4096, 0.25, 64, false),
+            KernelId::InterleavedBlockedTcsc
+        );
+        assert_eq!(
+            heuristic_top2_caps(&scalar, 4096, 0.25, 64, false),
+            [KernelId::InterleavedBlockedTcsc, KernelId::OuterProductTile]
+        );
+        // Small batches keep the paper's top-2 as-is.
+        assert_eq!(
+            heuristic_top2_caps(&scalar, 4096, 0.25, 8, false),
+            heuristic_top2(4096, 0.25, 8, false)
+        );
+    }
+
+    #[test]
+    fn capability_gated_hint_is_rejected() {
+        let planner = Planner::new().with_caps(CpuCaps::scalar_only());
+        let w = TernaryMatrix::random(64, 8, 0.5, 9);
+        let epi = || Epilogue::with_bias(vec![0.0; 8]);
+        assert!(matches!(
+            planner.plan(
+                &w,
+                KernelParams::default(),
+                epi(),
+                &PlanHints::with_kernel(KernelId::OuterProductTileSimd),
+            ),
+            Err(Error::UnsupportedKernel(_))
+        ));
+        // The portable tile emulation is selectable anywhere.
+        let plan = planner
+            .plan(
+                &w,
+                KernelParams::default(),
+                epi(),
+                &PlanHints::with_kernel(KernelId::OuterProductTile),
+            )
+            .unwrap();
+        assert_eq!(plan.kernel_name(), "outer_product_tile");
+    }
+
+    #[test]
+    fn capability_gated_tuned_entries_are_filtered() {
+        // A table recorded on a stronger host may carry winners this host
+        // cannot run; those entries must not decide a plan.
+        let mut table = TuningTable::new();
+        table.insert(
+            ShapeClass::of(128, 0.25),
+            TuneEntry {
+                kernel: KernelId::OuterProductTileSimd,
+                flops_per_cycle: 9.0,
+            },
+        );
+        let planner = Planner::with_table(table).with_caps(CpuCaps::scalar_only());
+        assert!(planner.lookup_entry(128, 0.25, 8).is_none());
+        assert!(planner.lookup_entry_agnostic(128, 0.25).is_none());
+        assert_eq!(
+            planner.select_kernel(128, 0.25, 8, false),
+            KernelId::InterleavedBlockedTcsc
+        );
+        // An inadmissible M-split falls through to an admissible
+        // M-agnostic entry.
+        let mut table = TuningTable::new();
+        table.insert(
+            ShapeClass::of(128, 0.25),
+            TuneEntry {
+                kernel: KernelId::BaseTcsc,
+                flops_per_cycle: 1.0,
+            },
+        );
+        table.insert(
+            ShapeClass::of_m(128, 0.25, 8),
+            TuneEntry {
+                kernel: KernelId::OuterProductTileSimd,
+                flops_per_cycle: 9.0,
+            },
+        );
+        let planner = Planner::with_table(table).with_caps(CpuCaps::scalar_only());
+        assert_eq!(
+            planner.lookup_entry(128, 0.25, 8).unwrap().kernel,
+            KernelId::BaseTcsc
+        );
+    }
+
+    #[test]
+    fn outer_tile_plan_runs_end_to_end() {
+        let planner = Planner::new().with_caps(CpuCaps::apple_like());
+        let w = TernaryMatrix::random(64, 12, 0.25, 11);
+        let bias = vec![0.0f32; 12];
+        let hints = PlanHints {
+            kernel: Some(KernelId::OuterProductTileSimd),
+            expected_batch: 8,
+            ..Default::default()
+        };
+        let plan = planner
+            .plan(
+                &w,
+                KernelParams::default(),
+                Epilogue::with_bias(bias.clone()),
+                &hints,
+            )
+            .unwrap();
+        assert_eq!(plan.kernel_name(), "outer_product_tile_simd");
+        let x = Matrix::random(8, 64, 12);
+        let y = plan.forward(&x).unwrap();
+        assert!(y.allclose(&dense_oracle(&x, &w, &bias), 1e-4));
     }
 
     #[test]

@@ -1,13 +1,17 @@
 //! Property tests over the kernel family: every registry kernel agrees
 //! with the f64-accumulated dense oracle on randomized problems, fused
-//! PReLU equals unfused, kernels are deterministic, and every
+//! PReLU equals unfused, kernels are deterministic, every
 //! [`stgemm::kernels::KernelDescriptor`]'s declared capabilities match the
-//! prepared kernel's observable runtime behavior.
+//! prepared kernel's observable runtime behavior, and the outer-product
+//! tile family is **bitwise** identical to the sequential scalar baseline
+//! across tile edge cases (K not a multiple of the tile, degenerate M,
+//! all-zero columns).
 
 use stgemm::kernels::{
-    dense_oracle, descriptors, kernel_names, prelu_inplace, prepare_kernel, KernelId,
-    KernelParams,
+    available_ids, available_kernel_ids, dense_oracle, descriptors, kernel_names, prelu_inplace,
+    prepare_kernel, KernelFamily, KernelId, KernelParams,
 };
+use stgemm::perf::CpuCaps;
 use stgemm::tensor::Matrix;
 use stgemm::ternary::TernaryMatrix;
 use stgemm::util::quickcheck::{props, Gen};
@@ -77,6 +81,12 @@ fn prop_descriptor_capabilities_match_runtime_on_random_shapes() {
                 d.name
             );
             assert_eq!(
+                plain.uses_tile_scratch(),
+                d.uses_tile_scratch,
+                "{}: tile-scratch capability",
+                d.name
+            );
+            assert_eq!(
                 plain.interleave_group(),
                 d.default_group,
                 "{}: default interleave group",
@@ -97,6 +107,69 @@ fn prop_descriptor_capabilities_match_runtime_on_random_shapes() {
                 let kern = d.id.prepare(&c.w, params).unwrap();
                 assert_eq!(kern.interleave_group(), Some(3), "{}: honors group", d.name);
             }
+        }
+    });
+}
+
+#[test]
+fn capability_gated_descriptor_availability_is_consistent() {
+    // Selection-time availability derives purely from descriptor
+    // `requires` vs a capability set; construction stays host-agnostic
+    // (the descriptor prop test prepares every kernel on every host).
+    let scalar = available_ids(&CpuCaps::scalar_only());
+    let apple = available_ids(&CpuCaps::apple_like());
+    for d in descriptors() {
+        assert_eq!(
+            scalar.contains(&d.id),
+            d.requires.is_empty(),
+            "{}: scalar-only availability must equal 'no requirements'",
+            d.name
+        );
+        assert!(
+            apple.contains(&d.id),
+            "{}: apple-like capability set sees the full registry",
+            d.name
+        );
+    }
+    // The cached host list agrees with a fresh query, and everything in
+    // it is runnable here.
+    let host = CpuCaps::host();
+    assert_eq!(available_kernel_ids(), available_ids(&host).as_slice());
+    for id in available_kernel_ids() {
+        assert!(host.satisfies(id.descriptor().requires), "{id}");
+    }
+}
+
+#[test]
+fn prop_outer_family_bitwise_matches_sequential_baseline() {
+    // The tile family's contract is stronger than allclose: streams are
+    // (k,c)-lexicographic, so each cell accumulates in exactly the
+    // baseline's k-ascending pos-then-neg order — outputs must be
+    // bit-identical. Shapes stress the tile edges: K not a multiple of
+    // the tile width, M in {0, 1, 3, odd}, all-zero columns via s = 0.
+    props("outer family bitwise vs base", 30, |g| {
+        let m = *g.choose(&[0usize, 1, 3, 5, 7, 8, 11, 16]);
+        let k = g.usize(1, 200);
+        let n = g.usize(1, 40);
+        let s = *g.choose(&[0.0f32, 0.0625, 0.25, 0.5, 1.0]);
+        let w = TernaryMatrix::random(k, n, s, g.seed());
+        let x = Matrix::random(m, k, g.seed());
+        let bias = g.f32_vec(n, -1.0, 1.0);
+        let base = KernelId::BaseTcsc
+            .prepare(&w, KernelParams::default())
+            .unwrap();
+        let mut want = Matrix::zeros(m, n);
+        base.run(&x, &bias, &mut want);
+        let outer: Vec<_> = descriptors()
+            .iter()
+            .filter(|d| d.family == KernelFamily::OuterProduct)
+            .collect();
+        assert_eq!(outer.len(), 2, "scalar emulation + SIMD tile variants");
+        for d in outer {
+            let kern = d.id.prepare(&w, KernelParams::default()).unwrap();
+            let mut y = Matrix::zeros(m, n);
+            kern.run(&x, &bias, &mut y);
+            assert_eq!(y, want, "{} must be bitwise-identical to the baseline", d.name);
         }
     });
 }

@@ -4,9 +4,18 @@
 //! identical to sequential ones.
 
 use stgemm::kernels::{dense_oracle, kernel_names, prelu_inplace, KernelParams};
+use stgemm::perf::CpuCaps;
 use stgemm::plan::{Epilogue, PlanHints, Planner};
 use stgemm::tensor::Matrix;
 use stgemm::ternary::TernaryMatrix;
+
+/// A planner that can plan *every* registry kernel, including
+/// capability-gated ones: gating is selection-time only and kernel
+/// construction/execution is host-agnostic, so full-registry coverage
+/// tests plan with a synthetic fully-capable host.
+fn full_registry_planner() -> Planner {
+    Planner::new().with_caps(CpuCaps::apple_like())
+}
 
 fn oracle_with(
     x: &Matrix,
@@ -32,7 +41,7 @@ fn oracle_with(
 /// with and without PReLU and scale.
 #[test]
 fn every_kernel_through_plan_matches_oracle() {
-    let planner = Planner::new();
+    let planner = full_registry_planner();
     let (k, n) = (96usize, 24usize);
     let bias: Vec<f32> = (0..n).map(|i| 0.07 * i as f32 - 0.5).collect();
     for &m in &[1usize, 2, 7, 64] {
@@ -121,7 +130,7 @@ fn steady_state_run_is_allocation_stable() {
 /// exactly the sequential bits for every kernel family.
 #[test]
 fn parallel_plan_is_bitwise_sequential() {
-    let planner = Planner::new();
+    let planner = full_registry_planner();
     let (k, n) = (80usize, 20usize);
     let w = TernaryMatrix::random(k, n, 0.25, 7);
     let bias: Vec<f32> = (0..n).map(|i| 0.02 * i as f32).collect();
