@@ -13,7 +13,14 @@
 //! PR 6 additions: a per-kernel-family GFLOP/s section — one representative
 //! per [`KernelFamily`], chosen purely through the descriptor capability
 //! query (the host's [`CpuCaps`] filter, no kernel-name literals) — plus
-//! the serving p50/p99 rows, written to `BENCH_pr6.json` at the repo root.
+//! the serving p50/p99 rows.
+//!
+//! PR 7 additions: a per-geometry GFLOP/s section — every host-runnable
+//! kernel that declares the blocking-geometry axis, measured at each
+//! cache-derived panel-width × K-block candidate from
+//! [`geometry_candidates`] — so the blocking win (or its absence on this
+//! host) is tracked across PRs. Everything lands in `BENCH_pr7.json` at
+//! the repo root.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -23,7 +30,7 @@ use stgemm::bench::report::{write_csv, Table};
 use stgemm::coordinator::{Backend, BatchPolicy, Engine, LoadGenerator, Router};
 use stgemm::kernels::{descriptors, KernelDescriptor, KernelFamily, KernelParams};
 use stgemm::model::{ModelConfig, TernaryLinear, TernaryMlp};
-use stgemm::perf::CpuCaps;
+use stgemm::perf::{geometry_candidates, CpuCaps};
 use stgemm::plan::{PipelineMode, PipelineStats, PlanHints, Planner};
 use stgemm::runtime::{Manifest, XlaExecutor};
 use stgemm::tensor::Matrix;
@@ -243,6 +250,52 @@ fn family_gflops(scale: BenchScale) -> Json {
     Json::arr(rows)
 }
 
+/// Per-geometry GFLOP/s for the blocking-geometry axis: every host-runnable
+/// kernel whose descriptor declares the axis, measured at each cache-derived
+/// panel-width × K-block candidate. Candidates come from the same
+/// [`geometry_candidates`] query the planner, plan-cache race and sweep
+/// consult (the default geometry is always first), so no geometry spelling
+/// is hardcoded here and a host with different caches measures a different —
+/// but equally valid — candidate set. The K is deliberately deep (the
+/// paper's 4096) so K-blocking has a cache footprint to act on.
+fn geometry_gflops(scale: BenchScale) -> Json {
+    let caps = CpuCaps::host();
+    let timer = scale.timer();
+    let (m, k, n, s) = (64usize, 4096usize, 256usize, 0.25f32);
+    let candidates = geometry_candidates(&caps);
+    let mut rows = Vec::new();
+    for d in descriptors() {
+        if !d.geometry || !caps.satisfies(d.requires) {
+            continue;
+        }
+        for g in &candidates {
+            let params = KernelParams {
+                geometry: Some(*g),
+                ..KernelParams::default()
+            };
+            let meas = measure_kernel(d.name, m, k, n, s, 42, params, &timer);
+            println!(
+                "[e2e] geometry {} × {}: {:.2} GFLOP/s ({:.3} flops/cycle, M={m} K={k} N={n} s={s})",
+                d.name,
+                g.name(),
+                meas.gflops(),
+                meas.flops_per_cycle(),
+            );
+            rows.push(Json::obj(vec![
+                ("kernel", Json::str(d.name.to_string())),
+                ("geometry", Json::str(g.name())),
+                ("m", Json::num(m as f64)),
+                ("k", Json::num(k as f64)),
+                ("n", Json::num(n as f64)),
+                ("sparsity", Json::num(s as f64)),
+                ("gflops", Json::num(meas.gflops())),
+                ("flops_per_cycle", Json::num(meas.flops_per_cycle())),
+            ]));
+        }
+    }
+    Json::arr(rows)
+}
+
 fn main() {
     let scale = BenchScale::from_env();
     let (clients, reqs, stall_reps) = match scale {
@@ -346,12 +399,15 @@ fn main() {
         Err(e) => eprintln!("  [json] write failed: {e}"),
     }
 
-    // PR 6 tracking artifact: per-family GFLOP/s (capability-selected
-    // representatives) plus the serving latency rows, at the repo root so
-    // cross-PR tooling finds it without knowing the crate layout.
+    // PR 7 tracking artifact: per-family GFLOP/s (capability-selected
+    // representatives) and per-geometry GFLOP/s (cache-derived candidates
+    // on the geometry-axis kernels) plus the serving latency rows, at the
+    // repo root so cross-PR tooling finds it without knowing the crate
+    // layout.
     let families = family_gflops(scale);
-    let pr6 = Json::obj(vec![
-        ("bench", Json::str("pr6_outer_product")),
+    let geometries = geometry_gflops(scale);
+    let pr7 = Json::obj(vec![
+        ("bench", Json::str("pr7_blocking_geometry")),
         (
             "serving",
             Json::arr(rows.iter().map(|r| {
@@ -364,13 +420,14 @@ fn main() {
             })),
         ),
         ("kernel_families", families),
+        ("kernel_geometries", geometries),
     ]);
-    let pr6_path = match std::path::Path::new(env!("CARGO_MANIFEST_DIR")).parent() {
-        Some(root) => root.join("BENCH_pr6.json"),
-        None => std::path::PathBuf::from("BENCH_pr6.json"),
+    let pr7_path = match std::path::Path::new(env!("CARGO_MANIFEST_DIR")).parent() {
+        Some(root) => root.join("BENCH_pr7.json"),
+        None => std::path::PathBuf::from("BENCH_pr7.json"),
     };
-    match std::fs::write(&pr6_path, pr6.encode_pretty()) {
-        Ok(()) => println!("  [json] {}", pr6_path.display()),
-        Err(e) => eprintln!("  [json] {} write failed: {e}", pr6_path.display()),
+    match std::fs::write(&pr7_path, pr7.encode_pretty()) {
+        Ok(()) => println!("  [json] {}", pr7_path.display()),
+        Err(e) => eprintln!("  [json] {} write failed: {e}", pr7_path.display()),
     }
 }

@@ -10,7 +10,7 @@ pub mod table;
 pub use cache::CacheModel;
 pub use grid::{run_unrolled_mk, unroll_grid_search, GridPoint, UNROLL_K_FACTORS, UNROLL_M_FACTORS};
 pub use sweep::{
-    admissible_candidates, decide_winners, effective_divergence, sweep_model, sweep_model_opts,
-    variance_floor, SweepOptions, SweepPoint, SweepReport,
+    admissible_candidates, decide_winners, effective_divergence, reduce_geometry, sweep_model,
+    sweep_model_opts, variance_floor, SweepOptions, SweepPoint, SweepReport,
 };
 pub use table::{m_bucket, ShapeClass, TuneEntry, TuningTable, MAX_M_BUCKET};

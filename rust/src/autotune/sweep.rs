@@ -25,11 +25,21 @@
 //! was set. The floor actually applied is reported in
 //! [`SweepReport::variance_floor`] / [`SweepReport::effective_divergence`].
 //!
+//! **Geometry sweeping** ([`SweepOptions::geometry`], `autotune sweep
+//! --geometry`): geometry-axis kernels (the outer-product family) are
+//! measured at every [`crate::perf::geometry_candidates`] tile geometry
+//! the host's caches suggest, and each kernel enters winner selection
+//! with its best geometry's series ([`reduce_geometry`]). A winning
+//! non-default geometry is recorded on the entry only when its gain over
+//! the default layout exceeds the (noise-clamped) divergence threshold —
+//! absence always means "default geometry", keeping tables one format.
+//!
 //! The serve-time background re-tune hook runs exactly this sweep (per-M
 //! enabled) on a snapshot of the live table and installs the result.
 
 use crate::autotune::table::{m_bucket, ShapeClass, TuneEntry, TuningTable};
 use crate::bench::harness::measure_kernel;
+use crate::formats::TileGeometry;
 use crate::kernels::{KernelId, KernelParams};
 use crate::model::ModelConfig;
 use crate::perf::cpu::CpuCaps;
@@ -48,6 +58,9 @@ pub struct SweepPoint {
     /// Coefficient of variation of the measured cycles across the timer's
     /// reps (0 for a single rep) — the sweep's noise signal.
     pub cycles_cv: f64,
+    /// The tile geometry this point was measured at — `Some` only when a
+    /// geometry sweep varied the axis for this kernel.
+    pub geometry: Option<TileGeometry>,
 }
 
 /// Winner-selection knobs for [`sweep_model_opts`].
@@ -62,7 +75,12 @@ pub struct SweepOptions {
     /// entry is recorded (e.g. 0.08 = 8%). Guards against timing noise
     /// splitting every class into per-bucket entries. The sweep clamps
     /// this to at least the measured [`variance_floor`] of each class.
+    /// The same (clamped) threshold gates geometry recording.
     pub divergence_threshold: f64,
+    /// Measure geometry-axis kernels at every cache-suggested tile
+    /// geometry (`--geometry`) and record a winning non-default geometry
+    /// on the entry. Off = every kernel runs at the default geometry.
+    pub geometry: bool,
 }
 
 impl Default for SweepOptions {
@@ -70,6 +88,7 @@ impl Default for SweepOptions {
         SweepOptions {
             per_m: false,
             divergence_threshold: 0.08,
+            geometry: false,
         }
     }
 }
@@ -117,6 +136,46 @@ pub fn admissible_candidates(caps: &CpuCaps, candidates: &[KernelId]) -> Vec<Ker
         .copied()
         .filter(|id| caps.satisfies(id.descriptor().requires))
         .collect()
+}
+
+/// Geometry pre-reduction for one kernel: given its per-geometry
+/// measurement series (one flops/cycle value per bucket, same bucket
+/// order across series), pick the series the kernel enters winner
+/// selection with. Returns `(series index, geometry to record)`.
+///
+/// The winner is the best *mean* series. A geometry is recorded (`Some`)
+/// only when it is non-default **and** its mean beats the default
+/// layout's mean by more than `threshold` — below that the default wins
+/// by fiat, so tuning tables only ever carry divergent geometry winners
+/// and absence keeps meaning "default". Pure so the reduction is
+/// unit-testable without timing anything.
+pub fn reduce_geometry(
+    geoms: &[TileGeometry],
+    series: &[Vec<f64>],
+    threshold: f64,
+) -> (usize, Option<TileGeometry>) {
+    assert_eq!(geoms.len(), series.len(), "one series per geometry");
+    assert!(!geoms.is_empty(), "geometry reduction needs candidates");
+    let mean = |s: &[f64]| s.iter().sum::<f64>() / s.len().max(1) as f64;
+    let default_idx = geoms
+        .iter()
+        .position(|g| *g == TileGeometry::DEFAULT)
+        .unwrap_or(0);
+    let best_idx = (0..series.len())
+        .max_by(|&x, &y| {
+            mean(&series[x])
+                .partial_cmp(&mean(&series[y]))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
+        .expect("non-empty geometry set");
+    if best_idx == default_idx {
+        return (default_idx, None);
+    }
+    let baseline = mean(&series[default_idx]).max(f64::MIN_POSITIVE);
+    if mean(&series[best_idx]) / baseline <= 1.0 + threshold {
+        return (default_idx, None);
+    }
+    (best_idx, Some(geoms[best_idx]))
 }
 
 /// Decide the tuning entries for one class from its per-(kernel, bucket)
@@ -168,10 +227,7 @@ pub fn decide_winners(
         .expect("non-empty candidate set");
     let mut winners = vec![(
         ShapeClass::of(k, sparsity),
-        TuneEntry {
-            kernel: measured[mean_idx].0,
-            flops_per_cycle: bucket_mean(mean_idx),
-        },
+        TuneEntry::new(measured[mean_idx].0, bucket_mean(mean_idx)),
     )];
     if !opts.per_m {
         return winners;
@@ -194,10 +250,7 @@ pub fn decide_winners(
         }
         winners.push((
             ShapeClass::of_m(k, sparsity, *b),
-            TuneEntry {
-                kernel: measured[best_idx].0,
-                flops_per_cycle: best,
-            },
+            TuneEntry::new(measured[best_idx].0, best),
         ));
     }
     winners
@@ -254,36 +307,56 @@ pub fn sweep_model_opts(
             continue;
         }
         seen.push(class);
-        let mut measured: Vec<(KernelId, Vec<f64>)> = Vec::with_capacity(candidates.len());
+        // Per kernel: every geometry it is swept at, with one flops/cycle
+        // series per geometry (bucket order matches `buckets`). Kernels
+        // without the geometry axis — and every kernel when the geometry
+        // sweep is off — run one series at the default geometry.
+        let mut raw: Vec<(KernelId, Vec<TileGeometry>, Vec<Vec<f64>>)> =
+            Vec::with_capacity(candidates.len());
         let mut class_cvs: Vec<f64> = Vec::new();
         for &kernel in &candidates {
-            let mut fpcs = Vec::with_capacity(buckets.len());
-            for &m in &buckets {
-                let meas = measure_kernel(
-                    kernel.name(),
-                    m.max(1),
-                    k,
-                    n,
-                    cfg.sparsity,
-                    0xC0_FF_EE + layer as u64,
-                    KernelParams::default(),
-                    timer,
-                );
-                let fpc = meas.flops_per_cycle();
-                class_cvs.push(meas.cycles_cv);
-                report.points.push(SweepPoint {
-                    layer,
-                    k,
-                    n,
-                    sparsity: cfg.sparsity,
-                    bucket: m.max(1),
-                    kernel,
-                    flops_per_cycle: fpc,
-                    cycles_cv: meas.cycles_cv,
-                });
-                fpcs.push(fpc);
+            let sweep_geom = opts.geometry && kernel.descriptor().geometry;
+            let geoms: Vec<TileGeometry> = if sweep_geom {
+                crate::perf::geometry_candidates(&CpuCaps::host())
+            } else {
+                vec![TileGeometry::DEFAULT]
+            };
+            let mut series: Vec<Vec<f64>> = Vec::with_capacity(geoms.len());
+            for &g in &geoms {
+                let params = KernelParams {
+                    geometry: if sweep_geom { Some(g) } else { None },
+                    ..KernelParams::default()
+                };
+                let mut fpcs = Vec::with_capacity(buckets.len());
+                for &m in &buckets {
+                    let meas = measure_kernel(
+                        kernel.name(),
+                        m.max(1),
+                        k,
+                        n,
+                        cfg.sparsity,
+                        0xC0_FF_EE + layer as u64,
+                        params,
+                        timer,
+                    );
+                    let fpc = meas.flops_per_cycle();
+                    class_cvs.push(meas.cycles_cv);
+                    report.points.push(SweepPoint {
+                        layer,
+                        k,
+                        n,
+                        sparsity: cfg.sparsity,
+                        bucket: m.max(1),
+                        kernel,
+                        flops_per_cycle: fpc,
+                        cycles_cv: meas.cycles_cv,
+                        geometry: if sweep_geom { Some(g) } else { None },
+                    });
+                    fpcs.push(fpc);
+                }
+                series.push(fpcs);
             }
-            measured.push((kernel, fpcs));
+            raw.push((kernel, geoms, series));
         }
         // Self-calibrating divergence: this class's measured noise floor
         // (largest CV across its reps) clamps the requested threshold, so
@@ -297,6 +370,17 @@ pub fn sweep_model_opts(
         report.effective_divergence = report
             .effective_divergence
             .max(class_opts.divergence_threshold);
+        // Geometry pre-reduction: each kernel enters winner selection with
+        // its best geometry's series; the geometry to record (divergent
+        // non-default winners only) rides alongside.
+        let mut measured: Vec<(KernelId, Vec<f64>)> = Vec::with_capacity(raw.len());
+        let mut chosen: Vec<Option<TileGeometry>> = Vec::with_capacity(raw.len());
+        for (kernel, geoms, series) in &raw {
+            let (idx, geom) =
+                reduce_geometry(geoms, series, class_opts.divergence_threshold);
+            measured.push((*kernel, series[idx].clone()));
+            chosen.push(geom);
+        }
         // A per-M sweep re-measured every bucket it covers, so stale
         // M-aware entries for those buckets (e.g. a noisy online-race
         // winner, or a divergence split that no longer holds) must be
@@ -308,8 +392,16 @@ pub fn sweep_model_opts(
                 table.remove(&ShapeClass::of_m(k, cfg.sparsity, m));
             }
         }
-        for (class, entry) in decide_winners(k, cfg.sparsity, &buckets, &measured, &class_opts)
+        for (class, mut entry) in
+            decide_winners(k, cfg.sparsity, &buckets, &measured, &class_opts)
         {
+            // Attach the winner kernel's reduced geometry (candidates are
+            // unique, so the position lookup is unambiguous).
+            let ki = measured
+                .iter()
+                .position(|(kid, _)| *kid == entry.kernel)
+                .expect("winner kernel came from the measured set");
+            entry.geometry = chosen[ki];
             table.insert(class, entry.clone());
             report.winners.push((class, entry));
         }
@@ -453,6 +545,7 @@ mod tests {
         let opts = SweepOptions {
             per_m: true,
             divergence_threshold: 0.0, // degenerate request: split on anything
+            ..Default::default()
         };
         let report = sweep_model_opts(&c, &c.batch_buckets, &[A, B], &timer, &mut table, &opts);
         assert!(report.variance_floor >= 0.0);
@@ -488,6 +581,7 @@ mod tests {
         let opts = SweepOptions {
             per_m: true,
             divergence_threshold: 0.10,
+            ..Default::default()
         };
         let w = decide_winners(64, 0.25, &[1, 16], &measured, &opts);
         // Mean winner B, plus an M-aware split for bucket 1 where A's 3.0
@@ -509,6 +603,7 @@ mod tests {
         let opts = SweepOptions {
             per_m: true,
             divergence_threshold: 0.08,
+            ..Default::default()
         };
         let w = decide_winners(64, 0.25, &[1, 16], &measured, &opts);
         assert_eq!(w.len(), 1, "4% gain must not split the class");
@@ -527,6 +622,7 @@ mod tests {
         let opts = SweepOptions {
             per_m: true,
             divergence_threshold: 0.10,
+            ..Default::default()
         };
         let w = decide_winners(64, 0.25, &[3, 4, 16], &measured, &opts);
         let split = entry_for(&w, ShapeClass::of_m(64, 0.25, 4)).unwrap();
@@ -546,6 +642,7 @@ mod tests {
         let opts = SweepOptions {
             per_m: true,
             divergence_threshold: 0.10,
+            ..Default::default()
         };
         let w = decide_winners(64, 0.25, &[3, 4, 16], &measured, &opts);
         let fallback = entry_for(&w, ShapeClass::of(64, 0.25)).unwrap();
@@ -568,6 +665,7 @@ mod tests {
         let opts = SweepOptions {
             per_m: true,
             divergence_threshold: 0.08,
+            ..Default::default()
         };
         let w = decide_winners(64, 0.25, &[3, 4], &measured, &opts);
         assert_eq!(w.len(), 1, "group winner equals mean winner → no split");
@@ -583,10 +681,7 @@ mod tests {
         // (must be retired — with a single candidate the fresh sweep can
         // never re-split, so only retirement can correct it), one for a
         // bucket it does not (must survive).
-        let stale = TuneEntry {
-            kernel: B,
-            flops_per_cycle: 9.9,
-        };
+        let stale = TuneEntry::new(B, 9.9);
         table.insert(ShapeClass::of_m(32, 0.25, 1), stale.clone());
         table.insert(ShapeClass::of_m(32, 0.25, 64), stale.clone());
         let opts = SweepOptions {
@@ -630,5 +725,87 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn reduce_geometry_records_only_divergent_non_default_winners() {
+        let d = TileGeometry::DEFAULT;
+        let g = TileGeometry::new(8, 1024);
+        // Non-default wins by 50% > 8% → recorded.
+        let (idx, rec) = reduce_geometry(&[d, g], &[vec![2.0, 2.0], vec![3.0, 3.0]], 0.08);
+        assert_eq!((idx, rec), (1, Some(g)));
+        // Non-default wins by only 2% → the default wins by fiat.
+        let (idx, rec) = reduce_geometry(&[d, g], &[vec![2.0], vec![2.04]], 0.08);
+        assert_eq!((idx, rec), (0, None));
+        // Default outright best → no geometry recorded.
+        let (idx, rec) = reduce_geometry(&[d, g], &[vec![5.0], vec![3.0]], 0.08);
+        assert_eq!((idx, rec), (0, None));
+        // Single candidate (every non-axis kernel) → trivially default.
+        assert_eq!(reduce_geometry(&[d], &[vec![1.0]], 0.08), (0, None));
+    }
+
+    #[test]
+    fn geometry_sweep_measures_axis_kernels_across_candidates() {
+        let c = cfg();
+        let timer = CycleTimer::new(0, 1);
+        let mut table = TuningTable::new();
+        let opts = SweepOptions {
+            geometry: true,
+            ..Default::default()
+        };
+        let report = sweep_model_opts(
+            &c,
+            &[1, 4],
+            crate::kernels::kernel_ids(),
+            &timer,
+            &mut table,
+            &opts,
+        );
+        let host = CpuCaps::host();
+        let cands = crate::perf::geometry_candidates(&host);
+        // Axis points carry the geometry they were measured at; non-axis
+        // kernels never do.
+        for p in &report.points {
+            match p.geometry {
+                Some(g) => {
+                    assert!(p.kernel.descriptor().geometry, "{}", p.kernel);
+                    assert!(cands.contains(&g), "unknown candidate {g:?}");
+                }
+                None => assert!(!p.kernel.descriptor().geometry, "{}", p.kernel),
+            }
+        }
+        // Every admissible axis kernel was measured at every candidate.
+        let axis: Vec<KernelId> =
+            admissible_candidates(&host, crate::kernels::kernel_ids())
+                .into_iter()
+                .filter(|id| id.descriptor().geometry)
+                .collect();
+        assert!(!axis.is_empty(), "portable tile kernel is always admissible");
+        for kid in axis {
+            for &g in &cands {
+                assert!(
+                    report
+                        .points
+                        .iter()
+                        .any(|p| p.kernel == kid && p.geometry == Some(g)),
+                    "{kid} not measured at {g:?}"
+                );
+            }
+        }
+        // Recorded winners only ever carry divergent non-default
+        // geometries from the candidate grid.
+        for (_, entry) in &report.winners {
+            if let Some(g) = entry.geometry {
+                assert!(entry.kernel.descriptor().geometry);
+                assert_ne!(g, TileGeometry::DEFAULT);
+                assert!(cands.contains(&g));
+            }
+        }
+        // Without --geometry nothing varies and nothing is recorded.
+        let mut table2 = TuningTable::new();
+        let report2 =
+            sweep_model(&c, &[1], crate::kernels::kernel_ids(), &timer, &mut table2);
+        assert!(report2.points.iter().all(|p| p.geometry.is_none()));
+        assert!(report2.winners.iter().all(|(_, e)| e.geometry.is_none()));
     }
 }

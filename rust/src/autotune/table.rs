@@ -11,8 +11,17 @@
 //! resolves `(K, sparsity, M)` to the M-aware entry when one exists and
 //! falls back to the M-agnostic `(K, sparsity)` entry otherwise, so
 //! existing JSON tables keep working unchanged.
+//!
+//! Entries may additionally record the winning **tile geometry** (a
+//! `"geometry": "p8kb4096"` field, [`TileGeometry::name`] spelling) when a
+//! geometry sweep or race found a non-default geometry winning for a
+//! geometry-axis kernel. The field is emitted only when present, so tables
+//! written by this build stay loadable by older builds and — the other
+//! direction — old name-keyed JSON loads unchanged, resolving to the
+//! default geometry.
 
 use crate::bench::harness::measure_kernel;
+use crate::formats::TileGeometry;
 use crate::kernels::{KernelId, KernelParams};
 use crate::perf::timer::CycleTimer;
 use crate::util::json::Json;
@@ -135,11 +144,27 @@ fn bucket_sparsity(s: f32) -> u32 {
 
 /// One tuning entry: the winning kernel (typed — resolved from the
 /// registry at load time, so a poisoned entry naming an unregistered
-/// kernel is unrepresentable) and its measured performance.
+/// kernel is unrepresentable), its measured performance, and — for
+/// geometry-axis kernels whose sweep/race found a non-default geometry
+/// winning — the winning [`TileGeometry`]. `None` means "default
+/// geometry": every pre-geometry entry resolves that way.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TuneEntry {
     pub kernel: KernelId,
     pub flops_per_cycle: f64,
+    pub geometry: Option<TileGeometry>,
+}
+
+impl TuneEntry {
+    /// Entry with the default geometry (the common case; geometry winners
+    /// are attached by the sweep/race recording paths).
+    pub fn new(kernel: KernelId, flops_per_cycle: f64) -> TuneEntry {
+        TuneEntry {
+            kernel,
+            flops_per_cycle,
+            geometry: None,
+        }
+    }
 }
 
 /// A persisted tuning table.
@@ -148,11 +173,12 @@ pub struct TuningTable {
     entries: BTreeMap<ShapeClass, TuneEntry>,
     /// Entries whose kernel name did not resolve to a [`KernelId`] at load
     /// (a table written by a build with extra kernels). They never reach
-    /// lookups, but [`TuningTable::to_json`] re-emits them so a
-    /// load-modify-save cycle (`autotune --save` over an existing file)
-    /// does not silently destroy another build's measurements. A resolved
-    /// entry recorded later for the same class shadows the unresolved one.
-    unresolved: BTreeMap<ShapeClass, (String, f64)>,
+    /// lookups, but [`TuningTable::to_json`] re-emits them (kernel name,
+    /// flops/cycle, raw geometry string) so a load-modify-save cycle
+    /// (`autotune --save` over an existing file) does not silently destroy
+    /// another build's measurements. A resolved entry recorded later for
+    /// the same class shadows the unresolved one.
+    unresolved: BTreeMap<ShapeClass, (String, f64, Option<String>)>,
 }
 
 impl TuningTable {
@@ -230,10 +256,7 @@ impl TuningTable {
             );
             let fpc = meas.flops_per_cycle();
             if best.as_ref().map(|b| fpc > b.flops_per_cycle).unwrap_or(true) {
-                best = Some(TuneEntry {
-                    kernel,
-                    flops_per_cycle: fpc,
-                });
+                best = Some(TuneEntry::new(kernel, fpc));
             }
         }
         let entry = best.expect("non-empty candidate set");
@@ -245,13 +268,16 @@ impl TuningTable {
 
     pub fn to_json(&self) -> Json {
         let resolved = self.entries.iter().map(|(class, e)| {
-            (
-                class.key(),
-                Json::obj(vec![
-                    ("kernel", Json::str(e.kernel.name())),
-                    ("flops_per_cycle", Json::num(e.flops_per_cycle)),
-                ]),
-            )
+            let mut fields = vec![
+                ("kernel", Json::str(e.kernel.name())),
+                ("flops_per_cycle", Json::num(e.flops_per_cycle)),
+            ];
+            // Emitted only when non-default, so tables without geometry
+            // winners are byte-compatible with pre-geometry builds.
+            if let Some(g) = e.geometry {
+                fields.push(("geometry", Json::str(g.name())));
+            }
+            (class.key(), Json::obj(fields))
         });
         // Unresolved entries ride along unless a resolved entry now covers
         // their class (fresh measurements shadow foreign-build leftovers).
@@ -259,14 +285,15 @@ impl TuningTable {
             .unresolved
             .iter()
             .filter(|(class, _)| !self.entries.contains_key(class))
-            .map(|(class, (kernel, fpc))| {
-                (
-                    class.key(),
-                    Json::obj(vec![
-                        ("kernel", Json::str(kernel.clone())),
-                        ("flops_per_cycle", Json::num(*fpc)),
-                    ]),
-                )
+            .map(|(class, (kernel, fpc, geom))| {
+                let mut fields = vec![
+                    ("kernel", Json::str(kernel.clone())),
+                    ("flops_per_cycle", Json::num(*fpc)),
+                ];
+                if let Some(g) = geom {
+                    fields.push(("geometry", Json::str(g.clone())));
+                }
+                (class.key(), Json::obj(fields))
             });
         Json::Obj(resolved.chain(carried).collect())
     }
@@ -295,6 +322,10 @@ impl TuningTable {
                 .get("flops_per_cycle")
                 .and_then(|f| f.as_f64())
                 .unwrap_or(0.0);
+            let geom_raw = entry
+                .get("geometry")
+                .and_then(|g| g.as_str())
+                .map(str::to_string);
             let kernel = match KernelId::parse(name) {
                 Some(k) => k,
                 None => {
@@ -302,15 +333,32 @@ impl TuningTable {
                         "[tuning] warning: key '{key}' names unknown kernel \
                          '{name}'; excluded from lookups (kept on re-save)"
                     );
-                    t.unresolved.insert(class, (name.to_string(), fpc));
+                    t.unresolved.insert(class, (name.to_string(), fpc, geom_raw));
                     continue;
                 }
+            };
+            // Absent geometry (every pre-geometry table) resolves to the
+            // default; an unparseable spelling degrades the same way with
+            // a warning — the kernel pick is still valid without it.
+            let geometry = match &geom_raw {
+                Some(raw) => {
+                    let parsed = TileGeometry::parse(raw);
+                    if parsed.is_none() {
+                        eprintln!(
+                            "[tuning] warning: key '{key}' has unknown geometry \
+                             '{raw}'; resolving to the default geometry"
+                        );
+                    }
+                    parsed
+                }
+                None => None,
             };
             let displaced = t.insert(
                 class,
                 TuneEntry {
                     kernel,
                     flops_per_cycle: fpc,
+                    geometry,
                 },
             );
             // Re-bucketing can make formerly-distinct keys (one snapped,
@@ -403,10 +451,7 @@ mod tests {
         let mut t = TuningTable::new();
         t.insert(
             ShapeClass::parse("k1000_s2400").unwrap(),
-            TuneEntry {
-                kernel: KernelId::BaseTcsc,
-                flops_per_cycle: 1.0,
-            },
+            TuneEntry::new(KernelId::BaseTcsc, 1.0),
         );
         assert!(t.lookup(1000, 0.24).is_some(), "re-bucketed entry resolves");
     }
@@ -416,17 +461,11 @@ mod tests {
         let mut t = TuningTable::new();
         t.insert(
             ShapeClass::of(512, 0.25),
-            TuneEntry {
-                kernel: KernelId::InterleavedBlockedTcsc,
-                flops_per_cycle: 2.0,
-            },
+            TuneEntry::new(KernelId::InterleavedBlockedTcsc, 2.0),
         );
         t.insert(
             ShapeClass::of_m(512, 0.25, 1),
-            TuneEntry {
-                kernel: KernelId::UnrolledTcscK4M4,
-                flops_per_cycle: 3.0,
-            },
+            TuneEntry::new(KernelId::UnrolledTcscK4M4, 3.0),
         );
         // Exact bucket wins.
         assert_eq!(t.kernel_for(512, 0.25, 1), KernelId::UnrolledTcscK4M4);
@@ -436,10 +475,7 @@ mod tests {
         let mut only_m = TuningTable::new();
         only_m.insert(
             ShapeClass::of_m(256, 0.5, 8),
-            TuneEntry {
-                kernel: KernelId::BaseTcsc,
-                flops_per_cycle: 1.0,
-            },
+            TuneEntry::new(KernelId::BaseTcsc, 1.0),
         );
         assert!(only_m.lookup_m(256, 0.5, 64).is_none());
         // ...but same-bucket batch sizes share the entry (5 → bucket 8).
@@ -466,27 +502,88 @@ mod tests {
         let mut t = TuningTable::new();
         t.insert(
             ShapeClass::of(4096, 0.5),
-            TuneEntry {
-                kernel: KernelId::InterleavedBlockedTcsc,
-                flops_per_cycle: 2.5,
-            },
+            TuneEntry::new(KernelId::InterleavedBlockedTcsc, 2.5),
         );
         t.insert(
             ShapeClass::of(1024, 0.0625),
-            TuneEntry {
-                kernel: KernelId::UnrolledTcsc12,
-                flops_per_cycle: 1.5,
-            },
+            TuneEntry::new(KernelId::UnrolledTcsc12, 1.5),
         );
         t.insert(
             ShapeClass::of_m(1024, 0.0625, 64),
-            TuneEntry {
-                kernel: KernelId::SimdVertical,
-                flops_per_cycle: 3.5,
-            },
+            TuneEntry::new(KernelId::SimdVertical, 3.5),
         );
         let decoded = TuningTable::from_json(&t.to_json()).unwrap();
         assert_eq!(decoded, t);
+    }
+
+    #[test]
+    fn geometry_field_roundtrips_and_old_json_resolves_to_default() {
+        use crate::formats::TileGeometry;
+        // An entry with a geometry winner round-trips through JSON.
+        let mut t = TuningTable::new();
+        t.insert(
+            ShapeClass::of(2048, 0.25),
+            TuneEntry {
+                kernel: KernelId::OuterProductTileSimd,
+                flops_per_cycle: 4.0,
+                geometry: Some(TileGeometry::new(8, 4096)),
+            },
+        );
+        t.insert(
+            ShapeClass::of(512, 0.25),
+            TuneEntry::new(KernelId::BaseTcsc, 1.0),
+        );
+        let json = t.to_json();
+        let with_geom = json.get("k2048_s2500").unwrap();
+        assert_eq!(
+            with_geom.get("geometry").unwrap().as_str(),
+            Some("p8kb4096"),
+            "geometry is emitted in name spelling"
+        );
+        assert!(
+            json.get("k512_s2500").unwrap().get("geometry").is_none(),
+            "default-geometry entries stay byte-compatible with old builds"
+        );
+        assert_eq!(TuningTable::from_json(&json).unwrap(), t);
+        // Old name-keyed JSON (no geometry field anywhere) loads and
+        // resolves to the default geometry — the back-compat rule.
+        let old = Json::parse(
+            r#"{"k1024_s2500": {"kernel": "outer_product_tile", "flops_per_cycle": 2.0}}"#,
+        )
+        .unwrap();
+        let t = TuningTable::from_json(&old).unwrap();
+        let e = t.lookup(1024, 0.25).unwrap();
+        assert_eq!(e.kernel, KernelId::OuterProductTile);
+        assert_eq!(e.geometry, None);
+        // An unparseable geometry spelling degrades to the default with
+        // the kernel pick intact, instead of rejecting the table.
+        let weird = Json::parse(
+            r#"{"k1024_s2500": {"kernel": "outer_product_tile", "geometry": "p16kb9"}}"#,
+        )
+        .unwrap();
+        let t = TuningTable::from_json(&weird).unwrap();
+        let e = t.lookup(1024, 0.25).unwrap();
+        assert_eq!(e.kernel, KernelId::OuterProductTile);
+        assert_eq!(e.geometry, None);
+    }
+
+    #[test]
+    fn unresolved_entries_carry_their_geometry_through_resave() {
+        let json = Json::parse(
+            r#"{"k1024_s2500": {"kernel": "bogus", "flops_per_cycle": 7.5,
+                                "geometry": "p8kb2048"}}"#,
+        )
+        .unwrap();
+        let t = TuningTable::from_json(&json).unwrap();
+        assert!(t.is_empty(), "unknown kernel stays out of lookups");
+        let back = t.to_json();
+        let carried = back.get("k1024_s2500").expect("entry carried");
+        assert_eq!(carried.get("kernel").unwrap().as_str(), Some("bogus"));
+        assert_eq!(
+            carried.get("geometry").unwrap().as_str(),
+            Some("p8kb2048"),
+            "foreign geometry string survives load-modify-save"
+        );
     }
 
     #[test]
@@ -529,10 +626,7 @@ mod tests {
         // measurements shadow the leftover.
         t.insert(
             ShapeClass::of(1024, 0.25),
-            TuneEntry {
-                kernel: KernelId::UnrolledTcsc12,
-                flops_per_cycle: 2.0,
-            },
+            TuneEntry::new(KernelId::UnrolledTcsc12, 2.0),
         );
         let shadowed = t.to_json();
         assert_eq!(
@@ -552,10 +646,7 @@ mod tests {
         t.tune(256, 0.5, &[KernelId::BaseTcsc], &timer);
         t.insert(
             ShapeClass::of_m(256, 0.5, 4),
-            TuneEntry {
-                kernel: KernelId::UnrolledTcsc12,
-                flops_per_cycle: 2.0,
-            },
+            TuneEntry::new(KernelId::UnrolledTcsc12, 2.0),
         );
         let path = std::env::temp_dir().join("stgemm_tuning_test.json");
         let path = path.to_str().unwrap();

@@ -17,7 +17,7 @@ pub mod compressed;
 pub mod inverted;
 pub mod outer_tile;
 
-pub use outer_tile::{TilePanelTcsc, OUTER_TILE};
+pub use outer_tile::{TileGeometry, TilePanelTcsc, MAX_PANEL_WIDTH, OUTER_TILE};
 pub use tcsc::Tcsc;
 pub use blocked::BlockedTcsc;
 pub use interleaved::InterleavedTcsc;

@@ -1,97 +1,234 @@
 //! Tile-panel TCSC — the storage layout behind the outer-product kernel
 //! family.
 //!
-//! Columns are grouped into panels of [`OUTER_TILE`] consecutive output
-//! columns. Within a panel the sign-split nonzeros are stored as two
-//! streams — `(k, c)` pairs in `(k, c)`-lexicographic order, where `c` is
-//! the column offset *inside* the panel (fits in a `u8`). An outer-product
-//! kernel walks one panel's streams once per M-row tile: every entry turns
-//! into an add (or sub) of a gathered X value into a register-resident
-//! T×T accumulator tile, so the accumulators never round-trip through
-//! memory inside a panel.
+//! Columns are grouped into panels of [`TileGeometry::panel_width`]
+//! consecutive output columns (4 or 8; [`OUTER_TILE`] is the default).
+//! Within a panel the sign-split nonzeros are stored as two streams —
+//! `(k, c)` pairs in `(k, c)`-lexicographic order, where `c` is the column
+//! offset *inside* the panel (fits in a `u8`). An outer-product kernel
+//! walks one panel's streams once per M-row tile: every entry turns into
+//! an add (or sub) of a gathered X value into a register-resident
+//! accumulator tile, so the accumulators never round-trip through memory
+//! inside a panel.
+//!
+//! When [`TileGeometry::k_block`] is nonzero the header additionally
+//! records per-(panel, K-block) stream offsets, so a kernel can consume a
+//! panel's streams in L1d-resident K-slices ([`TilePanelTcsc::panel_pos_block`]).
+//! The K-blocks partition each panel stream at ascending-k boundaries, so
+//! walking a panel's blocks in order replays the unblocked stream exactly.
 //!
 //! The `(k, c)` order is load-bearing for bitwise reproducibility: for any
 //! fixed output cell `(r, col)` the entries of that cell's column appear in
 //! ascending-k order within the stream, which is exactly the order the
 //! sequential baseline ([`crate::kernels::BaseTcscKernel`]) accumulates
 //! them in. With one accumulator per cell, positives applied before
-//! negatives, the outer-product kernels reproduce the baseline's f32
-//! rounding bit for bit.
+//! negatives (all of a panel's positive K-blocks before any negative one),
+//! the outer-product kernels reproduce the baseline's f32 rounding bit for
+//! bit at **every** geometry.
 
 use crate::formats::SparseFormat;
 use crate::ternary::TernaryMatrix;
 
-/// Accumulator tile width: panels cover `OUTER_TILE` output columns, and
-/// the kernels pair that with `OUTER_TILE` X rows for a T×T register tile.
+/// Default accumulator tile width: panels cover `OUTER_TILE` output
+/// columns, and the kernels pair that with `OUTER_TILE` X rows for a T×T
+/// register tile.
 pub const OUTER_TILE: usize = 4;
 
-/// Sign-split tile-panel format: per-panel `(k, c)`-ordered entry streams.
+/// Widest panel the format (and the kernels' register tiles) support.
+pub const MAX_PANEL_WIDTH: usize = 8;
+
+/// Blocking geometry of a tile-panel format: how wide the column panels
+/// are and how the K dimension is sliced. Carried in the format header,
+/// threaded through [`crate::kernels::KernelParams`], recorded by tuning
+/// entries, and derived from cache sizes by `perf::blocking`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TileGeometry {
+    /// Panel (column-tile) width: 4 or [`MAX_PANEL_WIDTH`].
+    pub panel_width: usize,
+    /// K-slice length for the blocked walk; `0` = unblocked (one slice
+    /// spanning all of K).
+    pub k_block: usize,
+}
+
+impl TileGeometry {
+    /// The pre-geometry-era layout: 4-wide panels, unblocked K. Old tuning
+    /// entries (and `KernelParams` with no geometry) resolve to this.
+    pub const DEFAULT: TileGeometry = TileGeometry {
+        panel_width: OUTER_TILE,
+        k_block: 0,
+    };
+
+    pub fn new(panel_width: usize, k_block: usize) -> TileGeometry {
+        TileGeometry {
+            panel_width,
+            k_block,
+        }
+    }
+
+    /// Reject geometries the kernels have no register-tile variant for.
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.panel_width != OUTER_TILE && self.panel_width != MAX_PANEL_WIDTH {
+            return Err(crate::Error::BadKernelParams(format!(
+                "tile geometry panel width must be {OUTER_TILE} or {MAX_PANEL_WIDTH}, got {}",
+                self.panel_width
+            )));
+        }
+        Ok(())
+    }
+
+    /// Number of K-slices a K-row matrix splits into (1 when unblocked or
+    /// when K is empty).
+    pub fn k_blocks(&self, k: usize) -> usize {
+        if self.k_block == 0 {
+            1
+        } else {
+            k.div_ceil(self.k_block).max(1)
+        }
+    }
+
+    /// Half-open k range `[lo, hi)` of block `b` (the last block may be
+    /// short).
+    pub fn block_bounds(&self, k: usize, b: usize) -> (usize, usize) {
+        if self.k_block == 0 {
+            (0, k)
+        } else {
+            let lo = b * self.k_block;
+            (lo.min(k), ((b + 1) * self.k_block).min(k))
+        }
+    }
+
+    /// Compact spelling used in tuning-table JSON and bench rows:
+    /// `p{width}` when unblocked, `p{width}kb{block}` when K-blocked.
+    pub fn name(&self) -> String {
+        if self.k_block == 0 {
+            format!("p{}", self.panel_width)
+        } else {
+            format!("p{}kb{}", self.panel_width, self.k_block)
+        }
+    }
+
+    /// Parse the [`TileGeometry::name`] spelling. Strict: `None` for
+    /// anything that is not a valid, kernel-supported geometry (JSON
+    /// loaders degrade unknown spellings to the default instead of
+    /// guessing).
+    pub fn parse(s: &str) -> Option<TileGeometry> {
+        let rest = s.strip_prefix('p')?;
+        let (width_str, block_str) = match rest.split_once("kb") {
+            Some((w, b)) => (w, Some(b)),
+            None => (rest, None),
+        };
+        let panel_width: usize = width_str.parse().ok()?;
+        let k_block: usize = match block_str {
+            Some(b) => {
+                let b: usize = b.parse().ok()?;
+                if b == 0 {
+                    return None; // "kb0" is not a spelling we emit
+                }
+                b
+            }
+            None => 0,
+        };
+        let g = TileGeometry {
+            panel_width,
+            k_block,
+        };
+        g.validate().ok()?;
+        Some(g)
+    }
+}
+
+impl Default for TileGeometry {
+    fn default() -> Self {
+        TileGeometry::DEFAULT
+    }
+}
+
+impl std::fmt::Display for TileGeometry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
+/// Sign-split tile-panel format: per-panel, per-K-block `(k, c)`-ordered
+/// entry streams, geometry carried in the header.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TilePanelTcsc {
     k: usize,
     n: usize,
-    /// Panel (column-tile) width; currently always [`OUTER_TILE`].
-    pub tile: usize,
-    /// Start of each panel's +1 entries in `pos_k`/`pos_c`; length
-    /// `panels + 1`.
-    pub panel_start_pos: Vec<u32>,
-    /// Start of each panel's -1 entries in `neg_k`/`neg_c`; length
-    /// `panels + 1`.
-    pub panel_start_neg: Vec<u32>,
-    /// Row (k) index of every +1 entry, panel-major, `(k, c)`-ascending
-    /// within a panel.
+    geom: TileGeometry,
+    /// Stream start of each (panel, K-block) slice of the +1 entries;
+    /// length `panels · k_blocks + 1`, indexed `p · k_blocks + b`.
+    pub block_start_pos: Vec<u32>,
+    /// Stream start of each (panel, K-block) slice of the -1 entries.
+    pub block_start_neg: Vec<u32>,
+    /// Row (k) index of every +1 entry, panel-major then block-major,
+    /// `(k, c)`-ascending within a (panel, block).
     pub pos_k: Vec<u32>,
     /// In-panel column offset of every +1 entry; parallel to `pos_k`.
     pub pos_c: Vec<u8>,
-    /// Row (k) index of every -1 entry, panel-major, `(k, c)`-ascending
-    /// within a panel.
+    /// Row (k) index of every -1 entry, panel-major then block-major,
+    /// `(k, c)`-ascending within a (panel, block).
     pub neg_k: Vec<u32>,
     /// In-panel column offset of every -1 entry; parallel to `neg_k`.
     pub neg_c: Vec<u8>,
 }
 
 impl TilePanelTcsc {
-    /// Build from a dense ternary matrix, panels of [`OUTER_TILE`] columns.
+    /// Build with the default geometry (4-wide panels, unblocked K).
     pub fn from_ternary(w: &TernaryMatrix) -> TilePanelTcsc {
+        TilePanelTcsc::from_ternary_with(w, TileGeometry::DEFAULT)
+    }
+
+    /// Build with an explicit geometry. `geom` must pass
+    /// [`TileGeometry::validate`] — callers reaching this through the
+    /// registry have already validated it via `KernelParams::validate`.
+    pub fn from_ternary_with(w: &TernaryMatrix, geom: TileGeometry) -> TilePanelTcsc {
+        geom.validate().expect("kernel-supported tile geometry");
         let (k, n) = (w.k(), w.n());
-        let tile = OUTER_TILE;
+        let tile = geom.panel_width;
         let panels = n.div_ceil(tile);
-        let mut panel_start_pos = Vec::with_capacity(panels + 1);
-        let mut panel_start_neg = Vec::with_capacity(panels + 1);
+        let kblocks = geom.k_blocks(k);
+        let mut block_start_pos = Vec::with_capacity(panels * kblocks + 1);
+        let mut block_start_neg = Vec::with_capacity(panels * kblocks + 1);
         let mut pos_k = Vec::new();
         let mut pos_c = Vec::new();
         let mut neg_k = Vec::new();
         let mut neg_c = Vec::new();
-        panel_start_pos.push(0);
-        panel_start_neg.push(0);
+        block_start_pos.push(0);
+        block_start_neg.push(0);
         for p in 0..panels {
             let col0 = p * tile;
             let width = tile.min(n - col0);
-            // k outer, c inner → (k, c)-lexicographic per panel per sign.
-            for row in 0..k {
-                for c in 0..width {
-                    match w.get(row, col0 + c) {
-                        1 => {
-                            pos_k.push(row as u32);
-                            pos_c.push(c as u8);
+            for b in 0..kblocks {
+                let (klo, khi) = geom.block_bounds(k, b);
+                // k outer, c inner → (k, c)-lexicographic per (panel,
+                // block) per sign; blocks ascend in k, so the panel's
+                // concatenated stream is identical to the unblocked one.
+                for row in klo..khi {
+                    for c in 0..width {
+                        match w.get(row, col0 + c) {
+                            1 => {
+                                pos_k.push(row as u32);
+                                pos_c.push(c as u8);
+                            }
+                            -1 => {
+                                neg_k.push(row as u32);
+                                neg_c.push(c as u8);
+                            }
+                            _ => {}
                         }
-                        -1 => {
-                            neg_k.push(row as u32);
-                            neg_c.push(c as u8);
-                        }
-                        _ => {}
                     }
                 }
+                block_start_pos.push(pos_k.len() as u32);
+                block_start_neg.push(neg_k.len() as u32);
             }
-            panel_start_pos.push(pos_k.len() as u32);
-            panel_start_neg.push(neg_k.len() as u32);
         }
         let f = TilePanelTcsc {
             k,
             n,
-            tile,
-            panel_start_pos,
-            panel_start_neg,
+            geom,
+            block_start_pos,
+            block_start_neg,
             pos_k,
             pos_c,
             neg_k,
@@ -101,74 +238,124 @@ impl TilePanelTcsc {
         f
     }
 
+    /// The blocking geometry carried in the header.
+    pub fn geometry(&self) -> TileGeometry {
+        self.geom
+    }
+
+    /// Panel (column-tile) width.
+    pub fn tile(&self) -> usize {
+        self.geom.panel_width
+    }
+
     /// Number of column panels.
     pub fn panels(&self) -> usize {
-        self.n.div_ceil(self.tile)
+        self.n.div_ceil(self.geom.panel_width)
     }
 
-    /// Width of panel `p` (the last panel may be narrower than `tile`).
+    /// Number of K-slices per panel (1 when unblocked).
+    pub fn k_blocks(&self) -> usize {
+        self.geom.k_blocks(self.k)
+    }
+
+    /// Width of panel `p` (the last panel may be narrower than the tile).
     pub fn panel_width(&self, p: usize) -> usize {
-        self.tile.min(self.n - p * self.tile)
+        self.geom.panel_width.min(self.n - p * self.geom.panel_width)
     }
 
-    /// Panel `p`'s +1 entries as parallel `(k, c)` slices.
+    /// Panel `p`'s +1 entries as parallel `(k, c)` slices (all K-blocks).
     #[inline]
     pub fn panel_pos(&self, p: usize) -> (&[u32], &[u8]) {
-        let lo = self.panel_start_pos[p] as usize;
-        let hi = self.panel_start_pos[p + 1] as usize;
+        let kb = self.k_blocks();
+        let lo = self.block_start_pos[p * kb] as usize;
+        let hi = self.block_start_pos[(p + 1) * kb] as usize;
         (&self.pos_k[lo..hi], &self.pos_c[lo..hi])
     }
 
-    /// Panel `p`'s -1 entries as parallel `(k, c)` slices.
+    /// Panel `p`'s -1 entries as parallel `(k, c)` slices (all K-blocks).
     #[inline]
     pub fn panel_neg(&self, p: usize) -> (&[u32], &[u8]) {
-        let lo = self.panel_start_neg[p] as usize;
-        let hi = self.panel_start_neg[p + 1] as usize;
+        let kb = self.k_blocks();
+        let lo = self.block_start_neg[p * kb] as usize;
+        let hi = self.block_start_neg[(p + 1) * kb] as usize;
+        (&self.neg_k[lo..hi], &self.neg_c[lo..hi])
+    }
+
+    /// K-block `b` of panel `p`'s +1 entries.
+    #[inline]
+    pub fn panel_pos_block(&self, p: usize, b: usize) -> (&[u32], &[u8]) {
+        let kb = self.k_blocks();
+        let lo = self.block_start_pos[p * kb + b] as usize;
+        let hi = self.block_start_pos[p * kb + b + 1] as usize;
+        (&self.pos_k[lo..hi], &self.pos_c[lo..hi])
+    }
+
+    /// K-block `b` of panel `p`'s -1 entries.
+    #[inline]
+    pub fn panel_neg_block(&self, p: usize, b: usize) -> (&[u32], &[u8]) {
+        let kb = self.k_blocks();
+        let lo = self.block_start_neg[p * kb + b] as usize;
+        let hi = self.block_start_neg[p * kb + b + 1] as usize;
         (&self.neg_k[lo..hi], &self.neg_c[lo..hi])
     }
 
     fn validate_stream(
         &self,
         label: &str,
-        panel_start: &[u32],
+        block_start: &[u32],
         ks: &[u32],
         cs: &[u8],
     ) -> crate::Result<()> {
         let panels = self.panels();
+        let kblocks = self.k_blocks();
         let err = |msg: String| Err(crate::Error::Format(format!("TilePanelTCSC {label}: {msg}")));
-        if panel_start.len() != panels + 1 {
-            return err(format!("panel_start length {} != panels+1", panel_start.len()));
+        if block_start.len() != panels * kblocks + 1 {
+            return err(format!(
+                "block_start length {} != panels·k_blocks+1",
+                block_start.len()
+            ));
         }
-        if panel_start[0] != 0 {
-            return err("panel_start[0] != 0".to_string());
+        if block_start[0] != 0 {
+            return err("block_start[0] != 0".to_string());
         }
-        if *panel_start.last().unwrap() as usize != ks.len() {
-            return err("panel_start end != entry count".to_string());
+        if *block_start.last().unwrap() as usize != ks.len() {
+            return err("block_start end != entry count".to_string());
         }
         if ks.len() != cs.len() {
             return err("k/c stream length mismatch".to_string());
         }
         for p in 0..panels {
-            if panel_start[p] > panel_start[p + 1] {
-                return err(format!("panel_start not monotone at panel {p}"));
-            }
-            let lo = panel_start[p] as usize;
-            let hi = panel_start[p + 1] as usize;
             let width = self.panel_width(p);
-            let mut prev: Option<(u32, u8)> = None;
-            for (&row, &c) in ks[lo..hi].iter().zip(&cs[lo..hi]) {
-                if row as usize >= self.k {
-                    return err(format!("panel {p} k index {row} out of range"));
+            for b in 0..kblocks {
+                let slot = p * kblocks + b;
+                if block_start[slot] > block_start[slot + 1] {
+                    return err(format!("block_start not monotone at panel {p} block {b}"));
                 }
-                if c as usize >= width {
-                    return err(format!("panel {p} column offset {c} >= width {width}"));
-                }
-                if let Some(prev) = prev {
-                    if prev >= (row, c) {
-                        return err(format!("panel {p} entries not strictly (k,c)-ascending"));
+                let lo = block_start[slot] as usize;
+                let hi = block_start[slot + 1] as usize;
+                let (klo, khi) = self.geom.block_bounds(self.k, b);
+                let mut prev: Option<(u32, u8)> = None;
+                for (&row, &c) in ks[lo..hi].iter().zip(&cs[lo..hi]) {
+                    if row as usize >= self.k {
+                        return err(format!("panel {p} k index {row} out of range"));
                     }
+                    if (row as usize) < klo || row as usize >= khi {
+                        return err(format!(
+                            "panel {p} block {b} k index {row} outside slice [{klo}, {khi})"
+                        ));
+                    }
+                    if c as usize >= width {
+                        return err(format!("panel {p} column offset {c} >= width {width}"));
+                    }
+                    if let Some(prev) = prev {
+                        if prev >= (row, c) {
+                            return err(format!(
+                                "panel {p} block {b} entries not strictly (k,c)-ascending"
+                            ));
+                        }
+                    }
+                    prev = Some((row, c));
                 }
-                prev = Some((row, c));
             }
         }
         Ok(())
@@ -192,8 +379,8 @@ impl SparseFormat for TilePanelTcsc {
 
     fn bytes(&self) -> usize {
         std::mem::size_of::<u32>()
-            * (self.panel_start_pos.len()
-                + self.panel_start_neg.len()
+            * (self.block_start_pos.len()
+                + self.block_start_neg.len()
                 + self.pos_k.len()
                 + self.neg_k.len())
             + std::mem::size_of::<u8>() * (self.pos_c.len() + self.neg_c.len())
@@ -202,7 +389,7 @@ impl SparseFormat for TilePanelTcsc {
     fn to_dense(&self) -> TernaryMatrix {
         let mut w = TernaryMatrix::zeros(self.k, self.n);
         for p in 0..self.panels() {
-            let col0 = p * self.tile;
+            let col0 = p * self.geom.panel_width;
             let (ks, cs) = self.panel_pos(p);
             for (&row, &c) in ks.iter().zip(cs) {
                 w.set(row as usize, col0 + c as usize, 1);
@@ -216,13 +403,11 @@ impl SparseFormat for TilePanelTcsc {
     }
 
     fn validate(&self) -> crate::Result<()> {
-        if self.tile == 0 {
-            return Err(crate::Error::Format(
-                "TilePanelTCSC: tile width must be positive".to_string(),
-            ));
-        }
-        self.validate_stream("pos", &self.panel_start_pos, &self.pos_k, &self.pos_c)?;
-        self.validate_stream("neg", &self.panel_start_neg, &self.neg_k, &self.neg_c)?;
+        self.geom.validate().map_err(|e| {
+            crate::Error::Format(format!("TilePanelTCSC: bad geometry: {e}"))
+        })?;
+        self.validate_stream("pos", &self.block_start_pos, &self.pos_k, &self.pos_c)?;
+        self.validate_stream("neg", &self.block_start_neg, &self.neg_k, &self.neg_c)?;
         Ok(())
     }
 }
@@ -231,16 +416,76 @@ impl SparseFormat for TilePanelTcsc {
 mod tests {
     use super::*;
 
+    /// The geometry grid the format tests sweep: both widths, unblocked
+    /// plus K-blocks that don't divide K, a degenerate block of 1, and a
+    /// block larger than K.
+    fn test_geometries() -> Vec<TileGeometry> {
+        let mut gs = Vec::new();
+        for w in [4usize, 8] {
+            for kb in [0usize, 1, 7, 16, 1024] {
+                gs.push(TileGeometry::new(w, kb));
+            }
+        }
+        gs
+    }
+
     #[test]
-    fn roundtrip_random() {
+    fn roundtrip_random_across_geometries() {
         for &s in &crate::PAPER_SPARSITIES {
-            // 48 columns = 12 full panels; 50 leaves a 2-wide last panel.
+            // 48 columns = full panels at both widths; 50 leaves a narrow
+            // last panel at both widths.
             for n in [48, 50] {
                 let w = TernaryMatrix::random(64, n, s, 23);
-                let f = TilePanelTcsc::from_ternary(&w);
-                assert_eq!(f.to_dense(), w, "sparsity {s} n {n}");
-                assert_eq!(f.nnz(), w.nnz());
-                f.validate().unwrap();
+                for g in test_geometries() {
+                    let f = TilePanelTcsc::from_ternary_with(&w, g);
+                    assert_eq!(f.to_dense(), w, "sparsity {s} n {n} geom {g}");
+                    assert_eq!(f.nnz(), w.nnz());
+                    f.validate().unwrap();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn default_geometry_matches_legacy_layout() {
+        let w = TernaryMatrix::random(64, 48, 0.25, 29);
+        let f = TilePanelTcsc::from_ternary(&w);
+        assert_eq!(f.geometry(), TileGeometry::DEFAULT);
+        assert_eq!(f.tile(), OUTER_TILE);
+        assert_eq!(f.k_blocks(), 1);
+        assert_eq!(f.block_start_pos.len(), f.panels() + 1);
+    }
+
+    #[test]
+    fn blocked_streams_concatenate_to_the_unblocked_stream() {
+        // The bitwise-identity bridge: per panel, walking K-blocks in
+        // order must replay the unblocked stream exactly.
+        let w = TernaryMatrix::random(97, 26, 0.5, 31);
+        for width in [4usize, 8] {
+            let flat =
+                TilePanelTcsc::from_ternary_with(&w, TileGeometry::new(width, 0));
+            let blocked =
+                TilePanelTcsc::from_ternary_with(&w, TileGeometry::new(width, 16));
+            assert_eq!(blocked.k_blocks(), 97usize.div_ceil(16));
+            for p in 0..flat.panels() {
+                let (fk, fc) = flat.panel_pos(p);
+                let mut bk: Vec<u32> = Vec::new();
+                let mut bc: Vec<u8> = Vec::new();
+                for b in 0..blocked.k_blocks() {
+                    let (ks, cs) = blocked.panel_pos_block(p, b);
+                    bk.extend_from_slice(ks);
+                    bc.extend_from_slice(cs);
+                }
+                assert_eq!((fk, fc), (bk.as_slice(), bc.as_slice()), "panel {p}");
+                let (fk, fc) = flat.panel_neg(p);
+                let mut bk: Vec<u32> = Vec::new();
+                let mut bc: Vec<u8> = Vec::new();
+                for b in 0..blocked.k_blocks() {
+                    let (ks, cs) = blocked.panel_neg_block(p, b);
+                    bk.extend_from_slice(ks);
+                    bc.extend_from_slice(cs);
+                }
+                assert_eq!((fk, fc), (bk.as_slice(), bc.as_slice()), "panel {p} neg");
             }
         }
     }
@@ -249,22 +494,24 @@ mod tests {
     fn panel_entries_are_k_ascending_per_column() {
         // The bitwise-identity contract: restricted to one in-panel column,
         // the stream order is ascending k — the baseline's accumulation
-        // order.
+        // order — at every geometry.
         let w = TernaryMatrix::random(97, 13, 0.5, 7);
-        let f = TilePanelTcsc::from_ternary(&w);
-        for p in 0..f.panels() {
-            for (ks, cs) in [f.panel_pos(p), f.panel_neg(p)] {
-                for c in 0..f.panel_width(p) {
-                    let col_ks: Vec<u32> = ks
-                        .iter()
-                        .zip(cs)
-                        .filter(|&(_, &cc)| cc as usize == c)
-                        .map(|(&row, _)| row)
-                        .collect();
-                    assert!(
-                        col_ks.windows(2).all(|w| w[0] < w[1]),
-                        "panel {p} col {c} not k-ascending"
-                    );
+        for g in test_geometries() {
+            let f = TilePanelTcsc::from_ternary_with(&w, g);
+            for p in 0..f.panels() {
+                for (ks, cs) in [f.panel_pos(p), f.panel_neg(p)] {
+                    for c in 0..f.panel_width(p) {
+                        let col_ks: Vec<u32> = ks
+                            .iter()
+                            .zip(cs)
+                            .filter(|&(_, &cc)| cc as usize == c)
+                            .map(|(&row, _)| row)
+                            .collect();
+                        assert!(
+                            col_ks.windows(2).all(|w| w[0] < w[1]),
+                            "geom {g} panel {p} col {c} not k-ascending"
+                        );
+                    }
                 }
             }
         }
@@ -280,14 +527,60 @@ mod tests {
         assert_eq!(f.nnz(), 0);
         assert_eq!(f.to_dense(), w);
         f.validate().unwrap();
+        let f8 = TilePanelTcsc::from_ternary_with(&w, TileGeometry::new(8, 0));
+        assert_eq!(f8.panels(), 1);
+        assert_eq!(f8.panel_width(0), 5);
+        f8.validate().unwrap();
     }
 
     #[test]
     fn bytes_counts_all_arrays() {
         let w = TernaryMatrix::random(16, 8, 0.5, 3);
-        let f = TilePanelTcsc::from_ternary(&w);
-        let expect = 4 * (2 * (f.panels() + 1) + f.nnz()) + f.nnz();
-        assert_eq!(f.bytes(), expect);
+        for g in [TileGeometry::DEFAULT, TileGeometry::new(8, 4)] {
+            let f = TilePanelTcsc::from_ternary_with(&w, g);
+            let slots = f.panels() * f.k_blocks() + 1;
+            let expect = 4 * (2 * slots + f.nnz()) + f.nnz();
+            assert_eq!(f.bytes(), expect, "geom {g}");
+        }
+    }
+
+    #[test]
+    fn geometry_name_parse_roundtrip() {
+        for g in [
+            TileGeometry::DEFAULT,
+            TileGeometry::new(8, 0),
+            TileGeometry::new(4, 1024),
+            TileGeometry::new(8, 4096),
+        ] {
+            assert_eq!(TileGeometry::parse(&g.name()), Some(g), "{g}");
+        }
+        assert_eq!(TileGeometry::DEFAULT.name(), "p4");
+        assert_eq!(TileGeometry::new(8, 1024).name(), "p8kb1024");
+        // Invalid spellings and unsupported widths do not parse.
+        for bad in ["", "p", "p3", "p16", "p4kb", "p4kb0", "4kb8", "p4kbx"] {
+            assert_eq!(TileGeometry::parse(bad), None, "{bad:?}");
+        }
+        assert!(TileGeometry::new(5, 0).validate().is_err());
+        assert!(TileGeometry::new(8, 123).validate().is_ok());
+    }
+
+    #[test]
+    fn block_bounds_cover_k_exactly() {
+        let g = TileGeometry::new(4, 16);
+        let k = 37;
+        assert_eq!(g.k_blocks(k), 3);
+        let mut covered = 0;
+        for b in 0..g.k_blocks(k) {
+            let (lo, hi) = g.block_bounds(k, b);
+            assert_eq!(lo, covered);
+            assert!(hi <= k);
+            covered = hi;
+        }
+        assert_eq!(covered, k);
+        // Unblocked: one slice spanning K; empty K still has one block.
+        assert_eq!(TileGeometry::DEFAULT.k_blocks(37), 1);
+        assert_eq!(TileGeometry::DEFAULT.block_bounds(37, 0), (0, 37));
+        assert_eq!(TileGeometry::new(4, 16).k_blocks(0), 1);
     }
 
     #[test]
@@ -300,5 +593,13 @@ mod tests {
         let mut f = TilePanelTcsc::from_ternary(&w);
         f.pos_k[0] = 99; // k out of range
         assert!(f.validate().is_err());
+        // A k index outside its K-block's slice is caught even when it is
+        // in range for the matrix.
+        let mut f = TilePanelTcsc::from_ternary_with(&w, TileGeometry::new(4, 8));
+        let (lo, hi) = (f.block_start_pos[0] as usize, f.block_start_pos[1] as usize);
+        if hi > lo {
+            f.pos_k[lo] = 15; // block 0 spans k in [0, 8)
+            assert!(f.validate().is_err());
+        }
     }
 }

@@ -6,37 +6,123 @@
 //! nonzero is touched once per output *row*. The outer-product family
 //! inverts that: it walks a panel's `(k, c)` entry stream **once** per
 //! M-row tile and scatters each gathered X value into a register-resident
-//! T×T accumulator tile (`T =` [`OUTER_TILE`] rows × `T` panel columns).
-//! That is the orchestration "Above the Inner Loop" asks for: accumulators
-//! never leave registers inside a panel, and the index stream is amortized
+//! accumulator tile of [`OUTER_TILE`] rows × `W` panel columns, where `W`
+//! is the format's [`crate::formats::TileGeometry::panel_width`] (4 or 8 — both kernels
+//! are const-generic over it and dispatch on the format header). That is
+//! the orchestration "Above the Inner Loop" asks for: accumulators never
+//! leave registers inside a panel, and the index stream is amortized
 //! across both the M and N tile dimensions — the operational-intensity
 //! regime where AMX/SME-class matrix units pay off.
+//!
+//! When the geometry carries a nonzero `k_block`, each panel's streams
+//! are walked K-block by K-block (all positive blocks in ascending k,
+//! then all negative blocks) into the *same* register tile, so the X
+//! values touched between accumulator spills stay within an L1d-resident
+//! K-slice. Because the blocks partition each stream at ascending-k
+//! boundaries, the blocked walk replays the unblocked entry order
+//! exactly — blocking changes locality, never results.
 //!
 //! Bitwise contract: for each output cell the accumulation order is
 //! positives in ascending k, then negatives in ascending k, then `+ bias`
 //! — exactly [`crate::kernels::BaseTcscKernel`]'s order, which the
-//! `(k, c)`-lexicographic stream order guarantees per in-panel column. The
-//! property suite asserts `assert_eq!` (not `allclose`) against the
-//! baseline, on any host: [`OuterTileSimdKernel`] uses the portable
-//! [`F32x4`] stand-in whose lane ops are IEEE-identical to scalar code.
+//! `(k, c)`-lexicographic stream order guarantees per in-panel column at
+//! every geometry. The property suite asserts `assert_eq!` (not
+//! `allclose`) against the baseline, on any host: [`OuterTileSimdKernel`]
+//! uses the portable [`F32x4`] stand-in whose lane ops are IEEE-identical
+//! to scalar code.
 
-use crate::formats::{SparseFormat, TilePanelTcsc, OUTER_TILE};
+use crate::formats::{SparseFormat, TilePanelTcsc, MAX_PANEL_WIDTH, OUTER_TILE};
 use crate::kernels::simd::f32x4::F32x4;
 use crate::kernels::unrolled::gat;
 use crate::kernels::Kernel;
 use crate::tensor::Matrix;
 
-/// Portable scalar outer-product kernel: one `OUTER_TILE`×`OUTER_TILE`
-/// accumulator tile per (row-tile, panel) pair. Runs anywhere; the
-/// registry's capability table leaves its `requires` list empty.
+/// Portable scalar outer-product kernel: one `OUTER_TILE`×`W` accumulator
+/// tile per (row-tile, panel) pair, `W` taken from the format's geometry.
+/// Runs anywhere; the registry's capability table leaves its `requires`
+/// list empty.
 pub struct OuterTileKernel;
 
-/// SIMD outer-product kernel: the accumulator tile is `OUTER_TILE` vector
+/// SIMD outer-product kernel: the accumulator tile is `W` vector
 /// registers (one [`F32x4`] per panel column, lanes = M rows), fed by
 /// sequential loads from a transposed X tile staged per row-tile. Gated on
 /// NEON for *selection* (the lane layout only wins with a real vector
 /// unit) but portable by construction.
 pub struct OuterTileSimdKernel;
+
+/// Scalar tile walk, const-generic over the panel width `W`.
+fn run_scalar_width<const W: usize>(
+    x: &Matrix,
+    w: &TilePanelTcsc,
+    bias: &[f32],
+    y: &mut Matrix,
+) {
+    debug_assert_eq!(w.tile(), W);
+    let m = x.rows();
+    let panels = w.panels();
+    let kblocks = w.k_blocks();
+    let mut r = 0;
+    // Full OUTER_TILE-row tiles: OUTER_TILE×W register accumulator per
+    // panel, fed one K-block at a time (positives first, then negatives —
+    // block concatenation replays the unblocked stream).
+    while r + OUTER_TILE <= m {
+        let xrows: [&[f32]; OUTER_TILE] = std::array::from_fn(|i| x.row(r + i));
+        for p in 0..panels {
+            let col0 = p * W;
+            let width = w.panel_width(p);
+            let mut acc = [[0.0f32; W]; OUTER_TILE]; // [row][panel col]
+            for b in 0..kblocks {
+                let (ks, cs) = w.panel_pos_block(p, b);
+                for (&kk, &c) in ks.iter().zip(cs) {
+                    for (mrow, row) in xrows.iter().enumerate() {
+                        acc[mrow][c as usize] += gat(row, kk);
+                    }
+                }
+            }
+            for b in 0..kblocks {
+                let (ks, cs) = w.panel_neg_block(p, b);
+                for (&kk, &c) in ks.iter().zip(cs) {
+                    for (mrow, row) in xrows.iter().enumerate() {
+                        acc[mrow][c as usize] -= gat(row, kk);
+                    }
+                }
+            }
+            for (mrow, acc_row) in acc.iter().enumerate() {
+                let yr = &mut y.row_mut(r + mrow)[col0..col0 + width];
+                for c in 0..width {
+                    yr[c] = acc_row[c] + bias[col0 + c];
+                }
+            }
+        }
+        r += OUTER_TILE;
+    }
+    // Single-row remainder: a 1×W accumulator strip, same entry order.
+    while r < m {
+        let xr = x.row(r);
+        let yr = y.row_mut(r);
+        for p in 0..panels {
+            let col0 = p * W;
+            let width = w.panel_width(p);
+            let mut acc = [0.0f32; W];
+            for b in 0..kblocks {
+                let (ks, cs) = w.panel_pos_block(p, b);
+                for (&kk, &c) in ks.iter().zip(cs) {
+                    acc[c as usize] += gat(xr, kk);
+                }
+            }
+            for b in 0..kblocks {
+                let (ks, cs) = w.panel_neg_block(p, b);
+                for (&kk, &c) in ks.iter().zip(cs) {
+                    acc[c as usize] -= gat(xr, kk);
+                }
+            }
+            for c in 0..width {
+                yr[col0 + c] = acc[c] + bias[col0 + c];
+            }
+        }
+        r += 1;
+    }
+}
 
 impl Kernel for OuterTileKernel {
     type Format = TilePanelTcsc;
@@ -47,59 +133,69 @@ impl Kernel for OuterTileKernel {
 
     fn run(&self, x: &Matrix, w: &TilePanelTcsc, bias: &[f32], y: &mut Matrix) {
         crate::kernels::debug_check_shapes(x, w.k(), w.n(), bias, y);
-        let m = x.rows();
-        let panels = w.panels();
-        let mut r = 0;
-        // Full OUTER_TILE-row tiles: T×T register accumulator per panel.
-        while r + OUTER_TILE <= m {
-            let xrows: [&[f32]; OUTER_TILE] = std::array::from_fn(|i| x.row(r + i));
-            for p in 0..panels {
-                let col0 = p * w.tile;
-                let width = w.panel_width(p);
-                let mut acc = [[0.0f32; OUTER_TILE]; OUTER_TILE]; // [row][panel col]
-                let (ks, cs) = w.panel_pos(p);
-                for (&kk, &c) in ks.iter().zip(cs) {
-                    for (mrow, row) in xrows.iter().enumerate() {
-                        acc[mrow][c as usize] += gat(row, kk);
-                    }
+        match w.tile() {
+            MAX_PANEL_WIDTH => run_scalar_width::<MAX_PANEL_WIDTH>(x, w, bias, y),
+            _ => run_scalar_width::<OUTER_TILE>(x, w, bias, y),
+        }
+    }
+}
+
+/// SIMD tile walk, const-generic over the panel width `W`. Lanes stay
+/// [`OUTER_TILE`] M rows regardless of `W`; a wider panel means more
+/// vector accumulators live per panel, not wider vectors.
+fn run_simd_width<const W: usize>(
+    x: &Matrix,
+    w: &TilePanelTcsc,
+    bias: &[f32],
+    y: &mut Matrix,
+    xt: &mut [f32],
+) {
+    debug_assert_eq!(w.tile(), W);
+    let m = x.rows();
+    let k = w.k();
+    let panels = w.panels();
+    let kblocks = w.k_blocks();
+    let mut r = 0;
+    while r < m {
+        let rows = (m - r).min(OUTER_TILE);
+        for lane in 0..OUTER_TILE {
+            if lane < rows {
+                for (kk, &v) in x.row(r + lane).iter().enumerate() {
+                    xt[kk * OUTER_TILE + lane] = v;
                 }
-                let (ks, cs) = w.panel_neg(p);
-                for (&kk, &c) in ks.iter().zip(cs) {
-                    for (mrow, row) in xrows.iter().enumerate() {
-                        acc[mrow][c as usize] -= gat(row, kk);
-                    }
-                }
-                for (mrow, acc_row) in acc.iter().enumerate() {
-                    let yr = &mut y.row_mut(r + mrow)[col0..col0 + width];
-                    for c in 0..width {
-                        yr[c] = acc_row[c] + bias[col0 + c];
-                    }
+            } else {
+                for kk in 0..k {
+                    xt[kk * OUTER_TILE + lane] = 0.0;
                 }
             }
-            r += OUTER_TILE;
         }
-        // Single-row remainder: a 1×T accumulator strip, same entry order.
-        while r < m {
-            let xr = x.row(r);
-            let yr = y.row_mut(r);
-            for p in 0..panels {
-                let col0 = p * w.tile;
-                let width = w.panel_width(p);
-                let mut acc = [0.0f32; OUTER_TILE];
-                let (ks, cs) = w.panel_pos(p);
+        for p in 0..panels {
+            let col0 = p * W;
+            let width = w.panel_width(p);
+            // One vector register per panel column; lanes are M rows.
+            let mut acc = [F32x4::ZERO; W];
+            for b in 0..kblocks {
+                let (ks, cs) = w.panel_pos_block(p, b);
                 for (&kk, &c) in ks.iter().zip(cs) {
-                    acc[c as usize] += gat(xr, kk);
-                }
-                let (ks, cs) = w.panel_neg(p);
-                for (&kk, &c) in ks.iter().zip(cs) {
-                    acc[c as usize] -= gat(xr, kk);
-                }
-                for c in 0..width {
-                    yr[col0 + c] = acc[c] + bias[col0 + c];
+                    let v = F32x4::load(&xt[kk as usize * OUTER_TILE..]);
+                    acc[c as usize] = acc[c as usize].add(v);
                 }
             }
-            r += 1;
+            for b in 0..kblocks {
+                let (ks, cs) = w.panel_neg_block(p, b);
+                for (&kk, &c) in ks.iter().zip(cs) {
+                    let v = F32x4::load(&xt[kk as usize * OUTER_TILE..]);
+                    acc[c as usize] = acc[c as usize].sub(v);
+                }
+            }
+            for c in 0..width {
+                let out = acc[c].add(F32x4::splat(bias[col0 + c]));
+                for lane in 0..rows {
+                    y[(r + lane, col0 + c)] = out.0[lane];
+                }
+            }
         }
+        r += rows;
     }
 }
 
@@ -108,7 +204,8 @@ impl OuterTileSimdKernel {
     /// (`K · OUTER_TILE` f32; resized as needed, steady-state
     /// allocation-free). Layout: `xt[kk·T + lane] = X[r0+lane][kk]`, unused
     /// lanes zero — so every entry becomes one sequential vector load
-    /// instead of a gather.
+    /// instead of a gather. The staging layout depends only on K and the
+    /// lane count, never on the panel width.
     pub fn run_with_buf(
         &self,
         x: &Matrix,
@@ -118,48 +215,11 @@ impl OuterTileSimdKernel {
         xt: &mut Vec<f32>,
     ) {
         crate::kernels::debug_check_shapes(x, w.k(), w.n(), bias, y);
-        let m = x.rows();
-        let k = w.k();
-        let panels = w.panels();
         xt.clear();
-        xt.resize(k * OUTER_TILE, 0.0);
-        let mut r = 0;
-        while r < m {
-            let rows = (m - r).min(OUTER_TILE);
-            for lane in 0..OUTER_TILE {
-                if lane < rows {
-                    for (kk, &v) in x.row(r + lane).iter().enumerate() {
-                        xt[kk * OUTER_TILE + lane] = v;
-                    }
-                } else {
-                    for kk in 0..k {
-                        xt[kk * OUTER_TILE + lane] = 0.0;
-                    }
-                }
-            }
-            for p in 0..panels {
-                let col0 = p * w.tile;
-                let width = w.panel_width(p);
-                // One vector register per panel column; lanes are M rows.
-                let mut acc = [F32x4::ZERO; OUTER_TILE];
-                let (ks, cs) = w.panel_pos(p);
-                for (&kk, &c) in ks.iter().zip(cs) {
-                    let v = F32x4::load(&xt[kk as usize * OUTER_TILE..]);
-                    acc[c as usize] = acc[c as usize].add(v);
-                }
-                let (ks, cs) = w.panel_neg(p);
-                for (&kk, &c) in ks.iter().zip(cs) {
-                    let v = F32x4::load(&xt[kk as usize * OUTER_TILE..]);
-                    acc[c as usize] = acc[c as usize].sub(v);
-                }
-                for c in 0..width {
-                    let out = acc[c].add(F32x4::splat(bias[col0 + c]));
-                    for lane in 0..rows {
-                        y[(r + lane, col0 + c)] = out.0[lane];
-                    }
-                }
-            }
-            r += rows;
+        xt.resize(w.k() * OUTER_TILE, 0.0);
+        match w.tile() {
+            MAX_PANEL_WIDTH => run_simd_width::<MAX_PANEL_WIDTH>(x, w, bias, y, xt),
+            _ => run_simd_width::<OUTER_TILE>(x, w, bias, y, xt),
         }
     }
 }
@@ -180,25 +240,42 @@ impl Kernel for OuterTileSimdKernel {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::formats::Tcsc;
+    use crate::formats::{Tcsc, TileGeometry};
     use crate::kernels::{dense_oracle, BaseTcscKernel};
     use crate::ternary::TernaryMatrix;
+
+    /// Geometries every bitwise check sweeps: both panel widths,
+    /// unblocked, a block that doesn't divide K, and a block ≥ K.
+    fn check_geometries(k: usize) -> Vec<TileGeometry> {
+        let mut gs = Vec::new();
+        for width in [4usize, 8] {
+            for kb in [0usize, 7, k.max(1) + 3] {
+                gs.push(TileGeometry::new(width, kb));
+            }
+        }
+        gs
+    }
 
     fn bitwise_check(m: usize, k: usize, n: usize, s: f32, seed: u64) {
         let w = TernaryMatrix::random(k, n, s, seed);
         let tcsc = Tcsc::from_ternary(&w);
-        let panel = TilePanelTcsc::from_ternary(&w);
         let x = Matrix::random(m, k, seed + 1);
         let bias: Vec<f32> = (0..n).map(|i| (i as f32 * 0.7).cos()).collect();
         let mut base = Matrix::zeros(m, n);
         BaseTcscKernel.run(&x, &tcsc, &bias, &mut base);
         let oracle = dense_oracle(&x, &w, &bias);
-        for (name, y) in [
-            ("scalar", run_scalar(&x, &panel, &bias)),
-            ("simd", run_simd(&x, &panel, &bias)),
-        ] {
-            assert_eq!(y, base, "{name} m={m} k={k} n={n} s={s}: not bitwise");
-            assert!(y.allclose(&oracle, 2e-3), "{name} vs oracle");
+        for g in check_geometries(k) {
+            let panel = TilePanelTcsc::from_ternary_with(&w, g);
+            for (name, y) in [
+                ("scalar", run_scalar(&x, &panel, &bias)),
+                ("simd", run_simd(&x, &panel, &bias)),
+            ] {
+                assert_eq!(
+                    y, base,
+                    "{name} m={m} k={k} n={n} s={s} geom={g}: not bitwise"
+                );
+                assert!(y.allclose(&oracle, 2e-3), "{name} geom={g} vs oracle");
+            }
         }
     }
 
@@ -229,21 +306,37 @@ mod tests {
     }
 
     #[test]
+    fn wide_panels_with_ragged_n() {
+        bitwise_check(6, 48, 12, 0.5, 50); // N % 8 = 4: ragged last p8 panel
+        bitwise_check(5, 40, 9, 0.25, 51); // N % 8 = 1 and N % 4 = 1
+        bitwise_check(8, 32, 8, 0.5, 52); // exactly one full p8 panel
+    }
+
+    #[test]
     fn degenerate_m() {
         bitwise_check(0, 32, 8, 0.5, 45); // empty batch must not panic
         bitwise_check(1, 32, 8, 0.5, 46); // GEMV shape
     }
 
     #[test]
+    fn k_block_boundary_shapes() {
+        bitwise_check(4, 15, 8, 0.5, 53); // K < every nontrivial block
+        bitwise_check(4, 14, 8, 0.5, 54); // K % 7 = 0: block divides K
+        bitwise_check(4, 1, 8, 0.5, 55); // single K row
+    }
+
+    #[test]
     fn all_zero_matrix_yields_bias() {
         let w = TernaryMatrix::zeros(24, 6);
-        let panel = TilePanelTcsc::from_ternary(&w);
-        let x = Matrix::random(5, 24, 47);
         let bias: Vec<f32> = (0..6).map(|i| i as f32).collect();
-        for y in [run_scalar(&x, &panel, &bias), run_simd(&x, &panel, &bias)] {
-            for r in 0..5 {
-                for c in 0..6 {
-                    assert_eq!(y[(r, c)], bias[c]);
+        let x = Matrix::random(5, 24, 47);
+        for g in check_geometries(24) {
+            let panel = TilePanelTcsc::from_ternary_with(&w, g);
+            for y in [run_scalar(&x, &panel, &bias), run_simd(&x, &panel, &bias)] {
+                for r in 0..5 {
+                    for c in 0..6 {
+                        assert_eq!(y[(r, c)], bias[c], "geom {g}");
+                    }
                 }
             }
         }
@@ -252,16 +345,18 @@ mod tests {
     #[test]
     fn simd_buf_reuse_is_stable() {
         let w = TernaryMatrix::random(40, 12, 0.25, 48);
-        let panel = TilePanelTcsc::from_ternary(&w);
         let x = Matrix::random(6, 40, 49);
         let bias = vec![0.5f32; 12];
-        let mut xt = Vec::new();
-        let mut y1 = Matrix::zeros(6, 12);
-        OuterTileSimdKernel.run_with_buf(&x, &panel, &bias, &mut y1, &mut xt);
-        let cap = xt.capacity();
-        let mut y2 = Matrix::zeros(6, 12);
-        OuterTileSimdKernel.run_with_buf(&x, &panel, &bias, &mut y2, &mut xt);
-        assert_eq!(y1, y2);
-        assert_eq!(xt.capacity(), cap, "steady-state reuse must not realloc");
+        for g in [TileGeometry::DEFAULT, TileGeometry::new(8, 16)] {
+            let panel = TilePanelTcsc::from_ternary_with(&w, g);
+            let mut xt = Vec::new();
+            let mut y1 = Matrix::zeros(6, 12);
+            OuterTileSimdKernel.run_with_buf(&x, &panel, &bias, &mut y1, &mut xt);
+            let cap = xt.capacity();
+            let mut y2 = Matrix::zeros(6, 12);
+            OuterTileSimdKernel.run_with_buf(&x, &panel, &bias, &mut y2, &mut xt);
+            assert_eq!(y1, y2);
+            assert_eq!(xt.capacity(), cap, "steady-state reuse must not realloc");
+        }
     }
 }

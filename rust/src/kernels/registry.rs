@@ -27,7 +27,7 @@
 
 use crate::formats::{
     BlockedTcsc, CompressedTernary, InterleavedBlockedTcsc, InterleavedTcsc, InvertedIndex,
-    SparseFormat, SymmetricTcsc, Tcsc, TilePanelTcsc,
+    SparseFormat, SymmetricTcsc, Tcsc, TileGeometry, TilePanelTcsc,
 };
 use crate::kernels::simd::{HorizontalSimdKernel, SimdBlockedMnKernel, VerticalSimdKernel};
 use crate::kernels::{
@@ -53,6 +53,13 @@ pub struct KernelParams {
     pub group: Option<usize>,
     /// PReLU slope for kernels that fuse activation; `None` = no activation.
     pub prelu_alpha: Option<f32>,
+    /// Tile geometry for kernels whose descriptor declares the geometry
+    /// axis (the outer-product family). `None` picks
+    /// [`TileGeometry::DEFAULT`]; the planner replaces `None` with the
+    /// cache-driven [`crate::perf::BlockingPolicy`] pick, and tuning-table
+    /// entries may carry a raced-in winner. Ignored by kernels without the
+    /// axis.
+    pub geometry: Option<TileGeometry>,
 }
 
 impl Default for KernelParams {
@@ -61,6 +68,7 @@ impl Default for KernelParams {
             block_size: crate::PAPER_BLOCK_SIZE,
             group: None,
             prelu_alpha: None,
+            geometry: None,
         }
     }
 }
@@ -81,6 +89,12 @@ impl KernelParams {
         self.group.unwrap_or(crate::PAPER_BLOCKED_GROUP)
     }
 
+    /// Tile geometry for the outer-product family (default: the
+    /// pre-geometry-era 4-wide unblocked layout).
+    pub fn tile_geometry(&self) -> TileGeometry {
+        self.geometry.unwrap_or(TileGeometry::DEFAULT)
+    }
+
     /// Reject parameter values no kernel constructor can honor. Called by
     /// [`KernelId::prepare`]; validating up front keeps the descriptor
     /// constructors infallible.
@@ -89,6 +103,9 @@ impl KernelParams {
             return Err(Error::BadKernelParams(
                 "interleave group must be >= 1".into(),
             ));
+        }
+        if let Some(g) = self.geometry {
+            g.validate()?;
         }
         Ok(())
     }
@@ -346,6 +363,10 @@ pub struct KernelDescriptor {
     /// `run_with_scratch` stages X through the reusable transposed tile
     /// buffer.
     pub uses_tile_scratch: bool,
+    /// Honors [`KernelParams::geometry`] (panel width / K-slice of the
+    /// tile-panel format) — the geometry axis the blocking policy, the
+    /// plan-cache race and the `--geometry` sweep vary.
+    pub geometry: bool,
     /// Vector (SIMD) kernel, vs scalar.
     pub simd: bool,
     /// CPU features this kernel's *selection* requires (empty = selectable
@@ -370,6 +391,7 @@ impl std::fmt::Debug for KernelDescriptor {
             .field("uses_block", &self.uses_block)
             .field("uses_padded_scratch", &self.uses_padded_scratch)
             .field("uses_tile_scratch", &self.uses_tile_scratch)
+            .field("geometry", &self.geometry)
             .field("simd", &self.simd)
             .field("requires", &self.requires)
             .field("batch_affinity", &self.batch_affinity)
@@ -719,15 +741,15 @@ fn build_simd_blocked(w: &TernaryMatrix, p: KernelParams) -> Box<dyn PreparedGem
     })
 }
 
-fn build_outer_tile(w: &TernaryMatrix, _p: KernelParams) -> Box<dyn PreparedGemm> {
+fn build_outer_tile(w: &TernaryMatrix, p: KernelParams) -> Box<dyn PreparedGemm> {
     Box::new(POuterTile {
-        fmt: TilePanelTcsc::from_ternary(w),
+        fmt: TilePanelTcsc::from_ternary_with(w, p.tile_geometry()),
     })
 }
 
-fn build_outer_tile_simd(w: &TernaryMatrix, _p: KernelParams) -> Box<dyn PreparedGemm> {
+fn build_outer_tile_simd(w: &TernaryMatrix, p: KernelParams) -> Box<dyn PreparedGemm> {
     Box::new(POuterSimd {
-        fmt: TilePanelTcsc::from_ternary(w),
+        fmt: TilePanelTcsc::from_ternary_with(w, p.tile_geometry()),
         kernel: OuterTileSimdKernel,
     })
 }
@@ -755,6 +777,7 @@ static DESCRIPTORS: [KernelDescriptor; 16] = [
         uses_block: false,
         uses_padded_scratch: false,
         uses_tile_scratch: false,
+        geometry: false,
         simd: false,
         requires: &[],
         batch_affinity: BatchAffinity::Any,
@@ -770,6 +793,7 @@ static DESCRIPTORS: [KernelDescriptor; 16] = [
         uses_block: false,
         uses_padded_scratch: false,
         uses_tile_scratch: false,
+        geometry: false,
         simd: false,
         requires: &[],
         batch_affinity: BatchAffinity::Any,
@@ -785,6 +809,7 @@ static DESCRIPTORS: [KernelDescriptor; 16] = [
         uses_block: false,
         uses_padded_scratch: false,
         uses_tile_scratch: false,
+        geometry: false,
         simd: false,
         requires: &[],
         batch_affinity: BatchAffinity::Any,
@@ -800,6 +825,7 @@ static DESCRIPTORS: [KernelDescriptor; 16] = [
         uses_block: false,
         uses_padded_scratch: false,
         uses_tile_scratch: false,
+        geometry: false,
         simd: false,
         requires: &[],
         // Fig 2's GEMV-end winner and the sparsest-class pick: nothing to
@@ -817,6 +843,7 @@ static DESCRIPTORS: [KernelDescriptor; 16] = [
         uses_block: true,
         uses_padded_scratch: false,
         uses_tile_scratch: false,
+        geometry: false,
         simd: false,
         requires: &[],
         batch_affinity: BatchAffinity::Any,
@@ -832,6 +859,7 @@ static DESCRIPTORS: [KernelDescriptor; 16] = [
         uses_block: false,
         uses_padded_scratch: false,
         uses_tile_scratch: false,
+        geometry: false,
         simd: false,
         requires: &[],
         batch_affinity: BatchAffinity::Any,
@@ -847,6 +875,7 @@ static DESCRIPTORS: [KernelDescriptor; 16] = [
         uses_block: true,
         uses_padded_scratch: false,
         uses_tile_scratch: false,
+        geometry: false,
         simd: false,
         requires: &[],
         batch_affinity: BatchAffinity::Any,
@@ -862,6 +891,7 @@ static DESCRIPTORS: [KernelDescriptor; 16] = [
         uses_block: false,
         uses_padded_scratch: false,
         uses_tile_scratch: false,
+        geometry: false,
         simd: false,
         requires: &[],
         batch_affinity: BatchAffinity::Any,
@@ -877,6 +907,7 @@ static DESCRIPTORS: [KernelDescriptor; 16] = [
         uses_block: false,
         uses_padded_scratch: false,
         uses_tile_scratch: false,
+        geometry: false,
         simd: false,
         requires: &[],
         batch_affinity: BatchAffinity::Any,
@@ -892,6 +923,7 @@ static DESCRIPTORS: [KernelDescriptor; 16] = [
         uses_block: false,
         uses_padded_scratch: false,
         uses_tile_scratch: false,
+        geometry: false,
         simd: false,
         requires: &[],
         batch_affinity: BatchAffinity::Any,
@@ -907,6 +939,7 @@ static DESCRIPTORS: [KernelDescriptor; 16] = [
         uses_block: false,
         uses_padded_scratch: true,
         uses_tile_scratch: false,
+        geometry: false,
         simd: true,
         requires: &[],
         batch_affinity: BatchAffinity::Gemm,
@@ -922,6 +955,7 @@ static DESCRIPTORS: [KernelDescriptor; 16] = [
         uses_block: false,
         uses_padded_scratch: true,
         uses_tile_scratch: false,
+        geometry: false,
         simd: true,
         requires: &[],
         batch_affinity: BatchAffinity::Gemm,
@@ -937,6 +971,7 @@ static DESCRIPTORS: [KernelDescriptor; 16] = [
         uses_block: true,
         uses_padded_scratch: false,
         uses_tile_scratch: false,
+        geometry: false,
         simd: true,
         requires: &[],
         batch_affinity: BatchAffinity::Gemm,
@@ -952,6 +987,7 @@ static DESCRIPTORS: [KernelDescriptor; 16] = [
         uses_block: false,
         uses_padded_scratch: false,
         uses_tile_scratch: false,
+        geometry: true,
         simd: false,
         // Portable tile emulation: selectable anywhere, so the family's
         // bitwise-identity properties run on every CI host.
@@ -969,6 +1005,7 @@ static DESCRIPTORS: [KernelDescriptor; 16] = [
         uses_block: false,
         uses_padded_scratch: false,
         uses_tile_scratch: true,
+        geometry: true,
         simd: true,
         // The vector-register tile layout only wins with a real 128-bit
         // unit behind it; selection is gated, construction is not.
@@ -986,6 +1023,7 @@ static DESCRIPTORS: [KernelDescriptor; 16] = [
         uses_block: false,
         uses_padded_scratch: false,
         uses_tile_scratch: false,
+        geometry: false,
         simd: false,
         requires: &[],
         batch_affinity: BatchAffinity::Any,
@@ -1311,6 +1349,53 @@ mod tests {
             matrix_tile(&CpuCaps::scalar_only()),
             Some(KernelId::OuterProductTile)
         );
+    }
+
+    #[test]
+    fn geometry_axis_is_declared_and_threaded() {
+        // Exactly the outer-product family declares the geometry axis.
+        for d in descriptors() {
+            assert_eq!(
+                d.geometry,
+                d.family == KernelFamily::OuterProduct,
+                "{}",
+                d.name
+            );
+        }
+        // Every declared geometry builds and is bitwise-identical to the
+        // default-geometry build — geometry moves memory, never results.
+        let w = TernaryMatrix::random(96, 24, 0.25, 211);
+        let x = Matrix::random(6, 96, 212);
+        let bias: Vec<f32> = (0..24).map(|i| 0.2 * i as f32).collect();
+        for d in descriptors().iter().filter(|d| d.geometry) {
+            let default = d.id.prepare(&w, KernelParams::default()).unwrap();
+            let mut y_default = Matrix::zeros(6, 24);
+            default.run(&x, &bias, &mut y_default);
+            for g in [
+                TileGeometry::new(8, 0),
+                TileGeometry::new(4, 16),
+                TileGeometry::new(8, 4096),
+            ] {
+                let params = KernelParams {
+                    geometry: Some(g),
+                    ..Default::default()
+                };
+                let kern = d.id.prepare(&w, params).unwrap();
+                let mut y = Matrix::zeros(6, 24);
+                kern.run(&x, &bias, &mut y);
+                assert_eq!(y, y_default, "{} {g}", d.name);
+            }
+        }
+        // Unsupported panel widths are typed errors at the validation
+        // boundary, like every other bad parameter.
+        let bad = KernelParams {
+            geometry: Some(TileGeometry::new(5, 0)),
+            ..Default::default()
+        };
+        assert!(matches!(
+            KernelId::OuterProductTile.prepare(&w, bad),
+            Err(Error::BadKernelParams(_))
+        ));
     }
 
     #[test]

@@ -22,9 +22,13 @@
 //!   [`formats::InterleavedBlockedTcsc`], [`formats::SymmetricTcsc`] (SIMD),
 //!   [`formats::CompressedTernary`] (base-3 packing),
 //!   [`formats::InvertedIndex`], and [`formats::TilePanelTcsc`] — ternary
-//!   columns grouped into [`formats::OUTER_TILE`]-wide panels with
-//!   sign-split (k, c)-lexicographic streams, feeding the outer-product
-//!   tile kernels.
+//!   columns grouped into panels with sign-split (k, c)-lexicographic
+//!   streams, feeding the outer-product tile kernels. The tile-panel
+//!   layout is parametric over a [`formats::TileGeometry`] (panel width
+//!   4/[`formats::MAX_PANEL_WIDTH`] × optional K-block slicing the
+//!   streams at ascending-k boundaries); every geometry replays the
+//!   baseline's per-cell accumulation order exactly, so geometry is
+//!   layout, never arithmetic.
 //! - [`kernels`] — the GEMM kernel family over those formats, scalar and
 //!   SIMD, plus the **typed registry**: every kernel has a
 //!   [`kernels::KernelId`] and one row in the static
@@ -40,11 +44,14 @@
 //!   appear only at the parse/display boundary
 //!   ([`kernels::KernelId::parse`] / [`kernels::KernelId::name`]).
 //!   The **outer-product family** ([`kernels::KernelFamily::OuterProduct`])
-//!   accumulates whole [`formats::OUTER_TILE`]×[`formats::OUTER_TILE`]
-//!   tiles per panel — the matrix-unit orientation — in a portable scalar
-//!   emulation plus a NEON-gated lane-parallel variant, both **bitwise
-//!   identical** to the sequential baseline (streams replay the baseline's
-//!   per-cell accumulation order exactly).
+//!   accumulates whole register tiles per panel — the matrix-unit
+//!   orientation — in a portable scalar emulation plus a NEON-gated
+//!   lane-parallel variant, both **bitwise identical** to the sequential
+//!   baseline (streams replay the baseline's per-cell accumulation order
+//!   exactly) at **every** [`formats::TileGeometry`]: the family declares
+//!   the blocking-geometry axis on its descriptors, and
+//!   [`kernels::KernelParams::geometry`] selects the panel-width
+//!   register-tile variant and the K-blocked walk.
 //!   Capability gating is *selection-time only*: [`perf::CpuCaps`] decides
 //!   what may be picked; `prepare` stays host-agnostic so any host can
 //!   construct (and test) any kernel.
@@ -80,14 +87,25 @@
 //!   un-bucketed (hand-edited/stale) keys are re-bucketed with a warning
 //!   instead of becoming silently unmatchable dead weight. The per-M divergence threshold self-calibrates: it is
 //!   clamped to the variance floor ([`autotune::variance_floor`])
-//!   measured across the sweep's own repetitions.
+//!   measured across the sweep's own repetitions. Entries may record a
+//!   winning [`formats::TileGeometry`] (`"geometry": "p8kb4096"`) —
+//!   written by `sweep --geometry` and the online race only when a
+//!   measured winner diverges from the default, so absence always means
+//!   the default geometry and pre-geometry JSON loads unchanged.
 //! - [`perf`] — cycle timers, the paper's flop cost model
 //!   `C = M·N·(1+sK)`, operational intensity and roofline estimates, and
 //!   **runtime CPU-capability detection** ([`perf::CpuCaps`]): arch,
-//!   NEON, an Apple-matrix-unit hint and cache sizes where probeable,
-//!   detected once per process and consumed by every selection-time
-//!   kernel query (planner heuristics, tuning-table lookups, sweep
-//!   candidates, the online race).
+//!   NEON, an Apple-matrix-unit hint and cache sizes where probeable
+//!   (sysfs on Linux, `sysctlbyname` on macOS), detected once per
+//!   process and consumed by every selection-time kernel query (planner
+//!   heuristics, tuning-table lookups, sweep candidates, the online
+//!   race). [`perf::BlockingPolicy`] turns the probed L1d into concrete
+//!   blocking decisions — the scalar families' K-block and the tile
+//!   family's preferred [`formats::TileGeometry`] (half-of-L1d sizing,
+//!   pow2-floored and clamped; the paper's M1 L1d lands exactly on its
+//!   hand-picked 4096 block) — with documented paper fallbacks when
+//!   unprobeable, and [`perf::geometry_candidates`] spans the grid the
+//!   race and `--geometry` sweep measure.
 //! - [`model`] — ternary MLP / FFN built from planned linear layers; the
 //!   config system and weight serialization. Kernel names are optional
 //!   overrides, not requirements.

@@ -87,12 +87,17 @@ USAGE: stgemm <subcommand> [options]
                                      winner for the planner to consult)
   autotune sweep
              [--model <cfg.json>] [--buckets 1,8] [--reps 2]
-             [--per-m] [--divergence 0.08]
+             [--per-m] [--geometry] [--divergence 0.08]
              [--save <table.json>]  (fill the table for every layer ×
                                      M-bucket of a model config in one run;
                                      --per-m records k{{K}}_s{{S}}_m{{M}} entries
                                      for buckets whose winner diverges from
                                      the mean winner beyond the threshold;
+                                     --geometry also measures each tile
+                                     kernel across the cache-derived
+                                     panel-width × K-block candidates and
+                                     records a winner geometry only when it
+                                     beats the default beyond the threshold;
                                      the threshold self-calibrates: it is
                                      clamped to the variance floor measured
                                      across --reps repetitions)
@@ -405,6 +410,7 @@ fn cmd_autotune_sweep(args: &Args) -> Result<i32> {
     let opts = SweepOptions {
         per_m: args.has("per-m"),
         divergence_threshold: args.f32("divergence", 0.08) as f64,
+        geometry: args.has("geometry"),
     };
     let timer = CycleTimer::new(1, reps);
     // Extend an existing table when --save points at one; a fresh file
@@ -429,6 +435,18 @@ fn cmd_autotune_sweep(args: &Args) -> Result<i32> {
             String::new()
         }
     );
+    if opts.geometry {
+        let candidates = stgemm::perf::geometry_candidates(&stgemm::perf::CpuCaps::host());
+        println!(
+            "[autotune] geometry sweep: {} candidate(s) per tile kernel: {}",
+            candidates.len(),
+            candidates
+                .iter()
+                .map(|g| g.name())
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+    }
     let report = sweep_model_opts(
         &cfg,
         &buckets,
@@ -446,13 +464,19 @@ fn cmd_autotune_sweep(args: &Args) -> Result<i32> {
         );
     }
     for (class, entry) in &report.winners {
+        // A recorded geometry means the sweep measured a divergent win over
+        // the default tile walk; absence always means the default geometry.
+        let geom = match &entry.geometry {
+            Some(g) => format!(", geometry {}", g.name()),
+            None => String::new(),
+        };
         match class.m_bucket {
             Some(m) => println!(
-                "  class {class}: winner {} at {:.3} flops/cycle (M-aware, bucket {m})",
+                "  class {class}: winner {} at {:.3} flops/cycle{geom} (M-aware, bucket {m})",
                 entry.kernel, entry.flops_per_cycle,
             ),
             None => println!(
-                "  class {class}: winner {} at {:.3} flops/cycle (mean over {} bucket(s))",
+                "  class {class}: winner {} at {:.3} flops/cycle{geom} (mean over {} bucket(s))",
                 entry.kernel,
                 entry.flops_per_cycle,
                 buckets.len().max(1)

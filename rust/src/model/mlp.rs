@@ -317,10 +317,7 @@ mod tests {
         for k in [32usize, 64] {
             table.insert(
                 ShapeClass::of(k, 0.25),
-                TuneEntry {
-                    kernel: crate::kernels::KernelId::UnrolledTcsc12,
-                    flops_per_cycle: 1.0,
-                },
+                TuneEntry::new(crate::kernels::KernelId::UnrolledTcsc12, 1.0),
             );
         }
         let planner = Arc::new(Planner::with_table(table));

@@ -1,0 +1,231 @@
+//! Cache-hierarchy-driven blocking policy: the bridge between the
+//! [`CpuCaps`] L1d/L2 probes and the geometry knobs the kernels expose.
+//!
+//! Two families consume blocking decisions:
+//!
+//! * the **blocked/interleaved scalar formats** take a K-block length
+//!   (`KernelParams::block_size`) that bounds how much of X a block walk
+//!   re-touches;
+//! * the **outer-product tile family** takes a [`TileGeometry`] — panel
+//!   width and K-slice length — carried in the `TilePanelTcsc` header.
+//!
+//! The sizing rule is the same for both: a K-block of `B` rows keeps
+//! `B` staged X values per M-row lane hot, i.e. `B · OUTER_TILE · 4`
+//! bytes for the tile kernels' transposed X tile. Targeting **half of
+//! L1d** for that working set (the other half absorbs the entry streams
+//! and the output tile) gives `B = l1d_bytes / 32`, floored to a power
+//! of two so block boundaries stay aligned, and clamped to sane bounds.
+//! On the paper's M1 (128 KiB L1d per P-core) this lands exactly on the
+//! paper's hand-picked block of 4096.
+//!
+//! Every probe degrades to a **documented fixed fallback** when the cache
+//! size is `None` (no sysfs/sysctl on this host): the scalar block falls
+//! back to [`crate::PAPER_BLOCK_SIZE`], the tile geometry to
+//! [`TileGeometry::DEFAULT`] (4-wide panels, unblocked K) — i.e. exactly
+//! the pre-policy behaviour, so an unprobeable host never regresses.
+//!
+//! Selection-time only: the policy feeds the planner's parameter
+//! defaults, the plan-cache race and the `--geometry` sweep grid. Kernel
+//! *preparation* stays host-agnostic — any geometry can be built
+//! anywhere; this module only decides which ones are worth building.
+
+use crate::formats::{TileGeometry, MAX_PANEL_WIDTH, OUTER_TILE};
+use crate::perf::CpuCaps;
+
+/// Lower clamp for cache-derived scalar K-blocks: below this the
+/// per-block bookkeeping dominates the walk.
+pub const MIN_SCALAR_BLOCK: usize = 512;
+/// Upper clamp for cache-derived scalar K-blocks: beyond this the block
+/// no longer fits any plausible L1d and the policy is extrapolating.
+pub const MAX_SCALAR_BLOCK: usize = 16384;
+/// Clamp bounds for the tile family's K-slices (tighter than the scalar
+/// family's: the tile walk also keeps an accumulator tile live).
+pub const MIN_TILE_K_BLOCK: usize = 256;
+/// See [`MIN_TILE_K_BLOCK`].
+pub const MAX_TILE_K_BLOCK: usize = 8192;
+/// L1d threshold above which 8-wide panels are the default: doubling the
+/// live accumulators only pays when the wider streamed working set still
+/// fits comfortably.
+pub const WIDE_PANEL_L1D_BYTES: usize = 96 * 1024;
+/// Fallback K-slice used for the *candidate grid* (not the default pick)
+/// when L1d is unprobeable — keeps `--geometry` sweeps meaningful on
+/// hosts with no cache probe.
+pub const FALLBACK_TILE_K_BLOCK: usize = 1024;
+
+/// A host's derived blocking decisions. Built once per selection site
+/// from a [`CpuCaps`] snapshot (synthetic ones in tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockingPolicy {
+    /// K-block length for the blocked/interleaved scalar formats.
+    pub scalar_block: usize,
+    /// Preferred geometry for the outer-product tile family.
+    pub geometry: TileGeometry,
+}
+
+impl BlockingPolicy {
+    /// Derive the policy from a capability snapshot. Pure: same caps in,
+    /// same policy out — property tests sweep synthetic extremes.
+    pub fn for_caps(caps: &CpuCaps) -> BlockingPolicy {
+        BlockingPolicy {
+            scalar_block: scalar_block(caps),
+            geometry: tile_geometry(caps),
+        }
+    }
+}
+
+/// Largest power of two ≤ `v` (v ≥ 1).
+fn prev_power_of_two(v: usize) -> usize {
+    debug_assert!(v >= 1);
+    let mut p = 1usize;
+    while p * 2 <= v {
+        p *= 2;
+    }
+    p
+}
+
+/// Half-of-L1d sizing rule shared by both families; see module docs.
+fn l1d_block(l1d_bytes: usize, min: usize, max: usize) -> usize {
+    let floats_per_row = OUTER_TILE * std::mem::size_of::<f32>() * 2; // = 32
+    let raw = (l1d_bytes / floats_per_row).max(1);
+    prev_power_of_two(raw).clamp(min, max)
+}
+
+/// K-block length for the blocked/interleaved scalar families:
+/// `l1d / 32` pow2-floored into `[MIN_SCALAR_BLOCK, MAX_SCALAR_BLOCK]`,
+/// or [`crate::PAPER_BLOCK_SIZE`] when L1d is unprobeable. 128 KiB L1d
+/// (Apple P-core) ⇒ 4096 — the paper's pick.
+pub fn scalar_block(caps: &CpuCaps) -> usize {
+    match caps.l1d_bytes {
+        Some(l1d) => l1d_block(l1d, MIN_SCALAR_BLOCK, MAX_SCALAR_BLOCK),
+        None => crate::PAPER_BLOCK_SIZE,
+    }
+}
+
+/// Preferred tile geometry: 8-wide panels on large-L1d hosts, K-slices
+/// sized by the same half-of-L1d rule; [`TileGeometry::DEFAULT`] when
+/// L1d is unprobeable.
+pub fn tile_geometry(caps: &CpuCaps) -> TileGeometry {
+    match caps.l1d_bytes {
+        Some(l1d) => TileGeometry {
+            panel_width: if l1d >= WIDE_PANEL_L1D_BYTES {
+                MAX_PANEL_WIDTH
+            } else {
+                OUTER_TILE
+            },
+            k_block: l1d_block(l1d, MIN_TILE_K_BLOCK, MAX_TILE_K_BLOCK),
+        },
+        None => TileGeometry::DEFAULT,
+    }
+}
+
+/// The candidate grid a geometry sweep or race measures: both panel
+/// widths × {unblocked, cache-derived K-slice}. Deterministic order,
+/// default geometry first, no duplicates. Small by construction (≤ 4) —
+/// the grid multiplies per-kernel measurement cost.
+pub fn geometry_candidates(caps: &CpuCaps) -> Vec<TileGeometry> {
+    let derived = match caps.l1d_bytes {
+        Some(l1d) => l1d_block(l1d, MIN_TILE_K_BLOCK, MAX_TILE_K_BLOCK),
+        None => FALLBACK_TILE_K_BLOCK,
+    };
+    let mut out = Vec::with_capacity(4);
+    for width in [OUTER_TILE, MAX_PANEL_WIDTH] {
+        for kb in [0, derived] {
+            let g = TileGeometry::new(width, kb);
+            if !out.contains(&g) {
+                out.push(g);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn caps_with_l1d(l1d: Option<usize>) -> CpuCaps {
+        let mut caps = CpuCaps::scalar_only();
+        caps.l1d_bytes = l1d;
+        caps
+    }
+
+    #[test]
+    fn unprobeable_hosts_get_paper_fallbacks() {
+        let caps = CpuCaps::scalar_only();
+        assert_eq!(scalar_block(&caps), crate::PAPER_BLOCK_SIZE);
+        assert_eq!(tile_geometry(&caps), TileGeometry::DEFAULT);
+        let policy = BlockingPolicy::for_caps(&caps);
+        assert_eq!(policy.scalar_block, crate::PAPER_BLOCK_SIZE);
+        assert_eq!(policy.geometry, TileGeometry::DEFAULT);
+    }
+
+    #[test]
+    fn apple_like_l1d_reproduces_the_paper_block() {
+        // 128 KiB L1d / 32 = 4096 — the half-of-L1d rule lands exactly on
+        // the paper's hand-picked block, by design.
+        let caps = CpuCaps::apple_like();
+        assert_eq!(scalar_block(&caps), crate::PAPER_BLOCK_SIZE);
+        let g = tile_geometry(&caps);
+        assert_eq!(g.panel_width, MAX_PANEL_WIDTH);
+        assert_eq!(g.k_block, 4096);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn tiny_l1d_clamps_low_and_stays_narrow() {
+        let caps = caps_with_l1d(Some(4 * 1024)); // 4 KiB: embedded-class
+        assert_eq!(scalar_block(&caps), MIN_SCALAR_BLOCK);
+        let g = tile_geometry(&caps);
+        assert_eq!(g.panel_width, OUTER_TILE, "small L1d keeps narrow panels");
+        assert_eq!(g.k_block, MIN_TILE_K_BLOCK);
+    }
+
+    #[test]
+    fn huge_l1d_clamps_high() {
+        let caps = caps_with_l1d(Some(64 * 1024 * 1024));
+        assert_eq!(scalar_block(&caps), MAX_SCALAR_BLOCK);
+        assert_eq!(tile_geometry(&caps).k_block, MAX_TILE_K_BLOCK);
+    }
+
+    #[test]
+    fn non_pow2_l1d_floors_to_aligned_block() {
+        // 96 KiB / 32 = 3072 → pow2 floor 2048.
+        let caps = caps_with_l1d(Some(96 * 1024));
+        assert_eq!(scalar_block(&caps), 2048);
+        let g = tile_geometry(&caps);
+        assert_eq!(g.k_block, 2048);
+        assert_eq!(g.panel_width, MAX_PANEL_WIDTH, "96 KiB is the wide threshold");
+    }
+
+    #[test]
+    fn candidate_grid_is_small_deduped_and_default_first() {
+        for caps in [
+            CpuCaps::scalar_only(),
+            CpuCaps::apple_like(),
+            caps_with_l1d(Some(4 * 1024)),
+        ] {
+            let grid = geometry_candidates(&caps);
+            assert_eq!(grid[0], TileGeometry::DEFAULT, "default geometry leads");
+            assert!(grid.len() <= 4);
+            for g in &grid {
+                g.validate().unwrap();
+                assert_eq!(grid.iter().filter(|h| *h == g).count(), 1, "dup {g}");
+            }
+            // Both widths are always represented.
+            assert!(grid.iter().any(|g| g.panel_width == OUTER_TILE));
+            assert!(grid.iter().any(|g| g.panel_width == MAX_PANEL_WIDTH));
+        }
+        // Unprobeable hosts still get a nontrivial K-blocked candidate.
+        let grid = geometry_candidates(&CpuCaps::scalar_only());
+        assert!(grid.iter().any(|g| g.k_block == FALLBACK_TILE_K_BLOCK));
+    }
+
+    #[test]
+    fn prev_power_of_two_floors() {
+        assert_eq!(prev_power_of_two(1), 1);
+        assert_eq!(prev_power_of_two(2), 2);
+        assert_eq!(prev_power_of_two(3), 2);
+        assert_eq!(prev_power_of_two(4096), 4096);
+        assert_eq!(prev_power_of_two(6000), 4096);
+    }
+}

@@ -16,9 +16,13 @@
 //!
 //! Detection is compile-time `cfg!` for the architecture facts (NEON is
 //! baseline AdvSIMD on aarch64; the AMX/SME-class matrix coprocessor is an
-//! Apple Silicon macOS hint) plus a best-effort Linux sysfs probe for
-//! cache sizes. Everything degrades to `None`/`false` — a failed probe
-//! can only make fewer kernels selectable, never a wrong one.
+//! Apple Silicon macOS hint) plus a best-effort cache-size probe: Linux
+//! sysfs, or `sysctlbyname` on macOS (`hw.l1dcachesize`, and
+//! `hw.perflevel0.l2cachesize` — the P-core cluster's L2 on Apple
+//! Silicon — falling back to the legacy `hw.l2cachesize`). Everything
+//! degrades to `None`/`false` — a failed probe can only make fewer
+//! kernels selectable (and blocking policy fall back to the paper's
+//! fixed geometry), never pick a wrong one.
 
 use std::sync::OnceLock;
 
@@ -55,10 +59,10 @@ pub struct CpuCaps {
 
 impl CpuCaps {
     /// Probe the current host. Architecture facts are compile-time
-    /// (`cfg!`); cache sizes come from sysfs on Linux and are `None`
-    /// elsewhere or on probe failure.
+    /// (`cfg!`); cache sizes come from sysfs on Linux and `sysctlbyname`
+    /// on macOS, and are `None` elsewhere or on probe failure.
     pub fn detect() -> CpuCaps {
-        let (l1d_bytes, l2_bytes) = sysfs_cache_sizes();
+        let (l1d_bytes, l2_bytes) = probe_cache_sizes();
         CpuCaps {
             arch: std::env::consts::ARCH,
             neon: cfg!(target_arch = "aarch64"),
@@ -131,12 +135,28 @@ pub(crate) fn parse_cache_size(s: &str) -> Option<usize> {
     digits.parse::<usize>().ok().map(|v| v * mult)
 }
 
-/// Best-effort (L1d, L2) cache sizes from Linux sysfs; `(None, None)`
-/// elsewhere or when the hierarchy is unreadable.
-fn sysfs_cache_sizes() -> (Option<usize>, Option<usize>) {
-    if !cfg!(target_os = "linux") {
-        return (None, None);
+/// Best-effort (L1d, L2) cache sizes for the current host: Linux sysfs or
+/// macOS sysctl; `(None, None)` elsewhere or when the probe fails.
+fn probe_cache_sizes() -> (Option<usize>, Option<usize>) {
+    if cfg!(target_os = "macos") {
+        // Block is cfg'd so non-macOS builds never reference the FFI
+        // probe; the `cfg!` guard keeps it conditionally *reached* too,
+        // so no unreachable-code fallthrough on macOS.
+        #[cfg(target_os = "macos")]
+        {
+            return sysctl_cache_sizes();
+        }
     }
+    if cfg!(target_os = "linux") {
+        sysfs_cache_sizes()
+    } else {
+        (None, None)
+    }
+}
+
+/// (L1d, L2) from Linux sysfs; `(None, None)` when the hierarchy is
+/// unreadable (also the non-Linux result — the paths only exist there).
+fn sysfs_cache_sizes() -> (Option<usize>, Option<usize>) {
     let base = "/sys/devices/system/cpu/cpu0/cache";
     let read = |idx: usize, file: &str| -> Option<String> {
         std::fs::read_to_string(format!("{base}/index{idx}/{file}")).ok()
@@ -159,6 +179,75 @@ fn sysfs_cache_sizes() -> (Option<usize>, Option<usize>) {
         }
     }
     (l1d, l2)
+}
+
+/// L1d key preference on macOS: one global key.
+#[cfg_attr(not(target_os = "macos"), allow(dead_code))]
+pub(crate) const SYSCTL_L1D_KEYS: [&str; 1] = ["hw.l1dcachesize"];
+
+/// L2 key preference on macOS: the per-cluster `hw.perflevel0.l2cachesize`
+/// (the performance cores' shared L2 on Apple Silicon — the cluster the
+/// serving threads run on) first, then the legacy global `hw.l2cachesize`
+/// reported by Intel Macs and older kernels.
+#[cfg_attr(not(target_os = "macos"), allow(dead_code))]
+pub(crate) const SYSCTL_L2_KEYS: [&str; 2] = ["hw.perflevel0.l2cachesize", "hw.l2cachesize"];
+
+/// First `Some` result over an ordered key-preference list. Pure so the
+/// fallback ordering is unit-testable on any host; the macOS probe passes
+/// a real `sysctlbyname` lookup.
+#[cfg_attr(not(target_os = "macos"), allow(dead_code))]
+pub(crate) fn first_probed(
+    keys: &[&str],
+    lookup: impl Fn(&str) -> Option<usize>,
+) -> Option<usize> {
+    keys.iter().find_map(|&key| lookup(key))
+}
+
+/// (L1d, L2) from macOS `sysctlbyname`; each side independently degrades
+/// to `None` when no key answers.
+#[cfg(target_os = "macos")]
+fn sysctl_cache_sizes() -> (Option<usize>, Option<usize>) {
+    (
+        first_probed(&SYSCTL_L1D_KEYS, sysctl_usize),
+        first_probed(&SYSCTL_L2_KEYS, sysctl_usize),
+    )
+}
+
+/// Read one integer sysctl by name. Declared directly (no libc
+/// dependency): `sysctlbyname` is part of macOS's always-linked libSystem.
+/// Integer sysctls are 4 or 8 bytes; reading into a zero-initialized u64
+/// on a little-endian target (all macOS targets) handles both widths.
+#[cfg(target_os = "macos")]
+fn sysctl_usize(name: &str) -> Option<usize> {
+    use std::ffi::{c_char, c_int, c_void};
+    extern "C" {
+        fn sysctlbyname(
+            name: *const c_char,
+            oldp: *mut c_void,
+            oldlenp: *mut usize,
+            newp: *mut c_void,
+            newlen: usize,
+        ) -> c_int;
+    }
+    let mut cname = Vec::with_capacity(name.len() + 1);
+    cname.extend_from_slice(name.as_bytes());
+    cname.push(0);
+    let mut val: u64 = 0;
+    let mut len = std::mem::size_of::<u64>();
+    let rc = unsafe {
+        sysctlbyname(
+            cname.as_ptr() as *const c_char,
+            &mut val as *mut u64 as *mut c_void,
+            &mut len,
+            std::ptr::null_mut(),
+            0,
+        )
+    };
+    if rc == 0 && len <= std::mem::size_of::<u64>() && val > 0 {
+        Some(val as usize)
+    } else {
+        None
+    }
 }
 
 #[cfg(test)]
@@ -189,6 +278,34 @@ mod tests {
         assert!(apple.satisfies(&[CpuFeature::Neon, CpuFeature::MatrixUnitHint]));
         assert!(apple.supports(CpuFeature::Neon));
         assert!(!scalar.supports(CpuFeature::Neon));
+    }
+
+    #[test]
+    fn sysctl_key_preference_order() {
+        // Pure fallback logic, exercised on every host: perflevel0 L2 wins
+        // when present, the legacy key answers when it is not, and a host
+        // answering neither degrades to None.
+        let apple = |key: &str| match key {
+            "hw.l1dcachesize" => Some(128 * 1024),
+            "hw.perflevel0.l2cachesize" => Some(12 * 1024 * 1024),
+            "hw.l2cachesize" => Some(4 * 1024 * 1024), // E-cluster-ish value
+            _ => None,
+        };
+        assert_eq!(first_probed(&SYSCTL_L1D_KEYS, apple), Some(128 * 1024));
+        assert_eq!(
+            first_probed(&SYSCTL_L2_KEYS, apple),
+            Some(12 * 1024 * 1024),
+            "perflevel0 key must shadow the legacy key"
+        );
+        let intel_mac = |key: &str| match key {
+            "hw.l1dcachesize" => Some(32 * 1024),
+            "hw.l2cachesize" => Some(256 * 1024),
+            _ => None, // no perflevel keys pre-Apple-Silicon
+        };
+        assert_eq!(first_probed(&SYSCTL_L2_KEYS, intel_mac), Some(256 * 1024));
+        let mute = |_: &str| None;
+        assert_eq!(first_probed(&SYSCTL_L1D_KEYS, mute), None);
+        assert_eq!(first_probed(&SYSCTL_L2_KEYS, mute), None);
     }
 
     #[test]

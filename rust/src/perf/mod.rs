@@ -12,7 +12,9 @@ pub mod opint;
 pub mod roofline;
 pub mod membw;
 pub mod cpu;
+pub mod blocking;
 
+pub use blocking::{geometry_candidates, scalar_block, tile_geometry, BlockingPolicy};
 pub use cpu::{CpuCaps, CpuFeature};
 pub use timer::{cycles_per_second, read_cycles, CycleTimer, Measurement};
 pub use flops::{cost_flops, CostModel};

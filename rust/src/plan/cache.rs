@@ -29,6 +29,13 @@
 //! PR-2-era "poisoned table entry" failure mode (and its heuristic
 //! fallback on the serving path) is gone by construction.
 //!
+//! Blocking geometry rides the same machinery: prepared formats are
+//! keyed **(kernel, geometry)** so two plans at different tile geometries
+//! never alias one format, the online race times geometry variants of
+//! geometry-axis kernels alongside the rival kernel, and a winning
+//! non-default geometry is recorded in the shared table next to the
+//! winning kernel ([`TuneEntry::geometry`]).
+//!
 //! Multi-layer forwards: the cache also compiles and caches **wavefront
 //! pipelines** ([`MlpPlan`], keyed (M-bucket, threads) like plans) over
 //! the whole registered layer chain, with intermediates in a shared
@@ -36,8 +43,9 @@
 //! [`PlanCache::run_layers`] and [`crate::plan::pipeline`].
 
 use crate::autotune::{ShapeClass, TuneEntry};
+use crate::formats::TileGeometry;
 use crate::kernels::{GemmScratch, KernelId, KernelParams, PreparedGemm};
-use crate::perf::timer::CycleTimer;
+use crate::perf::timer::{CycleTimer, Measurement};
 use crate::plan::gemm_plan::{Epilogue, GemmPlan};
 use crate::plan::partition::RowPartition;
 use crate::plan::pipeline::{ActivationArena, ArenaStats, MlpPlan, PipelineMode, PipelineStats};
@@ -129,11 +137,13 @@ pub struct CacheSnapshot {
 /// (M-bucket, threads) → plan.
 type PlanMap = BTreeMap<(usize, usize), Arc<GemmPlan>>;
 
-/// Kernel → prepared format. The expensive part of a plan is the
-/// sparse-format construction, which depends only on (weights, params,
-/// kernel) — never on the M-bucket or thread count — so every plan key of
-/// a layer shares one prepared GEMM per kernel.
-type GemmMap = BTreeMap<KernelId, Arc<dyn PreparedGemm>>;
+/// (Kernel, tile geometry) → prepared format. The expensive part of a
+/// plan is the sparse-format construction, which depends only on
+/// (weights, params, kernel, geometry) — never on the M-bucket or thread
+/// count — so every plan key of a layer shares one prepared GEMM per
+/// (kernel, geometry) pair. Kernels without the geometry axis always key
+/// under [`TileGeometry::DEFAULT`].
+type GemmMap = BTreeMap<(KernelId, TileGeometry), Arc<dyn PreparedGemm>>;
 
 struct CachedLayer {
     spec: LayerSpec,
@@ -305,18 +315,46 @@ impl PlanCache {
     /// first traffic in that bucket.)
     pub fn kernel_for(&self, id: LayerId, m: usize) -> KernelId {
         let layer = self.layer(id);
-        self.kernel_for_spec(&layer.spec, m_bucket(m))
+        self.kernel_for_spec(&layer.spec, m_bucket(m)).0
     }
 
-    fn kernel_for_spec(&self, spec: &LayerSpec, bucket: usize) -> KernelId {
-        match spec.kernel {
-            Some(k) => k,
-            None => self.planner.select_kernel(
+    /// The tile geometry a plan for batch size `m` would build its format
+    /// at right now — `None` for kernels without the geometry axis and
+    /// for axis kernels staying at [`TileGeometry::DEFAULT`]. Serve-time
+    /// introspection (`/metrics`) and tests.
+    pub fn geometry_for(&self, id: LayerId, m: usize) -> Option<TileGeometry> {
+        let layer = self.layer(id);
+        self.kernel_for_spec(&layer.spec, m_bucket(m)).1
+    }
+
+    /// Kernel **and** geometry for a spec at an M-bucket: an explicit
+    /// spec kernel takes the policy geometry (when it carries the axis),
+    /// auto specs resolve through the planner (tuned entry first). An
+    /// explicit `spec.params.geometry` pin overrides either.
+    fn kernel_for_spec(
+        &self,
+        spec: &LayerSpec,
+        bucket: usize,
+    ) -> (KernelId, Option<TileGeometry>) {
+        let (kernel, selected) = match spec.kernel {
+            Some(k) => (k, self.policy_geometry(k)),
+            None => self.planner.select_kernel_geometry(
                 spec.weights.k(),
                 spec.weights.density() as f32,
                 bucket,
                 spec.epilogue.fusible_prelu().is_some(),
             ),
+        };
+        (kernel, spec.params.geometry.or(selected))
+    }
+
+    /// The planner's policy geometry for `kernel`, `None` when its
+    /// descriptor lacks the geometry axis.
+    fn policy_geometry(&self, kernel: KernelId) -> Option<TileGeometry> {
+        if kernel.descriptor().geometry {
+            Some(self.planner.blocking_policy().geometry)
+        } else {
+            None
         }
     }
 
@@ -325,24 +363,36 @@ impl PlanCache {
         self.threads().clamp(1, bucket)
     }
 
-    /// The shared prepared format for `kernel` (built once per layer ×
-    /// kernel; every plan key reuses it).
+    /// The shared prepared format for `(kernel, geometry)` (built once per
+    /// layer × kernel × geometry; every plan key reuses it).
     fn prepared_gemm(
         &self,
         layer: &CachedLayer,
         kernel: KernelId,
+        geometry: Option<TileGeometry>,
     ) -> Result<Arc<dyn PreparedGemm>> {
+        let key = (kernel, geometry.unwrap_or(TileGeometry::DEFAULT));
         let cached = {
             let gemms = layer.gemms.lock().unwrap_or_else(|e| e.into_inner());
-            gemms.get(&kernel).cloned()
+            gemms.get(&key).cloned()
         };
         if let Some(gemm) = cached {
             return Ok(gemm);
         }
-        // Same fusion rule as `Planner::plan`: the kernel fuses PReLU only
-        // when the epilogue allows it bit-exactly.
+        // Same fusion and blocking rules as `Planner::plan`: the kernel
+        // fuses PReLU only when the epilogue allows it bit-exactly, and
+        // the paper block-size constant (the `Default`) is a sentinel the
+        // cache-driven policy replaces — an explicit non-default block is
+        // honored verbatim.
+        let block_size = if layer.spec.params.block_size == crate::PAPER_BLOCK_SIZE {
+            self.planner.blocking_policy().scalar_block
+        } else {
+            layer.spec.params.block_size
+        };
         let kparams = KernelParams {
             prelu_alpha: layer.spec.epilogue.fusible_prelu(),
+            block_size,
+            geometry,
             ..layer.spec.params
         };
         let gemm: Arc<dyn PreparedGemm> =
@@ -351,7 +401,7 @@ impl PlanCache {
             .gemms
             .lock()
             .unwrap_or_else(|e| e.into_inner())
-            .entry(kernel)
+            .entry(key)
             .or_insert(gemm)
             .clone())
     }
@@ -365,8 +415,9 @@ impl PlanCache {
         bucket: usize,
         threads: usize,
         kernel: KernelId,
+        geometry: Option<TileGeometry>,
     ) -> Result<Arc<GemmPlan>> {
-        let gemm = self.prepared_gemm(layer, kernel)?;
+        let gemm = self.prepared_gemm(layer, kernel, geometry)?;
         let threads = threads.max(1);
         let partition = RowPartition::new(threads, layer.spec.min_rows_per_chunk);
         let pool = if threads > 1 {
@@ -405,14 +456,16 @@ impl PlanCache {
         bucket: usize,
         threads: usize,
     ) -> Result<Arc<GemmPlan>> {
-        let kernel = self.kernel_for_spec(&layer.spec, bucket);
-        self.build_plan(layer, bucket, threads, kernel)
+        let (kernel, geometry) = self.kernel_for_spec(&layer.spec, bucket);
+        self.build_plan(layer, bucket, threads, kernel, geometry)
     }
 
-    /// Time both top-2 candidates on the live batch, record the winner in
-    /// the shared table **under the M-aware class** (this bucket's race
-    /// must not decide other buckets' kernels), and return the winning
-    /// plan.
+    /// Time both top-2 candidates on the live batch — geometry-axis
+    /// candidates at both the policy geometry and the default layout —
+    /// record the winner in the shared table **under the M-aware class**
+    /// (this bucket's race must not decide other buckets' kernels), and
+    /// return the winning plan. A winning non-default geometry is recorded
+    /// in the entry; an entry without one means the default layout won.
     fn race_top2(
         &self,
         layer: &CachedLayer,
@@ -427,33 +480,57 @@ impl PlanCache {
         let wants_fused = spec.epilogue.fusible_prelu().is_some();
         let caps = self.planner.caps();
         let [a, b] = heuristic_top2_caps(&caps, k, sparsity, bucket, wants_fused);
-        let plan_a = self.build_plan(layer, bucket, threads, a)?;
-        let plan_b = self.build_plan(layer, bucket, threads, b)?;
+        // Each candidate kernel enters at every geometry worth timing: an
+        // explicit spec pin freezes the axis, geometry-axis kernels race
+        // the policy pick against the default layout (when they differ),
+        // everything else runs its single variant. Bounded: 2 kernels ×
+        // ≤ 2 geometries = ≤ 4 timed plans per race.
+        let mut variants: Vec<(KernelId, Option<TileGeometry>)> = Vec::with_capacity(4);
+        for kernel in [a, b] {
+            if spec.params.geometry.is_some() {
+                variants.push((kernel, spec.params.geometry));
+                continue;
+            }
+            match self.policy_geometry(kernel) {
+                Some(g) => {
+                    variants.push((kernel, Some(g)));
+                    if g != TileGeometry::DEFAULT {
+                        variants.push((kernel, Some(TileGeometry::DEFAULT)));
+                    }
+                }
+                None => variants.push((kernel, None)),
+            }
+        }
         let timer = CycleTimer::new(1, self.race_reps);
         let mut y = Matrix::zeros(x.rows(), spec.weights.n());
-        // One checked run per candidate first: a worker panic must surface
-        // as a typed error, not vanish inside the timing loop.
-        plan_a.run(x, &mut y)?;
-        plan_b.run(x, &mut y)?;
-        let meas_a = timer.run(|| {
-            let _ = plan_a.run(x, &mut y);
-        });
-        let meas_b = timer.run(|| {
-            let _ = plan_b.run(x, &mut y);
-        });
-        let flops = plan_a.flops(x.rows());
-        let (winner, meas, kernel) = if meas_a.cycles <= meas_b.cycles {
-            (plan_a, meas_a, a)
-        } else {
-            (plan_b, meas_b, b)
-        };
-        self.planner.record(
-            ShapeClass::of_m(k, sparsity, bucket),
-            TuneEntry {
-                kernel,
-                flops_per_cycle: meas.flops_per_cycle(flops),
-            },
-        );
+        let mut best: Option<(Arc<GemmPlan>, Measurement, KernelId, Option<TileGeometry>)> =
+            None;
+        for (kernel, geometry) in variants {
+            let plan = self.build_plan(layer, bucket, threads, kernel, geometry)?;
+            // One checked run per candidate first: a worker panic must
+            // surface as a typed error, not vanish inside the timing loop.
+            plan.run(x, &mut y)?;
+            let meas = timer.run(|| {
+                let _ = plan.run(x, &mut y);
+            });
+            // Strict `<` keeps the earlier candidate on ties — the same
+            // lead-candidate preference the two-plan race had.
+            let better = match &best {
+                Some((_, m, _, _)) => meas.cycles < m.cycles,
+                None => true,
+            };
+            if better {
+                best = Some((plan, meas, kernel, geometry));
+            }
+        }
+        let (winner, meas, kernel, geometry) =
+            best.expect("top-2 race always times at least two variants");
+        let flops = winner.flops(x.rows());
+        let mut entry = TuneEntry::new(kernel, meas.flops_per_cycle(flops));
+        // Record geometry only when it diverges from the default layout —
+        // absence means default, so old and new tables read the same way.
+        entry.geometry = geometry.filter(|g| *g != TileGeometry::DEFAULT);
+        self.planner.record(ShapeClass::of_m(k, sparsity, bucket), entry);
         Ok(winner)
     }
 
@@ -610,8 +687,8 @@ impl PlanCache {
         }
         let mut specs = Vec::with_capacity(layers.len());
         for layer in &layers {
-            let kernel = self.kernel_for_spec(&layer.spec, bucket);
-            let gemm = self.prepared_gemm(layer, kernel)?;
+            let (kernel, geometry) = self.kernel_for_spec(&layer.spec, bucket);
+            let gemm = self.prepared_gemm(layer, kernel, geometry)?;
             specs.push((
                 gemm,
                 layer.spec.epilogue.clone(),
@@ -1182,17 +1259,11 @@ mod tests {
         let mut table = TuningTable::new();
         table.insert(
             ShapeClass::of(64, 0.25),
-            TuneEntry {
-                kernel: KernelId::InterleavedBlockedTcsc,
-                flops_per_cycle: 2.0,
-            },
+            TuneEntry::new(KernelId::InterleavedBlockedTcsc, 2.0),
         );
         table.insert(
             ShapeClass::of_m(64, 0.25, 1),
-            TuneEntry {
-                kernel: KernelId::UnrolledTcscK4M4,
-                flops_per_cycle: 3.0,
-            },
+            TuneEntry::new(KernelId::UnrolledTcscK4M4, 3.0),
         );
         let cache = PlanCache::new(
             Arc::new(Planner::with_table(table)),
@@ -1249,10 +1320,7 @@ mod tests {
         // A re-tune records a new winner; rebuild swaps it in, same keys.
         planner.record(
             ShapeClass::of(64, 0.25),
-            TuneEntry {
-                kernel: KernelId::UnrolledTcsc12,
-                flops_per_cycle: 9.0,
-            },
+            TuneEntry::new(KernelId::UnrolledTcsc12, 9.0),
         );
         let plans_before = cache.plans_built();
         cache.rebuild().unwrap();
@@ -1391,10 +1459,7 @@ mod tests {
         );
         planner.record(
             ShapeClass::of(64, 0.25),
-            TuneEntry {
-                kernel: KernelId::UnrolledTcsc12,
-                flops_per_cycle: 9.0,
-            },
+            TuneEntry::new(KernelId::UnrolledTcsc12, 9.0),
         );
         cache.rebuild().unwrap();
         assert_eq!(
@@ -1555,5 +1620,92 @@ mod tests {
             caps.satisfies(entry.kernel.descriptor().requires),
             "race winner must be runnable on the planner's CPU"
         );
+    }
+
+    #[test]
+    fn race_times_geometry_variants_and_records_divergent_winner() {
+        use crate::perf::CpuCaps;
+        // An apple-like planner derives a non-default policy geometry
+        // (wide panels, K-blocked streams), so the race on a tile-eligible
+        // class times each tile candidate at both geometries.
+        let planner = Arc::new(Planner::new().with_caps(CpuCaps::apple_like()));
+        let policy_geom = planner.blocking_policy().geometry;
+        assert_ne!(policy_geom, TileGeometry::DEFAULT);
+        let cache = PlanCache::new(
+            Arc::clone(&planner),
+            PlanCacheConfig {
+                threads: 1,
+                online_top2: true,
+                race_reps: 1,
+            },
+        );
+        let w = TernaryMatrix::random(1024, 8, 0.25, 41);
+        let bias = vec![0.0f32; 8];
+        let id = cache
+            .register(LayerSpec::new(w.clone(), Epilogue::with_bias(bias.clone())))
+            .unwrap();
+        let x = Matrix::random(16, 1024, 42);
+        let y = cache.forward(id, &x).unwrap();
+        assert!(y.allclose(&dense_oracle(&x, &w, &bias), 1e-3));
+        assert_eq!(cache.snapshot().races, 1);
+        let entry = planner
+            .lookup_entry(1024, 0.25, 16)
+            .expect("race records winner");
+        if entry.kernel.descriptor().geometry {
+            // A recorded geometry is one the race actually timed, never
+            // the default layout (absence means default).
+            assert!(
+                entry.geometry.is_none() || entry.geometry == Some(policy_geom),
+                "unexpected raced geometry {:?}",
+                entry.geometry
+            );
+        } else {
+            assert_eq!(entry.geometry, None);
+        }
+        // Settled: subsequent plans resolve to the recorded geometry and
+        // repeat traffic never re-races.
+        assert_eq!(cache.geometry_for(id, 16), entry.geometry);
+        cache.forward(id, &Matrix::random(16, 1024, 43)).unwrap();
+        assert_eq!(cache.snapshot().races, 1);
+    }
+
+    #[test]
+    fn pinned_geometry_is_honored_and_bitwise_stable() {
+        use crate::perf::CpuCaps;
+        let planner = Arc::new(Planner::new().with_caps(CpuCaps::apple_like()));
+        let cache = PlanCache::new(
+            Arc::clone(&planner),
+            PlanCacheConfig {
+                threads: 1,
+                online_top2: false,
+                race_reps: 1,
+            },
+        );
+        let w = TernaryMatrix::random(256, 20, 0.25, 43);
+        let bias = vec![0.0f32; 20];
+        let pin = TileGeometry::new(4, 64);
+        let mut spec = LayerSpec::new(w.clone(), Epilogue::with_bias(bias.clone()));
+        spec.kernel = Some(KernelId::OuterProductTile);
+        spec.params.geometry = Some(pin);
+        let id = cache.register(spec).unwrap();
+        // The pin wins over the policy geometry in every bucket.
+        assert_eq!(cache.geometry_for(id, 1), Some(pin));
+        assert_eq!(cache.geometry_for(id, 64), Some(pin));
+        // And the pinned-geometry output matches an unpinned cache of the
+        // same kernel bit for bit — geometry is layout, never arithmetic.
+        let x = Matrix::random(8, 256, 44);
+        let y = cache.forward(id, &x).unwrap();
+        let base_cache = cache_with(1, false);
+        let mut base_spec = LayerSpec::new(w.clone(), Epilogue::with_bias(bias.clone()));
+        base_spec.kernel = Some(KernelId::OuterProductTile);
+        let base_id = base_cache.register(base_spec).unwrap();
+        let y_base = base_cache.forward(base_id, &x).unwrap();
+        assert_eq!(y.as_slice(), y_base.as_slice());
+        assert!(y.allclose(&dense_oracle(&x, &w, &bias), 1e-4));
+        // Non-geometry kernels never resolve a geometry.
+        let mut plain = LayerSpec::new(w, Epilogue::with_bias(bias));
+        plain.kernel = Some(KernelId::BaseTcsc);
+        let plain_id = cache.register(plain).unwrap();
+        assert_eq!(cache.geometry_for(plain_id, 8), None);
     }
 }

@@ -21,10 +21,20 @@
 //! shared by every layer, the [`crate::plan::PlanCache`]'s online top-2
 //! races, and the serve-time background re-tune thread: a winner recorded
 //! by any of them is immediately visible to every subsequent plan.
+//!
+//! Blocking geometry is cache-driven: unless the caller pinned
+//! [`KernelParams::block_size`] or [`KernelParams::geometry`] explicitly,
+//! the planner consults [`BlockingPolicy::for_caps`] — the scalar K-block
+//! and the outer-tile panel/K-block geometry are derived from the caps'
+//! probed L1d/L2 sizes, falling back to the paper's constants on hosts
+//! whose caches cannot be probed. A tuned entry that recorded a winning
+//! geometry ([`TuneEntry::geometry`]) overrides the policy for its class.
 
 use crate::autotune::{ShapeClass, TuneEntry, TuningTable};
+use crate::formats::TileGeometry;
 use crate::kernels::{self, GemmScratch, KernelId, KernelParams, PreparedGemm};
 use crate::perf::cpu::CpuCaps;
+use crate::perf::BlockingPolicy;
 use crate::plan::gemm_plan::{Epilogue, GemmPlan};
 use crate::plan::partition::RowPartition;
 use crate::ternary::TernaryMatrix;
@@ -310,9 +320,48 @@ impl Planner {
         m: usize,
         wants_fused_prelu: bool,
     ) -> KernelId {
+        self.select_kernel_geometry(k, sparsity, m, wants_fused_prelu).0
+    }
+
+    /// The blocking policy this planner derives from its capability set:
+    /// L1d-sized scalar K-block and outer-tile geometry, or the paper's
+    /// fixed fallbacks when the caps carry no cache sizes.
+    pub fn blocking_policy(&self) -> BlockingPolicy {
+        BlockingPolicy::for_caps(&self.caps)
+    }
+
+    /// Kernel **and** tile geometry for a (K, sparsity) class at batch
+    /// size `m`. A tuned entry decides both: its kernel plus its recorded
+    /// geometry (`None` = the entry won at — or was recorded before — the
+    /// default geometry, and stays there; the policy must not override a
+    /// measured winner). An untuned class takes the heuristic kernel with
+    /// the policy geometry when that kernel carries the geometry axis,
+    /// `None` otherwise.
+    pub fn select_kernel_geometry(
+        &self,
+        k: usize,
+        sparsity: f32,
+        m: usize,
+        wants_fused_prelu: bool,
+    ) -> (KernelId, Option<TileGeometry>) {
         match self.lookup_entry(k, sparsity, m) {
-            Some(entry) => entry.kernel,
-            None => heuristic_kernel_caps(&self.caps, k, sparsity, m, wants_fused_prelu),
+            Some(entry) => (entry.kernel, entry.geometry),
+            None => {
+                let kernel =
+                    heuristic_kernel_caps(&self.caps, k, sparsity, m, wants_fused_prelu);
+                (kernel, self.policy_geometry(kernel))
+            }
+        }
+    }
+
+    /// The policy geometry for `kernel`, or `None` when its descriptor
+    /// does not carry the geometry axis (non-tile kernels ignore the
+    /// field, so emitting one would only muddy plan introspection).
+    fn policy_geometry(&self, kernel: KernelId) -> Option<TileGeometry> {
+        if kernel.descriptor().geometry {
+            Some(self.blocking_policy().geometry)
+        } else {
+            None
         }
     }
 
@@ -356,7 +405,12 @@ impl Planner {
         }
         let sparsity = w.density() as f32;
         let wants_fused = epilogue.fusible_prelu().is_some();
-        let kernel = match hints.kernel {
+        // `selected_geometry` is the planner's pick for the geometry axis:
+        // a tuned entry decides it outright (its recorded geometry, or
+        // `None` = stay at the default — a measured winner is never
+        // policy-overridden); hinted kernels and untuned classes take the
+        // cache-driven policy geometry when the kernel carries the axis.
+        let (kernel, selected_geometry) = match hints.kernel {
             Some(k) => {
                 let d = k.descriptor();
                 if !self.caps.satisfies(d.requires) {
@@ -366,7 +420,7 @@ impl Planner {
                         d.name, d.requires
                     )));
                 }
-                k
+                (k, self.policy_geometry(k))
             }
             // A declared expected batch picks that regime's M-aware entry;
             // an unset one (0) resolves through the M-agnostic entry only —
@@ -377,19 +431,35 @@ impl Planner {
                     0 => self.lookup_entry_agnostic(w.k(), sparsity),
                     m => self.lookup_entry(w.k(), sparsity, m),
                 };
-                entry.map(|e| e.kernel).unwrap_or_else(|| {
-                    heuristic_kernel_caps(
-                        &self.caps,
-                        w.k(),
-                        sparsity,
-                        hints.expected_batch,
-                        wants_fused,
-                    )
-                })
+                match entry {
+                    Some(e) => (e.kernel, e.geometry),
+                    None => {
+                        let k = heuristic_kernel_caps(
+                            &self.caps,
+                            w.k(),
+                            sparsity,
+                            hints.expected_batch,
+                            wants_fused,
+                        );
+                        (k, self.policy_geometry(k))
+                    }
+                }
             }
         };
+        // Block size is cache-driven unless pinned: the paper constant
+        // doubles as the "caller didn't choose" sentinel (it is the
+        // `Default`), so only a non-default value is honored verbatim.
+        let policy = self.blocking_policy();
+        let block_size = if params.block_size == crate::PAPER_BLOCK_SIZE {
+            policy.scalar_block
+        } else {
+            params.block_size
+        };
+        let geometry = params.geometry.or(selected_geometry);
         let kparams = KernelParams {
             prelu_alpha: epilogue.fusible_prelu(),
+            block_size,
+            geometry,
             ..params
         };
         let gemm: Arc<dyn PreparedGemm> = kernel.prepare(w, kparams)?.into();
@@ -544,10 +614,7 @@ mod tests {
         let mut table = TuningTable::new();
         table.insert(
             ShapeClass::of(128, 0.25),
-            TuneEntry {
-                kernel: KernelId::OuterProductTileSimd,
-                flops_per_cycle: 9.0,
-            },
+            TuneEntry::new(KernelId::OuterProductTileSimd, 9.0),
         );
         let planner = Planner::with_table(table).with_caps(CpuCaps::scalar_only());
         assert!(planner.lookup_entry(128, 0.25, 8).is_none());
@@ -561,17 +628,11 @@ mod tests {
         let mut table = TuningTable::new();
         table.insert(
             ShapeClass::of(128, 0.25),
-            TuneEntry {
-                kernel: KernelId::BaseTcsc,
-                flops_per_cycle: 1.0,
-            },
+            TuneEntry::new(KernelId::BaseTcsc, 1.0),
         );
         table.insert(
             ShapeClass::of_m(128, 0.25, 8),
-            TuneEntry {
-                kernel: KernelId::OuterProductTileSimd,
-                flops_per_cycle: 9.0,
-            },
+            TuneEntry::new(KernelId::OuterProductTileSimd, 9.0),
         );
         let planner = Planner::with_table(table).with_caps(CpuCaps::scalar_only());
         assert_eq!(
@@ -609,10 +670,7 @@ mod tests {
         let mut table = TuningTable::new();
         table.insert(
             ShapeClass::of(128, 0.25),
-            TuneEntry {
-                kernel: KernelId::UnrolledTcsc12,
-                flops_per_cycle: 9.9,
-            },
+            TuneEntry::new(KernelId::UnrolledTcsc12, 9.9),
         );
         let planner = Planner::with_table(table);
         let w = TernaryMatrix::random(128, 16, 0.25, 1);
@@ -645,20 +703,14 @@ mod tests {
         assert!(planner.lookup_entry(512, 0.25, 8).is_none());
         planner.record(
             ShapeClass::of(512, 0.25),
-            TuneEntry {
-                kernel: KernelId::BaseTcsc,
-                flops_per_cycle: 1.0,
-            },
+            TuneEntry::new(KernelId::BaseTcsc, 1.0),
         );
         assert_eq!(planner.tuned_classes(), 1);
         assert_eq!(planner.select_kernel(512, 0.25, 8, false), KernelId::BaseTcsc);
         // An M-aware entry overrides the fallback for its bucket only.
         planner.record(
             ShapeClass::of_m(512, 0.25, 1),
-            TuneEntry {
-                kernel: KernelId::UnrolledTcscK4M4,
-                flops_per_cycle: 2.0,
-            },
+            TuneEntry::new(KernelId::UnrolledTcscK4M4, 2.0),
         );
         assert_eq!(
             planner.select_kernel(512, 0.25, 1, false),
@@ -676,10 +728,7 @@ mod tests {
         let mut snap = planner.table_snapshot();
         snap.insert(
             ShapeClass::of(64, 0.5),
-            TuneEntry {
-                kernel: KernelId::BaseTcsc,
-                flops_per_cycle: 1.0,
-            },
+            TuneEntry::new(KernelId::BaseTcsc, 1.0),
         );
         assert_eq!(planner.tuned_classes(), 0);
     }
@@ -689,17 +738,11 @@ mod tests {
         let mut table = TuningTable::new();
         table.insert(
             ShapeClass::of(128, 0.25),
-            TuneEntry {
-                kernel: KernelId::InterleavedBlockedTcsc,
-                flops_per_cycle: 2.0,
-            },
+            TuneEntry::new(KernelId::InterleavedBlockedTcsc, 2.0),
         );
         table.insert(
             ShapeClass::of_m(128, 0.25, 1),
-            TuneEntry {
-                kernel: KernelId::UnrolledTcscK4M4,
-                flops_per_cycle: 3.0,
-            },
+            TuneEntry::new(KernelId::UnrolledTcscK4M4, 3.0),
         );
         let planner = Planner::with_table(table);
         let w = TernaryMatrix::random(128, 8, 0.25, 13);
@@ -815,5 +858,81 @@ mod tests {
         let mut y = Matrix::zeros(8, 8);
         plan.run(&x, &mut y).unwrap();
         assert_eq!(plan.scratch_capacities(), caps);
+    }
+
+    #[test]
+    fn geometry_selection_is_cache_driven() {
+        // An untuned class on a wide-L1d host picks the tile kernel with
+        // the policy geometry; the same class on a cache-blind host keeps
+        // the paper heuristics and no geometry.
+        let apple = Planner::new().with_caps(CpuCaps::apple_like());
+        let (k, g) = apple.select_kernel_geometry(4096, 0.25, 64, false);
+        assert_eq!(k, KernelId::OuterProductTileSimd);
+        assert_eq!(g, Some(crate::perf::tile_geometry(&CpuCaps::apple_like())));
+        assert_eq!(g.unwrap(), apple.blocking_policy().geometry);
+        let scalar = Planner::new().with_caps(CpuCaps::scalar_only());
+        let (k, g) = scalar.select_kernel_geometry(4096, 0.25, 64, false);
+        assert!(!k.descriptor().geometry);
+        assert_eq!(g, None);
+        // Non-geometry kernels never get a geometry, even on strong hosts.
+        let (k, g) = apple.select_kernel_geometry(4096, 0.0625, 1, false);
+        assert!(!k.descriptor().geometry);
+        assert_eq!(g, None);
+    }
+
+    #[test]
+    fn tuned_geometry_wins_and_absent_means_default() {
+        let tuned = TileGeometry::new(4, 512);
+        let mut table = TuningTable::new();
+        let mut entry = TuneEntry::new(KernelId::OuterProductTileSimd, 9.0);
+        entry.geometry = Some(tuned);
+        table.insert(ShapeClass::of(4096, 0.25), entry);
+        // A pre-geometry-era entry: kernel recorded, no geometry field.
+        table.insert(
+            ShapeClass::of(2048, 0.25),
+            TuneEntry::new(KernelId::OuterProductTileSimd, 8.0),
+        );
+        let planner = Planner::with_table(table).with_caps(CpuCaps::apple_like());
+        // The recorded geometry overrides the policy for its class…
+        let (k, g) = planner.select_kernel_geometry(4096, 0.25, 64, false);
+        assert_eq!((k, g), (KernelId::OuterProductTileSimd, Some(tuned)));
+        assert_ne!(Some(planner.blocking_policy().geometry), g);
+        // …while an entry without one stays at the default geometry: a
+        // measured winner is never silently re-geometried by the policy.
+        let (k, g) = planner.select_kernel_geometry(2048, 0.25, 64, false);
+        assert_eq!((k, g), (KernelId::OuterProductTileSimd, None));
+    }
+
+    #[test]
+    fn planned_geometry_produces_bitwise_identical_output() {
+        // End-to-end: a plan whose geometry came from the policy (hinted
+        // tile kernel on an apple-like host) matches the same plan at the
+        // explicit default geometry bit for bit.
+        let w = TernaryMatrix::random(2048, 20, 0.25, 21);
+        let bias: Vec<f32> = (0..20).map(|i| 0.01 * i as f32).collect();
+        let x = Matrix::random(8, 2048, 22);
+        let hints = PlanHints {
+            kernel: Some(KernelId::OuterProductTile),
+            expected_batch: 8,
+            ..Default::default()
+        };
+        let run = |planner: &Planner, params: KernelParams| {
+            planner
+                .plan(&w, params, Epilogue::with_bias(bias.clone()), &hints)
+                .unwrap()
+                .forward(&x)
+                .unwrap()
+        };
+        let apple = Planner::new().with_caps(CpuCaps::apple_like());
+        let y_policy = run(&apple, KernelParams::default());
+        let y_default = run(
+            &apple,
+            KernelParams {
+                geometry: Some(TileGeometry::DEFAULT),
+                ..Default::default()
+            },
+        );
+        assert_eq!(y_policy.as_slice(), y_default.as_slice());
+        assert!(y_policy.allclose(&dense_oracle(&x, &w, &bias), 1e-4));
     }
 }

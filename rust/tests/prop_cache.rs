@@ -93,24 +93,15 @@ fn per_m_table_winners_are_honored_per_bucket_and_stay_bitwise_identical() {
     let mut table = TuningTable::new();
     table.insert(
         ShapeClass::of(K, 0.25),
-        TuneEntry {
-            kernel: KernelId::InterleavedBlockedTcsc,
-            flops_per_cycle: 2.0,
-        },
+        TuneEntry::new(KernelId::InterleavedBlockedTcsc, 2.0),
     );
     table.insert(
         ShapeClass::of_m(K, 0.25, 1),
-        TuneEntry {
-            kernel: KernelId::UnrolledTcscK4M4,
-            flops_per_cycle: 3.0,
-        },
+        TuneEntry::new(KernelId::UnrolledTcscK4M4, 3.0),
     );
     table.insert(
         ShapeClass::of_m(K, 0.25, 16),
-        TuneEntry {
-            kernel: KernelId::SimdVertical,
-            flops_per_cycle: 4.0,
-        },
+        TuneEntry::new(KernelId::SimdVertical, 4.0),
     );
     let planner = Arc::new(Planner::with_table(table));
     let w = TernaryMatrix::random(K, N, 0.25, 51);

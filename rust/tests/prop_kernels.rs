@@ -11,7 +11,8 @@ use stgemm::kernels::{
     available_ids, available_kernel_ids, dense_oracle, descriptors, kernel_names, prelu_inplace,
     prepare_kernel, KernelFamily, KernelId, KernelParams,
 };
-use stgemm::perf::CpuCaps;
+use stgemm::formats::{TileGeometry, MAX_PANEL_WIDTH};
+use stgemm::perf::{geometry_candidates, BlockingPolicy, CpuCaps};
 use stgemm::tensor::Matrix;
 use stgemm::ternary::TernaryMatrix;
 use stgemm::util::quickcheck::{props, Gen};
@@ -171,6 +172,110 @@ fn prop_outer_family_bitwise_matches_sequential_baseline() {
             kern.run(&x, &bias, &mut y);
             assert_eq!(y, want, "{} must be bitwise-identical to the baseline", d.name);
         }
+    });
+}
+
+#[test]
+fn prop_tile_geometry_bitwise_matches_baseline_at_blocking_edges() {
+    // The geometry axis is layout, never arithmetic: at ANY panel width ×
+    // K-block — including pathological ones the policy would never pick —
+    // the tile kernels must stay bitwise-identical to the sequential
+    // baseline. Edges stressed: K % block ≠ 0 (blocks of 1/3/7), block ≥ K
+    // (one short slice), 8-wide panels over N not a multiple of 8 (ragged
+    // last panel), degenerate M.
+    props("tile geometry bitwise vs base", 25, |g| {
+        let m = *g.choose(&[0usize, 1, 3, 8, 13]);
+        let k = g.usize(1, 160);
+        let n = *g.choose(&[1usize, 3, 7, 8, 9, 15, 31, 40]);
+        let s = *g.choose(&[0.0f32, 0.0625, 0.25, 0.5, 1.0]);
+        let w = TernaryMatrix::random(k, n, s, g.seed());
+        let x = Matrix::random(m, k, g.seed());
+        let bias = g.f32_vec(n, -1.0, 1.0);
+        let base = KernelId::BaseTcsc
+            .prepare(&w, KernelParams::default())
+            .unwrap();
+        let mut want = Matrix::zeros(m, n);
+        base.run(&x, &bias, &mut want);
+        for width in [stgemm::formats::OUTER_TILE, MAX_PANEL_WIDTH] {
+            for kb in [0usize, 1, 3, 7, k, k + 5] {
+                let geom = TileGeometry::new(width, kb);
+                let params = KernelParams {
+                    geometry: Some(geom),
+                    ..Default::default()
+                };
+                for id in [KernelId::OuterProductTile, KernelId::OuterProductTileSimd] {
+                    let kern = id.prepare(&w, params).unwrap();
+                    let mut y = Matrix::zeros(m, n);
+                    kern.run(&x, &bias, &mut y);
+                    assert_eq!(
+                        y, want,
+                        "{id} at geometry {geom} must be bitwise-identical to the baseline"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_blocking_policy_is_sane_at_synthetic_cache_extremes() {
+    // Satellite: the cache→geometry derivation holds its invariants for
+    // ANY synthetic capability snapshot, from absent probes through
+    // absurd cache sizes — never an invalid geometry, never an unclamped
+    // block, and the documented paper fallbacks exactly when unprobeable.
+    use stgemm::perf::blocking::{
+        MAX_SCALAR_BLOCK, MAX_TILE_K_BLOCK, MIN_SCALAR_BLOCK, MIN_TILE_K_BLOCK,
+        WIDE_PANEL_L1D_BYTES,
+    };
+    props("blocking policy vs synthetic caps", 40, |g| {
+        let mut caps = CpuCaps::scalar_only();
+        caps.l1d_bytes = match g.usize(0, 4) {
+            0 => None,
+            _ => Some(g.usize(1, 1 << 30)),
+        };
+        caps.l2_bytes = match g.usize(0, 4) {
+            0 => None,
+            _ => Some(g.usize(1, 1 << 33)),
+        };
+        let policy = BlockingPolicy::for_caps(&caps);
+        policy.geometry.validate().unwrap();
+        match caps.l1d_bytes {
+            None => {
+                // Unprobeable host ⇒ exactly the pre-policy behaviour.
+                assert_eq!(policy.scalar_block, stgemm::PAPER_BLOCK_SIZE);
+                assert_eq!(policy.geometry, TileGeometry::DEFAULT);
+            }
+            Some(l1d) => {
+                assert!(
+                    (MIN_SCALAR_BLOCK..=MAX_SCALAR_BLOCK).contains(&policy.scalar_block),
+                    "scalar block {} unclamped for l1d {l1d}",
+                    policy.scalar_block
+                );
+                assert!(policy.scalar_block.is_power_of_two());
+                assert!(
+                    (MIN_TILE_K_BLOCK..=MAX_TILE_K_BLOCK).contains(&policy.geometry.k_block),
+                    "tile K-block {} unclamped for l1d {l1d}",
+                    policy.geometry.k_block
+                );
+                assert!(policy.geometry.k_block.is_power_of_two());
+                assert_eq!(
+                    policy.geometry.panel_width == MAX_PANEL_WIDTH,
+                    l1d >= WIDE_PANEL_L1D_BYTES,
+                    "wide panels iff L1d ≥ threshold (l1d {l1d})"
+                );
+            }
+        }
+        // The race/sweep candidate grid: default-first, small, deduped,
+        // every candidate buildable.
+        let grid = geometry_candidates(&caps);
+        assert!(!grid.is_empty() && grid.len() <= 4);
+        assert_eq!(grid[0], TileGeometry::DEFAULT, "default geometry leads");
+        for (i, cand) in grid.iter().enumerate() {
+            cand.validate().unwrap();
+            assert!(!grid[..i].contains(cand), "duplicate candidate {cand}");
+        }
+        // Derivation is pure: same snapshot, same policy.
+        assert_eq!(policy, BlockingPolicy::for_caps(&caps));
     });
 }
 
