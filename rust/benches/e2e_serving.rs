@@ -21,13 +21,23 @@
 //! [`geometry_candidates`] — so the blocking win (or its absence on this
 //! host) is tracked across PRs. Everything lands in `BENCH_pr7.json` at
 //! the repo root.
+//!
+//! PR 8 additions: a two-model skewed-load fleet scenario — a hot model
+//! with a small admission queue budget hammered by many clients next to a
+//! lightly-loaded cold model, both sharing one registry (one planner, one
+//! thread budget, the demand balancer re-splitting it) — reporting
+//! per-model throughput, p50/p99 and the hot model's admission-rejection
+//! rate into `BENCH_pr8.json` at the repo root.
 
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
 
 use stgemm::bench::harness::{measure_kernel, BenchScale};
 use stgemm::bench::report::{write_csv, Table};
-use stgemm::coordinator::{Backend, BatchPolicy, Engine, LoadGenerator, Router};
+use stgemm::coordinator::{
+    Backend, BatchPolicy, Engine, LoadGenerator, LoadOptions, ModelRegistry, Router,
+};
 use stgemm::kernels::{descriptors, KernelDescriptor, KernelFamily, KernelParams};
 use stgemm::model::{ModelConfig, TernaryLinear, TernaryMlp};
 use stgemm::perf::{geometry_candidates, CpuCaps};
@@ -296,6 +306,114 @@ fn geometry_gflops(scale: BenchScale) -> Json {
     Json::arr(rows)
 }
 
+/// PR 8: two models behind one registry under deliberately skewed load.
+/// "hot" carries most of the clients and a small admission queue budget;
+/// "cold" idles along beside it. What this measures: the budget capping
+/// the hot queue (rejections instead of unbounded latency), the cold
+/// model staying responsive, and the demand balancer splitting the shared
+/// thread budget toward the hot model.
+fn fleet_skewed_load(scale: BenchScale) -> Json {
+    let (hot_clients, cold_clients, reqs) = match scale {
+        BenchScale::Full => (12usize, 2usize, 150usize),
+        BenchScale::Ci => (6, 1, 20),
+    };
+    let registry = Arc::new(ModelRegistry::with_thread_budget(
+        Arc::new(Planner::new()),
+        4,
+    ));
+    // Budget below the hot client count: concurrent submits past it are
+    // rejected 429-style rather than queued.
+    let hot_cfg = ModelConfig::from_json(
+        r#"{"name":"hot","dims":[256,1024,256],"sparsity":0.25,"seed":21,
+            "queue_budget":4}"#,
+    )
+    .unwrap();
+    let cold_cfg = ModelConfig::from_json(
+        r#"{"name":"cold","dims":[256,1024,256],"sparsity":0.25,"seed":22}"#,
+    )
+    .unwrap();
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_micros(500),
+    };
+    for cfg in [&hot_cfg, &cold_cfg] {
+        registry
+            .load(
+                cfg,
+                LoadOptions {
+                    policy,
+                    warm: true,
+                    ..LoadOptions::default()
+                },
+            )
+            .unwrap();
+    }
+    registry.start_balancer(Duration::from_millis(50));
+    let router = Arc::new(Router::with_registry(Arc::clone(&registry)));
+
+    let gen = |model: &str, clients: usize, seed: u64| LoadGenerator {
+        clients,
+        requests_per_client: reqs,
+        d_in: 256,
+        model: model.into(),
+        seed,
+    };
+    let cold_gen = gen("cold", cold_clients, 8);
+    let router_bg = Arc::clone(&router);
+    let cold_thread = std::thread::spawn(move || cold_gen.run_inprocess(&router_bg));
+    let hot_report = gen("hot", hot_clients, 7).run_inprocess(&router);
+    let cold_report = cold_thread.join().unwrap();
+
+    let model_json = |name: &str, clients: usize, report: &stgemm::coordinator::LoadGenReport| {
+        let handle = registry.get(name).unwrap();
+        let rejections = handle
+            .engine()
+            .metrics
+            .admission_rejections
+            .load(Ordering::Relaxed);
+        let attempts = (clients * reqs) as f64;
+        println!(
+            "[e2e] fleet '{name}': {clients} clients, {:.0} req/s, p50 {} µs, p99 {} µs, \
+             {} errors, {rejections} admission rejections ({:.1}%), thread cap {}",
+            report.throughput_rps,
+            report.latency_us_p50,
+            report.latency_us_p99,
+            report.errors,
+            100.0 * rejections as f64 / attempts,
+            handle.thread_cap(),
+        );
+        Json::obj(vec![
+            ("model", Json::str(name.to_string())),
+            ("state", Json::str(handle.state().as_str())),
+            ("clients", Json::num(clients as f64)),
+            ("requests", Json::num(report.total_requests as f64)),
+            ("rps", Json::num(report.throughput_rps)),
+            ("p50_us", Json::num(report.latency_us_p50 as f64)),
+            ("p99_us", Json::num(report.latency_us_p99 as f64)),
+            ("errors", Json::num(report.errors as f64)),
+            ("admission_rejections", Json::num(rejections as f64)),
+            (
+                "admission_rejection_rate",
+                Json::num(rejections as f64 / attempts),
+            ),
+            ("queue_budget", Json::num(handle.admission().budget() as f64)),
+            ("thread_cap", Json::num(handle.thread_cap() as f64)),
+        ])
+    };
+    let out = Json::obj(vec![
+        ("thread_budget", Json::num(registry.thread_budget() as f64)),
+        (
+            "models",
+            Json::arr(vec![
+                model_json("hot", hot_clients, &hot_report),
+                model_json("cold", cold_clients, &cold_report),
+            ]),
+        ),
+    ]);
+    registry.shutdown();
+    out
+}
+
 fn main() {
     let scale = BenchScale::from_env();
     let (clients, reqs, stall_reps) = match scale {
@@ -429,5 +547,24 @@ fn main() {
     match std::fs::write(&pr7_path, pr7.encode_pretty()) {
         Ok(()) => println!("  [json] {}", pr7_path.display()),
         Err(e) => eprintln!("  [json] {} write failed: {e}", pr7_path.display()),
+    }
+
+    // PR 8 tracking artifact: the two-model skewed-load fleet scenario —
+    // per-model throughput/latency, the hot model's admission-rejection
+    // rate, and the balancer's thread split — at the repo root alongside
+    // BENCH_pr7.json.
+    let fleet = fleet_skewed_load(scale);
+    let pr8 = Json::obj(vec![
+        ("bench", Json::str("pr8_fleet_registry")),
+        ("scale", Json::str(format!("{scale:?}"))),
+        ("fleet_skewed_load", fleet),
+    ]);
+    let pr8_path = match std::path::Path::new(env!("CARGO_MANIFEST_DIR")).parent() {
+        Some(root) => root.join("BENCH_pr8.json"),
+        None => std::path::PathBuf::from("BENCH_pr8.json"),
+    };
+    match std::fs::write(&pr8_path, pr8.encode_pretty()) {
+        Ok(()) => println!("  [json] {}", pr8_path.display()),
+        Err(e) => eprintln!("  [json] {} write failed: {e}", pr8_path.display()),
     }
 }

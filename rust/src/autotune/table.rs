@@ -3,6 +3,13 @@
 //! picks the empirically best kernel for each layer shape — the runtime
 //! counterpart of the paper's offline grid searches.
 //!
+//! Classes are keyed by problem shape, not by model, which is what makes
+//! the table the fleet's **shared tuning substrate**: one `TuningTable`
+//! lives inside the one `Planner` a
+//! [`crate::coordinator::ModelRegistry`] owns, so a winner recorded while
+//! serving one model is immediately consulted by every other loaded
+//! model whose layers hit the same (K, sparsity, M) class.
+//!
 //! # Key format and fallback
 //!
 //! Classes are keyed `k{K}_s{S}` (M-agnostic, the PR-2 format) or

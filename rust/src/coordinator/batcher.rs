@@ -11,6 +11,7 @@
 //! [`Metrics`] so the controller has signals to steer by.
 
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::registry::AdmissionController;
 use crate::coordinator::request::InferenceRequest;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -44,6 +45,10 @@ pub enum SubmitError {
     /// The request carried a zero-length input row: it would contribute
     /// nothing to a GEMM batch and can never produce output.
     EmptyInput(InferenceRequest),
+    /// The model's admission queue budget is exhausted: accepting the
+    /// request would grow the queue past what the fleet is willing to
+    /// hold for this model (429-style backpressure, not shutdown).
+    Overloaded(InferenceRequest),
 }
 
 struct QueueState {
@@ -59,6 +64,7 @@ pub struct DynamicBatcher {
     state: Mutex<QueueState>,
     cv: Condvar,
     metrics: Option<Arc<Metrics>>,
+    admission: Option<Arc<AdmissionController>>,
 }
 
 impl DynamicBatcher {
@@ -73,6 +79,7 @@ impl DynamicBatcher {
             }),
             cv: Condvar::new(),
             metrics: None,
+            admission: None,
         }
     }
 
@@ -80,6 +87,14 @@ impl DynamicBatcher {
     /// coordinator's signal source).
     pub fn with_metrics(mut self, metrics: Arc<Metrics>) -> DynamicBatcher {
         self.metrics = Some(metrics);
+        self
+    }
+
+    /// Enforce `admission`'s queue budget at submit time: a request that
+    /// would push the queue past the budget is refused with
+    /// [`SubmitError::Overloaded`] instead of queueing unboundedly.
+    pub fn with_admission(mut self, admission: Arc<AdmissionController>) -> DynamicBatcher {
+        self.admission = Some(admission);
         self
     }
 
@@ -117,6 +132,13 @@ impl DynamicBatcher {
         let mut st = self.state.lock().expect("batcher mutex");
         if st.closed {
             return Err(SubmitError::Closed(req));
+        }
+        // Checked under the queue lock so the depth the budget sees is
+        // exact — concurrent producers can't both slip past the last slot.
+        if let Some(adm) = &self.admission {
+            if !adm.admits(st.queue.len()) {
+                return Err(SubmitError::Overloaded(req));
+            }
         }
         st.queue.push_back(req);
         let depth = st.queue.len();
@@ -297,6 +319,27 @@ mod tests {
         // Non-empty input still flows.
         b.submit(req(1)).unwrap();
         assert_eq!(b.depth(), 1);
+    }
+
+    #[test]
+    fn admission_budget_rejects_at_capacity_and_recovers() {
+        let adm = Arc::new(AdmissionController::new(2));
+        let b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_secs(10),
+        })
+        .with_admission(Arc::clone(&adm));
+        b.submit(req(1)).unwrap();
+        b.submit(req(2)).unwrap();
+        match b.submit(req(3)) {
+            Err(SubmitError::Overloaded(r)) => assert_eq!(r.id, 3),
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert_eq!(b.depth(), 2, "rejected request never queues");
+        // Raising the budget readmits immediately; 0 means unlimited.
+        adm.set_budget(0);
+        b.submit(req(3)).unwrap();
+        assert_eq!(b.depth(), 3);
     }
 
     #[test]

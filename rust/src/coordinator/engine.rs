@@ -150,17 +150,8 @@ impl Engine {
                 self.metrics
                     .errors
                     .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                let resp = InferenceResponse {
-                    id: req.id,
-                    output: Err(Error::Shape(format!(
-                        "input length {} != d_in {d_in}",
-                        req.input.len()
-                    ))),
-                    queue_us: req.enqueued.elapsed().as_micros() as u64,
-                    compute_us: 0,
-                    batch_size: 0,
-                };
-                let _ = req.resp_tx.send(resp);
+                let len = req.input.len();
+                req.reject(Error::Shape(format!("input length {len} != d_in {d_in}")));
             }
         }
         if valid.is_empty() {

@@ -78,6 +78,32 @@ pub(crate) fn pow2_floor(n: usize) -> usize {
     }
 }
 
+/// Split a fleet-wide worker-thread budget across models by observed
+/// demand (the registry's balancer feeds arrival-rate × compute-EWMA per
+/// model). Each model's share is its demand-proportional slice of the
+/// budget, snapped down to a power of two (the plan-cache key invariant)
+/// with a floor of one thread. The shares are **caps, not reservations**:
+/// a model with zero demand keeps the full pow2 budget as its cap — an
+/// idle fleet shouldn't throttle the first model to wake up — while any
+/// nonzero skew immediately squeezes the idle models to the floor.
+pub fn split_thread_budget(total: usize, demands: &[f64]) -> Vec<usize> {
+    let total = total.max(1);
+    if demands.is_empty() {
+        return Vec::new();
+    }
+    let sum: f64 = demands.iter().map(|d| d.max(0.0)).sum();
+    if sum <= 0.0 {
+        return vec![pow2_floor(total); demands.len()];
+    }
+    demands
+        .iter()
+        .map(|&d| {
+            let share = (d.max(0.0) / sum * total as f64).floor() as usize;
+            pow2_floor(share.max(1)).min(pow2_floor(total))
+        })
+        .collect()
+}
+
 /// Two-consecutive-tick hysteresis for timer-driven advice: a target
 /// change is applied only after the controller has advised the *same*
 /// differing target on two ticks in a row, so a single noisy sample
@@ -303,6 +329,27 @@ mod tests {
         assert_eq!(h.observe(cur, cur), None);
         assert_eq!(h.observe(decay, cur), None);
         assert_eq!(h.observe(decay, cur), Some(decay));
+    }
+
+    #[test]
+    fn thread_budget_splits_by_demand_in_pow2_shares() {
+        // Heavy skew: the hot model takes (nearly) everything, the cold
+        // one keeps the one-thread floor.
+        assert_eq!(split_thread_budget(8, &[3000.0, 100.0]), vec![4, 1]);
+        // Even demand splits evenly.
+        assert_eq!(split_thread_budget(8, &[1.0, 1.0]), vec![4, 4]);
+        // All demand on one model hands it the whole budget.
+        assert_eq!(split_thread_budget(8, &[10.0, 0.0]), vec![8, 1]);
+        // Idle fleet: shares are caps, not reservations — nobody is
+        // throttled below the full pow2 budget.
+        assert_eq!(split_thread_budget(8, &[0.0, 0.0]), vec![8, 8]);
+        // Degenerate shapes stay sane.
+        assert_eq!(split_thread_budget(0, &[1.0]), vec![1]);
+        assert!(split_thread_budget(8, &[]).is_empty());
+        // Non-pow2 budget snaps each share down to pow2.
+        for share in split_thread_budget(6, &[5.0, 3.0, 1.0]) {
+            assert!(share.is_power_of_two() && share <= 4);
+        }
     }
 
     #[test]

@@ -93,6 +93,9 @@ pub struct Metrics {
     pub max_batch_in_use: AtomicU64,
     /// Times the load controller re-advised this model (counter).
     pub autoscale_adjustments: AtomicU64,
+    /// Submits refused because the model's admission queue budget was
+    /// exhausted (429-style rejections; counter).
+    pub admission_rejections: AtomicU64,
     /// Wavefront forwards executed (counter; barrier/race batches don't
     /// count).
     pub pipeline_runs: AtomicU64,
@@ -252,6 +255,10 @@ impl Metrics {
             (
                 "autoscale_adjustments",
                 Json::num(self.autoscale_adjustments.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "admission_rejections",
+                Json::num(self.admission_rejections.load(Ordering::Relaxed) as f64),
             ),
             (
                 "pipeline",

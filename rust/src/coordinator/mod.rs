@@ -13,12 +13,23 @@
 //! ([`Router::register_autoscaled`]) periodically turns those signals into
 //! new `max_batch` / thread-fan-out targets via [`load::LoadController`],
 //! applied to the live batcher and the model's plan cache.
+//!
+//! Since PR 8 the model set is dynamic: a [`registry::ModelRegistry`] owns
+//! the fleet — per-model lifecycle states (`Cold` → `Warming` → `Hot` →
+//! `Draining`), per-model admission queue budgets
+//! ([`registry::AdmissionController`], rejecting with
+//! [`SubmitError::Overloaded`]), and a demand-driven split of one fleet
+//! thread budget — all over **one** shared `Planner`/`TuningTable`/thread
+//! pool with per-model plan caches. [`Router`] is the thin front door;
+//! models load and unload at runtime through the registry (HTTP:
+//! `POST /load_model`, `POST /unload`, `GET /status` in [`server`]).
 
 pub mod request;
 pub mod metrics;
 pub mod batcher;
 pub mod engine;
 pub mod load;
+pub mod registry;
 pub mod router;
 pub mod server;
 pub mod loadgen;
@@ -29,6 +40,7 @@ pub use engine::{Backend, Engine};
 pub use load::{Advice, AdviceHysteresis, LoadControlConfig, LoadController};
 pub use loadgen::{LoadGenReport, LoadGenerator};
 pub use metrics::Metrics;
+pub use registry::{AdmissionController, LoadOptions, ModelHandle, ModelRegistry, ModelState};
 pub use request::{InferenceRequest, InferenceResponse};
 pub use router::Router;
 pub use server::Server;

@@ -1,0 +1,1019 @@
+//! Model fleet registry: the mutable, runtime model set behind the
+//! routing front door.
+//!
+//! PR 1–7 built a coordinator whose model set was frozen at startup —
+//! `serve` registered one model and only whole-process shutdown could
+//! retire it. The registry makes the fleet a first-class runtime concept:
+//!
+//! - **Lifecycle**: every model is a [`ModelHandle`] with an explicit
+//!   [`ModelState`] — `Cold` (loaded, no plans built) → `Warming` (plan
+//!   compile in progress: first traffic or an explicit
+//!   [`ModelRegistry::warm`]) → `Hot` (serving with compiled plans) →
+//!   `Draining` (unload/shutdown in progress: new submits are rejected,
+//!   queued requests still complete).
+//! - **Shared substrate**: the registry owns **one** [`Planner`] (and
+//!   through it one `TuningTable` and one lazily-created shared
+//!   [`crate::util::threadpool::ThreadPool`]); every loaded model gets its
+//!   own `PlanCache` layered on that planner, so tuning knowledge learned
+//!   by one model's online races is immediately visible to every other
+//!   model with the same (K, sparsity, M) classes.
+//! - **Admission control**: each model carries an [`AdmissionController`]
+//!   enforcing a queue budget at submit time. A hot model that outruns its
+//!   budget gets 429-style
+//!   [`crate::coordinator::SubmitError::Overloaded`] rejections instead of
+//!   unbounded queueing — it cannot starve its neighbours' worker threads
+//!   by stacking work the fleet can never drain.
+//! - **Thread-budget split**: [`ModelRegistry::start_balancer`] runs a
+//!   fleet tick that splits one process-wide worker-thread budget across
+//!   models by observed demand (arrival rate × compute EWMA, via
+//!   [`crate::coordinator::load::split_thread_budget`]); each model's
+//!   autoscale advice is clamped to its share.
+//!
+//! Unload and shutdown share one drain path, with the ordering fix the
+//! single-model router needed: the autoscale tick thread stops **before**
+//! the batch loop is joined, so a late tick can never re-advise (and touch
+//! the plan cache of) a model whose loop is already gone.
+
+use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher, SubmitError};
+use crate::coordinator::engine::Engine;
+use crate::coordinator::load::{
+    pow2_floor, split_thread_budget, Advice, AdviceHysteresis, LoadControlConfig,
+    LoadController,
+};
+use crate::coordinator::request::{InferenceRequest, InferenceResponse};
+use crate::model::ModelConfig;
+use crate::plan::{PlanCache, Planner};
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Lifecycle state of a loaded model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelState {
+    /// Loaded and registered; no plans built yet. First traffic (or an
+    /// explicit warm) moves it to `Warming`.
+    Cold = 0,
+    /// Plan compile in progress (lazy, on first traffic, or eager via
+    /// [`ModelRegistry::warm`]).
+    Warming = 1,
+    /// Serving with compiled plans.
+    Hot = 2,
+    /// Unload/shutdown in progress: new submits are rejected, in-flight
+    /// and queued requests still complete.
+    Draining = 3,
+}
+
+impl ModelState {
+    fn from_u8(v: u8) -> ModelState {
+        match v {
+            0 => ModelState::Cold,
+            1 => ModelState::Warming,
+            2 => ModelState::Hot,
+            _ => ModelState::Draining,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModelState::Cold => "cold",
+            ModelState::Warming => "warming",
+            ModelState::Hot => "hot",
+            ModelState::Draining => "draining",
+        }
+    }
+}
+
+impl std::fmt::Display for ModelState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Per-model queue budget, checked inside the batcher's submit lock.
+///
+/// A budget of 0 means unlimited (the single-model default). With a
+/// budget set, a submit that would push the queue past it is rejected
+/// with [`SubmitError::Overloaded`] — the 429-style backpressure that
+/// keeps one hot model from stacking unbounded work.
+#[derive(Debug, Default)]
+pub struct AdmissionController {
+    queue_budget: AtomicUsize,
+}
+
+impl AdmissionController {
+    pub fn new(queue_budget: usize) -> AdmissionController {
+        AdmissionController {
+            queue_budget: AtomicUsize::new(queue_budget),
+        }
+    }
+
+    /// Current budget (0 = unlimited).
+    pub fn budget(&self) -> usize {
+        self.queue_budget.load(Ordering::Relaxed)
+    }
+
+    /// Re-size the budget at runtime (0 = unlimited).
+    pub fn set_budget(&self, budget: usize) {
+        self.queue_budget.store(budget, Ordering::Relaxed);
+    }
+
+    /// Whether a request may join a queue currently `depth` deep.
+    pub fn admits(&self, depth: usize) -> bool {
+        let budget = self.budget();
+        budget == 0 || depth < budget
+    }
+}
+
+/// How to load a model into the registry.
+#[derive(Debug, Clone)]
+pub struct LoadOptions {
+    /// Batch assembly policy for the model's dynamic batcher.
+    pub policy: BatchPolicy,
+    /// Autoscale configuration; `None` pins the static policy.
+    pub control: Option<LoadControlConfig>,
+    /// Admission queue budget (0 = unlimited).
+    pub queue_budget: usize,
+    /// Eagerly compile plans at load time (`Cold → Warming → Hot` before
+    /// the first request). `false` defers the compile to first traffic.
+    pub warm: bool,
+    /// Batch buckets a warm-up compiles plans for. Empty defers entirely
+    /// to first traffic ([`ModelRegistry::load`] fills this from the
+    /// config's `batch_buckets`).
+    pub buckets: Vec<usize>,
+}
+
+impl Default for LoadOptions {
+    fn default() -> Self {
+        LoadOptions {
+            policy: BatchPolicy::default(),
+            control: None,
+            queue_budget: 0,
+            warm: false,
+            buckets: Vec::new(),
+        }
+    }
+}
+
+/// One loaded model: engine + batcher + lifecycle + admission + the
+/// threads that serve it.
+pub struct ModelHandle {
+    engine: Arc<Engine>,
+    batcher: Arc<DynamicBatcher>,
+    admission: Arc<AdmissionController>,
+    state: AtomicU8,
+    /// This model's share of the fleet thread budget (upper bound for
+    /// autoscale advice; re-split by the balancer tick).
+    thread_cap: AtomicUsize,
+    /// Buckets an explicit warm compiles plans for.
+    buckets: Vec<usize>,
+    controller: Option<Arc<LoadController>>,
+    /// Both advise triggers (batch-count and timer tick) and the fleet
+    /// balancer serialize on this lock; each computes its advice from the
+    /// metrics *inside* the critical section — so a tick that read
+    /// pre-burst signals can never stomp the batch loop's fresh scale-up,
+    /// and the gauge pair is never observed torn between two advices.
+    advise_lock: Arc<Mutex<()>>,
+    loop_handle: Mutex<Option<JoinHandle<()>>>,
+    /// Dropping this stops the autoscale tick thread (its `recv_timeout`
+    /// sees the disconnect).
+    tick_stop: Mutex<Option<mpsc::Sender<()>>>,
+    tick_handle: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl ModelHandle {
+    pub fn state(&self) -> ModelState {
+        ModelState::from_u8(self.state.load(Ordering::Acquire))
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    pub fn admission(&self) -> &Arc<AdmissionController> {
+        &self.admission
+    }
+
+    /// Current batcher queue depth.
+    pub fn queue_depth(&self) -> usize {
+        self.batcher.depth()
+    }
+
+    /// This model's current share of the fleet thread budget.
+    pub fn thread_cap(&self) -> usize {
+        self.thread_cap.load(Ordering::Relaxed)
+    }
+
+    /// Move to `to` unless the model is already `Draining` — drain is
+    /// terminal and must never be overwritten by a racing warm-up or
+    /// batch-loop Hot transition.
+    fn advance_state(&self, to: ModelState) {
+        let mut cur = self.state.load(Ordering::Acquire);
+        loop {
+            if ModelState::from_u8(cur) == ModelState::Draining {
+                return;
+            }
+            match self.state.compare_exchange(
+                cur,
+                to as u8,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// First traffic on a cold model starts the (lazy) warm-up: the plan
+    /// cache compiles on the batch loop's first miss.
+    fn mark_traffic(&self) {
+        let _ = self.state.compare_exchange(
+            ModelState::Cold as u8,
+            ModelState::Warming as u8,
+            Ordering::AcqRel,
+            Ordering::Relaxed,
+        );
+    }
+
+    /// Eagerly compile plans for the configured buckets at every thread
+    /// step the coordinator can use (settled kernel choices only — untuned
+    /// buckets stay cold so their first real traffic races the top-2
+    /// candidates).
+    fn warm_plans(&self) -> Result<()> {
+        if let Some(cache) = self.engine.plan_cache() {
+            // Hold the advise lock: warm_settled temporarily walks the
+            // cache's thread ceiling through each step, which a concurrent
+            // advice application must not observe.
+            let _guard = self.advise_lock.lock().unwrap_or_else(|e| e.into_inner());
+            self.advance_state(ModelState::Warming);
+            let steps = match &self.controller {
+                // Fixed ceiling: only one step is reachable.
+                None => vec![cache.threads()],
+                Some(c) => PlanCache::controller_thread_steps(c.cfg().max_threads),
+            };
+            cache.warm_settled(&self.buckets, &steps)?;
+        }
+        self.advance_state(ModelState::Hot);
+        Ok(())
+    }
+}
+
+/// Apply one piece of controller advice to a model's live knobs and
+/// gauges (shared by the batch-loop and timer-tick triggers). The thread
+/// target is additionally clamped to the model's fleet budget share.
+fn apply_advice(handle: &ModelHandle, mut advice: Advice) {
+    let cap = pow2_floor(handle.thread_cap.load(Ordering::Relaxed).max(1));
+    advice.threads = advice.threads.min(cap);
+    handle.batcher.set_max_batch(advice.max_batch);
+    handle.engine.set_threads(advice.threads);
+    handle
+        .engine
+        .metrics
+        .max_batch_in_use
+        .store(advice.max_batch as u64, Ordering::Relaxed);
+    handle
+        .engine
+        .metrics
+        .threads_in_use
+        .store(advice.threads as u64, Ordering::Relaxed);
+    handle
+        .engine
+        .metrics
+        .autoscale_adjustments
+        .fetch_add(1, Ordering::Relaxed);
+}
+
+/// The dynamic multi-model fleet registry.
+///
+/// Owns the shared planning substrate (one [`Planner`] → one tuning
+/// table + one shared thread pool) and the name → [`ModelHandle`] map.
+/// Models load, warm, serve, and unload at runtime; the thin
+/// [`crate::coordinator::Router`] front door delegates here.
+pub struct ModelRegistry {
+    planner: Arc<Planner>,
+    /// Shared with the balancer tick thread (it needs the live model set
+    /// without holding the registry itself).
+    models: Arc<RwLock<BTreeMap<String, Arc<ModelHandle>>>>,
+    next_id: AtomicU64,
+    /// Name lookups that found / missed a model (fleet gauges).
+    hits: AtomicU64,
+    misses: AtomicU64,
+    /// Process-wide worker-thread budget the balancer splits by demand.
+    thread_budget: usize,
+    balancer_stop: Mutex<Option<mpsc::Sender<()>>>,
+    balancer_handle: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl ModelRegistry {
+    /// Registry over a shared planner, with the host's parallelism as the
+    /// fleet thread budget.
+    pub fn new(planner: Arc<Planner>) -> ModelRegistry {
+        let budget = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        ModelRegistry::with_thread_budget(planner, budget)
+    }
+
+    /// Registry with an explicit fleet-wide worker-thread budget.
+    pub fn with_thread_budget(planner: Arc<Planner>, thread_budget: usize) -> ModelRegistry {
+        ModelRegistry {
+            planner,
+            models: Arc::new(RwLock::new(BTreeMap::new())),
+            next_id: AtomicU64::new(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            thread_budget: thread_budget.max(1),
+            balancer_stop: Mutex::new(None),
+            balancer_handle: Mutex::new(None),
+        }
+    }
+
+    /// The shared planning substrate (tuning table + thread pool owner).
+    pub fn planner(&self) -> &Arc<Planner> {
+        &self.planner
+    }
+
+    /// The fleet-wide worker-thread budget.
+    pub fn thread_budget(&self) -> usize {
+        self.thread_budget
+    }
+
+    /// Registry lookups that resolved to a loaded model.
+    pub fn hit_count(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Registry lookups that named no loaded model.
+    pub fn miss_count(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Build a model from its config through the shared planner and load
+    /// it. Empty `opts.buckets` are filled from the config's
+    /// `batch_buckets`; a zero `opts.queue_budget` takes the config's
+    /// `queue_budget` key.
+    pub fn load(&self, cfg: &ModelConfig, mut opts: LoadOptions) -> Result<Arc<ModelHandle>> {
+        if opts.buckets.is_empty() {
+            opts.buckets = cfg.batch_buckets.clone();
+        }
+        if opts.queue_budget == 0 {
+            opts.queue_budget = cfg.queue_budget;
+        }
+        let engine = Engine::from_config(cfg, &self.planner)?;
+        self.load_engine(engine, opts)
+    }
+
+    /// Load a pre-built engine (the path for engines carrying an XLA
+    /// executor or explicit layers). Fails when the name is taken — unload
+    /// first to replace a model.
+    pub fn load_engine(&self, engine: Engine, opts: LoadOptions) -> Result<Arc<ModelHandle>> {
+        let name = engine.name.clone();
+        if self.models.read().unwrap_or_else(|e| e.into_inner()).contains_key(&name) {
+            return Err(Error::Serve(format!("model '{name}' is already loaded")));
+        }
+        let controller = opts
+            .control
+            .clone()
+            .map(|c| Arc::new(LoadController::new(c)));
+        let engine = Arc::new(engine);
+        let admission = Arc::new(AdmissionController::new(opts.queue_budget));
+        let batcher = Arc::new(
+            DynamicBatcher::new(opts.policy)
+                .with_metrics(Arc::clone(&engine.metrics))
+                .with_admission(Arc::clone(&admission)),
+        );
+        engine
+            .metrics
+            .max_batch_in_use
+            .store(opts.policy.max_batch as u64, Ordering::Relaxed);
+        let mut initial_threads = engine.plan_cache().map(|c| c.threads()).unwrap_or(1);
+        // Controller advice only ever lands on powers of two ≤ its
+        // `max_threads`, and the warm steps cover exactly those — an
+        // autoscaled model whose config seeded a ceiling outside that set
+        // (e.g. "threads": 6, or 8 with --max-threads 4) would otherwise
+        // build unwarmed plans that become dead weight on the first
+        // advice. Fixed-policy models keep the config value untouched
+        // (the documented escape hatch).
+        if let Some(ctl) = &controller {
+            let clamped = pow2_floor(initial_threads.min(ctl.cfg().max_threads));
+            if clamped != initial_threads {
+                engine.set_threads(clamped);
+                initial_threads = clamped;
+            }
+        }
+        engine
+            .metrics
+            .threads_in_use
+            .store(initial_threads as u64, Ordering::Relaxed);
+        let handle = Arc::new(ModelHandle {
+            engine,
+            batcher,
+            admission,
+            state: AtomicU8::new(ModelState::Cold as u8),
+            thread_cap: AtomicUsize::new(self.thread_budget),
+            buckets: opts.buckets,
+            controller,
+            advise_lock: Arc::new(Mutex::new(())),
+            loop_handle: Mutex::new(None),
+            tick_stop: Mutex::new(None),
+            tick_handle: Mutex::new(None),
+        });
+        // Eager warm happens before the serving threads exist: an
+        // autoscaled model's advise tick would otherwise race
+        // warm_settled's temporary thread-ceiling changes.
+        if opts.warm {
+            handle.warm_plans()?;
+        }
+        self.spawn_batch_loop(&name, &handle);
+        self.spawn_autoscale_tick(&name, &handle);
+        let mut models = self.models.write().unwrap_or_else(|e| e.into_inner());
+        if models.contains_key(&name) {
+            // Lost a load race for the same name: tear our threads down
+            // and report the conflict.
+            drop(models);
+            Self::drain(&handle);
+            return Err(Error::Serve(format!("model '{name}' is already loaded")));
+        }
+        models.insert(name, Arc::clone(&handle));
+        Ok(handle)
+    }
+
+    fn spawn_batch_loop(&self, name: &str, handle: &Arc<ModelHandle>) {
+        let h = Arc::clone(handle);
+        let loop_handle = std::thread::Builder::new()
+            .name(format!("stgemm-batch-{name}"))
+            .spawn(move || {
+                let mut executed: u64 = 0;
+                while let Some(batch) = h.batcher.next_batch() {
+                    h.engine.run_batch(batch);
+                    executed += 1;
+                    // First executed batch: the lazy warm-up (plan-cache
+                    // compile on miss) has happened — the model is hot.
+                    h.advance_state(ModelState::Hot);
+                    if let Some(ctl) = &h.controller {
+                        if executed % ctl.cfg().adjust_every_batches == 0 {
+                            let _guard =
+                                h.advise_lock.lock().unwrap_or_else(|e| e.into_inner());
+                            let advice = ctl.advise_from(&h.engine.metrics);
+                            apply_advice(&h, advice);
+                        }
+                    }
+                }
+            })
+            .expect("spawn batch loop");
+        *handle.loop_handle.lock().unwrap_or_else(|e| e.into_inner()) = Some(loop_handle);
+    }
+
+    /// Timer-driven advise tick: without it an idle model never
+    /// re-advises (advice otherwise fires per executed batch), so
+    /// threads/batch targets could never decay back after a burst.
+    fn spawn_autoscale_tick(&self, name: &str, handle: &Arc<ModelHandle>) {
+        let Some(ctl) = handle.controller.clone() else {
+            return;
+        };
+        let (stop_tx, stop_rx) = mpsc::channel::<()>();
+        let h = Arc::clone(handle);
+        let tick_handle = std::thread::Builder::new()
+            .name(format!("stgemm-tick-{name}"))
+            .spawn(move || {
+                let mut hysteresis = AdviceHysteresis::default();
+                loop {
+                    match stop_rx.recv_timeout(ctl.cfg().tick) {
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            let _guard =
+                                h.advise_lock.lock().unwrap_or_else(|e| e.into_inner());
+                            let advice = ctl.advise_from(&h.engine.metrics);
+                            let current = Advice {
+                                max_batch: h
+                                    .engine
+                                    .metrics
+                                    .max_batch_in_use
+                                    .load(Ordering::Relaxed)
+                                    as usize,
+                                threads: h
+                                    .engine
+                                    .metrics
+                                    .threads_in_use
+                                    .load(Ordering::Relaxed)
+                                    as usize,
+                            };
+                            if let Some(a) = hysteresis.observe(advice, current) {
+                                apply_advice(&h, a);
+                            }
+                        }
+                        // Sender dropped (drain) or explicit stop.
+                        _ => break,
+                    }
+                }
+            })
+            .expect("spawn autoscale tick");
+        *handle.tick_stop.lock().unwrap_or_else(|e| e.into_inner()) = Some(stop_tx);
+        *handle.tick_handle.lock().unwrap_or_else(|e| e.into_inner()) = Some(tick_handle);
+    }
+
+    /// Start the fleet balancer: every `tick`, split the thread budget
+    /// across loaded models by observed demand (arrival rate × compute
+    /// EWMA) and clamp each model's autoscale ceiling to its share. An
+    /// over-share model is pulled down immediately; growth waits for the
+    /// model's own controller to advise it (so an idle model's share is a
+    /// cap, not a reservation).
+    pub fn start_balancer(&self, tick: Duration) {
+        let mut stop_guard = self.balancer_stop.lock().unwrap_or_else(|e| e.into_inner());
+        if stop_guard.is_some() {
+            return; // already running
+        }
+        let (stop_tx, stop_rx) = mpsc::channel::<()>();
+        let models = Arc::clone(&self.models);
+        let total = self.thread_budget;
+        let handle = std::thread::Builder::new()
+            .name("stgemm-fleet-balance".into())
+            .spawn(move || loop {
+                match stop_rx.recv_timeout(tick) {
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        let handles: Vec<Arc<ModelHandle>> = models
+                            .read()
+                            .unwrap_or_else(|e| e.into_inner())
+                            .values()
+                            .cloned()
+                            .collect();
+                        if handles.is_empty() {
+                            continue;
+                        }
+                        let demands: Vec<f64> = handles
+                            .iter()
+                            .map(|h| {
+                                let m = &h.engine.metrics;
+                                // µs of compute arriving per second: the
+                                // load each model actually puts on the
+                                // shared pool.
+                                m.arrival_rate_rps() * m.compute_ewma_us().max(1.0)
+                            })
+                            .collect();
+                        let shares = split_thread_budget(total, &demands);
+                        for (h, share) in handles.iter().zip(shares) {
+                            h.thread_cap.store(share, Ordering::Relaxed);
+                            let current =
+                                h.engine.metrics.threads_in_use.load(Ordering::Relaxed)
+                                    as usize;
+                            if current > share {
+                                let _guard = h
+                                    .advise_lock
+                                    .lock()
+                                    .unwrap_or_else(|e| e.into_inner());
+                                h.engine.set_threads(share);
+                                h.engine
+                                    .metrics
+                                    .threads_in_use
+                                    .store(share as u64, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    _ => break,
+                }
+            })
+            .expect("spawn fleet balancer");
+        *stop_guard = Some(stop_tx);
+        *self
+            .balancer_handle
+            .lock()
+            .unwrap_or_else(|e| e.into_inner()) = Some(handle);
+    }
+
+    /// Loaded model names (sorted).
+    pub fn names(&self) -> Vec<String> {
+        self.models
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .keys()
+            .cloned()
+            .collect()
+    }
+
+    /// Look a model up by name (counts fleet hit/miss gauges).
+    pub fn get(&self, name: &str) -> Option<Arc<ModelHandle>> {
+        let found = self
+            .models
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(name)
+            .cloned();
+        match &found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    /// Snapshot of (name, handle) pairs for status/metrics rendering.
+    pub fn handles(&self) -> Vec<(String, Arc<ModelHandle>)> {
+        self.models
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .map(|(k, v)| (k.clone(), Arc::clone(v)))
+            .collect()
+    }
+
+    /// Eagerly compile a loaded model's plans (`Cold → Warming → Hot`).
+    pub fn warm(&self, name: &str) -> Result<()> {
+        let handle = self
+            .get(name)
+            .ok_or_else(|| Error::Serve(format!("unknown model '{name}'")))?;
+        handle.warm_plans()
+    }
+
+    /// Submit an input row; returns the response receiver.
+    pub fn submit(
+        &self,
+        model: &str,
+        input: Vec<f32>,
+    ) -> Result<mpsc::Receiver<InferenceResponse>> {
+        let handle = self
+            .get(model)
+            .ok_or_else(|| Error::Serve(format!("unknown model '{model}'")))?;
+        if handle.state() == ModelState::Draining {
+            handle
+                .engine
+                .metrics
+                .errors
+                .fetch_add(1, Ordering::Relaxed);
+            return Err(Error::Serve(format!("model '{model}' is draining")));
+        }
+        handle.mark_traffic();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        handle
+            .engine
+            .metrics
+            .requests
+            .fetch_add(1, Ordering::Relaxed);
+        let (req, rx) = InferenceRequest::new(id, model, input);
+        handle.batcher.submit(req).map_err(|e| {
+            handle
+                .engine
+                .metrics
+                .errors
+                .fetch_add(1, Ordering::Relaxed);
+            Error::Serve(match e {
+                SubmitError::Closed(_) => "model is shutting down".to_string(),
+                SubmitError::EmptyInput(_) => "empty input".to_string(),
+                SubmitError::Overloaded(_) => {
+                    handle
+                        .engine
+                        .metrics
+                        .admission_rejections
+                        .fetch_add(1, Ordering::Relaxed);
+                    format!("overloaded: model '{model}' queue is at its admission budget")
+                }
+            })
+        })?;
+        Ok(rx)
+    }
+
+    /// Submit and block for the response (with timeout).
+    pub fn infer_blocking(
+        &self,
+        model: &str,
+        input: Vec<f32>,
+        timeout: Duration,
+    ) -> Result<InferenceResponse> {
+        let rx = self.submit(model, input)?;
+        rx.recv_timeout(timeout)
+            .map_err(|e| Error::Serve(format!("inference timed out/disconnected: {e}")))
+    }
+
+    /// The one drain path, shared by [`ModelRegistry::unload`] and
+    /// [`ModelRegistry::shutdown`]:
+    ///
+    /// 1. mark `Draining` — new submits are rejected from here on;
+    /// 2. stop and join the autoscale tick thread **before** touching the
+    ///    batch loop (a tick joined after the loop could re-advise a
+    ///    model with no consumer left and mutate its plan cache mid-free);
+    /// 3. close the batcher — queued requests are still handed to the
+    ///    batch loop, so nothing accepted is ever dropped;
+    /// 4. join the batch loop: when it exits, every in-flight response
+    ///    has been delivered.
+    fn drain(handle: &ModelHandle) {
+        handle.state.store(ModelState::Draining as u8, Ordering::Release);
+        handle
+            .tick_stop
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take();
+        if let Some(h) = handle
+            .tick_handle
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()
+        {
+            let _ = h.join();
+        }
+        handle.batcher.close();
+        if let Some(h) = handle
+            .loop_handle
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()
+        {
+            let _ = h.join();
+        }
+    }
+
+    /// Unload a model: drain it (no accepted request is dropped), remove
+    /// it from the registry, and release its plan/pipeline/arena memory.
+    /// The name becomes immediately re-loadable.
+    pub fn unload(&self, name: &str) -> Result<()> {
+        // Resolve without removing: the model stays visible (as Draining)
+        // to /status while its queue flushes.
+        let handle = self
+            .get(name)
+            .ok_or_else(|| Error::Serve(format!("unknown model '{name}'")))?;
+        Self::drain(&handle);
+        self.models
+            .write()
+            .unwrap_or_else(|e| e.into_inner())
+            .remove(name);
+        if let Some(cache) = handle.engine.plan_cache() {
+            cache.release();
+        }
+        Ok(())
+    }
+
+    /// Stop everything: balancer first (so no re-split lands mid-drain),
+    /// then all models through the shared drain ordering — ticks stopped
+    /// and joined before any batch loop is joined. Idempotent; queued
+    /// requests still complete.
+    pub fn shutdown(&self) {
+        self.balancer_stop
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take();
+        if let Some(h) = self
+            .balancer_handle
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()
+        {
+            let _ = h.join();
+        }
+        let handles: Vec<Arc<ModelHandle>> = self
+            .models
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .values()
+            .cloned()
+            .collect();
+        // Phase 1: stop accepting + stop ticks everywhere, so all models
+        // drain concurrently instead of serially.
+        for h in &handles {
+            h.state.store(ModelState::Draining as u8, Ordering::Release);
+            h.tick_stop.lock().unwrap_or_else(|e| e.into_inner()).take();
+            h.batcher.close();
+        }
+        // Phase 2: join ticks before any batch loop.
+        for h in &handles {
+            if let Some(t) = h
+                .tick_handle
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .take()
+            {
+                let _ = t.join();
+            }
+        }
+        // Phase 3: join loops (each finishes flushing its queue).
+        for h in &handles {
+            if let Some(l) = h
+                .loop_handle
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .take()
+            {
+                let _ = l.join();
+            }
+        }
+    }
+}
+
+impl Drop for ModelRegistry {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    fn cfg(name: &str, seed: u64) -> ModelConfig {
+        ModelConfig::from_json(&format!(
+            r#"{{"name":"{name}","dims":[8,16,4],"sparsity":0.5,"seed":{seed}}}"#
+        ))
+        .unwrap()
+    }
+
+    fn registry() -> ModelRegistry {
+        ModelRegistry::with_thread_budget(Arc::new(Planner::new()), 8)
+    }
+
+    #[test]
+    fn lifecycle_cold_until_traffic_then_hot() {
+        let reg = registry();
+        let handle = reg.load(&cfg("m1", 1), LoadOptions::default()).unwrap();
+        assert_eq!(handle.state(), ModelState::Cold);
+        let resp = reg
+            .infer_blocking("m1", vec![0.5; 8], Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(resp.output.unwrap().len(), 4);
+        // The batch loop marks Hot right after the first executed batch —
+        // but after delivering its responses, so poll briefly.
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while handle.state() != ModelState::Hot {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "first executed batch never marked the model Hot (state: {})",
+                handle.state()
+            );
+            std::thread::yield_now();
+        }
+    }
+
+    #[test]
+    fn lifecycle_explicit_warm_compiles_plans_before_traffic() {
+        let reg = registry();
+        let handle = reg
+            .load(
+                &cfg("m1", 2),
+                LoadOptions {
+                    warm: true,
+                    control: Some(LoadControlConfig {
+                        max_threads: 2,
+                        tick: Duration::from_secs(3600),
+                        ..LoadControlConfig::default()
+                    }),
+                    ..LoadOptions::default()
+                },
+            )
+            .unwrap();
+        assert_eq!(handle.state(), ModelState::Hot);
+        let cache = handle.engine().plan_cache().expect("config-built");
+        assert!(
+            cache.plans_built() > 0,
+            "eager warm must compile plans before any traffic"
+        );
+    }
+
+    #[test]
+    fn lifecycle_unload_frees_name_and_releases_plans() {
+        let reg = registry();
+        let handle = reg.load(&cfg("m1", 3), LoadOptions::default()).unwrap();
+        reg.infer_blocking("m1", vec![0.1; 8], Duration::from_secs(5))
+            .unwrap();
+        let cache = handle.engine().plan_cache().cloned().expect("config-built");
+        assert!(cache.plans_built() > 0);
+        reg.unload("m1").unwrap();
+        assert!(reg.get("m1").is_none(), "unloaded model is gone");
+        assert_eq!(cache.plans_built(), 0, "unload releases plan memory");
+        assert_eq!(cache.arena_stats().reuses + cache.arena_stats().allocations, 0);
+        // The name is immediately re-loadable.
+        reg.load(&cfg("m1", 3), LoadOptions::default()).unwrap();
+        let resp = reg
+            .infer_blocking("m1", vec![0.1; 8], Duration::from_secs(5))
+            .unwrap();
+        assert!(resp.output.is_ok());
+    }
+
+    #[test]
+    fn lifecycle_duplicate_load_conflicts() {
+        let reg = registry();
+        reg.load(&cfg("m1", 4), LoadOptions::default()).unwrap();
+        let err = reg.load(&cfg("m1", 4), LoadOptions::default()).unwrap_err();
+        assert!(err.to_string().contains("already loaded"), "{err}");
+    }
+
+    #[test]
+    fn lifecycle_admission_budget_rejects_overload() {
+        let reg = registry();
+        // max_batch 8 with a 10 s max_wait: the consumer won't take a
+        // batch until 8 rows queue, so submits pile up deterministically.
+        reg.load(
+            &cfg("m1", 5),
+            LoadOptions {
+                policy: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Duration::from_secs(10),
+                },
+                queue_budget: 2,
+                ..LoadOptions::default()
+            },
+        )
+        .unwrap();
+        let _rx1 = reg.submit("m1", vec![0.1; 8]).unwrap();
+        let _rx2 = reg.submit("m1", vec![0.1; 8]).unwrap();
+        let err = reg.submit("m1", vec![0.1; 8]).unwrap_err();
+        assert!(err.to_string().contains("overloaded"), "{err}");
+        let handle = reg.get("m1").unwrap();
+        assert_eq!(
+            handle
+                .engine()
+                .metrics
+                .admission_rejections
+                .load(Ordering::Relaxed),
+            1
+        );
+        // Queued requests still drain on shutdown (no response lost).
+        reg.shutdown();
+        assert!(_rx1.recv().unwrap().output.is_ok());
+        assert!(_rx2.recv().unwrap().output.is_ok());
+    }
+
+    #[test]
+    fn lifecycle_draining_model_rejects_new_submits() {
+        let reg = registry();
+        reg.load(&cfg("m1", 6), LoadOptions::default()).unwrap();
+        let handle = reg.get("m1").unwrap();
+        handle
+            .state
+            .store(ModelState::Draining as u8, Ordering::Release);
+        let err = reg.submit("m1", vec![0.1; 8]).unwrap_err();
+        assert!(err.to_string().contains("draining"), "{err}");
+    }
+
+    #[test]
+    fn lifecycle_registry_counts_hits_and_misses() {
+        let reg = registry();
+        reg.load(&cfg("m1", 7), LoadOptions::default()).unwrap();
+        assert!(reg.get("m1").is_some());
+        assert!(reg.get("nope").is_none());
+        assert!(reg.get("m1").is_some());
+        assert_eq!(reg.hit_count(), 2);
+        assert_eq!(reg.miss_count(), 1);
+    }
+
+    #[test]
+    fn lifecycle_models_share_one_planner_substrate() {
+        let reg = registry();
+        let h1 = reg.load(&cfg("m1", 8), LoadOptions::default()).unwrap();
+        let h2 = reg.load(&cfg("m2", 9), LoadOptions::default()).unwrap();
+        let p1 = h1.engine().plan_cache().unwrap().planner();
+        let p2 = h2.engine().plan_cache().unwrap().planner();
+        assert!(
+            Arc::ptr_eq(p1, p2) && Arc::ptr_eq(p1, reg.planner()),
+            "every model's plan cache must sit on the registry's planner"
+        );
+        assert!(
+            !Arc::ptr_eq(
+                h1.engine().plan_cache().unwrap(),
+                h2.engine().plan_cache().unwrap()
+            ),
+            "plan caches stay per-model"
+        );
+    }
+
+    #[test]
+    fn lifecycle_balancer_splits_budget_and_caps_idle_models() {
+        let reg = registry();
+        reg.load(&cfg("hot", 10), LoadOptions::default()).unwrap();
+        reg.load(&cfg("cold", 11), LoadOptions::default()).unwrap();
+        reg.start_balancer(Duration::from_millis(5));
+        // Drive traffic at the hot model only; the cold model's demand
+        // signal stays zero.
+        for _ in 0..30 {
+            reg.infer_blocking("hot", vec![0.2; 8], Duration::from_secs(5))
+                .unwrap()
+                .output
+                .unwrap();
+        }
+        let hot = reg.get("hot").unwrap();
+        let cold = reg.get("cold").unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            // With all demand on one model, the split hands the hot model
+            // the larger share and the idle model the floor.
+            if hot.thread_cap() > cold.thread_cap() && cold.thread_cap() == 1 {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "balancer never skewed the split: hot={} cold={}",
+                hot.thread_cap(),
+                cold.thread_cap()
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(hot.thread_cap().is_power_of_two());
+    }
+
+    #[test]
+    fn lifecycle_shutdown_is_idempotent_and_final() {
+        let reg = registry();
+        reg.load(&cfg("m1", 12), LoadOptions::default()).unwrap();
+        reg.start_balancer(Duration::from_millis(10));
+        reg.shutdown();
+        reg.shutdown(); // second call must be a no-op, not a deadlock
+        assert!(reg.submit("m1", vec![0.1; 8]).is_err());
+    }
+}

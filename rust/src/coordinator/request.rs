@@ -47,6 +47,21 @@ impl InferenceRequest {
             rx,
         )
     }
+
+    /// Consume the request, delivering `err` as its response (queue time
+    /// recorded, no compute). The rejection paths — invalid input shape,
+    /// draining model, admission overflow — all answer through here so a
+    /// refused request is never silently dropped.
+    pub fn reject(self, err: Error) {
+        let queue_us = self.enqueued.elapsed().as_micros() as u64;
+        let _ = self.resp_tx.send(InferenceResponse {
+            id: self.id,
+            output: Err(err),
+            queue_us,
+            compute_us: 0,
+            batch_size: 0,
+        });
+    }
 }
 
 #[cfg(test)]
@@ -70,5 +85,15 @@ mod tests {
         assert_eq!(resp.id, 7);
         assert_eq!(resp.output.unwrap(), vec![3.0]);
         assert_eq!(resp.batch_size, 4);
+    }
+
+    #[test]
+    fn reject_delivers_error_response() {
+        let (req, rx) = InferenceRequest::new(8, "m", vec![1.0]);
+        req.reject(Error::Serve("nope".into()));
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.id, 8);
+        assert!(resp.output.unwrap_err().to_string().contains("nope"));
+        assert_eq!(resp.batch_size, 0);
     }
 }

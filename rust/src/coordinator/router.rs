@@ -1,11 +1,19 @@
-//! Router: maps model names to engines and owns each model's batcher +
-//! batch-loop thread. This is the coordinator's composition root.
+//! Router: the thin routing front door over the model fleet.
+//!
+//! The model set itself — lifecycle states, admission budgets, the shared
+//! planner/tuning/thread-pool substrate, batch loops and autoscale ticks —
+//! lives in [`ModelRegistry`] (`coordinator/registry.rs`). The router is
+//! the stable, convenient facade the CLI, benches and tests program
+//! against: register/submit/shutdown with the same signatures the
+//! single-model coordinator had, now delegating to a registry that can
+//! also load and unload models at runtime (the HTTP server talks to the
+//! registry directly for `/load_model` and `/unload`).
 //!
 //! Registration comes in two flavours: [`Router::register`] with a fixed
 //! [`BatchPolicy`], and [`Router::register_autoscaled`], where a
-//! [`LoadController`] re-sizes the live `max_batch` and the model's
-//! plan-cache thread ceiling from observed queue depth, arrival rate and
-//! compute latency — on two triggers:
+//! [`crate::coordinator::load::LoadController`] re-sizes the live
+//! `max_batch` and the model's plan-cache thread ceiling from observed
+//! queue depth, arrival rate and compute latency — on two triggers:
 //!
 //! - every `adjust_every_batches` **executed batches** (the batch loop,
 //!   applied immediately: real traffic is already steering), and
@@ -16,52 +24,19 @@
 //!   the timer decays them once the arrival-rate EWMA's silence folding
 //!   drags the advice back down.
 
-use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher, SubmitError};
+use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::engine::Engine;
-use crate::coordinator::load::{
-    pow2_floor, Advice, AdviceHysteresis, LoadControlConfig, LoadController,
-};
-use crate::coordinator::request::{InferenceRequest, InferenceResponse};
-use std::collections::BTreeMap;
-use std::sync::atomic::Ordering;
+use crate::coordinator::load::LoadControlConfig;
+use crate::coordinator::registry::{LoadOptions, ModelRegistry};
+use crate::coordinator::request::InferenceResponse;
+use crate::plan::Planner;
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::thread::JoinHandle;
 use std::time::Duration;
 
-struct ModelEntry {
-    engine: Arc<Engine>,
-    batcher: Arc<DynamicBatcher>,
-    loop_handle: Option<JoinHandle<()>>,
-    /// Dropping this stops the autoscale tick thread (its `recv_timeout`
-    /// sees the disconnect).
-    tick_stop: Option<mpsc::Sender<()>>,
-    tick_handle: Option<JoinHandle<()>>,
-}
-
-/// Apply one piece of controller advice to a model's live knobs and
-/// gauges (shared by the batch-loop and timer-tick triggers).
-fn apply_advice(batcher: &DynamicBatcher, engine: &Engine, advice: Advice) {
-    batcher.set_max_batch(advice.max_batch);
-    engine.set_threads(advice.threads);
-    engine
-        .metrics
-        .max_batch_in_use
-        .store(advice.max_batch as u64, Ordering::Relaxed);
-    engine
-        .metrics
-        .threads_in_use
-        .store(advice.threads as u64, Ordering::Relaxed);
-    engine
-        .metrics
-        .autoscale_adjustments
-        .fetch_add(1, Ordering::Relaxed);
-}
-
-/// Multi-model router with per-model dynamic batching loops.
+/// Thin multi-model front door delegating to a [`ModelRegistry`].
 pub struct Router {
-    models: BTreeMap<String, ModelEntry>,
-    next_id: std::sync::atomic::AtomicU64,
+    registry: Arc<ModelRegistry>,
 }
 
 impl Default for Router {
@@ -71,16 +46,41 @@ impl Default for Router {
 }
 
 impl Router {
+    /// Router over a fresh registry (and thus a fresh shared planner).
+    /// Engines registered here should have been built against
+    /// [`Router::registry`]'s planner to share the substrate; engines
+    /// carrying their own planner still work but tune in isolation.
     pub fn new() -> Router {
-        Router {
-            models: BTreeMap::new(),
-            next_id: std::sync::atomic::AtomicU64::new(1),
-        }
+        Router::with_registry(Arc::new(ModelRegistry::new(Arc::new(Planner::new()))))
+    }
+
+    /// Router over an existing registry (the CLI builds the registry
+    /// first so engines and the HTTP server share its planner).
+    pub fn with_registry(registry: Arc<ModelRegistry>) -> Router {
+        Router { registry }
+    }
+
+    /// The registry behind the front door (lifecycle endpoints, fleet
+    /// status, balancer control).
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
     }
 
     /// Register an engine and start its batch loop with a fixed policy.
+    ///
+    /// Panics if the name is already loaded — startup-time registration
+    /// of a duplicate name is a configuration bug, unlike the runtime
+    /// `/load_model` path which reports the conflict over HTTP.
     pub fn register(&mut self, engine: Engine, policy: BatchPolicy) {
-        self.register_inner(engine, policy, None);
+        self.registry
+            .load_engine(
+                engine,
+                LoadOptions {
+                    policy,
+                    ..LoadOptions::default()
+                },
+            )
+            .expect("register model");
     }
 
     /// Register an engine whose batch ceiling and thread fan-out track
@@ -95,137 +95,24 @@ impl Router {
         policy: BatchPolicy,
         control: LoadControlConfig,
     ) {
-        self.register_inner(engine, policy, Some(Arc::new(LoadController::new(control))));
-    }
-
-    fn register_inner(
-        &mut self,
-        engine: Engine,
-        policy: BatchPolicy,
-        controller: Option<Arc<LoadController>>,
-    ) {
-        let name = engine.name.clone();
-        let engine = Arc::new(engine);
-        let batcher = Arc::new(
-            DynamicBatcher::new(policy).with_metrics(Arc::clone(&engine.metrics)),
-        );
-        engine
-            .metrics
-            .max_batch_in_use
-            .store(policy.max_batch as u64, Ordering::Relaxed);
-        let mut initial_threads = engine.plan_cache().map(|c| c.threads()).unwrap_or(1);
-        // Controller advice only ever lands on powers of two ≤ its
-        // `max_threads`, and the warm steps cover exactly those — an
-        // autoscaled model whose config seeded a ceiling outside that set
-        // (e.g. "threads": 6, or 8 with --max-threads 4) would otherwise
-        // build unwarmed plans that become dead weight on the first
-        // advice. Fixed-policy models keep the config value untouched
-        // (the documented escape hatch).
-        if let Some(ctl) = &controller {
-            let clamped = pow2_floor(initial_threads.min(ctl.cfg().max_threads));
-            if clamped != initial_threads {
-                engine.set_threads(clamped);
-                initial_threads = clamped;
-            }
-        }
-        engine
-            .metrics
-            .threads_in_use
-            .store(initial_threads as u64, Ordering::Relaxed);
-        // Both advise triggers (batch-count and timer tick) serialize on
-        // this lock, and each computes its advice from the metrics
-        // *inside* the critical section — so a tick that read pre-burst
-        // signals can never stomp the batch loop's fresh scale-up, and
-        // the gauge pair is never observed torn between two advices.
-        let advise_lock = Arc::new(std::sync::Mutex::new(()));
-        let loop_engine = Arc::clone(&engine);
-        let loop_batcher = Arc::clone(&batcher);
-        let loop_controller = controller.clone();
-        let loop_advise_lock = Arc::clone(&advise_lock);
-        let handle = std::thread::Builder::new()
-            .name(format!("stgemm-batch-{name}"))
-            .spawn(move || {
-                let mut executed: u64 = 0;
-                while let Some(batch) = loop_batcher.next_batch() {
-                    loop_engine.run_batch(batch);
-                    executed += 1;
-                    if let Some(ctl) = &loop_controller {
-                        if executed % ctl.cfg().adjust_every_batches == 0 {
-                            let _guard = loop_advise_lock
-                                .lock()
-                                .unwrap_or_else(|e| e.into_inner());
-                            let advice = ctl.advise_from(&loop_engine.metrics);
-                            apply_advice(&loop_batcher, &loop_engine, advice);
-                        }
-                    }
-                }
-            })
-            .expect("spawn batch loop");
-        // Timer-driven advise tick: without it an idle model never
-        // re-advises (advice otherwise fires per executed batch), so
-        // threads/batch targets could never decay back after a burst.
-        let (tick_stop, tick_handle) = match &controller {
-            Some(ctl) => {
-                let (stop_tx, stop_rx) = mpsc::channel::<()>();
-                let ctl = Arc::clone(ctl);
-                let tick_engine = Arc::clone(&engine);
-                let tick_batcher = Arc::clone(&batcher);
-                let tick_advise_lock = Arc::clone(&advise_lock);
-                let handle = std::thread::Builder::new()
-                    .name(format!("stgemm-tick-{name}"))
-                    .spawn(move || {
-                        let mut hysteresis = AdviceHysteresis::default();
-                        loop {
-                            match stop_rx.recv_timeout(ctl.cfg().tick) {
-                                Err(mpsc::RecvTimeoutError::Timeout) => {
-                                    let _guard = tick_advise_lock
-                                        .lock()
-                                        .unwrap_or_else(|e| e.into_inner());
-                                    let advice = ctl.advise_from(&tick_engine.metrics);
-                                    let current = Advice {
-                                        max_batch: tick_engine
-                                            .metrics
-                                            .max_batch_in_use
-                                            .load(Ordering::Relaxed)
-                                            as usize,
-                                        threads: tick_engine
-                                            .metrics
-                                            .threads_in_use
-                                            .load(Ordering::Relaxed)
-                                            as usize,
-                                    };
-                                    if let Some(a) = hysteresis.observe(advice, current) {
-                                        apply_advice(&tick_batcher, &tick_engine, a);
-                                    }
-                                }
-                                // Sender dropped (shutdown) or explicit stop.
-                                _ => break,
-                            }
-                        }
-                    })
-                    .expect("spawn autoscale tick");
-                (Some(stop_tx), Some(handle))
-            }
-            None => (None, None),
-        };
-        self.models.insert(
-            name,
-            ModelEntry {
+        self.registry
+            .load_engine(
                 engine,
-                batcher,
-                loop_handle: Some(handle),
-                tick_stop,
-                tick_handle,
-            },
-        );
+                LoadOptions {
+                    policy,
+                    control: Some(control),
+                    ..LoadOptions::default()
+                },
+            )
+            .expect("register model");
     }
 
-    pub fn model_names(&self) -> Vec<&str> {
-        self.models.keys().map(|s| s.as_str()).collect()
+    pub fn model_names(&self) -> Vec<String> {
+        self.registry.names()
     }
 
-    pub fn engine(&self, model: &str) -> Option<&Arc<Engine>> {
-        self.models.get(model).map(|e| &e.engine)
+    pub fn engine(&self, model: &str) -> Option<Arc<Engine>> {
+        self.registry.get(model).map(|h| Arc::clone(h.engine()))
     }
 
     /// Submit an input row; returns the response receiver.
@@ -234,31 +121,7 @@ impl Router {
         model: &str,
         input: Vec<f32>,
     ) -> crate::Result<mpsc::Receiver<InferenceResponse>> {
-        let entry = self
-            .models
-            .get(model)
-            .ok_or_else(|| crate::Error::Serve(format!("unknown model '{model}'")))?;
-        let id = self
-            .next_id
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        entry
-            .engine
-            .metrics
-            .requests
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let (req, rx) = InferenceRequest::new(id, model, input);
-        entry.batcher.submit(req).map_err(|e| {
-            entry
-                .engine
-                .metrics
-                .errors
-                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            crate::Error::Serve(match e {
-                SubmitError::Closed(_) => "model is shutting down".to_string(),
-                SubmitError::EmptyInput(_) => "empty input".to_string(),
-            })
-        })?;
-        Ok(rx)
+        self.registry.submit(model, input)
     }
 
     /// Submit and block for the response (with timeout).
@@ -268,27 +131,14 @@ impl Router {
         input: Vec<f32>,
         timeout: Duration,
     ) -> crate::Result<InferenceResponse> {
-        let rx = self.submit(model, input)?;
-        rx.recv_timeout(timeout)
-            .map_err(|e| crate::Error::Serve(format!("inference timed out/disconnected: {e}")))
+        self.registry.infer_blocking(model, input, timeout)
     }
 
-    /// Stop all batch loops (draining queues first) and autoscale ticks.
+    /// Stop all batch loops (draining queues first) and autoscale ticks —
+    /// ticks are stopped and joined *before* any batch loop is joined
+    /// (see [`ModelRegistry::shutdown`]).
     pub fn shutdown(&mut self) {
-        for entry in self.models.values_mut() {
-            entry.batcher.close();
-            // Dropping the sender disconnects the tick thread's
-            // `recv_timeout` so it exits without waiting out a tick.
-            entry.tick_stop.take();
-        }
-        for entry in self.models.values_mut() {
-            if let Some(h) = entry.loop_handle.take() {
-                let _ = h.join();
-            }
-            if let Some(h) = entry.tick_handle.take() {
-                let _ = h.join();
-            }
-        }
+        self.registry.shutdown();
     }
 }
 
@@ -301,8 +151,10 @@ impl Drop for Router {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::load::LoadControlConfig;
     use crate::model::{ModelConfig, TernaryMlp};
     use crate::plan::Planner;
+    use std::sync::atomic::Ordering;
 
     fn router() -> Router {
         let cfg = ModelConfig::from_json(
@@ -340,7 +192,7 @@ mod tests {
     fn empty_input_rejected_before_batching() {
         let r = router();
         let err = r.submit("m1", vec![]).unwrap_err();
-        assert!(err.contains("empty input"), "{err}");
+        assert!(err.to_string().contains("empty input"), "{err}");
         let e = r.engine("m1").unwrap();
         assert_eq!(
             e.metrics.errors.load(std::sync::atomic::Ordering::Relaxed),
@@ -380,9 +232,8 @@ mod tests {
             r#"{"name":"a1","dims":[8,16,4],"sparsity":0.5,"seed":2}"#,
         )
         .unwrap();
-        let engine =
-            Engine::from_config(&cfg, &Arc::new(Planner::new())).unwrap();
         let mut r = Router::new();
+        let engine = Engine::from_config(&cfg, r.registry().planner()).unwrap();
         r.register_autoscaled(
             engine,
             BatchPolicy {

@@ -1,18 +1,36 @@
 //! HTTP/1.1 inference server (hand-rolled on std::net — no tokio offline).
 //!
 //! Endpoints:
-//! - `POST /infer`   body `{"model": "...", "input": [f32...]}` →
+//! - `POST /infer`      body `{"model": "...", "input": [f32...]}` →
 //!   `{"id": n, "output": [...], "queue_us": n, "compute_us": n,
-//!     "batch_size": n}`
-//! - `GET  /metrics` per-model metrics snapshot
-//! - `GET  /healthz` liveness
+//!     "batch_size": n}`; 429 when the model's admission budget is
+//!   exhausted, 503 for unknown/draining models.
+//! - `POST /load_model` body `{"config": {...}}` (inline model config) or
+//!   `{"path": "model.json"}`, optional `max_batch`, `max_wait_us`,
+//!   `queue_budget`, `autoscale` (default true), `warm` (default false) →
+//!   `{"model": "...", "state": "..."}`; 409 when the name is taken.
+//! - `POST /unload`     body `{"model": "..."}` — drains in-flight
+//!   batches (none dropped), joins the batch loop, releases plan/arena
+//!   memory → `{"model": "...", "unloaded": true}`; 404 for unknown names.
+//! - `GET  /status`     per-model lifecycle state + queue/latency gauges,
+//!   plus fleet-level rows (thread budget, shared-pool size, tuned
+//!   classes, registry hit/miss).
+//! - `GET  /metrics`    `{"models": [{model, state, metrics}...],
+//!   "fleet": {...}}` — full per-model metrics snapshots.
+//! - `GET  /healthz`    liveness
 //!
 //! Connections are handled by a worker pool; each request blocks its
 //! worker while the dynamic batcher assembles and the engine executes —
 //! the thread-per-request model every pre-async HTTP stack used, sized by
-//! the pool.
+//! the pool. Lifecycle endpoints go straight to the router's
+//! [`ModelRegistry`]; `/infer` uses the same submit path the in-process
+//! callers do.
 
+use crate::coordinator::registry::{LoadOptions, ModelRegistry};
 use crate::coordinator::router::Router;
+use crate::coordinator::BatchPolicy;
+use crate::coordinator::LoadControlConfig;
+use crate::model::ModelConfig;
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -143,19 +161,217 @@ fn handle_connection(
 
     match (method.as_str(), path.as_str()) {
         ("POST", "/infer") => handle_infer(&mut stream, router, &body, timeout),
+        ("POST", "/load_model") => handle_load_model(&mut stream, router.registry(), &body),
+        ("POST", "/unload") => handle_unload(&mut stream, router.registry(), &body),
+        ("GET", "/status") => {
+            respond(&mut stream, 200, &status_json(router.registry()).encode())
+        }
         ("GET", "/metrics") => {
-            let mut metrics = Vec::new();
-            for name in router.model_names() {
-                let engine = router.engine(name).unwrap();
-                metrics.push(Json::obj(vec![
-                    ("model", Json::str(name)),
-                    ("metrics", engine.metrics.snapshot()),
-                ]));
-            }
-            respond(&mut stream, 200, &Json::arr(metrics).encode())
+            let registry = router.registry();
+            let models = registry
+                .handles()
+                .into_iter()
+                .map(|(name, h)| {
+                    Json::obj(vec![
+                        ("model", Json::str(name)),
+                        ("state", Json::str(h.state().as_str())),
+                        ("metrics", h.engine().metrics.snapshot()),
+                    ])
+                })
+                .collect::<Vec<_>>();
+            let body = Json::obj(vec![
+                ("models", Json::arr(models)),
+                ("fleet", fleet_json(registry)),
+            ]);
+            respond(&mut stream, 200, &body.encode())
         }
         ("GET", "/healthz") => respond(&mut stream, 200, r#"{"status":"ok"}"#),
         _ => respond(&mut stream, 404, &err_json("not found")),
+    }
+}
+
+/// Fleet-level gauges: the shared-substrate view (`/metrics` and
+/// `/status` both carry it).
+fn fleet_json(registry: &ModelRegistry) -> Json {
+    let planner = registry.planner();
+    Json::obj(vec![
+        ("models_loaded", Json::num(registry.names().len() as f64)),
+        ("thread_budget", Json::num(registry.thread_budget() as f64)),
+        (
+            // Null until the first parallel plan lazily creates the pool.
+            "shared_pool_threads",
+            planner
+                .shared_pool_threads()
+                .map(|n| Json::num(n as f64))
+                .unwrap_or(Json::Null),
+        ),
+        (
+            "tuned_classes",
+            Json::num(planner.tuned_classes() as f64),
+        ),
+        ("registry_hits", Json::num(registry.hit_count() as f64)),
+        ("registry_misses", Json::num(registry.miss_count() as f64)),
+    ])
+}
+
+/// The `/status` body: one compact row per model + the fleet gauges.
+fn status_json(registry: &ModelRegistry) -> Json {
+    let models = registry
+        .handles()
+        .into_iter()
+        .map(|(name, h)| {
+            let m = &h.engine().metrics;
+            Json::obj(vec![
+                ("model", Json::str(name)),
+                ("state", Json::str(h.state().as_str())),
+                ("queue_depth", Json::num(h.queue_depth() as f64)),
+                (
+                    "queue_budget",
+                    Json::num(h.admission().budget() as f64),
+                ),
+                ("thread_cap", Json::num(h.thread_cap() as f64)),
+                (
+                    "threads",
+                    Json::num(m.threads_in_use.load(Ordering::Relaxed) as f64),
+                ),
+                (
+                    "max_batch",
+                    Json::num(m.max_batch_in_use.load(Ordering::Relaxed) as f64),
+                ),
+                (
+                    "requests",
+                    Json::num(m.requests.load(Ordering::Relaxed) as f64),
+                ),
+                (
+                    "responses",
+                    Json::num(m.responses.load(Ordering::Relaxed) as f64),
+                ),
+                (
+                    "admission_rejections",
+                    Json::num(m.admission_rejections.load(Ordering::Relaxed) as f64),
+                ),
+                (
+                    "latency_us",
+                    Json::obj(vec![
+                        ("p50", Json::num(m.e2e_latency.percentile_us(50.0) as f64)),
+                        ("p99", Json::num(m.e2e_latency.percentile_us(99.0) as f64)),
+                    ]),
+                ),
+                (
+                    "plans_built",
+                    Json::num(
+                        h.engine()
+                            .plan_cache()
+                            .map(|c| c.plans_built() as f64)
+                            .unwrap_or(0.0),
+                    ),
+                ),
+            ])
+        })
+        .collect::<Vec<_>>();
+    Json::obj(vec![
+        ("models", Json::arr(models)),
+        ("fleet", fleet_json(registry)),
+    ])
+}
+
+/// `POST /load_model`: build a model from an inline `"config"` object or
+/// a `"path"` to a config file, then load it into the registry.
+fn handle_load_model(
+    stream: &mut TcpStream,
+    registry: &ModelRegistry,
+    body: &str,
+) -> std::io::Result<()> {
+    let parsed = match Json::parse(body) {
+        Ok(v) => v,
+        Err(e) => return respond(stream, 400, &err_json(&format!("bad json: {e}"))),
+    };
+    let cfg_text = if let Some(inline) = parsed.get("config") {
+        inline.encode()
+    } else if let Some(path) = parsed.get("path").and_then(|p| p.as_str()) {
+        match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                return respond(
+                    stream,
+                    400,
+                    &err_json(&format!("cannot read config '{path}': {e}")),
+                )
+            }
+        }
+    } else {
+        return respond(stream, 400, &err_json("need 'config' object or 'path'"));
+    };
+    let cfg = match ModelConfig::from_json(&cfg_text) {
+        Ok(c) => c,
+        Err(e) => return respond(stream, 400, &err_json(&e.to_string())),
+    };
+    let mut policy = BatchPolicy::default();
+    if let Some(mb) = parsed.get("max_batch").and_then(|v| v.as_usize()) {
+        policy.max_batch = mb.max(1);
+    }
+    if let Some(us) = parsed.get("max_wait_us").and_then(|v| v.as_usize()) {
+        policy.max_wait = Duration::from_micros(us as u64);
+    }
+    let autoscale = parsed
+        .get("autoscale")
+        .and_then(|v| v.as_bool())
+        .unwrap_or(true);
+    let opts = LoadOptions {
+        policy,
+        control: autoscale.then(LoadControlConfig::default).map(|mut c| {
+            c.max_batch = c.max_batch.max(policy.max_batch);
+            c
+        }),
+        queue_budget: parsed
+            .get("queue_budget")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(0),
+        warm: parsed
+            .get("warm")
+            .and_then(|v| v.as_bool())
+            .unwrap_or(false),
+        ..LoadOptions::default()
+    };
+    match registry.load(&cfg, opts) {
+        Ok(handle) => {
+            let body = Json::obj(vec![
+                ("model", Json::str(&cfg.name)),
+                ("state", Json::str(handle.state().as_str())),
+            ]);
+            respond(stream, 200, &body.encode())
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            let status = if msg.contains("already loaded") { 409 } else { 400 };
+            respond(stream, status, &err_json(&msg))
+        }
+    }
+}
+
+/// `POST /unload`: drain + remove + release a model.
+fn handle_unload(
+    stream: &mut TcpStream,
+    registry: &ModelRegistry,
+    body: &str,
+) -> std::io::Result<()> {
+    let parsed = match Json::parse(body) {
+        Ok(v) => v,
+        Err(e) => return respond(stream, 400, &err_json(&format!("bad json: {e}"))),
+    };
+    let model = match parsed.get("model").and_then(|m| m.as_str()) {
+        Some(m) => m.to_string(),
+        None => return respond(stream, 400, &err_json("missing 'model'")),
+    };
+    match registry.unload(&model) {
+        Ok(()) => {
+            let body = Json::obj(vec![
+                ("model", Json::str(&model)),
+                ("unloaded", Json::Bool(true)),
+            ]);
+            respond(stream, 200, &body.encode())
+        }
+        Err(e) => respond(stream, 404, &err_json(&e.to_string())),
     }
 }
 
@@ -210,7 +426,13 @@ fn handle_infer(
             }
             Err(e) => respond(stream, 422, &err_json(&e.to_string())),
         },
-        Err(e) => respond(stream, 503, &err_json(&e.to_string())),
+        Err(e) => {
+            let msg = e.to_string();
+            // Admission-budget rejection is backpressure, not outage:
+            // tell the client to retry later, not that we're down.
+            let status = if msg.contains("overloaded") { 429 } else { 503 };
+            respond(stream, status, &err_json(&msg))
+        }
     }
 }
 
@@ -223,8 +445,10 @@ fn respond(stream: &mut TcpStream, status: u16, body: &str) -> std::io::Result<(
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        409 => "Conflict",
         413 => "Payload Too Large",
         422 => "Unprocessable Entity",
+        429 => "Too Many Requests",
         503 => "Service Unavailable",
         _ => "Error",
     };
@@ -359,6 +583,129 @@ mod tests {
             400
         );
         assert_eq!(http_request(&a, "GET", "/nope", "").unwrap().0, 404);
+    }
+
+    #[test]
+    fn lifecycle_roundtrip_over_http() {
+        let (server, _router) = start_server();
+        let a = server.local_addr;
+
+        // Load a second model with an inline config.
+        let load_body = r#"{"config":{"name":"m2","dims":[8,16,4],"sparsity":0.5,"seed":9},"autoscale":false}"#;
+        let (status, resp) = http_request(&a, "POST", "/load_model", load_body).unwrap();
+        assert_eq!(status, 200, "{resp}");
+        let v = Json::parse(&resp).unwrap();
+        assert_eq!(v.get("model").unwrap().as_str(), Some("m2"));
+        assert_eq!(v.get("state").unwrap().as_str(), Some("cold"));
+
+        // Loading the same name again conflicts.
+        let (status, _) = http_request(&a, "POST", "/load_model", load_body).unwrap();
+        assert_eq!(status, 409);
+
+        // /status sees both models with lifecycle state.
+        let (status, resp) = http_request(&a, "GET", "/status", "").unwrap();
+        assert_eq!(status, 200);
+        let v = Json::parse(&resp).unwrap();
+        let models = v.get("models").unwrap().as_arr().unwrap();
+        assert_eq!(models.len(), 2);
+        assert!(v.get("fleet").unwrap().get("thread_budget").is_some());
+
+        // The freshly loaded model serves.
+        let infer = format!(r#"{{"model":"m2","input":[{}]}}"#, vec!["0.5"; 8].join(","));
+        let (status, _) = http_request(&a, "POST", "/infer", &infer).unwrap();
+        assert_eq!(status, 200);
+
+        // Unload it; further traffic to it fails, m1 is untouched.
+        let (status, resp) =
+            http_request(&a, "POST", "/unload", r#"{"model":"m2"}"#).unwrap();
+        assert_eq!(status, 200, "{resp}");
+        let (status, _) = http_request(&a, "POST", "/infer", &infer).unwrap();
+        assert_eq!(status, 503);
+        let m1 = format!(r#"{{"model":"m1","input":[{}]}}"#, vec!["0.5"; 8].join(","));
+        assert_eq!(http_request(&a, "POST", "/infer", &m1).unwrap().0, 200);
+
+        // Unknown unload → 404; the name is re-loadable after unload.
+        let (status, _) =
+            http_request(&a, "POST", "/unload", r#"{"model":"m2"}"#).unwrap();
+        assert_eq!(status, 404);
+        let (status, _) = http_request(&a, "POST", "/load_model", load_body).unwrap();
+        assert_eq!(status, 200);
+    }
+
+    #[test]
+    fn admission_budget_returns_429_over_http() {
+        let (server, _router) = start_server();
+        let a = server.local_addr;
+        // max_batch 8 with a 10 s wait parks the batch loop until the
+        // queue fills; budget 1 admits exactly one request.
+        let load_body = r#"{"config":{"name":"tight","dims":[8,16,4],"sparsity":0.5,"seed":11},"autoscale":false,"max_batch":8,"max_wait_us":10000000,"queue_budget":1}"#;
+        let (status, resp) = http_request(&a, "POST", "/load_model", load_body).unwrap();
+        assert_eq!(status, 200, "{resp}");
+        let infer =
+            format!(r#"{{"model":"tight","input":[{}]}}"#, vec!["0.5"; 8].join(","));
+        // First request occupies the only queue slot (blocks on its
+        // worker until the unload below flushes the partial batch).
+        let first = {
+            let infer = infer.clone();
+            std::thread::spawn(move || http_request(&a, "POST", "/infer", &infer).unwrap())
+        };
+        // Wait until it is actually queued before probing the budget.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            let (_, resp) = http_request(&a, "GET", "/status", "").unwrap();
+            let v = Json::parse(&resp).unwrap();
+            let queued = v
+                .get("models")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .any(|m| {
+                    m.get("model").unwrap().as_str() == Some("tight")
+                        && m.get("queue_depth").unwrap().as_f64() == Some(1.0)
+                });
+            if queued {
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "request never queued");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let (status, resp) = http_request(&a, "POST", "/infer", &infer).unwrap();
+        assert_eq!(status, 429, "{resp}");
+        // Unloading drains the queued request — it gets a real response,
+        // not an error, and the rejection is counted.
+        let (status, _) =
+            http_request(&a, "POST", "/unload", r#"{"model":"tight"}"#).unwrap();
+        assert_eq!(status, 200);
+        let (status, resp) = first.join().unwrap();
+        assert_eq!(status, 200, "queued request must drain on unload: {resp}");
+    }
+
+    #[test]
+    fn metrics_carries_fleet_rows() {
+        let (server, _router) = start_server();
+        let (status, body) = http_request(&server.local_addr, "GET", "/metrics", "").unwrap();
+        assert_eq!(status, 200);
+        let v = Json::parse(&body).unwrap();
+        let models = v.get("models").unwrap().as_arr().unwrap();
+        assert_eq!(models.len(), 1);
+        assert!(models[0].get("state").is_some());
+        assert!(models[0]
+            .get("metrics")
+            .unwrap()
+            .get("admission_rejections")
+            .is_some());
+        let fleet = v.get("fleet").unwrap();
+        for key in [
+            "models_loaded",
+            "thread_budget",
+            "shared_pool_threads",
+            "tuned_classes",
+            "registry_hits",
+            "registry_misses",
+        ] {
+            assert!(fleet.get(key).is_some(), "missing fleet row {key}");
+        }
     }
 
     #[test]

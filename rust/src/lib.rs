@@ -111,16 +111,31 @@
 //!   overrides, not requirements.
 //! - [`runtime`] — PJRT client wrapper that loads the JAX/Pallas AOT
 //!   artifacts (HLO text) produced by `python/compile/aot.py`.
-//! - [`coordinator`] — the L3 serving stack: dynamic batcher, backend
-//!   router, inference engine (serving batches through cached plans), HTTP
-//!   server, metrics and load generator. The stack is **load-aware**: the
-//!   batcher reports queue depth and an arrival-rate EWMA into
-//!   [`coordinator::Metrics`], and an autoscaled model
-//!   ([`coordinator::Router::register_autoscaled`]) re-sizes the live
-//!   `max_batch` and the plan cache's thread ceiling from those signals
-//!   ([`coordinator::LoadController`]; thread advice snaps to powers of
-//!   two ≤ the ceiling) — both per executed batch and on a timer tick
-//!   with hysteresis, so an idle model's targets decay after a burst.
+//! - [`coordinator`] — the L3 serving stack: a dynamic multi-model fleet
+//!   registry ([`coordinator::ModelRegistry`]) mapping model names to
+//!   [`coordinator::ModelHandle`]s with an explicit lifecycle
+//!   (`Cold → Warming → Hot → Draining`), fronted by a thin
+//!   [`coordinator::Router`] and the HTTP server. Every model shares one
+//!   [`plan::Planner`] (hence one [`autotune::TuningTable`] and one
+//!   [`util::threadpool::ThreadPool`]) while owning a private
+//!   [`plan::PlanCache`], so tuning learned by one model serves all and
+//!   per-model outputs stay bitwise identical to a single-model engine.
+//!   Per-model [`coordinator::AdmissionController`]s reject submits
+//!   429-style once a queue budget is hit, and a fleet balancer re-splits
+//!   the shared thread budget by observed demand
+//!   (arrival-rate EWMA × compute EWMA) so a hot model cannot starve its
+//!   neighbours. Models load, warm, drain and unload at runtime over HTTP
+//!   (`POST /load_model`, `POST /unload`, `GET /status`) with no dropped
+//!   in-flight requests: unload stops the autoscale tick, closes the
+//!   batcher (flushing queued work), joins the batch loop, then releases
+//!   the model's plans and activation arena. The stack stays
+//!   **load-aware**: the batcher reports queue depth and an arrival-rate
+//!   EWMA into [`coordinator::Metrics`], and an autoscaled model re-sizes
+//!   the live `max_batch` and the plan cache's thread ceiling from those
+//!   signals ([`coordinator::LoadController`]; thread advice snaps to
+//!   powers of two ≤ the ceiling) — both per executed batch and on a
+//!   timer tick with hysteresis, so an idle model's targets decay after a
+//!   burst.
 //! - [`bench`] — the measurement harness (timing the planned path) and
 //!   per-figure experiment drivers.
 //! - [`util`] — substrates built in-repo because the environment is offline:

@@ -25,7 +25,8 @@ use stgemm::bench::harness::BenchScale;
 use stgemm::bench::report::{write_csv, Table};
 use stgemm::coordinator::server::{Server, ServerConfig};
 use stgemm::coordinator::{
-    Backend, BatchPolicy, Engine, LoadControlConfig, LoadGenerator, Router,
+    Backend, BatchPolicy, Engine, LoadControlConfig, LoadGenerator, LoadOptions,
+    ModelRegistry, Router,
 };
 use stgemm::model::{ModelConfig, TernaryMlp};
 use stgemm::perf::timer::CycleTimer;
@@ -71,15 +72,21 @@ fn print_usage() {
 USAGE: stgemm <subcommand> [options]
 
   serve      --model <cfg.json> --addr 127.0.0.1:9000 --backend native|xla
+             [--models <dir|cfg.json,cfg.json,…>] [--queue-budget N]
              [--tuning <table.json>] [--threads N] [--artifacts <dir>]
              [--max-batch 8] [--max-wait-us 2000] [--no-pipeline]
              [--no-autoscale] [--max-batch-cap 64] [--max-threads N]
              [--target-queue-us 2000] [--retune-secs N]
              (load-aware by default: max_batch and threads track observed
-              queue depth / arrival rate; --retune-secs re-sweeps the
-              tuning table in the background every N seconds; multi-layer
-              forwards are wavefront-pipelined unless --no-pipeline
-              restores the per-layer barrier path)
+              queue depth / arrival rate; --models serves a fleet through
+              the model registry — a directory is scanned for *.json
+              configs — with the shared thread budget re-split by demand;
+              --queue-budget rejects submits 429-style past N queued
+              requests per model; models can also be loaded/unloaded at
+              runtime via POST /load_model and /unload; --retune-secs
+              re-sweeps the tuning table in the background every N
+              seconds; multi-layer forwards are wavefront-pipelined unless
+              --no-pipeline restores the per-layer barrier path)
   bench      --figure fig2|fig6|fig8|fig9|fig10|fig11|headline|
                       ablation_compressed|ablation_inverted|all [--csv]
   autotune   [--m 32] [--k 4096] [--n 1024] [--sparsity 0.25]
@@ -108,25 +115,80 @@ USAGE: stgemm <subcommand> [options]
     );
 }
 
+/// Resolve a `--models` spec — a directory of `*.json` configs or a
+/// comma-separated path list — to config file paths.
+fn model_config_paths(spec: &str) -> Result<Vec<String>> {
+    let p = std::path::Path::new(spec);
+    if p.is_dir() {
+        let mut paths: Vec<String> = std::fs::read_dir(p)
+            .map_err(|e| Error::io(format!("read dir {spec}"), e))?
+            .filter_map(|entry| entry.ok())
+            .map(|entry| entry.path())
+            .filter(|path| path.extension().is_some_and(|x| x == "json"))
+            .map(|path| path.to_string_lossy().into_owned())
+            .collect();
+        paths.sort();
+        Ok(paths)
+    } else {
+        Ok(spec
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect())
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<i32> {
-    let mut cfg = match args.get("model") {
-        Some(path) => ModelConfig::from_file(path)?,
-        None => {
-            eprintln!("[serve] no --model given; serving the default demo config");
-            ModelConfig::default()
+    // Model set: `--models <dir|comma-list>` serves a fleet through the
+    // registry; `--model` keeps the single-model path (the only one XLA
+    // artifacts can attach to). Either way, more models can be loaded and
+    // unloaded at runtime via POST /load_model and /unload.
+    let mut configs: Vec<ModelConfig> = Vec::new();
+    if let Some(spec) = args.get("models") {
+        for path in model_config_paths(spec)? {
+            configs.push(ModelConfig::from_file(&path)?);
         }
-    };
-    cfg.threads = args.usize("threads", cfg.threads).max(1);
-    // Wavefront pipelining is the default for multi-layer models;
-    // --no-pipeline restores the per-layer barrier path (escape hatch for
-    // debugging and A/B measurement — outputs are bitwise identical).
-    if args.has("no-pipeline") {
-        cfg.pipeline = false;
+        if configs.is_empty() {
+            return Err(Error::Config(format!("--models '{spec}' names no configs")));
+        }
+    } else {
+        configs.push(match args.get("model") {
+            Some(path) => ModelConfig::from_file(path)?,
+            None => {
+                eprintln!("[serve] no --model given; serving the default demo config");
+                ModelConfig::default()
+            }
+        });
+    }
+    for cfg in &mut configs {
+        cfg.threads = args.usize("threads", cfg.threads).max(1);
+        // Wavefront pipelining is the default for multi-layer models;
+        // --no-pipeline restores the per-layer barrier path (escape hatch
+        // for debugging and A/B measurement — outputs are bitwise
+        // identical).
+        if args.has("no-pipeline") {
+            cfg.pipeline = false;
+        }
+    }
+    {
+        let mut names: Vec<&str> = configs.iter().map(|c| c.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != configs.len() {
+            return Err(Error::Config("duplicate model names in --models".into()));
+        }
     }
     let backend: Backend = args.get_or("backend", "native").parse()?;
+    if backend == Backend::Xla && configs.len() > 1 {
+        return Err(Error::Config(
+            "--backend xla serves a single model; use --model, not --models".into(),
+        ));
+    }
     // Kernel selection: measured tuning table when given, paper heuristics
     // (refined by the plan cache's online top-2 race on first traffic)
     // otherwise; the config's `kernel` key stays an explicit override.
+    // This planner is the whole fleet's shared substrate: every model's
+    // plan cache layers on it, so tuning learned by one model serves all.
     let have_table = args.get("tuning").is_some();
     let planner = Arc::new(match args.get("tuning") {
         Some(path) => {
@@ -139,40 +201,26 @@ fn cmd_serve(args: &Args) -> Result<i32> {
         }
         None => Planner::new(),
     });
-    let mut engine = Engine::from_config(&cfg, &planner)?;
-    if backend == Backend::Xla || args.get("artifacts").is_some() {
-        let dir = args
-            .get("artifacts")
-            .map(std::path::PathBuf::from)
-            .unwrap_or_else(default_artifacts_dir);
-        match attach_xla(&dir, &cfg.name) {
-            Ok(xla) => engine = engine.with_xla(xla),
-            Err(e) => {
-                if backend == Backend::Xla {
-                    return Err(e);
-                }
-                eprintln!("warning: XLA artifacts unavailable, serving native only: {e}");
-            }
-        }
-    }
-    let engine = engine.with_backend(backend);
+    let default_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+    let thread_budget = args.usize("max-threads", default_threads);
+    let registry = Arc::new(ModelRegistry::with_thread_budget(
+        Arc::clone(&planner),
+        thread_budget,
+    ));
     let policy = BatchPolicy {
         max_batch: args.usize("max-batch", 8),
         max_wait: Duration::from_micros(args.u64("max-wait-us", 2000)),
     };
-    // Threads the plan cache may be asked for: the static config when
-    // autoscaling is off, else every step up to the controller's ceiling.
     let control = if args.has("no-autoscale") {
         None
     } else {
-        let default_threads = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(4);
         let control = LoadControlConfig {
             target_queue_us: args.u64("target-queue-us", 2000),
             min_batch: 1,
             max_batch: args.usize("max-batch-cap", 64).max(policy.max_batch),
-            max_threads: args.usize("max-threads", default_threads),
+            max_threads: thread_budget,
             adjust_every_batches: 16,
             ..LoadControlConfig::default()
         };
@@ -182,75 +230,108 @@ fn cmd_serve(args: &Args) -> Result<i32> {
         );
         Some(control)
     };
-    // Warm the configured buckets at every thread step the coordinator
-    // can use — but only for layers whose kernel choice is settled (an
-    // explicit override or a tuning-table entry resolving for that
-    // bucket). Untuned buckets stay cold so their first real traffic
-    // races the top-2 candidates. Warming happens **before** registration:
-    // registering an autoscaled model spawns its advise tick, which would
-    // race warm_settled's temporary thread-ceiling changes.
-    if let Some(cache) = engine.plan_cache() {
-        let steps = match &control {
-            // Fixed ceiling: only one step is reachable.
-            None => vec![cfg.threads],
-            Some(c) => stgemm::plan::PlanCache::controller_thread_steps(c.max_threads),
-        };
-        cache.warm_settled(&cfg.batch_buckets, &steps)?;
+    for cfg in &configs {
+        let mut engine = Engine::from_config(cfg, &planner)?;
+        if backend == Backend::Xla || args.get("artifacts").is_some() {
+            let dir = args
+                .get("artifacts")
+                .map(std::path::PathBuf::from)
+                .unwrap_or_else(default_artifacts_dir);
+            match attach_xla(&dir, &cfg.name) {
+                Ok(xla) => engine = engine.with_xla(xla),
+                Err(e) => {
+                    if backend == Backend::Xla {
+                        return Err(e);
+                    }
+                    eprintln!(
+                        "warning: XLA artifacts unavailable, serving native only: {e}"
+                    );
+                }
+            }
+        }
+        let engine = engine.with_backend(backend);
+        // `warm: true` compiles plans for the configured buckets at every
+        // reachable thread step before the model's serving threads start —
+        // but only for layers whose kernel choice is settled (an explicit
+        // override or a tuning-table entry). Untuned buckets stay cold so
+        // their first real traffic races the top-2 candidates.
+        registry.load_engine(
+            engine,
+            LoadOptions {
+                policy,
+                control: control.clone(),
+                queue_budget: args.usize("queue-budget", cfg.queue_budget),
+                warm: true,
+                buckets: cfg.batch_buckets.clone(),
+            },
+        )?;
         if have_table {
             println!(
-                "[serve] plan cache warmed: buckets {:?} × thread steps {steps:?} \
+                "[serve] model '{}': plan cache warmed for buckets {:?} \
                  (tuned/pinned layers only)",
-                cfg.batch_buckets
+                cfg.name, cfg.batch_buckets
             );
         }
     }
-    let mut router = Router::new();
-    match control {
-        None => router.register(engine, policy),
-        Some(control) => router.register_autoscaled(engine, policy, control),
+    if configs.len() > 1 {
+        // Re-split the fleet thread budget by observed demand twice a
+        // second so one hot model cannot starve its neighbours.
+        registry.start_balancer(Duration::from_millis(500));
+        println!(
+            "[serve] fleet balancer: {} models sharing a {thread_budget}-thread budget",
+            configs.len()
+        );
     }
+    let router = Router::with_registry(Arc::clone(&registry));
     // Background re-tune: periodically re-sweep every layer × bucket on a
-    // snapshot of the live table, install the result, and invalidate the
-    // plan cache so the next batches pick up the fresh winners.
+    // snapshot of the live table, install the result, and rebuild each
+    // loaded model's plan cache so the next batches pick up the fresh
+    // winners. Caches are resolved through the registry at tick time, so
+    // models loaded or unloaded over HTTP are picked up / dropped
+    // automatically.
     let retune_secs = args.u64("retune-secs", 0);
     if retune_secs > 0 {
         let planner_bg = Arc::clone(&planner);
-        let cfg_bg = cfg.clone();
-        let cache_bg = router
-            .engine(&cfg.name)
-            .and_then(|e| e.plan_cache().cloned());
+        let registry_bg = Arc::clone(&registry);
+        let configs_bg = configs.clone();
         std::thread::Builder::new()
             .name("stgemm-retune".into())
             .spawn(move || loop {
                 std::thread::sleep(Duration::from_secs(retune_secs));
                 let mut table = planner_bg.table_snapshot();
                 let timer = CycleTimer::new(1, 2);
-                // Serving races kernels per M bucket, so the background
-                // re-tune records per-bucket winners too — a mean-collapsed
-                // entry would undo what the online races learned.
-                let report = sweep_model_opts(
-                    &cfg_bg,
-                    &cfg_bg.batch_buckets,
-                    stgemm::kernels::available_kernel_ids(),
-                    &timer,
-                    &mut table,
-                    &SweepOptions {
-                        per_m: true,
-                        ..Default::default()
-                    },
-                );
+                let mut refreshed = 0usize;
+                for cfg in &configs_bg {
+                    // Serving races kernels per M bucket, so the
+                    // background re-tune records per-bucket winners too —
+                    // a mean-collapsed entry would undo what the online
+                    // races learned.
+                    let report = sweep_model_opts(
+                        cfg,
+                        &cfg.batch_buckets,
+                        stgemm::kernels::available_kernel_ids(),
+                        &timer,
+                        &mut table,
+                        &SweepOptions {
+                            per_m: true,
+                            ..Default::default()
+                        },
+                    );
+                    refreshed += report.winners.len();
+                }
                 planner_bg.install_table(table);
                 // Swap fresh plans in off the hot path; traffic always
                 // finds a plan, and only changed winners pay a format
                 // build.
-                if let Some(cache) = &cache_bg {
-                    if let Err(e) = cache.rebuild() {
-                        eprintln!("[serve] re-tune rebuild failed: {e}");
+                for (name, handle) in registry_bg.handles() {
+                    if let Some(cache) = handle.engine().plan_cache() {
+                        if let Err(e) = cache.rebuild() {
+                            eprintln!("[serve] re-tune rebuild failed for '{name}': {e}");
+                        }
                     }
                 }
                 println!(
-                    "[serve] background re-tune: {} class(es) refreshed",
-                    report.winners.len()
+                    "[serve] background re-tune: {refreshed} class(es) refreshed"
                 );
             })
             .expect("spawn retune thread");
@@ -266,13 +347,19 @@ fn cmd_serve(args: &Args) -> Result<i32> {
         },
     )
     .map_err(|e| Error::io("start server", e))?;
+    for cfg in &configs {
+        println!(
+            "[serve] model '{}' ({} → {}) backend={backend:?} pipeline={}",
+            cfg.name,
+            cfg.d_in(),
+            cfg.d_out(),
+            if cfg.pipeline { "wavefront" } else { "barrier" }
+        );
+    }
     println!(
-        "[serve] model '{}' ({} → {}) on http://{} backend={backend:?} pipeline={}",
-        cfg.name,
-        cfg.d_in(),
-        cfg.d_out(),
-        server.local_addr,
-        if cfg.pipeline { "wavefront" } else { "barrier" }
+        "[serve] fleet of {} on http://{} (/infer /load_model /unload /status /metrics)",
+        configs.len(),
+        server.local_addr
     );
     // Serve until killed.
     loop {

@@ -45,6 +45,10 @@ pub struct ModelConfig {
     /// scheduling, zero-allocation activation arena). `false` restores
     /// the per-layer barrier path (`serve --no-pipeline` does the same).
     pub pipeline: bool,
+    /// Admission queue budget when served by the fleet registry: submits
+    /// that would grow the model's queue past this are rejected 429-style
+    /// instead of queueing unboundedly. `0` (the default) = unlimited.
+    pub queue_budget: usize,
 }
 
 impl Default for ModelConfig {
@@ -59,6 +63,7 @@ impl Default for ModelConfig {
             batch_buckets: vec![1, 8],
             threads: 1,
             pipeline: true,
+            queue_budget: 0,
         }
     }
 }
@@ -131,6 +136,12 @@ impl ModelConfig {
             None => d.pipeline,
             _ => return Err(bad("pipeline must be a boolean")),
         };
+        let queue_budget = match v.get("queue_budget") {
+            Some(q) => q
+                .as_usize()
+                .ok_or_else(|| bad("queue_budget must be a non-negative integer"))?,
+            None => d.queue_budget,
+        };
         Ok(ModelConfig {
             name: v
                 .get("name")
@@ -155,6 +166,7 @@ impl ModelConfig {
             batch_buckets,
             threads,
             pipeline,
+            queue_budget,
         })
     }
 
@@ -187,6 +199,11 @@ impl ModelConfig {
         ));
         fields.push(("threads", Json::num(self.threads as f64)));
         fields.push(("pipeline", Json::Bool(self.pipeline)));
+        // Written only when set, so configs that never opted into
+        // admission control roundtrip byte-identically.
+        if self.queue_budget > 0 {
+            fields.push(("queue_budget", Json::num(self.queue_budget as f64)));
+        }
         Json::obj(fields).encode_pretty()
     }
 
@@ -254,6 +271,18 @@ mod tests {
         assert!(!c.pipeline);
         let back = ModelConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back, c);
+    }
+
+    #[test]
+    fn queue_budget_parses_and_roundtrips() {
+        let c = ModelConfig::from_json(r#"{"dims": [8, 4]}"#).unwrap();
+        assert_eq!(c.queue_budget, 0, "absent = unlimited");
+        let c = ModelConfig::from_json(r#"{"dims": [8, 4], "queue_budget": 32}"#).unwrap();
+        assert_eq!(c.queue_budget, 32);
+        let back = ModelConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+        assert!(ModelConfig::from_json(r#"{"queue_budget": -1}"#).is_err());
+        assert!(ModelConfig::from_json(r#"{"queue_budget": "a"}"#).is_err());
     }
 
     #[test]

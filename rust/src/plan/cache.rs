@@ -954,6 +954,26 @@ impl PlanCache {
             .clear();
     }
 
+    /// Hand the cache's memory back: everything [`PlanCache::invalidate`]
+    /// drops, plus the shared prepared formats (`gemms`) and the
+    /// activation arena that invalidate deliberately keeps. This is the
+    /// model-unload path — the registered layer specs stay (a clone of
+    /// the cache Arc can rebuild lazily), but nothing sized to the model's
+    /// weights or activations survives.
+    pub fn release(&self) {
+        self.invalidate();
+        let layers = self.layers.read().unwrap_or_else(|e| e.into_inner());
+        for layer in layers.iter() {
+            layer
+                .gemms
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .clear();
+        }
+        drop(layers);
+        *self.arena.lock().unwrap_or_else(|e| e.into_inner()) = None;
+    }
+
     /// Re-resolve every cached plan key against the current tuning table
     /// and swap the fresh plans in, one key at a time — serving traffic
     /// always finds a plan, and only genuinely changed winners pay a new

@@ -192,9 +192,13 @@ pub fn heuristic_top2_caps(
 }
 
 /// Kernel selection + plan construction. Cheap to create; share one
-/// `Arc<Planner>` per model (or per process) so every layer's plan draws
-/// from the same tuning table and thread pool, and online/background
-/// tuning results propagate to all of them.
+/// `Arc<Planner>` per process so every layer's plan draws from the same
+/// tuning table and thread pool, and online/background tuning results
+/// propagate to all of them. The fleet registry
+/// ([`crate::coordinator::ModelRegistry`]) makes this ownership explicit:
+/// it holds the one planner, and every model it loads gets a per-model
+/// plan cache layered on it — so tuning knowledge crosses model
+/// boundaries while plan/arena memory stays per-model.
 pub struct Planner {
     table: RwLock<TuningTable>,
     /// Capability set every emitted kernel must satisfy (host by default).
@@ -375,6 +379,17 @@ impl Planner {
                 Arc::new(ThreadPool::new(workers.max(2)))
             })
             .clone()
+    }
+
+    /// Size of the shared worker pool, or `None` while it hasn't been
+    /// lazily created yet (fleet /status gauge: all models in a registry
+    /// draw parallel execution from this one pool).
+    pub fn shared_pool_threads(&self) -> Option<usize> {
+        self.pool
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .as_ref()
+            .map(|p| p.size())
     }
 
     /// Build a [`GemmPlan`] for weights `w`.

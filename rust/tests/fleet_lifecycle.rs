@@ -1,0 +1,312 @@
+//! Fleet-registry lifecycle linearizability tests: load → infer → unload
+//! → reload under concurrent traffic, admission budgets, drain semantics,
+//! and bitwise identity between registry-served outputs and a fresh
+//! single-model engine.
+//!
+//! Determinism note: these tests pin `"kernel": "base_tcsc"` wherever
+//! outputs are compared bitwise — without a pinned kernel the plan
+//! cache's online top-2 race picks winners by timing, which is allowed to
+//! differ between runs (outputs still agree, but the point here is exact
+//! `f32::to_bits` equality along a known code path).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use stgemm::coordinator::{BatchPolicy, Engine, LoadOptions, ModelRegistry, ModelState};
+use stgemm::model::ModelConfig;
+use stgemm::plan::Planner;
+use stgemm::tensor::Matrix;
+
+fn cfg(name: &str, seed: u64) -> ModelConfig {
+    ModelConfig::from_json(&format!(
+        r#"{{"name":"{name}","dims":[16,32,8],"sparsity":0.5,"seed":{seed},
+            "kernel":"base_tcsc"}}"#
+    ))
+    .unwrap()
+}
+
+fn registry() -> Arc<ModelRegistry> {
+    Arc::new(ModelRegistry::with_thread_budget(
+        Arc::new(Planner::new()),
+        4,
+    ))
+}
+
+fn quick_policy() -> BatchPolicy {
+    BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_micros(200),
+    }
+}
+
+/// A policy that parks submitted requests in the queue: the bucket never
+/// fills and the oldest-request deadline is far away, so queue depth is
+/// exactly the number of outstanding submits until close() flushes them.
+fn parked_policy() -> BatchPolicy {
+    BatchPolicy {
+        max_batch: 64,
+        max_wait: Duration::from_secs(10),
+    }
+}
+
+#[test]
+fn lifecycle_load_infer_unload_reload_under_traffic() {
+    let reg = registry();
+    let c = cfg("churn", 11);
+    reg.load(
+        &c,
+        LoadOptions {
+            policy: quick_policy(),
+            ..LoadOptions::default()
+        },
+    )
+    .unwrap();
+
+    let served = Arc::new(AtomicUsize::new(0));
+    let rejected = Arc::new(AtomicUsize::new(0));
+    let stop = Arc::new(AtomicUsize::new(0));
+    let mut clients = Vec::new();
+    for t in 0..4 {
+        let reg = Arc::clone(&reg);
+        let (served, rejected, stop) =
+            (Arc::clone(&served), Arc::clone(&rejected), Arc::clone(&stop));
+        clients.push(std::thread::spawn(move || {
+            let input: Vec<f32> = (0..16).map(|i| (i + t) as f32 * 0.1).collect();
+            while stop.load(Ordering::Relaxed) == 0 {
+                match reg.infer_blocking("churn", input.clone(), Duration::from_secs(5)) {
+                    Ok(resp) => {
+                        resp.output.expect("accepted request must compute");
+                        served.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e) => {
+                        // The only legal failures are rejections raised
+                        // *before* a request is accepted; a timeout here
+                        // would mean an accepted request was dropped.
+                        let msg = e.to_string();
+                        assert!(
+                            msg.contains("draining")
+                                || msg.contains("unknown model")
+                                || msg.contains("shutting down"),
+                            "unexpected failure mode: {msg}"
+                        );
+                        rejected.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }));
+    }
+
+    // Churn the lifecycle under live traffic: unload (drains in-flight
+    // work) and immediately reload the same name.
+    for _ in 0..3 {
+        std::thread::sleep(Duration::from_millis(30));
+        reg.unload("churn").unwrap();
+        assert!(reg.get("churn").is_none(), "unload removes the name");
+        reg.load(
+            &c,
+            LoadOptions {
+                policy: quick_policy(),
+                ..LoadOptions::default()
+            },
+        )
+        .unwrap();
+    }
+    std::thread::sleep(Duration::from_millis(30));
+    stop.store(1, Ordering::Relaxed);
+    for h in clients {
+        h.join().unwrap();
+    }
+
+    assert!(
+        served.load(Ordering::Relaxed) > 0,
+        "traffic must be served across reloads"
+    );
+    // The reloaded model still serves.
+    let resp = reg
+        .infer_blocking("churn", vec![0.25; 16], Duration::from_secs(5))
+        .unwrap();
+    assert_eq!(resp.output.unwrap().len(), 8);
+    reg.shutdown();
+}
+
+#[test]
+fn lifecycle_outputs_bitwise_identical_to_fresh_engine() {
+    let c = cfg("bitwise", 7);
+    let reg = registry();
+    reg.load(
+        &c,
+        LoadOptions {
+            policy: quick_policy(),
+            warm: true,
+            ..LoadOptions::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(reg.get("bitwise").unwrap().state(), ModelState::Hot);
+
+    // A fresh single-model engine on its own planner: the reference path.
+    let fresh = Engine::from_config(&c, &Arc::new(Planner::new())).unwrap();
+    let input: Vec<f32> = (0..16).map(|i| (i as f32 - 8.0) * 0.125).collect();
+    let x = Matrix::from_slice(1, 16, &input);
+    let want = fresh.infer_matrix(&x).unwrap();
+
+    let check = |tag: &str| {
+        let got = reg
+            .infer_blocking("bitwise", input.clone(), Duration::from_secs(5))
+            .unwrap()
+            .output
+            .unwrap();
+        assert_eq!(got.len(), 8);
+        for (j, &g) in got.iter().enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                want[(0, j)].to_bits(),
+                "{tag}: output {j} not bitwise identical"
+            );
+        }
+    };
+    check("first load");
+
+    // Unload releases the plans; a reload must rebuild to the same bits.
+    reg.unload("bitwise").unwrap();
+    reg.load(
+        &c,
+        LoadOptions {
+            policy: quick_policy(),
+            ..LoadOptions::default()
+        },
+    )
+    .unwrap();
+    check("after unload + reload");
+    reg.shutdown();
+}
+
+#[test]
+fn lifecycle_admission_budget_caps_queue() {
+    let reg = registry();
+    let c = cfg("tight", 3);
+    reg.load(
+        &c,
+        LoadOptions {
+            policy: parked_policy(),
+            queue_budget: 1,
+            ..LoadOptions::default()
+        },
+    )
+    .unwrap();
+    let handle = reg.get("tight").unwrap();
+
+    // First submit parks in the queue (bucket of 64 never fills).
+    let rx1 = reg.submit("tight", vec![0.5; 16]).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(2);
+    while handle.queue_depth() < 1 {
+        assert!(Instant::now() < deadline, "request never reached the queue");
+        std::thread::yield_now();
+    }
+
+    // Second submit trips the budget: rejected, counted, nothing queued.
+    let err = reg.submit("tight", vec![0.5; 16]).unwrap_err().to_string();
+    assert!(err.contains("overloaded"), "got: {err}");
+    assert_eq!(
+        handle
+            .engine()
+            .metrics
+            .admission_rejections
+            .load(Ordering::Relaxed),
+        1
+    );
+    assert_eq!(handle.queue_depth(), 1, "rejected submit must not queue");
+
+    // Lifting the budget re-admits.
+    handle.admission().set_budget(0);
+    let rx2 = reg.submit("tight", vec![0.5; 16]).unwrap();
+
+    // Unload flushes the parked queue: both accepted requests complete.
+    reg.unload("tight").unwrap();
+    for rx in [rx1, rx2] {
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.output.unwrap().len(), 8);
+    }
+}
+
+#[test]
+fn lifecycle_no_request_lost_on_unload() {
+    let reg = registry();
+    reg.load(
+        &cfg("flush", 5),
+        LoadOptions {
+            policy: parked_policy(),
+            ..LoadOptions::default()
+        },
+    )
+    .unwrap();
+
+    // Park a pile of accepted requests, then unload. Every accepted
+    // request must receive a computed response — drain closes the batcher
+    // but the batch loop flushes the queue before exiting.
+    let rxs: Vec<_> = (0..10)
+        .map(|i| reg.submit("flush", vec![i as f32 * 0.1; 16]).unwrap())
+        .collect();
+    reg.unload("flush").unwrap();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap_or_else(|e| panic!("request {i} lost on unload: {e}"));
+        assert_eq!(resp.output.unwrap().len(), 8, "request {i}");
+    }
+    // And the name is gone.
+    let err = reg.submit("flush", vec![0.0; 16]).unwrap_err().to_string();
+    assert!(err.contains("unknown model"), "got: {err}");
+}
+
+#[test]
+fn lifecycle_draining_rejects_new_requests() {
+    let reg = registry();
+    reg.load(
+        &cfg("drainer", 9),
+        LoadOptions {
+            policy: parked_policy(),
+            ..LoadOptions::default()
+        },
+    )
+    .unwrap();
+    let parked = reg.submit("drainer", vec![0.1; 16]).unwrap();
+
+    // Race submits against a concurrent unload. Linearizability contract:
+    // every submit either (a) is accepted and receives a computed
+    // response, or (b) fails with a lifecycle rejection — draining /
+    // shutting down / unknown model. Nothing hangs, nothing is dropped.
+    let reg_bg = Arc::clone(&reg);
+    let unloader = std::thread::spawn(move || reg_bg.unload("drainer").unwrap());
+    let mut accepted = Vec::new();
+    let mut rejections = 0usize;
+    loop {
+        match reg.submit("drainer", vec![0.2; 16]) {
+            Ok(rx) => accepted.push(rx),
+            Err(e) => {
+                let msg = e.to_string();
+                assert!(
+                    msg.contains("draining")
+                        || msg.contains("shutting down")
+                        || msg.contains("unknown model"),
+                    "unexpected failure mode: {msg}"
+                );
+                rejections += 1;
+                if msg.contains("unknown model") {
+                    break; // unload finished; the window is closed
+                }
+            }
+        }
+    }
+    unloader.join().unwrap();
+    assert!(rejections > 0, "the drain window must reject something");
+    assert!(
+        reg.submit("drainer", vec![0.3; 16]).is_err(),
+        "no request may land on an unloaded model"
+    );
+    for rx in std::iter::once(parked).chain(accepted) {
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.output.unwrap().len(), 8);
+    }
+}
