@@ -108,6 +108,7 @@ fn main() {
             d_in,
             model: base.to_string(),
             seed: 99,
+            request_timeout: Duration::from_secs(30),
         };
         let report = gen.run_http(server.local_addr);
         println!("    {}", report.summary());

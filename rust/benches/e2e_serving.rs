@@ -28,6 +28,13 @@
 //! thread budget, the demand balancer re-splitting it) — reporting
 //! per-model throughput, p50/p99 and the hot model's admission-rejection
 //! rate into `BENCH_pr8.json` at the repo root.
+//!
+//! PR 9 additions: decode-serving scenarios — a single autoregressive
+//! session on the tuned M=1 GEMV path and concurrent bursty sessions
+//! continuously batched into shared steps — reporting tokens/sec,
+//! inter-token p50/p99, mean step occupancy and the decode arena's
+//! steady-state allocation counters into `BENCH_pr9.json` at the repo
+//! root.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -36,7 +43,8 @@ use std::time::Duration;
 use stgemm::bench::harness::{measure_kernel, BenchScale};
 use stgemm::bench::report::{write_csv, Table};
 use stgemm::coordinator::{
-    Backend, BatchPolicy, Engine, LoadGenerator, LoadOptions, ModelRegistry, Router,
+    Backend, BatchPolicy, DecodeConfig, DecodeLoadGen, DecodeScheduler, Engine,
+    LoadGenerator, LoadOptions, Metrics, ModelRegistry, Router,
 };
 use stgemm::kernels::{descriptors, KernelDescriptor, KernelFamily, KernelParams};
 use stgemm::model::{ModelConfig, TernaryLinear, TernaryMlp};
@@ -102,6 +110,7 @@ fn bench_backend(name: &str, engine: Engine, clients: usize, reqs: usize) -> Ser
         d_in,
         model: name.to_string(),
         seed: 7,
+        request_timeout: Duration::from_secs(30),
     };
     let report = gen.run_inprocess(&router);
     ServingRow {
@@ -357,6 +366,7 @@ fn fleet_skewed_load(scale: BenchScale) -> Json {
         d_in: 256,
         model: model.into(),
         seed,
+        request_timeout: Duration::from_secs(30),
     };
     let cold_gen = gen("cold", cold_clients, 8);
     let router_bg = Arc::clone(&router);
@@ -412,6 +422,81 @@ fn fleet_skewed_load(scale: BenchScale) -> Json {
     ]);
     registry.shutdown();
     out
+}
+
+/// PR 9: decode-serving scenarios. Each builds a fresh scheduler over
+/// the benchmark model (256→1024→256, square as decode requires), starts
+/// its step loop, and drives bursty sessions through the in-process
+/// client path — the same continuous-batching machinery `/generate`
+/// streams through, minus the socket.
+fn decode_serving(scale: BenchScale) -> Json {
+    let (solo_sessions, concurrent_sessions, mean_tokens) = match scale {
+        BenchScale::Full => (4, 8, 64),
+        BenchScale::Ci => (2, 4, 8),
+    };
+    let scenario = |label: &str,
+                    capacity: usize,
+                    sessions: usize,
+                    burst: usize,
+                    seed: u64|
+     -> Json {
+        let cfg = ModelConfig::from_json(
+            r#"{"name":"decode","dims":[256,1024,256],"sparsity":0.25,"seed":4321}"#,
+        )
+        .unwrap();
+        let mlp = TernaryMlp::planned(&cfg, &Arc::new(Planner::new())).unwrap();
+        let cache = Arc::clone(mlp.plan_cache().expect("config-built"));
+        let metrics = Arc::new(Metrics::new());
+        let sched = Arc::new(
+            DecodeScheduler::new(
+                "decode",
+                &cache,
+                Arc::clone(&metrics),
+                DecodeConfig {
+                    max_sessions: capacity,
+                    default_max_tokens: mean_tokens,
+                },
+            )
+            .unwrap(),
+        );
+        sched.spawn_loop();
+        let gen = DecodeLoadGen {
+            sessions,
+            burst,
+            burst_gap: Duration::from_millis(1),
+            d: 256,
+            model: "decode".into(),
+            seed,
+            mean_tokens,
+            request_timeout: Duration::from_secs(120),
+        };
+        let report = gen.run_scheduler(&sched);
+        let stats = sched.arena_stats();
+        let occupancy = metrics.decode_mean_occupancy();
+        sched.shutdown();
+        println!("  [decode:{label}] {}", report.summary());
+        Json::obj(vec![
+            ("scenario", Json::str(label)),
+            ("capacity", Json::num(capacity as f64)),
+            ("sessions", Json::num(report.sessions as f64)),
+            ("tokens", Json::num(report.tokens as f64)),
+            ("tokens_per_sec", Json::num(report.tokens_per_sec)),
+            ("intertoken_us_p50", Json::num(report.intertoken_us_p50 as f64)),
+            ("intertoken_us_p99", Json::num(report.intertoken_us_p99 as f64)),
+            ("mean_step_occupancy", Json::num(occupancy)),
+            ("arena_allocations", Json::num(stats.allocations as f64)),
+            ("arena_reuses", Json::num(stats.reuses as f64)),
+            ("errors", Json::num(report.errors as f64)),
+        ])
+    };
+    Json::arr(vec![
+        // Capacity 1: every step is the tuned M=1 GEMV path; extra
+        // sessions queue at admission and run serially.
+        scenario("single_session_m1", 1, solo_sessions, 1, 71),
+        // Capacity 4 with bursty arrivals: steps carry whatever mix of
+        // sessions is live — continuous batching proper.
+        scenario("concurrent_sessions", 4, concurrent_sessions, 4, 72),
+    ])
 }
 
 fn main() {
@@ -566,5 +651,23 @@ fn main() {
     match std::fs::write(&pr8_path, pr8.encode_pretty()) {
         Ok(()) => println!("  [json] {}", pr8_path.display()),
         Err(e) => eprintln!("  [json] {} write failed: {e}", pr8_path.display()),
+    }
+
+    // PR 9 tracking artifact: the decode-serving scenarios — tokens/sec
+    // and inter-token p50/p99 for the single-session M=1 path and for
+    // concurrent continuously-batched sessions.
+    let decode = decode_serving(scale);
+    let pr9 = Json::obj(vec![
+        ("bench", Json::str("pr9_decode_serving")),
+        ("scale", Json::str(format!("{scale:?}"))),
+        ("decode_serving", decode),
+    ]);
+    let pr9_path = match std::path::Path::new(env!("CARGO_MANIFEST_DIR")).parent() {
+        Some(root) => root.join("BENCH_pr9.json"),
+        None => std::path::PathBuf::from("BENCH_pr9.json"),
+    };
+    match std::fs::write(&pr9_path, pr9.encode_pretty()) {
+        Ok(()) => println!("  [json] {}", pr9_path.display()),
+        Err(e) => eprintln!("  [json] {} write failed: {e}", pr9_path.display()),
     }
 }

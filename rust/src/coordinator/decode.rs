@@ -1,0 +1,549 @@
+//! Continuous batching for autoregressive decode: the
+//! [`DecodeScheduler`] turns concurrent [`DecodeSession`]s into one
+//! M-row GEMV-stream batch per step.
+//!
+//! The decode workload is the paper's motivating traffic shape: a stream
+//! of M=1..N GEMVs where per-token overhead decides tokens/sec. The
+//! scheduler serves it with three standing guarantees:
+//!
+//! - **One pinned plan.** At construction the scheduler compiles a single
+//!   [`MlpPlan`] via [`crate::plan::PlanCache::decode_plan`]: every layer
+//!   pinned to its **M=1-bucket kernel choice**, sized for the session
+//!   capacity. Every step — whatever its occupancy `m` — runs through
+//!   this one plan, so there is **no per-token plan lookup** and no
+//!   kernel change across a session's lifetime. A single active session
+//!   therefore runs exactly the tuned M=1 GEMV path.
+//! - **Bitwise identity.** Each output row of a row-partitioned GEMM
+//!   depends only on its own input row, and per-cell accumulation order
+//!   is a property of the prepared format, not of M — so a continuously
+//!   batched step is bitwise-identical to stepping each session as an
+//!   independent forward (`tests/decode_serving.rs` property-tests this
+//!   across session counts × join/leave churn × thread counts).
+//! - **Zero steady-state allocation.** The scheduler owns a private
+//!   decode [`ActivationArena`] (width `d`): it holds one leased
+//!   gather/scatter pair across steps, and every session holds its own
+//!   bucket-1 state pair. Leaving sessions return pairs that joining
+//!   sessions reuse, so churn past the first sighting allocates nothing
+//!   (asserted via [`crate::plan::ArenaStats`]).
+//!
+//! Sessions join and leave **between** steps: [`DecodeScheduler::begin`]
+//! admits a stream (refused 429-style past the capacity, counted in
+//! [`Metrics::decode_rejections`]), and a session leaves when its token
+//! budget is exhausted, its [`DecodeStream`] is canceled or dropped
+//! (client disconnect), or the scheduler shuts down (model drain). Tokens
+//! flow sender-per-session: each step sends one [`TokenEvent`] per active
+//! session down its channel; dropping the sender is how a stream learns
+//! it ended.
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::registry::AdmissionController;
+use crate::model::session::DecodeSession;
+use crate::plan::pipeline::OwnedArenaLease;
+use crate::plan::{ActivationArena, ArenaStats, MlpPlan, PlanCache, MAX_M_BUCKET};
+use crate::tensor::Matrix;
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Decode-serving knobs (per model).
+#[derive(Debug, Clone)]
+pub struct DecodeConfig {
+    /// Concurrent-session capacity: `begin` past it is refused
+    /// 429-style. Clamped to `[1, MAX_M_BUCKET]` at construction.
+    pub max_sessions: usize,
+    /// Token budget for streams that don't ask for one.
+    pub default_max_tokens: usize,
+}
+
+impl Default for DecodeConfig {
+    fn default() -> Self {
+        DecodeConfig {
+            max_sessions: 4,
+            default_max_tokens: 32,
+        }
+    }
+}
+
+/// One decoded token, as delivered down a session's channel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TokenEvent {
+    /// Position in the stream (0-based).
+    pub index: usize,
+    /// The synthetic token: argmax index of the output row.
+    pub token: u32,
+}
+
+/// What [`DecodeStream::next_timeout`] observed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamEvent {
+    /// A token arrived.
+    Token(TokenEvent),
+    /// Nothing arrived within the timeout; the stream is still live.
+    Idle,
+    /// The stream ended: budget exhausted, canceled, or model drained.
+    Ended,
+}
+
+/// The consumer half of a decode session: a receiver of [`TokenEvent`]s
+/// plus a cancel flag the scheduler checks between steps. Dropping the
+/// stream (client disconnect) cancels the session — the scheduler notices
+/// the hung-up channel on its next send and retires the session cleanly.
+pub struct DecodeStream {
+    id: u64,
+    rx: Receiver<TokenEvent>,
+    cancel: Arc<AtomicBool>,
+}
+
+impl DecodeStream {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Ask the scheduler to retire this session before its next step.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    /// Block until the next token, or `None` when the stream ended.
+    pub fn next(&self) -> Option<TokenEvent> {
+        self.rx.recv().ok()
+    }
+
+    /// Wait up to `timeout` for the next token, distinguishing a quiet
+    /// stream from a finished one.
+    pub fn next_timeout(&self, timeout: Duration) -> StreamEvent {
+        match self.rx.recv_timeout(timeout) {
+            Ok(ev) => StreamEvent::Token(ev),
+            Err(RecvTimeoutError::Timeout) => StreamEvent::Idle,
+            Err(RecvTimeoutError::Disconnected) => StreamEvent::Ended,
+        }
+    }
+}
+
+impl Drop for DecodeStream {
+    fn drop(&mut self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+}
+
+/// One admitted session, scheduler-side.
+struct ActiveSession {
+    session: DecodeSession,
+    tx: Sender<TokenEvent>,
+    cancel: Arc<AtomicBool>,
+    /// Last token delivery, for the inter-token latency histogram.
+    last_token: Option<Instant>,
+}
+
+/// Lock-protected scheduler state: the session list and the shared
+/// gather/scatter buffer pair. One mutex: joins, leaves and steps all
+/// serialize on it, which is the "sessions join and leave between steps"
+/// semantic by construction.
+struct Inner {
+    sessions: Vec<ActiveSession>,
+    lease: OwnedArenaLease,
+}
+
+/// Continuous-batching decode scheduler for one model. See the module
+/// docs for the standing guarantees.
+pub struct DecodeScheduler {
+    model: String,
+    plan: Arc<MlpPlan>,
+    arena: Arc<ActivationArena>,
+    width: usize,
+    admission: AdmissionController,
+    default_max_tokens: usize,
+    metrics: Arc<Metrics>,
+    inner: Mutex<Inner>,
+    work: Condvar,
+    stop: AtomicBool,
+    next_id: AtomicU64,
+    loop_handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl DecodeScheduler {
+    /// Build the scheduler for a model: compiles the pinned decode plan
+    /// (see [`PlanCache::decode_plan`]), sizes a private decode arena and
+    /// checks the shared gather/scatter pair out of it.
+    ///
+    /// # Errors
+    /// [`Error::Config`] when the model's `d_in != d_out` (the decode
+    /// feedback loop feeds each output row back as the next input) or
+    /// when no layers are registered.
+    pub fn new(
+        model: impl Into<String>,
+        cache: &Arc<PlanCache>,
+        metrics: Arc<Metrics>,
+        cfg: DecodeConfig,
+    ) -> Result<DecodeScheduler> {
+        let model = model.into();
+        let capacity = cfg.max_sessions.clamp(1, MAX_M_BUCKET);
+        let plan = cache.decode_plan(capacity)?;
+        let (d_in, d_out) = (plan.d_in(), plan.d_out());
+        if d_in != d_out {
+            return Err(Error::Config(format!(
+                "decode requires d_in == d_out (got {d_in} → {d_out}): \
+                 each output row is the next step's input row"
+            )));
+        }
+        // Private arena, width d: the gather/scatter pair and every
+        // session's state pair lease from here, so decode's
+        // zero-allocation steady state is observable on its own counters
+        // (the model's forward arena is sized to intermediates, which may
+        // be narrower than d).
+        let arena = Arc::new(ActivationArena::new(d_in));
+        let lease = arena.checkout_owned(plan.bucket());
+        Ok(DecodeScheduler {
+            model,
+            plan,
+            arena,
+            width: d_in,
+            admission: AdmissionController::new(capacity),
+            default_max_tokens: cfg.default_max_tokens.max(1),
+            metrics,
+            inner: Mutex::new(Inner {
+                sessions: Vec::with_capacity(capacity),
+                lease,
+            }),
+            work: Condvar::new(),
+            stop: AtomicBool::new(false),
+            next_id: AtomicU64::new(0),
+            loop_handle: Mutex::new(None),
+        })
+    }
+
+    /// The model this scheduler serves.
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// State-row width (= the model's `d_in` = `d_out`).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Concurrent-session capacity.
+    pub fn capacity(&self) -> usize {
+        self.admission.budget()
+    }
+
+    /// Currently active sessions.
+    pub fn active_sessions(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .sessions
+            .len()
+    }
+
+    /// Decode-arena counters (zero-allocation steady-state assertion).
+    pub fn arena_stats(&self) -> ArenaStats {
+        self.arena.stats()
+    }
+
+    /// Admit a new session seeded with `prompt`, joining the batch before
+    /// the next step. Returns the stream handle tokens arrive on.
+    ///
+    /// # Errors
+    /// [`Error::Serve`] (`"overloaded: …"`, mapped to HTTP 429) at the
+    /// session capacity or when the scheduler is draining;
+    /// [`Error::Shape`] when the prompt width is not the model's `d`.
+    pub fn begin(&self, prompt: &[f32], max_tokens: Option<usize>) -> Result<DecodeStream> {
+        if self.stop.load(Ordering::SeqCst) {
+            return Err(Error::Serve(format!(
+                "model '{}' is draining; no new decode sessions",
+                self.model
+            )));
+        }
+        if prompt.len() != self.width {
+            return Err(Error::Shape(format!(
+                "decode prompt has {} values, model '{}' wants {}",
+                prompt.len(),
+                self.model,
+                self.width
+            )));
+        }
+        let budget = max_tokens.unwrap_or(self.default_max_tokens);
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if !self.admission.admits(inner.sessions.len()) {
+            self.metrics
+                .decode_rejections
+                .fetch_add(1, Ordering::Relaxed);
+            return Err(Error::Serve(format!(
+                "overloaded: model '{}' is at its decode session capacity ({})",
+                self.model,
+                self.admission.budget()
+            )));
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let session = DecodeSession::new(id, &self.arena, prompt, budget)?;
+        let (tx, rx) = channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        inner.sessions.push(ActiveSession {
+            session,
+            tx,
+            cancel: Arc::clone(&cancel),
+            last_token: None,
+        });
+        self.metrics
+            .decode_sessions_started
+            .fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .decode_active_sessions
+            .store(inner.sessions.len() as u64, Ordering::Relaxed);
+        drop(inner);
+        self.work.notify_all();
+        Ok(DecodeStream { id, rx, cancel })
+    }
+
+    /// Run **one** continuous-batching step: retire canceled sessions,
+    /// gather every remaining session's state row into the shared M-row
+    /// batch, run the pinned plan once, scatter the output rows back,
+    /// deliver one token per session, retire exhausted/hung-up sessions.
+    /// Returns the number of sessions still active afterwards.
+    ///
+    /// Public and deterministic on purpose: the bitwise-identity property
+    /// tests drive the scheduler step by step, interleaving joins and
+    /// leaves exactly where serving would allow them.
+    pub fn step(&self) -> Result<usize> {
+        let mut guard = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let inner = &mut *guard;
+        inner
+            .sessions
+            .retain(|s| !s.cancel.load(Ordering::Relaxed));
+        let m = inner.sessions.len();
+        if m == 0 {
+            self.metrics.decode_active_sessions.store(0, Ordering::Relaxed);
+            return Ok(0);
+        }
+        let width = self.width;
+        let Inner { sessions, lease } = inner;
+        let (xb, yb) = lease.bufs();
+        for (i, s) in sessions.iter_mut().enumerate() {
+            xb.row_mut(i)[..width].copy_from_slice(s.session.state());
+        }
+        let stats = Matrix::with_view(&xb.as_slice()[..m * width], m, width, |x| {
+            Matrix::with_view_mut(&mut yb.as_mut_slice()[..m * width], m, width, |y| {
+                self.plan.run(x, y)
+            })
+        })?;
+        self.metrics.note_pipeline(&stats);
+        let now = Instant::now();
+        for (i, s) in sessions.iter_mut().enumerate() {
+            let row = &yb.row(i)[..width];
+            let token = s.session.absorb_output(row);
+            if let Some(prev) = s.last_token.replace(now) {
+                self.metrics
+                    .intertoken_latency
+                    .record(now.duration_since(prev).as_micros() as u64);
+            }
+            let event = TokenEvent {
+                index: s.session.emitted() - 1,
+                token,
+            };
+            // A failed send means the stream was dropped (client
+            // disconnect): flag the session so the retain below retires
+            // it — its lease returns to the arena for the next join.
+            if s.tx.send(event).is_err() {
+                s.cancel.store(true, Ordering::Relaxed);
+            }
+        }
+        sessions.retain(|s| !s.cancel.load(Ordering::Relaxed) && !s.session.done());
+        let remaining = sessions.len();
+        self.metrics
+            .decode_active_sessions
+            .store(remaining as u64, Ordering::Relaxed);
+        self.metrics.note_decode_step(m);
+        Ok(remaining)
+    }
+
+    /// Start the background serving loop: parked while no sessions are
+    /// active (a `begin` wakes it), stepping continuously otherwise. Used
+    /// by the serving path; tests drive [`DecodeScheduler::step`]
+    /// directly instead.
+    pub fn spawn_loop(self: &Arc<Self>) {
+        let mut slot = self.loop_handle.lock().unwrap_or_else(|e| e.into_inner());
+        if slot.is_some() {
+            return;
+        }
+        let me = Arc::clone(self);
+        *slot = Some(std::thread::spawn(move || loop {
+            {
+                let mut inner = me.inner.lock().unwrap_or_else(|e| e.into_inner());
+                while inner.sessions.is_empty() && !me.stop.load(Ordering::SeqCst) {
+                    inner = me.work.wait(inner).unwrap_or_else(|e| e.into_inner());
+                }
+            }
+            if me.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            if me.step().is_err() {
+                // A typed step failure (worker panic surfacing as
+                // Error::Runtime) retires every session — their streams
+                // end — instead of spinning on a broken plan.
+                me.retire_all();
+            }
+            // The step loop and `begin` contend on one mutex; yielding
+            // between steps keeps joins from starving under a hot loop.
+            std::thread::yield_now();
+        }));
+    }
+
+    /// Retire every active session: their senders drop, so every stream
+    /// observes `Ended`.
+    fn retire_all(&self) {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        inner.sessions.clear();
+        self.metrics.decode_active_sessions.store(0, Ordering::Relaxed);
+    }
+
+    /// Drain the scheduler: refuse new sessions, stop and join the
+    /// serving loop, retire every active session (streams observe
+    /// `Ended`). Idempotent; the registry calls this on model drain.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.work.notify_all();
+        let handle = self
+            .loop_handle
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+        self.retire_all();
+    }
+}
+
+impl Drop for DecodeScheduler {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelConfig, TernaryMlp};
+    use crate::plan::Planner;
+
+    fn scheduler(max_sessions: usize) -> (Arc<DecodeScheduler>, Arc<PlanCache>) {
+        let cfg = ModelConfig::from_json(
+            r#"{"name":"dec","dims":[32,64,32],"sparsity":0.25,"seed":11,
+                "kernel":"base_tcsc"}"#,
+        )
+        .unwrap();
+        let mlp = TernaryMlp::planned(&cfg, &Arc::new(Planner::new())).unwrap();
+        let cache = Arc::clone(mlp.plan_cache().expect("config-built"));
+        let sched = DecodeScheduler::new(
+            "dec",
+            &cache,
+            Arc::new(Metrics::new()),
+            DecodeConfig {
+                max_sessions,
+                default_max_tokens: 4,
+            },
+        )
+        .unwrap();
+        (Arc::new(sched), cache)
+    }
+
+    fn prompt(width: usize, seed: u64) -> Vec<f32> {
+        let m = Matrix::random(1, width, seed);
+        m.row(0).to_vec()
+    }
+
+    #[test]
+    fn single_session_streams_its_budget_then_ends() {
+        let (sched, _) = scheduler(2);
+        let stream = sched.begin(&prompt(32, 3), Some(3)).unwrap();
+        while sched.step().unwrap() > 0 {}
+        let mut tokens = Vec::new();
+        while let Some(ev) = stream.next() {
+            tokens.push(ev);
+        }
+        assert_eq!(tokens.len(), 3);
+        assert_eq!(
+            tokens.iter().map(|e| e.index).collect::<Vec<_>>(),
+            vec![0, 1, 2]
+        );
+        assert_eq!(sched.active_sessions(), 0);
+    }
+
+    #[test]
+    fn admission_refuses_past_capacity_and_recovers() {
+        let (sched, _) = scheduler(2);
+        let a = sched.begin(&prompt(32, 1), Some(1)).unwrap();
+        let _b = sched.begin(&prompt(32, 2), Some(8)).unwrap();
+        let err = sched.begin(&prompt(32, 3), Some(1)).unwrap_err();
+        assert!(
+            err.to_string().contains("overloaded"),
+            "429-style rejection: {err}"
+        );
+        sched.step().unwrap(); // session a exhausts its budget of 1
+        assert_eq!(a.next().unwrap().index, 0);
+        assert!(a.next().is_none(), "ended after budget");
+        sched
+            .begin(&prompt(32, 4), Some(1))
+            .expect("capacity freed by the finished session");
+    }
+
+    #[test]
+    fn dropped_stream_retires_its_session() {
+        let (sched, _) = scheduler(4);
+        let keep = sched.begin(&prompt(32, 5), Some(16)).unwrap();
+        let dropped = sched.begin(&prompt(32, 6), Some(16)).unwrap();
+        drop(dropped); // client disconnect
+        sched.step().unwrap();
+        assert_eq!(
+            sched.active_sessions(),
+            1,
+            "canceled session retired before the step"
+        );
+        assert!(matches!(
+            keep.next_timeout(Duration::from_secs(5)),
+            StreamEvent::Token(_)
+        ));
+    }
+
+    #[test]
+    fn shutdown_ends_streams_and_refuses_new_sessions() {
+        let (sched, _) = scheduler(4);
+        sched.spawn_loop();
+        let stream = sched.begin(&prompt(32, 7), Some(1_000_000)).unwrap();
+        assert!(matches!(
+            stream.next_timeout(Duration::from_secs(10)),
+            StreamEvent::Token(_)
+        ));
+        sched.shutdown();
+        // Drain the channel: it must END (disconnect), not idle forever.
+        loop {
+            match stream.next_timeout(Duration::from_secs(10)) {
+                StreamEvent::Token(_) => continue,
+                StreamEvent::Ended => break,
+                StreamEvent::Idle => panic!("drained stream must disconnect"),
+            }
+        }
+        assert!(sched.begin(&prompt(32, 8), Some(1)).is_err());
+    }
+
+    #[test]
+    fn mismatched_dims_are_a_config_error() {
+        let cfg = ModelConfig::from_json(
+            r#"{"name":"bad","dims":[32,64,16],"sparsity":0.25,"seed":1}"#,
+        )
+        .unwrap();
+        let mlp = TernaryMlp::planned(&cfg, &Arc::new(Planner::new())).unwrap();
+        let cache = Arc::clone(mlp.plan_cache().unwrap());
+        let err = DecodeScheduler::new(
+            "bad",
+            &cache,
+            Arc::new(Metrics::new()),
+            DecodeConfig::default(),
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+    }
+}

@@ -1,9 +1,19 @@
 //! Load generator: closed-loop concurrent clients driving the router
 //! (in-process) or the HTTP server, reporting throughput and latency
 //! percentiles. Powers the e2e serving benchmark (EXPERIMENTS.md E11).
+//!
+//! Two workload shapes:
+//! - [`LoadGenerator`] — one-shot `/infer` requests (closed loop, N
+//!   clients × M requests), reporting request throughput and e2e latency.
+//! - [`DecodeLoadGen`] — autoregressive decode sessions against a
+//!   [`DecodeScheduler`] (in-process) or the chunked `POST /generate`
+//!   endpoint: sessions arrive in bursts, decode lengths are
+//!   geometrically distributed, and the report carries tokens/sec plus
+//!   inter-token latency percentiles.
 
+use crate::coordinator::decode::DecodeScheduler;
 use crate::coordinator::router::Router;
-use crate::coordinator::server::http_request;
+use crate::coordinator::server::{http_request_stream, http_request_timeout};
 use crate::util::rng::Rng;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -22,6 +32,11 @@ pub struct LoadGenerator {
     pub model: String,
     /// RNG seed for inputs.
     pub seed: u64,
+    /// Per-request bound, applied to both drivers: an in-process request
+    /// waits at most this long for its response, and an HTTP request
+    /// caps its connect and every read by it — a stalled server counts
+    /// as an error instead of hanging the client thread forever.
+    pub request_timeout: Duration,
 }
 
 /// Aggregated load test results.
@@ -89,6 +104,7 @@ impl LoadGenerator {
                 let errors = Arc::clone(&errors);
                 let model = self.model.clone();
                 let (d_in, n_req, seed) = (self.d_in, self.requests_per_client, self.seed);
+                let timeout = self.request_timeout;
                 std::thread::spawn(move || {
                     let mut rng = Rng::new(seed + c as u64);
                     let mut lats = Vec::with_capacity(n_req);
@@ -96,7 +112,7 @@ impl LoadGenerator {
                         let input: Vec<f32> =
                             (0..d_in).map(|_| rng.f32_range(-1.0, 1.0)).collect();
                         let t = Instant::now();
-                        match router.infer_blocking(&model, input, Duration::from_secs(30)) {
+                        match router.infer_blocking(&model, input, timeout) {
                             Ok(resp) if resp.output.is_ok() => {
                                 lats.push(t.elapsed().as_micros() as u64);
                             }
@@ -135,6 +151,7 @@ impl LoadGenerator {
                 let errors = Arc::clone(&errors);
                 let model = self.model.clone();
                 let (d_in, n_req, seed) = (self.d_in, self.requests_per_client, self.seed);
+                let timeout = self.request_timeout;
                 std::thread::spawn(move || {
                     let mut rng = Rng::new(seed + 31 * c as u64);
                     let mut lats = Vec::with_capacity(n_req);
@@ -147,7 +164,9 @@ impl LoadGenerator {
                             input.join(",")
                         );
                         let t = Instant::now();
-                        match http_request(&addr, "POST", "/infer", &body) {
+                        // Bounded request: a stalled server is an error,
+                        // not a forever-blocked client thread.
+                        match http_request_timeout(&addr, "POST", "/infer", &body, timeout) {
                             Ok((200, _)) => lats.push(t.elapsed().as_micros() as u64),
                             _ => {
                                 errors.fetch_add(1, Ordering::Relaxed);
@@ -164,6 +183,222 @@ impl LoadGenerator {
         }
         let wall = t0.elapsed();
         LoadGenReport::from_latencies(all, errors.load(Ordering::Relaxed) as usize, wall, 0.0)
+    }
+}
+
+/// Decode-workload settings: concurrent autoregressive sessions with
+/// bursty arrivals and geometrically-distributed decode lengths.
+#[derive(Debug, Clone)]
+pub struct DecodeLoadGen {
+    /// Total sessions to run (one client thread each).
+    pub sessions: usize,
+    /// Sessions launched per arrival burst.
+    pub burst: usize,
+    /// Pause between bursts.
+    pub burst_gap: Duration,
+    /// Prompt width (must match the model's d = d_in = d_out).
+    pub d: usize,
+    /// Model name (`run_generate_http` only).
+    pub model: String,
+    /// RNG seed for prompts and decode lengths.
+    pub seed: u64,
+    /// Mean of the geometric decode-length distribution.
+    pub mean_tokens: usize,
+    /// Per-session bound: admission retries stop at it, and every HTTP
+    /// read is capped by it.
+    pub request_timeout: Duration,
+}
+
+/// Aggregated decode-workload results.
+#[derive(Debug, Clone)]
+pub struct DecodeLoadReport {
+    pub sessions: usize,
+    pub errors: usize,
+    pub tokens: usize,
+    pub wall_seconds: f64,
+    pub tokens_per_sec: f64,
+    pub intertoken_us_p50: u64,
+    pub intertoken_us_p99: u64,
+    pub intertoken_us_mean: f64,
+}
+
+impl DecodeLoadReport {
+    fn from_gaps(
+        sessions: usize,
+        errors: usize,
+        tokens: usize,
+        mut gaps_us: Vec<u64>,
+        wall: Duration,
+    ) -> DecodeLoadReport {
+        gaps_us.sort_unstable();
+        let n = gaps_us.len().max(1);
+        let pct =
+            |q: f64| gaps_us[((q / 100.0 * n as f64).ceil() as usize).clamp(1, n) - 1];
+        DecodeLoadReport {
+            sessions,
+            errors,
+            tokens,
+            wall_seconds: wall.as_secs_f64(),
+            tokens_per_sec: tokens as f64 / wall.as_secs_f64().max(1e-9),
+            intertoken_us_p50: if gaps_us.is_empty() { 0 } else { pct(50.0) },
+            intertoken_us_p99: if gaps_us.is_empty() { 0 } else { pct(99.0) },
+            intertoken_us_mean: gaps_us.iter().sum::<u64>() as f64 / n as f64,
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} sessions, {} tokens in {:.2}s → {:.0} tok/s | inter-token µs p50={} p99={} mean={:.0} | errors {}",
+            self.sessions,
+            self.tokens,
+            self.wall_seconds,
+            self.tokens_per_sec,
+            self.intertoken_us_p50,
+            self.intertoken_us_p99,
+            self.intertoken_us_mean,
+            self.errors
+        )
+    }
+}
+
+/// Geometric decode length with the given mean (≥ 1): trials to the
+/// first success of a Bernoulli(1/mean), capped at 8× the mean so one
+/// unlucky session cannot dominate a run's wall clock.
+fn geometric_len(rng: &mut Rng, mean: usize) -> usize {
+    let mean = mean.max(1);
+    let p = 1.0 / mean as f32;
+    let cap = 8 * mean;
+    let mut n = 1;
+    while rng.f32_range(0.0, 1.0) > p && n < cap {
+        n += 1;
+    }
+    n
+}
+
+/// Per-session outcome: (tokens received, inter-token gaps µs, errors).
+type SessionOutcome = (usize, Vec<u64>, usize);
+
+impl DecodeLoadGen {
+    /// Drive a scheduler directly (in-process). The scheduler's step
+    /// loop must be running ([`DecodeScheduler::spawn_loop`]).
+    ///
+    /// Sessions past the scheduler's capacity retry with a short backoff
+    /// until admitted or timed out — bursty arrivals are *supposed* to
+    /// overrun capacity; only a session that never gets in is an error.
+    pub fn run_scheduler(&self, sched: &Arc<DecodeScheduler>) -> DecodeLoadReport {
+        self.run_with(|prompt, len, timeout| {
+            let sched = Arc::clone(sched);
+            move || {
+                let deadline = Instant::now() + timeout;
+                let stream = loop {
+                    match sched.begin(&prompt, Some(len)) {
+                        Ok(s) => break s,
+                        Err(e) if e.to_string().contains("overloaded") => {
+                            if Instant::now() > deadline {
+                                return (0, Vec::new(), 1);
+                            }
+                            std::thread::sleep(Duration::from_micros(200));
+                        }
+                        Err(_) => return (0, Vec::new(), 1),
+                    }
+                };
+                let mut gaps = Vec::with_capacity(len);
+                let mut tokens = 0usize;
+                let mut last = Instant::now();
+                let mut first = true;
+                while stream.next().is_some() {
+                    // The first gap is time-to-first-token, not an
+                    // inter-token gap; skip it.
+                    if !first {
+                        gaps.push(last.elapsed().as_micros() as u64);
+                    }
+                    first = false;
+                    last = Instant::now();
+                    tokens += 1;
+                }
+                (tokens, gaps, 0)
+            }
+        })
+    }
+
+    /// Drive the chunked `POST /generate` endpoint (full network path).
+    pub fn run_generate_http(&self, addr: std::net::SocketAddr) -> DecodeLoadReport {
+        let model = self.model.clone();
+        self.run_with(|prompt, len, timeout| {
+            let model = model.clone();
+            move || {
+                let nums: Vec<String> =
+                    prompt.iter().map(|v| format!("{v:.6}")).collect();
+                let body = format!(
+                    r#"{{"model":"{model}","prompt":[{}],"max_tokens":{len}}}"#,
+                    nums.join(",")
+                );
+                let deadline = Instant::now() + timeout;
+                loop {
+                    let mut gaps = Vec::with_capacity(len);
+                    let mut tokens = 0usize;
+                    let mut last = Instant::now();
+                    let mut first = true;
+                    let result =
+                        http_request_stream(&addr, "POST", "/generate", &body, timeout, |_| {
+                            if !first {
+                                gaps.push(last.elapsed().as_micros() as u64);
+                            }
+                            first = false;
+                            last = Instant::now();
+                            tokens += 1;
+                            true
+                        });
+                    match result {
+                        Ok((200, _)) => return (tokens, gaps, 0),
+                        // 429 = decode capacity full; bursty arrivals are
+                        // expected to hit it, so retry to the deadline.
+                        Ok((429, _)) if Instant::now() < deadline => {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        _ => return (0, Vec::new(), 1),
+                    }
+                }
+            }
+        })
+    }
+
+    /// Shared driver: launch sessions in bursts, each as one client
+    /// thread built by `mk_client(prompt, decode_len, timeout)`.
+    fn run_with<C, F>(&self, mut mk_client: C) -> DecodeLoadReport
+    where
+        C: FnMut(Vec<f32>, usize, Duration) -> F,
+        F: FnOnce() -> SessionOutcome + Send + 'static,
+    {
+        let mut rng = Rng::new(self.seed);
+        let t0 = Instant::now();
+        let mut handles = Vec::with_capacity(self.sessions);
+        let mut launched = 0usize;
+        while launched < self.sessions {
+            let burst = self.burst.max(1).min(self.sessions - launched);
+            for _ in 0..burst {
+                let prompt: Vec<f32> =
+                    (0..self.d).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+                let len = geometric_len(&mut rng, self.mean_tokens);
+                let client = mk_client(prompt, len, self.request_timeout);
+                handles.push(std::thread::spawn(client));
+                launched += 1;
+            }
+            if launched < self.sessions && !self.burst_gap.is_zero() {
+                std::thread::sleep(self.burst_gap);
+            }
+        }
+        let mut tokens = 0usize;
+        let mut errors = 0usize;
+        let mut gaps = Vec::new();
+        for h in handles {
+            let (t, g, e) = h.join().expect("decode client thread");
+            tokens += t;
+            gaps.extend(g);
+            errors += e;
+        }
+        DecodeLoadReport::from_gaps(self.sessions, errors, tokens, gaps, t0.elapsed())
     }
 }
 
@@ -199,6 +434,7 @@ mod tests {
             d_in: 16,
             model: "m1".into(),
             seed: 1,
+            request_timeout: Duration::from_secs(30),
         };
         let report = gen.run_inprocess(&r);
         assert_eq!(report.total_requests, 100);
@@ -206,6 +442,62 @@ mod tests {
         assert!(report.throughput_rps > 0.0);
         assert!(report.latency_us_p50 <= report.latency_us_p99);
         assert!(!report.summary().is_empty());
+    }
+
+    #[test]
+    fn decode_load_runs_bursty_sessions_against_a_scheduler() {
+        use crate::coordinator::decode::{DecodeConfig, DecodeScheduler};
+        use crate::coordinator::metrics::Metrics;
+        use crate::plan::Planner;
+        let cfg = ModelConfig::from_json(
+            r#"{"name":"dec","dims":[16,32,16],"sparsity":0.25,"seed":7}"#,
+        )
+        .unwrap();
+        let mlp = TernaryMlp::planned(&cfg, &Arc::new(Planner::new())).unwrap();
+        let cache = Arc::clone(mlp.plan_cache().unwrap());
+        let sched = Arc::new(
+            DecodeScheduler::new(
+                "dec",
+                &cache,
+                Arc::new(Metrics::new()),
+                DecodeConfig {
+                    max_sessions: 3,
+                    default_max_tokens: 8,
+                },
+            )
+            .unwrap(),
+        );
+        sched.spawn_loop();
+        let gen = DecodeLoadGen {
+            sessions: 6, // 2× capacity: the backoff path must absorb it
+            burst: 3,
+            burst_gap: Duration::from_millis(1),
+            d: 16,
+            model: "dec".into(),
+            seed: 3,
+            mean_tokens: 4,
+            request_timeout: Duration::from_secs(30),
+        };
+        let report = gen.run_scheduler(&sched);
+        assert_eq!(report.sessions, 6);
+        assert_eq!(report.errors, 0, "{}", report.summary());
+        assert!(report.tokens >= 6, "every session decodes ≥ 1 token");
+        assert!(report.tokens_per_sec > 0.0);
+        assert!(report.intertoken_us_p50 <= report.intertoken_us_p99);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn geometric_lengths_hover_around_the_mean() {
+        let mut rng = Rng::new(42);
+        let n = 2000;
+        let total: usize = (0..n).map(|_| geometric_len(&mut rng, 8)).sum();
+        let mean = total as f64 / n as f64;
+        assert!(
+            (4.0..16.0).contains(&mean),
+            "geometric mean wildly off: {mean}"
+        );
+        assert!((0..50).all(|_| geometric_len(&mut rng, 1) == 1));
     }
 
     #[test]

@@ -107,6 +107,23 @@ pub struct Metrics {
     /// part of the compute wall time the batcher's queue model sees, so
     /// surfacing it keeps the load controller's latency budget honest.
     pub pipeline_stall_us: AtomicU64,
+    /// Decode: tokens emitted across all sessions (counter).
+    pub decode_tokens: AtomicU64,
+    /// Decode: continuous-batching steps executed (counter).
+    pub decode_steps: AtomicU64,
+    /// Decode: total session rows across steps (counter; together with
+    /// `decode_steps` this gives mean batch occupancy).
+    pub decode_step_rows: AtomicU64,
+    /// Decode: currently active sessions (gauge, set by the scheduler).
+    pub decode_active_sessions: AtomicU64,
+    /// Decode: sessions admitted over the model's lifetime (counter).
+    pub decode_sessions_started: AtomicU64,
+    /// Decode: `begin`s refused at the session capacity (429-style;
+    /// counter).
+    pub decode_rejections: AtomicU64,
+    /// Inter-token latency (per session: the gap between its consecutive
+    /// tokens), across all sessions.
+    pub intertoken_latency: LatencyHistogram,
     /// EWMA of the inter-arrival gap in µs (0 = fewer than two arrivals).
     ewma_interarrival_us: AtomicU64,
     /// Timestamp of the last arrival in µs since the metrics epoch.
@@ -115,6 +132,14 @@ pub struct Metrics {
     /// `compute_latency`'s lifetime mean, this tracks load *shifts* — the
     /// signal the autoscaler steers threads by.
     ewma_compute_us: AtomicU64,
+    /// EWMA of the gap between decode steps in µs (0 = fewer than two
+    /// steps).
+    ewma_interstep_us: AtomicU64,
+    /// Timestamp of the last decode step in µs since the metrics epoch.
+    last_decode_step_us: AtomicU64,
+    /// EWMA of rows per decode step, in milli-rows (fixed-point so small
+    /// integer row counts keep fractional smoothing).
+    ewma_step_mrows: AtomicU64,
 }
 
 impl Metrics {
@@ -188,6 +213,55 @@ impl Metrics {
         let last = self.last_arrival_us.load(Ordering::Relaxed);
         let silence = now_us().saturating_sub(last);
         1e6 / ewma.max(silence) as f64
+    }
+
+    /// Note one continuous-batching decode step of `rows` session rows
+    /// (one token per row): bumps the token/step counters and maintains
+    /// the inter-step + occupancy EWMAs [`Metrics::decode_tokens_per_sec`]
+    /// reads. Same α and benign-race trade-offs as [`Metrics::note_arrival`].
+    pub fn note_decode_step(&self, rows: usize) {
+        self.decode_steps.fetch_add(1, Ordering::Relaxed);
+        self.decode_step_rows
+            .fetch_add(rows as u64, Ordering::Relaxed);
+        self.decode_tokens.fetch_add(rows as u64, Ordering::Relaxed);
+        let mrows = (rows as u64) * 1000;
+        let old = self.ewma_step_mrows.load(Ordering::Relaxed);
+        let new = if old == 0 { mrows } else { (old * 7 + mrows) / 8 };
+        self.ewma_step_mrows.store(new.max(1), Ordering::Relaxed);
+        let now = now_us();
+        let prev = self.last_decode_step_us.swap(now, Ordering::Relaxed);
+        if prev == 0 || now <= prev {
+            return; // first step, or same-µs burst: no usable gap
+        }
+        let gap = now - prev;
+        let old = self.ewma_interstep_us.load(Ordering::Relaxed);
+        let new = if old == 0 { gap } else { (old * 7 + gap) / 8 };
+        self.ewma_interstep_us.store(new.max(1), Ordering::Relaxed);
+    }
+
+    /// Smoothed decode throughput in tokens/second (0.0 until two steps
+    /// have run). Rows-per-step EWMA over the inter-step gap EWMA, with
+    /// the same silence decay as [`Metrics::arrival_rate_rps`] — an idle
+    /// scheduler's rate falls off instead of pinning at the last burst.
+    pub fn decode_tokens_per_sec(&self) -> f64 {
+        let ewma = self.ewma_interstep_us.load(Ordering::Relaxed);
+        if ewma == 0 {
+            return 0.0;
+        }
+        let last = self.last_decode_step_us.load(Ordering::Relaxed);
+        let silence = now_us().saturating_sub(last);
+        let rows = self.ewma_step_mrows.load(Ordering::Relaxed) as f64 / 1000.0;
+        rows * 1e6 / ewma.max(silence) as f64
+    }
+
+    /// Mean session rows per decode step over the model's lifetime.
+    pub fn decode_mean_occupancy(&self) -> f64 {
+        let steps = self.decode_steps.load(Ordering::Relaxed);
+        if steps == 0 {
+            0.0
+        } else {
+            self.decode_step_rows.load(Ordering::Relaxed) as f64 / steps as f64
+        }
     }
 
     /// Mean rows per executed batch.
@@ -274,6 +348,55 @@ impl Metrics {
                     (
                         "stall_us_total",
                         Json::num(self.pipeline_stall_us.load(Ordering::Relaxed) as f64),
+                    ),
+                ]),
+            ),
+            (
+                "decode",
+                Json::obj(vec![
+                    (
+                        "active_sessions",
+                        Json::num(
+                            self.decode_active_sessions.load(Ordering::Relaxed) as f64,
+                        ),
+                    ),
+                    (
+                        "sessions_started",
+                        Json::num(
+                            self.decode_sessions_started.load(Ordering::Relaxed) as f64,
+                        ),
+                    ),
+                    (
+                        "rejections",
+                        Json::num(self.decode_rejections.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "tokens",
+                        Json::num(self.decode_tokens.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "steps",
+                        Json::num(self.decode_steps.load(Ordering::Relaxed) as f64),
+                    ),
+                    ("tokens_per_sec", Json::num(self.decode_tokens_per_sec())),
+                    ("mean_occupancy", Json::num(self.decode_mean_occupancy())),
+                    (
+                        "intertoken_us",
+                        Json::obj(vec![
+                            ("mean", Json::num(self.intertoken_latency.mean_us())),
+                            (
+                                "p50",
+                                Json::num(
+                                    self.intertoken_latency.percentile_us(50.0) as f64
+                                ),
+                            ),
+                            (
+                                "p99",
+                                Json::num(
+                                    self.intertoken_latency.percentile_us(99.0) as f64
+                                ),
+                            ),
+                        ]),
                     ),
                 ]),
             ),

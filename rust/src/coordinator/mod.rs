@@ -23,10 +23,19 @@
 //! pool with per-model plan caches. [`Router`] is the thin front door;
 //! models load and unload at runtime through the registry (HTTP:
 //! `POST /load_model`, `POST /unload`, `GET /status` in [`server`]).
+//!
+//! PR 9 opens the autoregressive decode workload: a per-model
+//! [`decode::DecodeScheduler`] continuously batches concurrent
+//! [`crate::model::DecodeSession`]s into one M-row step through a single
+//! pinned M=1-kernel [`crate::plan::MlpPlan`] (batched steps are
+//! bitwise-identical to independent per-session forwards; steady state
+//! allocates nothing), streaming tokens sender-per-session to the
+//! chunked `POST /generate` endpoint. Schedulers drain with their model.
 
 pub mod request;
 pub mod metrics;
 pub mod batcher;
+pub mod decode;
 pub mod engine;
 pub mod load;
 pub mod registry;
@@ -36,9 +45,10 @@ pub mod loadgen;
 pub mod trace;
 
 pub use batcher::{BatchPolicy, DynamicBatcher, SubmitError};
+pub use decode::{DecodeConfig, DecodeScheduler, DecodeStream, StreamEvent, TokenEvent};
 pub use engine::{Backend, Engine};
 pub use load::{Advice, AdviceHysteresis, LoadControlConfig, LoadController};
-pub use loadgen::{LoadGenReport, LoadGenerator};
+pub use loadgen::{DecodeLoadGen, DecodeLoadReport, LoadGenReport, LoadGenerator};
 pub use metrics::Metrics;
 pub use registry::{AdmissionController, LoadOptions, ModelHandle, ModelRegistry, ModelState};
 pub use request::{InferenceRequest, InferenceResponse};

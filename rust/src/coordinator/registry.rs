@@ -35,6 +35,7 @@
 //! the plan cache of) a model whose loop is already gone.
 
 use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher, SubmitError};
+use crate::coordinator::decode::{DecodeConfig, DecodeScheduler};
 use crate::coordinator::engine::Engine;
 use crate::coordinator::load::{
     pow2_floor, split_thread_budget, Advice, AdviceHysteresis, LoadControlConfig,
@@ -143,6 +144,9 @@ pub struct LoadOptions {
     /// to first traffic ([`ModelRegistry::load`] fills this from the
     /// config's `batch_buckets`).
     pub buckets: Vec<usize>,
+    /// Decode serving knobs for this model's lazily-created
+    /// [`DecodeScheduler`] (session capacity + default token budget).
+    pub decode: DecodeConfig,
 }
 
 impl Default for LoadOptions {
@@ -153,6 +157,7 @@ impl Default for LoadOptions {
             queue_budget: 0,
             warm: false,
             buckets: Vec::new(),
+            decode: DecodeConfig::default(),
         }
     }
 }
@@ -181,6 +186,11 @@ pub struct ModelHandle {
     /// sees the disconnect).
     tick_stop: Mutex<Option<mpsc::Sender<()>>>,
     tick_handle: Mutex<Option<JoinHandle<()>>>,
+    /// Decode scheduler, created (and its step loop started) on the first
+    /// `/generate`; a model that never decodes pays nothing. Taken and
+    /// shut down by the drain path.
+    decode: Mutex<Option<Arc<DecodeScheduler>>>,
+    decode_cfg: DecodeConfig,
 }
 
 impl ModelHandle {
@@ -204,6 +214,53 @@ impl ModelHandle {
     /// This model's current share of the fleet thread budget.
     pub fn thread_cap(&self) -> usize {
         self.thread_cap.load(Ordering::Relaxed)
+    }
+
+    /// The model's decode scheduler, creating it — and starting its step
+    /// loop — on first use. Decode needs the native plan-cache path (an
+    /// explicit-layer or XLA-only engine has no cache to pin a decode
+    /// plan in) and a square model (`d_in == d_out`, checked by
+    /// [`DecodeScheduler::new`]); both surface as typed errors here
+    /// rather than panics deep in a step.
+    pub fn decode_scheduler(&self) -> Result<Arc<DecodeScheduler>> {
+        let mut slot = self.decode.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(s) = slot.as_ref() {
+            return Ok(Arc::clone(s));
+        }
+        // Check state under the slot lock: drain takes the slot first,
+        // then this check refuses a re-create behind its back.
+        if self.state() == ModelState::Draining {
+            return Err(Error::Serve(format!(
+                "model '{}' is draining",
+                self.engine.name
+            )));
+        }
+        let cache = self.engine.plan_cache().ok_or_else(|| {
+            Error::Serve(format!(
+                "model '{}' has no plan cache (explicit-layer/XLA engines \
+                 do not serve decode)",
+                self.engine.name
+            ))
+        })?;
+        let sched = Arc::new(DecodeScheduler::new(
+            self.engine.name.clone(),
+            cache,
+            Arc::clone(&self.engine.metrics),
+            self.decode_cfg.clone(),
+        )?);
+        sched.spawn_loop();
+        *slot = Some(Arc::clone(&sched));
+        Ok(sched)
+    }
+
+    /// The decode scheduler if one has already been started (status and
+    /// metrics rendering must not force-create one).
+    pub fn decode_scheduler_if_started(&self) -> Option<Arc<DecodeScheduler>> {
+        self.decode
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .as_ref()
+            .map(Arc::clone)
     }
 
     /// Move to `to` unless the model is already `Draining` — drain is
@@ -420,6 +477,8 @@ impl ModelRegistry {
             loop_handle: Mutex::new(None),
             tick_stop: Mutex::new(None),
             tick_handle: Mutex::new(None),
+            decode: Mutex::new(None),
+            decode_cfg: opts.decode,
         });
         // Eager warm happens before the serving threads exist: an
         // autoscaled model's advise tick would otherwise race
@@ -691,9 +750,13 @@ impl ModelRegistry {
     /// 2. stop and join the autoscale tick thread **before** touching the
     ///    batch loop (a tick joined after the loop could re-advise a
     ///    model with no consumer left and mutate its plan cache mid-free);
-    /// 3. close the batcher — queued requests are still handed to the
+    /// 3. shut the decode scheduler down (if one was started): its step
+    ///    loop joins and every open `/generate` stream ends — decode
+    ///    sessions hold arena leases, so they must retire before the
+    ///    plan cache is released;
+    /// 4. close the batcher — queued requests are still handed to the
     ///    batch loop, so nothing accepted is ever dropped;
-    /// 4. join the batch loop: when it exits, every in-flight response
+    /// 5. join the batch loop: when it exits, every in-flight response
     ///    has been delivered.
     fn drain(handle: &ModelHandle) {
         handle.state.store(ModelState::Draining as u8, Ordering::Release);
@@ -709,6 +772,14 @@ impl ModelRegistry {
             .take()
         {
             let _ = h.join();
+        }
+        if let Some(d) = handle
+            .decode
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()
+        {
+            d.shutdown();
         }
         handle.batcher.close();
         if let Some(h) = handle
@@ -766,10 +837,15 @@ impl ModelRegistry {
             .cloned()
             .collect();
         // Phase 1: stop accepting + stop ticks everywhere, so all models
-        // drain concurrently instead of serially.
+        // drain concurrently instead of serially. Decode schedulers shut
+        // down here too — each join is cheap (the step loop exits at its
+        // next condvar wake) and open token streams end immediately.
         for h in &handles {
             h.state.store(ModelState::Draining as u8, Ordering::Release);
             h.tick_stop.lock().unwrap_or_else(|e| e.into_inner()).take();
+            if let Some(d) = h.decode.lock().unwrap_or_else(|e| e.into_inner()).take() {
+                d.shutdown();
+            }
             h.batcher.close();
         }
         // Phase 2: join ticks before any batch loop.
@@ -1015,5 +1091,46 @@ mod tests {
         reg.shutdown();
         reg.shutdown(); // second call must be a no-op, not a deadlock
         assert!(reg.submit("m1", vec![0.1; 8]).is_err());
+    }
+
+    /// Square dims, as the decode feedback loop requires.
+    fn square_cfg(name: &str, seed: u64) -> ModelConfig {
+        ModelConfig::from_json(&format!(
+            r#"{{"name":"{name}","dims":[8,16,8],"sparsity":0.5,"seed":{seed}}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn decode_scheduler_is_lazy_and_drains_with_the_model() {
+        let reg = registry();
+        let handle = reg
+            .load(&square_cfg("m1", 13), LoadOptions::default())
+            .unwrap();
+        assert!(
+            handle.decode_scheduler_if_started().is_none(),
+            "no /generate traffic yet — no scheduler"
+        );
+        let sched = handle.decode_scheduler().unwrap();
+        let again = handle.decode_scheduler().unwrap();
+        assert!(Arc::ptr_eq(&sched, &again), "one scheduler per model");
+        let stream = sched.begin(&[0.25; 8], Some(3)).unwrap();
+        let first = stream.next().expect("step loop delivers tokens");
+        assert_eq!(first.index, 0);
+        reg.unload("m1").unwrap();
+        // Drain shut the scheduler down: the stream ends rather than
+        // hanging...
+        while stream.next().is_some() {}
+        // ...and the drained handle refuses to build a replacement.
+        let err = handle.decode_scheduler().unwrap_err();
+        assert!(err.to_string().contains("draining"), "{err}");
+    }
+
+    #[test]
+    fn decode_scheduler_requires_square_dims() {
+        let reg = registry();
+        let handle = reg.load(&cfg("m1", 14), LoadOptions::default()).unwrap();
+        let err = handle.decode_scheduler().unwrap_err();
+        assert!(err.to_string().contains("d_in == d_out"), "{err}");
     }
 }

@@ -12,7 +12,17 @@
 //! - `POST /unload`     body `{"model": "..."}` — drains in-flight
 //!   batches (none dropped), joins the batch loop, releases plan/arena
 //!   memory → `{"model": "...", "unloaded": true}`; 404 for unknown names.
-//! - `GET  /status`     per-model lifecycle state + queue/latency gauges,
+//! - `POST /generate`   body `{"model": "...", "prompt": [f32...],
+//!   "max_tokens": n}` — opens a decode session on the model's
+//!   continuous-batching [`crate::coordinator::DecodeScheduler`] and
+//!   streams one NDJSON line `{"index": n, "token": n}` per decoded token
+//!   as a `Transfer-Encoding: chunked` response chunk. 429 when the
+//!   model's decode session capacity is full, 503 for unknown/draining
+//!   models, 400 for non-square models (decode needs `d_in == d_out`).
+//!   A client hang-up mid-stream cancels the session before its next
+//!   step.
+//! - `GET  /status`     per-model lifecycle state + queue/latency gauges
+//!   (including a `decode` row once a model has served `/generate`),
 //!   plus fleet-level rows (thread budget, shared-pool size, tuned
 //!   classes, registry hit/miss).
 //! - `GET  /metrics`    `{"models": [{model, state, metrics}...],
@@ -26,6 +36,7 @@
 //! [`ModelRegistry`]; `/infer` uses the same submit path the in-process
 //! callers do.
 
+use crate::coordinator::decode::{DecodeConfig, StreamEvent};
 use crate::coordinator::registry::{LoadOptions, ModelRegistry};
 use crate::coordinator::router::Router;
 use crate::coordinator::BatchPolicy;
@@ -161,6 +172,9 @@ fn handle_connection(
 
     match (method.as_str(), path.as_str()) {
         ("POST", "/infer") => handle_infer(&mut stream, router, &body, timeout),
+        ("POST", "/generate") => {
+            handle_generate(&mut stream, router.registry(), &body, timeout)
+        }
         ("POST", "/load_model") => handle_load_model(&mut stream, router.registry(), &body),
         ("POST", "/unload") => handle_unload(&mut stream, router.registry(), &body),
         ("GET", "/status") => {
@@ -266,6 +280,30 @@ fn status_json(registry: &ModelRegistry) -> Json {
                             .unwrap_or(0.0),
                     ),
                 ),
+                (
+                    // Null until the model's first /generate starts its
+                    // decode scheduler.
+                    "decode",
+                    h.decode_scheduler_if_started()
+                        .map(|d| {
+                            Json::obj(vec![
+                                (
+                                    "active_sessions",
+                                    Json::num(d.active_sessions() as f64),
+                                ),
+                                ("capacity", Json::num(d.capacity() as f64)),
+                                (
+                                    "tokens_per_sec",
+                                    Json::num(m.decode_tokens_per_sec()),
+                                ),
+                                (
+                                    "mean_occupancy",
+                                    Json::num(m.decode_mean_occupancy()),
+                                ),
+                            ])
+                        })
+                        .unwrap_or(Json::Null),
+                ),
             ])
         })
         .collect::<Vec<_>>();
@@ -331,6 +369,19 @@ fn handle_load_model(
             .get("warm")
             .and_then(|v| v.as_bool())
             .unwrap_or(false),
+        decode: {
+            let d = DecodeConfig::default();
+            DecodeConfig {
+                max_sessions: parsed
+                    .get("decode_sessions")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(d.max_sessions),
+                default_max_tokens: parsed
+                    .get("decode_max_tokens")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(d.default_max_tokens),
+            }
+        },
         ..LoadOptions::default()
     };
     match registry.load(&cfg, opts) {
@@ -436,6 +487,103 @@ fn handle_infer(
     }
 }
 
+/// `POST /generate`: open a decode session and stream its tokens as
+/// chunked NDJSON. The worker thread stays on this connection for the
+/// life of the stream — the same thread-per-request model `/infer` uses,
+/// except the response body grows one chunk per decode step.
+fn handle_generate(
+    stream: &mut TcpStream,
+    registry: &ModelRegistry,
+    body: &str,
+    timeout: Duration,
+) -> std::io::Result<()> {
+    let parsed = match Json::parse(body) {
+        Ok(v) => v,
+        Err(e) => return respond(stream, 400, &err_json(&format!("bad json: {e}"))),
+    };
+    let model = match parsed.get("model").and_then(|m| m.as_str()) {
+        Some(m) => m.to_string(),
+        None => return respond(stream, 400, &err_json("missing 'model'")),
+    };
+    let prompt: Vec<f32> = match parsed.get("prompt").and_then(|p| p.as_arr()) {
+        Some(arr) => {
+            let mut v = Vec::with_capacity(arr.len());
+            for item in arr {
+                match item.as_f64() {
+                    Some(f) => v.push(f as f32),
+                    None => {
+                        return respond(stream, 400, &err_json("prompt must be numbers"))
+                    }
+                }
+            }
+            v
+        }
+        None => return respond(stream, 400, &err_json("missing 'prompt' array")),
+    };
+    if prompt.is_empty() {
+        return respond(stream, 400, &err_json("empty prompt"));
+    }
+    let max_tokens = parsed.get("max_tokens").and_then(|v| v.as_usize());
+    let handle = match registry.get(&model) {
+        Some(h) => h,
+        None => return respond(stream, 503, &err_json(&format!("unknown model '{model}'"))),
+    };
+    let sched = match handle.decode_scheduler() {
+        Ok(s) => s,
+        Err(e) => {
+            let msg = e.to_string();
+            // Draining is an availability condition; everything else
+            // (no plan cache, non-square dims) is a client asking a
+            // model that cannot decode.
+            let status = if msg.contains("draining") { 503 } else { 400 };
+            return respond(stream, status, &err_json(&msg));
+        }
+    };
+    let tokens = match sched.begin(&prompt, max_tokens) {
+        Ok(t) => t,
+        Err(e) => {
+            let msg = e.to_string();
+            let status = if msg.contains("overloaded") {
+                429
+            } else if msg.contains("draining") {
+                503
+            } else {
+                400
+            };
+            return respond(stream, status, &err_json(&msg));
+        }
+    };
+    // Session admitted: commit to a chunked 200 and stream.
+    stream.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\n\
+          Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+    )?;
+    loop {
+        match tokens.next_timeout(timeout) {
+            StreamEvent::Token(ev) => {
+                let line =
+                    format!("{{\"index\":{},\"token\":{}}}\n", ev.index, ev.token);
+                if write_chunk(stream, &line).is_err() {
+                    // Client hung up: dropping `tokens` flags the cancel;
+                    // the scheduler retires the session before its next
+                    // step.
+                    return Ok(());
+                }
+            }
+            // A stream idle past the request timeout is abandoned rather
+            // than allowed to pin its worker forever (drop cancels).
+            StreamEvent::Idle => break,
+            StreamEvent::Ended => break,
+        }
+    }
+    stream.write_all(b"0\r\n\r\n")
+}
+
+/// One HTTP/1.1 chunk: hex size line, payload, CRLF.
+fn write_chunk(stream: &mut TcpStream, data: &str) -> std::io::Result<()> {
+    write!(stream, "{:x}\r\n{data}\r\n", data.len())
+}
+
 fn err_json(msg: &str) -> String {
     Json::obj(vec![("error", Json::str(msg))]).encode()
 }
@@ -461,15 +609,48 @@ fn respond(stream: &mut TcpStream, status: u16, body: &str) -> std::io::Result<(
 }
 
 /// Minimal blocking HTTP client for tests/examples/loadgen (no reqwest
-/// offline). Returns (status, body).
+/// offline). Returns (status, body). Bounded by a 30 s default timeout —
+/// use [`http_request_timeout`] for an explicit bound.
 pub fn http_request(
     addr: &std::net::SocketAddr,
     method: &str,
     path: &str,
     body: &str,
 ) -> std::io::Result<(u16, String)> {
-    let mut stream = TcpStream::connect(addr)?;
+    http_request_timeout(addr, method, path, body, Duration::from_secs(30))
+}
+
+/// [`http_request`] with an explicit per-request bound: `timeout` caps
+/// the connect and every read, so a stalled server surfaces as a
+/// `WouldBlock`/`TimedOut` error instead of a caller blocked forever
+/// (the load generator's per-request timeout rides on this).
+pub fn http_request_timeout(
+    addr: &std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+    timeout: Duration,
+) -> std::io::Result<(u16, String)> {
+    http_request_stream(addr, method, path, body, timeout, |_| true)
+}
+
+/// Streaming variant for chunked responses (`POST /generate`):
+/// `on_chunk` sees each chunk payload as it arrives; returning `false`
+/// hangs the connection up early — the server observes the disconnect
+/// and cancels the decode session. Non-chunked responses invoke
+/// `on_chunk` once with the whole body. Returns (status, full body).
+pub fn http_request_stream(
+    addr: &std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+    timeout: Duration,
+    mut on_chunk: impl FnMut(&str) -> bool,
+) -> std::io::Result<(u16, String)> {
+    let mut stream = TcpStream::connect_timeout(addr, timeout)?;
     stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
     let req = format!(
         "{method} {path} HTTP/1.1\r\nHost: stgemm\r\nContent-Type: application/json\r\n\
          Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
@@ -485,23 +666,48 @@ pub fn http_request(
         .and_then(|s| s.parse().ok())
         .unwrap_or(0);
     let mut content_length = 0usize;
+    let mut chunked = false;
     loop {
         let mut line = String::new();
         reader.read_line(&mut line)?;
         if line.trim_end().is_empty() {
             break;
         }
-        if let Some(v) = line
-            .to_ascii_lowercase()
-            .strip_prefix("content-length:")
-            .map(|v| v.trim().to_string())
-        {
-            content_length = v.parse().unwrap_or(0);
+        let lower = line.to_ascii_lowercase();
+        if let Some(v) = lower.strip_prefix("content-length:") {
+            content_length = v.trim().parse().unwrap_or(0);
+        }
+        if let Some(v) = lower.strip_prefix("transfer-encoding:") {
+            chunked = v.trim() == "chunked";
         }
     }
-    let mut body = vec![0u8; content_length];
-    reader.read_exact(&mut body)?;
-    Ok((status, String::from_utf8_lossy(&body).into_owned()))
+    let mut full = String::new();
+    if chunked {
+        loop {
+            let mut size_line = String::new();
+            reader.read_line(&mut size_line)?;
+            let size = usize::from_str_radix(size_line.trim(), 16).unwrap_or(0);
+            if size == 0 {
+                break;
+            }
+            // Payload + trailing CRLF.
+            let mut chunk = vec![0u8; size + 2];
+            reader.read_exact(&mut chunk)?;
+            let payload = String::from_utf8_lossy(&chunk[..size]).into_owned();
+            full.push_str(&payload);
+            if !on_chunk(&payload) {
+                // Early hang-up: the stream drops here and the server's
+                // next chunk write fails.
+                return Ok((status, full));
+            }
+        }
+    } else {
+        let mut body = vec![0u8; content_length];
+        reader.read_exact(&mut body)?;
+        full = String::from_utf8_lossy(&body).into_owned();
+        on_chunk(&full);
+    }
+    Ok((status, full))
 }
 
 #[cfg(test)]
@@ -706,6 +912,98 @@ mod tests {
         ] {
             assert!(fleet.get(key).is_some(), "missing fleet row {key}");
         }
+    }
+
+    #[test]
+    fn generate_streams_tokens_over_http() {
+        let (server, _router) = start_server();
+        let a = server.local_addr;
+        // Decode needs square dims; the default m1 (8→4) can't serve it.
+        let load_body = r#"{"config":{"name":"sq","dims":[8,16,8],"sparsity":0.5,"seed":21},"autoscale":false}"#;
+        let (status, resp) = http_request(&a, "POST", "/load_model", load_body).unwrap();
+        assert_eq!(status, 200, "{resp}");
+        let gen = format!(
+            r#"{{"model":"sq","prompt":[{}],"max_tokens":4}}"#,
+            vec!["0.5"; 8].join(",")
+        );
+        let mut chunks: Vec<String> = Vec::new();
+        let (status, body) = http_request_stream(
+            &a,
+            "POST",
+            "/generate",
+            &gen,
+            Duration::from_secs(10),
+            |c| {
+                chunks.push(c.to_string());
+                true
+            },
+        )
+        .unwrap();
+        assert_eq!(status, 200, "{body}");
+        assert_eq!(chunks.len(), 4, "one chunk per token: {chunks:?}");
+        for (i, c) in chunks.iter().enumerate() {
+            let v = Json::parse(c.trim()).unwrap();
+            assert_eq!(v.get("index").unwrap().as_f64(), Some(i as f64));
+            assert!(v.get("token").unwrap().as_f64().is_some());
+        }
+        // /status now carries the model's decode row.
+        let (_, resp) = http_request(&a, "GET", "/status", "").unwrap();
+        let v = Json::parse(&resp).unwrap();
+        let models = v.get("models").unwrap().as_arr().unwrap();
+        let row = models
+            .iter()
+            .find(|m| m.get("model").unwrap().as_str() == Some("sq"))
+            .expect("sq row");
+        let decode = row.get("decode").unwrap();
+        assert_eq!(decode.get("active_sessions").unwrap().as_f64(), Some(0.0));
+        assert!(decode.get("tokens_per_sec").is_some());
+        assert!(decode.get("mean_occupancy").is_some());
+        // /metrics snapshot carries the decode section with the totals.
+        let (_, resp) = http_request(&a, "GET", "/metrics", "").unwrap();
+        let v = Json::parse(&resp).unwrap();
+        let row = v
+            .get("models")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|m| m.get("model").unwrap().as_str() == Some("sq"))
+            .expect("sq metrics row")
+            .get("metrics")
+            .unwrap()
+            .get("decode")
+            .expect("decode metrics section")
+            .clone();
+        assert_eq!(row.get("tokens").unwrap().as_f64(), Some(4.0));
+    }
+
+    #[test]
+    fn generate_error_paths() {
+        let (server, _router) = start_server();
+        let a = server.local_addr;
+        let prompt = vec!["0.5"; 8].join(",");
+        // Non-square model: decode is a client error, not an outage.
+        let bad = format!(r#"{{"model":"m1","prompt":[{prompt}]}}"#);
+        let (status, resp) = http_request(&a, "POST", "/generate", &bad).unwrap();
+        assert_eq!(status, 400, "{resp}");
+        assert!(resp.contains("d_in == d_out"), "{resp}");
+        // Unknown model → 503; empty/missing prompt → 400.
+        assert_eq!(
+            http_request(&a, "POST", "/generate", r#"{"model":"zzz","prompt":[1]}"#)
+                .unwrap()
+                .0,
+            503
+        );
+        assert_eq!(
+            http_request(&a, "POST", "/generate", r#"{"model":"m1","prompt":[]}"#)
+                .unwrap()
+                .0,
+            400
+        );
+        assert_eq!(
+            http_request(&a, "POST", "/generate", r#"{"model":"m1"}"#).unwrap().0,
+            400
+        );
     }
 
     #[test]

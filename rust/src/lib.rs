@@ -135,7 +135,15 @@
 //!   signals ([`coordinator::LoadController`]; thread advice snaps to
 //!   powers of two ≤ the ceiling) — both per executed batch and on a
 //!   timer tick with hysteresis, so an idle model's targets decay after a
-//!   burst.
+//!   burst. The stack also serves the **autoregressive decode** workload:
+//!   a per-model [`coordinator::DecodeScheduler`] continuously batches
+//!   concurrent [`model::DecodeSession`]s into one shared M-bucket step
+//!   through a single decode plan whose kernels are pinned to their M=1
+//!   choices, so a batched step is bitwise-identical to running each
+//!   session's step as an independent forward. Sessions hold leased
+//!   arena buffer pairs across steps (zero steady-state allocation) and
+//!   stream tokens over a chunked `POST /generate` endpoint; a client
+//!   hang-up cancels its session, and schedulers drain with their model.
 //! - [`bench`] — the measurement harness (timing the planned path) and
 //!   per-figure experiment drivers.
 //! - [`util`] — substrates built in-repo because the environment is offline:

@@ -8,6 +8,8 @@
 //! - `quantize`  generate + absmean-quantize a float model, save as .stw
 //! - `selftest`  cross-check native kernels against the PJRT artifact
 //! - `loadgen`   drive a running server with concurrent clients
+//! - `generate`  short end-to-end decode run: bursty sessions through the
+//!               continuous-batching scheduler (CI's decode smoke)
 //!
 //! This file is the **error boundary**: every library failure arrives as a
 //! typed [`stgemm::Error`], is printed once, and maps to a process exit
@@ -25,8 +27,8 @@ use stgemm::bench::harness::BenchScale;
 use stgemm::bench::report::{write_csv, Table};
 use stgemm::coordinator::server::{Server, ServerConfig};
 use stgemm::coordinator::{
-    Backend, BatchPolicy, Engine, LoadControlConfig, LoadGenerator, LoadOptions,
-    ModelRegistry, Router,
+    Backend, BatchPolicy, DecodeConfig, DecodeLoadGen, Engine, LoadControlConfig,
+    LoadGenerator, LoadOptions, ModelRegistry, Router,
 };
 use stgemm::model::{ModelConfig, TernaryMlp};
 use stgemm::perf::timer::CycleTimer;
@@ -46,6 +48,7 @@ fn main() {
         Some("quantize") => cmd_quantize(&args),
         Some("selftest") => cmd_selftest(&args),
         Some("loadgen") => cmd_loadgen(&args),
+        Some("generate") => cmd_generate(&args),
         _ => {
             print_usage();
             Ok(if args.has("help") || args.subcommand.is_none() {
@@ -77,6 +80,7 @@ USAGE: stgemm <subcommand> [options]
              [--max-batch 8] [--max-wait-us 2000] [--no-pipeline]
              [--no-autoscale] [--max-batch-cap 64] [--max-threads N]
              [--target-queue-us 2000] [--retune-secs N]
+             [--decode-sessions 4] [--decode-max-tokens 32]
              (load-aware by default: max_batch and threads track observed
               queue depth / arrival rate; --models serves a fleet through
               the model registry — a directory is scanned for *.json
@@ -111,7 +115,18 @@ USAGE: stgemm <subcommand> [options]
   quantize   --dims 256,1024,256 --seed 42 --out model.stw
   selftest   [--artifacts <dir>] [--model ffn_tiny]
   loadgen    --addr <host:port> --model <name> --d-in <n>
-             [--clients 8] [--requests 100]"
+             [--clients 8] [--requests 100] [--timeout-s 30]
+             [--generate] [--sessions 8] [--burst 4] [--burst-gap-ms 2]
+             [--mean-tokens 16]
+             (--generate switches to the decode workload: bursty
+              autoregressive sessions streaming POST /generate, reported
+              as tokens/sec + inter-token latency)
+  generate   [--model <cfg.json>] [--sessions 4] [--burst 2]
+             [--burst-gap-ms 1] [--mean-tokens 8] [--decode-sessions 4]
+             [--threads N] [--seed 3]
+             (in-process decode smoke: loads the config — default demo —
+              and runs bursty sessions through the continuous-batching
+              scheduler; exits non-zero on any session error)"
     );
 }
 
@@ -263,6 +278,16 @@ fn cmd_serve(args: &Args) -> Result<i32> {
                 queue_budget: args.usize("queue-budget", cfg.queue_budget),
                 warm: true,
                 buckets: cfg.batch_buckets.clone(),
+                decode: DecodeConfig {
+                    max_sessions: args.usize(
+                        "decode-sessions",
+                        DecodeConfig::default().max_sessions,
+                    ),
+                    default_max_tokens: args.usize(
+                        "decode-max-tokens",
+                        DecodeConfig::default().default_max_tokens,
+                    ),
+                },
             },
         )?;
         if have_table {
@@ -357,7 +382,7 @@ fn cmd_serve(args: &Args) -> Result<i32> {
         );
     }
     println!(
-        "[serve] fleet of {} on http://{} (/infer /load_model /unload /status /metrics)",
+        "[serve] fleet of {} on http://{} (/infer /generate /load_model /unload /status /metrics)",
         configs.len(),
         server.local_addr
     );
@@ -694,12 +719,35 @@ fn cmd_loadgen(args: &Args) -> Result<i32> {
     let addr: std::net::SocketAddr = addr_str
         .parse()
         .map_err(|e| Error::Config(format!("bad --addr '{addr_str}': {e}")))?;
+    let timeout = Duration::from_secs(args.u64("timeout-s", 30));
+    if args.has("generate") {
+        // Decode workload: bursty autoregressive sessions streaming the
+        // chunked POST /generate endpoint.
+        let gen = DecodeLoadGen {
+            sessions: args.usize("sessions", 8),
+            burst: args.usize("burst", 4),
+            burst_gap: Duration::from_millis(args.u64("burst-gap-ms", 2)),
+            d: args.usize("d-in", 256),
+            model: args.get_or("model", "ffn_demo").to_string(),
+            seed: args.u64("seed", 1),
+            mean_tokens: args.usize("mean-tokens", 16),
+            request_timeout: timeout,
+        };
+        println!(
+            "[loadgen] decode: {} sessions in bursts of {} → {addr}",
+            gen.sessions, gen.burst
+        );
+        let report = gen.run_generate_http(addr);
+        println!("{}", report.summary());
+        return Ok(i32::from(report.errors > 0));
+    }
     let gen = LoadGenerator {
         clients: args.usize("clients", 8),
         requests_per_client: args.usize("requests", 100),
         d_in: args.usize("d-in", 256),
         model: args.get_or("model", "ffn_demo").to_string(),
         seed: args.u64("seed", 1),
+        request_timeout: timeout,
     };
     println!(
         "[loadgen] {} clients × {} requests → {addr}",
@@ -707,5 +755,76 @@ fn cmd_loadgen(args: &Args) -> Result<i32> {
     );
     let report = gen.run_http(addr);
     println!("{}", report.summary());
+    Ok(i32::from(report.errors > 0))
+}
+
+/// `stgemm generate`: a short end-to-end decode run, in-process (no port
+/// to bind — CI-safe). Loads the config (default: the demo model), warms
+/// a decode scheduler through the registry's lazy path, and pushes
+/// bursty sessions through the continuous-batching step loop.
+fn cmd_generate(args: &Args) -> Result<i32> {
+    let mut cfg = match args.get("model") {
+        Some(path) => ModelConfig::from_file(path)?,
+        None => {
+            eprintln!("[generate] no --model given; using the default demo config");
+            ModelConfig::default()
+        }
+    };
+    cfg.threads = args.usize("threads", cfg.threads).max(1);
+    if cfg.d_in() != cfg.d_out() {
+        return Err(Error::Config(format!(
+            "decode requires a square model (d_in == d_out); '{}' is {} → {}",
+            cfg.name,
+            cfg.d_in(),
+            cfg.d_out()
+        )));
+    }
+    let registry = ModelRegistry::new(Arc::new(Planner::new()));
+    let handle = registry.load(
+        &cfg,
+        LoadOptions {
+            decode: DecodeConfig {
+                max_sessions: args.usize(
+                    "decode-sessions",
+                    DecodeConfig::default().max_sessions,
+                ),
+                default_max_tokens: args.usize(
+                    "decode-max-tokens",
+                    DecodeConfig::default().default_max_tokens,
+                ),
+            },
+            ..LoadOptions::default()
+        },
+    )?;
+    let sched = handle.decode_scheduler()?;
+    let gen = DecodeLoadGen {
+        sessions: args.usize("sessions", 4),
+        burst: args.usize("burst", 2),
+        burst_gap: Duration::from_millis(args.u64("burst-gap-ms", 1)),
+        d: cfg.d_in(),
+        model: cfg.name.clone(),
+        seed: args.u64("seed", 3),
+        mean_tokens: args.usize("mean-tokens", 8),
+        request_timeout: Duration::from_secs(args.u64("timeout-s", 30)),
+    };
+    println!(
+        "[generate] model '{}' (d={}): {} sessions in bursts of {}, \
+         capacity {} (M-bucket {})",
+        cfg.name,
+        cfg.d_in(),
+        gen.sessions,
+        gen.burst,
+        sched.capacity(),
+        sched.capacity().next_power_of_two(),
+    );
+    let report = gen.run_scheduler(&sched);
+    println!("{}", report.summary());
+    let stats = sched.arena_stats();
+    println!(
+        "[generate] decode arena: {} allocations, {} reuses (steady state \
+         allocates nothing)",
+        stats.allocations, stats.reuses
+    );
+    registry.shutdown();
     Ok(i32::from(report.errors > 0))
 }

@@ -6,7 +6,9 @@ pub mod config;
 pub mod layer;
 pub mod mlp;
 pub mod serialize;
+pub mod session;
 
 pub use config::ModelConfig;
 pub use layer::TernaryLinear;
 pub use mlp::TernaryMlp;
+pub use session::DecodeSession;

@@ -1,0 +1,180 @@
+//! Autoregressive decode sessions: the per-stream state of the decode
+//! serving subsystem ([`crate::coordinator::DecodeScheduler`]).
+//!
+//! A [`DecodeSession`] is one autoregressive stream: a current state row
+//! (the next step's model input) held in a **leased arena buffer pair**
+//! that the session keeps across steps — after admission, a session's
+//! steady state performs zero activation allocation (the lease returns
+//! its pair to the arena on drop, so teardown recycles rather than
+//! frees). Each decode step feeds the model's output row back as the next
+//! input row and emits one synthetic token: the argmax index of the
+//! output row (deterministic; first index wins ties). The feedback loop
+//! is why decode requires `d_in == d_out` — the scheduler enforces that
+//! at construction.
+//!
+//! Sessions never run the model themselves: the scheduler gathers every
+//! active session's state row into one M-row batch, runs a single pinned
+//! [`crate::plan::MlpPlan`], and scatters the output rows back through
+//! [`DecodeSession::absorb_output`]. Because each output row of a
+//! row-partitioned GEMM depends only on its own input row, a batched step
+//! is bitwise-identical to stepping each session alone.
+
+use crate::plan::pipeline::{ActivationArena, OwnedArenaLease};
+use crate::{Error, Result};
+use std::sync::Arc;
+
+/// One autoregressive decode stream: identity, token budget, and the
+/// state row leased from the decode arena across steps.
+pub struct DecodeSession {
+    id: u64,
+    lease: OwnedArenaLease,
+    width: usize,
+    emitted: usize,
+    max_tokens: usize,
+}
+
+impl DecodeSession {
+    /// Open a session seeded with `prompt` (the d-dimensional embedding of
+    /// the synthetic prompt), budgeted to emit at most `max_tokens`.
+    /// Leases a bucket-1 buffer pair from `arena` and holds it until the
+    /// session drops.
+    ///
+    /// # Errors
+    /// [`Error::Shape`] when the prompt is empty or wider than the arena's
+    /// buffers, [`Error::Config`] when `max_tokens` is zero.
+    pub fn new(
+        id: u64,
+        arena: &Arc<ActivationArena>,
+        prompt: &[f32],
+        max_tokens: usize,
+    ) -> Result<DecodeSession> {
+        let width = prompt.len();
+        if width == 0 || width > arena.max_width() {
+            return Err(Error::Shape(format!(
+                "decode prompt width {width} must be in [1, {}]",
+                arena.max_width()
+            )));
+        }
+        if max_tokens == 0 {
+            return Err(Error::Config("max_tokens must be positive".into()));
+        }
+        let mut lease = arena.checkout_owned(1);
+        let (ping, _) = lease.bufs();
+        ping.row_mut(0)[..width].copy_from_slice(prompt);
+        Ok(DecodeSession {
+            id,
+            lease,
+            width,
+            emitted: 0,
+            max_tokens,
+        })
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// State-row width (= the model's `d_in` = `d_out`).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Tokens emitted so far.
+    pub fn emitted(&self) -> usize {
+        self.emitted
+    }
+
+    /// Whether the token budget is exhausted (the session leaves the
+    /// scheduler after the step that hits it).
+    pub fn done(&self) -> bool {
+        self.emitted >= self.max_tokens
+    }
+
+    /// The current state row — the session's next model input.
+    pub fn state(&mut self) -> &[f32] {
+        let width = self.width;
+        let (ping, _) = self.lease.bufs();
+        &ping.row(0)[..width]
+    }
+
+    /// Feed one decode step's output row back as the next state and emit
+    /// its token: the argmax index (first index wins ties, so the token
+    /// stream is a pure function of the row bits).
+    pub fn absorb_output(&mut self, row: &[f32]) -> u32 {
+        debug_assert_eq!(row.len(), self.width);
+        let (ping, _) = self.lease.bufs();
+        ping.row_mut(0)[..row.len()].copy_from_slice(row);
+        self.emitted += 1;
+        argmax_token(row)
+    }
+}
+
+/// Deterministic synthetic token for an output row: the argmax index,
+/// first index on ties (`>` comparison). NaNs lose every comparison, so a
+/// row of NaNs yields token 0 rather than a panic.
+pub fn argmax_token(row: &[f32]) -> u32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arena(width: usize) -> Arc<ActivationArena> {
+        Arc::new(ActivationArena::new(width))
+    }
+
+    #[test]
+    fn session_feeds_output_back_as_state() {
+        let arena = arena(4);
+        let mut s = DecodeSession::new(7, &arena, &[1.0, 2.0, 3.0, 4.0], 2).unwrap();
+        assert_eq!(s.id(), 7);
+        assert_eq!(s.state(), &[1.0, 2.0, 3.0, 4.0]);
+        assert!(!s.done());
+        let tok = s.absorb_output(&[0.5, -1.0, 9.0, 0.0]);
+        assert_eq!(tok, 2, "argmax index of the output row");
+        assert_eq!(s.state(), &[0.5, -1.0, 9.0, 0.0], "output is the next input");
+        assert_eq!(s.emitted(), 1);
+        s.absorb_output(&[0.0; 4]);
+        assert!(s.done(), "budget of 2 exhausted");
+    }
+
+    #[test]
+    fn argmax_breaks_ties_on_first_index() {
+        assert_eq!(argmax_token(&[1.0, 3.0, 3.0, 0.0]), 1);
+        assert_eq!(argmax_token(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax_token(&[-2.0, -1.0]), 1);
+    }
+
+    #[test]
+    fn session_rejects_bad_shapes() {
+        let arena = arena(4);
+        assert!(DecodeSession::new(0, &arena, &[], 4).is_err());
+        assert!(DecodeSession::new(0, &arena, &[0.0; 5], 4).is_err());
+        assert!(DecodeSession::new(0, &arena, &[0.0; 4], 0).is_err());
+    }
+
+    #[test]
+    fn leases_return_to_the_arena_on_drop() {
+        let arena = arena(8);
+        {
+            let _a = DecodeSession::new(0, &arena, &[0.0; 8], 1).unwrap();
+            let _b = DecodeSession::new(1, &arena, &[0.0; 8], 1).unwrap();
+        }
+        assert_eq!(arena.stats().allocations, 2);
+        // Dropped sessions returned their pairs: two fresh sessions reuse.
+        let _c = DecodeSession::new(2, &arena, &[0.0; 8], 1).unwrap();
+        let _d = DecodeSession::new(3, &arena, &[0.0; 8], 1).unwrap();
+        let stats = arena.stats();
+        assert_eq!(stats.allocations, 2, "steady state allocates nothing");
+        assert_eq!(stats.reuses, 2);
+    }
+}

@@ -710,6 +710,73 @@ impl PlanCache {
         )?))
     }
 
+    /// Compile the **decode pipeline**: one uncached [`MlpPlan`] sized for
+    /// up to `max_sessions` concurrent decode rows, with every layer
+    /// pinned to its **M=1-bucket kernel choice** (explicit override ▸
+    /// tuned entry resolving for bucket 1 ▸ paper heuristic — never the
+    /// online race, so two independently built schedulers always resolve
+    /// the same kernels).
+    ///
+    /// Why pin the M=1 selection at a larger bucket: a decode step batches
+    /// `m` session rows where `m` drifts between 1 and `max_sessions` as
+    /// sessions join and leave. If each `m` resolved its own bucket's
+    /// winner, two different kernels — with two different per-cell
+    /// summation orders — could serve adjacent steps of the *same*
+    /// session, and a continuously-batched step would not be bitwise
+    /// identical to the per-session forwards. One plan, one kernel per
+    /// layer, for every step: per-row bitwise identity then follows from
+    /// row-band partitioning (each output row depends only on its own
+    /// input row, and the threaded path is already bitwise-identical to
+    /// sequential). The M=1 choice is the right pin because decode is a
+    /// GEMV stream — a single session runs exactly the tuned M=1 path.
+    ///
+    /// The decode bucket's arena pair is reserved here too, so the first
+    /// step allocates nothing.
+    ///
+    /// # Errors
+    /// [`Error::Shape`] when the layers do not chain, [`Error::Config`]
+    /// when none are registered.
+    pub fn decode_plan(&self, max_sessions: usize) -> Result<Arc<MlpPlan>> {
+        let bucket = m_bucket(max_sessions);
+        let threads = self.effective_threads(bucket);
+        let layers: Vec<Arc<CachedLayer>> = self
+            .layers
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone();
+        if layers.is_empty() {
+            return Err(Error::Config("no layers registered".into()));
+        }
+        let mut specs = Vec::with_capacity(layers.len());
+        for layer in &layers {
+            // Bucket 1, not `bucket`: the decode pin described above.
+            let (kernel, geometry) = self.kernel_for_spec(&layer.spec, 1);
+            let gemm = self.prepared_gemm(layer, kernel, geometry)?;
+            specs.push((
+                gemm,
+                layer.spec.epilogue.clone(),
+                layer.spec.min_rows_per_chunk,
+            ));
+        }
+        let pool = if threads > 1 {
+            Some(self.planner.shared_pool())
+        } else {
+            None
+        };
+        let arena = self.arena();
+        if layers.len() >= 2 {
+            arena.reserve(bucket);
+        }
+        Ok(Arc::new(MlpPlan::compile(
+            specs,
+            bucket,
+            threads,
+            PipelineMode::Wavefront,
+            pool,
+            arena,
+        )?))
+    }
+
     /// Whether warm-up pre-compiles wavefront pipelines (default true;
     /// [`crate::model::TernaryMlp`] turns it off for `pipeline: false` /
     /// `--no-pipeline` models whose forwards only take the barrier path).

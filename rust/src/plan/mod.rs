@@ -65,7 +65,9 @@ pub use cache::{
 };
 pub use gemm_plan::{Epilogue, GemmPlan};
 pub use partition::{execute_partitioned, RowPartition, ROW_TILE};
-pub use pipeline::{ActivationArena, ArenaStats, MlpPlan, PipelineMode, PipelineStats};
+pub use pipeline::{
+    ActivationArena, ArenaStats, MlpPlan, OwnedArenaLease, PipelineMode, PipelineStats,
+};
 pub use planner::{
     heuristic_kernel, heuristic_kernel_caps, heuristic_top2, heuristic_top2_caps, PlanHints,
     Planner, OUTER_MIN_K, OUTER_MIN_M,

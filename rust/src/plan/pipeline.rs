@@ -183,6 +183,70 @@ impl Drop for ArenaLease<'_> {
     }
 }
 
+impl ActivationArena {
+    /// Like [`ActivationArena::checkout`], but the lease owns an `Arc` to
+    /// the arena instead of borrowing it — the decode path's sessions and
+    /// scheduler hold leases across many steps (and across threads), which
+    /// a borrow-scoped [`ArenaLease`] cannot express. Same pool, same
+    /// stats, same return-on-drop semantics.
+    pub fn checkout_owned(self: &Arc<Self>, bucket: usize) -> OwnedArenaLease {
+        let reused = {
+            let mut free = self.free.lock().unwrap_or_else(|e| e.into_inner());
+            free.get_mut(&bucket).and_then(|pairs| pairs.pop())
+        };
+        let pair = match reused {
+            Some(pair) => {
+                self.reuses.fetch_add(1, Ordering::Relaxed);
+                pair
+            }
+            None => self.fresh_pair(bucket),
+        };
+        OwnedArenaLease {
+            arena: Arc::clone(self),
+            bucket,
+            pair: Some(pair),
+        }
+    }
+}
+
+/// A checked-out buffer pair that keeps its arena alive: the owning form
+/// of [`ArenaLease`], held across decode steps by [`crate::model::DecodeSession`]
+/// and the continuous-batching scheduler. Returns the pair to the arena on
+/// drop, so session teardown recycles the buffers instead of leaking or
+/// freeing them.
+pub struct OwnedArenaLease {
+    arena: Arc<ActivationArena>,
+    bucket: usize,
+    pair: Option<BufferPair>,
+}
+
+impl OwnedArenaLease {
+    /// The (ping, pong) buffers, mutably.
+    pub(crate) fn bufs(&mut self) -> (&mut Matrix, &mut Matrix) {
+        let pair = self.pair.as_mut().expect("lease holds buffers until drop");
+        (&mut pair.ping, &mut pair.pong)
+    }
+
+    /// Row capacity the pair was checked out for.
+    pub fn bucket(&self) -> usize {
+        self.bucket
+    }
+}
+
+impl Drop for OwnedArenaLease {
+    fn drop(&mut self) {
+        if let Some(pair) = self.pair.take() {
+            self.arena
+                .free
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .entry(self.bucket)
+                .or_default()
+                .push(pair);
+        }
+    }
+}
+
 /// How the band tasks of consecutive layers are allowed to overlap.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PipelineMode {

@@ -1,0 +1,268 @@
+//! PR 9 property tests: the decode-serving subsystem's standing
+//! invariants.
+//!
+//! 1. **Bitwise identity** — a continuously-batched decode step is
+//!    bitwise-identical (`f32::to_bits`) to running each session's step
+//!    as an independent M=1 forward, across session counts, join/leave
+//!    churn, and thread counts 1–4. This holds by construction (the
+//!    decode plan pins every layer's kernel to its M=1 choice, and each
+//!    output row of a row-partitioned GEMM depends only on its own input
+//!    row); these tests are the regression net around that construction.
+//! 2. **Zero steady-state allocation** — once the first wave of sessions
+//!    has populated the decode arena, further session churn leases only
+//!    returned buffer pairs ([`stgemm::plan::ArenaStats`] is the
+//!    witness).
+//! 3. **Serving-path teardown** — a client that hangs up mid-stream has
+//!    its session retired by the scheduler, observed end-to-end through
+//!    the HTTP server.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use stgemm::coordinator::server::{http_request_stream, Server, ServerConfig};
+use stgemm::coordinator::{
+    DecodeConfig, DecodeScheduler, DecodeStream, LoadOptions, Metrics, ModelRegistry,
+    Router,
+};
+use stgemm::model::{ModelConfig, TernaryMlp};
+use stgemm::plan::{PlanCache, Planner};
+use stgemm::tensor::Matrix;
+
+const D: usize = 24;
+
+/// A square two-layer model (the decode feedback loop needs
+/// `d_in == d_out`) with the cache's thread ceiling set to `threads`.
+fn cache_for(threads: usize) -> Arc<PlanCache> {
+    let cfg = ModelConfig::from_json(&format!(
+        r#"{{"name":"dec","dims":[{D},48,{D}],"sparsity":0.3,"seed":11,
+            "threads":{threads}}}"#
+    ))
+    .unwrap();
+    let mlp = TernaryMlp::planned(&cfg, &Arc::new(Planner::new())).unwrap();
+    Arc::clone(mlp.plan_cache().expect("config-built model has a cache"))
+}
+
+fn scheduler(threads: usize, max_sessions: usize) -> Arc<DecodeScheduler> {
+    Arc::new(
+        DecodeScheduler::new(
+            "dec",
+            &cache_for(threads),
+            Arc::new(Metrics::new()),
+            DecodeConfig {
+                max_sessions,
+                default_max_tokens: 4,
+            },
+        )
+        .unwrap(),
+    )
+}
+
+fn prompt(seed: u64) -> Vec<f32> {
+    Matrix::random(1, D, seed).row(0).to_vec()
+}
+
+/// Drain a stream's buffered tokens (the schedulers here are stepped
+/// manually, so everything a session will ever emit is already in its
+/// channel once the step loop runs dry).
+fn tokens_of(stream: &DecodeStream) -> Vec<u32> {
+    let mut out = Vec::new();
+    while let Some(ev) = stream.next() {
+        assert_eq!(ev.index, out.len(), "token indices are dense");
+        out.push(ev.token);
+    }
+    out
+}
+
+#[test]
+fn decode_batched_step_is_bitwise_identical_to_independent_forwards() {
+    for &threads in &[1usize, 2, 4] {
+        let cache = cache_for(threads);
+        let plan_1 = cache.decode_plan(1).unwrap();
+        for &m in &[1usize, 2, 3, 5] {
+            let plan_n = cache.decode_plan(m).unwrap();
+            // M state rows, iterated through 4 feedback steps.
+            let mut batched = Matrix::zeros(m, D);
+            let mut solo: Vec<Vec<f32>> = (0..m)
+                .map(|i| prompt(300 + (m * 10 + i) as u64))
+                .collect();
+            for (i, row) in solo.iter().enumerate() {
+                batched.row_mut(i).copy_from_slice(row);
+            }
+            for step in 0..4 {
+                let mut y = Matrix::zeros(m, D);
+                plan_n.run(&batched, &mut y).unwrap();
+                for i in 0..m {
+                    // The same row as an independent forward — once
+                    // through the batch plan at M=1, once through the
+                    // dedicated M=1 plan.
+                    let mut via_n = vec![0f32; D];
+                    Matrix::with_view(&solo[i], 1, D, |x| {
+                        Matrix::with_view_mut(&mut via_n, 1, D, |y1| {
+                            plan_n.run(x, y1).map(|_| ())
+                        })
+                    })
+                    .unwrap();
+                    let mut via_1 = vec![0f32; D];
+                    Matrix::with_view(&solo[i], 1, D, |x| {
+                        Matrix::with_view_mut(&mut via_1, 1, D, |y1| {
+                            plan_1.run(x, y1).map(|_| ())
+                        })
+                    })
+                    .unwrap();
+                    for j in 0..D {
+                        let b = y.row(i)[j].to_bits();
+                        assert_eq!(
+                            b,
+                            via_n[j].to_bits(),
+                            "batched row {i} ≠ its M=1 forward through the \
+                             same plan (threads {threads}, m {m}, step {step}, col {j})"
+                        );
+                        assert_eq!(
+                            b,
+                            via_1[j].to_bits(),
+                            "batched row {i} ≠ the dedicated M=1 plan \
+                             (threads {threads}, m {m}, step {step}, col {j})"
+                        );
+                    }
+                    solo[i] = via_n;
+                }
+                // Feed the batch output back as the next step's input.
+                for i in 0..m {
+                    batched.row_mut(i).copy_from_slice(y.row(i));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_token_streams_are_identical_across_batching_churn_and_threads() {
+    // (prompt seed, token budget) per session; budgets differ so sessions
+    // leave the batch at different steps.
+    let specs: [(u64, usize); 5] = [(21, 4), (22, 6), (23, 3), (24, 5), (25, 2)];
+    let prompts: Vec<Vec<f32>> = specs.iter().map(|(s, _)| prompt(*s)).collect();
+
+    // Reference: every session decoded alone, single-threaded, on a
+    // capacity-1 scheduler (the tuned M=1 GEMV path).
+    let reference: Vec<Vec<u32>> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, (_, budget))| {
+            let sched = scheduler(1, 1);
+            let stream = sched.begin(&prompts[i], Some(*budget)).unwrap();
+            while sched.step().unwrap() > 0 {}
+            tokens_of(&stream)
+        })
+        .collect();
+    for (i, toks) in reference.iter().enumerate() {
+        assert_eq!(toks.len(), specs[i].1, "reference session {i} ran its budget");
+    }
+
+    for &threads in &[1usize, 2, 3, 4] {
+        let sched = scheduler(threads, 5);
+        // Join/leave churn: three sessions up front, one batched step,
+        // two more join mid-decode, one leaves (client disconnect), then
+        // the scheduler runs dry.
+        let mut streams: Vec<Option<DecodeStream>> = (0..3)
+            .map(|i| Some(sched.begin(&prompts[i], Some(specs[i].1)).unwrap()))
+            .collect();
+        sched.step().unwrap();
+        for i in 3..5 {
+            streams.push(Some(sched.begin(&prompts[i], Some(specs[i].1)).unwrap()));
+        }
+        sched.step().unwrap();
+        drop(streams[1].take()); // leave: canceled before the next step
+        while sched.step().unwrap() > 0 {}
+        for (i, slot) in streams.iter().enumerate() {
+            let Some(stream) = slot else { continue };
+            assert_eq!(
+                tokens_of(stream),
+                reference[i],
+                "session {i} diverged under churn at {threads} thread(s)"
+            );
+        }
+    }
+}
+
+#[test]
+fn decode_steady_state_allocates_nothing() {
+    let sched = scheduler(2, 4);
+    let run_wave = |wave: u64| {
+        let streams: Vec<DecodeStream> = (0..4u64)
+            .map(|i| sched.begin(&prompt(40 + 10 * wave + i), Some(3)).unwrap())
+            .collect();
+        while sched.step().unwrap() > 0 {}
+        for s in &streams {
+            assert_eq!(tokens_of(s).len(), 3);
+        }
+    };
+    run_wave(0);
+    let after_first = sched.arena_stats().allocations;
+    assert!(after_first > 0, "the first wave populates the arena");
+    for wave in 1..4 {
+        run_wave(wave);
+    }
+    let stats = sched.arena_stats();
+    assert_eq!(
+        stats.allocations, after_first,
+        "session churn after the first wave must lease only returned pairs"
+    );
+    assert!(stats.reuses > 0, "later waves reuse the wave-1 pairs");
+}
+
+#[test]
+fn decode_http_disconnect_retires_the_session() {
+    let registry = Arc::new(ModelRegistry::with_thread_budget(
+        Arc::new(Planner::new()),
+        4,
+    ));
+    let cfg = ModelConfig::from_json(&format!(
+        r#"{{"name":"sq","dims":[{D},48,{D}],"sparsity":0.3,"seed":11}}"#
+    ))
+    .unwrap();
+    registry.load(&cfg, LoadOptions::default()).unwrap();
+    let router = Arc::new(Router::with_registry(Arc::clone(&registry)));
+    let server = Server::start(Arc::clone(&router), ServerConfig::default()).unwrap();
+
+    // A stream with an enormous budget, abandoned after three chunks.
+    let body = format!(
+        r#"{{"model":"sq","prompt":[{}],"max_tokens":1000000}}"#,
+        prompt(9)
+            .iter()
+            .map(|v| format!("{v:.6}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    );
+    let mut seen = 0usize;
+    let (status, _) = http_request_stream(
+        &server.local_addr,
+        "POST",
+        "/generate",
+        &body,
+        Duration::from_secs(10),
+        |_| {
+            seen += 1;
+            seen < 3 // hang up after the third token
+        },
+    )
+    .unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(seen, 3);
+
+    // The server notices the dead socket on a chunk write and drops the
+    // stream; the scheduler retires the session before its next step.
+    let sched = registry
+        .get("sq")
+        .unwrap()
+        .decode_scheduler_if_started()
+        .expect("the /generate call started the scheduler");
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while sched.active_sessions() > 0 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "disconnected client's session was never retired"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    registry.shutdown();
+}

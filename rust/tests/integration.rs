@@ -67,6 +67,7 @@ fn loadgen_through_http_server() {
         d_in,
         model: "demo".into(),
         seed: 3,
+        request_timeout: Duration::from_secs(30),
     };
     let report = gen.run_http(server.local_addr);
     assert_eq!(report.total_requests, 40);
@@ -185,6 +186,7 @@ fn autoscaled_serving_over_http() {
         d_in: 16,
         model: "demo".into(),
         seed: 8,
+        request_timeout: Duration::from_secs(30),
     };
     let report = gen.run_http(server.local_addr);
     assert_eq!(report.total_requests, 60);
