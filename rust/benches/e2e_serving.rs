@@ -35,6 +35,12 @@
 //! inter-token p50/p99, mean step occupancy and the decode arena's
 //! steady-state allocation counters into `BENCH_pr9.json` at the repo
 //! root.
+//!
+//! PR 10 additions: pinned vs unpinned serving — the same wavefront
+//! forward and decode workloads run with the shared pool placed on
+//! performance cores and with placement off (`--no-pin`) — reporting
+//! GFLOP/s, tokens/sec, per-layer stall and how many workers the OS
+//! actually pinned, into `BENCH_pr10.json` at the repo root.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -48,11 +54,12 @@ use stgemm::coordinator::{
 };
 use stgemm::kernels::{descriptors, KernelDescriptor, KernelFamily, KernelParams};
 use stgemm::model::{ModelConfig, TernaryLinear, TernaryMlp};
-use stgemm::perf::{geometry_candidates, CpuCaps};
+use stgemm::perf::{cost_flops, geometry_candidates, CpuCaps, CpuTopology};
 use stgemm::plan::{PipelineMode, PipelineStats, PlanHints, Planner};
 use stgemm::runtime::{Manifest, XlaExecutor};
 use stgemm::tensor::Matrix;
 use stgemm::util::json::Json;
+use stgemm::util::PlacementPolicy;
 
 struct ServingRow {
     backend: String,
@@ -455,6 +462,7 @@ fn decode_serving(scale: BenchScale) -> Json {
                 DecodeConfig {
                     max_sessions: capacity,
                     default_max_tokens: mean_tokens,
+                    ..DecodeConfig::default()
                 },
             )
             .unwrap(),
@@ -496,6 +504,140 @@ fn decode_serving(scale: BenchScale) -> Json {
         // Capacity 4 with bursty arrivals: steps carry whatever mix of
         // sessions is live — continuous batching proper.
         scenario("concurrent_sessions", 4, concurrent_sessions, 4, 72),
+    ])
+}
+
+/// Pinned vs unpinned serving on the *same* model: a wavefront forward
+/// (GFLOP/s + per-layer stall) and a decode run (tokens/sec), once with
+/// the pool placed on performance cores and once left to the OS
+/// (`--no-pin`). Outputs are bitwise-identical by construction
+/// (`tests/placement.rs`); what this measures is the wall/stall delta —
+/// and `pinned_workers` records whether the OS actually honored the pins
+/// (CI containers may refuse them, making the regimes equivalent).
+fn placement_pinned_vs_unpinned(scale: BenchScale) -> Json {
+    let reps = match scale {
+        BenchScale::Full => 50,
+        BenchScale::Ci => 5,
+    };
+    let (m, threads, dims) = (64usize, 4usize, [256usize, 1024, 512, 256]);
+    let forward = |policy: PlacementPolicy| -> Json {
+        let cfg = ModelConfig::from_json(&format!(
+            r#"{{"name":"placed","dims":[256,1024,512,256],"sparsity":0.25,
+                "seed":99,"threads":{threads}}}"#
+        ))
+        .unwrap();
+        let planner = Planner::new().with_topology(CpuTopology::host().clone());
+        planner.set_placement(policy);
+        let mlp = TernaryMlp::planned(&cfg, &Arc::new(planner)).unwrap();
+        let cache = mlp.plan_cache().expect("config-built model");
+        let plan = cache.compile_pipeline(m, PipelineMode::Wavefront).unwrap();
+        let x = Matrix::random(m, dims[0], 5);
+        let mut y = Matrix::zeros(m, dims[dims.len() - 1]);
+        plan.run(&x, &mut y).expect("warmup");
+        let mut agg = ModeAggregate::default();
+        let mut pinned_workers = 0usize;
+        for _ in 0..reps {
+            let stats = plan.run(&x, &mut y).expect("pipeline run");
+            pinned_workers = pinned_workers.max(stats.pinned_workers);
+            agg.absorb(&stats);
+        }
+        let flops_per_run: f64 = dims
+            .windows(2)
+            .map(|kn| cost_flops(m, kn[0], kn[1], 0.25))
+            .sum();
+        let gflops = if agg.wall_us > 0 {
+            flops_per_run * reps as f64 / (agg.wall_us as f64 * 1e3)
+        } else {
+            0.0
+        };
+        println!(
+            "  [placement:{policy}] forward wall {} µs / {reps} reps, \
+             stall {} µs, {gflops:.2} GFLOP/s, {pinned_workers} pinned",
+            agg.wall_us, agg.stall_us
+        );
+        Json::obj(vec![
+            ("policy", Json::str(policy.as_str())),
+            ("gflops", Json::num(gflops)),
+            ("pinned_workers", Json::num(pinned_workers as f64)),
+            ("forward", agg.json()),
+        ])
+    };
+    let decode = |policy: PlacementPolicy| -> Json {
+        let cfg = ModelConfig::from_json(
+            r#"{"name":"placed_dec","dims":[256,1024,256],"sparsity":0.25,"seed":4321}"#,
+        )
+        .unwrap();
+        let planner = Planner::new().with_topology(CpuTopology::host().clone());
+        planner.set_placement(policy);
+        let mlp = TernaryMlp::planned(&cfg, &Arc::new(planner)).unwrap();
+        let cache = Arc::clone(mlp.plan_cache().expect("config-built"));
+        let metrics = Arc::new(Metrics::new());
+        let sched = Arc::new(
+            DecodeScheduler::new(
+                "placed_dec",
+                &cache,
+                Arc::clone(&metrics),
+                DecodeConfig {
+                    max_sessions: 4,
+                    default_max_tokens: 16,
+                    placement: match policy {
+                        PlacementPolicy::None => PlacementPolicy::None,
+                        _ => PlacementPolicy::Compact,
+                    },
+                },
+            )
+            .unwrap(),
+        );
+        sched.spawn_loop();
+        let gen = DecodeLoadGen {
+            sessions: match scale {
+                BenchScale::Full => 8,
+                BenchScale::Ci => 4,
+            },
+            burst: 4,
+            burst_gap: Duration::from_millis(1),
+            d: 256,
+            model: "placed_dec".into(),
+            seed: 73,
+            mean_tokens: 16,
+            request_timeout: Duration::from_secs(120),
+        };
+        let report = gen.run_scheduler(&sched);
+        let tick = sched.tick_placement();
+        sched.shutdown();
+        println!("  [placement:{policy}] decode {}", report.summary());
+        Json::obj(vec![
+            ("policy", Json::str(policy.as_str())),
+            ("tokens_per_sec", Json::num(report.tokens_per_sec)),
+            ("intertoken_us_p50", Json::num(report.intertoken_us_p50 as f64)),
+            ("intertoken_us_p99", Json::num(report.intertoken_us_p99 as f64)),
+            (
+                "tick_pin",
+                tick.map(|(_, outcome)| Json::str(outcome.as_str()))
+                    .unwrap_or(Json::Null),
+            ),
+            ("errors", Json::num(report.errors as f64)),
+        ])
+    };
+    Json::obj(vec![
+        ("m", Json::num(m as f64)),
+        ("threads", Json::num(threads as f64)),
+        ("reps", Json::num(reps as f64)),
+        ("topology", Json::str(CpuTopology::host().describe())),
+        (
+            "forward",
+            Json::arr(vec![
+                forward(PlacementPolicy::PerfCoresFirst),
+                forward(PlacementPolicy::None),
+            ]),
+        ),
+        (
+            "decode",
+            Json::arr(vec![
+                decode(PlacementPolicy::PerfCoresFirst),
+                decode(PlacementPolicy::None),
+            ]),
+        ),
     ])
 }
 
@@ -669,5 +811,23 @@ fn main() {
     match std::fs::write(&pr9_path, pr9.encode_pretty()) {
         Ok(()) => println!("  [json] {}", pr9_path.display()),
         Err(e) => eprintln!("  [json] {} write failed: {e}", pr9_path.display()),
+    }
+
+    // PR 10 tracking artifact: pinned vs unpinned serving — forward
+    // GFLOP/s with per-layer stall and decode tokens/sec under the
+    // performance-core placement vs the OS scheduler.
+    let placement = placement_pinned_vs_unpinned(scale);
+    let pr10 = Json::obj(vec![
+        ("bench", Json::str("pr10_worker_placement")),
+        ("scale", Json::str(format!("{scale:?}"))),
+        ("pinned_vs_unpinned", placement),
+    ]);
+    let pr10_path = match std::path::Path::new(env!("CARGO_MANIFEST_DIR")).parent() {
+        Some(root) => root.join("BENCH_pr10.json"),
+        None => std::path::PathBuf::from("BENCH_pr10.json"),
+    };
+    match std::fs::write(&pr10_path, pr10.encode_pretty()) {
+        Ok(()) => println!("  [json] {}", pr10_path.display()),
+        Err(e) => eprintln!("  [json] {} write failed: {e}", pr10_path.display()),
     }
 }

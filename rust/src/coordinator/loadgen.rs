@@ -463,6 +463,7 @@ mod tests {
                 DecodeConfig {
                     max_sessions: 3,
                     default_max_tokens: 8,
+                    ..DecodeConfig::default()
                 },
             )
             .unwrap(),

@@ -107,6 +107,15 @@ pub struct Metrics {
     /// part of the compute wall time the batcher's queue model sees, so
     /// surfacing it keeps the load controller's latency budget honest.
     pub pipeline_stall_us: AtomicU64,
+    /// Cumulative wall time of pipelined batches in µs (counter). Divides
+    /// `pipeline_stall_us` into the placement-effectiveness gauge: the
+    /// stall fraction under a pinned pool vs an unpinned one is the
+    /// observable difference worker placement makes.
+    pub pipeline_wall_us: AtomicU64,
+    /// Workers of the shared pool that reported a successful pin during
+    /// the last pipelined batch (gauge; 0 under `--no-pin` or on
+    /// platforms where placement is a no-op).
+    pub pinned_workers: AtomicU64,
     /// Decode: tokens emitted across all sessions (counter).
     pub decode_tokens: AtomicU64,
     /// Decode: continuous-batching steps executed (counter).
@@ -185,6 +194,23 @@ impl Metrics {
             .store(stats.max_depth as u64, Ordering::Relaxed);
         self.pipeline_stall_us
             .fetch_add(stats.stall_us, Ordering::Relaxed);
+        self.pipeline_wall_us
+            .fetch_add(stats.wall_us, Ordering::Relaxed);
+        self.pinned_workers
+            .store(stats.pinned_workers as u64, Ordering::Relaxed);
+    }
+
+    /// Placement-effectiveness gauge: the fraction of pipelined wall time
+    /// the workers spent stalled (0.0 until a pipelined batch ran).
+    /// Compared across pinned and unpinned runs of the same workload,
+    /// this is the per-layer stall delta the placement work targets.
+    pub fn pipeline_stall_frac(&self) -> f64 {
+        let wall = self.pipeline_wall_us.load(Ordering::Relaxed);
+        if wall == 0 {
+            0.0
+        } else {
+            self.pipeline_stall_us.load(Ordering::Relaxed) as f64 / wall as f64
+        }
     }
 
     /// Note one batch's compute latency (EWMA companion to the
@@ -349,6 +375,15 @@ impl Metrics {
                         "stall_us_total",
                         Json::num(self.pipeline_stall_us.load(Ordering::Relaxed) as f64),
                     ),
+                    (
+                        "wall_us_total",
+                        Json::num(self.pipeline_wall_us.load(Ordering::Relaxed) as f64),
+                    ),
+                    ("stall_frac", Json::num(self.pipeline_stall_frac())),
+                    (
+                        "pinned_workers",
+                        Json::num(self.pinned_workers.load(Ordering::Relaxed) as f64),
+                    ),
                 ]),
             ),
             (
@@ -507,6 +542,7 @@ mod tests {
             stall_us: 40,
             wall_us: 100,
             per_layer_stall_us: vec![10, 30],
+            pinned_workers: 2,
         });
         m.note_pipeline(&crate::plan::PipelineStats {
             max_depth: 3,
@@ -521,5 +557,8 @@ mod tests {
         assert_eq!(pipeline.get("runs").unwrap().as_f64(), Some(2.0));
         assert_eq!(pipeline.get("depth").unwrap().as_f64(), Some(3.0));
         assert_eq!(pipeline.get("stall_us_total").unwrap().as_f64(), Some(50.0));
+        assert_eq!(pipeline.get("wall_us_total").unwrap().as_f64(), Some(100.0));
+        assert_eq!(pipeline.get("stall_frac").unwrap().as_f64(), Some(0.5));
+        assert_eq!(pipeline.get("pinned_workers").unwrap().as_f64(), Some(0.0));
     }
 }

@@ -44,6 +44,8 @@ use crate::coordinator::load::{
 use crate::coordinator::request::{InferenceRequest, InferenceResponse};
 use crate::model::ModelConfig;
 use crate::plan::{PlanCache, Planner};
+use crate::util::affinity::PlacementPolicy;
+use crate::util::threadpool::WorkerPlacement;
 use crate::{Error, Result};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
@@ -372,6 +374,34 @@ impl ModelRegistry {
             .map(|n| n.get())
             .unwrap_or(4);
         ModelRegistry::with_thread_budget(planner, budget)
+    }
+
+    /// Registry with a worker-placement policy: the planner's shared pool
+    /// pins its workers per `policy` when it is (lazily) created, and the
+    /// fleet thread budget becomes a **core budget** — the topology's
+    /// performance-core count under any placing policy, host parallelism
+    /// under [`PlacementPolicy::None`] (`--no-pin`). Placement never
+    /// changes results, only where the work runs.
+    pub fn with_placement(planner: Arc<Planner>, policy: PlacementPolicy) -> ModelRegistry {
+        planner.set_placement(policy);
+        let budget = match policy {
+            PlacementPolicy::None => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+            _ => planner.topology().perf_cores().len().max(1),
+        };
+        ModelRegistry::with_thread_budget(planner, budget)
+    }
+
+    /// The placement policy the shared pool pins (or will pin) with.
+    pub fn placement(&self) -> PlacementPolicy {
+        self.planner.placement()
+    }
+
+    /// Per-worker placement rows of the shared pool (empty until the pool
+    /// exists — it is created lazily by the first multi-threaded plan).
+    pub fn pool_placements(&self) -> Vec<WorkerPlacement> {
+        self.planner.pool_placements()
     }
 
     /// Registry with an explicit fleet-wide worker-thread budget.
@@ -893,6 +923,27 @@ mod tests {
 
     fn registry() -> ModelRegistry {
         ModelRegistry::with_thread_budget(Arc::new(Planner::new()), 8)
+    }
+
+    #[test]
+    fn placement_turns_the_thread_budget_into_a_core_budget() {
+        let topo = crate::perf::topology::CpuTopology::apple_like();
+        let planner = Arc::new(Planner::new().with_topology(topo.clone()));
+        let reg = ModelRegistry::with_placement(planner, PlacementPolicy::PerfCoresFirst);
+        assert_eq!(reg.placement(), PlacementPolicy::PerfCoresFirst);
+        assert_eq!(
+            reg.thread_budget(),
+            topo.perf_cores().len(),
+            "placed fleets budget performance cores, not host threads"
+        );
+        assert!(
+            reg.pool_placements().is_empty(),
+            "shared pool is lazy: no placement rows before the first plan"
+        );
+        let unpinned =
+            ModelRegistry::with_placement(Arc::new(Planner::new()), PlacementPolicy::None);
+        assert_eq!(unpinned.placement(), PlacementPolicy::None);
+        assert!(unpinned.thread_budget() >= 1);
     }
 
     #[test]

@@ -225,6 +225,31 @@ fn fleet_json(registry: &ModelRegistry) -> Json {
         ),
         ("registry_hits", Json::num(registry.hit_count() as f64)),
         ("registry_misses", Json::num(registry.miss_count() as f64)),
+        ("placement", Json::str(registry.placement().as_str())),
+        ("topology", Json::str(planner.topology().describe())),
+        (
+            // Per-worker pin rows; empty until the first parallel plan
+            // lazily creates the shared pool.
+            "worker_placement",
+            Json::arr(
+                registry
+                    .pool_placements()
+                    .into_iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("worker", Json::num(p.worker as f64)),
+                            (
+                                "cores",
+                                Json::arr(
+                                    p.cores.iter().map(|&c| Json::num(c as f64)),
+                                ),
+                            ),
+                            ("outcome", Json::str(p.outcome.as_str())),
+                        ])
+                    })
+                    .collect::<Vec<_>>(),
+            ),
+        ),
     ])
 }
 
@@ -281,6 +306,20 @@ fn status_json(registry: &ModelRegistry) -> Json {
                     ),
                 ),
                 (
+                    // Placement effectiveness: the stall fraction of
+                    // pipelined wall time, read against how many pool
+                    // workers actually pinned. Compare pinned vs
+                    // `--no-pin` runs of the same workload.
+                    "placement",
+                    Json::obj(vec![
+                        (
+                            "pinned_workers",
+                            Json::num(m.pinned_workers.load(Ordering::Relaxed) as f64),
+                        ),
+                        ("stall_frac", Json::num(m.pipeline_stall_frac())),
+                    ]),
+                ),
+                (
                     // Null until the model's first /generate starts its
                     // decode scheduler.
                     "decode",
@@ -299,6 +338,27 @@ fn status_json(registry: &ModelRegistry) -> Json {
                                 (
                                     "mean_occupancy",
                                     Json::num(m.decode_mean_occupancy()),
+                                ),
+                                (
+                                    // Null until spawn_loop pinned the
+                                    // tick thread.
+                                    "tick_pin",
+                                    d.tick_placement()
+                                        .map(|(cores, outcome)| {
+                                            Json::obj(vec![
+                                                (
+                                                    "cores",
+                                                    Json::arr(cores.iter().map(|&c| {
+                                                        Json::num(c as f64)
+                                                    })),
+                                                ),
+                                                (
+                                                    "outcome",
+                                                    Json::str(outcome.as_str()),
+                                                ),
+                                            ])
+                                        })
+                                        .unwrap_or(Json::Null),
                                 ),
                             ])
                         })
@@ -380,6 +440,7 @@ fn handle_load_model(
                     .get("decode_max_tokens")
                     .and_then(|v| v.as_usize())
                     .unwrap_or(d.default_max_tokens),
+                ..d
             }
         },
         ..LoadOptions::default()
@@ -909,6 +970,9 @@ mod tests {
             "tuned_classes",
             "registry_hits",
             "registry_misses",
+            "placement",
+            "topology",
+            "worker_placement",
         ] {
             assert!(fleet.get(key).is_some(), "missing fleet row {key}");
         }

@@ -99,7 +99,12 @@
 //!   (sysfs on Linux, `sysctlbyname` on macOS), detected once per
 //!   process and consumed by every selection-time kernel query (planner
 //!   heuristics, tuning-table lookups, sweep candidates, the online
-//!   race). [`perf::BlockingPolicy`] turns the probed L1d into concrete
+//!   race). [`perf::CpuTopology`] probes the **core topology** the same
+//!   way (sysfs `cpu_capacity` + shared-L2 groups on Linux,
+//!   `hw.perflevel*` sysctls on macOS, a flat fallback elsewhere),
+//!   classifying cores into performance/efficiency clusters — the
+//!   substrate worker placement maps onto. [`perf::BlockingPolicy`]
+//!   turns the probed L1d into concrete
 //!   blocking decisions — the scalar families' K-block and the tile
 //!   family's preferred [`formats::TileGeometry`] (half-of-L1d sizing,
 //!   pow2-floored and clamped; the paper's M1 L1d lands exactly on its
@@ -144,11 +149,24 @@
 //!   arena buffer pairs across steps (zero steady-state allocation) and
 //!   stream tokens over a chunked `POST /generate` endpoint; a client
 //!   hang-up cancels its session, and schedulers drain with their model.
+//!   Serving is **topology-aware**: the shared pool's workers pin to
+//!   performance cores per a [`util::PlacementPolicy`] (`--placement`,
+//!   `--no-pin`), the fleet thread budget becomes a core budget, the
+//!   decode tick thread compact-pins so a lone M=1 session steps on a
+//!   performance core, and `/status` + `/metrics` carry per-worker
+//!   placement rows and a stall-fraction effectiveness gauge. Placement
+//!   moves work — it never changes results (property-tested bitwise
+//!   across policies × thread counts in `tests/placement.rs`).
 //! - [`bench`] — the measurement harness (timing the planned path) and
 //!   per-figure experiment drivers.
 //! - [`util`] — substrates built in-repo because the environment is offline:
-//!   PRNG, JSON, CLI parsing, thread pool (with scoped fork-join and the
-//!   scoped worker loops the wavefront scheduler pulls tasks on), and a
+//!   PRNG, JSON, CLI parsing, thread pool (with scoped fork-join, the
+//!   scoped worker loops the wavefront scheduler pulls tasks on,
+//!   condvar-parked idle waits and per-worker **placement**), the
+//!   affinity layer ([`util::PlacementPolicy`] → OS pinning via
+//!   `sched_setaffinity` / QoS + affinity tags, a counted no-op
+//!   elsewhere), the aligned/hugepage allocation layer
+//!   ([`util::AlignedBuffer`], [`util::advise_hugepages_f32`]), and a
 //!   mini property-testing framework.
 //! - [`error`] — the library-wide typed [`enum@Error`] (re-exported at the
 //!   crate root with the [`Result`] alias): every fallible API returns it,

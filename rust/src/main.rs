@@ -37,6 +37,7 @@ use stgemm::runtime::artifacts::default_artifacts_dir;
 use stgemm::runtime::{Manifest, XlaExecutor};
 use stgemm::tensor::Matrix;
 use stgemm::util::cli::Args;
+use stgemm::util::PlacementPolicy;
 use stgemm::{Error, Result};
 
 fn main() {
@@ -81,6 +82,7 @@ USAGE: stgemm <subcommand> [options]
              [--no-autoscale] [--max-batch-cap 64] [--max-threads N]
              [--target-queue-us 2000] [--retune-secs N]
              [--decode-sessions 4] [--decode-max-tokens 32]
+             [--placement perf|compact|spread|none] [--no-pin]
              (load-aware by default: max_batch and threads track observed
               queue depth / arrival rate; --models serves a fleet through
               the model registry — a directory is scanned for *.json
@@ -90,7 +92,11 @@ USAGE: stgemm <subcommand> [options]
               runtime via POST /load_model and /unload; --retune-secs
               re-sweeps the tuning table in the background every N
               seconds; multi-layer forwards are wavefront-pipelined unless
-              --no-pipeline restores the per-layer barrier path)
+              --no-pipeline restores the per-layer barrier path; worker
+              placement pins pool threads to performance cores by default
+              — --placement picks the policy, --no-pin leaves scheduling
+              to the OS; without --max-threads the budget is the
+              performance-core count)
   bench      --figure fig2|fig6|fig8|fig9|fig10|fig11|headline|
                       ablation_compressed|ablation_inverted|all [--csv]
   autotune   [--m 32] [--k 4096] [--n 1024] [--sparsity 0.25]
@@ -123,7 +129,7 @@ USAGE: stgemm <subcommand> [options]
               as tokens/sec + inter-token latency)
   generate   [--model <cfg.json>] [--sessions 4] [--burst 2]
              [--burst-gap-ms 1] [--mean-tokens 8] [--decode-sessions 4]
-             [--threads N] [--seed 3]
+             [--threads N] [--seed 3] [--no-pin]
              (in-process decode smoke: loads the config — default demo —
               and runs bursty sessions through the continuous-batching
               scheduler; exits non-zero on any session error)"
@@ -219,11 +225,37 @@ fn cmd_serve(args: &Args) -> Result<i32> {
     let default_threads = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4);
-    let thread_budget = args.usize("max-threads", default_threads);
-    let registry = Arc::new(ModelRegistry::with_thread_budget(
-        Arc::clone(&planner),
-        thread_budget,
-    ));
+    // Worker placement: pool workers pin to performance cores by default;
+    // `--placement compact|spread` opts into per-core policies and
+    // `--no-pin` (or `--placement none`) leaves scheduling to the OS.
+    // Placement moves work, never changes it — outputs stay bitwise
+    // identical either way.
+    let placement = if args.has("no-pin") {
+        PlacementPolicy::None
+    } else {
+        match args.get("placement") {
+            Some(s) => s.parse::<PlacementPolicy>().map_err(Error::Config)?,
+            None => PlacementPolicy::default(),
+        }
+    };
+    // Without an explicit --max-threads the thread budget is a *core*
+    // budget: the topology's performance-core count under any placing
+    // policy, host parallelism under `none`.
+    let registry = Arc::new(match args.get("max-threads") {
+        Some(_) => {
+            planner.set_placement(placement);
+            ModelRegistry::with_thread_budget(
+                Arc::clone(&planner),
+                args.usize("max-threads", default_threads),
+            )
+        }
+        None => ModelRegistry::with_placement(Arc::clone(&planner), placement),
+    });
+    let thread_budget = registry.thread_budget();
+    println!(
+        "[serve] placement: {placement} over {} (core budget {thread_budget})",
+        planner.topology().describe()
+    );
     let policy = BatchPolicy {
         max_batch: args.usize("max-batch", 8),
         max_wait: Duration::from_micros(args.u64("max-wait-us", 2000)),
@@ -287,6 +319,13 @@ fn cmd_serve(args: &Args) -> Result<i32> {
                         "decode-max-tokens",
                         DecodeConfig::default().default_max_tokens,
                     ),
+                    // The decode tick thread runs M=1 steps inline:
+                    // compact-pin it to the first performance core unless
+                    // serving is unpinned altogether.
+                    placement: match placement {
+                        PlacementPolicy::None => PlacementPolicy::None,
+                        _ => PlacementPolicy::Compact,
+                    },
                 },
             },
         )?;
@@ -779,6 +818,11 @@ fn cmd_generate(args: &Args) -> Result<i32> {
             cfg.d_out()
         )));
     }
+    let placement = if args.has("no-pin") {
+        PlacementPolicy::None
+    } else {
+        PlacementPolicy::Compact
+    };
     let registry = ModelRegistry::new(Arc::new(Planner::new()));
     let handle = registry.load(
         &cfg,
@@ -792,6 +836,7 @@ fn cmd_generate(args: &Args) -> Result<i32> {
                     "decode-max-tokens",
                     DecodeConfig::default().default_max_tokens,
                 ),
+                placement,
             },
             ..LoadOptions::default()
         },

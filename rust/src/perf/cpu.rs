@@ -218,7 +218,7 @@ fn sysctl_cache_sizes() -> (Option<usize>, Option<usize>) {
 /// Integer sysctls are 4 or 8 bytes; reading into a zero-initialized u64
 /// on a little-endian target (all macOS targets) handles both widths.
 #[cfg(target_os = "macos")]
-fn sysctl_usize(name: &str) -> Option<usize> {
+pub(crate) fn sysctl_usize(name: &str) -> Option<usize> {
     use std::ffi::{c_char, c_int, c_void};
     extern "C" {
         fn sysctlbyname(

@@ -13,9 +13,11 @@ pub mod roofline;
 pub mod membw;
 pub mod cpu;
 pub mod blocking;
+pub mod topology;
 
 pub use blocking::{geometry_candidates, scalar_block, tile_geometry, BlockingPolicy};
 pub use cpu::{CpuCaps, CpuFeature};
+pub use topology::{ClusterKind, CoreCluster, CoreProbe, CpuTopology};
 pub use timer::{cycles_per_second, read_cycles, CycleTimer, Measurement};
 pub use flops::{cost_flops, CostModel};
 pub use opint::{format_bytes_model, operational_intensity, OpIntInputs};

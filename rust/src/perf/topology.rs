@@ -1,0 +1,614 @@
+//! CPU **topology** discovery: which logical cores exist, which of them
+//! are performance vs efficiency cores, and which share an L2 — the
+//! placement facts [`crate::util::affinity`] turns into core sets.
+//!
+//! Where [`crate::perf::cpu::CpuCaps`] answers *"what can this host
+//! run?"* (instruction sets, cache sizes), [`CpuTopology`] answers
+//! *"where should long-lived workers sit?"*. On Apple-Silicon-class
+//! parts the scheduler will happily park a wavefront worker on an
+//! efficiency core, and per-cluster L2 residency — not just kernel
+//! quality — decides how close a GEMM gets to peak ("Above the Inner
+//! Loop", PAPERS.md). The probe classifies cores into clusters so the
+//! placement layer can pin pipeline workers to performance cores and
+//! keep a band's repeat traffic inside the L2 that last touched its
+//! prepared format.
+//!
+//! Probes, in the same spirit as the caps module:
+//! - **Linux sysfs**: per-cpu `cpu_capacity` (heterogeneous parts expose
+//!   relative DMIPS capacity; the max-capacity class is the performance
+//!   class) and `cache/index*/shared_cpu_list` for L2 sharing.
+//! - **macOS sysctl**: `hw.perflevel0.logicalcpu` /
+//!   `hw.perflevel1.logicalcpu` (perflevel0 is the performance cluster).
+//!   Core *ids* on macOS are nominal — placement there goes through QoS
+//!   classes and affinity tags, never explicit cpu numbers.
+//! - Everything else (and every probe failure) degrades to a **flat**
+//!   topology: one performance cluster holding every core. A degraded
+//!   probe can only make placement less specific, never wrong.
+//!
+//! All classification is pure over [`CoreProbe`] records, so checked-in
+//! sysfs/sysctl fixture snapshots exercise the exact production path on
+//! any host, and [`CpuTopology::apple_like`] / [`CpuTopology::flat`]
+//! give tests host-independent synthetic topologies. The host probe is
+//! cached process-wide like [`CpuCaps::host`].
+//!
+//! [`CpuCaps::host`]: crate::perf::cpu::CpuCaps::host
+
+use std::sync::OnceLock;
+
+/// Cluster classification: does this group of cores trade throughput
+/// for efficiency?
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterKind {
+    /// Max-capacity cores (P-cores on Apple Silicon; every core of a
+    /// homogeneous part).
+    Performance,
+    /// Lower-capacity cores (E-cores). Placement policies spill here
+    /// only after the performance clusters are full.
+    Efficiency,
+}
+
+impl ClusterKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ClusterKind::Performance => "performance",
+            ClusterKind::Efficiency => "efficiency",
+        }
+    }
+}
+
+/// One classified group of cores (same capacity class; on parts that
+/// expose L2 sharing, also one shared L2).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CoreCluster {
+    pub kind: ClusterKind,
+    /// Logical cpu ids, ascending.
+    pub cores: Vec<usize>,
+}
+
+/// One probed logical core — the pure input to classification. `None`
+/// fields mean the host did not expose that fact (typical x86 servers
+/// have no `cpu_capacity`; many report only private per-core L2s).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CoreProbe {
+    /// Logical cpu id.
+    pub id: usize,
+    /// Relative capacity (`cpu_capacity` sysfs scale, max 1024).
+    pub capacity: Option<usize>,
+    /// Cores sharing this core's L2 (parsed `shared_cpu_list`),
+    /// including the core itself.
+    pub l2_shared: Option<Vec<usize>>,
+}
+
+/// The host's core layout: clusters (performance first) plus the raw
+/// shared-L2 groups. Built once via [`CpuTopology::host`], or
+/// synthetically for host-independent tests.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CpuTopology {
+    /// Classified clusters, performance clusters first, each sorted by
+    /// first core id. Never empty; every core appears in exactly one.
+    pub clusters: Vec<CoreCluster>,
+    /// Probed shared-L2 core groups (singletons on private-L2 parts;
+    /// one all-core group when the hierarchy is unreadable).
+    pub l2_groups: Vec<Vec<usize>>,
+}
+
+impl CpuTopology {
+    /// Probe the current host: sysfs on Linux, sysctl perflevels on
+    /// macOS, flat `available_parallelism` everywhere else.
+    pub fn detect() -> CpuTopology {
+        let fallback = || {
+            CpuTopology::flat(
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1),
+            )
+        };
+        if cfg!(target_os = "macos") {
+            #[cfg(target_os = "macos")]
+            {
+                if let Some(t) = sysctl_topology() {
+                    return t;
+                }
+            }
+            return fallback();
+        }
+        if cfg!(target_os = "linux") {
+            if let Some(t) = sysfs_topology() {
+                return t;
+            }
+        }
+        fallback()
+    }
+
+    /// The cached host snapshot (detection runs once per process).
+    pub fn host() -> &'static CpuTopology {
+        static HOST: OnceLock<CpuTopology> = OnceLock::new();
+        HOST.get_or_init(CpuTopology::detect)
+    }
+
+    /// Synthetic M1-like topology: 4 performance cores (ids 0–3, one
+    /// shared L2) + 4 efficiency cores (ids 4–7, one shared L2).
+    pub fn apple_like() -> CpuTopology {
+        let probes: Vec<CoreProbe> = (0..8)
+            .map(|id| CoreProbe {
+                id,
+                capacity: Some(if id < 4 { 1024 } else { 384 }),
+                l2_shared: Some(if id < 4 {
+                    vec![0, 1, 2, 3]
+                } else {
+                    vec![4, 5, 6, 7]
+                }),
+            })
+            .collect();
+        CpuTopology::from_probes(probes)
+    }
+
+    /// Synthetic homogeneous topology: `n` performance cores, one L2
+    /// group (`n >= 1` enforced). What every unprobeable host becomes.
+    pub fn flat(n: usize) -> CpuTopology {
+        let n = n.max(1);
+        let cores: Vec<usize> = (0..n).collect();
+        CpuTopology {
+            clusters: vec![CoreCluster {
+                kind: ClusterKind::Performance,
+                cores: cores.clone(),
+            }],
+            l2_groups: vec![cores],
+        }
+    }
+
+    /// Classify probed cores into clusters. Pure — fixtures and the live
+    /// sysfs probe share this path.
+    ///
+    /// Rules:
+    /// - Cores with the maximum observed capacity (or no capacity at all
+    ///   on homogeneous parts) are [`ClusterKind::Performance`]; every
+    ///   lower capacity class is [`ClusterKind::Efficiency`].
+    /// - Within a capacity class, multi-core shared-L2 groups split the
+    ///   class into one cluster per group (the M-series shape). Private
+    ///   per-core L2s (all-singleton groups, the x86 server shape) do
+    ///   *not* shatter the class into per-core clusters.
+    pub fn from_probes(mut probes: Vec<CoreProbe>) -> CpuTopology {
+        if probes.is_empty() {
+            return CpuTopology::flat(1);
+        }
+        probes.sort_by_key(|p| p.id);
+        probes.dedup_by_key(|p| p.id);
+
+        // Raw L2 groups: dedup the probed share lists; cores with no L2
+        // info each form a singleton so the field stays total.
+        let mut l2_groups: Vec<Vec<usize>> = Vec::new();
+        for p in &probes {
+            let mut group = p.l2_shared.clone().unwrap_or_else(|| vec![p.id]);
+            group.sort_unstable();
+            group.dedup();
+            if !l2_groups.contains(&group) {
+                l2_groups.push(group);
+            }
+        }
+        l2_groups.sort_by_key(|g| g.first().copied().unwrap_or(0));
+
+        // Capacity classes: unknown capacity counts as the maximum, so a
+        // homogeneous part with no capacity files stays one class.
+        let max_cap = probes.iter().filter_map(|p| p.capacity).max();
+        let is_perf = |p: &CoreProbe| match (p.capacity, max_cap) {
+            (Some(c), Some(m)) => c == m,
+            _ => true,
+        };
+        let mut classes: Vec<(ClusterKind, Vec<usize>)> = Vec::new();
+        let perf: Vec<usize> = probes.iter().filter(|p| is_perf(p)).map(|p| p.id).collect();
+        if !perf.is_empty() {
+            classes.push((ClusterKind::Performance, perf));
+        }
+        // Efficiency classes, one per distinct sub-max capacity value
+        // (descending capacity so "closer to performance" sorts first).
+        let mut eff_caps: Vec<usize> = probes
+            .iter()
+            .filter(|p| !is_perf(p))
+            .filter_map(|p| p.capacity)
+            .collect();
+        eff_caps.sort_unstable_by(|a, b| b.cmp(a));
+        eff_caps.dedup();
+        for cap in eff_caps {
+            let cores: Vec<usize> = probes
+                .iter()
+                .filter(|p| !is_perf(p) && p.capacity == Some(cap))
+                .map(|p| p.id)
+                .collect();
+            classes.push((ClusterKind::Efficiency, cores));
+        }
+
+        // Split each class by multi-core L2 groups (when any exist).
+        let mut clusters: Vec<CoreCluster> = Vec::new();
+        for (kind, class_cores) in classes {
+            let mut parts: Vec<Vec<usize>> = Vec::new();
+            for group in &l2_groups {
+                let members: Vec<usize> = group
+                    .iter()
+                    .copied()
+                    .filter(|c| class_cores.contains(c))
+                    .collect();
+                if !members.is_empty() {
+                    parts.push(members);
+                }
+            }
+            let split = parts.len() > 1 && parts.iter().any(|p| p.len() > 1);
+            if split {
+                for cores in parts {
+                    clusters.push(CoreCluster { kind, cores });
+                }
+            } else {
+                clusters.push(CoreCluster {
+                    kind,
+                    cores: class_cores,
+                });
+            }
+        }
+        clusters.sort_by_key(|c| {
+            (
+                matches!(c.kind, ClusterKind::Efficiency),
+                c.cores.first().copied().unwrap_or(0),
+            )
+        });
+        CpuTopology { clusters, l2_groups }
+    }
+
+    /// Topology from macOS perflevel counts: `perf` performance cores
+    /// then `eff` efficiency cores, each cluster one L2 group. Ids are
+    /// nominal (macOS placement goes through QoS, not cpu numbers).
+    pub fn from_perflevels(perf: usize, eff: usize) -> CpuTopology {
+        let perf = if perf == 0 && eff == 0 { 1 } else { perf };
+        let p_cores: Vec<usize> = (0..perf).collect();
+        let e_cores: Vec<usize> = (perf..perf + eff).collect();
+        let mut clusters = Vec::new();
+        let mut l2_groups = Vec::new();
+        if !p_cores.is_empty() {
+            clusters.push(CoreCluster {
+                kind: ClusterKind::Performance,
+                cores: p_cores.clone(),
+            });
+            l2_groups.push(p_cores);
+        }
+        if !e_cores.is_empty() {
+            clusters.push(CoreCluster {
+                kind: ClusterKind::Efficiency,
+                cores: e_cores.clone(),
+            });
+            l2_groups.push(e_cores);
+        }
+        CpuTopology { clusters, l2_groups }
+    }
+
+    /// Parse a checked-in sysfs snapshot: one line per core,
+    /// `cpu<N> capacity=<v|-> l2=<list|->` (`-` = not exposed; `#`
+    /// comments and blank lines skipped). Returns `None` when no line
+    /// parses — fixtures and tests feed the result to
+    /// [`CpuTopology::from_probes`].
+    pub fn parse_sysfs_snapshot(text: &str) -> Option<Vec<CoreProbe>> {
+        let mut probes = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut fields = line.split_whitespace();
+            let id: usize = fields.next()?.strip_prefix("cpu")?.parse().ok()?;
+            let mut capacity = None;
+            let mut l2_shared = None;
+            for field in fields {
+                if let Some(v) = field.strip_prefix("capacity=") {
+                    if v != "-" {
+                        capacity = v.parse().ok();
+                    }
+                } else if let Some(v) = field.strip_prefix("l2=") {
+                    if v != "-" {
+                        l2_shared = parse_cpu_list(v);
+                    }
+                }
+            }
+            probes.push(CoreProbe {
+                id,
+                capacity,
+                l2_shared,
+            });
+        }
+        if probes.is_empty() {
+            None
+        } else {
+            Some(probes)
+        }
+    }
+
+    /// Parse a checked-in macOS sysctl snapshot (`sysctl hw.perflevel*`
+    /// output: `hw.perflevel0.logicalcpu: 4` lines) into (perf, eff)
+    /// counts. `perflevel0` is the performance level on Apple Silicon.
+    pub fn parse_sysctl_snapshot(text: &str) -> Option<(usize, usize)> {
+        let mut perf = None;
+        let mut eff = None;
+        for line in text.lines() {
+            let line = line.trim();
+            let (key, value) = match line.split_once(':') {
+                Some((k, v)) => (k.trim(), v.trim()),
+                None => continue,
+            };
+            let parsed = value.parse::<usize>().ok();
+            match key {
+                "hw.perflevel0.logicalcpu" => perf = parsed,
+                "hw.perflevel1.logicalcpu" => eff = parsed,
+                _ => {}
+            }
+        }
+        perf.map(|p| (p, eff.unwrap_or(0)))
+    }
+
+    /// Total logical cores.
+    pub fn num_cores(&self) -> usize {
+        self.clusters.iter().map(|c| c.cores.len()).sum()
+    }
+
+    /// Performance-cluster cores, cluster order then id order.
+    pub fn perf_cores(&self) -> Vec<usize> {
+        self.cores_of(ClusterKind::Performance)
+    }
+
+    /// Efficiency-cluster cores, cluster order then id order.
+    pub fn efficiency_cores(&self) -> Vec<usize> {
+        self.cores_of(ClusterKind::Efficiency)
+    }
+
+    fn cores_of(&self, kind: ClusterKind) -> Vec<usize> {
+        self.clusters
+            .iter()
+            .filter(|c| c.kind == kind)
+            .flat_map(|c| c.cores.iter().copied())
+            .collect()
+    }
+
+    /// Index of the cluster holding `core`, if any.
+    pub fn cluster_of(&self, core: usize) -> Option<usize> {
+        self.clusters.iter().position(|c| c.cores.contains(&core))
+    }
+
+    /// Compact one-line description for logs and `/status`.
+    pub fn describe(&self) -> String {
+        let parts: Vec<String> = self
+            .clusters
+            .iter()
+            .map(|c| format!("{}x{}", c.cores.len(), &c.kind.as_str()[..4]))
+            .collect();
+        format!("{} cores ({})", self.num_cores(), parts.join("+"))
+    }
+}
+
+/// Parse a sysfs cpu-list string (`"0-3,5,8-9"`) into ascending ids.
+/// Returns `None` for anything unrecognized or empty.
+pub(crate) fn parse_cpu_list(s: &str) -> Option<Vec<usize>> {
+    let mut out = Vec::new();
+    for part in s.trim().split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        match part.split_once('-') {
+            Some((lo, hi)) => {
+                let lo: usize = lo.trim().parse().ok()?;
+                let hi: usize = hi.trim().parse().ok()?;
+                if hi < lo || hi - lo > 4096 {
+                    return None;
+                }
+                out.extend(lo..=hi);
+            }
+            None => out.push(part.parse().ok()?),
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    if out.is_empty() {
+        None
+    } else {
+        Some(out)
+    }
+}
+
+/// Probe Linux sysfs for per-cpu capacity and L2 sharing. `None` when
+/// the cpu directory itself is unreadable (then the flat fallback
+/// applies); individual missing files degrade per-core.
+#[cfg_attr(not(target_os = "linux"), allow(dead_code))]
+fn sysfs_topology() -> Option<CpuTopology> {
+    let base = "/sys/devices/system/cpu";
+    let mut probes = Vec::new();
+    // `possible` is "0-N" on every modern kernel; fall back to probing
+    // cpu0.. until a directory is missing.
+    let ids: Vec<usize> = std::fs::read_to_string(format!("{base}/possible"))
+        .ok()
+        .as_deref()
+        .and_then(parse_cpu_list)
+        .unwrap_or_else(|| (0..1024).collect());
+    for id in ids {
+        let cpu_dir = format!("{base}/cpu{id}");
+        if !std::path::Path::new(&cpu_dir).exists() {
+            break;
+        }
+        let capacity = std::fs::read_to_string(format!("{cpu_dir}/cpu_capacity"))
+            .ok()
+            .and_then(|s| s.trim().parse().ok());
+        let mut l2_shared = None;
+        for idx in 0..8 {
+            let level = std::fs::read_to_string(format!("{cpu_dir}/cache/index{idx}/level"));
+            let level = match level {
+                Ok(l) => l,
+                Err(_) => break,
+            };
+            if level.trim() == "2" {
+                l2_shared = std::fs::read_to_string(format!(
+                    "{cpu_dir}/cache/index{idx}/shared_cpu_list"
+                ))
+                .ok()
+                .as_deref()
+                .and_then(parse_cpu_list);
+                break;
+            }
+        }
+        probes.push(CoreProbe {
+            id,
+            capacity,
+            l2_shared,
+        });
+    }
+    if probes.is_empty() {
+        None
+    } else {
+        Some(CpuTopology::from_probes(probes))
+    }
+}
+
+/// macOS perflevel probe (`hw.perflevel0/1.logicalcpu`). `None` when the
+/// keys do not answer (Intel Macs answer only the total).
+#[cfg(target_os = "macos")]
+fn sysctl_topology() -> Option<CpuTopology> {
+    let perf = crate::perf::cpu::sysctl_usize("hw.perflevel0.logicalcpu")?;
+    let eff = crate::perf::cpu::sysctl_usize("hw.perflevel1.logicalcpu").unwrap_or(0);
+    Some(CpuTopology::from_perflevels(perf, eff))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_cpu_list_forms() {
+        assert_eq!(parse_cpu_list("0-3"), Some(vec![0, 1, 2, 3]));
+        assert_eq!(parse_cpu_list("0-1,4,6-7\n"), Some(vec![0, 1, 4, 6, 7]));
+        assert_eq!(parse_cpu_list("5"), Some(vec![5]));
+        assert_eq!(parse_cpu_list(""), None);
+        assert_eq!(parse_cpu_list("3-1"), None);
+        assert_eq!(parse_cpu_list("x"), None);
+    }
+
+    #[test]
+    fn apple_like_classifies_two_clusters() {
+        let t = CpuTopology::apple_like();
+        assert_eq!(t.num_cores(), 8);
+        assert_eq!(t.clusters.len(), 2);
+        assert_eq!(t.clusters[0].kind, ClusterKind::Performance);
+        assert_eq!(t.clusters[0].cores, vec![0, 1, 2, 3]);
+        assert_eq!(t.clusters[1].kind, ClusterKind::Efficiency);
+        assert_eq!(t.clusters[1].cores, vec![4, 5, 6, 7]);
+        assert_eq!(t.perf_cores(), vec![0, 1, 2, 3]);
+        assert_eq!(t.efficiency_cores(), vec![4, 5, 6, 7]);
+        assert_eq!(t.cluster_of(2), Some(0));
+        assert_eq!(t.cluster_of(6), Some(1));
+        assert_eq!(t.cluster_of(99), None);
+        assert_eq!(t.l2_groups.len(), 2);
+    }
+
+    #[test]
+    fn flat_is_one_performance_cluster() {
+        let t = CpuTopology::flat(6);
+        assert_eq!(t.clusters.len(), 1);
+        assert_eq!(t.clusters[0].kind, ClusterKind::Performance);
+        assert_eq!(t.perf_cores(), vec![0, 1, 2, 3, 4, 5]);
+        assert!(t.efficiency_cores().is_empty());
+        // Degenerate input stays usable.
+        assert_eq!(CpuTopology::flat(0).num_cores(), 1);
+    }
+
+    #[test]
+    fn probes_without_capacity_are_one_performance_class() {
+        // x86-server shape: no cpu_capacity, private per-core L2s. Must
+        // NOT shatter into per-core clusters.
+        let probes: Vec<CoreProbe> = (0..4)
+            .map(|id| CoreProbe {
+                id,
+                capacity: None,
+                l2_shared: Some(vec![id]),
+            })
+            .collect();
+        let t = CpuTopology::from_probes(probes);
+        assert_eq!(t.clusters.len(), 1);
+        assert_eq!(t.clusters[0].kind, ClusterKind::Performance);
+        assert_eq!(t.clusters[0].cores, vec![0, 1, 2, 3]);
+        assert_eq!(t.l2_groups.len(), 4, "private L2s stay visible");
+    }
+
+    #[test]
+    fn multi_core_l2_groups_split_a_class() {
+        // One capacity class spanning two shared-L2 complexes (the
+        // AMD-CCX-like shape) → two performance clusters.
+        let probes: Vec<CoreProbe> = (0..8)
+            .map(|id| CoreProbe {
+                id,
+                capacity: Some(1024),
+                l2_shared: Some(if id < 4 {
+                    vec![0, 1, 2, 3]
+                } else {
+                    vec![4, 5, 6, 7]
+                }),
+            })
+            .collect();
+        let t = CpuTopology::from_probes(probes);
+        assert_eq!(t.clusters.len(), 2);
+        assert!(t.clusters.iter().all(|c| c.kind == ClusterKind::Performance));
+        assert_eq!(t.clusters[0].cores, vec![0, 1, 2, 3]);
+        assert_eq!(t.clusters[1].cores, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn sysfs_snapshot_roundtrip() {
+        let text = "# comment\ncpu0 capacity=1024 l2=0-1\ncpu1 capacity=1024 l2=0-1\n\
+                    cpu2 capacity=384 l2=2-3\ncpu3 capacity=384 l2=2-3\n";
+        let probes = CpuTopology::parse_sysfs_snapshot(text).unwrap();
+        assert_eq!(probes.len(), 4);
+        assert_eq!(probes[0].capacity, Some(1024));
+        assert_eq!(probes[3].l2_shared, Some(vec![2, 3]));
+        let t = CpuTopology::from_probes(probes);
+        assert_eq!(t.perf_cores(), vec![0, 1]);
+        assert_eq!(t.efficiency_cores(), vec![2, 3]);
+        // Dashes mean "not exposed".
+        let bare = CpuTopology::parse_sysfs_snapshot("cpu0 capacity=- l2=-").unwrap();
+        assert_eq!(bare[0].capacity, None);
+        assert_eq!(bare[0].l2_shared, None);
+        assert_eq!(CpuTopology::parse_sysfs_snapshot("junk"), None);
+    }
+
+    #[test]
+    fn sysctl_snapshot_parses_perflevels() {
+        let text = "hw.perflevel0.logicalcpu: 4\nhw.perflevel1.logicalcpu: 4\n";
+        assert_eq!(CpuTopology::parse_sysctl_snapshot(text), Some((4, 4)));
+        let t = {
+            let (p, e) = CpuTopology::parse_sysctl_snapshot(text).unwrap();
+            CpuTopology::from_perflevels(p, e)
+        };
+        assert_eq!(t.perf_cores(), vec![0, 1, 2, 3]);
+        assert_eq!(t.efficiency_cores(), vec![4, 5, 6, 7]);
+        // Intel Macs: no perflevel keys at all.
+        assert_eq!(
+            CpuTopology::parse_sysctl_snapshot("hw.logicalcpu: 8"),
+            None
+        );
+        // P-only parts still classify.
+        let only_p = CpuTopology::from_perflevels(6, 0);
+        assert_eq!(only_p.clusters.len(), 1);
+        assert_eq!(only_p.num_cores(), 6);
+    }
+
+    #[test]
+    fn host_detection_is_cached_and_total() {
+        let a = CpuTopology::host();
+        let b = CpuTopology::host();
+        assert!(std::ptr::eq(a, b), "host snapshot is cached");
+        assert!(a.num_cores() >= 1);
+        assert!(!a.clusters.is_empty());
+        // Every core belongs to exactly one cluster.
+        let mut all: Vec<usize> = a
+            .clusters
+            .iter()
+            .flat_map(|c| c.cores.iter().copied())
+            .collect();
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n, "no core in two clusters");
+        assert!(!a.describe().is_empty());
+    }
+}

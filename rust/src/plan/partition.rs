@@ -62,6 +62,18 @@ impl RowPartition {
         self.max_chunks.min(m / self.min_rows_per_chunk).max(1)
     }
 
+    /// The worker a band *prefers* (cluster-sticky assignment): band `j`
+    /// of every layer maps to worker `j mod workers`, so on a placed
+    /// pool — where logical worker `i` is pinned to core `i`'s cluster —
+    /// the same rows hit the same L2 pass after pass, and the arena's
+    /// first-touch pass pages each band into its consumer's locality
+    /// domain. A preference only: the wavefront scheduler still steals
+    /// foreign bands rather than idle, which cannot change results
+    /// (bands are bitwise-identical wherever they run).
+    pub fn preferred_worker(&self, band: usize, workers: usize) -> usize {
+        band % workers.max(1)
+    }
+
     /// Contiguous row ranges `[lo, hi)` covering `0..m`. Every boundary is
     /// a multiple of [`ROW_TILE`] (except the final `m`), which may yield
     /// fewer chunks than [`RowPartition::chunks_for`] for small batches.
@@ -144,7 +156,14 @@ pub fn execute_partitioned(
             });
         }));
     }
-    let panicked = pool.run_scoped(jobs);
+    // On strictly-placed pools, chunk `i` routes to pinned thread `i`
+    // (see `RowPartition::preferred_worker`) so repeat batches stream
+    // the same rows through the same L2.
+    let panicked = if pool.sticky_routing() {
+        pool.run_scoped_assigned(jobs)
+    } else {
+        pool.run_scoped(jobs)
+    };
     if panicked > 0 {
         return Err(Error::Runtime(format!(
             "{panicked} partitioned GEMM worker(s) panicked"

@@ -100,10 +100,13 @@ impl ActivationArena {
 
     fn fresh_pair(&self, bucket: usize) -> BufferPair {
         self.allocations.fetch_add(1, Ordering::Relaxed);
-        BufferPair {
-            ping: Matrix::zeros(bucket, self.max_width),
-            pong: Matrix::zeros(bucket, self.max_width),
-        }
+        let mut ping = Matrix::zeros(bucket, self.max_width);
+        let mut pong = Matrix::zeros(bucket, self.max_width);
+        // Long-lived, large, streamed row-major — prime THP candidates.
+        // Advisory only (see util::alloc): bits are never touched.
+        let _ = crate::util::alloc::advise_hugepages_f32(ping.as_mut_slice());
+        let _ = crate::util::alloc::advise_hugepages_f32(pong.as_mut_slice());
+        BufferPair { ping, pong }
     }
 
     /// Check a buffer pair out for a forward pass of up to `bucket` rows;
@@ -144,6 +147,48 @@ impl ActivationArena {
                 .or_default()
                 .push(pair);
         }
+    }
+
+    /// Like [`ActivationArena::reserve`], but the fresh pair's pages are
+    /// **first-touched by the pool's own workers**, band by band: on
+    /// parts where page placement follows the first writer, the rows a
+    /// worker will stream every forward pass end up in that worker's
+    /// locality domain. Job `i` routes to pool thread `i % size`
+    /// (sticky), matching the band → worker preference the wavefront
+    /// scheduler uses. No-op when a pair for `bucket` is already
+    /// resident (its pages are already owned).
+    pub fn reserve_first_touch(&self, bucket: usize, pool: &ThreadPool) {
+        {
+            let free = self.free.lock().unwrap_or_else(|e| e.into_inner());
+            if free.get(&bucket).is_some_and(|pairs| !pairs.is_empty()) {
+                return;
+            }
+        }
+        let mut pair = self.fresh_pair(bucket);
+        let cols = self.max_width;
+        let workers = pool.size().max(1);
+        if cols > 0 && bucket > 0 {
+            let chunk = bucket.div_ceil(workers) * cols;
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            // Order matters: ping band w at index w, pong band w at
+            // index workers + w, so both land on thread w.
+            for buf in [pair.ping.as_mut_slice(), pair.pong.as_mut_slice()] {
+                for band in buf.chunks_mut(chunk.max(1)) {
+                    let rows = band.len() / cols;
+                    jobs.push(Box::new(move || {
+                        crate::util::alloc::first_touch_band(band, cols, 0, rows);
+                    }));
+                }
+            }
+            let panicked = pool.run_scoped_assigned(jobs);
+            debug_assert_eq!(panicked, 0, "first-touch jobs cannot panic");
+        }
+        self.free
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .entry(bucket)
+            .or_default()
+            .push(pair);
     }
 
     pub fn stats(&self) -> ArenaStats {
@@ -279,6 +324,10 @@ pub struct PipelineStats {
     /// tail the wavefront eliminates; in wavefront mode other layers'
     /// bands fill it, so it over-approximates true idleness.
     pub per_layer_stall_us: Vec<u64>,
+    /// Pool workers the OS actually pinned for this run (0 on unplaced
+    /// pools and sequential runs) — the placement-effectiveness gauges
+    /// in `/metrics` divide stall by wall per pinned-vs-not regime.
+    pub pinned_workers: usize,
 }
 
 /// One compiled layer of the pipeline.
@@ -292,6 +341,7 @@ struct Stage {
 /// One `(layer, band)` unit of work plus its dependency bookkeeping.
 struct Task {
     layer: usize,
+    band: usize,
     lo: usize,
     hi: usize,
     scratch_slot: usize,
@@ -420,7 +470,7 @@ impl MlpPlan {
                 partition,
             });
         }
-        Ok(MlpPlan {
+        let plan = MlpPlan {
             stages,
             mode,
             threads,
@@ -428,7 +478,16 @@ impl MlpPlan {
             pool,
             arena,
             scratches,
-        })
+        };
+        // Multi-layer plans will stream arena buffers every pass: let the
+        // pool's own workers fault the pages in, band by band, so page
+        // ownership matches the sticky band → worker assignment.
+        if plan.stages.len() > 1 {
+            if let Some(pool) = &plan.pool {
+                plan.arena.reserve_first_touch(plan.bucket, pool);
+            }
+        }
+        Ok(plan)
     }
 
     pub fn num_layers(&self) -> usize {
@@ -531,6 +590,7 @@ impl MlpPlan {
             for (band, &(lo, hi)) in bands.iter().enumerate() {
                 tasks.push(Task {
                     layer,
+                    band,
                     lo,
                     hi,
                     scratch_slot: layer * self.threads + band,
@@ -628,15 +688,16 @@ impl MlpPlan {
             Some(pool) if self.threads > 1 && tasks.len() > 1 => {
                 let engaged = self.threads.min(tasks.len());
                 let panicked =
-                    pool.run_scoped_workers(engaged, |_worker| drain(&ctx, &state, &cv));
+                    pool.run_scoped_workers(engaged, |worker| drain(&ctx, &state, &cv, worker, engaged));
                 if panicked > 0 {
                     let mut s = state.lock().unwrap_or_else(|e| e.into_inner());
                     s.failed += panicked;
                 }
+                stats.pinned_workers = pool.pinned_workers().min(engaged);
                 engaged
             }
             _ => {
-                drain(&ctx, &state, &cv);
+                drain(&ctx, &state, &cv, 0, 1);
                 1
             }
         };
@@ -727,10 +788,11 @@ where
     Ok(())
 }
 
-/// Worker loop: pull the deepest ready band, run it, release successors.
-/// Any single worker can drain the whole graph alone (required by
+/// Worker loop: pull the deepest ready band preferring this worker's
+/// own (sticky) bands, run it, release successors. Any single worker
+/// can drain the whole graph alone (required by
 /// [`ThreadPool::run_scoped_workers`]'s no-mutual-dependence contract).
-fn drain(ctx: &ExecCtx<'_>, state: &Mutex<Sched>, cv: &Condvar) {
+fn drain(ctx: &ExecCtx<'_>, state: &Mutex<Sched>, cv: &Condvar, worker: usize, workers: usize) {
     let lock = || state.lock().unwrap_or_else(|e| e.into_inner());
     let mut guard: MutexGuard<'_, Sched> = lock();
     loop {
@@ -743,13 +805,25 @@ fn drain(ctx: &ExecCtx<'_>, state: &Mutex<Sched>, cv: &Condvar) {
             cv.notify_all();
             return;
         }
-        // Deepest layer first (finish rows; their activations are hot),
-        // leftmost band as the tie-break.
+        // Sticky bands first — band `j` of every layer prefers the same
+        // worker (on a placed pool, the same pinned core, so a band
+        // reuses the L2 that last streamed its rows); within that,
+        // deepest layer first (finish rows; their activations are hot),
+        // leftmost band as the tie-break. Foreign bands are still
+        // stolen when nothing of our own is ready: placement moves
+        // work, it never withholds it.
         let pos = guard
             .ready
             .iter()
             .enumerate()
-            .max_by_key(|&(_, &t)| (ctx.tasks[t].layer, std::cmp::Reverse(ctx.tasks[t].lo)))
+            .max_by_key(|&(_, &t)| {
+                let task = &ctx.tasks[t];
+                let mine = ctx.stages[task.layer]
+                    .partition
+                    .preferred_worker(task.band, workers)
+                    == worker;
+                (mine, task.layer, std::cmp::Reverse(task.lo))
+            })
             .map(|(pos, _)| pos)
             .expect("ready non-empty");
         let t_idx = guard.ready.swap_remove(pos);

@@ -34,10 +34,12 @@ use crate::autotune::{ShapeClass, TuneEntry, TuningTable};
 use crate::formats::TileGeometry;
 use crate::kernels::{self, GemmScratch, KernelId, KernelParams, PreparedGemm};
 use crate::perf::cpu::CpuCaps;
+use crate::perf::topology::CpuTopology;
 use crate::perf::BlockingPolicy;
 use crate::plan::gemm_plan::{Epilogue, GemmPlan};
 use crate::plan::partition::RowPartition;
 use crate::ternary::TernaryMatrix;
+use crate::util::affinity::PlacementPolicy;
 use crate::util::threadpool::ThreadPool;
 use crate::{Error, Result};
 use std::sync::{Arc, Mutex, RwLock};
@@ -204,9 +206,15 @@ pub struct Planner {
     /// Capability set every emitted kernel must satisfy (host by default).
     caps: CpuCaps,
     /// Shared worker pool, created lazily on the first parallel plan and
-    /// sized to the host's parallelism. Plans cap their own fan-out via
-    /// `PlanHints::threads`.
+    /// sized to the host's parallelism (or the placement's core budget).
+    /// Plans cap their own fan-out via `PlanHints::threads`.
     pool: Mutex<Option<Arc<ThreadPool>>>,
+    /// Worker placement the lazily-created pool spawns under, over
+    /// `topology` (host by default). Set before the first parallel plan
+    /// ([`Planner::set_placement`]); changing it later does not re-pin
+    /// an already-created pool.
+    placement: Mutex<PlacementPolicy>,
+    topology: CpuTopology,
 }
 
 impl Default for Planner {
@@ -227,6 +235,8 @@ impl Planner {
             table: RwLock::new(table),
             caps: CpuCaps::host(),
             pool: Mutex::new(None),
+            placement: Mutex::new(PlacementPolicy::None),
+            topology: CpuTopology::host().clone(),
         }
     }
 
@@ -235,6 +245,34 @@ impl Planner {
     pub fn with_caps(mut self, caps: CpuCaps) -> Planner {
         self.caps = caps;
         self
+    }
+
+    /// Same planner, placing its shared pool over a synthetic topology
+    /// instead of the probed host (host-independent placement tests).
+    pub fn with_topology(mut self, topology: CpuTopology) -> Planner {
+        self.topology = topology;
+        self
+    }
+
+    /// Set the placement policy the lazily-created shared pool will spawn
+    /// its workers under. Must be called before the first parallel plan
+    /// to take effect — an already-created pool keeps its placement (the
+    /// coordinator sets this once at startup, from `--placement` /
+    /// `--no-pin`). Returns whether the policy will apply to a future
+    /// pool (`false` = the pool already exists).
+    pub fn set_placement(&self, policy: PlacementPolicy) -> bool {
+        *self.placement.lock().unwrap_or_else(|e| e.into_inner()) = policy;
+        self.pool.lock().unwrap_or_else(|e| e.into_inner()).is_none()
+    }
+
+    /// The placement policy the shared pool spawns (or spawned) under.
+    pub fn placement(&self) -> PlacementPolicy {
+        *self.placement.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// The topology the shared pool is placed over.
+    pub fn topology(&self) -> &CpuTopology {
+        &self.topology
     }
 
     /// The capability set this planner selects against.
@@ -370,15 +408,40 @@ impl Planner {
     }
 
     pub(crate) fn shared_pool(&self) -> Arc<ThreadPool> {
+        let policy = self.placement();
         let mut guard = self.pool.lock().unwrap_or_else(|e| e.into_inner());
         guard
             .get_or_insert_with(|| {
-                let workers = std::thread::available_parallelism()
-                    .map(|n| n.get())
-                    .unwrap_or(4);
-                Arc::new(ThreadPool::new(workers.max(2)))
+                // Under a real placement the worker budget is the *core*
+                // budget the policy targets — the performance-core count
+                // (every core on homogeneous parts) — so no worker needs
+                // to share (or spill onto) an efficiency core. Unplaced
+                // pools keep the host-parallelism sizing.
+                let workers = match policy {
+                    PlacementPolicy::None => std::thread::available_parallelism()
+                        .map(|n| n.get())
+                        .unwrap_or(4),
+                    _ => self.topology.perf_cores().len(),
+                };
+                Arc::new(ThreadPool::with_placement(
+                    workers.max(2),
+                    policy,
+                    &self.topology,
+                ))
             })
             .clone()
+    }
+
+    /// Placement outcomes of the shared pool's workers (empty while the
+    /// pool hasn't been lazily created; under [`PlacementPolicy::None`]
+    /// every row reports `unrestricted`).
+    pub fn pool_placements(&self) -> Vec<crate::util::threadpool::WorkerPlacement> {
+        self.pool
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .as_ref()
+            .map(|p| p.placements())
+            .unwrap_or_default()
     }
 
     /// Size of the shared worker pool, or `None` while it hasn't been

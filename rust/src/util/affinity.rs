@@ -1,0 +1,369 @@
+//! Worker **placement**: map a logical worker index to a core set on a
+//! [`CpuTopology`] and pin the calling thread to it.
+//!
+//! Placement never changes *what* runs — only *where*. Every policy is a
+//! pure function `(topology, worker, workers) → cores`, applied
+//! best-effort at thread spawn:
+//!
+//! - **Linux**: `sched_setaffinity(0, ...)` on the calling thread.
+//! - **macOS**: explicit core ids are not honored, so placement maps to
+//!   a QoS class (`USER_INTERACTIVE` for performance-core sets,
+//!   `UTILITY` for efficiency-core sets) plus a
+//!   `THREAD_AFFINITY_POLICY` tag derived from the target cluster so
+//!   same-cluster workers share an L2 ("affinity tag" = scheduler hint
+//!   to co-locate).
+//! - **Everywhere else**: a no-op that *says so* — [`PinOutcome::Unsupported`]
+//!   feeds the coordinator's `placement_unsupported` gauge, so a silent
+//!   fallback is still a visible fallback.
+//!
+//! Pinning failures are likewise reported, never fatal: a worker that
+//! cannot pin runs exactly the unpinned path (the bitwise-identity
+//! property tests in `tests/placement.rs` hold across all of it).
+
+use crate::perf::topology::{ClusterKind, CpuTopology};
+
+/// How worker threads map onto cores. Parsed from `--placement`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementPolicy {
+    /// Restrict every worker to the performance-core set (no per-core
+    /// pinning inside it). The default for serving: keeps the wavefront
+    /// off efficiency cores while letting the OS balance within the
+    /// P-cluster.
+    #[default]
+    PerfCoresFirst,
+    /// One core per worker, filling each cluster densely before
+    /// spilling to the next (performance clusters first). Maximizes
+    /// shared-L2 locality between adjacent workers.
+    Compact,
+    /// One core per worker, round-robin across clusters. Maximizes
+    /// aggregate cache/bandwidth at the cost of locality.
+    Spread,
+    /// Leave every thread where the OS puts it (`--no-pin`).
+    None,
+}
+
+impl PlacementPolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PlacementPolicy::PerfCoresFirst => "perf",
+            PlacementPolicy::Compact => "compact",
+            PlacementPolicy::Spread => "spread",
+            PlacementPolicy::None => "none",
+        }
+    }
+
+    /// Parse a CLI spelling. Accepts the `as_str` forms plus a few
+    /// obvious aliases.
+    pub fn parse(s: &str) -> Option<PlacementPolicy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "perf" | "perf-cores-first" | "pcores" | "p" => Some(PlacementPolicy::PerfCoresFirst),
+            "compact" => Some(PlacementPolicy::Compact),
+            "spread" => Some(PlacementPolicy::Spread),
+            "none" | "off" | "no-pin" => Some(PlacementPolicy::None),
+            _ => None,
+        }
+    }
+
+    /// All policies, for sweeping in tests/benches.
+    pub fn all() -> [PlacementPolicy; 4] {
+        [
+            PlacementPolicy::PerfCoresFirst,
+            PlacementPolicy::Compact,
+            PlacementPolicy::Spread,
+            PlacementPolicy::None,
+        ]
+    }
+}
+
+impl std::str::FromStr for PlacementPolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        PlacementPolicy::parse(s)
+            .ok_or_else(|| format!("unknown placement policy '{s}' (perf|compact|spread|none)"))
+    }
+}
+
+impl std::fmt::Display for PlacementPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// What actually happened when a thread asked to be pinned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PinOutcome {
+    /// The OS accepted the affinity request.
+    Pinned,
+    /// Policy was `None` or the core set covers every core — nothing to
+    /// ask for.
+    Unrestricted,
+    /// The platform has no pinning primitive (the portable no-op).
+    Unsupported,
+    /// The platform call failed; the thread runs unpinned.
+    Failed,
+}
+
+impl PinOutcome {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PinOutcome::Pinned => "pinned",
+            PinOutcome::Unrestricted => "unrestricted",
+            PinOutcome::Unsupported => "unsupported",
+            PinOutcome::Failed => "failed",
+        }
+    }
+}
+
+/// The core set policy `policy` assigns to worker `worker` of
+/// `workers` on `topo`. Always non-empty, always a subset of the
+/// topology's cores, ascending; pure (property-tested in
+/// `tests/placement.rs` across policies × workers 1..32).
+pub fn core_set(
+    policy: PlacementPolicy,
+    topo: &CpuTopology,
+    worker: usize,
+    workers: usize,
+) -> Vec<usize> {
+    let all_cores: Vec<usize> = topo
+        .clusters
+        .iter()
+        .flat_map(|c| c.cores.iter().copied())
+        .collect();
+    if all_cores.is_empty() {
+        return vec![0];
+    }
+    match policy {
+        PlacementPolicy::None => {
+            let mut cores = all_cores;
+            cores.sort_unstable();
+            cores
+        }
+        PlacementPolicy::PerfCoresFirst => {
+            let mut perf = topo.perf_cores();
+            if perf.is_empty() {
+                perf = all_cores;
+            }
+            perf.sort_unstable();
+            perf
+        }
+        PlacementPolicy::Compact => {
+            // Dense fill: cluster 0's cores in order, then cluster 1's,
+            // wrapping when workers exceed cores.
+            vec![all_cores[worker % all_cores.len()]]
+        }
+        PlacementPolicy::Spread => {
+            // Round-robin over clusters: worker i takes the next unused
+            // core of cluster (i mod clusters), wrapping within each.
+            let nclusters = topo.clusters.len().max(1);
+            let cluster = &topo.clusters[worker % nclusters];
+            let round = worker / nclusters;
+            vec![cluster.cores[round % cluster.cores.len()]]
+        }
+    }
+}
+
+/// Whether this build can pin threads at all (compile-time fact — the
+/// gauge behind the README's "no-op fallback" guarantee).
+pub fn platform_supported() -> bool {
+    cfg!(any(target_os = "linux", target_os = "macos"))
+}
+
+/// Pin the calling thread to `cores` of `topo`, best-effort. `cores`
+/// should come from [`core_set`]; an empty or all-core set degrades to
+/// [`PinOutcome::Unrestricted`].
+pub fn pin_current_thread(topo: &CpuTopology, cores: &[usize]) -> PinOutcome {
+    if cores.is_empty() || cores.len() >= topo.num_cores() {
+        return PinOutcome::Unrestricted;
+    }
+    pin_impl(topo, cores)
+}
+
+#[cfg(target_os = "linux")]
+fn pin_impl(_topo: &CpuTopology, cores: &[usize]) -> PinOutcome {
+    // cpu_set_t is 1024 bits on every mainstream kernel.
+    let mut mask = [0u64; 16];
+    for &c in cores {
+        if c < 1024 {
+            mask[c / 64] |= 1u64 << (c % 64);
+        }
+    }
+    if mask.iter().all(|&w| w == 0) {
+        return PinOutcome::Unrestricted;
+    }
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    // pid 0 = the calling thread.
+    let rc = unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) };
+    if rc == 0 {
+        PinOutcome::Pinned
+    } else {
+        PinOutcome::Failed
+    }
+}
+
+#[cfg(target_os = "macos")]
+fn pin_impl(topo: &CpuTopology, cores: &[usize]) -> PinOutcome {
+    use std::ffi::c_int;
+    // macOS ignores explicit cpu ids; express the intent as QoS class
+    // (performance vs efficiency set) + an affinity tag per target
+    // cluster so same-cluster threads are scheduled to share caches.
+    const QOS_CLASS_USER_INTERACTIVE: u32 = 0x21;
+    const QOS_CLASS_UTILITY: u32 = 0x11;
+    const THREAD_AFFINITY_POLICY: c_int = 4;
+    extern "C" {
+        fn pthread_set_qos_class_self_np(qos_class: u32, relative_priority: c_int) -> c_int;
+        fn mach_thread_self() -> u32;
+        fn thread_policy_set(
+            thread: u32,
+            flavor: c_int,
+            policy_info: *const c_int,
+            count: u32,
+        ) -> c_int;
+    }
+    let perf = topo.perf_cores();
+    let on_perf = cores.iter().any(|c| perf.contains(c));
+    let qos = if on_perf {
+        QOS_CLASS_USER_INTERACTIVE
+    } else {
+        QOS_CLASS_UTILITY
+    };
+    let qos_rc = unsafe { pthread_set_qos_class_self_np(qos, 0) };
+    // Tag = first target cluster + 1 (0 means "no affinity" to Mach).
+    let tag: c_int = cores
+        .first()
+        .and_then(|&c| topo.cluster_of(c))
+        .map(|i| i as c_int + 1)
+        .unwrap_or(1);
+    let policy_rc =
+        unsafe { thread_policy_set(mach_thread_self(), THREAD_AFFINITY_POLICY, &tag, 1) };
+    // Affinity tags are advisory (and rejected on Apple Silicon); QoS
+    // succeeding is what counts.
+    if qos_rc == 0 || policy_rc == 0 {
+        PinOutcome::Pinned
+    } else {
+        PinOutcome::Failed
+    }
+}
+
+#[cfg(not(any(target_os = "linux", target_os = "macos")))]
+fn pin_impl(_topo: &CpuTopology, _cores: &[usize]) -> PinOutcome {
+    PinOutcome::Unsupported
+}
+
+/// The [`ClusterKind`] a worker's core set predominantly targets — used
+/// for `/status` rows and the macOS QoS mapping.
+pub fn target_kind(topo: &CpuTopology, cores: &[usize]) -> ClusterKind {
+    let perf = topo.perf_cores();
+    if cores.iter().any(|c| perf.contains(c)) {
+        ClusterKind::Performance
+    } else {
+        ClusterKind::Efficiency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_cli_spellings() {
+        assert_eq!(
+            PlacementPolicy::parse("perf"),
+            Some(PlacementPolicy::PerfCoresFirst)
+        );
+        assert_eq!(
+            PlacementPolicy::parse("Perf-Cores-First"),
+            Some(PlacementPolicy::PerfCoresFirst)
+        );
+        assert_eq!(PlacementPolicy::parse("compact"), Some(PlacementPolicy::Compact));
+        assert_eq!(PlacementPolicy::parse("spread"), Some(PlacementPolicy::Spread));
+        assert_eq!(PlacementPolicy::parse("none"), Some(PlacementPolicy::None));
+        assert_eq!(PlacementPolicy::parse("off"), Some(PlacementPolicy::None));
+        assert_eq!(PlacementPolicy::parse("bogus"), None);
+        for p in PlacementPolicy::all() {
+            assert_eq!(PlacementPolicy::parse(p.as_str()), Some(p), "{p} roundtrips");
+        }
+    }
+
+    #[test]
+    fn perf_first_restricts_to_p_cores() {
+        let topo = CpuTopology::apple_like();
+        for w in 0..8 {
+            let cores = core_set(PlacementPolicy::PerfCoresFirst, &topo, w, 8);
+            assert_eq!(cores, vec![0, 1, 2, 3], "worker {w} gets the P set");
+        }
+        // Homogeneous topology: P set == all cores.
+        let flat = CpuTopology::flat(4);
+        assert_eq!(
+            core_set(PlacementPolicy::PerfCoresFirst, &flat, 0, 2),
+            vec![0, 1, 2, 3]
+        );
+    }
+
+    #[test]
+    fn compact_fills_clusters_densely() {
+        let topo = CpuTopology::apple_like();
+        let singles: Vec<usize> = (0..10)
+            .map(|w| core_set(PlacementPolicy::Compact, &topo, w, 10)[0])
+            .collect();
+        // 4 P cores, then 4 E cores, then wrap.
+        assert_eq!(singles, vec![0, 1, 2, 3, 4, 5, 6, 7, 0, 1]);
+    }
+
+    #[test]
+    fn spread_alternates_clusters() {
+        let topo = CpuTopology::apple_like();
+        let singles: Vec<usize> = (0..6)
+            .map(|w| core_set(PlacementPolicy::Spread, &topo, w, 6)[0])
+            .collect();
+        // P, E, P, E, ...
+        assert_eq!(singles, vec![0, 4, 1, 5, 2, 6]);
+    }
+
+    #[test]
+    fn none_is_all_cores() {
+        let topo = CpuTopology::apple_like();
+        assert_eq!(
+            core_set(PlacementPolicy::None, &topo, 3, 4),
+            vec![0, 1, 2, 3, 4, 5, 6, 7]
+        );
+    }
+
+    #[test]
+    fn pin_with_full_set_is_unrestricted() {
+        let topo = CpuTopology::flat(2);
+        assert_eq!(pin_current_thread(&topo, &[0, 1]), PinOutcome::Unrestricted);
+        assert_eq!(pin_current_thread(&topo, &[]), PinOutcome::Unrestricted);
+    }
+
+    #[test]
+    fn pin_to_one_core_reports_an_outcome() {
+        // On Linux this really pins (then we restore); elsewhere it must
+        // not pretend to.
+        let topo = CpuTopology::host().clone();
+        if topo.num_cores() < 2 {
+            return;
+        }
+        let outcome = pin_current_thread(&topo, &[topo.perf_cores()[0]]);
+        match outcome {
+            PinOutcome::Pinned => {
+                assert!(platform_supported());
+                // Restore: widen back to every core (full set short-circuits
+                // to Unrestricted, so call the impl via a near-full set).
+                let all: Vec<usize> = (0..topo.num_cores()).collect();
+                let _ = pin_impl(&topo, &all);
+            }
+            PinOutcome::Unsupported => assert!(!platform_supported()),
+            PinOutcome::Failed | PinOutcome::Unrestricted => {}
+        }
+    }
+
+    #[test]
+    fn target_kind_tracks_cluster() {
+        let topo = CpuTopology::apple_like();
+        assert_eq!(target_kind(&topo, &[0]), ClusterKind::Performance);
+        assert_eq!(target_kind(&topo, &[5]), ClusterKind::Efficiency);
+        assert_eq!(target_kind(&topo, &[5, 1]), ClusterKind::Performance);
+    }
+}

@@ -1,0 +1,368 @@
+//! Aligned / hugepage-advised allocation for the big long-lived
+//! buffers: activation-arena pairs and prepared sparse formats.
+//!
+//! Two independent levers, both best-effort and both invisible to the
+//! math (placement and backing move bytes, never change them):
+//!
+//! - [`AlignedBuffer`]: a page-aligned `f32` region. `mmap` on Linux,
+//!   `vm_allocate` on macOS, plain `Vec` everywhere else (and whenever
+//!   the platform call fails). Page alignment makes the whole region
+//!   eligible for transparent hugepages and keeps arena ping-pong
+//!   halves from sharing a line.
+//! - [`advise_hugepages_f32`]: `madvise(MADV_HUGEPAGE)` on the
+//!   page-aligned interior of *any* existing allocation — legal on heap
+//!   memory, so `Matrix`'s ordinary `Vec` backing benefits without an
+//!   API change. THP collapses the range to 2 MiB pages in the
+//!   background; returns whether the kernel accepted the hint.
+//!
+//! First-touch matters as much as backing: on NUMA/cluster parts, pages
+//! are placed on first write, so [`first_touch_band`] lets the worker
+//! that *owns* a row band be the one to fault its pages in (the arena
+//! calls it from the placed pool at lease time).
+
+const PAGE: usize = 4096;
+
+/// Which backing an [`AlignedBuffer`] ended up with — surfaced in
+/// `/status` so a silent fallback is still visible.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backing {
+    /// Linux `mmap` (anonymous, page-aligned).
+    Mmap,
+    /// macOS `vm_allocate` (page-aligned).
+    VmAllocate,
+    /// Portable `Vec<f32>` fallback.
+    Vec,
+}
+
+impl Backing {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Backing::Mmap => "mmap",
+            Backing::VmAllocate => "vm_allocate",
+            Backing::Vec => "vec",
+        }
+    }
+}
+
+enum Storage {
+    #[cfg_attr(not(any(target_os = "linux", target_os = "macos")), allow(dead_code))]
+    Raw {
+        ptr: *mut f32,
+        bytes: usize,
+        backing: Backing,
+    },
+    Vec(Vec<f32>),
+}
+
+/// A zero-initialized, page-aligned `f32` buffer with a portable
+/// fallback. Dereferences to `[f32]`.
+pub struct AlignedBuffer {
+    storage: Storage,
+    len: usize,
+}
+
+// The raw region is uniquely owned; f32s are Send + Sync.
+unsafe impl Send for AlignedBuffer {}
+unsafe impl Sync for AlignedBuffer {}
+
+impl AlignedBuffer {
+    /// Allocate `len` zeroed f32s, page-aligned when the platform
+    /// cooperates. `mmap`/`vm_allocate` memory is zero-filled by the
+    /// kernel; the Vec fallback zeroes explicitly.
+    pub fn zeroed_f32(len: usize) -> AlignedBuffer {
+        let bytes = len.saturating_mul(std::mem::size_of::<f32>());
+        if len == 0 {
+            return AlignedBuffer {
+                storage: Storage::Vec(Vec::new()),
+                len: 0,
+            };
+        }
+        if let Some(storage) = raw_alloc(bytes) {
+            return AlignedBuffer { storage, len };
+        }
+        AlignedBuffer {
+            storage: Storage::Vec(vec![0.0; len]),
+            len,
+        }
+    }
+
+    /// Allocate and immediately request hugepage backing.
+    pub fn zeroed_f32_hugepage(len: usize) -> AlignedBuffer {
+        let mut buf = AlignedBuffer::zeroed_f32(len);
+        let _ = advise_hugepages_f32(buf.as_mut_slice());
+        buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Which allocator actually backed this buffer.
+    pub fn backing(&self) -> Backing {
+        match &self.storage {
+            Storage::Raw { backing, .. } => *backing,
+            Storage::Vec(_) => Backing::Vec,
+        }
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        match &self.storage {
+            Storage::Raw { ptr, .. } => unsafe { std::slice::from_raw_parts(*ptr, self.len) },
+            Storage::Vec(v) => v,
+        }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        match &mut self.storage {
+            Storage::Raw { ptr, .. } => unsafe { std::slice::from_raw_parts_mut(*ptr, self.len) },
+            Storage::Vec(v) => v,
+        }
+    }
+}
+
+impl std::ops::Deref for AlignedBuffer {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl std::ops::DerefMut for AlignedBuffer {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        self.as_mut_slice()
+    }
+}
+
+impl Drop for AlignedBuffer {
+    fn drop(&mut self) {
+        if let Storage::Raw { ptr, bytes, backing } = &self.storage {
+            raw_free(*ptr, *bytes, *backing);
+        }
+    }
+}
+
+impl std::fmt::Debug for AlignedBuffer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AlignedBuffer")
+            .field("len", &self.len)
+            .field("backing", &self.backing().as_str())
+            .finish()
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn raw_alloc(bytes: usize) -> Option<Storage> {
+    use std::ffi::c_void;
+    const PROT_READ: i32 = 1;
+    const PROT_WRITE: i32 = 2;
+    const MAP_PRIVATE: i32 = 0x02;
+    const MAP_ANONYMOUS: i32 = 0x20;
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            length: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+    }
+    let rounded = bytes.div_ceil(PAGE) * PAGE;
+    let ptr = unsafe {
+        mmap(
+            std::ptr::null_mut(),
+            rounded,
+            PROT_READ | PROT_WRITE,
+            MAP_PRIVATE | MAP_ANONYMOUS,
+            -1,
+            0,
+        )
+    };
+    // MAP_FAILED is -1.
+    if ptr.is_null() || ptr as isize == -1 {
+        return None;
+    }
+    Some(Storage::Raw {
+        ptr: ptr as *mut f32,
+        bytes: rounded,
+        backing: Backing::Mmap,
+    })
+}
+
+#[cfg(target_os = "macos")]
+fn raw_alloc(bytes: usize) -> Option<Storage> {
+    extern "C" {
+        fn mach_task_self() -> u32;
+        fn vm_allocate(task: u32, address: *mut usize, size: usize, flags: i32) -> i32;
+    }
+    const VM_FLAGS_ANYWHERE: i32 = 0x0001;
+    let rounded = bytes.div_ceil(PAGE) * PAGE;
+    let mut addr: usize = 0;
+    let kr = unsafe { vm_allocate(mach_task_self(), &mut addr, rounded, VM_FLAGS_ANYWHERE) };
+    if kr != 0 || addr == 0 {
+        return None;
+    }
+    Some(Storage::Raw {
+        ptr: addr as *mut f32,
+        bytes: rounded,
+        backing: Backing::VmAllocate,
+    })
+}
+
+#[cfg(not(any(target_os = "linux", target_os = "macos")))]
+fn raw_alloc(_bytes: usize) -> Option<Storage> {
+    None
+}
+
+#[cfg(target_os = "linux")]
+fn raw_free(ptr: *mut f32, bytes: usize, _backing: Backing) {
+    use std::ffi::c_void;
+    extern "C" {
+        fn munmap(addr: *mut c_void, length: usize) -> i32;
+    }
+    unsafe {
+        munmap(ptr as *mut c_void, bytes);
+    }
+}
+
+#[cfg(target_os = "macos")]
+fn raw_free(ptr: *mut f32, bytes: usize, _backing: Backing) {
+    extern "C" {
+        fn mach_task_self() -> u32;
+        fn vm_deallocate(task: u32, address: usize, size: usize) -> i32;
+    }
+    unsafe {
+        vm_deallocate(mach_task_self(), ptr as usize, bytes);
+    }
+}
+
+#[cfg(not(any(target_os = "linux", target_os = "macos")))]
+fn raw_free(_ptr: *mut f32, _bytes: usize, _backing: Backing) {}
+
+/// Ask the kernel to back the page-aligned interior of `data` with
+/// transparent hugepages. Legal on any allocation (heap `Vec`s
+/// included) — `madvise` only needs page-aligned *addresses*, and THP
+/// collapse happens in the background. Returns `true` iff a non-empty
+/// aligned range existed and the kernel accepted the hint; `false` is
+/// the portable no-op (macOS superpages are not worth forcing for f32
+/// streams; other platforms have no primitive).
+pub fn advise_hugepages_f32(data: &mut [f32]) -> bool {
+    if data.is_empty() {
+        return false;
+    }
+    let start = data.as_ptr() as usize;
+    let end = start + std::mem::size_of_val(data);
+    let a_start = start.div_ceil(PAGE) * PAGE;
+    let a_end = (end / PAGE) * PAGE;
+    if a_end <= a_start {
+        return false;
+    }
+    advise_impl(a_start, a_end - a_start)
+}
+
+#[cfg(target_os = "linux")]
+fn advise_impl(addr: usize, len: usize) -> bool {
+    use std::ffi::c_void;
+    const MADV_HUGEPAGE: i32 = 14;
+    extern "C" {
+        fn madvise(addr: *mut c_void, length: usize, advice: i32) -> i32;
+    }
+    unsafe { madvise(addr as *mut c_void, len, MADV_HUGEPAGE) == 0 }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn advise_impl(_addr: usize, _len: usize) -> bool {
+    false
+}
+
+/// First-touch a row band of a row-major `rows × cols` buffer: write
+/// one zero per page so the faulting thread's locality domain owns the
+/// pages. Call from the worker that will consume the band.
+pub fn first_touch_band(data: &mut [f32], cols: usize, row_start: usize, row_end: usize) {
+    if cols == 0 {
+        return;
+    }
+    let lo = (row_start * cols).min(data.len());
+    let hi = (row_end * cols).min(data.len());
+    let step = PAGE / std::mem::size_of::<f32>();
+    let mut i = lo;
+    while i < hi {
+        data[i] = 0.0;
+        i += step;
+    }
+    if hi > lo {
+        data[hi - 1] = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeroed_buffer_is_zero_and_sized() {
+        let buf = AlignedBuffer::zeroed_f32(1000);
+        assert_eq!(buf.len(), 1000);
+        assert!(buf.iter().all(|&v| v == 0.0));
+        // Raw backings must be page-aligned; the Vec fallback need not be.
+        if buf.backing() != Backing::Vec {
+            assert_eq!(buf.as_slice().as_ptr() as usize % PAGE, 0);
+        }
+        assert!(!buf.backing().as_str().is_empty());
+    }
+
+    #[test]
+    fn buffer_is_writable_and_roundtrips() {
+        let mut buf = AlignedBuffer::zeroed_f32(257);
+        for (i, v) in buf.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        assert_eq!(buf[0], 0.0);
+        assert_eq!(buf[256], 256.0);
+        let empty = AlignedBuffer::zeroed_f32(0);
+        assert!(empty.is_empty());
+        assert_eq!(empty.backing(), Backing::Vec);
+    }
+
+    #[test]
+    fn hugepage_advise_never_corrupts() {
+        let mut v = vec![7.0f32; 1 << 16];
+        let accepted = advise_hugepages_f32(&mut v);
+        // Hint or no hint, the data is untouched.
+        assert!(v.iter().all(|&x| x == 7.0));
+        if !cfg!(target_os = "linux") {
+            assert!(!accepted, "non-Linux is a no-op");
+        }
+        // Tiny slices have no aligned interior.
+        let mut tiny = [1.0f32; 4];
+        assert!(!advise_hugepages_f32(&mut tiny));
+        assert!(!advise_hugepages_f32(&mut []));
+    }
+
+    #[test]
+    fn hugepage_buffer_constructor_zeroes() {
+        let buf = AlignedBuffer::zeroed_f32_hugepage(4096 * 3);
+        assert!(buf.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn first_touch_band_touches_every_page() {
+        let cols = 300;
+        let mut data = vec![f32::NAN; 10 * cols];
+        first_touch_band(&mut data, cols, 2, 5);
+        // The touched band's first element per page and its last element
+        // are zeroed; nothing outside the band is written.
+        assert_eq!(data[2 * cols], 0.0);
+        assert_eq!(data[5 * cols - 1], 0.0);
+        assert!(data[0].is_nan());
+        assert!(data[6 * cols].is_nan());
+        // Degenerate calls are safe.
+        first_touch_band(&mut data, 0, 0, 10);
+        first_touch_band(&mut data, cols, 8, 8);
+        first_touch_band(&mut data, cols, 9, 99);
+    }
+}

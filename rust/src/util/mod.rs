@@ -7,6 +7,10 @@ pub mod json;
 pub mod cli;
 pub mod threadpool;
 pub mod quickcheck;
+pub mod affinity;
+pub mod alloc;
 
+pub use affinity::{core_set, pin_current_thread, PinOutcome, PlacementPolicy};
+pub use alloc::{advise_hugepages_f32, AlignedBuffer, Backing};
 pub use rng::Rng;
 pub use json::Json;

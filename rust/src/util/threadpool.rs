@@ -1,91 +1,276 @@
 //! Fixed-size worker thread pool (no tokio available offline).
 //!
-//! Powers the HTTP server's connection handling and parallel benchmark
-//! sweeps. Jobs are boxed closures delivered over an mpsc channel guarded by
-//! a mutex (the classic "channel of jobs" pool from the Rust book, hardened
-//! with graceful shutdown and panic isolation).
+//! Powers the HTTP server's connection handling, the wavefront pipeline
+//! workers and parallel benchmark sweeps. Jobs are boxed closures in a
+//! mutex-guarded deque; idle workers **park on a condvar** (they must
+//! not burn the very efficiency cores the placement layer tries to
+//! leave free), and waiting for idle is condvar-based with a short
+//! bounded spin whose iterations are counted — the counter is the
+//! regression test that the old spin+yield loop stays gone.
+//!
+//! Placement: [`ThreadPool::with_placement`] pins each worker at spawn
+//! according to a [`PlacementPolicy`] over a [`CpuTopology`]
+//! (best-effort — see [`crate::util::affinity`]), records the
+//! per-worker outcome for `/status`, and makes
+//! [`ThreadPool::run_scoped_workers`] *assigned*: logical worker `i`
+//! runs on pool thread `i % size`, so a band assigned to worker `i`
+//! lands on the same pinned core (and therefore the same L2) every
+//! forward pass. Unplaced pools keep the original any-worker queue.
 
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
+use std::time::Duration;
+
+use crate::perf::topology::CpuTopology;
+use crate::util::affinity::{core_set, pin_current_thread, PinOutcome, PlacementPolicy};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-enum Message {
-    Run(Job),
-    Shutdown,
+/// Where one pool worker ended up: its policy-assigned core set and
+/// whether the OS accepted the pin. Surfaced through
+/// [`ThreadPool::placements`] into `/status` placement rows.
+#[derive(Debug, Clone)]
+pub struct WorkerPlacement {
+    pub worker: usize,
+    pub cores: Vec<usize>,
+    pub outcome: PinOutcome,
+}
+
+struct PoolState {
+    /// Any-worker jobs, FIFO.
+    queue: VecDeque<Job>,
+    /// Per-worker assigned jobs (placement-sticky routing).
+    assigned: Vec<VecDeque<Job>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Workers park here when both queues are empty.
+    work_cv: Condvar,
+    /// `wait_idle` parks here; the worker finishing the last in-flight
+    /// job notifies (under the state lock, so wakeups can't be missed).
+    idle_cv: Condvar,
+    in_flight: AtomicUsize,
+    panics: AtomicUsize,
+    /// Spin iterations burned inside `wait_idle` before parking.
+    busy_wait_iters: AtomicU64,
 }
 
 /// A fixed pool of worker threads executing submitted closures.
 pub struct ThreadPool {
     workers: Vec<thread::JoinHandle<()>>,
-    tx: mpsc::Sender<Message>,
-    in_flight: Arc<AtomicUsize>,
-    panics: Arc<AtomicUsize>,
+    shared: Arc<Shared>,
+    policy: PlacementPolicy,
+    placements: Arc<Mutex<Vec<WorkerPlacement>>>,
 }
 
+/// `wait_idle` spins at most this many yields before parking on the
+/// idle condvar. Small: just enough to absorb a job that is already
+/// retiring without a syscall.
+const IDLE_SPIN_LIMIT: u64 = 64;
+
 impl ThreadPool {
-    /// Create a pool with `size` workers (`size >= 1`).
+    /// Create an unplaced pool with `size` workers (`size >= 1`):
+    /// threads land wherever the OS puts them, exactly as before.
     pub fn new(size: usize) -> ThreadPool {
+        Self::spawn(size, PlacementPolicy::None, None)
+    }
+
+    /// Create a pool whose workers pin themselves at spawn according to
+    /// `policy` over `topo`. Pinning is best-effort: a worker whose pin
+    /// fails (or a platform with no pinning primitive) runs unpinned
+    /// and says so in [`ThreadPool::placements`].
+    pub fn with_placement(size: usize, policy: PlacementPolicy, topo: &CpuTopology) -> ThreadPool {
+        Self::spawn(size, policy, Some(Arc::new(topo.clone())))
+    }
+
+    fn spawn(size: usize, policy: PlacementPolicy, topo: Option<Arc<CpuTopology>>) -> ThreadPool {
         assert!(size >= 1, "thread pool needs at least one worker");
-        let (tx, rx) = mpsc::channel::<Message>();
-        let rx = Arc::new(Mutex::new(rx));
-        let in_flight = Arc::new(AtomicUsize::new(0));
-        let panics = Arc::new(AtomicUsize::new(0));
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                queue: VecDeque::new(),
+                assigned: (0..size).map(|_| VecDeque::new()).collect(),
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            idle_cv: Condvar::new(),
+            in_flight: AtomicUsize::new(0),
+            panics: AtomicUsize::new(0),
+            busy_wait_iters: AtomicU64::new(0),
+        });
+        let placements = Arc::new(Mutex::new(Vec::with_capacity(size)));
         let workers = (0..size)
             .map(|i| {
-                let rx = Arc::clone(&rx);
-                let in_flight = Arc::clone(&in_flight);
-                let panics = Arc::clone(&panics);
+                let shared = Arc::clone(&shared);
+                let placements = Arc::clone(&placements);
+                let topo = topo.clone();
                 thread::Builder::new()
                     .name(format!("stgemm-worker-{i}"))
-                    .spawn(move || loop {
-                        let msg = {
-                            let guard = rx.lock().expect("pool channel poisoned");
-                            guard.recv()
-                        };
-                        match msg {
-                            Ok(Message::Run(job)) => {
-                                // Isolate panics: a panicking job must not
-                                // take the worker (or the pool) down.
-                                let res = catch_unwind(AssertUnwindSafe(job));
-                                if res.is_err() {
-                                    panics.fetch_add(1, Ordering::SeqCst);
-                                }
-                                in_flight.fetch_sub(1, Ordering::SeqCst);
-                            }
-                            Ok(Message::Shutdown) | Err(_) => break,
+                    .spawn(move || {
+                        if let Some(topo) = &topo {
+                            let cores = core_set(policy, topo, i, size);
+                            let outcome = if policy == PlacementPolicy::None {
+                                PinOutcome::Unrestricted
+                            } else {
+                                pin_current_thread(topo, &cores)
+                            };
+                            placements
+                                .lock()
+                                .unwrap_or_else(|e| e.into_inner())
+                                .push(WorkerPlacement {
+                                    worker: i,
+                                    cores,
+                                    outcome,
+                                });
                         }
+                        Self::worker_loop(i, &shared);
                     })
                     .expect("failed to spawn worker")
             })
             .collect();
+        if topo.is_some() {
+            // Placement registration is each worker's first pre-loop step;
+            // waiting for every row here (microseconds — a few syscalls
+            // per worker) makes `placements()` deterministic for status
+            // rows and tests instead of racing worker startup.
+            while placements.lock().unwrap_or_else(|e| e.into_inner()).len() < size {
+                thread::yield_now();
+            }
+        }
         ThreadPool {
             workers,
-            tx,
-            in_flight,
-            panics,
+            shared,
+            policy,
+            placements,
         }
     }
 
-    /// Submit a job for execution.
+    fn worker_loop(index: usize, shared: &Shared) {
+        loop {
+            let job = {
+                let mut s = shared.state.lock().unwrap_or_else(|e| e.into_inner());
+                loop {
+                    if let Some(job) = s.assigned[index].pop_front() {
+                        break Some(job);
+                    }
+                    if let Some(job) = s.queue.pop_front() {
+                        break Some(job);
+                    }
+                    if s.shutdown {
+                        break None;
+                    }
+                    // Park; no CPU burned while the pool is idle.
+                    s = shared.work_cv.wait(s).unwrap_or_else(|e| e.into_inner());
+                }
+            };
+            let Some(job) = job else { break };
+            // Isolate panics: a panicking job must not take the worker
+            // (or the pool) down.
+            let res = catch_unwind(AssertUnwindSafe(job));
+            if res.is_err() {
+                shared.panics.fetch_add(1, Ordering::SeqCst);
+            }
+            if shared.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
+                // Last in-flight job: wake idle waiters. Taking the state
+                // lock orders this notify after any waiter's check of
+                // `in_flight`, so the wakeup cannot be missed.
+                let _guard = shared.state.lock().unwrap_or_else(|e| e.into_inner());
+                shared.idle_cv.notify_all();
+            }
+        }
+    }
+
+    fn submit(&self, job: Job, target: Option<usize>) {
+        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        let mut s = self
+            .shared
+            .state
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        assert!(!s.shutdown, "thread pool has shut down");
+        match target {
+            Some(worker) => {
+                let slot = worker % self.workers.len();
+                s.assigned[slot].push_back(job);
+                // An assigned job wakes everyone: only worker `slot` can
+                // take it, but a notify_one might land on a different
+                // parked thread.
+                drop(s);
+                self.shared.work_cv.notify_all();
+            }
+            None => {
+                s.queue.push_back(job);
+                drop(s);
+                self.shared.work_cv.notify_one();
+            }
+        }
+    }
+
+    /// Submit a job for execution on any worker.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
-        self.in_flight.fetch_add(1, Ordering::SeqCst);
-        self.tx
-            .send(Message::Run(Box::new(job)))
-            .expect("thread pool has shut down");
+        self.submit(Box::new(job), None);
     }
 
     /// Number of jobs submitted but not yet finished.
     pub fn in_flight(&self) -> usize {
-        self.in_flight.load(Ordering::SeqCst)
+        self.shared.in_flight.load(Ordering::SeqCst)
     }
 
     /// Number of jobs that panicked (isolated, workers survive).
     pub fn panic_count(&self) -> usize {
-        self.panics.load(Ordering::SeqCst)
+        self.shared.panics.load(Ordering::SeqCst)
+    }
+
+    /// Spin iterations burned inside [`ThreadPool::wait_idle`] across
+    /// the pool's lifetime — the busy-wait regression gauge: an idle
+    /// pool contributes zero, and each wait adds at most the bounded
+    /// spin before parking.
+    pub fn busy_wait_iters(&self) -> u64 {
+        self.shared.busy_wait_iters.load(Ordering::SeqCst)
+    }
+
+    /// The placement policy this pool's workers were spawned under.
+    pub fn policy(&self) -> PlacementPolicy {
+        self.policy
+    }
+
+    /// Per-worker placement outcomes, worker order. Empty for pools
+    /// created with [`ThreadPool::new`] (no topology — nothing was even
+    /// attempted).
+    pub fn placements(&self) -> Vec<WorkerPlacement> {
+        let mut rows = self
+            .placements
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone();
+        rows.sort_by_key(|p| p.worker);
+        rows
+    }
+
+    /// Number of workers the OS actually pinned.
+    pub fn pinned_workers(&self) -> usize {
+        self.placements()
+            .iter()
+            .filter(|p| p.outcome == PinOutcome::Pinned)
+            .count()
+    }
+
+    /// Whether scoped fan-outs route job `i` to pool thread `i % size`
+    /// (true for the per-core placements, `Compact`/`Spread`, where each
+    /// pool thread is pinned to one core — band → worker → core then
+    /// stays sticky across passes). Set-restricted (`PerfCoresFirst`)
+    /// and unplaced pools keep any-worker routing: the OS balances
+    /// within the allowed set, and strict routing would serialize
+    /// concurrent forwards sharing the pool.
+    pub fn sticky_routing(&self) -> bool {
+        matches!(
+            self.policy,
+            PlacementPolicy::Compact | PlacementPolicy::Spread
+        )
     }
 
     /// Scoped fork-join: run a batch of jobs that may borrow non-`'static`
@@ -109,12 +294,33 @@ impl ThreadPool {
     /// deadlock waiting on itself.
     #[must_use = "a non-zero return means worker jobs panicked"]
     pub fn run_scoped<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) -> usize {
+        self.run_scoped_routed(jobs, false)
+    }
+
+    /// Scoped fork-join with sticky routing regardless of policy: job
+    /// `i` runs on pool thread `i % size`. Used by the arena's
+    /// first-touch pass so page ownership matches the worker that will
+    /// stream the band every forward pass. Same completion/panic
+    /// semantics as [`ThreadPool::run_scoped`].
+    #[must_use = "a non-zero return means worker jobs panicked"]
+    pub fn run_scoped_assigned<'scope>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>,
+    ) -> usize {
+        self.run_scoped_routed(jobs, true)
+    }
+
+    fn run_scoped_routed<'scope>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>,
+        assign: bool,
+    ) -> usize {
         if jobs.is_empty() {
             return 0;
         }
         // (jobs remaining, jobs panicked)
         let latch = Arc::new((Mutex::new((jobs.len(), 0usize)), Condvar::new()));
-        for job in jobs {
+        for (i, job) in jobs.into_iter().enumerate() {
             // SAFETY: see above — the latch wait below keeps every borrow
             // captured by `job` alive until the job has run (or panicked).
             let job: Box<dyn FnOnce() + Send + 'static> = unsafe {
@@ -124,7 +330,7 @@ impl ThreadPool {
                 >(job)
             };
             let latch = Arc::clone(&latch);
-            self.execute(move || {
+            let wrapped: Job = Box::new(move || {
                 let panicked = catch_unwind(AssertUnwindSafe(job)).is_err();
                 let (state, cv) = &*latch;
                 let mut s = state.lock().unwrap_or_else(|e| e.into_inner());
@@ -134,6 +340,7 @@ impl ThreadPool {
                 }
                 cv.notify_all();
             });
+            self.submit(wrapped, if assign { Some(i) } else { None });
         }
         let (state, cv) = &*latch;
         let mut s = state.lock().unwrap_or_else(|e| e.into_inner());
@@ -150,6 +357,12 @@ impl ThreadPool {
     /// scheduler needs: each copy of `worker` loops pulling `(layer, band)`
     /// tasks from a shared scheduler until the task graph is drained, so
     /// one forward pass costs `n` pool jobs instead of layers × bands.
+    ///
+    /// On a pool spawned with a per-core placement (`Compact`/`Spread`),
+    /// copy `i` is routed to pool thread `i % size`, so the logical
+    /// worker index corresponds to a pinned core and band → worker
+    /// assignments stay cluster-sticky across passes. Unplaced (and
+    /// set-restricted) pools keep any-worker routing.
     ///
     /// The copies must not depend on each other to make progress (any
     /// single worker must be able to drain the shared work source alone):
@@ -168,14 +381,39 @@ impl ThreadPool {
         let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..n)
             .map(|i| Box::new(move || worker(i)) as Box<dyn FnOnce() + Send + '_>)
             .collect();
-        self.run_scoped(jobs)
+        self.run_scoped_routed(jobs, self.sticky_routing())
     }
 
-    /// Block until every submitted job has finished (spin + yield; used by
-    /// tests and batch drivers, not the server hot path).
+    /// Block until every submitted job has finished. A short bounded
+    /// spin (counted in [`ThreadPool::busy_wait_iters`]) absorbs jobs
+    /// that are already retiring; past it the caller parks on a condvar
+    /// until the last in-flight job notifies.
     pub fn wait_idle(&self) {
-        while self.in_flight() > 0 {
+        let mut spins = 0u64;
+        while self.in_flight() > 0 && spins < IDLE_SPIN_LIMIT {
+            spins += 1;
             thread::yield_now();
+        }
+        if spins > 0 {
+            self.shared.busy_wait_iters.fetch_add(spins, Ordering::SeqCst);
+        }
+        if self.in_flight() == 0 {
+            return;
+        }
+        let mut s = self
+            .shared
+            .state
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        while self.in_flight() > 0 {
+            // Timed wait purely as a belt: correctness comes from the
+            // under-lock notify in the worker loop.
+            let (guard, _timeout) = self
+                .shared
+                .idle_cv
+                .wait_timeout(s, Duration::from_millis(50))
+                .unwrap_or_else(|e| e.into_inner());
+            s = guard;
         }
     }
 
@@ -186,9 +424,15 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        for _ in &self.workers {
-            let _ = self.tx.send(Message::Shutdown);
+        {
+            let mut s = self
+                .shared
+                .state
+                .lock()
+                .unwrap_or_else(|e| e.into_inner());
+            s.shutdown = true;
         }
+        self.shared.work_cv.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -353,5 +597,81 @@ mod tests {
         drop(pool); // must not deadlock; shutdown after queue drains or mid-queue is fine
         // At least the in-flight jobs at drop time completed; counter ≤ 10.
         assert!(counter.load(Ordering::SeqCst) <= 10);
+    }
+
+    #[test]
+    fn idle_wait_burns_no_busy_iterations() {
+        // Satellite regression: waiting on an idle pool must not spin at
+        // all, and waiting on a busy pool spins at most the bound before
+        // parking on the condvar.
+        let pool = ThreadPool::new(4);
+        pool.wait_idle();
+        assert_eq!(pool.busy_wait_iters(), 0, "idle pool: zero busy-wait");
+        let gate = Arc::new(AtomicU64::new(0));
+        for _ in 0..4 {
+            let g = Arc::clone(&gate);
+            pool.execute(move || {
+                while g.load(Ordering::SeqCst) == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+            });
+        }
+        let opener = {
+            let g = Arc::clone(&gate);
+            std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                g.store(1, Ordering::SeqCst);
+            })
+        };
+        pool.wait_idle();
+        opener.join().unwrap();
+        assert_eq!(pool.in_flight(), 0);
+        assert!(
+            pool.busy_wait_iters() <= IDLE_SPIN_LIMIT,
+            "one long wait spins at most the bound, then parks (got {})",
+            pool.busy_wait_iters()
+        );
+    }
+
+    #[test]
+    fn placed_pool_reports_per_worker_placement() {
+        let topo = CpuTopology::apple_like();
+        let pool = ThreadPool::with_placement(4, PlacementPolicy::Compact, &topo);
+        // Wait for all workers to have registered (they push at spawn,
+        // before entering the loop; run a barrier pass to be sure).
+        assert_eq!(pool.run_scoped_workers(4, |_| {}), 0);
+        let rows = pool.placements();
+        assert_eq!(rows.len(), 4);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.worker, i);
+            assert_eq!(row.cores, vec![i], "compact on apple_like: one core each");
+            assert!(!row.outcome.as_str().is_empty());
+        }
+        assert_eq!(pool.policy(), PlacementPolicy::Compact);
+        // Unplaced pools attempted nothing.
+        assert!(ThreadPool::new(2).placements().is_empty());
+    }
+
+    #[test]
+    fn assigned_routing_lands_copy_on_its_thread() {
+        // On a Compact-placed pool, run_scoped_workers copy i must run on
+        // pool thread i (thread name carries the index).
+        let topo = CpuTopology::flat(4);
+        let pool = ThreadPool::with_placement(4, PlacementPolicy::Compact, &topo);
+        let names = Mutex::new(vec![String::new(); 4]);
+        assert_eq!(
+            pool.run_scoped_workers(4, |i| {
+                let name = std::thread::current().name().unwrap_or("").to_string();
+                names.lock().unwrap()[i] = name;
+                // Hold the slot briefly so copies can't collapse onto one
+                // fast thread by finishing before the next is submitted.
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }),
+            0
+        );
+        let names = names.into_inner().unwrap();
+        for (i, name) in names.iter().enumerate() {
+            assert_eq!(name, &format!("stgemm-worker-{i}"), "copy {i} pinned to thread {i}");
+        }
     }
 }

@@ -51,6 +51,7 @@ fn scheduler(threads: usize, max_sessions: usize) -> Arc<DecodeScheduler> {
             DecodeConfig {
                 max_sessions,
                 default_max_tokens: 4,
+                ..DecodeConfig::default()
             },
         )
         .unwrap(),

@@ -1,0 +1,222 @@
+//! PR 10 property tests: topology-aware worker placement.
+//!
+//! The standing invariant is that **placement moves work, never changes
+//! it**: whatever cores the pool's workers pin to (or fail to pin to —
+//! placement is best-effort everywhere), forward and decode outputs stay
+//! bitwise-identical (`f32::to_bits`) to the sequential reference.
+//! Alongside that, the checked-in sysfs/sysctl fixture snapshots pin the
+//! topology classifier's behavior on the three shapes that matter: an
+//! M1-like 4P+4E SoC, a flat x86 server (no `cpu_capacity`, private L2 —
+//! must NOT shatter into singleton clusters), and a single-core host.
+
+use std::sync::Arc;
+
+use stgemm::model::{ModelConfig, TernaryMlp};
+use stgemm::perf::{ClusterKind, CpuTopology};
+use stgemm::plan::Planner;
+use stgemm::tensor::Matrix;
+use stgemm::util::{core_set, PlacementPolicy};
+
+const M1_SYSFS: &str = include_str!("fixtures/topology/m1_4p4e.sysfs");
+const FLAT_SYSFS: &str = include_str!("fixtures/topology/flat_x86.sysfs");
+const SINGLE_SYSFS: &str = include_str!("fixtures/topology/single_core.sysfs");
+const M1_SYSCTL: &str = include_str!("fixtures/topology/m1.sysctl");
+
+fn topo_from_sysfs(text: &str) -> CpuTopology {
+    CpuTopology::from_probes(CpuTopology::parse_sysfs_snapshot(text).expect("fixture parses"))
+}
+
+#[test]
+fn placement_fixture_m1_sysfs_classifies_4p_plus_4e() {
+    let t = topo_from_sysfs(M1_SYSFS);
+    assert_eq!(t.num_cores(), 8);
+    assert_eq!(t.clusters.len(), 2, "{:?}", t.clusters);
+    assert_eq!(t.clusters[0].kind, ClusterKind::Performance);
+    assert_eq!(t.clusters[1].kind, ClusterKind::Efficiency);
+    assert_eq!(t.perf_cores(), vec![0, 1, 2, 3]);
+    assert_eq!(t.efficiency_cores(), vec![4, 5, 6, 7]);
+}
+
+#[test]
+fn placement_fixture_flat_x86_is_one_performance_class() {
+    let t = topo_from_sysfs(FLAT_SYSFS);
+    assert_eq!(t.num_cores(), 8);
+    // No capacity + private L2s: symmetric server. One cluster, all
+    // performance — per-core L2 groups must not shatter the class.
+    assert_eq!(t.clusters.len(), 1, "{:?}", t.clusters);
+    assert_eq!(t.clusters[0].kind, ClusterKind::Performance);
+    assert_eq!(t.perf_cores(), (0..8).collect::<Vec<_>>());
+    assert!(t.efficiency_cores().is_empty());
+}
+
+#[test]
+fn placement_fixture_single_core_is_minimal() {
+    let t = topo_from_sysfs(SINGLE_SYSFS);
+    assert_eq!(t.num_cores(), 1);
+    assert_eq!(t.clusters.len(), 1);
+    assert_eq!(t.perf_cores(), vec![0]);
+}
+
+#[test]
+fn placement_fixture_m1_sysctl_parses_perflevels() {
+    let (p, e) = CpuTopology::parse_sysctl_snapshot(M1_SYSCTL).expect("fixture parses");
+    assert_eq!((p, e), (4, 4));
+    let t = CpuTopology::from_perflevels(p, e);
+    assert_eq!(t.perf_cores(), vec![0, 1, 2, 3]);
+    assert_eq!(t.efficiency_cores(), vec![4, 5, 6, 7]);
+}
+
+/// Property: every policy yields a valid, non-empty core set for every
+/// worker index across pool sizes 1..32, on every synthetic topology —
+/// and each named core actually exists in the topology.
+#[test]
+fn placement_every_policy_yields_valid_core_sets() {
+    let topologies = vec![
+        CpuTopology::apple_like(),
+        CpuTopology::flat(1),
+        CpuTopology::flat(6),
+        topo_from_sysfs(M1_SYSFS),
+        topo_from_sysfs(FLAT_SYSFS),
+        topo_from_sysfs(SINGLE_SYSFS),
+    ];
+    for topo in &topologies {
+        let all: Vec<usize> = topo
+            .clusters
+            .iter()
+            .flat_map(|c| c.cores.iter().copied())
+            .collect();
+        for policy in PlacementPolicy::all() {
+            for workers in 1..32usize {
+                for w in 0..workers {
+                    let cores = core_set(policy, topo, w, workers);
+                    assert!(
+                        !cores.is_empty(),
+                        "{policy} worker {w}/{workers} on {} got no cores",
+                        topo.describe()
+                    );
+                    for c in &cores {
+                        assert!(
+                            all.contains(c),
+                            "{policy} worker {w}/{workers} names core {c} \
+                             outside {}",
+                            topo.describe()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn model_cfg(threads: usize) -> ModelConfig {
+    ModelConfig::from_json(&format!(
+        r#"{{"name":"place","dims":[24,48,24],"sparsity":0.3,"seed":17,
+            "threads":{threads}}}"#
+    ))
+    .unwrap()
+}
+
+fn planner_with(policy: PlacementPolicy) -> Arc<Planner> {
+    let planner = Planner::new().with_topology(CpuTopology::apple_like());
+    planner.set_placement(policy);
+    Arc::new(planner)
+}
+
+/// The tentpole guarantee: batched forwards are bitwise-identical across
+/// every placement policy × thread counts 1–4. The synthetic apple-like
+/// topology names cores the host may not have, so pins may *fail* —
+/// placement is best-effort and identity must hold regardless.
+#[test]
+fn placement_forward_is_bitwise_identical_across_policies_and_threads() {
+    let ms = [1usize, 3, 8];
+    let xs: Vec<Matrix> = ms
+        .iter()
+        .map(|&m| Matrix::random(m, 24, 900 + m as u64))
+        .collect();
+    // Sequential, unplaced reference.
+    let reference: Vec<Matrix> = {
+        let mlp = TernaryMlp::planned(&model_cfg(1), &planner_with(PlacementPolicy::None))
+            .unwrap();
+        xs.iter().map(|x| mlp.forward(x).unwrap()).collect()
+    };
+    for policy in PlacementPolicy::all() {
+        for threads in 1..=4usize {
+            let mlp =
+                TernaryMlp::planned(&model_cfg(threads), &planner_with(policy)).unwrap();
+            for (x, want) in xs.iter().zip(&reference) {
+                let got = mlp.forward(x).unwrap();
+                assert_eq!(got.rows(), want.rows());
+                for i in 0..got.rows() {
+                    for j in 0..got.cols() {
+                        assert_eq!(
+                            got.row(i)[j].to_bits(),
+                            want.row(i)[j].to_bits(),
+                            "policy {policy}, threads {threads}, M {}, \
+                             cell ({i},{j})",
+                            x.rows()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Decode half of the identity guarantee: the M=1-pinned decode plan
+/// produces bitwise-identical steps under every placement policy ×
+/// thread counts 1–4.
+#[test]
+fn placement_decode_plan_is_bitwise_identical_across_policies() {
+    let d = 24usize;
+    let x = Matrix::random(2, d, 77);
+    let reference: Matrix = {
+        let mlp = TernaryMlp::planned(&model_cfg(1), &planner_with(PlacementPolicy::None))
+            .unwrap();
+        let cache = Arc::clone(mlp.plan_cache().unwrap());
+        let plan = cache.decode_plan(2).unwrap();
+        let mut y = Matrix::zeros(2, d);
+        plan.run(&x, &mut y).unwrap();
+        y
+    };
+    for policy in PlacementPolicy::all() {
+        for threads in 1..=4usize {
+            let mlp =
+                TernaryMlp::planned(&model_cfg(threads), &planner_with(policy)).unwrap();
+            let cache = Arc::clone(mlp.plan_cache().unwrap());
+            let plan = cache.decode_plan(2).unwrap();
+            for step in 0..3 {
+                let mut y = Matrix::zeros(2, d);
+                plan.run(&x, &mut y).unwrap();
+                for j in 0..d {
+                    for i in 0..2 {
+                        assert_eq!(
+                            y.row(i)[j].to_bits(),
+                            reference.row(i)[j].to_bits(),
+                            "decode policy {policy}, threads {threads}, \
+                             step {step}, cell ({i},{j})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Planner-level wiring: the placement policy set before the lazy pool
+/// creation sizes the pool by the perf-core budget and yields per-worker
+/// placement rows (outcomes are best-effort — the synthetic topology's
+/// cores may not exist on the host — but every row must be present).
+#[test]
+fn placement_rows_appear_once_the_shared_pool_exists() {
+    let planner = planner_with(PlacementPolicy::Compact);
+    assert!(planner.pool_placements().is_empty(), "pool is lazy");
+    // A threaded plan forces the shared pool into existence.
+    let mlp = TernaryMlp::planned(&model_cfg(3), &planner).unwrap();
+    let _ = mlp.forward(&Matrix::random(8, 24, 5)).unwrap();
+    let rows = planner.pool_placements();
+    assert!(!rows.is_empty(), "placed pool reports its workers");
+    for (i, row) in rows.iter().enumerate() {
+        assert_eq!(row.worker, i, "rows are sorted by worker index");
+        assert!(!row.cores.is_empty(), "compact workers name a core each");
+    }
+}
